@@ -1,0 +1,120 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): the full system on a real
+//! workload, proving all layers compose.
+//!
+//! 1. Generates the paper's synthetic ridge problem at paper scale
+//!    (N = 65,536 x d = 500 — the largest fig. 2 configuration) plus a
+//!    smooth-hinge classification workload, shards them over m = 16
+//!    simulated machines, and trains with DANE, logging the full loss
+//!    curve, gradient norms, and the communication bill under a
+//!    datacenter network model.
+//! 2. Re-runs a canonical-shard configuration on the **PJRT backend** —
+//!    the AOT-compiled jax/Pallas artifacts — and checks it converges to
+//!    the same optimum (native f64 vs artifact f32).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_train
+//! ```
+
+use dane::comm::NetModel;
+use dane::coordinator::dane as dane_algo;
+use dane::coordinator::{Cluster, RunCtx, SerialCluster};
+use dane::data::synthetic;
+use dane::loss::{Objective, Ridge, SmoothHinge};
+use dane::metrics::emit;
+use dane::runtime::ArtifactRegistry;
+use dane::solver::erm_solve;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() -> Result<(), dane::Error> {
+    let out = Path::new("results/e2e");
+    std::fs::create_dir_all(out)?;
+
+    // ---------------- Part 1a: ridge at paper scale -------------------
+    let t0 = std::time::Instant::now();
+    let paper_reg = 0.005;
+    let (n_total, d, m) = (65_536, 500, 16);
+    println!("[e2e] generating fig2 ridge: N={n_total} d={d} ...");
+    let ds = dane::data::synthetic_fig2(n_total, d, paper_reg, 42);
+    let lam = synthetic::fig2_lambda(paper_reg);
+    let obj: Arc<dyn Objective> = Arc::new(Ridge::new(lam));
+    println!("[e2e] reference ERM solve ...");
+    let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard())?;
+
+    println!("[e2e] DANE, m={m}, datacenter net model ...");
+    let mut cluster =
+        SerialCluster::with_net(&ds, obj, m, 42, NetModel::datacenter());
+    let ctx = RunCtx::new(30).with_reference(phi_star).with_tol(1e-10);
+    let res = dane_algo::run(&mut cluster, &dane_algo::DaneOptions::default(), &ctx);
+    emit::write_csv_file(&res.trace, &out.join("ridge_dane_m16.csv"))?;
+
+    println!("[e2e] ridge loss curve (suboptimality by DANE iteration):");
+    for r in &res.trace.rows {
+        println!(
+            "    round {:>2}  phi={:.9}  subopt={:.3e}  net={:.2}ms",
+            r.round,
+            r.objective,
+            r.suboptimality.unwrap_or(f64::NAN),
+            r.comm_modeled_seconds * 1e3
+        );
+    }
+    let stats = cluster.comm_stats();
+    println!(
+        "[e2e] ridge: converged={} rounds={} bytes={} modeled_net={:.2}ms wall={:.1}s",
+        res.converged,
+        stats.rounds,
+        stats.bytes,
+        stats.modeled_seconds * 1e3,
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(res.converged, "e2e ridge run must converge");
+
+    // ---------------- Part 1b: smooth hinge ---------------------------
+    println!("\n[e2e] covtype-like smooth hinge: N=32768 d=54 m={m} ...");
+    let lam_h = 1e-4;
+    let dsh = dane::data::covtype_like(32_768, 4_096, 7);
+    let objh: Arc<dyn Objective> = Arc::new(SmoothHinge::new(lam_h));
+    let (_, phi_star_h) = erm_solve(objh.as_ref(), &dsh.as_single_shard())?;
+    let test = dsh.test_shard().unwrap();
+    let mut cluster = SerialCluster::with_net(&dsh, objh, m, 7, NetModel::datacenter());
+    let ctx = RunCtx::new(30)
+        .with_reference(phi_star_h)
+        .with_tol(1e-8)
+        .with_test_shard(test);
+    let opts = dane_algo::DaneOptions { eta: 1.0, mu: 3.0 * lam_h, ..Default::default() };
+    let resh = dane_algo::run(&mut cluster, &opts, &ctx);
+    emit::write_csv_file(&resh.trace, &out.join("hinge_dane_m16.csv"))?;
+    for r in resh.trace.rows.iter() {
+        println!(
+            "    round {:>2}  subopt={:.3e}  test_loss={:.6}",
+            r.round,
+            r.suboptimality.unwrap_or(f64::NAN),
+            r.test_loss.unwrap_or(f64::NAN)
+        );
+    }
+    assert!(resh.converged, "e2e hinge run must converge");
+
+    // ---------------- Part 2: PJRT backend ----------------------------
+    println!("\n[e2e] PJRT backend (AOT jax/Pallas artifacts), canonical shard ...");
+    let ds2 = dane::data::synthetic_fig2(4_096, 500, paper_reg, 11); // pads to 2048x512 per shard
+    let obj2: Arc<dyn Objective> = Arc::new(Ridge::new(lam));
+    let (_, phi_star2) = erm_solve(obj2.as_ref(), &ds2.as_single_shard())?;
+    let mut pjrt_cluster = SerialCluster::new(&ds2, obj2, 2, 11);
+    let registry = Arc::new(ArtifactRegistry::open(Path::new("artifacts"))?);
+    pjrt_cluster.use_pjrt(registry)?;
+    let ctx2 = RunCtx::new(12).with_reference(phi_star2).with_tol(1e-5);
+    let res2 = dane_algo::run(&mut pjrt_cluster, &dane_algo::DaneOptions::default(), &ctx2);
+    emit::write_csv_file(&res2.trace, &out.join("ridge_dane_pjrt.csv"))?;
+    for r in &res2.trace.rows {
+        println!(
+            "    round {:>2}  subopt={:.3e}",
+            r.round,
+            r.suboptimality.unwrap_or(f64::NAN)
+        );
+    }
+    println!("[e2e] pjrt converged={} (f32 artifact floor ~1e-6)", res2.converged);
+    assert!(res2.converged, "e2e PJRT run must converge");
+
+    println!("\n[e2e] all three stages green; traces in results/e2e/");
+    Ok(())
+}

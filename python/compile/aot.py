@@ -1,0 +1,110 @@
+"""AOT driver: lower every L2 entry point to HLO *text* + a manifest.
+
+This is the single place Python runs in the whole system — once, at build
+time (`make artifacts`). The rust coordinator loads the emitted
+artifacts/*.hlo.txt through the xla crate's PJRT CPU client and never
+touches Python again.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md). Lowering goes through
+stablehlo -> XlaComputation with return_tuple=True, so every artifact's
+output is a tuple — the rust side unwraps with to_tuple1()/to_tuple2().
+
+Artifacts are shape-specialized. Two shard shapes are emitted:
+  (256, 64)   — "small": fast integration tests on the rust side
+  (2048, 512) — "canonical": the hot-path shard used by examples/benches
+Scalars (eta, mu, lam, ninv) are rank-0 f32 *parameters*, so one artifact
+per (entry, shape) serves every hyperparameter setting.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (n_pad, d_pad) shard shapes to specialize. Keep in sync with
+# rust/src/runtime/artifact.rs defaults and DESIGN.md §10.
+SHAPES = [(256, 64), (2048, 512)]
+
+F32 = jnp.float32
+
+
+def _spec(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), F32)
+
+
+def entries_for(n, d):
+    """The lowering table: name -> (fn, example arg specs, n_outputs)."""
+    mat, vec_n, vec_d, scal = _spec(n, d), _spec(n), _spec(d), _spec()
+    return {
+        f"ridge_grad_n{n}_d{d}": (
+            model.ridge_grad, [mat, vec_n, vec_d, scal, scal], 2),
+        f"ridge_local_solve_n{n}_d{d}": (
+            model.ridge_local_solve,
+            [mat, vec_d, vec_d, scal, scal, scal, scal], 1),
+        f"hinge_grad_loss_n{n}_d{d}": (
+            model.hinge_grad_loss, [mat, vec_n, vec_d, scal, scal], 2),
+        f"hinge_local_solve_n{n}_d{d}": (
+            model.hinge_local_solve,
+            [mat, vec_n, vec_d, vec_d, scal, scal, scal, scal], 1),
+    }
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_json(spec):
+    return {"shape": list(spec.shape), "dtype": "f32"}
+
+
+def build(out_dir: pathlib.Path) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {"format": "hlo-text", "return_tuple": True, "entries": []}
+    for n, d in SHAPES:
+        for name, (fn, specs, n_out) in entries_for(n, d).items():
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            fname = f"{name}.hlo.txt"
+            (out_dir / fname).write_text(text)
+            manifest["entries"].append({
+                "name": name,
+                "file": fname,
+                "inputs": [_shape_json(s) for s in specs],
+                "n_outputs": n_out,
+                "static": {"n": n, "d": d},
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            })
+            print(f"  {fname}: {len(text)} chars")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    manifest = build(out_dir)
+    print(f"wrote {len(manifest['entries'])} artifacts + manifest.json "
+          f"to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for the paper's compute hot spot.
+
+Every kernel here has a pure-jnp oracle in ref.py; pytest + hypothesis
+assert agreement across shapes and dtypes. Kernels run interpret=True
+(CPU PJRT cannot execute Mosaic custom-calls) — see DESIGN.md
+§Hardware-Adaptation for the TPU mapping they encode.
+"""
+
+from .gram_matvec import gram_matvec, resid_matvec
+from .hinge_grad import hinge_grad
+
+__all__ = ["gram_matvec", "resid_matvec", "hinge_grad"]

@@ -1,0 +1,123 @@
+"""Pallas kernel: tiled weighted Gram-matrix/vector product x^T (dvec * (x v)).
+
+This is the hot spot of every DANE local solve: conjugate gradient on the
+local system (H_i + mu I) delta = g performs one Gram matvec per iteration,
+and the Gram matvec is the only operation that touches the shard matrix X.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks row-blocks
+of X; each step stages a (block_rows, d) tile of X into VMEM, runs two MXU
+matmuls — t = X_blk @ v, then acc += X_blk^T @ (dvec_blk * t) — and leaves
+the (d,) accumulator resident in VMEM across the whole grid (its index_map
+is constant, so Pallas revisits the same output block every step). X is
+streamed through HBM exactly once per call; the naive jnp form
+``x.T @ (dvec * (x @ v))`` takes two HBM passes over X unless XLA happens
+to fuse them.
+
+interpret=True is mandatory on this image: the CPU PJRT plugin cannot run
+Mosaic custom-calls. The grid is executed sequentially in interpret mode
+(and on a single TPU core), so the accumulate-in-place pattern is safe.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def effective_block_rows(n, requested):
+    """Largest usable row-block: the requested size when it divides n,
+    n itself for small inputs; anything else is a caller error (shards
+    are padded to artifact shapes that are multiples of the default)."""
+    if n <= requested:
+        return n
+    if n % requested == 0:
+        return requested
+    raise ValueError(f"n={n} not divisible by block_rows={requested}")
+
+
+def _resid_matvec_kernel(x_ref, d_ref, v_ref, r_ref, o_ref, ss_ref):
+    """One grid step: o += x_blk^T (dvec_blk * t), ss += sum(dvec * t^2),
+    with t = x_blk @ v - r_blk."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        ss_ref[...] = jnp.zeros_like(ss_ref)
+
+    x_blk = x_ref[...]              # (bm, d) tile, staged in VMEM
+    t = x_blk @ v_ref[...] - r_ref[...]  # (bm,) first MXU pass + residual
+    tw = t * d_ref[...]             # (bm,)   VPU elementwise weight
+    o_ref[...] += x_blk.T @ tw      # (d,)    second MXU pass, accumulate
+    ss_ref[...] += jnp.sum(tw * t)[None]  # weighted residual sum-of-squares
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def resid_matvec_ss(x, dvec, v, r, *, block_rows=DEFAULT_BLOCK_ROWS,
+                    interpret=True):
+    """One streamed pass over x computing BOTH
+    ``x.T @ (dvec * (x @ v - r))`` and the weighted residual sum of
+    squares ``sum(dvec * (x @ v - r)^2)``.
+
+    The general form serves every hot path:
+      * r = 0, dvec = 1      -> plain Gram matvec x^T x v  (CG iterations)
+      * r = y, dvec = 1      -> ridge residual gradient + 2n * loss
+      * r = 0, dvec = l''(m) -> smooth-hinge Hessian-vector product
+
+    Args:
+      x: (n, d) shard matrix; n must be divisible by ``block_rows``
+         (callers zero-pad — zero rows contribute nothing).
+      dvec: (n,) per-row weights (0 on padding).
+      v: (d,) direction vector.
+      r: (n,) per-row offsets subtracted from x @ v.
+      block_rows: rows of x staged per grid step. VMEM footprint is
+         ~ block_rows*d*4 bytes for the tile + 2*d*4 for v and the
+         accumulator; 256x512 f32 = 512 KiB, far under the 16 MiB VMEM
+         budget, leaving room for double-buffering the streamed tile.
+      interpret: must stay True for CPU PJRT (Mosaic custom-calls do not
+         run there); False only as a compile-only TPU target.
+
+    Returns: ((d,) vector, (1,) sum of squares).
+    """
+    n, d = x.shape
+    block_rows = effective_block_rows(n, block_rows)
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _resid_matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),  # stream X tiles
+            pl.BlockSpec((block_rows,), lambda i: (i,)),      # stream dvec
+            pl.BlockSpec((d,), lambda i: (0,)),               # v resident
+            pl.BlockSpec((block_rows,), lambda i: (i,)),      # stream r
+        ],
+        out_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),               # acc resident
+            pl.BlockSpec((1,), lambda i: (0,)),               # ss resident
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, dvec, v, r)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def resid_matvec(x, dvec, v, r, *, block_rows=DEFAULT_BLOCK_ROWS,
+                 interpret=True):
+    """``x.T @ (dvec * (x @ v - r))`` (sum-of-squares output dropped)."""
+    out, _ss = resid_matvec_ss(x, dvec, v, r, block_rows=block_rows,
+                               interpret=interpret)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def gram_matvec(x, dvec, v, *, block_rows=DEFAULT_BLOCK_ROWS, interpret=True):
+    """``x.T @ (dvec * (x @ v))`` — resid_matvec with a zero offset."""
+    n, _ = x.shape
+    return resid_matvec(x, dvec, v, jnp.zeros((n,), x.dtype),
+                        block_rows=block_rows, interpret=interpret)

@@ -1,0 +1,110 @@
+"""Pallas kernel: fused smooth-hinge gradient + loss over one shard.
+
+Computes, in a single streamed pass over the shard matrix X:
+
+    margins  = y * (X @ w)                (bm,)  MXU + VPU
+    dcoef    = l'(margins) * y            (bm,)  VPU piecewise
+    g_sum   += X^T @ dcoef                (d,)   MXU accumulate
+    loss    += sum(l(margins) * [y != 0]) ()     VPU reduce
+
+The naive jnp composition (ref.hinge_grad_ref) reads X twice (once for the
+margins, once for the X^T reduction) and materializes the (n,) temporaries
+in HBM; the fused kernel keeps everything block-local in VMEM. Padding rows
+carry y = 0 and therefore contribute exactly zero to both outputs (masked
+loss, and dcoef = l'(0) * 0 = 0).
+
+Smooth hinge (Shalev-Shwartz & Zhang 2013) with smoothing gamma:
+    l(a)  = 0                  a >= 1
+          = 1 - a - gamma/2    a <= 1 - gamma
+          = (1-a)^2/(2 gamma)  otherwise
+    l'(a) = 0 / -1 / -(1-a)/gamma on the same pieces.
+
+interpret=True is mandatory on this image (CPU PJRT cannot execute Mosaic
+custom-calls); the sequential grid makes the accumulators safe.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gram_matvec import effective_block_rows
+from .ref import GAMMA
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _hinge_kernel(gamma, x_ref, y_ref, w_ref, g_ref, l_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    x_blk = x_ref[...]                       # (bm, d)
+    y_blk = y_ref[...]                       # (bm,)
+    margins = y_blk * (x_blk @ w_ref[...])   # (bm,)
+
+    one = 1.0
+    dcoef = jnp.where(
+        margins >= one,
+        0.0,
+        jnp.where(margins <= one - gamma, -1.0, -(one - margins) / gamma),
+    ) * y_blk                                # y=0 padding rows vanish
+    losses = jnp.where(
+        margins >= one,
+        0.0,
+        jnp.where(
+            margins <= one - gamma,
+            one - margins - gamma / 2.0,
+            (one - margins) ** 2 / (2.0 * gamma),
+        ),
+    ) * (y_blk != 0.0).astype(margins.dtype)
+
+    g_ref[...] += x_blk.T @ dcoef
+    l_ref[...] += jnp.sum(losses)[None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("gamma", "block_rows", "interpret")
+)
+def hinge_grad(x, y, w, *, gamma=GAMMA, block_rows=DEFAULT_BLOCK_ROWS,
+               interpret=True):
+    """Fused shard-local smooth-hinge pieces.
+
+    Args:
+      x: (n, d) shard matrix, n divisible by ``block_rows``.
+      y: (n,) labels in {-1, +1}, exactly 0 on zero-padded rows.
+      w: (d,) parameter vector.
+      gamma: smooth-hinge smoothing parameter (paper default 1.0).
+
+    Returns:
+      (g_sum, loss_sum): unscaled sums over the shard —
+      g_sum = sum_j l'(y_j<x_j,w>) y_j x_j  (d,) and
+      loss_sum = sum_j l(y_j<x_j,w>)        (1,).
+      The caller applies 1/n scaling and the lam*w ridge term.
+    """
+    n, d = x.shape
+    block_rows = effective_block_rows(n, block_rows)
+    grid = (n // block_rows,)
+    kernel = functools.partial(_hinge_kernel, float(gamma))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, y, w)

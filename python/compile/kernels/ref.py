@@ -1,0 +1,90 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal for the L1 layer: every Pallas kernel
+in this package must agree with its oracle here (pytest + hypothesis sweep
+shapes/dtypes and assert_allclose). The oracles are deliberately written in
+the most obvious jnp form — no tiling, no fusion — so a reviewer can check
+them against the paper's formulas by eye.
+
+Conventions (shared with model.py and the rust side):
+  x : (n, d)  feature matrix of one worker's shard (zero-padded rows allowed)
+  y : (n,)    ridge targets, or +/-1 labels (0 on padded rows)
+  v : (d,)    direction vector (CG iterate)
+  w : (d,)    parameter vector
+  dvec : (n,) per-row curvature weights (0 on padded rows)
+
+Smooth hinge (Shalev-Shwartz & Zhang 2013), smoothing parameter gamma:
+  l(a) = 0                 if a >= 1
+       = 1 - a - gamma/2   if a <= 1 - gamma
+       = (1-a)^2/(2 gamma) otherwise
+Its derivative and second derivative follow piecewise. The paper's
+figures 3-4 use this loss with L2 regularization.
+"""
+
+import jax.numpy as jnp
+
+GAMMA = 1.0  # paper-default smoothing for the smooth hinge
+
+
+def gram_matvec_ref(x, dvec, v):
+    """Weighted Gram-matrix/vector product: x^T (dvec * (x v)).
+
+    With dvec == 1 this is the plain Gram matvec x^T x v — the Hessian-vector
+    product of the (unregularized, unscaled) ridge objective, and the
+    workhorse of every CG-based local solve ("no Hessians are explicitly
+    computed!"). With dvec = l''(margins) it is the smooth-hinge HVP.
+    """
+    t = x @ v
+    return x.T @ (dvec * t)
+
+
+def smooth_hinge(a, gamma=GAMMA):
+    """Element-wise smooth hinge loss l(a)."""
+    return jnp.where(
+        a >= 1.0,
+        0.0,
+        jnp.where(a <= 1.0 - gamma, 1.0 - a - gamma / 2.0, (1.0 - a) ** 2 / (2.0 * gamma)),
+    )
+
+
+def smooth_hinge_d(a, gamma=GAMMA):
+    """Element-wise derivative l'(a)."""
+    return jnp.where(
+        a >= 1.0,
+        0.0,
+        jnp.where(a <= 1.0 - gamma, -1.0, -(1.0 - a) / gamma),
+    )
+
+
+def smooth_hinge_dd(a, gamma=GAMMA):
+    """Element-wise second derivative l''(a) (defined a.e.)."""
+    return jnp.where((a < 1.0) & (a > 1.0 - gamma), 1.0 / gamma, 0.0)
+
+
+def hinge_grad_ref(x, y, w, gamma=GAMMA):
+    """Unscaled smooth-hinge pieces of one shard.
+
+    Returns (g_sum, loss_sum) where
+      g_sum    = sum_j l'(y_j <x_j, w>) * y_j * x_j          (shape (d,))
+      loss_sum = sum_j l(y_j <x_j, w>)                       (scalar)
+    Scaling by 1/n and adding the lam*w ridge term happen in model.py /
+    rust — keeping the kernel pure makes padding-row handling (y=0 rows
+    must contribute nothing: l'(0)*0 = 0 for the gradient, and the loss
+    term is masked by y != 0) explicit and testable.
+    """
+    margins = y * (x @ w)
+    valid = (y != 0.0).astype(x.dtype)
+    dcoef = smooth_hinge_d(margins, gamma) * y  # y==0 rows vanish here
+    g_sum = x.T @ dcoef
+    loss_sum = jnp.sum(smooth_hinge(margins, gamma) * valid)
+    return g_sum, loss_sum
+
+
+def resid_matvec_ref(x, dvec, v, r):
+    """Weighted residual matvec: x^T (dvec * (x v - r))."""
+    return x.T @ (dvec * (x @ v - r))
+
+
+def ridge_resid_grad_ref(x, y, w):
+    """Unscaled ridge residual gradient of one shard: x^T (x w - y)."""
+    return x.T @ (x @ w - y)

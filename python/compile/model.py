@@ -1,0 +1,195 @@
+"""L2: the per-worker compute graphs of DANE, written in JAX over the L1
+Pallas kernels, AOT-lowered once by aot.py and executed from the rust
+coordinator via PJRT — Python never runs on the optimization path.
+
+Four entry points (all shard-local; the coordinator owns the averaging):
+
+  ridge_grad(x, y, w, lam, ninv)             -> (grad phi_i(w), phi_i(w))
+  ridge_local_solve(x, w_prev, g, eta, mu, lam, ninv) -> w_i  (DANE step)
+  hinge_grad_loss(x, y, w, lam, ninv)        -> (grad phi_i(w), phi_i(w))
+  hinge_local_solve(x, y, w_prev, g, eta, mu, lam, ninv) -> w_i
+
+Objectives (matching rust/src/loss/ bit-for-bit up to f32 rounding):
+  ridge:  phi_i(w) = (1/2n)||Xw - y||^2 + (lam/2)||w||^2
+  hinge:  phi_i(w) = (1/n) sum_j l(y_j <x_j,w>) + (lam/2)||w||^2,
+          l = smooth hinge (ref.GAMMA).
+
+The DANE local problem (paper eq. 13)
+  w_i = argmin_w phi_i(w) - (grad phi_i(w') - eta * g)^T w
+                + (mu/2)||w - w'||^2
+reduces, for quadratics, to the closed form of paper eq. (16):
+  (H_i + mu I)(w_i - w') = -eta * g   with  H_i = (1/n)X^T X + lam I,
+solved here by conjugate gradient over the Pallas Gram matvec, so the
+Hessian is never materialized. For the smooth hinge the local problem is
+solved by damped Newton-CG: the same CG machinery over the weighted Gram
+matvec X^T diag(l''(margins)) X, with an Armijo backtracking line search.
+
+Shapes are static at lowering time (canonical padded shard); scalars
+(eta, mu, lam, ninv) are passed as rank-0 f32 parameters so one artifact
+serves every hyperparameter setting. Padded rows carry x = 0 and y = 0 and
+provably contribute nothing to any output; ninv must be 1/n_real.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gram_matvec, hinge_grad
+from .kernels.gram_matvec import resid_matvec_ss
+from .kernels.ref import GAMMA
+
+# Static solve budgets, baked into the lowered HLO. CG on a d-dimensional
+# SPD system terminates in <= d steps exactly; the tolerance exit fires far
+# earlier on the well-clustered spectra these problems have.
+CG_MAX_ITERS = 200
+CG_TOL = 1e-7
+NEWTON_MAX_STEPS = 30
+NEWTON_GRAD_TOL = 1e-9
+ARMIJO_C = 1e-4
+ARMIJO_MAX_HALVINGS = 30
+
+
+def _cg(matvec, b, tol=CG_TOL, max_iters=CG_MAX_ITERS):
+    """Conjugate gradient for SPD ``matvec(x) = b``, from x0 = 0.
+
+    Tolerance is on ||r|| relative to ||b||; lax.while_loop keeps the
+    lowered HLO compact (a single loop region, not an unrolled chain).
+    """
+    bnorm2 = b @ b
+    stop2 = (tol * tol) * bnorm2
+
+    def cond(state):
+        k, _x, _r, _p, rs = state
+        return (k < max_iters) & (rs > stop2)
+
+    def body(state):
+        k, x, r, p, rs = state
+        ap = matvec(p)
+        alpha = rs / (p @ ap)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = r @ r
+        p = r + (rs_new / rs) * p
+        return (k + 1, x, r, p, rs_new)
+
+    state = (jnp.asarray(0, jnp.int32), jnp.zeros_like(b), b, b, bnorm2)
+    _, x, _, _, _ = jax.lax.while_loop(cond, body, state)
+    return x
+
+
+# --------------------------------------------------------------------------
+# Ridge (quadratic) path — paper fig. 2
+# --------------------------------------------------------------------------
+
+def ridge_grad(x, y, w, lam, ninv):
+    """(grad phi_i(w), phi_i(w)) in ONE Pallas pass over X:
+    grad = (1/n) X^T (X w - y) + lam w,
+    loss = (1/2n) ||X w - y||^2 + (lam/2)||w||^2."""
+    ones = jnp.ones((x.shape[0],), x.dtype)
+    g_raw, ss = resid_matvec_ss(x, ones, w, y)
+    grad = ninv * g_raw + lam * w
+    loss = 0.5 * ninv * ss[0] + 0.5 * lam * (w @ w)
+    return grad, loss
+
+
+def ridge_local_solve(x, w_prev, g, eta, mu, lam, ninv):
+    """DANE local step for the quadratic objective (paper eq. 16).
+
+    Solves (H_i + mu I) delta = g by CG over the Pallas Gram matvec and
+    returns w_i = w_prev - eta * delta. ``g`` is the *global* averaged
+    gradient at w_prev (the only state the coordinator must broadcast).
+    """
+    ones = jnp.ones((x.shape[0],), x.dtype)
+
+    def matvec(v):
+        return ninv * gram_matvec(x, ones, v) + (lam + mu) * v
+
+    delta = _cg(matvec, g)
+    return w_prev - eta * delta
+
+
+# --------------------------------------------------------------------------
+# Smooth-hinge path — paper figs. 3, 4
+# --------------------------------------------------------------------------
+
+def hinge_grad_loss(x, y, w, lam, ninv):
+    """(grad phi_i(w), phi_i(w)) for the regularized smooth hinge, fused."""
+    g_sum, loss_sum = hinge_grad(x, y, w)
+    grad = ninv * g_sum + lam * w
+    loss = ninv * loss_sum[0] + 0.5 * lam * (w @ w)
+    return grad, loss
+
+
+def hinge_local_solve(x, y, w_prev, g, eta, mu, lam, ninv):
+    """DANE local step for the smooth hinge, by damped Newton-CG.
+
+    Local objective (paper eq. 13):
+      h(w) = phi_i(w) - c^T w + (mu/2)||w - w_prev||^2,
+      c    = grad phi_i(w_prev) - eta * g.
+    Each Newton step solves  (H_i(w) + mu I) delta = grad h(w)  with CG over
+    the weighted Pallas Gram matvec (D = l''(margins); padded rows have
+    y = 0 so y^2 masks them), then backtracks on h until Armijo holds.
+    """
+    gp, _ = hinge_grad_loss(x, y, w_prev, lam, ninv)
+    c = gp - eta * g
+
+    def h_grad_val(w):
+        gphi, lphi = hinge_grad_loss(x, y, w, lam, ninv)
+        diff = w - w_prev
+        gh = gphi - c + mu * diff
+        hv = lphi - c @ w + 0.5 * mu * (diff @ diff)
+        return gh, hv
+
+    def newton_cond(state):
+        k, _w, gh, _hv = state
+        return (k < NEWTON_MAX_STEPS) & (gh @ gh > NEWTON_GRAD_TOL**2)
+
+    def newton_body(state):
+        k, w, gh, hv = state
+        margins = y * (x @ w)
+        # l''(m) * y^2: curvature weight, zero on padded rows (y = 0).
+        dvec = jnp.where(
+            (margins < 1.0) & (margins > 1.0 - GAMMA), 1.0 / GAMMA, 0.0
+        ) * y * y
+
+        def hvp(v):
+            return ninv * gram_matvec(x, dvec, v) + (lam + mu) * v
+
+        delta = _cg(hvp, gh)
+        slope = gh @ delta  # > 0: delta is a descent direction for -delta
+
+        def bt_cond(bt):
+            j, _wn, hn, s = bt
+            armijo = hn <= hv - ARMIJO_C * s * slope
+            return (j < ARMIJO_MAX_HALVINGS) & ~armijo
+
+        def bt_body(bt):
+            j, _wn, _hn, s = bt
+            s = s * 0.5
+            wn = w - s * delta
+            _, hn = h_grad_val(wn)
+            return (j + 1, wn, hn, s)
+
+        w1 = w - delta
+        _, h1 = h_grad_val(w1)
+        _, wn, _hn, _ = jax.lax.while_loop(
+            bt_cond, bt_body, (jnp.asarray(0, jnp.int32), w1, h1, jnp.asarray(1.0, x.dtype))
+        )
+        ghn, hvn = h_grad_val(wn)
+        return (k + 1, wn, ghn, hvn)
+
+    gh0, hv0 = h_grad_val(w_prev)
+    state = (jnp.asarray(0, jnp.int32), w_prev, gh0, hv0)
+    _, w_out, _, _ = jax.lax.while_loop(newton_cond, newton_body, state)
+    return w_out
+
+
+# --------------------------------------------------------------------------
+# Jitted conveniences for tests (AOT lowering happens in aot.py)
+# --------------------------------------------------------------------------
+
+ridge_grad_jit = jax.jit(ridge_grad)
+ridge_local_solve_jit = jax.jit(ridge_local_solve)
+hinge_grad_loss_jit = jax.jit(hinge_grad_loss)
+hinge_local_solve_jit = jax.jit(hinge_local_solve)

@@ -1,0 +1,115 @@
+"""Render the paper's figures from the harness CSVs in results/.
+
+Usage (after `make figures` or the `dane fig*` subcommands):
+
+    python python/plot.py --results results --out results/plots
+
+Produces fig2.png (convergence grids), fig4_<dataset>.png (test-loss
+curves) — matplotlib renderings of exactly the series the paper plots.
+Fig. 3 is a table; `dane fig3` already prints it and writes CSV.
+"""
+
+import argparse
+import csv
+import pathlib
+import re
+
+import matplotlib
+
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt  # noqa: E402
+
+
+def read_trace(path):
+    rows = []
+    with open(path) as f:
+        for row in csv.DictReader(f):
+            rows.append(row)
+    return rows
+
+
+def fig2(results: pathlib.Path, out: pathlib.Path):
+    fdir = results / "fig2"
+    if not fdir.exists():
+        print("skip fig2 (no results/fig2)")
+        return
+    pat = re.compile(r"(dane|admm)_m(\d+)_N(\d+)\.csv")
+    cells = {}
+    for p in fdir.iterdir():
+        m = pat.match(p.name)
+        if m:
+            cells[(m.group(1), int(m.group(2)), int(m.group(3)))] = read_trace(p)
+    ns = sorted({k[2] for k in cells})
+    ms = sorted({k[1] for k in cells})
+    fig, axes = plt.subplots(2, len(ns), figsize=(4 * len(ns), 7), sharex=True)
+    for col, n in enumerate(ns):
+        for row, algo in enumerate(["dane", "admm"]):
+            ax = axes[row][col] if len(ns) > 1 else axes[row]
+            for m in ms:
+                trace = cells.get((algo, m, n))
+                if not trace:
+                    continue
+                xs, ys = [], []
+                for r in trace:
+                    if r["suboptimality"]:
+                        v = float(r["suboptimality"])
+                        if v > 0:
+                            xs.append(int(r["round"]))
+                            ys.append(v)
+                ax.semilogy(xs, ys, marker="o", ms=3, label=f"m={m}")
+            ax.set_title(f"{algo.upper()}, N={n}")
+            ax.grid(alpha=0.3)
+            if row == 1:
+                ax.set_xlabel("iteration")
+            if col == 0:
+                ax.set_ylabel("suboptimality")
+    axes[0][0].legend()
+    fig.suptitle("Fig. 2: DANE (top) vs ADMM (bottom) on synthetic ridge")
+    fig.tight_layout()
+    fig.savefig(out / "fig2.png", dpi=120)
+    print(f"wrote {out/'fig2.png'}")
+
+
+def fig4(results: pathlib.Path, out: pathlib.Path):
+    fdir = results / "fig4"
+    if not fdir.exists():
+        print("skip fig4 (no results/fig4)")
+        return
+    datasets = sorted({p.name.rsplit("_", 1)[0] for p in fdir.glob("*.csv")})
+    for ds in datasets:
+        fig, ax = plt.subplots(figsize=(6, 4))
+        for algo in ["dane", "admm", "osa"]:
+            p = fdir / f"{ds}_{algo}.csv"
+            if not p.exists():
+                continue
+            trace = read_trace(p)
+            xs = [int(r["round"]) for r in trace if r["test_loss"]]
+            ys = [float(r["test_loss"]) for r in trace if r["test_loss"]]
+            style = dict(marker="o", ms=3) if algo != "osa" else dict(
+                marker="s", ms=5, linestyle="--"
+            )
+            ax.plot(xs, ys, label=algo.upper(), **style)
+        ax.set_xlabel("iteration")
+        ax.set_ylabel("test regularized loss")
+        ax.set_title(f"Fig. 4: {ds} (m = 64)")
+        ax.grid(alpha=0.3)
+        ax.legend()
+        fig.tight_layout()
+        fig.savefig(out / f"fig4_{ds}.png", dpi=120)
+        print(f"wrote {out/f'fig4_{ds}.png'}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--out", default="results/plots")
+    args = ap.parse_args()
+    results = pathlib.Path(args.results)
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    fig2(results, out)
+    fig4(results, out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, dtypes, block sizes, padding fractions and value
+scales; every property asserts allclose against the oracle. This is the
+CORE correctness signal for the kernel layer — the rust-side integration
+tests only check the already-lowered artifacts.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram_matvec, hinge_grad, resid_matvec
+from compile.kernels.gram_matvec import resid_matvec_ss
+from compile.kernels import ref
+
+# interpret-mode pallas is slow; keep cases small but varied.
+SETTINGS = dict(max_examples=25, deadline=None)
+
+dims = st.sampled_from([1, 3, 8, 17, 32, 64])
+block_multiples = st.sampled_from([1, 2, 4])
+block_rows = st.sampled_from([8, 32, 128])
+# jax runs with x64 disabled (the AOT artifacts are f32 by contract);
+# float64 inputs would be silently downcast, so only f32 is meaningful.
+dtypes = st.sampled_from([jnp.float32])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def tol(dtype):
+    return dict(rtol=2e-3, atol=2e-3)
+
+
+def make_case(seed, n, d, dtype, classification=False, pad_rows=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(dtype)
+    v = rng.standard_normal(d).astype(dtype)
+    dvec = rng.random(n).astype(dtype)
+    r = rng.standard_normal(n).astype(dtype)
+    if classification:
+        y = rng.choice([-1.0, 1.0], n).astype(dtype)
+    else:
+        y = rng.standard_normal(n).astype(dtype)
+    if pad_rows:
+        x[-pad_rows:] = 0.0
+        y[-pad_rows:] = 0.0
+        dvec[-pad_rows:] = 0.0
+        r[-pad_rows:] = 0.0
+    return x, y, v, dvec, r
+
+
+@settings(**SETTINGS)
+@given(seed=seeds, bm=block_rows, mult=block_multiples, d=dims, dtype=dtypes)
+def test_gram_matvec_matches_oracle(seed, bm, mult, d, dtype):
+    n = bm * mult
+    x, _, v, dvec, _ = make_case(seed, n, d, dtype)
+    out = gram_matvec(x, dvec, v, block_rows=bm)
+    expect = ref.gram_matvec_ref(x, dvec, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), **tol(dtype))
+
+
+@settings(**SETTINGS)
+@given(seed=seeds, bm=block_rows, mult=block_multiples, d=dims, dtype=dtypes)
+def test_resid_matvec_matches_oracle(seed, bm, mult, d, dtype):
+    n = bm * mult
+    x, _, v, dvec, r = make_case(seed, n, d, dtype)
+    out = resid_matvec(x, dvec, v, r, block_rows=bm)
+    expect = ref.resid_matvec_ref(x, dvec, v, r)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), **tol(dtype))
+
+
+@settings(**SETTINGS)
+@given(seed=seeds, bm=block_rows, mult=block_multiples, d=dims, dtype=dtypes)
+def test_resid_matvec_ss_sum_of_squares(seed, bm, mult, d, dtype):
+    n = bm * mult
+    x, _, v, dvec, r = make_case(seed, n, d, dtype)
+    _, ss = resid_matvec_ss(x, dvec, v, r, block_rows=bm)
+    t = np.asarray(x) @ np.asarray(v) - np.asarray(r)
+    expect = float(np.sum(np.asarray(dvec) * t * t))
+    np.testing.assert_allclose(float(ss[0]), expect, **tol(dtype))
+
+
+@settings(**SETTINGS)
+@given(seed=seeds, bm=block_rows, mult=block_multiples, d=dims, dtype=dtypes)
+def test_hinge_grad_matches_oracle(seed, bm, mult, d, dtype):
+    n = bm * mult
+    x, y, _, _, _ = make_case(seed, n, d, dtype, classification=True)
+    rng = np.random.default_rng(seed + 1)
+    w = rng.standard_normal(d).astype(dtype)
+    g, loss = hinge_grad(x, y, w, block_rows=bm)
+    ge, le = ref.hinge_grad_ref(x, y, w)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(ge), **tol(dtype))
+    np.testing.assert_allclose(float(loss[0]), float(le), **tol(dtype))
+
+
+@settings(**SETTINGS)
+@given(seed=seeds, pad=st.integers(min_value=1, max_value=31), dtype=dtypes)
+def test_padding_rows_are_inert(seed, pad, dtype):
+    """Zero rows with y = 0 must contribute nothing (the PJRT padding
+    contract)."""
+    n, d = 64, 16
+    x, y, _, _, _ = make_case(seed, n, d, dtype, classification=True, pad_rows=pad)
+    rng = np.random.default_rng(seed + 2)
+    w = rng.standard_normal(d).astype(dtype)
+    g_pad, l_pad = hinge_grad(x, y, w, block_rows=32)
+    g_ref, l_ref = ref.hinge_grad_ref(x[:-pad], y[:-pad], w)
+    np.testing.assert_allclose(np.asarray(g_pad), np.asarray(g_ref), **tol(dtype))
+    np.testing.assert_allclose(float(l_pad[0]), float(l_ref), **tol(dtype))
+
+
+def test_block_rows_must_divide_n():
+    x = jnp.zeros((100, 8), jnp.float32)
+    v = jnp.zeros(8, jnp.float32)
+    ones = jnp.ones(100, jnp.float32)
+    with pytest.raises(ValueError):
+        gram_matvec(x, ones, v, block_rows=64)
+
+
+def test_gram_matvec_is_spd_quadratic_form():
+    """v^T (X^T X v) >= 0 for all v — the kernel must preserve SPD-ness
+    or CG in the rust twin would break."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((128, 24)).astype(np.float32)
+    ones = np.ones(128, np.float32)
+    for _ in range(10):
+        v = rng.standard_normal(24).astype(np.float32)
+        out = gram_matvec(x, ones, v, block_rows=32)
+        assert float(np.asarray(out) @ v) >= -1e-3
+
+
+def test_smooth_hinge_piecewise_identities():
+    a = jnp.asarray([-5.0, 0.0, 0.25, 0.5, 0.999, 1.0, 3.0], jnp.float32)
+    l = np.asarray(ref.smooth_hinge(a))
+    d = np.asarray(ref.smooth_hinge_d(a))
+    dd = np.asarray(ref.smooth_hinge_dd(a))
+    # value continuity at knots
+    np.testing.assert_allclose(l[1], 0.5)
+    np.testing.assert_allclose(l[5], 0.0)
+    # derivative signs and ranges
+    assert np.all(d <= 0.0)
+    assert np.all(d >= -1.0)
+    # curvature only inside (0, 1)
+    np.testing.assert_allclose(dd, [0, 0, 1, 1, 1, 0, 0])

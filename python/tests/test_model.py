@@ -1,0 +1,168 @@
+"""L2 correctness: the jax compute graphs in model.py.
+
+Validated against straight numpy implementations (independent of the L1
+kernels), matching rust/src/loss definition-for-definition.
+"""
+
+import numpy as np
+import pytest
+
+from compile import model
+
+LAM = np.float32(0.01)
+
+
+def case(seed, n=256, d=24, classification=False):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    if classification:
+        y = rng.choice([-1.0, 1.0], n).astype(np.float32)
+    else:
+        y = rng.standard_normal(n).astype(np.float32)
+    w = rng.standard_normal(d).astype(np.float32)
+    return x, y, w, np.float32(1.0 / n)
+
+
+def sh(a):
+    return np.where(a >= 1, 0.0, np.where(a <= 0, 1 - a - 0.5, (1 - a) ** 2 / 2))
+
+
+def shd(a):
+    return np.where(a >= 1, 0.0, np.where(a <= 0, -1.0, -(1 - a)))
+
+
+class TestRidgeGrad:
+    def test_matches_numpy(self):
+        x, y, w, ninv = case(0)
+        g, loss = model.ridge_grad_jit(x, y, w, LAM, ninv)
+        n = x.shape[0]
+        g_np = x.T @ (x @ w - y) / n + LAM * w
+        l_np = ((x @ w - y) ** 2).sum() / (2 * n) + 0.5 * LAM * (w @ w)
+        np.testing.assert_allclose(np.asarray(g), g_np, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(float(loss), l_np, rtol=2e-4)
+
+    def test_gradient_of_loss(self):
+        # finite differences on the returned loss
+        x, y, w, ninv = case(1, n=256, d=8)
+        g, _ = model.ridge_grad_jit(x, y, w, LAM, ninv)
+        eps = 1e-2  # f32: balance truncation vs rounding
+        for j in range(8):
+            wp, wm = w.copy(), w.copy()
+            wp[j] += eps
+            wm[j] -= eps
+            _, lp = model.ridge_grad_jit(x, y, wp, LAM, ninv)
+            _, lm = model.ridge_grad_jit(x, y, wm, LAM, ninv)
+            fd = (float(lp) - float(lm)) / (2 * eps)
+            assert abs(fd - float(g[j])) < 5e-2, (j, fd, float(g[j]))
+
+
+class TestRidgeLocalSolve:
+    def test_one_step_newton_when_single_machine(self):
+        """m=1, eta=1, mu=0: the DANE step lands on the exact ridge
+        minimizer (paper: 'converges in a single iteration')."""
+        x, y, w, ninv = case(2, n=256, d=16)
+        n, d = x.shape
+        g, _ = model.ridge_grad_jit(x, y, w, LAM, ninv)
+        w1 = model.ridge_local_solve_jit(
+            x, w, g, np.float32(1.0), np.float32(0.0), LAM, ninv
+        )
+        h = x.T @ x / n + LAM * np.eye(d, dtype=np.float32)
+        w_star = np.linalg.solve(h, x.T @ y / n)
+        np.testing.assert_allclose(np.asarray(w1), w_star, rtol=1e-3, atol=1e-3)
+
+    def test_mu_shrinks_the_step(self):
+        x, y, w, ninv = case(3)
+        g, _ = model.ridge_grad_jit(x, y, w, LAM, ninv)
+        w_small = model.ridge_local_solve_jit(
+            x, w, g, np.float32(1.0), np.float32(0.0), LAM, ninv
+        )
+        w_big_mu = model.ridge_local_solve_jit(
+            x, w, g, np.float32(1.0), np.float32(100.0), LAM, ninv
+        )
+        step_small = np.linalg.norm(np.asarray(w_small) - w)
+        step_big = np.linalg.norm(np.asarray(w_big_mu) - w)
+        assert step_big < step_small / 5
+
+    def test_eta_scales_linearly(self):
+        x, y, w, ninv = case(4)
+        g, _ = model.ridge_grad_jit(x, y, w, LAM, ninv)
+        w_full = model.ridge_local_solve_jit(
+            x, w, g, np.float32(1.0), np.float32(0.0), LAM, ninv
+        )
+        w_half = model.ridge_local_solve_jit(
+            x, w, g, np.float32(0.5), np.float32(0.0), LAM, ninv
+        )
+        np.testing.assert_allclose(
+            np.asarray(w_half) - w,
+            0.5 * (np.asarray(w_full) - w),
+            rtol=1e-3,
+            atol=1e-5,
+        )
+
+
+class TestHinge:
+    def test_grad_loss_matches_numpy(self):
+        x, y, w, ninv = case(5, classification=True)
+        g, loss = model.hinge_grad_loss_jit(x, y, w, LAM, ninv)
+        n = x.shape[0]
+        m = y * (x @ w)
+        g_np = x.T @ (shd(m) * y) / n + LAM * w
+        l_np = sh(m).mean() + 0.5 * LAM * (w @ w)
+        np.testing.assert_allclose(np.asarray(g), g_np, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(float(loss), l_np, rtol=2e-4)
+
+    def test_local_solve_reaches_stationarity_m1(self):
+        """m=1, eta=1, mu=0: local solve minimizes phi itself."""
+        x, y, w, ninv = case(6, classification=True, d=12)
+        g0, _ = model.hinge_grad_loss_jit(x, y, w, LAM, ninv)
+        w1 = model.hinge_local_solve_jit(
+            x, y, w, g0, np.float32(1.0), np.float32(0.0), LAM, ninv
+        )
+        g_at, _ = model.hinge_grad_loss_jit(x, y, np.asarray(w1), LAM, ninv)
+        assert float(np.linalg.norm(np.asarray(g_at))) < 1e-5
+
+    def test_local_solve_decreases_local_objective(self):
+        x, y, w, ninv = case(7, classification=True)
+        g, _ = model.hinge_grad_loss_jit(x, y, w, LAM, ninv)
+        mu = np.float32(0.03)
+        w1 = np.asarray(
+            model.hinge_local_solve_jit(x, y, w, g, np.float32(1.0), mu, LAM, ninv)
+        )
+
+        def h(v):
+            gp, _ = model.hinge_grad_loss_jit(x, y, w, LAM, ninv)
+            c = np.asarray(gp) - np.asarray(g)
+            _, lv = model.hinge_grad_loss_jit(x, y, v, LAM, ninv)
+            return float(lv) - c @ v + 0.5 * float(mu) * np.sum((v - w) ** 2)
+
+        assert h(w1) < h(w) - 1e-7
+
+    def test_padding_rows_ignored(self):
+        x, y, w, ninv = case(8, classification=True, n=256)
+        x2 = np.vstack([x, np.zeros((256, x.shape[1]), np.float32)])
+        y2 = np.concatenate([y, np.zeros(256, np.float32)])
+        g1, l1 = model.hinge_grad_loss_jit(x, y, w, LAM, ninv)
+        g2, l2 = model.hinge_grad_loss_jit(x2, y2, w, LAM, ninv)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-6)
+        np.testing.assert_allclose(float(l1), float(l2), atol=1e-6)
+
+
+class TestCg:
+    def test_cg_solves_spd_system(self):
+        rng = np.random.default_rng(9)
+        d = 20
+        a = rng.standard_normal((d, d)).astype(np.float32)
+        spd = a.T @ a + 0.5 * np.eye(d, dtype=np.float32)
+        b = rng.standard_normal(d).astype(np.float32)
+        import jax.numpy as jnp
+
+        x = model._cg(lambda v: jnp.asarray(spd) @ v, jnp.asarray(b))
+        np.testing.assert_allclose(
+            spd @ np.asarray(x), b, rtol=1e-3, atol=1e-3
+        )
+
+    def test_cg_zero_rhs(self):
+        import jax.numpy as jnp
+
+        x = model._cg(lambda v: v, jnp.zeros(5, jnp.float32))
+        assert float(np.abs(np.asarray(x)).max()) == 0.0

@@ -1,0 +1,127 @@
+//! Design-choice ablations (DESIGN.md §6/§8):
+//!
+//! 1. local-solve exactness: DANE with exact (cached Cholesky) vs inexact
+//!    (Newton-CG at loosening tolerances) local solves — how precise must
+//!    the inner solver be before the outer rate degrades?
+//! 2. mu sweep: the paper's {0, lambda, 3 lambda} plus larger values,
+//!    showing the DANE -> gradient-descent continuum of §3.
+//! 3. eta sweep: step-size sensitivity around the paper's eta = 1.
+//! 4. collective topology: the alpha-beta model's verdict on star vs ring
+//!    vs tree for DANE's d-sized payloads across m.
+
+use dane::comm::{NetModel, Topology};
+use dane::coordinator::dane as dane_algo;
+use dane::coordinator::{RunCtx, SerialCluster};
+use dane::data::synthetic_fig2;
+use dane::loss::{Objective, Ridge, SmoothHinge};
+use dane::solver::erm_solve;
+use dane::solver::newton_cg::NewtonCgOptions;
+use std::sync::Arc;
+
+fn main() {
+    abl_local_solve_exactness();
+    abl_mu_sweep();
+    abl_eta_sweep();
+    abl_topology();
+}
+
+/// 1. Inexact local solves: loosen the worker Newton-CG budget.
+fn abl_local_solve_exactness() {
+    println!("== ablation: local-solve exactness (hinge, m=8) ==");
+    let lam = 1e-2;
+    let ds = dane::data::covtype_like(8192, 64, 11);
+    let obj: Arc<dyn Objective> = Arc::new(SmoothHinge::new(lam));
+    let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
+    println!("{:>12} {:>10} {:>14}", "grad_tol", "cg_iters", "iters to 1e-6");
+    for (grad_tol, cg_iters) in
+        [(1e-10, 500usize), (1e-6, 100), (1e-3, 20), (1e-1, 4)]
+    {
+        let mut cluster = SerialCluster::new(&ds, obj.clone(), 8, 3);
+        for w in cluster.workers_mut() {
+            w.set_newton_options(NewtonCgOptions {
+                grad_tol,
+                cg_max_iters: cg_iters,
+                max_newton: 20,
+                ..Default::default()
+            });
+        }
+        let ctx = RunCtx::new(60).with_reference(phi_star).with_tol(1e-6);
+        let opts = dane_algo::DaneOptions { eta: 1.0, mu: 3.0 * lam, ..Default::default() };
+        let res = dane_algo::run(&mut cluster, &opts, &ctx);
+        println!(
+            "{grad_tol:>12.0e} {cg_iters:>10} {:>14}",
+            res.trace
+                .rounds_to_tol(1e-6)
+                .map(|r| r.to_string())
+                .unwrap_or_else(|| "*".into())
+        );
+    }
+}
+
+/// 2. mu sweep (the DANE -> GD continuum of §3).
+fn abl_mu_sweep() {
+    println!("\n== ablation: mu sweep (ridge fig2, m=8, N=8192) ==");
+    let lam = 0.01;
+    let ds = synthetic_fig2(8192, 64, lam / 2.0, 5);
+    let obj: Arc<dyn Objective> = Arc::new(Ridge::new(lam));
+    let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
+    println!("{:>12} {:>14} {:>18}", "mu/lambda", "iters to 1e-9", "mean contraction");
+    for mu_mult in [0.0, 1.0, 3.0, 30.0, 300.0] {
+        let mut cluster = SerialCluster::new(&ds, obj.clone(), 8, 3);
+        let ctx = RunCtx::new(300).with_reference(phi_star).with_tol(1e-9);
+        let opts = dane_algo::DaneOptions { eta: 1.0, mu: mu_mult * lam, ..Default::default() };
+        let res = dane_algo::run(&mut cluster, &opts, &ctx);
+        let f = res.trace.contraction_factors();
+        let k = f.len().min(5).max(1);
+        let rate = f.iter().take(k).sum::<f64>() / k as f64;
+        println!(
+            "{mu_mult:>12} {:>14} {rate:>18.4}",
+            res.trace
+                .rounds_to_tol(1e-9)
+                .map(|r| r.to_string())
+                .unwrap_or_else(|| "*".into())
+        );
+    }
+}
+
+/// 3. eta sweep.
+fn abl_eta_sweep() {
+    println!("\n== ablation: eta sweep (ridge fig2, m=8, N=8192, mu=0) ==");
+    let lam = 0.01;
+    let ds = synthetic_fig2(8192, 64, lam / 2.0, 5);
+    let obj: Arc<dyn Objective> = Arc::new(Ridge::new(lam));
+    let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
+    println!("{:>8} {:>14}", "eta", "iters to 1e-9");
+    for eta in [0.25, 0.5, 1.0, 1.5] {
+        let mut cluster = SerialCluster::new(&ds, obj.clone(), 8, 3);
+        let ctx = RunCtx::new(400).with_reference(phi_star).with_tol(1e-9);
+        let opts = dane_algo::DaneOptions { eta, mu: 0.0, ..Default::default() };
+        let res = dane_algo::run(&mut cluster, &opts, &ctx);
+        println!(
+            "{eta:>8} {:>14}",
+            res.trace
+                .rounds_to_tol(1e-9)
+                .map(|r| r.to_string())
+                .unwrap_or_else(|| "*".into())
+        );
+    }
+}
+
+/// 4. Topology cost model for DANE payloads.
+fn abl_topology() {
+    println!("\n== ablation: collective topology (alpha=50us, 10Gb/s, d=500 payload) ==");
+    println!("{:>6} {:>12} {:>12} {:>12}", "m", "star (us)", "ring (us)", "tree (us)");
+    let bytes = 500 * 8;
+    for m in [4usize, 16, 64, 256] {
+        let t = |topo| {
+            NetModel::new(50e-6, 8.0 / 10e9, topo).collective_seconds(m, bytes) * 1e6
+        };
+        println!(
+            "{m:>6} {:>12.1} {:>12.1} {:>12.1}",
+            t(Topology::Star),
+            t(Topology::Ring),
+            t(Topology::Tree)
+        );
+    }
+    println!("(latency-bound at these payloads: tree/star win; ring only pays off for MB+ payloads)");
+}

@@ -1,0 +1,33 @@
+//! FIG2 harness bench: regenerates the paper's fig. 2 grid (DANE vs ADMM
+//! over m x N on the synthetic ridge model) and prints the series the
+//! figure plots (log10 suboptimality per iteration) plus per-cell rate
+//! summaries.
+//!
+//! `DANE_BENCH_SCALE` divides the sample sizes (default 8 keeps `cargo
+//! bench` under a few minutes on one core; scale 1 is the paper-size
+//! harness recorded in EXPERIMENTS.md).
+
+use std::path::Path;
+
+fn main() {
+    let scale: usize = std::env::var("DANE_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    println!("== fig2 bench (scale {scale}; DANE_BENCH_SCALE to change) ==");
+    let t0 = std::time::Instant::now();
+    let cells = dane::harness::fig2(scale, Path::new("results/fig2")).expect("fig2 harness");
+    println!("\nfig2 series (log10 suboptimality by iteration):");
+    for c in &cells {
+        let series: Vec<String> =
+            c.log10_subopt.iter().take(10).map(|v| format!("{v:.1}")).collect();
+        println!(
+            "  {:>4} m={:<3} N={:<6} [{}]",
+            c.algo,
+            c.m,
+            c.n_total,
+            series.join(", ")
+        );
+    }
+    println!("fig2 bench done in {:.1}s", t0.elapsed().as_secs_f64());
+}

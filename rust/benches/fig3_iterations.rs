@@ -1,0 +1,35 @@
+//! FIG3 harness bench: the iterations-to-1e-6 table on the three
+//! datasets, m in {2..64}, DANE (mu = 0 / 3 lambda) vs ADMM.
+//!
+//! `DANE_BENCH_SCALE` divides dataset sizes (default 8).
+
+use std::path::Path;
+
+fn main() {
+    let scale: usize = std::env::var("DANE_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    println!("== fig3 bench (scale {scale}) ==");
+    let t0 = std::time::Instant::now();
+    let cols = dane::harness::fig3(scale, Path::new("results/fig3")).expect("fig3 harness");
+    // Shape checks mirroring the paper's table: DANE's row should be flat
+    // in m until shards get small; report the spread.
+    for c in &cols {
+        for (label, vals) in &c.rows {
+            let known: Vec<usize> = vals.iter().flatten().copied().collect();
+            if known.is_empty() {
+                continue;
+            }
+            let (mn, mx) = (
+                known.iter().min().unwrap(),
+                known.iter().max().unwrap(),
+            );
+            println!(
+                "  [{}] {label}: min {mn} max {mx} (over m; * omitted)",
+                c.dataset
+            );
+        }
+    }
+    println!("fig3 bench done in {:.1}s", t0.elapsed().as_secs_f64());
+}

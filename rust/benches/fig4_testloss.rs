@@ -1,0 +1,28 @@
+//! FIG4 harness bench: test-loss-vs-iteration curves at m = 64 for
+//! DANE(mu = 3 lambda), ADMM and bias-corrected OSA, with the exact
+//! minimizer's test loss as the "Opt" line.
+//!
+//! `DANE_BENCH_SCALE` divides dataset sizes (default 8).
+
+use std::path::Path;
+
+fn main() {
+    let scale: usize = std::env::var("DANE_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    println!("== fig4 bench (scale {scale}) ==");
+    let t0 = std::time::Instant::now();
+    let panels = dane::harness::fig4(scale, Path::new("results/fig4")).expect("fig4 harness");
+    for p in &panels {
+        println!("  [{}] opt test loss {:.6}", p.dataset, p.opt_test_loss);
+        for (label, series) in &p.series {
+            let tail = series.last().copied().unwrap_or(f64::NAN);
+            println!(
+                "    {label:>12}: final test loss {tail:.6} (gap to opt {:+.2e})",
+                tail - p.opt_test_loss
+            );
+        }
+    }
+    println!("fig4 bench done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,176 @@
+//! Hot-path micro-benchmarks (EXPERIMENTS.md §Perf).
+//!
+//! Criterion-style timing (in-tree harness, util::bench) of every
+//! operation on the DANE hot path, bottom-up: vector kernels, dense and
+//! sparse matvecs, Gram assembly, Cholesky factor/solve, CG, the cached
+//! quadratic local solve, a full DANE round, and the PJRT artifact calls.
+//! The canonical shard is 2048 x 512 (matching the AOT artifact shape).
+
+use dane::coordinator::{Cluster, RunCtx, SerialCluster};
+use dane::data::{shard_dataset, synthetic_fig2};
+use dane::linalg::cg::{cg_solve, CgScratch};
+use dane::linalg::{ops, CholeskyFactor, DataMatrix};
+use dane::loss::{Objective, Ridge, ShardHvp, SmoothHinge};
+use dane::runtime::{ArtifactRegistry, PjrtSession};
+use dane::solver::erm_solve;
+use dane::util::bench::{black_box, Bencher};
+use dane::util::Rng64;
+use dane::worker::Worker;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let b = Bencher {
+        measure_time: Duration::from_millis(900),
+        warmup_time: Duration::from_millis(150),
+        max_samples: 40,
+    };
+    println!("== hotpath_micro (canonical shard 2048x512) ==");
+
+    let (n, d) = (2048usize, 512usize);
+    let ds = synthetic_fig2(n, d, 0.005, 42);
+    let shard = ds.as_single_shard();
+    let lam = 0.01;
+    let obj: Arc<dyn Objective> = Arc::new(Ridge::new(lam));
+
+    // ---- L0 vector kernels ------------------------------------------
+    let mut rng = Rng64::seed_from_u64(1);
+    let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let mut y: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    b.bench("ops::dot d=512", || {
+        black_box(ops::dot(&x, &y));
+    });
+    b.bench("ops::axpy d=512", || {
+        ops::axpy(0.5, &x, &mut y);
+        black_box(&y);
+    });
+
+    // ---- matvec family ----------------------------------------------
+    let dense = shard.x.to_dense();
+    let mut out_n = vec![0.0; n];
+    let mut out_d = vec![0.0; d];
+    b.bench("dense matvec 2048x512", || {
+        dense.matvec(&x, &mut out_n);
+        black_box(&out_n);
+    });
+    b.bench("dense rmatvec 2048x512", || {
+        dense.rmatvec(&out_n, &mut out_d);
+        black_box(&out_d);
+    });
+
+    let sparse_ds = dane::data::astro_like(2048, 8, 5);
+    if let DataMatrix::Sparse(s) = &sparse_ds.x {
+        let vs: Vec<f64> = (0..s.cols()).map(|_| 0.01).collect();
+        let mut o = vec![0.0; s.rows()];
+        let nnz = s.nnz();
+        b.bench(&format!("csr matvec 2048x10000 (nnz={nnz})"), || {
+            s.matvec(&vs, &mut o);
+            black_box(&o);
+        });
+    }
+
+    // ---- HVP operator (the CG inner step) ----------------------------
+    let weights = vec![1.0; n];
+    let hvp = ShardHvp::new(&shard, &weights, lam);
+    b.bench("shard hvp (gram matvec) 2048x512", || {
+        use dane::linalg::LinearOperator;
+        hvp.apply(&x, &mut out_d);
+        black_box(&out_d);
+    });
+
+    // ---- Gram + Cholesky (the cached local solver's setup + steady state)
+    let t0 = std::time::Instant::now();
+    let gram = dense.gram();
+    println!("one-shot gram 2048x512 -> 512x512: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    let shifted = gram.add_diag(lam);
+    let t0 = std::time::Instant::now();
+    let chol = CholeskyFactor::factor(&shifted).unwrap();
+    println!("one-shot cholesky d=512: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    let rhs: Vec<f64> = (0..d).map(|i| (i as f64).sin()).collect();
+    b.bench("cholesky solve d=512 (steady-state DANE step)", || {
+        black_box(chol.solve(&rhs));
+    });
+
+    // ---- CG local solve (the Hessian-free path) ----------------------
+    let mut cgs = CgScratch::new(d);
+    let mut sol = vec![0.0; d];
+    b.bench("cg solve tol=1e-10 (hessian-free local solve)", || {
+        cg_solve(&hvp, &rhs, &mut sol, 1e-10, 500, &mut cgs).unwrap();
+        black_box(&sol);
+    });
+
+    // ---- worker-level DANE local solve -------------------------------
+    let shards = shard_dataset(&ds, 1, 3);
+    let mut worker = Worker::new(0, shards.into_iter().next().unwrap(), obj.clone());
+    let w_prev = vec![0.0; d];
+    let mut g = vec![0.0; d];
+    worker.grad(&w_prev, &mut g).unwrap();
+    // warm the factor cache, then measure steady-state
+    worker.dane_local_solve(&w_prev, &g, 1.0, 0.0).unwrap();
+    b.bench("worker dane_local_solve (cached cholesky)", || {
+        black_box(worker.dane_local_solve(&w_prev, &g, 1.0, 0.0).unwrap());
+    });
+
+    // hinge local solve (Newton-CG) on covtype-like
+    let hds = dane::data::covtype_like(2048, 8, 7);
+    let hobj: Arc<dyn Objective> = Arc::new(SmoothHinge::new(1e-3));
+    let hshards = shard_dataset(&hds, 1, 3);
+    let mut hworker = Worker::new(0, hshards.into_iter().next().unwrap(), hobj.clone());
+    let hw_prev = vec![0.0; 54];
+    let mut hg = vec![0.0; 54];
+    hworker.grad(&hw_prev, &mut hg).unwrap();
+    b.bench("worker hinge local solve (newton-cg) 2048x54", || {
+        black_box(hworker.dane_local_solve(&hw_prev, &hg, 1.0, 3e-3).unwrap());
+    });
+
+    // ---- full DANE round, m = 8 --------------------------------------
+    let big = synthetic_fig2(8192, 256, 0.005, 9);
+    let obj2: Arc<dyn Objective> = Arc::new(Ridge::new(lam));
+    let (_, phi_star) = erm_solve(obj2.as_ref(), &big.as_single_shard()).unwrap();
+    let mut cluster = SerialCluster::new(&big, obj2, 8, 3);
+    // warm caches
+    let ctx = RunCtx::new(2).with_reference(phi_star).with_tol(0.0);
+    dane::coordinator::dane::run(&mut cluster, &Default::default(), &ctx);
+    let w = vec![0.0; 256];
+    b.bench("cluster grad_and_loss m=8 N=8192 d=256", || {
+        black_box(cluster.grad_and_loss(&w).unwrap());
+    });
+    let (g2, _) = cluster.eval_grad_loss(&w).unwrap();
+    b.bench("cluster dane_round m=8 N=8192 d=256", || {
+        black_box(cluster.dane_round(&w, &g2, 1.0, 0.0).unwrap());
+    });
+
+    // ---- PJRT artifact calls ------------------------------------------
+    if let Ok(reg) = ArtifactRegistry::open(Path::new("artifacts")) {
+        let reg = Arc::new(reg);
+        let pj_ds = synthetic_fig2(2000, 500, 0.005, 21);
+        let pj_shards = shard_dataset(&pj_ds, 1, 1);
+        let pobj: Arc<dyn Objective> = Arc::new(Ridge::new(lam));
+        let session =
+            PjrtSession::for_shard(reg, &pj_shards[0], pobj.as_ref()).unwrap();
+        let wv = vec![0.0; 500];
+        let mut gv = vec![0.0; 500];
+        // warm compile
+        session.grad(&pj_shards[0], pobj.as_ref(), &wv, &mut gv).unwrap();
+        b.bench("pjrt ridge_grad artifact (2048x512 padded)", || {
+            black_box(
+                session.grad(&pj_shards[0], pobj.as_ref(), &wv, &mut gv).unwrap(),
+            );
+        });
+        session
+            .dane_local_solve(&pj_shards[0], pobj.as_ref(), &wv, &gv, 1.0, 0.0)
+            .unwrap();
+        b.bench("pjrt ridge_local_solve artifact (CG in HLO)", || {
+            black_box(
+                session
+                    .dane_local_solve(&pj_shards[0], pobj.as_ref(), &wv, &gv, 1.0, 0.0)
+                    .unwrap(),
+            );
+        });
+    } else {
+        println!("(artifacts/ not built; skipping PJRT benches)");
+    }
+
+    println!("== hotpath_micro done ==");
+}

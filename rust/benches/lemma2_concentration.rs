@@ -1,0 +1,21 @@
+//! LEMMA2 bench: empirical max_i ||H_i - H||_2 against the
+//! sqrt(32 L^2 log(dm/delta) / n) concentration bound, sweeping the
+//! per-machine sample count. The measured deviation must shrink ~1/sqrt(n)
+//! and stay below the bound.
+
+fn main() {
+    println!("== lemma2 bench ==");
+    let t0 = std::time::Instant::now();
+    let rows = dane::harness::lemma2().expect("lemma2 harness");
+    // 64x more data -> ~8x smaller deviation; accept >= 4x.
+    let first = rows.first().unwrap();
+    let last = rows.last().unwrap();
+    let shrink = first.max_dev / last.max_dev;
+    println!(
+        "n {}x -> deviation shrank {shrink:.1}x (sqrt predicts {:.1}x)",
+        last.n_per_machine / first.n_per_machine,
+        ((last.n_per_machine / first.n_per_machine) as f64).sqrt()
+    );
+    assert!(shrink > 4.0, "Lemma 2 rate violated: {shrink:.2}x");
+    println!("lemma2 bench done in {:.1}s", t0.elapsed().as_secs_f64());
+}

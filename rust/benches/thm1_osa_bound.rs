@@ -1,0 +1,21 @@
+//! THM1 bench: Monte-Carlo simulation of the Theorem-1 lower-bound
+//! construction. OSA's MSE must plateau in m; the pooled ERM's must fall
+//! ~1/m. Prints the table and asserts the ordering the theorem proves.
+
+fn main() {
+    println!("== thm1 bench ==");
+    let t0 = std::time::Instant::now();
+    let rows = dane::harness::thm1(400).expect("thm1 harness");
+    let m1 = rows.iter().find(|r| r.m == 1).unwrap();
+    let m64 = rows.iter().find(|r| r.m == 64).unwrap();
+    let osa_gain = m1.mse_osa / m64.mse_osa;
+    let erm_gain = m1.mse_erm / m64.mse_erm;
+    println!(
+        "m=1 -> m=64 MSE improvement: OSA {osa_gain:.1}x vs pooled ERM {erm_gain:.1}x"
+    );
+    assert!(
+        erm_gain > 4.0 * osa_gain,
+        "Theorem 1: ERM must outscale OSA in m ({erm_gain:.1}x vs {osa_gain:.1}x)"
+    );
+    println!("thm1 bench done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,182 @@
+//! Averaging collectives with full accounting.
+
+use crate::linalg::ops;
+use super::netmodel::NetModel;
+
+/// Cumulative communication statistics for one run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CommStats {
+    /// Synchronous communication rounds (one allreduce or broadcast = 1).
+    pub rounds: u64,
+    /// Total payload bytes moved across the (simulated) network,
+    /// topology-independent: sum over participants of their payload.
+    pub bytes: u64,
+    /// Modeled wallclock seconds under the attached [`NetModel`].
+    pub modeled_seconds: f64,
+}
+
+impl CommStats {
+    pub fn merge(&mut self, other: &CommStats) {
+        self.rounds += other.rounds;
+        self.bytes += other.bytes;
+        self.modeled_seconds += other.modeled_seconds;
+    }
+}
+
+/// The collective operations the coordinator uses. One instance per run;
+/// it owns the stats and the network model.
+#[derive(Debug, Clone)]
+pub struct Collective {
+    stats: CommStats,
+    net: NetModel,
+}
+
+impl Collective {
+    pub fn new(net: NetModel) -> Self {
+        Collective { stats: CommStats::default(), net }
+    }
+
+    /// Free local-only collective (m = 1 degenerate runs).
+    pub fn noop() -> Self {
+        Collective::new(NetModel::free())
+    }
+
+    pub fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    pub fn reset(&mut self) {
+        self.stats = CommStats::default();
+    }
+
+    /// Allreduce-mean over per-worker vectors: every worker contributes a
+    /// d-vector, everyone ends with the mean. Counts ONE round. The
+    /// result is written into `out`.
+    pub fn allreduce_mean(&mut self, contributions: &[&[f64]], out: &mut [f64]) {
+        assert!(!contributions.is_empty(), "allreduce with no participants");
+        let d = out.len();
+        for c in contributions {
+            assert_eq!(c.len(), d, "allreduce length mismatch");
+        }
+        ops::mean_into(contributions, out);
+        self.account(contributions.len(), d);
+    }
+
+    /// Allreduce-mean of scalars (loss values). Counts ONE round — in a
+    /// real deployment scalars piggyback on a vector allreduce, so callers
+    /// that average a vector and a scalar in the same logical round should
+    /// use [`Collective::allreduce_mean_with_scalar`] instead.
+    pub fn allreduce_scalar_mean(&mut self, xs: &[f64]) -> f64 {
+        assert!(!xs.is_empty(), "allreduce with no participants");
+        let m = xs.len();
+        let mean = xs.iter().sum::<f64>() / m as f64;
+        self.account(m, 1);
+        mean
+    }
+
+    /// One round that averages a vector and a scalar together (gradient +
+    /// loss share an allreduce; payload is d+1 values per worker).
+    pub fn allreduce_mean_with_scalar(
+        &mut self,
+        contributions: &[&[f64]],
+        scalars: &[f64],
+        out: &mut [f64],
+    ) -> f64 {
+        assert_eq!(contributions.len(), scalars.len());
+        assert!(!contributions.is_empty(), "allreduce with no participants");
+        let d = out.len();
+        ops::mean_into(contributions, out);
+        let mean = scalars.iter().sum::<f64>() / scalars.len() as f64;
+        self.account(contributions.len(), d + 1);
+        mean
+    }
+
+    /// Broadcast a d-vector from the leader to all m workers. Counts ONE
+    /// round. (The data is shared memory in this simulation; only the
+    /// accounting happens here.)
+    pub fn broadcast(&mut self, m: usize, d: usize) {
+        self.account(m, d);
+    }
+
+    /// Account ONE allreduce round of a `d`-value f64 payload per worker
+    /// where the reduction itself was computed by the caller (e.g. the
+    /// n_i-weighted gradient means the serial cluster performs inline).
+    pub fn count_round(&mut self, m: usize, d: usize) {
+        self.account(m, d);
+    }
+
+    fn account(&mut self, m: usize, d: usize) {
+        let payload = (d * std::mem::size_of::<f64>()) as u64;
+        self.stats.rounds += 1;
+        self.stats.bytes += payload * m as u64;
+        self.stats.modeled_seconds += self.net.collective_seconds(m, payload);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::netmodel::{NetModel, Topology};
+
+    #[test]
+    fn allreduce_is_serial_mean() {
+        let mut c = Collective::noop();
+        let a = vec![1.0, 2.0];
+        let b = vec![3.0, 4.0];
+        let mut out = vec![0.0; 2];
+        c.allreduce_mean(&[&a, &b], &mut out);
+        assert_eq!(out, vec![2.0, 3.0]);
+        assert_eq!(c.stats().rounds, 1);
+        assert_eq!(c.stats().bytes, 2 * 2 * 8);
+    }
+
+    #[test]
+    fn scalar_mean_counts_round() {
+        let mut c = Collective::noop();
+        let m = c.allreduce_scalar_mean(&[1.0, 3.0]);
+        assert_eq!(m, 2.0);
+        assert_eq!(c.stats().rounds, 1);
+    }
+
+    #[test]
+    fn fused_vector_scalar_single_round() {
+        let mut c = Collective::noop();
+        let a = vec![2.0];
+        let b = vec![4.0];
+        let mut out = vec![0.0];
+        let s = c.allreduce_mean_with_scalar(&[&a, &b], &[10.0, 20.0], &mut out);
+        assert_eq!(out, vec![3.0]);
+        assert_eq!(s, 15.0);
+        assert_eq!(c.stats().rounds, 1);
+        assert_eq!(c.stats().bytes, 2 * 2 * 8);
+    }
+
+    #[test]
+    fn modeled_time_accumulates() {
+        let net = NetModel::new(1e-3, 1e-9, Topology::Star);
+        let mut c = Collective::new(net);
+        let a = vec![0.0; 1000];
+        let mut out = vec![0.0; 1000];
+        c.allreduce_mean(&[&a, &a, &a, &a], &mut out);
+        assert!(c.stats().modeled_seconds > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_rejected() {
+        let mut c = Collective::noop();
+        let a = vec![1.0, 2.0];
+        let b = vec![3.0];
+        let mut out = vec![0.0; 2];
+        c.allreduce_mean(&[&a, &b], &mut out);
+    }
+
+    #[test]
+    fn reset_clears_stats() {
+        let mut c = Collective::noop();
+        c.broadcast(4, 10);
+        assert_eq!(c.stats().rounds, 1);
+        c.reset();
+        assert_eq!(c.stats(), &CommStats::default());
+    }
+}

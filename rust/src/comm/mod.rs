@@ -1,0 +1,14 @@
+//! Simulated collective communication layer.
+//!
+//! Communication rounds are the paper's evaluation currency: DANE costs
+//! exactly two distributed averages per iteration, GD one, OSA one total.
+//! This module provides the averaging primitives, *counts* every byte and
+//! round (so benches can report them), and attaches an alpha-beta network
+//! cost model with star / ring / tree topologies to turn counts into
+//! modeled wallclock — the quantity a real deployment would observe.
+
+pub mod collective;
+pub mod netmodel;
+
+pub use collective::{Collective, CommStats};
+pub use netmodel::{NetModel, Topology};

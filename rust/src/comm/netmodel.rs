@@ -1,0 +1,119 @@
+//! Alpha-beta network cost model.
+//!
+//! A collective over m nodes with per-node payload B bytes is modeled as
+//!
+//! ```text
+//! T = steps(topology, m) * alpha + traffic(topology, m, B) * beta
+//! ```
+//!
+//! with `alpha` the per-message latency and `beta` the inverse bandwidth
+//! (seconds/byte). This is the standard LogP-lite model used to reason
+//! about allreduce algorithms; it lets the benches report a modeled
+//! wallclock for each algorithm's communication pattern on cluster-like
+//! parameters (e.g. alpha = 50us, beta = 1/1GBps), which is how the
+//! paper's "communication is expensive" premise becomes quantitative.
+
+/// Collective algorithm / topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Leader gathers then scatters: 2 steps, 2(m-1)B traffic at the root.
+    Star,
+    /// Ring allreduce: 2(m-1) steps, each moving B/m per link.
+    Ring,
+    /// Binomial tree reduce + broadcast: 2 log2(m) steps, B per link.
+    Tree,
+}
+
+/// Latency/bandwidth parameters + topology.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetModel {
+    /// Per-step latency, seconds.
+    pub alpha: f64,
+    /// Inverse bandwidth, seconds per byte.
+    pub beta: f64,
+    pub topology: Topology,
+}
+
+impl NetModel {
+    pub fn new(alpha: f64, beta: f64, topology: Topology) -> Self {
+        assert!(alpha >= 0.0 && beta >= 0.0);
+        NetModel { alpha, beta, topology }
+    }
+
+    /// Zero-cost model (pure iteration counting).
+    pub fn free() -> Self {
+        NetModel { alpha: 0.0, beta: 0.0, topology: Topology::Star }
+    }
+
+    /// A datacenter-like default: 50us latency, 10 Gbit/s links.
+    pub fn datacenter() -> Self {
+        NetModel { alpha: 50e-6, beta: 8.0 / 10e9, topology: Topology::Ring }
+    }
+
+    /// Modeled seconds for one allreduce/broadcast over m nodes with
+    /// per-node payload `bytes`.
+    pub fn collective_seconds(&self, m: usize, bytes: u64) -> f64 {
+        if m <= 1 {
+            return 0.0;
+        }
+        let b = bytes as f64;
+        let m_f = m as f64;
+        let (steps, traffic) = match self.topology {
+            // Root sequentially receives m-1 payloads then sends m-1.
+            Topology::Star => (2.0, 2.0 * (m_f - 1.0) * b),
+            // Classic ring allreduce: 2(m-1) steps of B/m each.
+            Topology::Ring => (2.0 * (m_f - 1.0), 2.0 * (m_f - 1.0) * b / m_f),
+            // Binomial tree: up + down, B per step on the critical path.
+            Topology::Tree => {
+                let l = m_f.log2().ceil();
+                (2.0 * l, 2.0 * l * b)
+            }
+        };
+        steps * self.alpha + traffic * self.beta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_node_is_free() {
+        let n = NetModel::datacenter();
+        assert_eq!(n.collective_seconds(1, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn ring_beats_star_bandwidth_at_scale() {
+        // For large payloads the ring's B/m per-step traffic wins.
+        let bytes = 64 << 20;
+        let star = NetModel::new(0.0, 1e-9, Topology::Star);
+        let ring = NetModel::new(0.0, 1e-9, Topology::Ring);
+        assert!(
+            ring.collective_seconds(64, bytes) < star.collective_seconds(64, bytes)
+        );
+    }
+
+    #[test]
+    fn star_beats_ring_latency_for_tiny_payloads() {
+        let star = NetModel::new(50e-6, 0.0, Topology::Star);
+        let ring = NetModel::new(50e-6, 0.0, Topology::Ring);
+        assert!(star.collective_seconds(64, 8) < ring.collective_seconds(64, 8));
+    }
+
+    #[test]
+    fn tree_scales_logarithmically() {
+        let tree = NetModel::new(1.0, 0.0, Topology::Tree);
+        let t64 = tree.collective_seconds(64, 8);
+        let t8 = tree.collective_seconds(8, 8);
+        assert_eq!(t64, 2.0 * 6.0);
+        assert_eq!(t8, 2.0 * 3.0);
+    }
+
+    #[test]
+    fn monotone_in_m_and_bytes() {
+        let n = NetModel::datacenter();
+        assert!(n.collective_seconds(4, 1000) <= n.collective_seconds(8, 1000));
+        assert!(n.collective_seconds(8, 1000) <= n.collective_seconds(8, 2000));
+    }
+}

@@ -1,0 +1,528 @@
+//! Typed experiment configuration, serialized as JSON through the
+//! in-tree [`crate::util::json`] layer (the build is offline — no serde).
+//!
+//! The CLI launcher (`dane run --config exp.json`) and all example
+//! binaries build runs from these structs; benches construct them in
+//! code. Defaults reproduce the paper's settings.
+
+use crate::comm::{NetModel, Topology};
+use crate::util::Json;
+use crate::{Error, Result};
+use std::path::Path;
+
+/// Which loss to optimize.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LossKind {
+    Ridge,
+    SmoothHinge,
+    Logistic,
+}
+
+impl LossKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LossKind::Ridge => "ridge",
+            LossKind::SmoothHinge => "smooth_hinge",
+            LossKind::Logistic => "logistic",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s {
+            "ridge" => Ok(LossKind::Ridge),
+            "smooth_hinge" => Ok(LossKind::SmoothHinge),
+            "logistic" => Ok(LossKind::Logistic),
+            other => Err(Error::Config(format!("unknown loss {other:?}"))),
+        }
+    }
+}
+
+/// Which dataset to build.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DatasetConfig {
+    /// Paper fig. 2 synthetic ridge model.
+    Fig2 { n: usize, d: usize, paper_reg: f64 },
+    /// COV1-like synthetic classification (d = 54 dense).
+    CovtypeLike { n: usize, n_test: usize },
+    /// ASTRO-PH-like synthetic sparse classification (d = 10_000).
+    AstroLike { n: usize, n_test: usize },
+    /// MNIST-4v7-like synthetic classification (d = 784 dense).
+    Mnist47Like { n: usize, n_test: usize },
+    /// Real data in LIBSVM format.
+    Libsvm { path: String, dim: usize },
+}
+
+impl DatasetConfig {
+    pub fn build(&self, seed: u64) -> Result<crate::data::Dataset> {
+        Ok(match self {
+            DatasetConfig::Fig2 { n, d, paper_reg } => {
+                crate::data::synthetic_fig2(*n, *d, *paper_reg, seed)
+            }
+            DatasetConfig::CovtypeLike { n, n_test } => {
+                crate::data::covtype_like(*n, *n_test, seed)
+            }
+            DatasetConfig::AstroLike { n, n_test } => {
+                crate::data::astro_like(*n, *n_test, seed)
+            }
+            DatasetConfig::Mnist47Like { n, n_test } => {
+                crate::data::mnist47_like(*n, *n_test, seed)
+            }
+            DatasetConfig::Libsvm { path, dim } => {
+                crate::data::libsvm::load(Path::new(path), *dim)?
+            }
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            DatasetConfig::Fig2 { n, d, paper_reg } => Json::obj(vec![
+                ("kind", Json::str("fig2")),
+                ("n", Json::num(*n as f64)),
+                ("d", Json::num(*d as f64)),
+                ("paper_reg", Json::num(*paper_reg)),
+            ]),
+            DatasetConfig::CovtypeLike { n, n_test } => Json::obj(vec![
+                ("kind", Json::str("covtype_like")),
+                ("n", Json::num(*n as f64)),
+                ("n_test", Json::num(*n_test as f64)),
+            ]),
+            DatasetConfig::AstroLike { n, n_test } => Json::obj(vec![
+                ("kind", Json::str("astro_like")),
+                ("n", Json::num(*n as f64)),
+                ("n_test", Json::num(*n_test as f64)),
+            ]),
+            DatasetConfig::Mnist47Like { n, n_test } => Json::obj(vec![
+                ("kind", Json::str("mnist47_like")),
+                ("n", Json::num(*n as f64)),
+                ("n_test", Json::num(*n_test as f64)),
+            ]),
+            DatasetConfig::Libsvm { path, dim } => Json::obj(vec![
+                ("kind", Json::str("libsvm")),
+                ("path", Json::str(path.clone())),
+                ("dim", Json::num(*dim as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let kind = v.req("kind")?.as_str().unwrap_or_default();
+        let usz = |key: &str| -> Result<usize> {
+            v.req(key)?
+                .as_usize()
+                .ok_or_else(|| Error::Config(format!("dataset.{key} must be a nonneg int")))
+        };
+        match kind {
+            "fig2" => Ok(DatasetConfig::Fig2 {
+                n: usz("n")?,
+                d: usz("d")?,
+                paper_reg: v.req("paper_reg")?.as_f64().unwrap_or(0.005),
+            }),
+            "covtype_like" => {
+                Ok(DatasetConfig::CovtypeLike { n: usz("n")?, n_test: usz("n_test")? })
+            }
+            "astro_like" => {
+                Ok(DatasetConfig::AstroLike { n: usz("n")?, n_test: usz("n_test")? })
+            }
+            "mnist47_like" => {
+                Ok(DatasetConfig::Mnist47Like { n: usz("n")?, n_test: usz("n_test")? })
+            }
+            "libsvm" => Ok(DatasetConfig::Libsvm {
+                path: v
+                    .req("path")?
+                    .as_str()
+                    .ok_or_else(|| Error::Config("dataset.path must be a string".into()))?
+                    .to_string(),
+                dim: usz("dim")?,
+            }),
+            other => Err(Error::Config(format!("unknown dataset kind {other:?}"))),
+        }
+    }
+}
+
+/// Which algorithm to run, with its hyperparameters.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AlgoConfig {
+    /// The paper's method. `mu_over_lambda` expresses mu as a multiple of
+    /// lambda (the paper sweeps mu in {0, lambda, 3 lambda}).
+    Dane { eta: f64, mu_over_lambda: f64 },
+    /// Distributed gradient descent (step = 1/L unless overridden).
+    Gd { step: Option<f64> },
+    /// Nesterov-accelerated distributed gradient descent.
+    Agd { step: Option<f64> },
+    /// Global-consensus ADMM (Boyd et al. 2011).
+    Admm { rho: f64 },
+    /// One-shot parameter averaging; `bias_correction_r` in (0,1) enables
+    /// the Zhang et al. subsample correction.
+    Osa { bias_correction_r: Option<f64> },
+    /// Distributed L-BFGS with history size `history`.
+    Lbfgs { history: usize },
+}
+
+impl AlgoConfig {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoConfig::Dane { .. } => "dane",
+            AlgoConfig::Gd { .. } => "gd",
+            AlgoConfig::Agd { .. } => "agd",
+            AlgoConfig::Admm { .. } => "admm",
+            AlgoConfig::Osa { .. } => "osa",
+            AlgoConfig::Lbfgs { .. } => "lbfgs",
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            AlgoConfig::Dane { eta, mu_over_lambda } => Json::obj(vec![
+                ("kind", Json::str("dane")),
+                ("eta", Json::num(*eta)),
+                ("mu_over_lambda", Json::num(*mu_over_lambda)),
+            ]),
+            AlgoConfig::Gd { step } => Json::obj(vec![
+                ("kind", Json::str("gd")),
+                ("step", step.map(Json::num).unwrap_or(Json::Null)),
+            ]),
+            AlgoConfig::Agd { step } => Json::obj(vec![
+                ("kind", Json::str("agd")),
+                ("step", step.map(Json::num).unwrap_or(Json::Null)),
+            ]),
+            AlgoConfig::Admm { rho } => Json::obj(vec![
+                ("kind", Json::str("admm")),
+                ("rho", Json::num(*rho)),
+            ]),
+            AlgoConfig::Osa { bias_correction_r } => Json::obj(vec![
+                ("kind", Json::str("osa")),
+                (
+                    "bias_correction_r",
+                    bias_correction_r.map(Json::num).unwrap_or(Json::Null),
+                ),
+            ]),
+            AlgoConfig::Lbfgs { history } => Json::obj(vec![
+                ("kind", Json::str("lbfgs")),
+                ("history", Json::num(*history as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let kind = v.req("kind")?.as_str().unwrap_or_default();
+        let opt_f64 = |key: &str| v.get(key).and_then(|x| x.as_f64());
+        match kind {
+            "dane" => Ok(AlgoConfig::Dane {
+                eta: opt_f64("eta").unwrap_or(1.0),
+                mu_over_lambda: opt_f64("mu_over_lambda").unwrap_or(0.0),
+            }),
+            "gd" => Ok(AlgoConfig::Gd { step: opt_f64("step") }),
+            "agd" => Ok(AlgoConfig::Agd { step: opt_f64("step") }),
+            "admm" => Ok(AlgoConfig::Admm { rho: opt_f64("rho").unwrap_or(1.0) }),
+            "osa" => Ok(AlgoConfig::Osa { bias_correction_r: opt_f64("bias_correction_r") }),
+            "lbfgs" => Ok(AlgoConfig::Lbfgs {
+                history: v
+                    .get("history")
+                    .and_then(|x| x.as_usize())
+                    .unwrap_or(10),
+            }),
+            other => Err(Error::Config(format!("unknown algo kind {other:?}"))),
+        }
+    }
+}
+
+/// Worker compute backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-rust local solves (any shape).
+    #[default]
+    Native,
+    /// AOT HLO artifacts through PJRT (shapes padded to the manifest).
+    Pjrt,
+}
+
+impl BackendKind {
+    fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    fn from_name(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => Err(Error::Config(format!("unknown backend {other:?}"))),
+        }
+    }
+}
+
+/// Serializable network-model config.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetConfig {
+    pub alpha: f64,
+    pub beta: f64,
+    pub topology: Topology,
+}
+
+impl NetConfig {
+    pub fn build(&self) -> NetModel {
+        NetModel::new(self.alpha, self.beta, self.topology)
+    }
+
+    pub fn free() -> Self {
+        NetConfig { alpha: 0.0, beta: 0.0, topology: Topology::Star }
+    }
+
+    pub fn datacenter() -> Self {
+        let m = NetModel::datacenter();
+        NetConfig { alpha: m.alpha, beta: m.beta, topology: m.topology }
+    }
+
+    fn topology_name(&self) -> &'static str {
+        match self.topology {
+            Topology::Star => "star",
+            Topology::Ring => "ring",
+            Topology::Tree => "tree",
+        }
+    }
+}
+
+/// A full experiment: dataset x algorithm x cluster shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub dataset: DatasetConfig,
+    pub loss: LossKind,
+    /// L2 regularization lambda. For Fig2 datasets prefer
+    /// `data::synthetic::fig2_lambda(paper_reg)`.
+    pub lambda: f64,
+    pub algo: AlgoConfig,
+    /// Number of machines m.
+    pub machines: usize,
+    /// Max communication-round iterations.
+    pub rounds: usize,
+    /// Stop when suboptimality falls below this (paper: 1e-6).
+    pub tol: f64,
+    pub seed: u64,
+    pub backend: BackendKind,
+    /// Evaluate test loss each round (fig. 4).
+    pub eval_test: bool,
+    pub net: NetConfig,
+}
+
+impl ExperimentConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("dataset", self.dataset.to_json()),
+            ("loss", Json::str(self.loss.name())),
+            ("lambda", Json::num(self.lambda)),
+            ("algo", self.algo.to_json()),
+            ("machines", Json::num(self.machines as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("tol", Json::num(self.tol)),
+            ("seed", Json::num(self.seed as f64)),
+            ("backend", Json::str(self.backend.name())),
+            ("eval_test", Json::Bool(self.eval_test)),
+            (
+                "net",
+                Json::obj(vec![
+                    ("alpha", Json::num(self.net.alpha)),
+                    ("beta", Json::num(self.net.beta)),
+                    ("topology", Json::str(self.net.topology_name())),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let name = v.req("name")?.as_str().unwrap_or("unnamed").to_string();
+        let dataset = DatasetConfig::from_json(v.req("dataset")?)?;
+        let loss = LossKind::from_name(v.req("loss")?.as_str().unwrap_or_default())?;
+        let lambda = v
+            .req("lambda")?
+            .as_f64()
+            .ok_or_else(|| Error::Config("lambda must be a number".into()))?;
+        let algo = AlgoConfig::from_json(v.req("algo")?)?;
+        let machines = v
+            .req("machines")?
+            .as_usize()
+            .ok_or_else(|| Error::Config("machines must be a nonneg int".into()))?;
+        let rounds = v
+            .req("rounds")?
+            .as_usize()
+            .ok_or_else(|| Error::Config("rounds must be a nonneg int".into()))?;
+        let tol = v.get("tol").and_then(|x| x.as_f64()).unwrap_or(1e-6);
+        let seed = v.get("seed").and_then(|x| x.as_u64()).unwrap_or(42);
+        let backend = match v.get("backend").and_then(|x| x.as_str()) {
+            Some(s) => BackendKind::from_name(s)?,
+            None => BackendKind::Native,
+        };
+        let eval_test = v.get("eval_test").and_then(|x| x.as_bool()).unwrap_or(false);
+        let net = match v.get("net") {
+            Some(n) => {
+                let topology = match n.get("topology").and_then(|x| x.as_str()) {
+                    Some("ring") => Topology::Ring,
+                    Some("tree") => Topology::Tree,
+                    _ => Topology::Star,
+                };
+                NetConfig {
+                    alpha: n.get("alpha").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                    beta: n.get("beta").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                    topology,
+                }
+            }
+            None => NetConfig::datacenter(),
+        };
+        Ok(ExperimentConfig {
+            name,
+            dataset,
+            loss,
+            lambda,
+            algo,
+            machines,
+            rounds,
+            tol,
+            seed,
+            backend,
+            eval_test,
+            net,
+        })
+    }
+
+    pub fn from_json_str(s: &str) -> Result<Self> {
+        Self::from_json(&Json::parse(s)?)
+    }
+
+    pub fn from_json_file(path: &Path) -> Result<Self> {
+        Self::from_json_str(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    /// Sanity-check the combination.
+    pub fn validate(&self) -> Result<()> {
+        if self.machines == 0 {
+            return Err(Error::Config("machines must be >= 1".into()));
+        }
+        if self.rounds == 0 {
+            return Err(Error::Config("rounds must be >= 1".into()));
+        }
+        if self.lambda < 0.0 {
+            return Err(Error::Config("lambda must be >= 0".into()));
+        }
+        if matches!(self.loss, LossKind::Ridge)
+            && matches!(
+                self.dataset,
+                DatasetConfig::CovtypeLike { .. }
+                    | DatasetConfig::AstroLike { .. }
+                    | DatasetConfig::Mnist47Like { .. }
+            )
+        {
+            return Err(Error::Config(
+                "classification datasets need a classification loss".into(),
+            ));
+        }
+        if let AlgoConfig::Osa { bias_correction_r: Some(r) } = self.algo {
+            if !(0.0 < r && r < 1.0) {
+                return Err(Error::Config(
+                    "bias_correction_r must be in (0,1)".into(),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "t".into(),
+            dataset: DatasetConfig::Fig2 { n: 1000, d: 50, paper_reg: 0.005 },
+            loss: LossKind::Ridge,
+            lambda: 0.01,
+            algo: AlgoConfig::Dane { eta: 1.0, mu_over_lambda: 0.0 },
+            machines: 4,
+            rounds: 20,
+            tol: 1e-6,
+            seed: 42,
+            backend: BackendKind::Native,
+            eval_test: false,
+            net: NetConfig::free(),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = sample();
+        let s = c.to_json_string();
+        let c2 = ExperimentConfig::from_json_str(&s).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn parses_handwritten_json() {
+        let s = r#"{
+            "name": "fig3-cov1",
+            "loss": "smooth_hinge",
+            "lambda": 1e-5,
+            "machines": 16,
+            "rounds": 100,
+            "dataset": {"kind": "covtype_like", "n": 10000, "n_test": 1000},
+            "algo": {"kind": "dane", "eta": 1.0, "mu_over_lambda": 3.0}
+        }"#;
+        let c = ExperimentConfig::from_json_str(s).unwrap();
+        assert_eq!(c.machines, 16);
+        assert_eq!(c.tol, 1e-6); // default
+        assert_eq!(c.algo.name(), "dane");
+        assert_eq!(c.net, NetConfig::datacenter()); // default
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn every_algo_roundtrips() {
+        for algo in [
+            AlgoConfig::Dane { eta: 0.9, mu_over_lambda: 3.0 },
+            AlgoConfig::Gd { step: Some(0.1) },
+            AlgoConfig::Gd { step: None },
+            AlgoConfig::Agd { step: None },
+            AlgoConfig::Admm { rho: 0.7 },
+            AlgoConfig::Osa { bias_correction_r: Some(0.5) },
+            AlgoConfig::Osa { bias_correction_r: None },
+            AlgoConfig::Lbfgs { history: 7 },
+        ] {
+            let mut c = sample();
+            c.algo = algo.clone();
+            let c2 = ExperimentConfig::from_json_str(&c.to_json_string()).unwrap();
+            assert_eq!(c2.algo, algo);
+        }
+    }
+
+    #[test]
+    fn validation_catches_mismatches() {
+        let mut c = sample();
+        c.machines = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = sample();
+        c.dataset = DatasetConfig::CovtypeLike { n: 100, n_test: 10 };
+        assert!(c.validate().is_err()); // ridge on classification data
+
+        let mut c = sample();
+        c.algo = AlgoConfig::Osa { bias_correction_r: Some(1.5) };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn dataset_build_dispatch() {
+        let ds = DatasetConfig::Fig2 { n: 50, d: 5, paper_reg: 0.005 }
+            .build(1)
+            .unwrap();
+        assert_eq!(ds.n(), 50);
+        assert!(DatasetConfig::Libsvm { path: "/nonexistent".into(), dim: 0 }
+            .build(1)
+            .is_err());
+    }
+}

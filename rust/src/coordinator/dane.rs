@@ -1,0 +1,237 @@
+//! DANE — the paper's method (fig. 1).
+//!
+//! Per iteration:
+//! 1. allreduce the local gradients -> global gradient at w^(t-1)  (round 1)
+//! 2. every machine solves its local perturbed problem (eq. 13)
+//! 3. allreduce the local solutions -> w^(t)                        (round 2)
+//!
+//! For quadratic objectives the iterate follows the closed form of
+//! eq. (16); Theorem 2 gives contraction factor `||I - eta H~^{-1} H||_2`,
+//! which *improves with n* in the stochastic setting (Theorem 3) — the
+//! fig. 2 bench regenerates exactly that behavior.
+
+use super::{AlgoResult, Cluster, RunCtx};
+use crate::linalg::ops;
+use crate::metrics::Trace;
+
+/// How the local solutions combine into w^(t).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Combine {
+    /// Paper step (*): w^(t) = (1/m) sum_i w_i^(t).
+    #[default]
+    Average,
+    /// The Theorem-5 variant: w^(t) = w_1^(t) (machine 1's solution).
+    /// Its linear rate depends on how well D_{h_1} tracks D_phi; with
+    /// similar shards it matches Average, with dissimilar ones it is
+    /// noisier — `first_vs_average` tests pin both behaviors.
+    First,
+}
+
+/// DANE hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct DaneOptions {
+    /// Learning rate eta (paper experiments: 1).
+    pub eta: f64,
+    /// Proximal regularizer mu (paper experiments: 0, lambda, 3 lambda).
+    pub mu: f64,
+    /// Stop early when ||grad|| falls below this (safety net when no
+    /// reference optimum is available).
+    pub grad_tol: f64,
+    /// Iterate combination rule (paper step (*) vs Theorem 5).
+    pub combine: Combine,
+}
+
+impl Default for DaneOptions {
+    fn default() -> Self {
+        DaneOptions { eta: 1.0, mu: 0.0, grad_tol: 1e-13, combine: Combine::Average }
+    }
+}
+
+/// Run DANE from w = 0.
+pub fn run(cluster: &mut dyn Cluster, opts: &DaneOptions, ctx: &RunCtx) -> AlgoResult {
+    let d = cluster.dim();
+    let obj = cluster.objective();
+    let mut w = vec![0.0; d];
+    let mut trace = Trace::new();
+    let mut converged = false;
+    let t0 = std::time::Instant::now();
+
+    for iter in 0..=ctx.max_rounds {
+        // Gradient round (also yields the objective for the trace). The
+        // final pass is instrumentation only — the algorithm is done.
+        let (g, loss) = if iter < ctx.max_rounds && !converged {
+            cluster.grad_and_loss(&w)
+        } else {
+            cluster.eval_grad_loss(&w)
+        }
+        .expect("gradient round failed");
+
+        let subopt = ctx.subopt(loss);
+        trace.push(
+            iter,
+            loss,
+            subopt,
+            Some(ops::norm2(&g)),
+            ctx.test_loss(obj.as_ref(), &w),
+            &cluster.comm_stats(),
+            t0.elapsed().as_secs_f64(),
+        );
+
+        if let Some(s) = subopt {
+            if s < ctx.tol {
+                converged = true;
+                break;
+            }
+        }
+        if ops::norm2(&g) < opts.grad_tol {
+            converged = true;
+            break;
+        }
+        if iter == ctx.max_rounds {
+            break;
+        }
+
+        // Local-solve + combine round.
+        w = match opts.combine {
+            Combine::Average => cluster
+                .dane_round(&w, &g, opts.eta, opts.mu)
+                .expect("dane round failed"),
+            Combine::First => cluster
+                .dane_round_first(&w, &g, opts.eta, opts.mu)
+                .expect("dane round failed"),
+        };
+    }
+
+    AlgoResult { name: "dane".into(), w, trace, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SerialCluster;
+    use crate::data::synthetic_fig2;
+    use crate::loss::{Objective, Ridge, SmoothHinge};
+    use crate::solver::erm_solve;
+    use std::sync::Arc;
+
+    #[test]
+    fn single_machine_quadratic_one_step() {
+        // m=1, mu=0, eta=1 on a quadratic: DANE is an exact Newton step.
+        let ds = synthetic_fig2(128, 8, 0.005, 1);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
+        let mut cluster = SerialCluster::new(&ds, obj, 1, 1);
+        let ctx = RunCtx::new(5).with_reference(phi_star).with_tol(1e-10);
+        let res = run(&mut cluster, &DaneOptions::default(), &ctx);
+        assert!(res.converged);
+        assert_eq!(res.trace.rounds_to_tol(1e-10), Some(1), "one Newton step");
+    }
+
+    #[test]
+    fn multi_machine_quadratic_linear_rate() {
+        let ds = synthetic_fig2(4096, 16, 0.005, 2);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
+        let mut cluster = SerialCluster::new(&ds, obj, 8, 3);
+        let ctx = RunCtx::new(30).with_reference(phi_star).with_tol(1e-10);
+        let res = run(&mut cluster, &DaneOptions::default(), &ctx);
+        assert!(res.converged, "subopt trace: {:?}", res.trace.suboptimality());
+        // contraction factors should be < 1 (linear convergence)
+        let f = res.trace.contraction_factors();
+        assert!(!f.is_empty());
+        assert!(f.iter().take(3).all(|&r| r < 0.9), "{f:?}");
+    }
+
+    #[test]
+    fn rate_improves_with_n() {
+        // Theorem 3: fixed m, growing N -> faster convergence.
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        let mut rates = Vec::new();
+        for &n in &[512usize, 4096] {
+            let ds = synthetic_fig2(n, 16, 0.005, 7);
+            let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
+            let mut cluster = SerialCluster::new(&ds, obj.clone(), 4, 5);
+            let ctx = RunCtx::new(25).with_reference(phi_star).with_tol(1e-12);
+            let res = run(&mut cluster, &DaneOptions::default(), &ctx);
+            let f = res.trace.contraction_factors();
+            let avg = f.iter().take(5).copied().sum::<f64>() / f.len().min(5) as f64;
+            rates.push(avg);
+        }
+        assert!(
+            rates[1] < rates[0],
+            "contraction should improve with n: {rates:?}"
+        );
+    }
+
+    #[test]
+    fn first_vs_average_combination() {
+        // Theorem-5 variant: with large similar shards, taking machine
+        // 1's solution instead of the average still converges linearly.
+        let ds = synthetic_fig2(8192, 12, 0.005, 6);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
+        let mut cluster = SerialCluster::new(&ds, obj.clone(), 4, 9);
+        let ctx = RunCtx::new(40).with_reference(phi_star).with_tol(1e-9);
+        let opts = DaneOptions { combine: Combine::First, ..Default::default() };
+        let res_first = run(&mut cluster, &opts, &ctx);
+        assert!(res_first.converged, "{:?}", res_first.trace.suboptimality());
+
+        // ...but the averaged variant contracts at least as fast
+        // (variance reduction across machines).
+        let mut cluster = SerialCluster::new(&ds, obj, 4, 9);
+        let res_avg = run(&mut cluster, &DaneOptions::default(), &ctx);
+        let rate = |t: &crate::metrics::Trace| {
+            let f = t.contraction_factors();
+            let k = f.len().min(4).max(1);
+            f.iter().take(k).sum::<f64>() / k as f64
+        };
+        assert!(rate(&res_avg.trace) <= rate(&res_first.trace) * 1.5);
+    }
+
+    #[test]
+    fn dane_counts_two_rounds_per_iteration() {
+        let ds = synthetic_fig2(256, 6, 0.005, 4);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        let mut cluster = SerialCluster::new(&ds, obj, 4, 4);
+        let ctx = RunCtx::new(5).with_tol(0.0); // never converges on tol
+        let res = run(&mut cluster, &DaneOptions::default(), &ctx);
+        // 5 full iterations = 5 grad rounds + 5 iterate rounds
+        let last = res.trace.rows.last().unwrap();
+        assert_eq!(last.comm_rounds, 10);
+    }
+
+    #[test]
+    fn hinge_converges_with_mu() {
+        // Per-machine n must be large enough for H_i ~ H (the paper's
+        // own caveat: DANE may not converge when shards are tiny).
+        let ds = crate::data::covtype_like(4096, 64, 11);
+        let lam = 1e-2;
+        let obj: Arc<dyn Objective> = Arc::new(SmoothHinge::new(lam));
+        let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
+        let mut cluster = SerialCluster::new(&ds, obj, 4, 13);
+        let ctx = RunCtx::new(40).with_reference(phi_star).with_tol(1e-6);
+        let opts = DaneOptions { eta: 1.0, mu: 3.0 * lam, ..Default::default() };
+        let res = run(&mut cluster, &opts, &ctx);
+        assert!(res.converged, "trace: {:?}", res.trace.suboptimality());
+    }
+
+    #[test]
+    fn tiny_shards_may_oscillate_but_mu_stabilizes() {
+        // The failure mode fig. 3 marks with "*": small n + small mu can
+        // stall above tol. A large mu (gradient-descent-like regime) must
+        // still make monotone progress.
+        let ds = crate::data::covtype_like(512, 64, 17);
+        let lam = 1e-3;
+        let obj: Arc<dyn Objective> = Arc::new(SmoothHinge::new(lam));
+        let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
+        let mut cluster = SerialCluster::new(&ds, obj, 8, 13);
+        let ctx = RunCtx::new(15).with_reference(phi_star).with_tol(0.0);
+        let opts = DaneOptions { eta: 1.0, mu: 1.0, ..Default::default() };
+        let res = run(&mut cluster, &opts, &ctx);
+        let s = res.trace.suboptimality();
+        assert!(
+            s.last().unwrap() < &(s[0] * 0.9),
+            "large-mu DANE should still descend: {s:?}"
+        );
+    }
+}

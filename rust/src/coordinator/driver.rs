@@ -1,0 +1,178 @@
+//! Experiment driver: config -> dataset -> reference ERM -> cluster ->
+//! algorithm -> result. The CLI and all example binaries go through here.
+
+use super::{admm, dane, gd, lbfgs, osa, AlgoResult, RunCtx, SerialCluster};
+use crate::config::{AlgoConfig, BackendKind, ExperimentConfig};
+use crate::loss::make_objective;
+use crate::metrics::Trace;
+use crate::runtime::ArtifactRegistry;
+use crate::solver::erm_solve;
+use crate::Result;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Everything a finished experiment produced.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub config: ExperimentConfig,
+    pub algo: String,
+    pub w: Vec<f64>,
+    pub trace: Trace,
+    pub converged: bool,
+    /// Reference optimum the suboptimality axis is measured against.
+    pub phi_star: f64,
+    /// Rounds to reach config.tol (the fig. 3 metric), if reached.
+    pub rounds_to_tol: Option<usize>,
+}
+
+/// Run a full experiment from its config.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunResult> {
+    run_experiment_with_artifacts(cfg, None)
+}
+
+/// Like [`run_experiment`], with an explicit artifact dir for the PJRT
+/// backend (defaults to `artifacts/`).
+pub fn run_experiment_with_artifacts(
+    cfg: &ExperimentConfig,
+    artifact_dir: Option<&Path>,
+) -> Result<RunResult> {
+    cfg.validate()?;
+    let ds = cfg.dataset.build(cfg.seed)?;
+    let obj = make_objective(cfg.loss, cfg.lambda);
+
+    // Reference optimum for the suboptimality axis.
+    let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard())?;
+
+    let mut cluster = SerialCluster::with_net(
+        &ds,
+        obj,
+        cfg.machines,
+        cfg.seed.wrapping_add(1),
+        cfg.net.build(),
+    );
+    if cfg.backend == BackendKind::Pjrt {
+        let dir = artifact_dir.unwrap_or_else(|| Path::new("artifacts"));
+        let registry = Arc::new(ArtifactRegistry::open(dir)?);
+        cluster.use_pjrt(registry)?;
+    }
+
+    let mut ctx = RunCtx::new(cfg.rounds)
+        .with_reference(phi_star)
+        .with_tol(cfg.tol);
+    if cfg.eval_test {
+        if let Some(t) = ds.test_shard() {
+            ctx = ctx.with_test_shard(t);
+        }
+    }
+
+    let result = dispatch(&mut cluster, &cfg.algo, &ctx, cfg.lambda);
+    let rounds_to_tol = result.trace.rounds_to_tol(cfg.tol);
+    Ok(RunResult {
+        config: cfg.clone(),
+        algo: result.name,
+        w: result.w,
+        trace: result.trace,
+        converged: result.converged,
+        phi_star,
+        rounds_to_tol,
+    })
+}
+
+/// Dispatch an algorithm config onto a cluster.
+pub fn dispatch(
+    cluster: &mut SerialCluster,
+    algo: &AlgoConfig,
+    ctx: &RunCtx,
+    lambda: f64,
+) -> AlgoResult {
+    match algo {
+        AlgoConfig::Dane { eta, mu_over_lambda } => {
+            let opts = dane::DaneOptions {
+                eta: *eta,
+                mu: mu_over_lambda * lambda,
+                ..Default::default()
+            };
+            dane::run(cluster, &opts, ctx)
+        }
+        AlgoConfig::Gd { step } => {
+            gd::run_gd(cluster, &gd::GdOptions { step: *step }, ctx)
+        }
+        AlgoConfig::Agd { step } => gd::run_agd(
+            cluster,
+            &gd::AgdOptions { step: *step, strong_convexity: None },
+            ctx,
+        ),
+        AlgoConfig::Admm { rho } => {
+            admm::run(cluster, &admm::AdmmOptions { rho: *rho }, ctx)
+        }
+        AlgoConfig::Osa { bias_correction_r } => osa::run(
+            cluster,
+            &osa::OsaOptions { bias_correction_r: *bias_correction_r, seed: 7 },
+            ctx,
+        ),
+        AlgoConfig::Lbfgs { history } => lbfgs::run(
+            cluster,
+            &lbfgs::LbfgsOptions { history: *history, ..Default::default() },
+            ctx,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, LossKind, NetConfig};
+    use crate::comm::Topology;
+
+    fn base_cfg(algo: AlgoConfig) -> ExperimentConfig {
+        ExperimentConfig {
+            name: "driver-test".into(),
+            dataset: DatasetConfig::Fig2 { n: 512, d: 8, paper_reg: 0.005 },
+            loss: LossKind::Ridge,
+            lambda: 0.01,
+            algo,
+            machines: 4,
+            rounds: 30,
+            tol: 1e-8,
+            seed: 11,
+            backend: BackendKind::Native,
+            eval_test: false,
+            net: NetConfig { alpha: 0.0, beta: 0.0, topology: Topology::Star },
+        }
+    }
+
+    #[test]
+    fn dane_experiment_end_to_end() {
+        let cfg = base_cfg(AlgoConfig::Dane { eta: 1.0, mu_over_lambda: 0.0 });
+        let res = run_experiment(&cfg).unwrap();
+        assert!(res.converged);
+        assert!(res.rounds_to_tol.unwrap() <= 10);
+        assert_eq!(res.algo, "dane");
+    }
+
+    #[test]
+    fn every_algorithm_dispatches() {
+        for algo in [
+            AlgoConfig::Dane { eta: 1.0, mu_over_lambda: 1.0 },
+            AlgoConfig::Gd { step: None },
+            AlgoConfig::Agd { step: None },
+            AlgoConfig::Admm { rho: 0.1 },
+            AlgoConfig::Osa { bias_correction_r: None },
+            AlgoConfig::Osa { bias_correction_r: Some(0.5) },
+            AlgoConfig::Lbfgs { history: 5 },
+        ] {
+            let mut cfg = base_cfg(algo);
+            cfg.rounds = 5;
+            cfg.tol = 1e-3;
+            let res = run_experiment(&cfg).unwrap();
+            assert!(!res.trace.is_empty(), "{}", res.algo);
+        }
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let mut cfg = base_cfg(AlgoConfig::Gd { step: None });
+        cfg.machines = 0;
+        assert!(run_experiment(&cfg).is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! Distributed L-BFGS — the gradient-based quasi-Newton reference
+//! (Agarwal et al. 2011 run L-BFGS in exactly this pattern: allreduce the
+//! gradient, apply the two-loop recursion at every node).
+//!
+//! Communication: one allreduce per gradient, plus one allreduce per
+//! line-search probe (a distributed function evaluation is a real round —
+//! we charge it, unlike the uncounted instrumentation plane). Like all
+//! gradient-span methods it is subject to the eq. (8) lower bound; the
+//! benches show it cannot match DANE's n-dependent rate.
+
+use super::{AlgoResult, Cluster, RunCtx};
+use crate::linalg::ops;
+use crate::metrics::Trace;
+use std::collections::VecDeque;
+
+/// L-BFGS options.
+#[derive(Debug, Clone, Copy)]
+pub struct LbfgsOptions {
+    /// History size (pairs kept).
+    pub history: usize,
+    /// Max line-search probes per iteration.
+    pub max_probes: usize,
+    /// Armijo constant.
+    pub armijo_c: f64,
+}
+
+impl Default for LbfgsOptions {
+    fn default() -> Self {
+        LbfgsOptions { history: 10, max_probes: 20, armijo_c: 1e-4 }
+    }
+}
+
+/// Two-loop recursion: r = H_k g using the (s, y) history.
+fn two_loop(
+    g: &[f64],
+    hist: &VecDeque<(Vec<f64>, Vec<f64>, f64)>, // (s, y, 1/(y^T s))
+) -> Vec<f64> {
+    let mut q = g.to_vec();
+    let mut alphas = Vec::with_capacity(hist.len());
+    for (s, y, rho) in hist.iter().rev() {
+        let alpha = rho * ops::dot(s, &q);
+        ops::axpy(-alpha, y, &mut q);
+        alphas.push(alpha);
+    }
+    // Initial scaling gamma = s^T y / y^T y of the newest pair.
+    if let Some((s, y, _)) = hist.back() {
+        let gamma = ops::dot(s, y) / ops::dot(y, y).max(1e-300);
+        ops::scale(gamma, &mut q);
+    }
+    for ((s, y, rho), alpha) in hist.iter().zip(alphas.into_iter().rev()) {
+        let beta = rho * ops::dot(y, &q);
+        ops::axpy(alpha - beta, s, &mut q);
+    }
+    q
+}
+
+/// Run distributed L-BFGS from w = 0.
+pub fn run(cluster: &mut dyn Cluster, opts: &LbfgsOptions, ctx: &RunCtx) -> AlgoResult {
+    let d = cluster.dim();
+    let obj = cluster.objective();
+    let mut w = vec![0.0; d];
+    let mut trace = Trace::new();
+    let mut converged = false;
+    let mut hist: VecDeque<(Vec<f64>, Vec<f64>, f64)> = VecDeque::new();
+    let t0 = std::time::Instant::now();
+
+    let (mut g, mut loss) = cluster.grad_and_loss(&w).expect("gradient failed");
+    for iter in 0..=ctx.max_rounds {
+        let subopt = ctx.subopt(loss);
+        trace.push(
+            iter,
+            loss,
+            subopt,
+            Some(ops::norm2(&g)),
+            ctx.test_loss(obj.as_ref(), &w),
+            &cluster.comm_stats(),
+            t0.elapsed().as_secs_f64(),
+        );
+        if subopt.map(|s| s < ctx.tol).unwrap_or(false) || ops::norm2(&g) < 1e-14 {
+            converged = true;
+            break;
+        }
+        if iter == ctx.max_rounds {
+            break;
+        }
+
+        let dir = two_loop(&g, &hist);
+        let slope = ops::dot(&g, &dir);
+        // Fallback to steepest descent if the direction degenerated.
+        let (dir, slope) = if slope <= 0.0 { (g.clone(), ops::dot(&g, &g)) } else { (dir, slope) };
+
+        // Backtracking line search; every probe is a counted round.
+        let mut step = 1.0;
+        let mut accepted = false;
+        let mut w_try = vec![0.0; d];
+        for _ in 0..opts.max_probes {
+            for j in 0..d {
+                w_try[j] = w[j] - step * dir[j];
+            }
+            let f_try = cluster.loss_only(&w_try).expect("probe failed");
+            if f_try <= loss - opts.armijo_c * step * slope {
+                accepted = true;
+                break;
+            }
+            step *= 0.5;
+        }
+        if !accepted {
+            // numerical floor; stop
+            break;
+        }
+
+        let (g_new, loss_new) = cluster.grad_and_loss(&w_try).expect("gradient failed");
+        // Curvature pair.
+        let mut s = vec![0.0; d];
+        let mut y = vec![0.0; d];
+        for j in 0..d {
+            s[j] = w_try[j] - w[j];
+            y[j] = g_new[j] - g[j];
+        }
+        let ys = ops::dot(&y, &s);
+        if ys > 1e-12 * ops::norm2(&y) * ops::norm2(&s) {
+            if hist.len() == opts.history {
+                hist.pop_front();
+            }
+            hist.push_back((s, y, 1.0 / ys));
+        }
+        w = w_try;
+        g = g_new;
+        loss = loss_new;
+    }
+
+    AlgoResult { name: "lbfgs".into(), w, trace, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SerialCluster;
+    use crate::data::synthetic_fig2;
+    use crate::loss::{Objective, Ridge, SmoothHinge};
+    use crate::solver::erm_solve;
+    use std::sync::Arc;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let ds = synthetic_fig2(1024, 12, 0.005, 2);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
+        let mut cluster = SerialCluster::new(&ds, obj, 4, 3);
+        let ctx = RunCtx::new(100).with_reference(phi_star).with_tol(1e-8);
+        let res = run(&mut cluster, &LbfgsOptions::default(), &ctx);
+        assert!(res.converged, "last {:?}", res.trace.last_suboptimality());
+    }
+
+    #[test]
+    fn converges_on_hinge() {
+        let ds = crate::data::covtype_like(512, 32, 31);
+        let obj: Arc<dyn Objective> = Arc::new(SmoothHinge::new(1e-3));
+        let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
+        let mut cluster = SerialCluster::new(&ds, obj, 4, 7);
+        let ctx = RunCtx::new(200).with_reference(phi_star).with_tol(1e-6);
+        let res = run(&mut cluster, &LbfgsOptions::default(), &ctx);
+        assert!(res.converged, "last {:?}", res.trace.last_suboptimality());
+    }
+
+    #[test]
+    fn line_search_probes_are_charged() {
+        let ds = synthetic_fig2(256, 6, 0.005, 4);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        let mut cluster = SerialCluster::new(&ds, obj, 2, 2);
+        let ctx = RunCtx::new(3).with_tol(0.0);
+        let res = run(&mut cluster, &LbfgsOptions::default(), &ctx);
+        let last = res.trace.rows.last().unwrap();
+        // At minimum: 1 initial grad + per iteration (>=1 probe + 1 grad).
+        assert!(last.comm_rounds >= 1 + 3 * 2, "{}", last.comm_rounds);
+    }
+
+    #[test]
+    fn two_loop_identity_without_history() {
+        let hist = VecDeque::new();
+        let g = vec![1.0, -2.0, 3.0];
+        assert_eq!(two_loop(&g, &hist), g);
+    }
+}

@@ -1,0 +1,473 @@
+//! The leader: synchronous round engine + the paper's algorithm and every
+//! baseline it compares against.
+//!
+//! Algorithms are written against the [`Cluster`] abstraction, which
+//! exposes exactly the collective operations a real deployment would
+//! have, with every *algorithmic* communication round accounted (the
+//! `eval_*` methods are instrumentation — free, as a separate monitoring
+//! plane would be — so baselines aren't charged for the measurements the
+//! figures need).
+//!
+//! Round accounting follows the paper: DANE = 2 averages/iteration
+//! (gradient, iterate), GD/ADMM/L-BFGS = 1, OSA = 1 total (footnote 5).
+
+pub mod admm;
+pub mod dane;
+pub mod driver;
+pub mod gd;
+pub mod lbfgs;
+pub mod osa;
+pub mod threaded;
+
+use crate::comm::{Collective, CommStats, NetModel};
+use crate::data::{shard_dataset, Dataset, Shard};
+use crate::linalg::ops;
+use crate::loss::Objective;
+use crate::metrics::Trace;
+use crate::runtime::{ArtifactRegistry, PjrtSession};
+use crate::worker::{Worker, WorkerBackend};
+use crate::Result;
+use std::sync::Arc;
+
+/// The collective surface the algorithms run on.
+pub trait Cluster {
+    /// Number of machines m.
+    fn m(&self) -> usize;
+    /// Parameter dimension d.
+    fn dim(&self) -> usize;
+    fn objective(&self) -> Arc<dyn Objective>;
+
+    /// Averaged gradient and objective at w — ONE allreduce (gradient and
+    /// loss share the round, as they would share a payload).
+    fn grad_and_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)>;
+
+    /// Averaged objective only — ONE allreduce (line-search probes).
+    fn loss_only(&mut self, w: &[f64]) -> Result<f64>;
+
+    /// DANE inner step: every worker solves its local problem (paper
+    /// eq. 13) given the averaged gradient, results averaged — ONE
+    /// allreduce.
+    fn dane_round(&mut self, w_prev: &[f64], g: &[f64], eta: f64, mu: f64)
+        -> Result<Vec<f64>>;
+
+    /// Theorem-5 variant of the inner step: only machine 1 solves, and
+    /// w^(t) = w_1^(t). Still one (broadcast) round — the solution must
+    /// reach every machine.
+    fn dane_round_first(&mut self, w_prev: &[f64], g: &[f64], eta: f64, mu: f64)
+        -> Result<Vec<f64>>;
+
+    /// ADMM proximal solves on per-worker targets — local compute, no
+    /// communication (the averaging is a separate explicit round).
+    fn prox_all(&mut self, targets: &[Vec<f64>], rho: f64) -> Result<Vec<Vec<f64>>>;
+
+    /// Per-worker ERMs (optionally each worker also solves a subsampled
+    /// ERM for bias correction) — local compute, no communication.
+    fn local_erms(&mut self, subsample: Option<(f64, u64)>)
+        -> Result<(Vec<Vec<f64>>, Option<Vec<Vec<f64>>>)>;
+
+    /// Average per-worker vectors — ONE allreduce.
+    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Vec<f64>;
+
+    /// Mean squared row norm of the data, for smoothness upper bounds —
+    /// ONE allreduce (computed once, then cached by callers).
+    fn avg_row_sq_norm(&mut self) -> f64;
+
+    /// Instrumentation (uncounted): objective at w.
+    fn eval_loss(&mut self, w: &[f64]) -> Result<f64>;
+    /// Instrumentation (uncounted): gradient + objective at w.
+    fn eval_grad_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)>;
+
+    fn comm_stats(&self) -> CommStats;
+    fn reset_comm(&mut self);
+}
+
+/// Shared run parameters + instrumentation context.
+#[derive(Clone)]
+pub struct RunCtx {
+    /// Maximum algorithm iterations (communication-round iterations).
+    pub max_rounds: usize,
+    /// Stop when suboptimality < tol (requires `phi_star`).
+    pub tol: f64,
+    /// Reference optimum phi(w_hat) from [`crate::solver::erm_solve`].
+    pub phi_star: Option<f64>,
+    /// Evaluate test loss each round (fig. 4).
+    pub test_shard: Option<Shard>,
+}
+
+impl RunCtx {
+    pub fn new(max_rounds: usize) -> Self {
+        RunCtx { max_rounds, tol: 1e-6, phi_star: None, test_shard: None }
+    }
+
+    pub fn with_reference(mut self, phi_star: f64) -> Self {
+        self.phi_star = Some(phi_star);
+        self
+    }
+
+    pub fn with_tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    pub fn with_test_shard(mut self, shard: Shard) -> Self {
+        self.test_shard = Some(shard);
+        self
+    }
+
+    pub(crate) fn subopt(&self, objective: f64) -> Option<f64> {
+        self.phi_star.map(|s| objective - s)
+    }
+
+    pub(crate) fn test_loss(
+        &self,
+        obj: &dyn Objective,
+        w: &[f64],
+    ) -> Option<f64> {
+        self.test_shard.as_ref().map(|sh| {
+            let mut rowbuf = vec![0.0; sh.n()];
+            obj.value(sh, w, &mut rowbuf)
+        })
+    }
+}
+
+/// Result of one algorithm run.
+#[derive(Debug, Clone)]
+pub struct AlgoResult {
+    pub name: String,
+    pub w: Vec<f64>,
+    pub trace: Trace,
+    pub converged: bool,
+}
+
+/// In-process cluster: m workers driven sequentially by the leader.
+///
+/// Deterministic (fixed iteration order) and single-threaded — the right
+/// engine for tests and benches, where we measure *rounds*, not threads.
+/// Gradient/loss averages are n_i-weighted so that uneven shards still
+/// produce the exact global phi (shard sizes differ by at most one row).
+pub struct SerialCluster {
+    workers: Vec<Worker>,
+    obj: Arc<dyn Objective>,
+    comm: Collective,
+    d: usize,
+    /// n_i / N weights.
+    weights: Vec<f64>,
+    /// cached mean squared row norm
+    row_sq: Option<f64>,
+}
+
+impl SerialCluster {
+    /// Shard `ds` over m workers with the native backend and a free
+    /// network model.
+    pub fn new(ds: &Dataset, obj: Arc<dyn Objective>, m: usize, seed: u64) -> Self {
+        Self::with_net(ds, obj, m, seed, NetModel::free())
+    }
+
+    pub fn with_net(
+        ds: &Dataset,
+        obj: Arc<dyn Objective>,
+        m: usize,
+        seed: u64,
+        net: NetModel,
+    ) -> Self {
+        let shards = shard_dataset(ds, m, seed);
+        Self::from_shards(shards, obj, net)
+    }
+
+    /// Build from pre-made shards (tests, padding experiments).
+    pub fn from_shards(
+        shards: Vec<Shard>,
+        obj: Arc<dyn Objective>,
+        net: NetModel,
+    ) -> Self {
+        assert!(!shards.is_empty());
+        let d = shards[0].d();
+        let total: usize = shards.iter().map(|s| s.n_effective()).sum();
+        let weights: Vec<f64> = shards
+            .iter()
+            .map(|s| s.n_effective() as f64 / total as f64)
+            .collect();
+        let workers = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| Worker::new(i, s, obj.clone()))
+            .collect();
+        SerialCluster {
+            workers,
+            obj,
+            comm: Collective::new(net),
+            d,
+            weights,
+            row_sq: None,
+        }
+    }
+
+    /// Switch every worker to the PJRT backend over `registry`.
+    pub fn use_pjrt(&mut self, registry: Arc<ArtifactRegistry>) -> Result<()> {
+        for w in &mut self.workers {
+            let session =
+                PjrtSession::for_shard(registry.clone(), w.shard(), self.obj.as_ref())?;
+            w.set_backend(WorkerBackend::Pjrt(Arc::new(session)));
+        }
+        Ok(())
+    }
+
+    pub fn workers_mut(&mut self) -> &mut [Worker] {
+        &mut self.workers
+    }
+
+    pub fn workers(&self) -> &[Worker] {
+        &self.workers
+    }
+
+    /// Weighted (exact) gradient+loss average, shared by the counted and
+    /// uncounted paths.
+    fn gather_grad_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        let d = self.d;
+        let mut g = vec![0.0; d];
+        let mut gi = vec![0.0; d];
+        let mut loss = 0.0;
+        for (k, worker) in self.workers.iter_mut().enumerate() {
+            let li = worker.grad(w, &mut gi)?;
+            ops::axpy(self.weights[k], &gi, &mut g);
+            loss += self.weights[k] * li;
+        }
+        Ok((g, loss))
+    }
+
+    fn gather_loss(&mut self, w: &[f64]) -> f64 {
+        self.workers
+            .iter_mut()
+            .enumerate()
+            .map(|(k, worker)| self.weights[k] * worker.loss(w))
+            .sum()
+    }
+}
+
+impl Cluster for SerialCluster {
+    fn m(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn objective(&self) -> Arc<dyn Objective> {
+        self.obj.clone()
+    }
+
+    fn grad_and_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        let (g, loss) = self.gather_grad_loss(w)?;
+        // one allreduce round: d-vector + scalar per worker
+        let m = self.m();
+        self.comm.count_round(m, self.d + 1);
+        Ok((g, loss))
+    }
+
+    fn loss_only(&mut self, w: &[f64]) -> Result<f64> {
+        let loss = self.gather_loss(w);
+        let m = self.m();
+        self.comm.count_round(m, 1);
+        Ok(loss)
+    }
+
+    fn dane_round(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+    ) -> Result<Vec<f64>> {
+        let mut acc = vec![0.0; self.d];
+        let m = self.m() as f64;
+        for worker in &mut self.workers {
+            let wi = worker.dane_local_solve(w_prev, g, eta, mu)?;
+            // paper step (*): unweighted average of local solutions
+            ops::axpy(1.0 / m, &wi, &mut acc);
+        }
+        let m = self.m();
+        self.comm.count_round(m, self.d);
+        Ok(acc)
+    }
+
+    fn dane_round_first(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+    ) -> Result<Vec<f64>> {
+        let w1 = self.workers[0].dane_local_solve(w_prev, g, eta, mu)?;
+        let m = self.m();
+        self.comm.count_round(m, self.d); // broadcast of w_1
+        Ok(w1)
+    }
+
+    fn prox_all(&mut self, targets: &[Vec<f64>], rho: f64) -> Result<Vec<Vec<f64>>> {
+        assert_eq!(targets.len(), self.m());
+        self.workers
+            .iter_mut()
+            .zip(targets)
+            .map(|(w, v)| w.admm_prox(v, rho))
+            .collect()
+    }
+
+    fn local_erms(
+        &mut self,
+        subsample: Option<(f64, u64)>,
+    ) -> Result<(Vec<Vec<f64>>, Option<Vec<Vec<f64>>>)> {
+        let mut full = Vec::with_capacity(self.m());
+        for w in &mut self.workers {
+            full.push(w.local_erm()?);
+        }
+        let sub = match subsample {
+            None => None,
+            Some((r, seed)) => {
+                let mut out = Vec::with_capacity(self.m());
+                for w in &mut self.workers {
+                    out.push(w.local_erm_subsample(r, seed)?);
+                }
+                Some(out)
+            }
+        };
+        Ok((full, sub))
+    }
+
+    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Vec<f64> {
+        let mut out = vec![0.0; self.d];
+        let views: Vec<&[f64]> = vecs.iter().map(|v| v.as_slice()).collect();
+        self.comm.allreduce_mean(&views, &mut out);
+        out
+    }
+
+    fn avg_row_sq_norm(&mut self) -> f64 {
+        if let Some(v) = self.row_sq {
+            return v;
+        }
+        let mut total = 0.0;
+        let mut rows = 0usize;
+        for w in &self.workers {
+            let sh = w.shard();
+            for i in 0..sh.n_effective() {
+                // squared row norm via row_dot against itself is not
+                // available generically; compute through matvec-free path
+                total += row_sq_norm(sh, i);
+            }
+            rows += sh.n_effective();
+        }
+        let v = total / rows as f64;
+        let m = self.m();
+        self.comm.count_round(m, 1);
+        self.row_sq = Some(v);
+        v
+    }
+
+    fn eval_loss(&mut self, w: &[f64]) -> Result<f64> {
+        Ok(self.gather_loss(w))
+    }
+
+    fn eval_grad_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        self.gather_grad_loss(w)
+    }
+
+    fn comm_stats(&self) -> CommStats {
+        self.comm.stats().clone()
+    }
+
+    fn reset_comm(&mut self) {
+        self.comm.reset();
+    }
+}
+
+pub(crate) fn row_sq_norm(shard: &Shard, i: usize) -> f64 {
+    match &shard.x {
+        crate::linalg::DataMatrix::Dense(m) => {
+            let r = m.row(i);
+            ops::dot(r, r)
+        }
+        crate::linalg::DataMatrix::Sparse(s) => {
+            let (_, vals) = s.row(i);
+            ops::dot(vals, vals)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::linalg::{DataMatrix, DenseMatrix};
+    use crate::loss::Ridge;
+
+    fn tiny_dataset(n: usize, d: usize, seed: u64) -> Dataset {
+        crate::data::synthetic_fig2(n, d, 0.005, seed)
+    }
+
+    #[test]
+    fn grad_matches_single_shard() {
+        let ds = tiny_dataset(64, 6, 3);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        let mut cluster = SerialCluster::new(&ds, obj.clone(), 4, 7);
+        let w = vec![0.2; 6];
+        let (g, loss) = cluster.grad_and_loss(&w).unwrap();
+
+        let all = ds.as_single_shard();
+        let mut g_ref = vec![0.0; 6];
+        let mut rb = vec![0.0; 64];
+        let loss_ref = obj.value_grad(&all, &w, &mut g_ref, &mut rb);
+        for j in 0..6 {
+            assert!((g[j] - g_ref[j]).abs() < 1e-12, "{} vs {}", g[j], g_ref[j]);
+        }
+        assert!((loss - loss_ref).abs() < 1e-12);
+        assert_eq!(cluster.comm_stats().rounds, 1);
+    }
+
+    #[test]
+    fn uneven_shards_still_exact() {
+        // 65 rows over 4 workers: shard sizes 17,16,16,16
+        let ds = tiny_dataset(65, 5, 9);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.02));
+        let mut cluster = SerialCluster::new(&ds, obj.clone(), 4, 1);
+        let w = vec![-0.1; 5];
+        let (_, loss) = cluster.grad_and_loss(&w).unwrap();
+        let all = ds.as_single_shard();
+        let mut rb = vec![0.0; 65];
+        assert!((loss - obj.value(&all, &w, &mut rb)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eval_paths_are_uncounted() {
+        let ds = tiny_dataset(32, 4, 5);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        let mut cluster = SerialCluster::new(&ds, obj, 2, 2);
+        cluster.eval_loss(&[0.0; 4]).unwrap();
+        cluster.eval_grad_loss(&[0.0; 4]).unwrap();
+        assert_eq!(cluster.comm_stats().rounds, 0);
+        cluster.loss_only(&[0.0; 4]).unwrap();
+        assert_eq!(cluster.comm_stats().rounds, 1);
+    }
+
+    #[test]
+    fn allreduce_mean_vecs_counts() {
+        let ds = tiny_dataset(32, 4, 5);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        let mut cluster = SerialCluster::new(&ds, obj, 2, 2);
+        let out = cluster.allreduce_mean_vecs(&[vec![1.0; 4], vec![3.0; 4]]);
+        assert_eq!(out, vec![2.0; 4]);
+        assert_eq!(cluster.comm_stats().rounds, 1);
+    }
+
+    #[test]
+    fn from_shards_respects_dims() {
+        let x = DenseMatrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let s = Shard::new(DataMatrix::Dense(x), vec![1.0, -1.0]);
+        let cluster = SerialCluster::from_shards(
+            vec![s],
+            Arc::new(Ridge::new(0.0)),
+            NetModel::free(),
+        );
+        assert_eq!(cluster.m(), 1);
+        assert_eq!(cluster.dim(), 2);
+    }
+}

@@ -1,0 +1,140 @@
+//! One-shot parameter averaging (Zinkevich et al. 2010; Zhang et al. 2013)
+//! — the single-round baseline of paper §2, with the optional subsample
+//! bias correction whose failure mode Theorem 1 / Appendix A.2 dissects.
+//!
+//! Plain:      w_bar = mean_i argmin phi_i            (1 round total)
+//! Corrected:  each machine solves the full-shard ERM w_i1 and a
+//!             subsample-r ERM w_i2, returns (w_i1 - r w_i2)/(1 - r);
+//!             the leader averages — still one round.
+
+use super::{AlgoResult, Cluster, RunCtx};
+use crate::metrics::Trace;
+
+/// OSA options.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OsaOptions {
+    /// Subsample ratio r in (0,1) for the Zhang et al. bias correction;
+    /// None = plain averaging.
+    pub bias_correction_r: Option<f64>,
+    /// Seed for the subsample draw.
+    pub seed: u64,
+}
+
+/// Run one-shot averaging. The trace has exactly two rows: the zero
+/// initial point and the averaged solution.
+pub fn run(cluster: &mut dyn Cluster, opts: &OsaOptions, ctx: &RunCtx) -> AlgoResult {
+    let obj = cluster.objective();
+    let d = cluster.dim();
+    let mut trace = Trace::new();
+    let t0 = std::time::Instant::now();
+
+    let loss0 = cluster.eval_loss(&vec![0.0; d]).expect("eval failed");
+    trace.push(
+        0,
+        loss0,
+        ctx.subopt(loss0),
+        None,
+        ctx.test_loss(obj.as_ref(), &vec![0.0; d]),
+        &cluster.comm_stats(),
+        0.0,
+    );
+
+    let sub = opts.bias_correction_r.map(|r| (r, opts.seed));
+    let (full, subs) = cluster.local_erms(sub).expect("local ERMs failed");
+
+    // Per-machine combination (local), then ONE averaging round.
+    let combined: Vec<Vec<f64>> = match (&subs, opts.bias_correction_r) {
+        (Some(subs), Some(r)) => full
+            .iter()
+            .zip(subs)
+            .map(|(w1, w2)| {
+                (0..d)
+                    .map(|j| (w1[j] - r * w2[j]) / (1.0 - r))
+                    .collect()
+            })
+            .collect(),
+        _ => full,
+    };
+    let w = cluster.allreduce_mean_vecs(&combined);
+
+    let loss = cluster.eval_loss(&w).expect("eval failed");
+    let subopt = ctx.subopt(loss);
+    trace.push(
+        1,
+        loss,
+        subopt,
+        None,
+        ctx.test_loss(obj.as_ref(), &w),
+        &cluster.comm_stats(),
+        t0.elapsed().as_secs_f64(),
+    );
+
+    let converged = subopt.map(|s| s < ctx.tol).unwrap_or(false);
+    let name = if opts.bias_correction_r.is_some() { "osa-bc" } else { "osa" };
+    AlgoResult { name: name.into(), w, trace, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SerialCluster;
+    use crate::data::synthetic_fig2;
+    use crate::loss::{Objective, Ridge};
+    use crate::solver::erm_solve;
+    use std::sync::Arc;
+
+    #[test]
+    fn single_round_only() {
+        let ds = synthetic_fig2(512, 8, 0.005, 5);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        let mut cluster = SerialCluster::new(&ds, obj, 8, 3);
+        let res = run(&mut cluster, &OsaOptions::default(), &RunCtx::new(1));
+        assert_eq!(res.trace.rows.last().unwrap().comm_rounds, 1);
+    }
+
+    #[test]
+    fn m1_osa_is_exact_erm() {
+        let ds = synthetic_fig2(256, 6, 0.005, 6);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
+        let mut cluster = SerialCluster::new(&ds, obj, 1, 3);
+        let ctx = RunCtx::new(1).with_reference(phi_star).with_tol(1e-9);
+        let res = run(&mut cluster, &OsaOptions::default(), &ctx);
+        assert!(res.converged, "subopt {:?}", res.trace.last_suboptimality());
+    }
+
+    #[test]
+    fn osa_improves_over_zero_but_not_exact() {
+        let ds = synthetic_fig2(2048, 16, 0.005, 7);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
+        let mut cluster = SerialCluster::new(&ds, obj, 16, 9);
+        let ctx = RunCtx::new(1).with_reference(phi_star);
+        let res = run(&mut cluster, &OsaOptions::default(), &ctx);
+        let s = res.trace.suboptimality();
+        assert!(s[1] < s[0], "improves over w=0");
+        assert!(s[1] > 1e-10, "but is not the exact ERM");
+    }
+
+    #[test]
+    fn bias_correction_changes_result() {
+        let ds = synthetic_fig2(1024, 8, 0.005, 8);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        let mut c1 = SerialCluster::new(&ds, obj.clone(), 8, 3);
+        let mut c2 = SerialCluster::new(&ds, obj, 8, 3);
+        let plain = run(&mut c1, &OsaOptions::default(), &RunCtx::new(1));
+        let bc = run(
+            &mut c2,
+            &OsaOptions { bias_correction_r: Some(0.5), seed: 1 },
+            &RunCtx::new(1),
+        );
+        assert_eq!(bc.name, "osa-bc");
+        let diff: f64 = plain
+            .w
+            .iter()
+            .zip(&bc.w)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1e-10);
+    }
+}

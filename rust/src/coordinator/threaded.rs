@@ -1,0 +1,456 @@
+//! Threaded message-passing cluster engine.
+//!
+//! Where [`super::SerialCluster`] drives workers inline (deterministic,
+//! the measurement engine for every figure), `ThreadedCluster` runs each
+//! worker on its own OS thread behind an mpsc command/reply protocol —
+//! the actual leader/worker process topology a deployment would have,
+//! minus the sockets. Commands mirror the collective surface of the
+//! [`super::Cluster`] trait; each round is a broadcast of one command and
+//! a gather of m replies (a synchronous allreduce).
+//!
+//! (The design brief calls for tokio; the offline build has no tokio, so
+//! this engine uses std::thread + channels — the same ownership and
+//! message-flow structure, documented in DESIGN.md §5.)
+
+use super::Cluster;
+use crate::comm::{Collective, CommStats, NetModel};
+use crate::data::{shard_dataset, Dataset, Shard};
+use crate::linalg::ops;
+use crate::loss::Objective;
+use crate::Result;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Commands the leader broadcasts to workers.
+enum Cmd {
+    /// grad + loss at w -> Reply::VecScalar
+    GradLoss(Arc<Vec<f64>>),
+    /// loss at w -> Reply::Scalar
+    Loss(Arc<Vec<f64>>),
+    /// DANE local solve -> Reply::Vec
+    DaneSolve { w_prev: Arc<Vec<f64>>, g: Arc<Vec<f64>>, eta: f64, mu: f64 },
+    /// ADMM prox at a per-worker target -> Reply::Vec
+    Prox { v: Vec<f64>, rho: f64 },
+    /// local ERM (+ optional subsample) -> Reply::VecPair
+    Erm { subsample: Option<(f64, u64)> },
+    /// mean squared row norm -> Reply::Scalar
+    RowSq,
+    Shutdown,
+}
+
+enum Reply {
+    Vec(Vec<f64>),
+    Scalar(f64),
+    VecScalar(Vec<f64>, f64),
+    VecPair(Vec<f64>, Option<Vec<f64>>),
+    Err(String),
+}
+
+struct WorkerHandle {
+    tx: Sender<Cmd>,
+    rx: Receiver<Reply>,
+    join: Option<JoinHandle<()>>,
+    /// n_i / N weight for exact gradient averaging.
+    weight: f64,
+}
+
+/// Leader + m worker threads.
+pub struct ThreadedCluster {
+    handles: Vec<WorkerHandle>,
+    obj: Arc<dyn Objective>,
+    comm: Collective,
+    d: usize,
+}
+
+impl ThreadedCluster {
+    pub fn new(ds: &Dataset, obj: Arc<dyn Objective>, m: usize, seed: u64) -> Self {
+        Self::with_net(ds, obj, m, seed, NetModel::free())
+    }
+
+    pub fn with_net(
+        ds: &Dataset,
+        obj: Arc<dyn Objective>,
+        m: usize,
+        seed: u64,
+        net: NetModel,
+    ) -> Self {
+        let shards = shard_dataset(ds, m, seed);
+        let d = ds.d();
+        let total: usize = shards.iter().map(|s| s.n_effective()).sum();
+        let handles = shards
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| spawn_worker(id, shard, obj.clone(), total))
+            .collect();
+        ThreadedCluster { handles, obj, comm: Collective::new(net), d }
+    }
+
+    /// Broadcast one command to all workers, gather all replies in rank
+    /// order. One synchronous phase — the thread-level allreduce body.
+    fn round(&self, make: impl Fn(usize) -> Cmd) -> Result<Vec<Reply>> {
+        for (i, h) in self.handles.iter().enumerate() {
+            h.tx.send(make(i)).map_err(|_| {
+                crate::Error::Runtime(format!("worker {i} channel closed"))
+            })?;
+        }
+        let mut replies = Vec::with_capacity(self.handles.len());
+        for (i, h) in self.handles.iter().enumerate() {
+            match h.rx.recv() {
+                Ok(Reply::Err(e)) => {
+                    return Err(crate::Error::Runtime(format!("worker {i}: {e}")))
+                }
+                Ok(r) => replies.push(r),
+                Err(_) => {
+                    return Err(crate::Error::Runtime(format!(
+                        "worker {i} died mid-round"
+                    )))
+                }
+            }
+        }
+        Ok(replies)
+    }
+
+    fn weights(&self) -> Vec<f64> {
+        self.handles.iter().map(|h| h.weight).collect()
+    }
+
+    fn gather_grad_loss(&self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        let w = Arc::new(w.to_vec());
+        let replies = self.round(|_| Cmd::GradLoss(w.clone()))?;
+        let mut g = vec![0.0; self.d];
+        let mut loss = 0.0;
+        for (r, wt) in replies.into_iter().zip(self.weights()) {
+            if let Reply::VecScalar(gi, li) = r {
+                ops::axpy(wt, &gi, &mut g);
+                loss += wt * li;
+            }
+        }
+        Ok((g, loss))
+    }
+}
+
+fn spawn_worker(
+    id: usize,
+    shard: Shard,
+    obj: Arc<dyn Objective>,
+    total_n: usize,
+) -> WorkerHandle {
+    let weight = shard.n_effective() as f64 / total_n as f64;
+    let (cmd_tx, cmd_rx) = channel::<Cmd>();
+    let (rep_tx, rep_rx) = channel::<Reply>();
+    let join = std::thread::Builder::new()
+        .name(format!("dane-worker-{id}"))
+        .spawn(move || {
+            let mut worker = crate::worker::Worker::new(id, shard, obj);
+            let d = worker.dim();
+            while let Ok(cmd) = cmd_rx.recv() {
+                let reply = match cmd {
+                    Cmd::GradLoss(w) => {
+                        let mut g = vec![0.0; d];
+                        match worker.grad(&w, &mut g) {
+                            Ok(loss) => Reply::VecScalar(g, loss),
+                            Err(e) => Reply::Err(e.to_string()),
+                        }
+                    }
+                    Cmd::Loss(w) => Reply::Scalar(worker.loss(&w)),
+                    Cmd::DaneSolve { w_prev, g, eta, mu } => {
+                        match worker.dane_local_solve(&w_prev, &g, eta, mu) {
+                            Ok(w) => Reply::Vec(w),
+                            Err(e) => Reply::Err(e.to_string()),
+                        }
+                    }
+                    Cmd::Prox { v, rho } => match worker.admm_prox(&v, rho) {
+                        Ok(w) => Reply::Vec(w),
+                        Err(e) => Reply::Err(e.to_string()),
+                    },
+                    Cmd::Erm { subsample } => {
+                        let full = worker.local_erm();
+                        match full {
+                            Err(e) => Reply::Err(e.to_string()),
+                            Ok(full) => match subsample {
+                                None => Reply::VecPair(full, None),
+                                Some((r, seed)) => {
+                                    match worker.local_erm_subsample(r, seed) {
+                                        Ok(sub) => Reply::VecPair(full, Some(sub)),
+                                        Err(e) => Reply::Err(e.to_string()),
+                                    }
+                                }
+                            },
+                        }
+                    }
+                    Cmd::RowSq => {
+                        let sh = worker.shard();
+                        let mut total = 0.0;
+                        for i in 0..sh.n_effective() {
+                            total += super::row_sq_norm(sh, i);
+                        }
+                        Reply::Scalar(total / sh.n_effective() as f64)
+                    }
+                    Cmd::Shutdown => break,
+                };
+                if rep_tx.send(reply).is_err() {
+                    break;
+                }
+            }
+        })
+        .expect("spawn worker thread");
+    WorkerHandle { tx: cmd_tx, rx: rep_rx, join: Some(join), weight }
+}
+
+impl Drop for ThreadedCluster {
+    fn drop(&mut self) {
+        for h in &self.handles {
+            let _ = h.tx.send(Cmd::Shutdown);
+        }
+        for h in &mut self.handles {
+            if let Some(j) = h.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+impl Cluster for ThreadedCluster {
+    fn m(&self) -> usize {
+        self.handles.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn objective(&self) -> Arc<dyn Objective> {
+        self.obj.clone()
+    }
+
+    fn grad_and_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        let out = self.gather_grad_loss(w)?;
+        let m = self.m();
+        self.comm.count_round(m, self.d + 1);
+        Ok(out)
+    }
+
+    fn loss_only(&mut self, w: &[f64]) -> Result<f64> {
+        let wv = Arc::new(w.to_vec());
+        let replies = self.round(|_| Cmd::Loss(wv.clone()))?;
+        let mut loss = 0.0;
+        for (r, wt) in replies.into_iter().zip(self.weights()) {
+            if let Reply::Scalar(l) = r {
+                loss += wt * l;
+            }
+        }
+        let m = self.m();
+        self.comm.count_round(m, 1);
+        Ok(loss)
+    }
+
+    fn dane_round(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+    ) -> Result<Vec<f64>> {
+        let wp = Arc::new(w_prev.to_vec());
+        let gv = Arc::new(g.to_vec());
+        let replies = self.round(|_| Cmd::DaneSolve {
+            w_prev: wp.clone(),
+            g: gv.clone(),
+            eta,
+            mu,
+        })?;
+        let mut acc = vec![0.0; self.d];
+        let m = self.m() as f64;
+        for r in replies {
+            if let Reply::Vec(wi) = r {
+                ops::axpy(1.0 / m, &wi, &mut acc);
+            }
+        }
+        let m = self.m();
+        self.comm.count_round(m, self.d);
+        Ok(acc)
+    }
+
+    fn dane_round_first(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+    ) -> Result<Vec<f64>> {
+        // Only rank 0 computes; everyone else idles this round.
+        let h = &self.handles[0];
+        h.tx
+            .send(Cmd::DaneSolve {
+                w_prev: Arc::new(w_prev.to_vec()),
+                g: Arc::new(g.to_vec()),
+                eta,
+                mu,
+            })
+            .map_err(|_| crate::Error::Runtime("worker 0 channel closed".into()))?;
+        let w1 = match h.rx.recv() {
+            Ok(Reply::Vec(w)) => w,
+            Ok(Reply::Err(e)) => return Err(crate::Error::Runtime(e)),
+            _ => return Err(crate::Error::Runtime("worker 0 bad reply".into())),
+        };
+        let m = self.m();
+        self.comm.count_round(m, self.d);
+        Ok(w1)
+    }
+
+    fn prox_all(&mut self, targets: &[Vec<f64>], rho: f64) -> Result<Vec<Vec<f64>>> {
+        assert_eq!(targets.len(), self.m());
+        let replies = self.round(|i| Cmd::Prox { v: targets[i].clone(), rho })?;
+        Ok(replies
+            .into_iter()
+            .map(|r| match r {
+                Reply::Vec(w) => w,
+                _ => unreachable!("prox reply type"),
+            })
+            .collect())
+    }
+
+    fn local_erms(
+        &mut self,
+        subsample: Option<(f64, u64)>,
+    ) -> Result<(Vec<Vec<f64>>, Option<Vec<Vec<f64>>>)> {
+        let replies = self.round(|_| Cmd::Erm { subsample })?;
+        let mut full = Vec::with_capacity(self.m());
+        let mut subs: Vec<Vec<f64>> = Vec::new();
+        let mut any_sub = false;
+        for r in replies {
+            if let Reply::VecPair(f, s) = r {
+                full.push(f);
+                if let Some(s) = s {
+                    subs.push(s);
+                    any_sub = true;
+                }
+            }
+        }
+        Ok((full, if any_sub { Some(subs) } else { None }))
+    }
+
+    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Vec<f64> {
+        let mut out = vec![0.0; self.d];
+        let views: Vec<&[f64]> = vecs.iter().map(|v| v.as_slice()).collect();
+        self.comm.allreduce_mean(&views, &mut out);
+        out
+    }
+
+    fn avg_row_sq_norm(&mut self) -> f64 {
+        let replies = self.round(|_| Cmd::RowSq).expect("rowsq round");
+        let mut total = 0.0;
+        for (r, wt) in replies.into_iter().zip(self.weights()) {
+            if let Reply::Scalar(v) = r {
+                total += wt * v;
+            }
+        }
+        let m = self.m();
+        self.comm.count_round(m, 1);
+        total
+    }
+
+    fn eval_loss(&mut self, w: &[f64]) -> Result<f64> {
+        let wv = Arc::new(w.to_vec());
+        let replies = self.round(|_| Cmd::Loss(wv.clone()))?;
+        let mut loss = 0.0;
+        for (r, wt) in replies.into_iter().zip(self.weights()) {
+            if let Reply::Scalar(l) = r {
+                loss += wt * l;
+            }
+        }
+        Ok(loss)
+    }
+
+    fn eval_grad_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        self.gather_grad_loss(w)
+    }
+
+    fn comm_stats(&self) -> CommStats {
+        self.comm.stats().clone()
+    }
+
+    fn reset_comm(&mut self) {
+        self.comm.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{dane, RunCtx, SerialCluster};
+    use crate::data::synthetic_fig2;
+    use crate::loss::Ridge;
+    use crate::solver::erm_solve;
+
+    fn fixture() -> (Dataset, Arc<dyn Objective>, f64) {
+        let lam = 0.01;
+        let ds = synthetic_fig2(1024, 12, lam / 2.0, 7);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(lam));
+        let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
+        (ds, obj, phi_star)
+    }
+
+    #[test]
+    fn threaded_matches_serial_exactly() {
+        let (ds, obj, _) = fixture();
+        let mut serial = SerialCluster::new(&ds, obj.clone(), 4, 3);
+        let mut threaded = ThreadedCluster::new(&ds, obj, 4, 3);
+        let w = vec![0.1; 12];
+        let (g1, l1) = serial.grad_and_loss(&w).unwrap();
+        let (g2, l2) = threaded.grad_and_loss(&w).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+
+        let d1 = serial.dane_round(&w, &g1, 1.0, 0.01).unwrap();
+        let d2 = threaded.dane_round(&w, &g2, 1.0, 0.01).unwrap();
+        for j in 0..12 {
+            assert!((d1[j] - d2[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn full_dane_run_on_threads() {
+        let (ds, obj, phi_star) = fixture();
+        let mut cluster = ThreadedCluster::new(&ds, obj, 4, 3);
+        let ctx = RunCtx::new(20).with_reference(phi_star).with_tol(1e-9);
+        let res = dane::run(&mut cluster, &Default::default(), &ctx);
+        assert!(res.converged, "{:?}", res.trace.suboptimality());
+        // per completed iteration k: k+1 gradient rounds + k iterate rounds
+        let last = res.trace.rows.last().unwrap();
+        assert_eq!(last.comm_rounds, 2 * last.round as u64 + 1);
+    }
+
+    #[test]
+    fn admm_and_osa_work_on_threads() {
+        let (ds, obj, phi_star) = fixture();
+        let mut cluster = ThreadedCluster::new(&ds, obj.clone(), 4, 3);
+        let ctx = RunCtx::new(200).with_reference(phi_star).with_tol(1e-7);
+        let res = crate::coordinator::admm::run(
+            &mut cluster,
+            &crate::coordinator::admm::AdmmOptions { rho: 0.1 },
+            &ctx,
+        );
+        assert!(res.converged);
+
+        let mut cluster = ThreadedCluster::new(&ds, obj, 8, 3);
+        let ctx = RunCtx::new(1).with_reference(phi_star);
+        let res = crate::coordinator::osa::run(
+            &mut cluster,
+            &crate::coordinator::osa::OsaOptions {
+                bias_correction_r: Some(0.5),
+                seed: 1,
+            },
+            &ctx,
+        );
+        assert_eq!(res.trace.rows.last().unwrap().comm_rounds, 1);
+    }
+
+    #[test]
+    fn worker_thread_shutdown_is_clean() {
+        let (ds, obj, _) = fixture();
+        let cluster = ThreadedCluster::new(&ds, obj, 4, 3);
+        drop(cluster); // must not hang or panic
+    }
+}

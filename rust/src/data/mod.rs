@@ -1,0 +1,146 @@
+//! Datasets, shards and the generators substituting for the paper's data.
+//!
+//! The paper evaluates on COV1 (covertype), ASTRO-PH and MNIST-4v7 plus a
+//! synthetic ridge problem. The real files are not redistributable in this
+//! environment, so `synthetic.rs` builds generators matched on the
+//! statistics the experiments actually exercise (dimensionality, sparsity,
+//! separability, shard-to-shard Hessian concentration — see DESIGN.md §5).
+//! `libsvm.rs` loads the real files when present, so the harness runs on
+//! the original data unchanged if it is supplied.
+
+pub mod libsvm;
+pub mod sharding;
+pub mod synthetic;
+pub mod thm1;
+
+pub use sharding::shard_dataset;
+pub use synthetic::{astro_like, covtype_like, mnist47_like, synthetic_fig2};
+
+use crate::linalg::DataMatrix;
+
+/// One worker's slice of the data.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    /// Feature rows (possibly zero-padded at the bottom for the PJRT
+    /// backend's fixed artifact shapes).
+    pub x: DataMatrix,
+    /// Targets (ridge) or labels in {-1, +1} (classification); exactly 0.0
+    /// on padding rows.
+    pub y: Vec<f64>,
+    /// Number of *real* rows; objectives scale by 1/n_effective.
+    n_effective: usize,
+}
+
+impl Shard {
+    pub fn new(x: DataMatrix, y: Vec<f64>) -> Self {
+        assert_eq!(x.rows(), y.len(), "shard x/y row mismatch");
+        let n = x.rows();
+        Shard { x, y, n_effective: n }
+    }
+
+    /// A shard whose trailing rows are padding (zero features, zero y).
+    pub fn with_padding(x: DataMatrix, y: Vec<f64>, n_effective: usize) -> Self {
+        assert_eq!(x.rows(), y.len(), "shard x/y row mismatch");
+        assert!(n_effective <= x.rows(), "n_effective exceeds rows");
+        Shard { x, y, n_effective }
+    }
+
+    /// Total rows including padding.
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// Real sample count (the `n` of the paper).
+    pub fn n_effective(&self) -> usize {
+        self.n_effective
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols()
+    }
+}
+
+/// A full problem instance: train matrix + targets, optional test split,
+/// and bookkeeping for the experiment harness.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub x: DataMatrix,
+    pub y: Vec<f64>,
+    pub test_x: Option<DataMatrix>,
+    pub test_y: Option<Vec<f64>>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, x: DataMatrix, y: Vec<f64>) -> Self {
+        assert_eq!(x.rows(), y.len(), "dataset x/y row mismatch");
+        Dataset { name: name.into(), x, y, test_x: None, test_y: None }
+    }
+
+    pub fn with_test(mut self, x: DataMatrix, y: Vec<f64>) -> Self {
+        assert_eq!(x.rows(), y.len(), "test x/y row mismatch");
+        self.test_x = Some(x);
+        self.test_y = Some(y);
+        self
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// The whole training set as a single shard (reference ERM solves).
+    pub fn as_single_shard(&self) -> Shard {
+        Shard::new(self.x.clone(), self.y.clone())
+    }
+
+    /// The test split as a shard, if present.
+    pub fn test_shard(&self) -> Option<Shard> {
+        match (&self.test_x, &self.test_y) {
+            (Some(x), Some(y)) => Some(Shard::new(x.clone(), y.clone())),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMatrix;
+
+    #[test]
+    fn shard_basics() {
+        let x = DenseMatrix::zeros(4, 2);
+        let s = Shard::new(DataMatrix::Dense(x), vec![1.0; 4]);
+        assert_eq!(s.n(), 4);
+        assert_eq!(s.n_effective(), 4);
+        assert_eq!(s.d(), 2);
+    }
+
+    #[test]
+    fn padded_shard_counts() {
+        let x = DenseMatrix::zeros(8, 2);
+        let s = Shard::with_padding(DataMatrix::Dense(x), vec![0.0; 8], 5);
+        assert_eq!(s.n(), 8);
+        assert_eq!(s.n_effective(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "x/y row mismatch")]
+    fn shard_rejects_mismatch() {
+        let x = DenseMatrix::zeros(4, 2);
+        Shard::new(DataMatrix::Dense(x), vec![1.0; 3]);
+    }
+
+    #[test]
+    fn dataset_single_shard() {
+        let x = DenseMatrix::from_rows(&[vec![1.0], vec![2.0]]);
+        let ds = Dataset::new("t", DataMatrix::Dense(x), vec![1.0, -1.0]);
+        let s = ds.as_single_shard();
+        assert_eq!(s.n(), 2);
+        assert!(ds.test_shard().is_none());
+    }
+}

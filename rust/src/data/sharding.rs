@@ -1,0 +1,99 @@
+//! Random even sharding — the paper's "N = nm samples evenly and randomly
+//! distributed among the machines".
+//!
+//! The split is a uniformly random partition: a seeded Fisher-Yates
+//! shuffle of the row indices, cut into m nearly-equal contiguous chunks
+//! (sizes differ by at most 1). Determinism under a fixed seed is part of
+//! the contract — every experiment in EXPERIMENTS.md records its seed.
+
+use super::{Dataset, Shard};
+use crate::util::Rng64;
+
+/// Assign row indices to m shards. Returned as per-shard index lists.
+pub fn shard_indices(n: usize, m: usize, seed: u64) -> Vec<Vec<usize>> {
+    assert!(m >= 1, "need at least one shard");
+    assert!(n >= m, "fewer samples ({n}) than shards ({m})");
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Rng64::seed_from_u64(seed);
+    rng.shuffle(&mut idx);
+
+    // First (n % m) shards get one extra sample.
+    let base = n / m;
+    let extra = n % m;
+    let mut out = Vec::with_capacity(m);
+    let mut pos = 0;
+    for i in 0..m {
+        let take = base + usize::from(i < extra);
+        out.push(idx[pos..pos + take].to_vec());
+        pos += take;
+    }
+    debug_assert_eq!(pos, n);
+    out
+}
+
+/// Split a dataset into m shards by random even partition.
+pub fn shard_dataset(ds: &Dataset, m: usize, seed: u64) -> Vec<Shard> {
+    shard_indices(ds.n(), m, seed)
+        .into_iter()
+        .map(|rows| {
+            let x = ds.x.take_rows(&rows);
+            let y = rows.iter().map(|&i| ds.y[i]).collect();
+            Shard::new(x, y)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{DataMatrix, DenseMatrix};
+
+    #[test]
+    fn partition_is_exact() {
+        let parts = shard_indices(103, 8, 7);
+        assert_eq!(parts.len(), 8);
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(mx - mn <= 1);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        assert_eq!(shard_indices(50, 4, 9), shard_indices(50, 4, 9));
+        assert_ne!(shard_indices(50, 4, 9), shard_indices(50, 4, 10));
+    }
+
+    #[test]
+    fn shards_carry_matching_rows() {
+        let x = DenseMatrix::from_rows(&[
+            vec![0.0],
+            vec![1.0],
+            vec![2.0],
+            vec![3.0],
+            vec![4.0],
+        ]);
+        let ds = crate::data::Dataset::new(
+            "t",
+            DataMatrix::Dense(x),
+            vec![0.0, 10.0, 20.0, 30.0, 40.0],
+        );
+        let shards = shard_dataset(&ds, 2, 1);
+        for s in &shards {
+            for i in 0..s.n() {
+                // y was constructed as 10 * x value: sharding must keep
+                // rows and targets aligned.
+                assert_eq!(s.y[i], 10.0 * s.x.row_dot(i, &[1.0]));
+            }
+        }
+        assert_eq!(shards[0].n() + shards[1].n(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "fewer samples")]
+    fn rejects_more_shards_than_rows() {
+        shard_indices(3, 5, 0);
+    }
+}

@@ -1,0 +1,275 @@
+//! Synthetic dataset generators.
+//!
+//! `synthetic_fig2` is the paper's own synthetic model, verbatim. The
+//! other three substitute for COV1 / ASTRO-PH / MNIST-47 (see DESIGN.md §5
+//! for the substitution argument): what figs. 3-4 exercise is the
+//! interplay of condition number and shard-to-shard Hessian concentration
+//! as n = N/m shrinks, so the generators match the originals on
+//! dimensionality, sparsity, class balance and separability rather than on
+//! raw bytes.
+
+use super::Dataset;
+use crate::linalg::{CsrMatrix, DataMatrix, DenseMatrix};
+use crate::util::Rng64;
+
+/// The paper's fig. 2 model: `y = <x, w*> + xi`, `x ~ N(0, Sigma)` with
+/// diagonal `Sigma_ii = i^{-1.2}` (1-indexed), `xi ~ N(0, 1)`, `w* = 1`.
+///
+/// d = 500 in the paper; `reg` is the ridge coefficient (paper: 0.005 —
+/// note the paper writes the objective as mean *squared* error + 0.005 w^2;
+/// our ridge is (1/2n)||.||^2 + (lam/2)||w||^2, so lam = 2 * 0.005 = 0.01
+/// reproduces the identical minimizer. `synthetic_fig2` takes the paper's
+/// coefficient and performs that conversion internally).
+pub fn synthetic_fig2(n: usize, d: usize, paper_reg: f64, seed: u64) -> Dataset {
+    let mut rng = Rng64::seed_from_u64(seed);
+    let sigma: Vec<f64> = (1..=d).map(|i| (i as f64).powf(-1.2).sqrt()).collect();
+    let w_star = vec![1.0; d];
+
+    let mut x = DenseMatrix::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let row = x.row_mut(i);
+        for j in 0..d {
+            row[j] = rng.normal() * sigma[j];
+        }
+        let mean: f64 = row.iter().zip(&w_star).map(|(a, b)| a * b).sum();
+        y.push(mean + rng.normal());
+    }
+    let mut ds = Dataset::new(
+        format!("fig2-n{n}-d{d}"),
+        DataMatrix::Dense(x),
+        y,
+    );
+    // Stash the equivalent lambda for our ridge parameterization; callers
+    // read it via `fig2_lambda`.
+    ds.name = format!("fig2-n{n}-d{d}-lam{}", 2.0 * paper_reg);
+    ds
+}
+
+/// Our ridge lambda equivalent to the paper's fig. 2 regularizer 0.005.
+pub fn fig2_lambda(paper_reg: f64) -> f64 {
+    2.0 * paper_reg
+}
+
+/// COV1-like: d = 54 dense cartographic-style features (mixed continuous +
+/// binary), moderately separable binary labels, ~majority-class skew as in
+/// covertype class-1-vs-rest.
+pub fn covtype_like(n: usize, n_test: usize, seed: u64) -> Dataset {
+    let d = 54;
+    let mut rng = Rng64::seed_from_u64(seed);
+    let teacher = sample_unit_teacher(d, &mut rng);
+    let gen = |n: usize, rng: &mut Rng64| {
+        let mut x = DenseMatrix::zeros(n, d);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let row = x.row_mut(i);
+            // 10 continuous features, 44 sparse binary indicator-ish ones
+            for j in 0..10 {
+                row[j] = rng.normal();
+            }
+            for j in 10..d {
+                row[j] = if rng.bool(0.15) { 1.0 } else { 0.0 };
+            }
+            let margin: f64 =
+                row.iter().zip(&teacher).map(|(a, b)| a * b).sum::<f64>();
+            // label noise 10%, slight class skew via threshold shift
+            let clean = if margin + 0.2 > 0.0 { 1.0 } else { -1.0 };
+            y.push(if rng.bool(0.10) { -clean } else { clean });
+        }
+        (x, y)
+    };
+    let (x, y) = gen(n, &mut rng);
+    let (tx, ty) = gen(n_test, &mut rng);
+    Dataset::new("cov1-like", DataMatrix::Dense(x), y)
+        .with_test(DataMatrix::Dense(tx), ty)
+}
+
+/// ASTRO-PH-like: high-dimensional sparse bag-of-words-style features
+/// (d = 10_000, ~50 nnz/row with power-law column popularity, tf-style
+/// positive values, L2-normalized rows), nearly separable labels — the
+/// regime where the real ASTRO-PH (d ~ 99k, avg 77 nnz) lives.
+pub fn astro_like(n: usize, n_test: usize, seed: u64) -> Dataset {
+    let d = 10_000;
+    let nnz_per_row = 50;
+    let mut rng = Rng64::seed_from_u64(seed);
+    // Power-law column sampler: popularity ~ 1 / (k+10)^0.9
+    let weights: Vec<f64> =
+        (0..d).map(|k| 1.0 / ((k + 10) as f64).powf(0.9)).collect();
+    let cum: Vec<f64> = weights
+        .iter()
+        .scan(0.0, |acc, w| {
+            *acc += w;
+            Some(*acc)
+        })
+        .collect();
+    let teacher = sample_unit_teacher(d, &mut rng);
+
+    let gen = |n: usize, rng: &mut Rng64| {
+        let mut trips = Vec::with_capacity(n * nnz_per_row);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut cols = std::collections::BTreeMap::new();
+            for _ in 0..nnz_per_row {
+                let j = rng.weighted_index(&cum).min(d - 1);
+                *cols.entry(j).or_insert(0.0) += 1.0;
+            }
+            // L2-normalize the row (tf counts -> unit vector)
+            let norm: f64 =
+                cols.values().map(|v: &f64| v * v).sum::<f64>().sqrt();
+            let mut margin = 0.0;
+            for (&j, &v) in &cols {
+                let val = v / norm;
+                trips.push((i, j, val));
+                margin += val * teacher[j];
+            }
+            let clean = if margin > 0.0 { 1.0 } else { -1.0 };
+            y.push(if rng.bool(0.03) { -clean } else { clean });
+        }
+        (CsrMatrix::from_triplets(n, d, &trips), y)
+    };
+    let (x, y) = gen(n, &mut rng);
+    let (tx, ty) = gen(n_test, &mut rng);
+    Dataset::new("astro-like", DataMatrix::Sparse(x), y)
+        .with_test(DataMatrix::Sparse(tx), ty)
+}
+
+/// MNIST-4v7-like: d = 784 dense "pixel" features. Two anisotropic
+/// Gaussian class-conditionals with a shared low-rank covariance and a
+/// clear mean separation (4-vs-7 is one of the easier MNIST pairs); pixel
+/// values clipped to [0, 1] like normalized grayscale.
+pub fn mnist47_like(n: usize, n_test: usize, seed: u64) -> Dataset {
+    let d = 784;
+    let rank = 20;
+    let mut rng = Rng64::seed_from_u64(seed);
+
+    // Shared structure: two mean "templates" + low-rank directions.
+    let mu_pos: Vec<f64> = (0..d).map(|j| template(j, 0)).collect();
+    let mu_neg: Vec<f64> = (0..d).map(|j| template(j, 1)).collect();
+    let dirs: Vec<Vec<f64>> = (0..rank)
+        .map(|_| {
+            let v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let nrm = v.iter().map(|a| a * a).sum::<f64>().sqrt();
+            v.into_iter().map(|a| 0.08 * a / nrm).collect()
+        })
+        .collect();
+
+    let gen = |n: usize, rng: &mut Rng64| {
+        let mut x = DenseMatrix::zeros(n, d);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let label = rng.sign();
+            let mu = if label > 0.0 { &mu_pos } else { &mu_neg };
+            let coeffs: Vec<f64> = (0..rank).map(|_| rng.normal()).collect();
+            let row = x.row_mut(i);
+            for j in 0..d {
+                let mut v = mu[j] + 0.05 * rng.normal();
+                for (k, dir) in dirs.iter().enumerate() {
+                    v += coeffs[k] * dir[j];
+                }
+                row[j] = v.clamp(0.0, 1.0);
+            }
+            y.push(label);
+        }
+        (x, y)
+    };
+    let (x, y) = gen(n, &mut rng);
+    let (tx, ty) = gen(n_test, &mut rng);
+    Dataset::new("mnist47-like", DataMatrix::Dense(x), y)
+        .with_test(DataMatrix::Dense(tx), ty)
+}
+
+/// Smooth blob "digit template" j-th pixel for class c, on a 28x28 grid.
+fn template(j: usize, class: usize) -> f64 {
+    let (r, c) = ((j / 28) as f64, (j % 28) as f64);
+    let (cr, cc, s) = if class == 0 {
+        (10.0, 10.0, 5.0) // blob upper-left-ish
+    } else {
+        (18.0, 18.0, 6.0) // blob lower-right-ish
+    };
+    let dist2 = (r - cr) * (r - cr) + (c - cc) * (c - cc);
+    0.8 * (-dist2 / (2.0 * s * s)).exp()
+}
+
+fn sample_unit_teacher(d: usize, rng: &mut Rng64) -> Vec<f64> {
+    let v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let nrm = v.iter().map(|a| a * a).sum::<f64>().sqrt();
+    v.into_iter().map(|a| a / nrm).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_shapes_and_determinism() {
+        let a = synthetic_fig2(100, 20, 0.005, 3);
+        let b = synthetic_fig2(100, 20, 0.005, 3);
+        assert_eq!(a.n(), 100);
+        assert_eq!(a.d(), 20);
+        assert_eq!(a.y, b.y);
+        assert_eq!(fig2_lambda(0.005), 0.01);
+    }
+
+    #[test]
+    fn fig2_covariance_decays() {
+        // Column variance should roughly follow i^-1.2.
+        let ds = synthetic_fig2(4000, 10, 0.005, 11);
+        let x = ds.x.to_dense();
+        let var = |j: usize| -> f64 {
+            let mut s = 0.0;
+            for i in 0..x.rows() {
+                s += x.get(i, j) * x.get(i, j);
+            }
+            s / x.rows() as f64
+        };
+        let v0 = var(0);
+        let v9 = var(9);
+        let expect_ratio = (10.0f64).powf(-1.2);
+        assert!((v9 / v0 - expect_ratio).abs() < 0.05, "{} vs {}", v9 / v0, expect_ratio);
+    }
+
+    #[test]
+    fn covtype_like_shapes() {
+        let ds = covtype_like(200, 50, 5);
+        assert_eq!(ds.d(), 54);
+        assert_eq!(ds.n(), 200);
+        assert_eq!(ds.test_shard().unwrap().n(), 50);
+        assert!(ds.y.iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn astro_like_is_sparse_and_normalized() {
+        let ds = astro_like(100, 10, 7);
+        assert_eq!(ds.d(), 10_000);
+        if let DataMatrix::Sparse(s) = &ds.x {
+            assert!(s.nnz() <= 100 * 50);
+            assert!(s.nnz() >= 100 * 10);
+            // rows unit-normalized
+            let (idx, val) = s.row(0);
+            assert!(!idx.is_empty());
+            let nrm: f64 = val.iter().map(|v| v * v).sum::<f64>().sqrt();
+            assert!((nrm - 1.0).abs() < 1e-9);
+        } else {
+            panic!("astro-like must be sparse");
+        }
+    }
+
+    #[test]
+    fn mnist47_like_pixel_range() {
+        let ds = mnist47_like(50, 10, 13);
+        assert_eq!(ds.d(), 784);
+        let x = ds.x.to_dense();
+        for i in 0..50 {
+            for &v in x.row(i) {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn classes_roughly_balanced() {
+        let ds = mnist47_like(400, 10, 19);
+        let pos = ds.y.iter().filter(|&&v| v > 0.0).count();
+        assert!(pos > 120 && pos < 280, "pos={pos}");
+    }
+}

@@ -1,0 +1,169 @@
+//! The Theorem-1 construction: a 1-d stochastic problem where one-shot
+//! parameter averaging provably cannot beat a single machine.
+//!
+//! `f(w; z) = lam * (w^2/2 + exp(w)) - z w`, with `z ~ N(0, 1)`.
+//!
+//! The empirical minimizer over n samples solves
+//! `lam * sqrt(n) * (w + exp(w)) = z~` where `z~ = sum z_j / sqrt(n)` is
+//! again standard normal; the population optimum solves `w + exp(w) = 0`
+//! (w* = -0.567143..., minus the omega constant). Appendix A shows
+//! `E[w_hat_1]` is biased below w* by Theta(1/(lam sqrt(n))) — averaging m
+//! independent copies reduces variance but not this bias, which is what
+//! the `thm1_osa_bound` bench measures.
+
+use crate::util::Rng64;
+
+/// Population optimum of f: the root of w + e^w = 0.
+pub const W_STAR: f64 = -0.567_143_290_409_783_8;
+
+/// Solve `lam * sqrt(n) * (w + exp(w)) = target` for w by Newton with a
+/// bisection fallback; the LHS is strictly increasing so the root is
+/// unique. This *is* the per-machine ERM for this construction.
+pub fn solve_machine_erm(lam: f64, n: usize, target: f64) -> f64 {
+    let c = lam * (n as f64).sqrt();
+    let g = |w: f64| c * (w + w.exp()) - target;
+    // Bracket the root.
+    let (mut lo, mut hi) = (-1.0, 1.0);
+    while g(lo) > 0.0 {
+        lo *= 2.0;
+        if lo < -1e6 {
+            break;
+        }
+    }
+    while g(hi) < 0.0 {
+        hi *= 2.0;
+        if hi > 1e6 {
+            break;
+        }
+    }
+    // Newton from the midpoint, guarded by the bracket.
+    let mut w = 0.5 * (lo + hi);
+    for _ in 0..200 {
+        let gv = g(w);
+        if gv.abs() < 1e-14 {
+            break;
+        }
+        if gv > 0.0 {
+            hi = w;
+        } else {
+            lo = w;
+        }
+        let dg = c * (1.0 + w.exp());
+        let mut w_new = w - gv / dg;
+        if !(lo..=hi).contains(&w_new) {
+            w_new = 0.5 * (lo + hi);
+        }
+        w = w_new;
+    }
+    w
+}
+
+/// One-shot averaging on the Theorem-1 problem: draw m machines x n
+/// samples, return (w_bar, w_hat) where w_bar is the average of
+/// per-machine ERMs and w_hat is the ERM over all nm samples.
+pub fn simulate_osa(lam: f64, n: usize, m: usize, seed: u64) -> (f64, f64) {
+    let mut rng = Rng64::seed_from_u64(seed);
+    let mut sum_w = 0.0;
+    let mut total_z = 0.0;
+    for _ in 0..m {
+        let zsum: f64 = (0..n).map(|_| rng.normal()).sum();
+        total_z += zsum;
+        // target = z~ = zsum / sqrt(n)
+        sum_w += solve_machine_erm(lam, n, zsum / (n as f64).sqrt());
+    }
+    let w_bar = sum_w / m as f64;
+    let nm = n * m;
+    let w_hat = solve_machine_erm(lam, nm, total_z / (nm as f64).sqrt());
+    (w_bar, w_hat)
+}
+
+/// Population objective F(w) = E_z f(w; z) = lam (w^2/2 + e^w)
+/// (the -zw term has zero mean).
+pub fn population_f(lam: f64, w: f64) -> f64 {
+    lam * (0.5 * w * w + w.exp())
+}
+
+/// Monte-Carlo estimate of E[(w_bar - w*)^2], E[(w_hat - w*)^2] and the
+/// population suboptimality gaps, over `reps` replications.
+pub struct Thm1Estimate {
+    pub mse_osa: f64,
+    pub mse_erm: f64,
+    pub subopt_osa: f64,
+    pub subopt_erm: f64,
+}
+
+pub fn estimate(lam: f64, n: usize, m: usize, reps: usize, seed: u64) -> Thm1Estimate {
+    let mut e = Thm1Estimate { mse_osa: 0.0, mse_erm: 0.0, subopt_osa: 0.0, subopt_erm: 0.0 };
+    let f_star = population_f(lam, W_STAR);
+    for r in 0..reps {
+        let (w_bar, w_hat) = simulate_osa(lam, n, m, seed.wrapping_add(r as u64));
+        e.mse_osa += (w_bar - W_STAR).powi(2);
+        e.mse_erm += (w_hat - W_STAR).powi(2);
+        e.subopt_osa += population_f(lam, w_bar) - f_star;
+        e.subopt_erm += population_f(lam, w_hat) - f_star;
+    }
+    let k = reps as f64;
+    e.mse_osa /= k;
+    e.mse_erm /= k;
+    e.subopt_osa /= k;
+    e.subopt_erm /= k;
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn w_star_is_the_root() {
+        assert!((W_STAR + W_STAR.exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn erm_solver_hits_target() {
+        for &(lam, n, t) in &[(0.01, 100, 1.3), (0.05, 400, -2.0), (0.001, 50, 0.0)] {
+            let w = solve_machine_erm(lam, n, t);
+            let c = lam * (n as f64).sqrt();
+            assert!((c * (w + w.exp()) - t).abs() < 1e-8, "lam={lam} n={n} t={t}");
+        }
+    }
+
+    #[test]
+    fn zero_target_gives_w_star() {
+        let w = solve_machine_erm(0.01, 100, 0.0);
+        assert!((w - W_STAR).abs() < 1e-10);
+    }
+
+    #[test]
+    fn osa_bias_does_not_vanish_with_m() {
+        // Theorem 1: for lam <= 1/(9 sqrt(n)) the OSA error is
+        // Omega(1/(lam^2 n)) independent of m, while full ERM improves.
+        let n = 100;
+        let lam = 1.0 / (10.0 * (n as f64).sqrt());
+        let e_small = estimate(lam, n, 4, 60, 42);
+        let e_big = estimate(lam, n, 64, 60, 43);
+        // ERM with 16x the data must be much better than OSA.
+        assert!(
+            e_big.mse_erm < e_big.mse_osa / 3.0,
+            "erm {} vs osa {}",
+            e_big.mse_erm,
+            e_big.mse_osa
+        );
+        // OSA does not improve proportionally with m (bias floor):
+        // allow anything better than 3x while ERM improved ~16x.
+        assert!(
+            e_big.mse_osa > e_small.mse_osa / 5.0,
+            "osa m=64 {} vs m=4 {}",
+            e_big.mse_osa,
+            e_small.mse_osa
+        );
+    }
+
+    #[test]
+    fn population_f_minimized_at_w_star() {
+        let f0 = population_f(0.02, W_STAR);
+        for &dw in &[-0.1, -0.01, 0.01, 0.1] {
+            assert!(population_f(0.02, W_STAR + dw) > f0);
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Crate-wide error type.
+
+/// Unified error for all dane subsystems.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Dimension mismatch between operands.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// A numerical routine failed (non-SPD matrix, CG breakdown, ...).
+    #[error("numerical failure: {0}")]
+    Numerical(String),
+
+    /// Bad or inconsistent configuration / parse failure.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Artifact manifest / PJRT runtime problems.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// An algorithm failed to converge within its round budget.
+    #[error("did not converge: {0}")]
+    NoConvergence(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Errors bubbled up from the xla/PJRT bridge.
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::Shape("3 vs 4".into());
+        assert!(e.to_string().contains("3 vs 4"));
+        let e = Error::Config("bad key".into());
+        assert!(e.to_string().contains("config"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

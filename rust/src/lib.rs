@@ -1,0 +1,72 @@
+//! # DANE — Distributed Approximate NEwton-type optimization
+//!
+//! A production-shaped reproduction of *"Communication Efficient Distributed
+//! Optimization using an Approximate Newton-type Method"* (Shamir, Srebro,
+//! Zhang — ICML 2014).
+//!
+//! The crate is the **L3 coordinator** of a three-layer stack:
+//!
+//! * **L3 (here, rust)** — leader/worker round engine, simulated collective
+//!   layer with communication accounting, DANE and every baseline the paper
+//!   compares against (GD, accelerated GD, consensus ADMM, one-shot
+//!   averaging ± bias correction, distributed L-BFGS), data generators,
+//!   losses, local solvers, metrics and a CLI launcher.
+//! * **L2 (jax, build-time)** — the per-worker compute graphs
+//!   (`python/compile/model.py`), AOT-lowered to HLO text.
+//! * **L1 (pallas, build-time)** — the tiled Gram-matvec and fused
+//!   smooth-hinge kernels the L2 graphs call.
+//!
+//! Workers can execute their local computations either natively (pure-rust
+//! [`linalg`]) or through the AOT artifacts via the PJRT bridge in
+//! [`runtime`]; integration tests pin the two backends against each other.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use dane::prelude::*;
+//! use std::sync::Arc;
+//!
+//! // 16k synthetic ridge samples split over 16 workers (paper fig. 2 setup)
+//! let ds = dane::data::synthetic_fig2(16_384, 500, 0.005, 42);
+//! let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+//! let mut cluster = SerialCluster::new(&ds, obj, 16, 42);
+//! let opts = DaneOptions { eta: 1.0, mu: 0.0, ..Default::default() };
+//! let ctx = dane::coordinator::RunCtx::new(20);
+//! let run = dane::coordinator::dane::run(&mut cluster, &opts, &ctx);
+//! println!("final suboptimality: {:?}", run.trace.last_suboptimality());
+//! ```
+//!
+//! See `examples/` for runnable end-to-end drivers and `rust/benches/` for
+//! the harnesses that regenerate every table and figure in the paper.
+
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod harness;
+pub mod linalg;
+pub mod loss;
+pub mod metrics;
+pub mod runtime;
+pub mod solver;
+pub mod util;
+pub mod worker;
+
+pub use error::{Error, Result};
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::comm::{CommStats, NetModel, Topology};
+    pub use crate::config::{AlgoConfig, DatasetConfig, ExperimentConfig};
+    pub use crate::coordinator::admm::AdmmOptions;
+    pub use crate::coordinator::dane::DaneOptions;
+    pub use crate::coordinator::driver::{run_experiment, RunResult};
+    pub use crate::coordinator::gd::{AgdOptions, GdOptions};
+    pub use crate::coordinator::SerialCluster;
+    pub use crate::data::{Dataset, Shard};
+    pub use crate::linalg::{CsrMatrix, DataMatrix, DenseMatrix};
+    pub use crate::loss::{Objective, Ridge, SmoothHinge};
+    pub use crate::metrics::Trace;
+    pub use crate::worker::Worker;
+}

@@ -1,0 +1,218 @@
+//! Conjugate gradient over an abstract linear operator.
+//!
+//! This is the rust twin of the `_cg` loop in `python/compile/model.py`:
+//! the Hessian-free path of every DANE local solve. The operator is
+//! abstract so the same loop serves the ridge Gram operator
+//! (1/n) X^T X + (lam+mu) I, the smooth-hinge weighted Gram operator
+//! (1/n) X^T D X + (lam+mu) I (cost O(nnz) on sparse shards), and dense
+//! test fixtures. The loop is allocation-free after setup — scratch
+//! buffers live in [`CgScratch`] and are reused across rounds.
+
+use super::ops;
+use crate::{Error, Result};
+
+/// A symmetric positive definite linear map v -> A v.
+pub trait LinearOperator {
+    /// Dimension of the (square) operator.
+    fn dim(&self) -> usize;
+    /// out = A v. Must not allocate on the hot path.
+    fn apply(&self, v: &[f64], out: &mut [f64]);
+}
+
+/// A dense symmetric matrix as an operator (tests, small problems).
+impl LinearOperator for super::dense::DenseMatrix {
+    fn dim(&self) -> usize {
+        debug_assert_eq!(self.rows(), self.cols());
+        self.rows()
+    }
+
+    fn apply(&self, v: &[f64], out: &mut [f64]) {
+        self.matvec(v, out);
+    }
+}
+
+/// Result metadata of a CG solve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CgOutcome {
+    /// Iterations actually performed.
+    pub iters: usize,
+    /// Final ||r|| / ||b||.
+    pub rel_residual: f64,
+    /// Whether the tolerance was met within the budget.
+    pub converged: bool,
+}
+
+/// Reusable scratch space for [`cg_solve`]; allocate once per worker.
+#[derive(Debug, Clone)]
+pub struct CgScratch {
+    r: Vec<f64>,
+    p: Vec<f64>,
+    ap: Vec<f64>,
+}
+
+impl CgScratch {
+    pub fn new(d: usize) -> Self {
+        CgScratch { r: vec![0.0; d], p: vec![0.0; d], ap: vec![0.0; d] }
+    }
+
+    fn ensure(&mut self, d: usize) {
+        if self.r.len() != d {
+            *self = CgScratch::new(d);
+        }
+    }
+}
+
+/// Solve A x = b with CG from x = 0, relative tolerance `tol` on ||r||/||b||.
+///
+/// `x` is overwritten with the solution. Returns the outcome; an error is
+/// only raised on shape mismatch or a breakdown (p^T A p <= 0, i.e. the
+/// operator was not SPD).
+pub fn cg_solve(
+    a: &dyn LinearOperator,
+    b: &[f64],
+    x: &mut [f64],
+    tol: f64,
+    max_iters: usize,
+    scratch: &mut CgScratch,
+) -> Result<CgOutcome> {
+    let d = a.dim();
+    if b.len() != d || x.len() != d {
+        return Err(Error::Shape(format!(
+            "cg: operator dim {d}, b {}, x {}",
+            b.len(),
+            x.len()
+        )));
+    }
+    scratch.ensure(d);
+    let CgScratch { r, p, ap } = scratch;
+
+    x.fill(0.0);
+    r.copy_from_slice(b);
+    p.copy_from_slice(b);
+    let bnorm = ops::norm2(b);
+    if bnorm == 0.0 {
+        return Ok(CgOutcome { iters: 0, rel_residual: 0.0, converged: true });
+    }
+    let stop = tol * bnorm;
+    let mut rs = ops::dot(r, r);
+
+    let mut iters = 0;
+    while iters < max_iters && rs.sqrt() > stop {
+        a.apply(p, ap);
+        let pap = ops::dot(p, ap);
+        if pap <= 0.0 {
+            return Err(Error::Numerical(format!(
+                "cg breakdown at iter {iters}: p^T A p = {pap:.3e} (operator not SPD)"
+            )));
+        }
+        let alpha = rs / pap;
+        ops::axpy(alpha, p, x);
+        ops::axpy(-alpha, ap, r);
+        let rs_new = ops::dot(r, r);
+        ops::axpby(1.0, r, rs_new / rs, p);
+        rs = rs_new;
+        iters += 1;
+    }
+
+    Ok(CgOutcome {
+        iters,
+        rel_residual: rs.sqrt() / bnorm,
+        converged: rs.sqrt() <= stop,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::DenseMatrix;
+    use crate::linalg::cholesky::CholeskyFactor;
+
+    fn spd(d: usize, seed: u64) -> DenseMatrix {
+        let mut rng = crate::util::Rng64::seed_from_u64(seed);
+        let mut b = DenseMatrix::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                b.set(i, j, rng.range_f64(-1.0, 1.0));
+            }
+        }
+        b.gram().add_diag(0.5)
+    }
+
+    #[test]
+    fn cg_matches_cholesky() {
+        let a = spd(25, 11);
+        let b: Vec<f64> = (0..25).map(|i| (i as f64).cos()).collect();
+        let chol = CholeskyFactor::factor(&a).unwrap();
+        let x_ref = chol.solve(&b);
+        let mut x = vec![0.0; 25];
+        let mut s = CgScratch::new(25);
+        let out = cg_solve(&a, &b, &mut x, 1e-12, 500, &mut s).unwrap();
+        assert!(out.converged, "{out:?}");
+        for i in 0..25 {
+            assert!((x[i] - x_ref[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn cg_identity_one_step() {
+        let a = DenseMatrix::eye(8);
+        let b = vec![1.0; 8];
+        let mut x = vec![0.0; 8];
+        let mut s = CgScratch::new(8);
+        let out = cg_solve(&a, &b, &mut x, 1e-12, 100, &mut s).unwrap();
+        assert_eq!(out.iters, 1);
+        assert_eq!(x, b);
+    }
+
+    #[test]
+    fn cg_zero_rhs() {
+        let a = spd(5, 2);
+        let b = vec![0.0; 5];
+        let mut x = vec![1.0; 5];
+        let mut s = CgScratch::new(5);
+        let out = cg_solve(&a, &b, &mut x, 1e-10, 10, &mut s).unwrap();
+        assert!(out.converged);
+        assert_eq!(x, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn cg_budget_respected() {
+        let a = spd(40, 5);
+        let b = vec![1.0; 40];
+        let mut x = vec![0.0; 40];
+        let mut s = CgScratch::new(40);
+        let out = cg_solve(&a, &b, &mut x, 1e-30, 3, &mut s).unwrap();
+        assert_eq!(out.iters, 3);
+        assert!(!out.converged);
+    }
+
+    #[test]
+    fn cg_rejects_non_spd() {
+        let mut a = DenseMatrix::eye(4);
+        a.set(2, 2, -1.0);
+        let b = vec![0.0, 0.0, 1.0, 0.0];
+        let mut x = vec![0.0; 4];
+        let mut s = CgScratch::new(4);
+        assert!(cg_solve(&a, &b, &mut x, 1e-10, 50, &mut s).is_err());
+    }
+
+    #[test]
+    fn cg_shape_mismatch() {
+        let a = spd(4, 1);
+        let b = vec![1.0; 3];
+        let mut x = vec![0.0; 4];
+        let mut s = CgScratch::new(4);
+        assert!(cg_solve(&a, &b, &mut x, 1e-10, 50, &mut s).is_err());
+    }
+
+    #[test]
+    fn cg_terminates_at_dim_steps() {
+        // Exact termination property: <= d iterations to machine precision.
+        let a = spd(15, 9);
+        let b: Vec<f64> = (0..15).map(|i| 1.0 + i as f64).collect();
+        let mut x = vec![0.0; 15];
+        let mut s = CgScratch::new(15);
+        let out = cg_solve(&a, &b, &mut x, 1e-10, 15, &mut s).unwrap();
+        assert!(out.converged, "{out:?}");
+    }
+}

@@ -1,0 +1,172 @@
+//! Cholesky factorization for SPD systems.
+//!
+//! The exact local-quadratic DANE solver factors (H_i + mu I) **once** per
+//! run and back-substitutes every round — the Hessian of a quadratic shard
+//! never changes, so this turns each DANE iteration into two O(d^2)
+//! triangular solves instead of an O(d^3) solve or an O(d^2)-per-CG-step
+//! iteration. This is the main L3 hot-path optimization (EXPERIMENTS.md
+//! §Perf).
+
+use super::dense::DenseMatrix;
+use crate::{Error, Result};
+
+/// Lower-triangular Cholesky factor L with A = L L^T.
+#[derive(Debug, Clone)]
+pub struct CholeskyFactor {
+    d: usize,
+    /// Row-major lower-triangular factor (full d x d storage; the upper
+    /// triangle is unused — simpler indexing beats the halved memory for
+    /// the d <= few-thousand regime this crate targets).
+    l: Vec<f64>,
+}
+
+impl CholeskyFactor {
+    /// Factor an SPD matrix. Fails with [`Error::Numerical`] when a pivot
+    /// is not strictly positive (matrix not SPD to working precision).
+    pub fn factor(a: &DenseMatrix) -> Result<Self> {
+        let d = a.rows();
+        if d != a.cols() {
+            return Err(Error::Shape("cholesky: matrix not square".into()));
+        }
+        let mut l = vec![0.0; d * d];
+        for i in 0..d {
+            for j in 0..=i {
+                let mut s = a.get(i, j);
+                // s -= sum_k L[i,k] * L[j,k]
+                let (ri, rj) = (&l[i * d..i * d + j], &l[j * d..j * d + j]);
+                for k in 0..j {
+                    s -= ri[k] * rj[k];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return Err(Error::Numerical(format!(
+                            "cholesky pivot {i} nonpositive ({s:.3e}); matrix not SPD"
+                        )));
+                    }
+                    l[i * d + j] = s.sqrt();
+                } else {
+                    l[i * d + j] = s / l[j * d + j];
+                }
+            }
+        }
+        Ok(CholeskyFactor { d, l })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Solve A x = b in place (b becomes x): forward then backward
+    /// substitution. O(d^2), allocation-free.
+    pub fn solve_in_place(&self, b: &mut [f64]) {
+        let d = self.d;
+        debug_assert_eq!(b.len(), d);
+        // L y = b
+        for i in 0..d {
+            let mut s = b[i];
+            let row = &self.l[i * d..i * d + i];
+            for k in 0..i {
+                s -= row[k] * b[k];
+            }
+            b[i] = s / self.l[i * d + i];
+        }
+        // L^T x = y
+        for i in (0..d).rev() {
+            let mut s = b[i];
+            for k in (i + 1)..d {
+                s -= self.l[k * d + i] * b[k];
+            }
+            b[i] = s / self.l[i * d + i];
+        }
+    }
+
+    /// Solve A x = b into a fresh vector.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_in_place(&mut x);
+        x
+    }
+
+    /// log det(A) = 2 sum_i log L_ii (used by diagnostics).
+    pub fn log_det(&self) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.d {
+            s += self.l[i * self.d + i].ln();
+        }
+        2.0 * s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops;
+
+    fn spd(d: usize, seed: u64) -> DenseMatrix {
+        let mut rng = crate::util::Rng64::seed_from_u64(seed);
+        let mut b = DenseMatrix::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                b.set(i, j, rng.range_f64(-1.0, 1.0));
+            }
+        }
+        // B^T B + I is SPD
+        b.gram().add_diag(1.0)
+    }
+
+    #[test]
+    fn solve_recovers_rhs() {
+        let a = spd(12, 7);
+        let f = CholeskyFactor::factor(&a).unwrap();
+        let x_true: Vec<f64> = (0..12).map(|i| (i as f64) - 5.5).collect();
+        let mut b = vec![0.0; 12];
+        a.matvec(&x_true, &mut b);
+        let x = f.solve(&b);
+        for i in 0..12 {
+            assert!((x[i] - x_true[i]).abs() < 1e-9, "{} vs {}", x[i], x_true[i]);
+        }
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let f = CholeskyFactor::factor(&DenseMatrix::eye(5)).unwrap();
+        let b = vec![1.0, -2.0, 3.0, 0.0, 4.0];
+        assert_eq!(f.solve(&b), b);
+        assert!(f.log_det().abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_non_spd() {
+        let mut a = DenseMatrix::eye(3);
+        a.set(1, 1, -1.0);
+        assert!(CholeskyFactor::factor(&a).is_err());
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        let a = DenseMatrix::zeros(2, 3);
+        assert!(CholeskyFactor::factor(&a).is_err());
+    }
+
+    #[test]
+    fn log_det_diagonal() {
+        let mut a = DenseMatrix::eye(2);
+        a.set(0, 0, 4.0);
+        a.set(1, 1, 9.0);
+        let f = CholeskyFactor::factor(&a).unwrap();
+        assert!((f.log_det() - (36.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_matches_residual() {
+        let a = spd(30, 3);
+        let f = CholeskyFactor::factor(&a).unwrap();
+        let b: Vec<f64> = (0..30).map(|i| (i as f64).sin()).collect();
+        let x = f.solve(&b);
+        let mut ax = vec![0.0; 30];
+        a.matvec(&x, &mut ax);
+        let mut r = vec![0.0; 30];
+        ops::sub(&ax, &b, &mut r);
+        assert!(ops::norm2(&r) < 1e-9 * ops::norm2(&b).max(1.0));
+    }
+}

@@ -1,0 +1,283 @@
+//! Dense row-major matrix.
+//!
+//! Row-major because every access pattern in the stack is row-streamed:
+//! matvec walks rows, rmatvec accumulates row-scaled contributions, the
+//! Gram product is a rank-1 accumulation per row. This matches the L1
+//! Pallas kernel, which streams (block_rows, d) tiles of X through VMEM.
+
+use super::ops;
+
+/// Dense n x d matrix, row-major contiguous storage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        DenseMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// From a contiguous row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        DenseMatrix { rows, cols, data }
+    }
+
+    /// From explicit row vectors (tests & tiny fixtures).
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        DenseMatrix { rows: r, cols: c, data }
+    }
+
+    /// d x d identity.
+    pub fn eye(d: usize) -> Self {
+        let mut m = Self::zeros(d, d);
+        for i in 0..d {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row i as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row i.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// out = A v  (row-streamed; one dot per row).
+    pub fn matvec(&self, v: &[f64], out: &mut [f64]) {
+        for i in 0..self.rows {
+            out[i] = ops::dot(self.row(i), v);
+        }
+    }
+
+    /// out = A^T u  (row-streamed accumulation).
+    pub fn rmatvec(&self, u: &[f64], out: &mut [f64]) {
+        out.fill(0.0);
+        self.rmatvec_acc(u, out);
+    }
+
+    /// out += A^T u
+    pub fn rmatvec_acc(&self, u: &[f64], out: &mut [f64]) {
+        for i in 0..self.rows {
+            let ui = u[i];
+            if ui != 0.0 {
+                ops::axpy(ui, self.row(i), out);
+            }
+        }
+    }
+
+    /// Gram matrix A^T A (d x d), accumulated two rows at a time — a
+    /// single pass over A, mirroring the L1 kernel's streamed schedule.
+    /// Exploits symmetry (upper triangle computed, then mirrored) and
+    /// 2-row register blocking: each pass over a g-row consumes two data
+    /// rows, halving the dominant g-row traffic (EXPERIMENTS.md §Perf).
+    pub fn gram(&self) -> DenseMatrix {
+        let d = self.cols;
+        let mut g = DenseMatrix::zeros(d, d);
+        let pairs = self.rows / 2;
+        for p in 0..pairs {
+            let (r0, r1) = (self.row(2 * p), self.row(2 * p + 1));
+            for a in 0..d {
+                let (ra0, ra1) = (r0[a], r1[a]);
+                if ra0 == 0.0 && ra1 == 0.0 {
+                    continue;
+                }
+                let grow = &mut g.row_mut(a)[a..];
+                let (t0, t1) = (&r0[a..], &r1[a..]);
+                for b in 0..grow.len() {
+                    grow[b] += ra0 * t0[b] + ra1 * t1[b];
+                }
+            }
+        }
+        if self.rows % 2 == 1 {
+            let r = self.row(self.rows - 1);
+            for a in 0..d {
+                let ra = r[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                let grow = &mut g.row_mut(a)[a..];
+                let t = &r[a..];
+                for b in 0..grow.len() {
+                    grow[b] += ra * t[b];
+                }
+            }
+        }
+        for a in 0..d {
+            for b in (a + 1)..d {
+                let v = g.get(a, b);
+                g.set(b, a, v);
+            }
+        }
+        g
+    }
+
+    /// Sub-matrix of the given rows, in order.
+    pub fn take_rows(&self, rows: &[usize]) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(rows.len(), self.cols);
+        for (k, &i) in rows.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Symmetric matrix-vector product helper used by dense Hessian paths.
+    pub fn symv(&self, v: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(self.rows, self.cols);
+        self.matvec(v, out);
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        ops::dot(&self.data, &self.data).sqrt()
+    }
+
+    /// Spectral norm ||A||_2 of a *symmetric* matrix, by power iteration.
+    /// Used by Lemma-2 experiments (max_i ||H_i - H||_2) and tests.
+    pub fn sym_spectral_norm(&self, iters: usize, seed: u64) -> f64 {
+        debug_assert_eq!(self.rows, self.cols);
+        let d = self.cols;
+        if d == 0 {
+            return 0.0;
+        }
+        let mut rng = crate::util::Rng64::seed_from_u64(seed);
+        let mut v: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let n = ops::norm2(&v).max(1e-300);
+        ops::scale(1.0 / n, &mut v);
+        let mut av = vec![0.0; d];
+        let mut lambda = 0.0;
+        for _ in 0..iters {
+            self.matvec(&v, &mut av);
+            let n = ops::norm2(&av);
+            if n == 0.0 {
+                return 0.0;
+            }
+            lambda = n;
+            for j in 0..d {
+                v[j] = av[j] / n;
+            }
+        }
+        // |lambda| of the dominant eigenvalue; for symmetric A this is
+        // the spectral norm.
+        lambda
+    }
+
+    /// self + alpha * I (fresh copy). Square matrices only.
+    pub fn add_diag(&self, alpha: f64) -> DenseMatrix {
+        debug_assert_eq!(self.rows, self.cols);
+        let mut m = self.clone();
+        for i in 0..self.rows {
+            let v = m.get(i, i) + alpha;
+            m.set(i, i, v);
+        }
+        m
+    }
+
+    /// self += alpha * other (same shape).
+    pub fn add_scaled(&mut self, alpha: f64, other: &DenseMatrix) {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        ops::axpy(alpha, &other.data, &mut self.data);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a() -> DenseMatrix {
+        DenseMatrix::from_rows(&[
+            vec![1.0, 2.0],
+            vec![3.0, 4.0],
+            vec![5.0, 6.0],
+        ])
+    }
+
+    #[test]
+    fn matvec() {
+        let mut out = vec![0.0; 3];
+        a().matvec(&[1.0, -1.0], &mut out);
+        assert_eq!(out, vec![-1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn rmatvec() {
+        let mut out = vec![0.0; 2];
+        a().rmatvec(&[1.0, 1.0, 1.0], &mut out);
+        assert_eq!(out, vec![9.0, 12.0]);
+    }
+
+    #[test]
+    fn gram_matches_explicit() {
+        let g = a().gram();
+        // A^T A = [[35, 44], [44, 56]]
+        assert_eq!(g.get(0, 0), 35.0);
+        assert_eq!(g.get(0, 1), 44.0);
+        assert_eq!(g.get(1, 0), 44.0);
+        assert_eq!(g.get(1, 1), 56.0);
+    }
+
+    #[test]
+    fn take_rows_reorders() {
+        let t = a().take_rows(&[2, 0]);
+        assert_eq!(t.row(0), &[5.0, 6.0]);
+        assert_eq!(t.row(1), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn spectral_norm_diagonal() {
+        let mut m = DenseMatrix::eye(3);
+        m.set(1, 1, -7.0);
+        let s = m.sym_spectral_norm(200, 1);
+        assert!((s - 7.0).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn add_diag_and_scaled() {
+        let mut g = a().gram();
+        let g2 = g.add_diag(1.0);
+        assert_eq!(g2.get(0, 0), 36.0);
+        assert_eq!(g2.get(0, 1), 44.0);
+        g.add_scaled(2.0, &DenseMatrix::eye(2));
+        assert_eq!(g.get(1, 1), 58.0);
+    }
+}

@@ -1,0 +1,224 @@
+//! Dense + sparse linear algebra substrate.
+//!
+//! The paper's experiments need: dense row-major matrices (synthetic ridge,
+//! covtype-like, mnist47-like), CSR sparse matrices (astro-ph-like,
+//! ~10^4-dimensional bag-of-words features), a Cholesky factorization for
+//! exact local quadratic solves, and conjugate gradient over an abstract
+//! operator for the Hessian-free path ("no Hessians are explicitly
+//! computed!"). Everything is `f64`, no BLAS dependency — the hot loops are
+//! written to autovectorize (see EXPERIMENTS.md §Perf).
+
+pub mod cg;
+pub mod cholesky;
+pub mod dense;
+pub mod ops;
+pub mod sparse;
+
+pub use cg::{cg_solve, CgOutcome, LinearOperator};
+pub use cholesky::CholeskyFactor;
+pub use dense::DenseMatrix;
+pub use sparse::CsrMatrix;
+
+use crate::{Error, Result};
+
+/// A feature matrix that is either dense or sparse, with a unified
+/// interface for the operations the optimization stack needs.
+///
+/// Rows are samples, columns are features (n x d).
+#[derive(Debug, Clone)]
+pub enum DataMatrix {
+    Dense(DenseMatrix),
+    Sparse(CsrMatrix),
+}
+
+impl DataMatrix {
+    pub fn rows(&self) -> usize {
+        match self {
+            DataMatrix::Dense(m) => m.rows(),
+            DataMatrix::Sparse(m) => m.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            DataMatrix::Dense(m) => m.cols(),
+            DataMatrix::Sparse(m) => m.cols(),
+        }
+    }
+
+    /// out = X v   (out: n, v: d)
+    pub fn matvec(&self, v: &[f64], out: &mut [f64]) -> Result<()> {
+        self.check_dims(v.len(), out.len(), "matvec")?;
+        match self {
+            DataMatrix::Dense(m) => m.matvec(v, out),
+            DataMatrix::Sparse(m) => m.matvec(v, out),
+        }
+        Ok(())
+    }
+
+    /// out = X^T u   (out: d, u: n)
+    pub fn rmatvec(&self, u: &[f64], out: &mut [f64]) -> Result<()> {
+        self.check_dims(out.len(), u.len(), "rmatvec")?;
+        match self {
+            DataMatrix::Dense(m) => m.rmatvec(u, out),
+            DataMatrix::Sparse(m) => m.rmatvec(u, out),
+        }
+        Ok(())
+    }
+
+    /// out += X^T u without zeroing out first.
+    pub fn rmatvec_acc(&self, u: &[f64], out: &mut [f64]) -> Result<()> {
+        self.check_dims(out.len(), u.len(), "rmatvec_acc")?;
+        match self {
+            DataMatrix::Dense(m) => m.rmatvec_acc(u, out),
+            DataMatrix::Sparse(m) => m.rmatvec_acc(u, out),
+        }
+        Ok(())
+    }
+
+    /// The dense Gram matrix X^T X (d x d). Used by the cached-Cholesky
+    /// local solver when d is small; CG avoids this entirely.
+    pub fn gram(&self) -> DenseMatrix {
+        match self {
+            DataMatrix::Dense(m) => m.gram(),
+            DataMatrix::Sparse(m) => m.gram(),
+        }
+    }
+
+    /// Extract a sub-matrix containing the given rows (in order).
+    pub fn take_rows(&self, rows: &[usize]) -> DataMatrix {
+        match self {
+            DataMatrix::Dense(m) => DataMatrix::Dense(m.take_rows(rows)),
+            DataMatrix::Sparse(m) => DataMatrix::Sparse(m.take_rows(rows)),
+        }
+    }
+
+    /// Dot product of row i with v (v: d).
+    pub fn row_dot(&self, i: usize, v: &[f64]) -> f64 {
+        match self {
+            DataMatrix::Dense(m) => ops::dot(m.row(i), v),
+            DataMatrix::Sparse(m) => m.row_dot(i, v),
+        }
+    }
+
+    /// out += alpha * row_i  (out: d)
+    pub fn row_axpy(&self, i: usize, alpha: f64, out: &mut [f64]) {
+        match self {
+            DataMatrix::Dense(m) => ops::axpy(alpha, m.row(i), out),
+            DataMatrix::Sparse(m) => m.row_axpy(i, alpha, out),
+        }
+    }
+
+    /// Densify (tests / small problems only).
+    pub fn to_dense(&self) -> DenseMatrix {
+        match self {
+            DataMatrix::Dense(m) => m.clone(),
+            DataMatrix::Sparse(m) => m.to_dense(),
+        }
+    }
+
+    fn check_dims(&self, d: usize, n: usize, what: &str) -> Result<()> {
+        if d != self.cols() || n != self.rows() {
+            return Err(Error::Shape(format!(
+                "{what}: matrix is {}x{}, got d-vec {d}, n-vec {n}",
+                self.rows(),
+                self.cols()
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl From<DenseMatrix> for DataMatrix {
+    fn from(m: DenseMatrix) -> Self {
+        DataMatrix::Dense(m)
+    }
+}
+
+impl From<CsrMatrix> for DataMatrix {
+    fn from(m: CsrMatrix) -> Self {
+        DataMatrix::Sparse(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> (DataMatrix, DataMatrix) {
+        let d = DenseMatrix::from_rows(&[
+            vec![1.0, 0.0, 2.0],
+            vec![0.0, 3.0, 0.0],
+            vec![4.0, 0.0, 5.0],
+            vec![0.0, 0.0, 6.0],
+        ]);
+        let s = CsrMatrix::from_dense(&d, 0.0);
+        (DataMatrix::Dense(d), DataMatrix::Sparse(s))
+    }
+
+    #[test]
+    fn dense_sparse_matvec_agree() {
+        let (d, s) = small();
+        let v = vec![1.0, -2.0, 0.5];
+        let mut od = vec![0.0; 4];
+        let mut os = vec![0.0; 4];
+        d.matvec(&v, &mut od).unwrap();
+        s.matvec(&v, &mut os).unwrap();
+        assert_eq!(od, os);
+    }
+
+    #[test]
+    fn dense_sparse_rmatvec_agree() {
+        let (d, s) = small();
+        let u = vec![1.0, 2.0, 3.0, -1.0];
+        let mut od = vec![0.0; 3];
+        let mut os = vec![0.0; 3];
+        d.rmatvec(&u, &mut od).unwrap();
+        s.rmatvec(&u, &mut os).unwrap();
+        assert_eq!(od, os);
+    }
+
+    #[test]
+    fn dense_sparse_gram_agree() {
+        let (d, s) = small();
+        let gd = d.gram();
+        let gs = s.gram();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((gd.get(i, j) - gs.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn row_ops_agree() {
+        let (d, s) = small();
+        let v = vec![1.0, 1.0, 1.0];
+        for i in 0..4 {
+            assert_eq!(d.row_dot(i, &v), s.row_dot(i, &v));
+        }
+        let mut od = vec![0.0; 3];
+        let mut os = vec![0.0; 3];
+        d.row_axpy(2, 2.0, &mut od);
+        s.row_axpy(2, 2.0, &mut os);
+        assert_eq!(od, os);
+    }
+
+    #[test]
+    fn take_rows_agree() {
+        let (d, s) = small();
+        let idx = [3usize, 0];
+        let dd = d.take_rows(&idx).to_dense();
+        let ss = s.take_rows(&idx).to_dense();
+        assert_eq!(dd.row(0), ss.row(0));
+        assert_eq!(dd.row(1), ss.row(1));
+        assert_eq!(dd.rows(), 2);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let (d, _) = small();
+        let mut out = vec![0.0; 4];
+        assert!(d.matvec(&[1.0, 2.0], &mut out).is_err());
+    }
+}

@@ -1,0 +1,154 @@
+//! Vector kernels used by every hot loop in the crate.
+//!
+//! Written as straight slice loops so LLVM autovectorizes them; the
+//! criterion bench `hotpath_micro` pins their throughput. Panics on length
+//! mismatch (debug_assert in release-hot paths) — these are internal
+//! primitives, shape checking happens at the module boundaries.
+
+/// dot(x, y) = sum_i x_i y_i
+///
+/// Four independent accumulators: a strict sequential FP reduction cannot
+/// be vectorized by LLVM (reassociation changes the result), so the naive
+/// loop runs at ~1 madd per 2 cycles. Splitting the reduction into four
+/// lanes re-enables SIMD + ILP — measured 3-4x on the d=512 hot path
+/// (EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for i in 0..chunks {
+        let j = 4 * i;
+        a0 += x[j] * y[j];
+        a1 += x[j + 1] * y[j + 1];
+        a2 += x[j + 2] * y[j + 2];
+        a3 += x[j + 3] * y[j + 3];
+    }
+    let mut acc = (a0 + a2) + (a1 + a3);
+    for i in 4 * chunks..n {
+        acc += x[i] * y[i];
+    }
+    acc
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// y = alpha * x + beta * y
+#[inline]
+pub fn axpby(alpha: f64, x: &[f64], beta: f64, y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] = alpha * x[i] + beta * y[i];
+    }
+}
+
+/// x *= alpha
+#[inline]
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Euclidean norm ||x||.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// ||x - y||
+#[inline]
+pub fn dist2(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0;
+    for i in 0..x.len() {
+        let d = x[i] - y[i];
+        acc += d * d;
+    }
+    acc.sqrt()
+}
+
+/// out = x - y
+#[inline]
+pub fn sub(x: &[f64], y: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = x[i] - y[i];
+    }
+}
+
+/// out = x + y
+#[inline]
+pub fn add(x: &[f64], y: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = x[i] + y[i];
+    }
+}
+
+/// Copy src into dst.
+#[inline]
+pub fn copy(src: &[f64], dst: &mut [f64]) {
+    dst.copy_from_slice(src);
+}
+
+/// Mean of a set of equal-length vectors into `out`. The serial reduction
+/// the collective layer's allreduce must agree with (see comm tests).
+pub fn mean_into(vecs: &[&[f64]], out: &mut [f64]) {
+    assert!(!vecs.is_empty());
+    out.fill(0.0);
+    for v in vecs {
+        axpy(1.0, v, out);
+    }
+    scale(1.0 / vecs.len() as f64, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[3.0, -1.0], &mut y);
+        assert_eq!(y, vec![7.0, -1.0]);
+    }
+
+    #[test]
+    fn axpby_basic() {
+        let mut y = vec![1.0, 2.0];
+        axpby(2.0, &[1.0, 1.0], -1.0, &mut y);
+        assert_eq!(y, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn norms() {
+        assert_eq!(norm2(&[3.0, 4.0]), 5.0);
+        assert_eq!(dist2(&[1.0, 1.0], &[4.0, 5.0]), 5.0);
+    }
+
+    #[test]
+    fn mean_matches_serial() {
+        let a = vec![1.0, 2.0];
+        let b = vec![3.0, 6.0];
+        let mut out = vec![0.0; 2];
+        mean_into(&[&a, &b], &mut out);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+}

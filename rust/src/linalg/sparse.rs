@@ -1,0 +1,267 @@
+//! Compressed sparse row (CSR) matrix.
+//!
+//! The ASTRO-PH-like workload (paper figs. 3-4) is ~10^4-dimensional with
+//! ~50 nonzeros per row; dense storage would be 100x waste and, more
+//! importantly, the smooth-hinge HVP X^T D X v must cost O(nnz), not
+//! O(n d), for the local Newton-CG solves to be realistic.
+
+use super::dense::DenseMatrix;
+
+/// CSR sparse matrix (n x d).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    /// Row pointers, len = rows + 1.
+    indptr: Vec<usize>,
+    /// Column indices, len = nnz, sorted within each row.
+    indices: Vec<u32>,
+    /// Values, len = nnz.
+    data: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from raw CSR components (validated).
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        data: Vec<f64>,
+    ) -> Self {
+        assert_eq!(indptr.len(), rows + 1, "indptr length");
+        assert_eq!(*indptr.last().unwrap_or(&0), indices.len(), "indptr tail");
+        assert_eq!(indices.len(), data.len(), "indices/data length");
+        for w in indptr.windows(2) {
+            assert!(w[0] <= w[1], "indptr must be nondecreasing");
+        }
+        for &j in &indices {
+            assert!((j as usize) < cols, "column index out of range");
+        }
+        CsrMatrix { rows, cols, indptr, indices, data }
+    }
+
+    /// Build from a (row, col, value) triplet list.
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: &[(usize, usize, f64)],
+    ) -> Self {
+        let mut per_row: Vec<Vec<(usize, f64)>> = vec![Vec::new(); rows];
+        for &(i, j, v) in triplets {
+            assert!(i < rows && j < cols, "triplet out of range");
+            per_row[i].push((j, v));
+        }
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        indptr.push(0);
+        for row in per_row.iter_mut() {
+            row.sort_by_key(|&(j, _)| j);
+            for &(j, v) in row.iter() {
+                indices.push(j as u32);
+                data.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix { rows, cols, indptr, indices, data }
+    }
+
+    /// Sparsify a dense matrix, dropping |v| <= threshold.
+    pub fn from_dense(m: &DenseMatrix, threshold: f64) -> Self {
+        let mut trips = Vec::new();
+        for i in 0..m.rows() {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v.abs() > threshold {
+                    trips.push((i, j, v));
+                }
+            }
+        }
+        Self::from_triplets(m.rows(), m.cols(), &trips)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// (indices, values) of row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[s..e], &self.data[s..e])
+    }
+
+    /// out = X v
+    pub fn matvec(&self, v: &[f64], out: &mut [f64]) {
+        for i in 0..self.rows {
+            out[i] = self.row_dot(i, v);
+        }
+    }
+
+    /// Dot of row i with a dense vector.
+    #[inline]
+    pub fn row_dot(&self, i: usize, v: &[f64]) -> f64 {
+        let (idx, val) = self.row(i);
+        let mut acc = 0.0;
+        for k in 0..idx.len() {
+            acc += val[k] * v[idx[k] as usize];
+        }
+        acc
+    }
+
+    /// out += alpha * row_i
+    #[inline]
+    pub fn row_axpy(&self, i: usize, alpha: f64, out: &mut [f64]) {
+        let (idx, val) = self.row(i);
+        for k in 0..idx.len() {
+            out[idx[k] as usize] += alpha * val[k];
+        }
+    }
+
+    /// out = X^T u
+    pub fn rmatvec(&self, u: &[f64], out: &mut [f64]) {
+        out.fill(0.0);
+        self.rmatvec_acc(u, out);
+    }
+
+    /// out += X^T u
+    pub fn rmatvec_acc(&self, u: &[f64], out: &mut [f64]) {
+        for i in 0..self.rows {
+            let ui = u[i];
+            if ui != 0.0 {
+                self.row_axpy(i, ui, out);
+            }
+        }
+    }
+
+    /// Dense Gram matrix X^T X. Only sane for moderate d; the sparse
+    /// workloads use CG + row ops instead (cost O(nnz) per HVP).
+    pub fn gram(&self) -> DenseMatrix {
+        let mut g = DenseMatrix::zeros(self.cols, self.cols);
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            for a in 0..idx.len() {
+                let (ja, va) = (idx[a] as usize, val[a]);
+                for b in 0..idx.len() {
+                    let (jb, vb) = (idx[b] as usize, val[b]);
+                    let cur = g.get(ja, jb);
+                    g.set(ja, jb, cur + va * vb);
+                }
+            }
+        }
+        g
+    }
+
+    /// Sub-matrix of the given rows, in order.
+    pub fn take_rows(&self, rows: &[usize]) -> CsrMatrix {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        indptr.push(0);
+        for &i in rows {
+            let (idx, val) = self.row(i);
+            indices.extend_from_slice(idx);
+            data.extend_from_slice(val);
+            indptr.push(indices.len());
+        }
+        CsrMatrix { rows: rows.len(), cols: self.cols, indptr, indices, data }
+    }
+
+    /// Densify (tests / padding for the PJRT path).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            for k in 0..idx.len() {
+                m.set(i, idx[k] as usize, val[k]);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn x() -> CsrMatrix {
+        CsrMatrix::from_triplets(
+            3,
+            4,
+            &[(0, 1, 2.0), (0, 3, -1.0), (1, 0, 5.0), (2, 2, 3.0), (2, 3, 4.0)],
+        )
+    }
+
+    #[test]
+    fn structure() {
+        let m = x();
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.row(0), (&[1u32, 3][..], &[2.0, -1.0][..]));
+        assert_eq!(m.row(1), (&[0u32][..], &[5.0][..]));
+    }
+
+    #[test]
+    fn matvec_roundtrip_dense() {
+        let m = x();
+        let d = m.to_dense();
+        let v = vec![1.0, 2.0, 3.0, 4.0];
+        let mut o1 = vec![0.0; 3];
+        let mut o2 = vec![0.0; 3];
+        m.matvec(&v, &mut o1);
+        d.matvec(&v, &mut o2);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn rmatvec_roundtrip_dense() {
+        let m = x();
+        let d = m.to_dense();
+        let u = vec![1.0, -2.0, 0.5];
+        let mut o1 = vec![0.0; 4];
+        let mut o2 = vec![0.0; 4];
+        m.rmatvec(&u, &mut o1);
+        d.rmatvec(&u, &mut o2);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn gram_roundtrip_dense() {
+        let m = x();
+        let gd = m.to_dense().gram();
+        let gs = m.gram();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((gd.get(i, j) - gs.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn take_rows_subset() {
+        let m = x().take_rows(&[2, 2, 0]);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.row(0), m.row(1));
+        assert_eq!(m.row(2), (&[1u32, 3][..], &[2.0, -1.0][..]));
+    }
+
+    #[test]
+    #[should_panic(expected = "column index out of range")]
+    fn rejects_bad_indices() {
+        CsrMatrix::new(1, 2, vec![0, 1], vec![5], vec![1.0]);
+    }
+
+    #[test]
+    fn from_dense_threshold() {
+        let d = DenseMatrix::from_rows(&[vec![0.0, 1e-12, 3.0]]);
+        let s = CsrMatrix::from_dense(&d, 1e-9);
+        assert_eq!(s.nnz(), 1);
+    }
+}

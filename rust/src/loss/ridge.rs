@@ -1,0 +1,127 @@
+//! Ridge (regularized least squares) — the paper's fig. 2 objective.
+//!
+//! `phi_i(w) = (1/2n) ||X w - y||^2 + (lam/2) ||w||^2`.
+//!
+//! Quadratic: the Hessian `(1/n) X^T X + lam I` is constant, so DANE's
+//! local problem has the closed form of paper eq. (16) and the local
+//! solver can cache a Cholesky factorization across rounds.
+
+use super::traits::Objective;
+use crate::data::Shard;
+use crate::linalg::ops;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Ridge {
+    lam: f64,
+}
+
+impl Ridge {
+    pub fn new(lam: f64) -> Self {
+        assert!(lam >= 0.0, "lambda must be nonnegative");
+        Ridge { lam }
+    }
+}
+
+impl Objective for Ridge {
+    fn name(&self) -> &'static str {
+        "ridge"
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lam
+    }
+
+    fn is_quadratic(&self) -> bool {
+        true
+    }
+
+    fn value(&self, shard: &Shard, w: &[f64], rowbuf: &mut [f64]) -> f64 {
+        let n = shard.n_effective() as f64;
+        shard.x.matvec(w, rowbuf).expect("ridge value matvec");
+        let mut acc = 0.0;
+        for j in 0..shard.n() {
+            let r = rowbuf[j] - shard.y[j];
+            acc += r * r;
+        }
+        acc / (2.0 * n) + 0.5 * self.lam * ops::dot(w, w)
+    }
+
+    fn value_grad(
+        &self,
+        shard: &Shard,
+        w: &[f64],
+        out: &mut [f64],
+        rowbuf: &mut [f64],
+    ) -> f64 {
+        let n = shard.n_effective() as f64;
+        shard.x.matvec(w, rowbuf).expect("ridge grad matvec");
+        let mut acc = 0.0;
+        for j in 0..shard.n() {
+            let r = rowbuf[j] - shard.y[j];
+            acc += r * r;
+            rowbuf[j] = r / n;
+        }
+        shard.x.rmatvec(rowbuf, out).expect("ridge grad rmatvec");
+        ops::axpy(self.lam, w, out);
+        acc / (2.0 * n) + 0.5 * self.lam * ops::dot(w, w)
+    }
+
+    fn hess_weights(&self, shard: &Shard, _w: &[f64], out: &mut [f64]) {
+        // l'' = 1 everywhere except padding rows (zero feature rows
+        // contribute nothing anyway, but keeping them at 1 is harmless
+        // because X row = 0 annihilates the weight).
+        out[..shard.n()].fill(1.0);
+    }
+
+    fn scalar_smoothness(&self) -> f64 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::testutil::{grad_check, reg_shard};
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let shard = reg_shard(40, 7, 3);
+        let obj = Ridge::new(0.05);
+        let w: Vec<f64> = (0..7).map(|i| 0.3 * (i as f64) - 1.0).collect();
+        assert!(grad_check(&obj, &shard, &w) < 1e-6);
+    }
+
+    #[test]
+    fn value_at_zero_is_mean_square() {
+        let shard = reg_shard(10, 3, 1);
+        let obj = Ridge::new(0.0);
+        let mut rowbuf = vec![0.0; 10];
+        let v = obj.value(&shard, &[0.0; 3], &mut rowbuf);
+        let expect: f64 =
+            shard.y.iter().map(|y| y * y).sum::<f64>() / (2.0 * 10.0);
+        assert!((v - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn regularizer_adds_quadratic() {
+        let shard = reg_shard(10, 3, 1);
+        let w = vec![1.0, -2.0, 0.5];
+        let mut rowbuf = vec![0.0; 10];
+        let v0 = Ridge::new(0.0).value(&shard, &w, &mut rowbuf);
+        let v1 = Ridge::new(2.0).value(&shard, &w, &mut rowbuf);
+        let wsq: f64 = w.iter().map(|x| x * x).sum();
+        assert!((v1 - v0 - wsq).abs() < 1e-12);
+    }
+
+    #[test]
+    fn value_grad_consistent_with_value() {
+        let shard = reg_shard(25, 4, 9);
+        let obj = Ridge::new(0.1);
+        let w = vec![0.2, -0.4, 1.0, 0.0];
+        let mut rowbuf = vec![0.0; 25];
+        let mut g = vec![0.0; 4];
+        let v1 = obj.value_grad(&shard, &w, &mut g, &mut rowbuf);
+        let v2 = obj.value(&shard, &w, &mut rowbuf);
+        assert!((v1 - v2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,203 @@
+//! Smooth hinge loss (Shalev-Shwartz & Zhang 2013) — figs. 3 and 4.
+//!
+//! With margin `a = y <x, w>` and smoothing `gamma` (paper-default 1):
+//!
+//! ```text
+//! l(a)  = 0                      a >= 1
+//!       = 1 - a - gamma/2        a <= 1 - gamma
+//!       = (1 - a)^2 / (2 gamma)  otherwise
+//! ```
+//!
+//! Piecewise-quadratic: l' is piecewise linear and l'' is 0 or 1/gamma,
+//! so Newton-CG local solves converge in a handful of steps. Matches
+//! `python/compile/kernels/ref.py` exactly.
+
+use super::traits::Objective;
+use crate::data::Shard;
+use crate::linalg::ops;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SmoothHinge {
+    lam: f64,
+    gamma: f64,
+}
+
+impl SmoothHinge {
+    /// Paper-default smoothing gamma = 1.
+    pub fn new(lam: f64) -> Self {
+        Self::with_gamma(lam, 1.0)
+    }
+
+    pub fn with_gamma(lam: f64, gamma: f64) -> Self {
+        assert!(lam >= 0.0, "lambda must be nonnegative");
+        assert!(gamma > 0.0, "gamma must be positive");
+        SmoothHinge { lam, gamma }
+    }
+
+    #[inline]
+    pub fn loss(&self, a: f64) -> f64 {
+        if a >= 1.0 {
+            0.0
+        } else if a <= 1.0 - self.gamma {
+            1.0 - a - self.gamma / 2.0
+        } else {
+            (1.0 - a) * (1.0 - a) / (2.0 * self.gamma)
+        }
+    }
+
+    #[inline]
+    pub fn dloss(&self, a: f64) -> f64 {
+        if a >= 1.0 {
+            0.0
+        } else if a <= 1.0 - self.gamma {
+            -1.0
+        } else {
+            -(1.0 - a) / self.gamma
+        }
+    }
+
+    #[inline]
+    pub fn ddloss(&self, a: f64) -> f64 {
+        if a < 1.0 && a > 1.0 - self.gamma {
+            1.0 / self.gamma
+        } else {
+            0.0
+        }
+    }
+}
+
+impl Objective for SmoothHinge {
+    fn name(&self) -> &'static str {
+        "smooth_hinge"
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lam
+    }
+
+    fn is_quadratic(&self) -> bool {
+        false
+    }
+
+    fn value(&self, shard: &Shard, w: &[f64], rowbuf: &mut [f64]) -> f64 {
+        let n = shard.n_effective() as f64;
+        shard.x.matvec(w, rowbuf).expect("hinge value matvec");
+        let mut acc = 0.0;
+        for j in 0..shard.n() {
+            let yj = shard.y[j];
+            if yj != 0.0 {
+                acc += self.loss(yj * rowbuf[j]);
+            }
+        }
+        acc / n + 0.5 * self.lam * ops::dot(w, w)
+    }
+
+    fn value_grad(
+        &self,
+        shard: &Shard,
+        w: &[f64],
+        out: &mut [f64],
+        rowbuf: &mut [f64],
+    ) -> f64 {
+        let n = shard.n_effective() as f64;
+        shard.x.matvec(w, rowbuf).expect("hinge grad matvec");
+        let mut acc = 0.0;
+        for j in 0..shard.n() {
+            let yj = shard.y[j];
+            if yj != 0.0 {
+                let a = yj * rowbuf[j];
+                acc += self.loss(a);
+                rowbuf[j] = self.dloss(a) * yj / n;
+            } else {
+                rowbuf[j] = 0.0; // padding rows contribute nothing
+            }
+        }
+        shard.x.rmatvec(rowbuf, out).expect("hinge grad rmatvec");
+        ops::axpy(self.lam, w, out);
+        acc / n + 0.5 * self.lam * ops::dot(w, w)
+    }
+
+    fn hess_weights(&self, shard: &Shard, w: &[f64], out: &mut [f64]) {
+        shard.x.matvec(w, out).expect("hinge weights matvec");
+        for j in 0..shard.n() {
+            let yj = shard.y[j];
+            // y^2 = 1 on real rows, 0 on padding — matches the L1 kernel.
+            out[j] = if yj != 0.0 { self.ddloss(yj * out[j]) } else { 0.0 };
+        }
+    }
+
+    fn scalar_smoothness(&self) -> f64 {
+        1.0 / self.gamma
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::testutil::{class_shard, grad_check};
+
+    #[test]
+    fn pieces_join_continuously() {
+        let h = SmoothHinge::with_gamma(0.0, 1.0);
+        // value continuity at the knots
+        assert!((h.loss(1.0) - 0.0).abs() < 1e-12);
+        assert!((h.loss(0.0) - 0.5).abs() < 1e-12);
+        // derivative continuity at the knots
+        assert!((h.dloss(1.0) - 0.0).abs() < 1e-12);
+        assert!((h.dloss(0.0) - (-1.0)).abs() < 1e-12);
+        // linear tail
+        assert!((h.loss(-2.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_half_knots() {
+        let h = SmoothHinge::with_gamma(0.0, 0.5);
+        assert!((h.loss(0.5) - 0.25).abs() < 1e-12);
+        assert!((h.dloss(0.5) + 1.0).abs() < 1e-12);
+        assert_eq!(h.ddloss(0.75), 2.0);
+        assert_eq!(h.ddloss(0.25), 0.0);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let shard = class_shard(60, 6, 5);
+        let obj = SmoothHinge::new(0.01);
+        let w: Vec<f64> = (0..6).map(|i| 0.2 * (i as f64) - 0.5).collect();
+        assert!(grad_check(&obj, &shard, &w) < 1e-6);
+    }
+
+    #[test]
+    fn padding_rows_are_inert() {
+        use crate::data::Shard;
+        use crate::linalg::{DataMatrix, DenseMatrix};
+        let x1 = DenseMatrix::from_rows(&[vec![1.0, -1.0], vec![0.5, 2.0]]);
+        let mut rows = vec![x1.row(0).to_vec(), x1.row(1).to_vec()];
+        rows.push(vec![0.0, 0.0]); // padding row
+        let x2 = DenseMatrix::from_rows(&rows);
+        let s1 = Shard::new(DataMatrix::Dense(x1), vec![1.0, -1.0]);
+        let s2 = Shard::with_padding(DataMatrix::Dense(x2), vec![1.0, -1.0, 0.0], 2);
+        let obj = SmoothHinge::new(0.1);
+        let w = vec![0.3, -0.7];
+        let mut b1 = vec![0.0; 2];
+        let mut b2 = vec![0.0; 3];
+        let mut g1 = vec![0.0; 2];
+        let mut g2 = vec![0.0; 2];
+        let v1 = obj.value_grad(&s1, &w, &mut g1, &mut b1);
+        let v2 = obj.value_grad(&s2, &w, &mut g2, &mut b2);
+        assert!((v1 - v2).abs() < 1e-14);
+        assert!((g1[0] - g2[0]).abs() < 1e-14);
+        assert!((g1[1] - g2[1]).abs() < 1e-14);
+    }
+
+    #[test]
+    fn hess_weights_piecewise() {
+        let shard = class_shard(30, 4, 8);
+        let obj = SmoothHinge::new(0.0);
+        let w = vec![0.1; 4];
+        let mut weights = vec![0.0; 30];
+        obj.hess_weights(&shard, &w, &mut weights);
+        for &v in &weights {
+            assert!(v == 0.0 || v == 1.0);
+        }
+    }
+}

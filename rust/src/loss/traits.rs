@@ -1,0 +1,148 @@
+//! The [`Objective`] trait and the Hessian-free operator built on it.
+
+use crate::data::Shard;
+use crate::linalg::{ops, LinearOperator};
+use std::cell::RefCell;
+
+/// A regularized shard-local empirical objective
+/// `phi_i(w) = (1/n) sum_j l(...) + (lam/2)||w||^2`.
+///
+/// All methods take a caller-provided `rowbuf` of length `shard.n()` for
+/// the per-row temporaries (margins / residuals), so the hot path never
+/// allocates. Implementations must treat rows with `y == 0` *and* an
+/// all-zero feature row as padding that contributes nothing — the PJRT
+/// backend pads shards to the canonical artifact shape.
+pub trait Objective: Send + Sync {
+    /// Display name ("ridge", "smooth_hinge", ...).
+    fn name(&self) -> &'static str;
+
+    /// L2 regularization strength lambda.
+    fn lambda(&self) -> f64;
+
+    /// True when the objective is quadratic in w (fixed Hessian) — DANE
+    /// then uses the cached-factorization local solver and the closed-form
+    /// update of paper eq. (16).
+    fn is_quadratic(&self) -> bool;
+
+    /// phi_i(w).
+    fn value(&self, shard: &Shard, w: &[f64], rowbuf: &mut [f64]) -> f64;
+
+    /// grad phi_i(w) into `out`; returns phi_i(w) from the same pass.
+    fn value_grad(
+        &self,
+        shard: &Shard,
+        w: &[f64],
+        out: &mut [f64],
+        rowbuf: &mut [f64],
+    ) -> f64;
+
+    /// grad phi_i(w) into `out`.
+    fn grad(&self, shard: &Shard, w: &[f64], out: &mut [f64], rowbuf: &mut [f64]) {
+        self.value_grad(shard, w, out, rowbuf);
+    }
+
+    /// Per-row curvature weights `l''(r_j(w))` into `out` (length n).
+    /// The shard Hessian is then `(1/n) X^T diag(out) X + lam I` — assembled
+    /// only implicitly, via [`ShardHvp`].
+    fn hess_weights(&self, shard: &Shard, w: &[f64], out: &mut [f64]);
+
+    /// Smoothness constant of the *unregularized* scalar loss l (an upper
+    /// bound on l''), used for GD step sizes: phi is
+    /// (l_smooth * max_row_norm^2 + lam)-smooth.
+    fn scalar_smoothness(&self) -> f64;
+}
+
+/// Hessian-vector-product operator of a shard objective at a fixed point:
+/// `v -> (1/n) X^T diag(weights) X v + reg * v`.
+///
+/// `reg` is `lam + mu` for DANE local systems, `lam + rho` for ADMM prox
+/// systems, plain `lam` for Newton steps on phi itself. Cost is one
+/// matvec + one rmatvec per apply — O(nnz) on sparse shards, never
+/// materializing a d x d Hessian (the paper's "no Hessians are explicitly
+/// computed!").
+pub struct ShardHvp<'a> {
+    shard: &'a Shard,
+    weights: &'a [f64],
+    reg: f64,
+    ninv: f64,
+    scratch: RefCell<Vec<f64>>,
+}
+
+impl<'a> ShardHvp<'a> {
+    pub fn new(shard: &'a Shard, weights: &'a [f64], reg: f64) -> Self {
+        assert_eq!(weights.len(), shard.n(), "weights length");
+        ShardHvp {
+            shard,
+            weights,
+            reg,
+            ninv: 1.0 / shard.n_effective() as f64,
+            scratch: RefCell::new(vec![0.0; shard.n()]),
+        }
+    }
+}
+
+impl LinearOperator for ShardHvp<'_> {
+    fn dim(&self) -> usize {
+        self.shard.d()
+    }
+
+    fn apply(&self, v: &[f64], out: &mut [f64]) {
+        let mut t = self.scratch.borrow_mut();
+        self.shard.x.matvec(v, &mut t).expect("hvp matvec");
+        for (tj, wj) in t.iter_mut().zip(self.weights) {
+            *tj *= wj * self.ninv;
+        }
+        self.shard.x.rmatvec(&t, out).expect("hvp rmatvec");
+        ops::axpy(self.reg, v, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{DataMatrix, DenseMatrix};
+
+    #[test]
+    fn hvp_matches_dense_hessian() {
+        // weights = 1: HVP must equal ((1/n) X^T X + reg I) v
+        let x = DenseMatrix::from_rows(&[
+            vec![1.0, 2.0],
+            vec![3.0, -1.0],
+            vec![0.0, 1.0],
+        ]);
+        let shard = Shard::new(DataMatrix::Dense(x.clone()), vec![1.0, -1.0, 1.0]);
+        let weights = vec![1.0; 3];
+        let op = ShardHvp::new(&shard, &weights, 0.25);
+        let v = vec![2.0, -3.0];
+        let mut out = vec![0.0; 2];
+        op.apply(&v, &mut out);
+
+        let h = {
+            let mut g = x.gram();
+            for i in 0..2 {
+                for j in 0..2 {
+                    let val = g.get(i, j) / 3.0;
+                    g.set(i, j, val);
+                }
+            }
+            g.add_diag(0.25)
+        };
+        let mut expect = vec![0.0; 2];
+        h.matvec(&v, &mut expect);
+        for i in 0..2 {
+            assert!((out[i] - expect[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn hvp_weighted_rows() {
+        // zero weight on a row removes it from the Hessian entirely
+        let x = DenseMatrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let shard = Shard::new(DataMatrix::Dense(x), vec![1.0, -1.0]);
+        let weights = vec![1.0, 0.0];
+        let op = ShardHvp::new(&shard, &weights, 0.0);
+        let mut out = vec![0.0; 2];
+        op.apply(&[1.0, 1.0], &mut out);
+        assert_eq!(out, vec![0.5, 0.0]); // 1/n = 1/2 on the surviving row
+    }
+}

@@ -1,0 +1,204 @@
+//! `dane` — CLI launcher for the DANE reproduction.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §4):
+//!
+//! ```text
+//! dane run --config exp.json [--csv out.csv]   # any configured experiment
+//! dane quickstart                              # tiny end-to-end smoke run
+//! dane fig2  [--scale K] [--out DIR]           # synthetic DANE-vs-ADMM grid
+//! dane fig3  [--scale K] [--out DIR]           # iterations-to-1e-6 table
+//! dane fig4  [--scale K] [--out DIR]           # test-loss curves, m = 64
+//! dane thm1  [--reps N]                        # OSA lower-bound simulation
+//! dane lemma2                                  # Hessian concentration sweep
+//! ```
+//!
+//! Figure subcommands call the same harness code the benches use
+//! (`dane::harness`), emitting CSV plus a printed paper-shaped table.
+//! `--scale K` divides sample sizes by K for smoke runs. Argument parsing
+//! is in-tree (offline build — no clap); see `Args`.
+
+use dane::config::ExperimentConfig;
+use dane::coordinator::driver::run_experiment;
+use dane::harness;
+use dane::metrics::emit;
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+dane — Communication-efficient distributed optimization (DANE, ICML 2014)
+
+USAGE:
+    dane run --config <exp.json> [--csv <out.csv>] [--quiet]
+    dane quickstart
+    dane fig2   [--scale <K>] [--out <dir>]
+    dane fig3   [--scale <K>] [--out <dir>]
+    dane fig4   [--scale <K>] [--out <dir>]
+    dane thm1   [--reps <N>]
+    dane lemma2
+    dane help
+
+Set DANE_LOG=debug for verbose logging.";
+
+/// Tiny flag parser: --key value pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+    bools: std::collections::HashSet<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut flags = std::collections::HashMap::new();
+        let mut bools = std::collections::HashSet::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    bools.insert(key.to_string());
+                    i += 1;
+                }
+            } else {
+                return Err(format!("unexpected argument {a:?}"));
+            }
+        }
+        Ok(Args { flags, bools })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} must be an integer")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.bools.contains(key)
+    }
+}
+
+/// Minimal stderr logger backing the `log` facade.
+struct StderrLogger {
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{:>5}] {}", record.level(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+fn init_logging() {
+    let level = match std::env::var("DANE_LOG").as_deref() {
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("error") => log::LevelFilter::Error,
+        _ => log::LevelFilter::Info,
+    };
+    let logger = Box::leak(Box::new(StderrLogger { level }));
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+fn main() {
+    init_logging();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(msg) => {
+            eprintln!("error: {msg}");
+            eprintln!("{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<(), String> {
+    let Some(cmd) = argv.first() else {
+        return Err("missing subcommand".into());
+    };
+    let args = Args::parse(&argv[1..])?;
+    let e2s = |e: dane::Error| e.to_string();
+
+    match cmd.as_str() {
+        "run" => {
+            let config = args
+                .get("config")
+                .ok_or("run requires --config <exp.json>")?;
+            let cfg = ExperimentConfig::from_json_file(&PathBuf::from(config))
+                .map_err(e2s)?;
+            let res = run_experiment(&cfg).map_err(e2s)?;
+            if let Some(path) = args.get("csv") {
+                emit::write_csv_file(&res.trace, &PathBuf::from(path)).map_err(e2s)?;
+                println!("wrote {path}");
+            }
+            if !args.has("quiet") {
+                print_trace_tail(&res.trace, 12);
+            }
+            println!("{}", emit::summary_json(&cfg.name, &res.trace).to_string_pretty());
+            if let Some(r) = res.rounds_to_tol {
+                println!("rounds to {:.0e}: {r}", cfg.tol);
+            }
+            Ok(())
+        }
+        "quickstart" => harness::quickstart().map_err(e2s),
+        "fig2" => {
+            let scale = args.get_usize("scale", 1)?.max(1);
+            let out = PathBuf::from(args.get("out").unwrap_or("results/fig2"));
+            harness::fig2(scale, &out).map(|_| ()).map_err(e2s)
+        }
+        "fig3" => {
+            let scale = args.get_usize("scale", 1)?.max(1);
+            let out = PathBuf::from(args.get("out").unwrap_or("results/fig3"));
+            harness::fig3(scale, &out).map(|_| ()).map_err(e2s)
+        }
+        "fig4" => {
+            let scale = args.get_usize("scale", 1)?.max(1);
+            let out = PathBuf::from(args.get("out").unwrap_or("results/fig4"));
+            harness::fig4(scale, &out).map(|_| ()).map_err(e2s)
+        }
+        "thm1" => {
+            let reps = args.get_usize("reps", 200)?.max(1);
+            harness::thm1(reps).map(|_| ()).map_err(e2s)
+        }
+        "lemma2" => harness::lemma2().map(|_| ()).map_err(e2s),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand {other:?}")),
+    }
+}
+
+fn print_trace_tail(trace: &dane::metrics::Trace, k: usize) {
+    println!(
+        "{:>6} {:>14} {:>14} {:>12} {:>8}",
+        "round", "objective", "subopt", "gradnorm", "comm"
+    );
+    let skip = trace.rows.len().saturating_sub(k);
+    for r in trace.rows.iter().skip(skip) {
+        println!(
+            "{:>6} {:>14.6e} {:>14} {:>12} {:>8}",
+            r.round,
+            r.objective,
+            r.suboptimality.map(|s| format!("{s:.3e}")).unwrap_or_default(),
+            r.grad_norm.map(|g| format!("{g:.3e}")).unwrap_or_default(),
+            r.comm_rounds,
+        );
+    }
+}

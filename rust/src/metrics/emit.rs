@@ -1,0 +1,107 @@
+//! Trace emission: CSV for plotting, JSON summaries for EXPERIMENTS.md.
+
+use super::trace::Trace;
+use crate::util::Json;
+use crate::Result;
+use std::io::Write;
+
+/// CSV header matching [`super::TraceRow`] field order.
+pub const CSV_HEADER: &str = "round,objective,suboptimality,grad_norm,test_loss,comm_rounds,comm_bytes,comm_modeled_seconds,elapsed_seconds";
+
+/// Write a trace as CSV.
+pub fn write_csv<W: Write>(trace: &Trace, mut w: W) -> Result<()> {
+    writeln!(w, "{CSV_HEADER}")?;
+    for r in &trace.rows {
+        writeln!(
+            w,
+            "{},{:.17e},{},{},{},{},{},{:.6e},{:.6}",
+            r.round,
+            r.objective,
+            opt(r.suboptimality),
+            opt(r.grad_norm),
+            opt(r.test_loss),
+            r.comm_rounds,
+            r.comm_bytes,
+            r.comm_modeled_seconds,
+            r.elapsed_seconds,
+        )?;
+    }
+    Ok(())
+}
+
+fn opt(v: Option<f64>) -> String {
+    v.map(|x| format!("{x:.17e}")).unwrap_or_default()
+}
+
+/// Write a trace CSV to a file path, creating parent dirs.
+pub fn write_csv_file(trace: &Trace, path: &std::path::Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let f = std::fs::File::create(path)?;
+    write_csv(trace, std::io::BufWriter::new(f))
+}
+
+/// Compact JSON summary of a run (EXPERIMENTS.md fodder).
+pub fn summary_json(name: &str, trace: &Trace) -> Json {
+    let last = trace.rows.last();
+    let num_or_null = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("rounds", Json::num(trace.len().saturating_sub(1) as f64)),
+        ("final_objective", num_or_null(last.map(|r| r.objective))),
+        ("final_suboptimality", num_or_null(trace.last_suboptimality())),
+        ("comm_rounds", num_or_null(last.map(|r| r.comm_rounds as f64))),
+        ("comm_bytes", num_or_null(last.map(|r| r.comm_bytes as f64))),
+        (
+            "comm_modeled_seconds",
+            num_or_null(last.map(|r| r.comm_modeled_seconds)),
+        ),
+        ("elapsed_seconds", num_or_null(last.map(|r| r.elapsed_seconds))),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommStats;
+
+    fn sample() -> Trace {
+        let mut t = Trace::new();
+        let comm = CommStats { rounds: 2, bytes: 128, modeled_seconds: 1e-3 };
+        t.push(0, 1.5, Some(0.5), None, Some(0.7), &comm, 0.01);
+        t
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut buf = Vec::new();
+        write_csv(&sample(), &mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        let mut lines = s.lines();
+        assert_eq!(lines.next().unwrap(), CSV_HEADER);
+        let row = lines.next().unwrap();
+        assert!(row.starts_with("0,"));
+        assert!(row.contains(",128,"));
+        // empty optional renders as empty field
+        assert!(row.contains(",,"));
+    }
+
+    #[test]
+    fn summary_shape() {
+        let j = summary_json("t", &sample());
+        assert_eq!(j.get("name").unwrap().as_str(), Some("t"));
+        assert_eq!(j.get("comm_bytes").unwrap().as_f64(), Some(128.0));
+        let s = j.get("final_suboptimality").unwrap().as_f64().unwrap();
+        assert!((s - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn csv_file_roundtrip() {
+        let dir = crate::util::tempdir::TempDir::new("emit").unwrap();
+        let path = dir.path().join("sub/t.csv");
+        write_csv_file(&sample(), &path).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.starts_with(CSV_HEADER));
+    }
+}

@@ -1,0 +1,12 @@
+//! Convergence traces and emission (CSV / JSON).
+//!
+//! Every algorithm run produces a [`Trace`]: one row per communication
+//! round with the objective value, suboptimality against the reference
+//! ERM, gradient norm, optional test loss, cumulative communication
+//! stats and wallclock. The bench harnesses turn traces into exactly the
+//! rows/series the paper's figures report.
+
+pub mod emit;
+pub mod trace;
+
+pub use trace::{Trace, TraceRow};

@@ -1,0 +1,142 @@
+//! Per-round convergence records.
+
+use crate::comm::CommStats;
+
+/// One communication round's snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRow {
+    /// Round index (0 = initial point, before any communication).
+    pub round: usize,
+    /// phi(w) at the current iterate.
+    pub objective: f64,
+    /// phi(w) - phi(w_hat), when a reference value is known.
+    pub suboptimality: Option<f64>,
+    /// ||grad phi(w)||.
+    pub grad_norm: Option<f64>,
+    /// Test-set loss (fig. 4), when evaluated.
+    pub test_loss: Option<f64>,
+    /// Cumulative communication rounds consumed by the *algorithm*.
+    pub comm_rounds: u64,
+    /// Cumulative bytes.
+    pub comm_bytes: u64,
+    /// Cumulative modeled network seconds.
+    pub comm_modeled_seconds: f64,
+    /// Wallclock seconds since the run started.
+    pub elapsed_seconds: f64,
+}
+
+/// A full run's trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub rows: Vec<TraceRow>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace { rows: Vec::new() }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn push(
+        &mut self,
+        round: usize,
+        objective: f64,
+        suboptimality: Option<f64>,
+        grad_norm: Option<f64>,
+        test_loss: Option<f64>,
+        comm: &CommStats,
+        elapsed_seconds: f64,
+    ) {
+        self.rows.push(TraceRow {
+            round,
+            objective,
+            suboptimality,
+            grad_norm,
+            test_loss,
+            comm_rounds: comm.rounds,
+            comm_bytes: comm.bytes,
+            comm_modeled_seconds: comm.modeled_seconds,
+            elapsed_seconds,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Suboptimality series (None entries skipped).
+    pub fn suboptimality(&self) -> Vec<f64> {
+        self.rows.iter().filter_map(|r| r.suboptimality).collect()
+    }
+
+    pub fn last_suboptimality(&self) -> Option<f64> {
+        self.rows.iter().rev().find_map(|r| r.suboptimality)
+    }
+
+    pub fn last_objective(&self) -> Option<f64> {
+        self.rows.last().map(|r| r.objective)
+    }
+
+    /// First round index whose suboptimality is below `tol`
+    /// (the paper's fig. 3 "iterations to reach < 1e-6" metric).
+    pub fn rounds_to_tol(&self, tol: f64) -> Option<usize> {
+        self.rows
+            .iter()
+            .find(|r| r.suboptimality.map(|s| s < tol).unwrap_or(false))
+            .map(|r| r.round)
+    }
+
+    /// Per-round linear contraction factors of the suboptimality
+    /// (Theorem-2 diagnostics): ratio of consecutive suboptimalities.
+    pub fn contraction_factors(&self) -> Vec<f64> {
+        let s = self.suboptimality();
+        s.windows(2)
+            .filter(|w| w[0] > 0.0 && w[1] >= 0.0)
+            .map(|w| w[1] / w[0])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        let mut t = Trace::new();
+        let mut comm = CommStats::default();
+        for (i, s) in [1.0, 0.1, 0.01, 1e-7].iter().enumerate() {
+            comm.rounds = i as u64;
+            t.push(i, 5.0 + s, Some(*s), Some(s.sqrt()), None, &comm, 0.1 * i as f64);
+        }
+        t
+    }
+
+    #[test]
+    fn rounds_to_tol_finds_first_crossing() {
+        let t = sample();
+        assert_eq!(t.rounds_to_tol(1e-6), Some(3));
+        assert_eq!(t.rounds_to_tol(0.5), Some(1));
+        assert_eq!(t.rounds_to_tol(1e-12), None);
+    }
+
+    #[test]
+    fn contraction_factors_are_ratios() {
+        let t = sample();
+        let f = t.contraction_factors();
+        assert!((f[0] - 0.1).abs() < 1e-12);
+        assert!((f[1] - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn last_accessors() {
+        let t = sample();
+        assert_eq!(t.last_suboptimality(), Some(1e-7));
+        assert_eq!(t.len(), 4);
+        assert!(!t.is_empty());
+        assert!(Trace::new().last_suboptimality().is_none());
+    }
+}

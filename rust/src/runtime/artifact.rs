@@ -1,0 +1,277 @@
+//! Manifest-driven artifact registry.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing
+//! every lowered entry point (name, file, input shapes, output arity,
+//! static shard shape). The registry parses the manifest (through the
+//! in-tree JSON layer), compiles each HLO text module on the shared PJRT
+//! CPU client **lazily** (first use), and memoizes the loaded
+//! executables — one compile per (entry, shape) per process.
+
+use crate::util::Json;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One tensor's shape/dtype in the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// Static shard shape an entry was specialized to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StaticShape {
+    pub n: usize,
+    pub d: usize,
+}
+
+/// One lowered entry point.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub n_outputs: usize,
+    pub static_shape: StaticShape,
+    pub sha256: String,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    pub return_tuple: bool,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let format = v.req("format")?.as_str().unwrap_or_default().to_string();
+        let return_tuple = v.req("return_tuple")?.as_bool().unwrap_or(false);
+        let mut entries = Vec::new();
+        for e in v
+            .req("entries")?
+            .as_array()
+            .ok_or_else(|| Error::Runtime("manifest entries must be an array".into()))?
+        {
+            let name = e.req("name")?.as_str().unwrap_or_default().to_string();
+            let file = e.req("file")?.as_str().unwrap_or_default().to_string();
+            let n_outputs = e
+                .req("n_outputs")?
+                .as_usize()
+                .ok_or_else(|| Error::Runtime(format!("{name}: bad n_outputs")))?;
+            let st = e.req("static")?;
+            let static_shape = StaticShape {
+                n: st.req("n")?.as_usize().unwrap_or(0),
+                d: st.req("d")?.as_usize().unwrap_or(0),
+            };
+            let mut inputs = Vec::new();
+            if let Some(arr) = e.get("inputs").and_then(|x| x.as_array()) {
+                for spec in arr {
+                    let shape = spec
+                        .get("shape")
+                        .and_then(|s| s.as_array())
+                        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                        .unwrap_or_default();
+                    let dtype = spec
+                        .get("dtype")
+                        .and_then(|d| d.as_str())
+                        .unwrap_or("f32")
+                        .to_string();
+                    inputs.push(TensorSpec { shape, dtype });
+                }
+            }
+            let sha256 = e
+                .get("sha256")
+                .and_then(|x| x.as_str())
+                .unwrap_or_default()
+                .to_string();
+            entries.push(ManifestEntry {
+                name,
+                file,
+                inputs,
+                n_outputs,
+                static_shape,
+                sha256,
+            });
+        }
+        Ok(Manifest { format, return_tuple, entries })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let m = Self::parse(&text)?;
+        if m.format != "hlo-text" {
+            return Err(Error::Runtime(format!(
+                "unsupported artifact format {:?}",
+                m.format
+            )));
+        }
+        if !m.return_tuple {
+            return Err(Error::Runtime(
+                "manifest must declare return_tuple=true".into(),
+            ));
+        }
+        Ok(m)
+    }
+
+    /// The smallest shard shape of family `family` that fits (n, d).
+    /// Entries are named `{family}_n{n}_d{d}` by aot.py.
+    pub fn fit_shape(&self, family: &str, n: usize, d: usize) -> Option<StaticShape> {
+        let prefix = format!("{family}_n");
+        let mut best: Option<StaticShape> = None;
+        for e in &self.entries {
+            if !e.name.starts_with(&prefix) {
+                continue;
+            }
+            let s = e.static_shape;
+            if s.n >= n && s.d >= d {
+                let better = match best {
+                    None => true,
+                    Some(b) => (s.n * s.d) < (b.n * b.d),
+                };
+                if better {
+                    best = Some(s);
+                }
+            }
+        }
+        best
+    }
+}
+
+/// Compiled-executable registry over one PJRT client.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactRegistry {
+    /// Open the registry over `dir` (usually `artifacts/`). Compiles
+    /// nothing yet.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "artifact registry opened: platform={} entries={}",
+            client.platform_name(),
+            manifest.entries.len()
+        );
+        Ok(ArtifactRegistry {
+            dir: dir.to_path_buf(),
+            client,
+            manifest,
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ManifestEntry> {
+        self.manifest
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| {
+                Error::Runtime(format!("no artifact entry named {name:?}"))
+            })
+    }
+
+    /// The smallest canonical shard shape that fits (n, d) for `family`.
+    pub fn fit_shape(&self, family: &str, n: usize, d: usize) -> Result<StaticShape> {
+        self.manifest.fit_shape(family, n, d).ok_or_else(|| {
+            Error::Runtime(format!(
+                "no {family} artifact fits shard {n}x{d}; re-run aot.py with a larger shape"
+            ))
+        })
+    }
+
+    /// Get (compiling on first use) the executable for an entry name.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let map = self.compiled.lock().unwrap();
+            if let Some(exe) = map.get(name) {
+                return Ok(exe.clone());
+            }
+        }
+        let entry = self.entry(name)?.clone();
+        let path = self.dir.join(&entry.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| {
+                Error::Runtime(format!("non-utf8 path {}", path.display()))
+            })?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        log::info!("compiled artifact {name} in {} ms", t0.elapsed().as_millis());
+        let mut map = self.compiled.lock().unwrap();
+        Ok(map.entry(name.to_string()).or_insert(exe).clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_json() -> &'static str {
+        r#"{
+          "format": "hlo-text",
+          "return_tuple": true,
+          "entries": [
+            {"name": "ridge_grad_n256_d64", "file": "ridge_grad_n256_d64.hlo.txt",
+             "inputs": [{"shape": [256, 64], "dtype": "f32"}],
+             "n_outputs": 2, "static": {"n": 256, "d": 64}},
+            {"name": "ridge_grad_n2048_d512", "file": "ridge_grad_n2048_d512.hlo.txt",
+             "inputs": [{"shape": [2048, 512], "dtype": "f32"}],
+             "n_outputs": 2, "static": {"n": 2048, "d": 512}}
+          ]
+        }"#
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(manifest_json()).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.entries[0].static_shape, StaticShape { n: 256, d: 64 });
+        assert_eq!(m.entries[0].inputs[0].shape, vec![256, 64]);
+        assert!(m.return_tuple);
+    }
+
+    #[test]
+    fn fit_shape_picks_smallest_fitting() {
+        let m = Manifest::parse(manifest_json()).unwrap();
+        assert_eq!(
+            m.fit_shape("ridge_grad", 100, 50),
+            Some(StaticShape { n: 256, d: 64 })
+        );
+        assert_eq!(
+            m.fit_shape("ridge_grad", 300, 64),
+            Some(StaticShape { n: 2048, d: 512 })
+        );
+        assert_eq!(m.fit_shape("ridge_grad", 5000, 64), None);
+        assert_eq!(m.fit_shape("hinge_grad_loss", 10, 10), None);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"format": "hlo-text"}"#).is_err());
+        assert!(Manifest::parse("[]").is_err());
+    }
+}

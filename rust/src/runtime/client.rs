@@ -1,0 +1,140 @@
+//! Per-worker PJRT session: padded shard buffers + typed entry wrappers.
+//!
+//! A [`PjrtSession`] is created once per worker. It pads the worker's
+//! shard to the smallest canonical artifact shape (zero rows / zero
+//! labels are provably inert — see the loss modules and pytest), uploads
+//! the shard literals once, and then serves the two hot-path calls:
+//! gradient(+loss) and the DANE local solve. Hyperparameters travel as
+//! rank-0 literals, so the same compiled executable serves every
+//! (eta, mu, lam) setting.
+
+use super::artifact::ArtifactRegistry;
+use super::literal::{literal_to_scalar, literal_to_vec, mat_literal, scalar_literal, vec_literal};
+use crate::data::Shard;
+use crate::loss::Objective;
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// Which artifact family a loss maps to.
+fn families_for(obj: &dyn Objective) -> Result<(&'static str, &'static str)> {
+    match obj.name() {
+        "ridge" => Ok(("ridge_grad", "ridge_local_solve")),
+        "smooth_hinge" => Ok(("hinge_grad_loss", "hinge_local_solve")),
+        other => Err(Error::Runtime(format!(
+            "no AOT artifacts for loss {other:?} (native backend only)"
+        ))),
+    }
+}
+
+/// One worker's handle onto the artifact registry.
+pub struct PjrtSession {
+    registry: Arc<ArtifactRegistry>,
+    /// Padded shard literals, uploaded once.
+    x_lit: xla::Literal,
+    y_lit: xla::Literal,
+    n_pad: usize,
+    d_pad: usize,
+    n_eff: usize,
+    d: usize,
+}
+
+impl PjrtSession {
+    /// Build a session for one shard. Picks the smallest artifact shape
+    /// that fits and pads the shard into it.
+    pub fn for_shard(
+        registry: Arc<ArtifactRegistry>,
+        shard: &Shard,
+        obj: &dyn Objective,
+    ) -> Result<Self> {
+        let (grad_family, _) = families_for(obj)?;
+        let fit = registry.fit_shape(grad_family, shard.n(), shard.d())?;
+        let (n_pad, d_pad) = (fit.n, fit.d);
+
+        // Pad row-major X into (n_pad, d_pad); padding stays zero.
+        let dense = shard.x.to_dense();
+        let mut xbuf = vec![0.0f64; n_pad * d_pad];
+        for i in 0..shard.n() {
+            xbuf[i * d_pad..i * d_pad + shard.d()].copy_from_slice(dense.row(i));
+        }
+        let mut ybuf = vec![0.0f64; n_pad];
+        ybuf[..shard.n()].copy_from_slice(&shard.y);
+
+        Ok(PjrtSession {
+            registry,
+            x_lit: mat_literal(&xbuf, n_pad, d_pad)?,
+            y_lit: vec_literal(&ybuf),
+            n_pad,
+            d_pad,
+            n_eff: shard.n_effective(),
+            d: shard.d(),
+        })
+    }
+
+    fn entry_name(&self, family: &str) -> String {
+        format!("{family}_n{}_d{}", self.n_pad, self.d_pad)
+    }
+
+    /// Pad a d-vector to d_pad.
+    fn pad_vec(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.d_pad];
+        out[..v.len()].copy_from_slice(v);
+        out
+    }
+
+    /// grad phi_i(w) into `out`; returns phi_i(w).
+    pub fn grad(
+        &self,
+        _shard: &Shard,
+        obj: &dyn Objective,
+        w: &[f64],
+        out: &mut [f64],
+    ) -> Result<f64> {
+        let (grad_family, _) = families_for(obj)?;
+        let exe = self.registry.executable(&self.entry_name(grad_family))?;
+        let w_lit = vec_literal(&self.pad_vec(w));
+        let lam = scalar_literal(obj.lambda());
+        let ninv = scalar_literal(1.0 / self.n_eff as f64);
+        let args: [&xla::Literal; 5] = [&self.x_lit, &self.y_lit, &w_lit, &lam, &ninv];
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (g_lit, loss_lit) = result.to_tuple2()?;
+        let g = literal_to_vec(&g_lit)?;
+        out.copy_from_slice(&g[..self.d]);
+        literal_to_scalar(&loss_lit)
+    }
+
+    /// DANE local solve (paper eq. 13/16) through the AOT artifact.
+    pub fn dane_local_solve(
+        &self,
+        _shard: &Shard,
+        obj: &dyn Objective,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+    ) -> Result<Vec<f64>> {
+        let (_, solve_family) = families_for(obj)?;
+        let exe = self.registry.executable(&self.entry_name(solve_family))?;
+        let wp = vec_literal(&self.pad_vec(w_prev));
+        let gl = vec_literal(&self.pad_vec(g));
+        let eta_l = scalar_literal(eta);
+        let mu_l = scalar_literal(mu);
+        let lam = scalar_literal(obj.lambda());
+        let ninv = scalar_literal(1.0 / self.n_eff as f64);
+        // ridge_local_solve(x, w_prev, g, eta, mu, lam, ninv)
+        // hinge_local_solve(x, y, w_prev, g, eta, mu, lam, ninv)
+        let args: Vec<&xla::Literal> = if solve_family == "ridge_local_solve" {
+            vec![&self.x_lit, &wp, &gl, &eta_l, &mu_l, &lam, &ninv]
+        } else {
+            vec![&self.x_lit, &self.y_lit, &wp, &gl, &eta_l, &mu_l, &lam, &ninv]
+        };
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let w_lit = result.to_tuple1()?;
+        let w = literal_to_vec(&w_lit)?;
+        Ok(w[..self.d].to_vec())
+    }
+
+    /// Padded shape diagnostics.
+    pub fn padded_shape(&self) -> (usize, usize) {
+        (self.n_pad, self.d_pad)
+    }
+}

@@ -1,0 +1,78 @@
+//! f64-slice <-> f32 PJRT literal marshalling.
+//!
+//! The optimization stack is f64 end to end (conditioning of the paper's
+//! small-lambda regimes demands it); the AOT artifacts are f32 (the TPU
+//! target's natural width). Conversions happen only at the PJRT boundary;
+//! the native/pjrt agreement tests pin the acceptable drift.
+
+use crate::{Error, Result};
+
+/// Build a rank-1 f32 literal from an f64 slice.
+pub fn vec_literal(v: &[f64]) -> xla::Literal {
+    let f32s: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+    xla::Literal::vec1(&f32s)
+}
+
+/// Build a rank-2 (rows x cols) f32 literal from a row-major f64 slice.
+pub fn mat_literal(data: &[f64], rows: usize, cols: usize) -> Result<xla::Literal> {
+    if data.len() != rows * cols {
+        return Err(Error::Shape(format!(
+            "mat_literal: {} values for {rows}x{cols}",
+            data.len()
+        )));
+    }
+    let f32s: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+    Ok(xla::Literal::vec1(&f32s).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Rank-0 f32 scalar literal.
+pub fn scalar_literal(x: f64) -> xla::Literal {
+    xla::Literal::scalar(x as f32)
+}
+
+/// Read a rank-1 (or rank-0) f32 literal back into f64.
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f64>> {
+    let f32s: Vec<f32> = lit.to_vec()?;
+    Ok(f32s.into_iter().map(f64::from).collect())
+}
+
+/// Read a single f32 element (rank-0 or length-1) literal.
+pub fn literal_to_scalar(lit: &xla::Literal) -> Result<f64> {
+    let v = literal_to_vec(lit)?;
+    v.first().copied().ok_or_else(|| {
+        Error::Runtime("expected scalar literal, got empty".into())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_roundtrip() {
+        let v = vec![1.5, -2.25, 0.0];
+        let lit = vec_literal(&v);
+        assert_eq!(literal_to_vec(&lit).unwrap(), v);
+    }
+
+    #[test]
+    fn mat_shape_checked() {
+        assert!(mat_literal(&[1.0, 2.0, 3.0], 2, 2).is_err());
+        let lit = mat_literal(&[1.0, 2.0, 3.0, 4.0], 2, 2).unwrap();
+        assert_eq!(lit.element_count(), 4);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = scalar_literal(3.5);
+        assert_eq!(literal_to_scalar(&lit).unwrap(), 3.5);
+    }
+
+    #[test]
+    fn f32_quantization_is_expected() {
+        let v = vec![1.0 + 1e-12];
+        let lit = vec_literal(&v);
+        let back = literal_to_vec(&lit).unwrap();
+        assert_eq!(back[0], 1.0); // dropped below f32 resolution
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime bridge: load `artifacts/*.hlo.txt`, compile once on the
+//! CPU PJRT client, execute from the rust hot path.
+//!
+//! The interchange contract (DESIGN.md §10): HLO *text* (jax >= 0.5 protos
+//! carry 64-bit ids the image's xla_extension 0.5.1 rejects; the text
+//! parser reassigns them), `return_tuple=True` on every entry, f32
+//! throughout, shapes specialized to the manifest's canonical shards.
+//! Rust zero-pads each worker's shard to the artifact shape once at
+//! session construction; padded rows carry x = 0, y = 0 and contribute
+//! nothing to any output (tested both in pytest and here).
+
+pub mod artifact;
+pub mod client;
+pub mod literal;
+
+pub use artifact::{ArtifactRegistry, Manifest, ManifestEntry};
+pub use client::PjrtSession;

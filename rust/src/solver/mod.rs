@@ -1,0 +1,13 @@
+//! Local and reference solvers.
+//!
+//! [`newton_cg`] is the workhorse minimizer for every composite problem
+//! the system produces — DANE local steps (paper eq. 13), ADMM proximal
+//! subproblems, per-machine ERMs for one-shot averaging, and the
+//! high-precision reference minimizer `erm::solve` that anchors every
+//! suboptimality axis in the figures.
+
+pub mod erm;
+pub mod newton_cg;
+
+pub use erm::solve as erm_solve;
+pub use newton_cg::{minimize, Composite, NewtonCgOptions, NewtonCgReport};

@@ -1,0 +1,158 @@
+//! Micro-benchmark harness (criterion-style, in-tree).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! [`Bencher::bench`] for timing-sensitive measurements and print the
+//! paper-shaped tables for the figure harnesses. Reporting: median +
+//! interquartile range over sample batches, with warmup — the same
+//! methodology criterion uses, minus the statistical machinery an
+//! offline build can't pull in.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark runner with shared settings.
+pub struct Bencher {
+    /// Target time to spend measuring each benchmark.
+    pub measure_time: Duration,
+    /// Warmup time before measurement.
+    pub warmup_time: Duration,
+    /// Max samples (batches) collected.
+    pub max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            measure_time: Duration::from_secs(2),
+            warmup_time: Duration::from_millis(300),
+            max_samples: 60,
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub median: Duration,
+    pub p25: Duration,
+    pub p75: Duration,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl BenchStats {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.median.as_nanos() as f64 / self.iters_per_sample as f64
+    }
+}
+
+impl Bencher {
+    /// Time `f`, batching iterations so each sample lasts >= ~1ms, and
+    /// print a criterion-style line. Returns the stats for programmatic
+    /// use (EXPERIMENTS.md tables).
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        // Warmup + batch-size calibration.
+        let mut iters: u64 = 1;
+        let warmup_end = Instant::now() + self.warmup_time;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed();
+            if Instant::now() >= warmup_end && dt >= Duration::from_micros(500) {
+                // aim for ~2ms per sample
+                let scale = (2_000_000.0 / dt.as_nanos().max(1) as f64
+                    * iters as f64)
+                    .clamp(1.0, 1e9);
+                iters = scale as u64;
+                break;
+            }
+            if dt < Duration::from_micros(500) {
+                iters = iters.saturating_mul(2);
+            }
+        }
+
+        // Measurement.
+        let mut samples: Vec<Duration> = Vec::new();
+        let end = Instant::now() + self.measure_time;
+        while Instant::now() < end && samples.len() < self.max_samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t0.elapsed());
+        }
+        if samples.is_empty() {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t0.elapsed());
+        }
+        samples.sort_unstable();
+        let stats = BenchStats {
+            median: samples[samples.len() / 2],
+            p25: samples[samples.len() / 4],
+            p75: samples[samples.len() * 3 / 4],
+            iters_per_sample: iters,
+            samples: samples.len(),
+        };
+        println!(
+            "bench {name:<44} {:>12}/iter  [{} .. {}]  ({} samples x {} iters)",
+            fmt_ns(stats.per_iter_ns()),
+            fmt_ns(stats.p25.as_nanos() as f64 / iters as f64),
+            fmt_ns(stats.p75.as_nanos() as f64 / iters as f64),
+            stats.samples,
+            stats.iters_per_sample,
+        );
+        stats
+    }
+}
+
+/// Human duration from nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let b = Bencher {
+            measure_time: Duration::from_millis(50),
+            warmup_time: Duration::from_millis(5),
+            max_samples: 10,
+        };
+        let mut acc = 0u64;
+        let stats = b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(stats.samples >= 1);
+        assert!(stats.per_iter_ns() >= 0.0);
+        assert!(stats.p25 <= stats.p75);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e3).ends_with("us"));
+        assert!(fmt_ns(5e6).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

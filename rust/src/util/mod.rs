@@ -1,0 +1,17 @@
+//! In-tree substrates for an offline build.
+//!
+//! The build environment vendors only the xla bridge and a handful of
+//! leaf crates, so the usual ecosystem pieces are implemented here from
+//! scratch (DESIGN.md §5): a seeded PRNG with the distributions the data
+//! generators need, a JSON parser/serializer for configs + the artifact
+//! manifest, a micro-benchmark harness with criterion-style reporting,
+//! and a property-test driver.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod tempdir;
+
+pub use json::Json;
+pub use rng::Rng64;

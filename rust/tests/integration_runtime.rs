@@ -1,0 +1,215 @@
+//! PJRT backend integration: the AOT artifacts (jax/Pallas, lowered at
+//! build time by `make artifacts`) must agree with the native rust
+//! implementations on the same shards, and a full DANE run on the PJRT
+//! backend must converge like the native one.
+//!
+//! Requires `artifacts/` to exist — the Makefile builds it before tests.
+
+use dane::config::LossKind;
+use dane::coordinator::dane as dane_algo;
+use dane::coordinator::{Cluster, RunCtx, SerialCluster};
+use dane::data::{shard_dataset, synthetic_fig2};
+use dane::linalg::ops;
+use dane::loss::{make_objective, Objective, Ridge, SmoothHinge};
+use dane::runtime::{ArtifactRegistry, PjrtSession};
+use dane::solver::erm_solve;
+use dane::worker::{Worker, WorkerBackend};
+use std::path::Path;
+use std::sync::Arc;
+
+fn registry() -> Arc<ArtifactRegistry> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Arc::new(
+        ArtifactRegistry::open(&dir)
+            .expect("artifacts/ missing — run `make artifacts` first"),
+    )
+}
+
+/// f32 path vs f64 path: tolerances are relative, driven by f32 eps.
+fn assert_close(a: &[f64], b: &[f64], rtol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    let scale = ops::norm2(b).max(1.0);
+    for i in 0..a.len() {
+        assert!(
+            (a[i] - b[i]).abs() <= rtol * scale,
+            "{what}[{i}]: {} vs {} (scale {scale})",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+#[test]
+fn manifest_lists_all_entry_families() {
+    let reg = registry();
+    let names: Vec<&str> = reg
+        .manifest()
+        .entries
+        .iter()
+        .map(|e| e.name.as_str())
+        .collect();
+    for family in [
+        "ridge_grad",
+        "ridge_local_solve",
+        "hinge_grad_loss",
+        "hinge_local_solve",
+    ] {
+        assert!(
+            names.iter().any(|n| n.starts_with(family)),
+            "missing {family} in {names:?}"
+        );
+    }
+}
+
+#[test]
+fn ridge_grad_pjrt_matches_native() {
+    let reg = registry();
+    let ds = synthetic_fig2(200, 48, 0.005, 3); // pads to 256 x 64
+    let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+    let shards = shard_dataset(&ds, 2, 7);
+    for shard in &shards {
+        let session =
+            PjrtSession::for_shard(reg.clone(), shard, obj.as_ref()).unwrap();
+        assert_eq!(session.padded_shape(), (256, 64));
+
+        let w: Vec<f64> = (0..48).map(|i| 0.02 * i as f64 - 0.5).collect();
+        let mut g_pjrt = vec![0.0; 48];
+        let loss_pjrt = session.grad(shard, obj.as_ref(), &w, &mut g_pjrt).unwrap();
+
+        let mut g_native = vec![0.0; 48];
+        let mut rowbuf = vec![0.0; shard.n()];
+        let loss_native = obj.value_grad(shard, &w, &mut g_native, &mut rowbuf);
+
+        assert_close(&g_pjrt, &g_native, 1e-4, "ridge grad");
+        assert!(
+            (loss_pjrt - loss_native).abs() <= 1e-4 * loss_native.abs().max(1.0),
+            "{loss_pjrt} vs {loss_native}"
+        );
+    }
+}
+
+#[test]
+fn hinge_grad_pjrt_matches_native() {
+    let reg = registry();
+    let ds = dane::data::covtype_like(180, 16, 5); // d=54 -> pads to 256x64
+    let obj: Arc<dyn Objective> = Arc::new(SmoothHinge::new(1e-3));
+    let shards = shard_dataset(&ds, 2, 9);
+    for shard in &shards {
+        let session =
+            PjrtSession::for_shard(reg.clone(), shard, obj.as_ref()).unwrap();
+        let w: Vec<f64> =
+            (0..54).map(|i| ((i * 7) % 13) as f64 * 0.01 - 0.05).collect();
+        let mut g_pjrt = vec![0.0; 54];
+        let loss_pjrt = session.grad(shard, obj.as_ref(), &w, &mut g_pjrt).unwrap();
+
+        let mut g_native = vec![0.0; 54];
+        let mut rowbuf = vec![0.0; shard.n()];
+        let loss_native = obj.value_grad(shard, &w, &mut g_native, &mut rowbuf);
+
+        assert_close(&g_pjrt, &g_native, 1e-4, "hinge grad");
+        assert!((loss_pjrt - loss_native).abs() <= 1e-4 * loss_native.max(1.0));
+    }
+}
+
+#[test]
+fn ridge_dane_local_solve_pjrt_matches_native() {
+    let reg = registry();
+    let ds = synthetic_fig2(220, 40, 0.005, 11);
+    let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+    let shards = shard_dataset(&ds, 2, 3);
+    let shard = &shards[0];
+
+    // global gradient from the full data at w_prev
+    let w_prev: Vec<f64> = (0..40).map(|i| 0.01 * i as f64).collect();
+    let all = ds.as_single_shard();
+    let mut g = vec![0.0; 40];
+    let mut rowbuf = vec![0.0; all.n()];
+    obj.value_grad(&all, &w_prev, &mut g, &mut rowbuf);
+
+    let session = PjrtSession::for_shard(reg.clone(), shard, obj.as_ref()).unwrap();
+    let w_pjrt = session
+        .dane_local_solve(shard, obj.as_ref(), &w_prev, &g, 1.0, 0.005)
+        .unwrap();
+
+    let mut worker = Worker::new(0, shard.clone(), obj.clone());
+    let w_native = worker.dane_local_solve(&w_prev, &g, 1.0, 0.005).unwrap();
+
+    assert_close(&w_pjrt, &w_native, 5e-4, "ridge dane local solve");
+}
+
+#[test]
+fn hinge_dane_local_solve_pjrt_matches_native() {
+    let reg = registry();
+    let ds = dane::data::covtype_like(200, 16, 7);
+    let lam = 1e-2;
+    let obj: Arc<dyn Objective> = Arc::new(SmoothHinge::new(lam));
+    let shards = shard_dataset(&ds, 2, 5);
+    let shard = &shards[0];
+
+    let w_prev = vec![0.05; 54];
+    let all = ds.as_single_shard();
+    let mut g = vec![0.0; 54];
+    let mut rowbuf = vec![0.0; all.n()];
+    obj.value_grad(&all, &w_prev, &mut g, &mut rowbuf);
+
+    let session = PjrtSession::for_shard(reg.clone(), shard, obj.as_ref()).unwrap();
+    let w_pjrt = session
+        .dane_local_solve(shard, obj.as_ref(), &w_prev, &g, 1.0, 3.0 * lam)
+        .unwrap();
+
+    let mut worker = Worker::new(0, shard.clone(), obj.clone());
+    let w_native = worker.dane_local_solve(&w_prev, &g, 1.0, 3.0 * lam).unwrap();
+
+    // Newton-CG on f32 vs f64: looser but still tight in relative terms.
+    assert_close(&w_pjrt, &w_native, 5e-3, "hinge dane local solve");
+}
+
+#[test]
+fn full_dane_run_on_pjrt_backend_converges() {
+    let reg = registry();
+    let ds = synthetic_fig2(240, 32, 0.005, 21);
+    let lam = dane::data::synthetic::fig2_lambda(0.005);
+    let obj = make_objective(LossKind::Ridge, lam);
+    let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
+
+    let mut cluster = SerialCluster::new(&ds, obj, 2, 5);
+    cluster.use_pjrt(reg).unwrap();
+    // f32 artifacts floor the reachable suboptimality around 1e-6..1e-7.
+    let ctx = RunCtx::new(12).with_reference(phi_star).with_tol(5e-6);
+    let res = dane_algo::run(&mut cluster, &dane_algo::DaneOptions::default(), &ctx);
+    assert!(
+        res.converged,
+        "pjrt DANE should reach 5e-6: {:?}",
+        res.trace.suboptimality()
+    );
+    assert_eq!(cluster.m(), 2);
+}
+
+#[test]
+fn pjrt_worker_backend_grad_through_worker_api() {
+    let reg = registry();
+    let ds = synthetic_fig2(100, 20, 0.005, 31);
+    let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+    let shards = shard_dataset(&ds, 1, 1);
+    let shard = shards.into_iter().next().unwrap();
+    let session = PjrtSession::for_shard(reg, &shard, obj.as_ref()).unwrap();
+    let mut worker = Worker::new(0, shard.clone(), obj.clone())
+        .with_backend(WorkerBackend::Pjrt(Arc::new(session)));
+    let w = vec![0.1; 20];
+    let mut g1 = vec![0.0; 20];
+    let l1 = worker.grad(&w, &mut g1).unwrap();
+    let mut g2 = vec![0.0; 20];
+    let mut rowbuf = vec![0.0; shard.n()];
+    let l2 = obj.value_grad(&shard, &w, &mut g2, &mut rowbuf);
+    assert_close(&g1, &g2, 1e-4, "worker pjrt grad");
+    assert!((l1 - l2).abs() < 1e-4 * l2.abs().max(1.0));
+}
+
+#[test]
+fn oversized_shard_is_rejected() {
+    let reg = registry();
+    let ds = synthetic_fig2(64, 600, 0.005, 41); // d=600 > largest artifact d
+    let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+    let shards = shard_dataset(&ds, 1, 1);
+    assert!(PjrtSession::for_shard(reg, &shards[0], obj.as_ref()).is_err());
+}

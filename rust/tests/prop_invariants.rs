@@ -1,0 +1,338 @@
+//! Property-based invariants (DESIGN.md §7) over the in-tree forall
+//! driver: sharding partitions, allreduce = serial mean, CG = Cholesky,
+//! CSR = dense, comm accounting, DANE's closed form on random quadratics,
+//! and JSON config round-trips.
+
+use dane::comm::{Collective, NetModel};
+use dane::config::{AlgoConfig, BackendKind, DatasetConfig, ExperimentConfig, LossKind, NetConfig};
+use dane::data::sharding::shard_indices;
+use dane::data::Shard;
+use dane::linalg::cg::{cg_solve, CgScratch};
+use dane::linalg::{ops, CholeskyFactor, CsrMatrix, DataMatrix, DenseMatrix};
+use dane::loss::{Objective, Ridge, ShardHvp};
+use dane::util::prop::{forall, gens};
+use dane::util::Rng64;
+use std::sync::Arc;
+
+#[test]
+fn prop_sharding_is_an_even_partition() {
+    forall(
+        11,
+        200,
+        |rng| {
+            let (n, m) = gens::shard_instance(rng, 400);
+            (n, m, rng.next_u64())
+        },
+        |&(n, m, seed)| {
+            let parts = shard_indices(n, m, seed);
+            let mut seen = vec![false; n];
+            for p in &parts {
+                for &i in p {
+                    if seen[i] {
+                        return Err(format!("index {i} assigned twice"));
+                    }
+                    seen[i] = true;
+                }
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err("not a partition".into());
+            }
+            let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            if mx - mn > 1 {
+                return Err(format!("uneven sizes {sizes:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_allreduce_mean_equals_serial_reduction() {
+    forall(
+        13,
+        200,
+        |rng| gens::vecs_f64(rng, 8, 24, 100.0),
+        |vecs| {
+            let d = vecs[0].len();
+            let mut c = Collective::new(NetModel::free());
+            let views: Vec<&[f64]> = vecs.iter().map(|v| v.as_slice()).collect();
+            let mut out = vec![0.0; d];
+            c.allreduce_mean(&views, &mut out);
+            for j in 0..d {
+                let serial: f64 =
+                    vecs.iter().map(|v| v[j]).sum::<f64>() / vecs.len() as f64;
+                if (out[j] - serial).abs() > 1e-12 * serial.abs().max(1.0) {
+                    return Err(format!("col {j}: {} vs {serial}", out[j]));
+                }
+            }
+            if c.stats().rounds != 1 {
+                return Err("allreduce must count one round".into());
+            }
+            if c.stats().bytes != (vecs.len() * d * 8) as u64 {
+                return Err("byte accounting wrong".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+fn random_spd(rng: &mut Rng64, d: usize) -> DenseMatrix {
+    let mut b = DenseMatrix::zeros(d, d);
+    for i in 0..d {
+        for j in 0..d {
+            b.set(i, j, rng.range_f64(-1.0, 1.0));
+        }
+    }
+    b.gram().add_diag(0.3)
+}
+
+#[test]
+fn prop_cg_equals_cholesky_on_spd_systems() {
+    forall(
+        17,
+        60,
+        |rng| {
+            let d = 2 + rng.below(20);
+            let a = random_spd(rng, d);
+            let b: Vec<f64> = (0..d).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+            (a, b)
+        },
+        |(a, b)| {
+            let d = b.len();
+            let chol = CholeskyFactor::factor(a).map_err(|e| e.to_string())?;
+            let x_ref = chol.solve(b);
+            let mut x = vec![0.0; d];
+            let mut s = CgScratch::new(d);
+            cg_solve(a, b, &mut x, 1e-12, 10 * d + 50, &mut s)
+                .map_err(|e| e.to_string())?;
+            let err = ops::dist2(&x, &x_ref);
+            if err > 1e-6 * ops::norm2(&x_ref).max(1.0) {
+                return Err(format!("cg vs cholesky distance {err}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_csr_equals_dense_on_all_ops() {
+    forall(
+        19,
+        100,
+        |rng| {
+            let n = 1 + rng.below(20);
+            let d = 1 + rng.below(15);
+            let mut m = DenseMatrix::zeros(n, d);
+            for i in 0..n {
+                for j in 0..d {
+                    if rng.bool(0.3) {
+                        m.set(i, j, rng.range_f64(-3.0, 3.0));
+                    }
+                }
+            }
+            let v: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let u: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            (m, v, u)
+        },
+        |(m, v, u)| {
+            let s = CsrMatrix::from_dense(m, 0.0);
+            let (n, d) = (m.rows(), m.cols());
+            // Dense and CSR sum the same terms in different association
+            // orders (the dense dot is 4-lane unrolled), so agreement is
+            // to rounding, not bit-exact.
+            let close = |a: &[f64], b: &[f64]| {
+                a.iter()
+                    .zip(b)
+                    .all(|(x, y)| (x - y).abs() <= 1e-12 * x.abs().max(y.abs()).max(1.0))
+            };
+            let (mut o1, mut o2) = (vec![0.0; n], vec![0.0; n]);
+            m.matvec(v, &mut o1);
+            s.matvec(v, &mut o2);
+            if !close(&o1, &o2) {
+                return Err("matvec differs".into());
+            }
+            let (mut r1, mut r2) = (vec![0.0; d], vec![0.0; d]);
+            m.rmatvec(u, &mut r1);
+            s.rmatvec(u, &mut r2);
+            if !close(&r1, &r2) {
+                return Err("rmatvec differs".into());
+            }
+            let (g1, g2) = (m.gram(), s.gram());
+            for i in 0..d {
+                for j in 0..d {
+                    if (g1.get(i, j) - g2.get(i, j)).abs() > 1e-12 {
+                        return Err("gram differs".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hvp_equals_dense_hessian_product() {
+    forall(
+        23,
+        60,
+        |rng| {
+            let n = 4 + rng.below(30);
+            let d = 1 + rng.below(10);
+            let mut x = DenseMatrix::zeros(n, d);
+            for i in 0..n {
+                for j in 0..d {
+                    x.set(i, j, rng.range_f64(-1.0, 1.0));
+                }
+            }
+            let y: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 2.0)).collect();
+            let v: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let reg = rng.range_f64(0.0, 1.0);
+            (x, y, weights, v, reg)
+        },
+        |(x, y, weights, v, reg)| {
+            let (n, d) = (x.rows(), x.cols());
+            let shard = Shard::new(DataMatrix::Dense(x.clone()), y.clone());
+            let hvp = ShardHvp::new(&shard, weights, *reg);
+            let mut got = vec![0.0; d];
+            use dane::linalg::LinearOperator;
+            hvp.apply(v, &mut got);
+
+            // dense: (1/n) X^T diag(w) X v + reg v
+            let mut t = vec![0.0; n];
+            x.matvec(v, &mut t);
+            for j in 0..n {
+                t[j] *= weights[j] / n as f64;
+            }
+            let mut expect = vec![0.0; d];
+            x.rmatvec(&t, &mut expect);
+            ops::axpy(*reg, v, &mut expect);
+            for j in 0..d {
+                if (got[j] - expect[j]).abs() > 1e-10 {
+                    return Err(format!("hvp[{j}]: {} vs {}", got[j], expect[j]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dane_local_solve_satisfies_first_order_conditions() {
+    // For random quadratic shards: the returned w_i must satisfy
+    // (H_i + mu I)(w_i - w') = -eta * g exactly (Theorem-2 algebra).
+    forall(
+        29,
+        40,
+        |rng| {
+            let n = 10 + rng.below(40);
+            let d = 2 + rng.below(8);
+            let mut x = DenseMatrix::zeros(n, d);
+            for i in 0..n {
+                for j in 0..d {
+                    x.set(i, j, rng.range_f64(-1.0, 1.0));
+                }
+            }
+            let y: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let w_prev: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let g: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let lam = rng.range_f64(0.01, 0.5);
+            let mu = rng.range_f64(0.0, 0.5);
+            let eta = rng.range_f64(0.1, 1.0);
+            (x, y, w_prev, g, lam, mu, eta)
+        },
+        |(x, y, w_prev, g, lam, mu, eta)| {
+            let d = x.cols();
+            let shard = Shard::new(DataMatrix::Dense(x.clone()), y.clone());
+            let obj: Arc<dyn Objective> = Arc::new(Ridge::new(*lam));
+            let mut worker = dane::worker::Worker::new(0, shard, obj);
+            let w_i = worker
+                .dane_local_solve(w_prev, g, *eta, *mu)
+                .map_err(|e| e.to_string())?;
+            // residual: (H_i + mu I)(w_i - w') + eta g = 0
+            let hi = worker.dense_hessian().add_diag(*mu);
+            let mut diff = vec![0.0; d];
+            ops::sub(&w_i, w_prev, &mut diff);
+            let mut resid = vec![0.0; d];
+            hi.matvec(&diff, &mut resid);
+            ops::axpy(*eta, g, &mut resid);
+            let r = ops::norm2(&resid);
+            if r > 1e-8 {
+                return Err(format!("first-order residual {r}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_config_json_roundtrip() {
+    forall(
+        31,
+        120,
+        |rng| {
+            let algo = match rng.below(6) {
+                0 => AlgoConfig::Dane {
+                    eta: rng.range_f64(0.1, 2.0),
+                    mu_over_lambda: rng.range_f64(0.0, 5.0),
+                },
+                1 => AlgoConfig::Gd {
+                    step: if rng.bool(0.5) { Some(rng.range_f64(0.001, 1.0)) } else { None },
+                },
+                2 => AlgoConfig::Agd { step: None },
+                3 => AlgoConfig::Admm { rho: rng.range_f64(0.001, 10.0) },
+                4 => AlgoConfig::Osa {
+                    bias_correction_r: if rng.bool(0.5) { Some(rng.range_f64(0.1, 0.9)) } else { None },
+                },
+                _ => AlgoConfig::Lbfgs { history: 1 + rng.below(20) },
+            };
+            ExperimentConfig {
+                name: format!("prop-{}", rng.below(1000)),
+                dataset: DatasetConfig::Fig2 {
+                    n: 100 + rng.below(10_000),
+                    d: 1 + rng.below(100),
+                    paper_reg: rng.range_f64(0.0001, 0.1),
+                },
+                loss: LossKind::Ridge,
+                lambda: rng.range_f64(0.0, 1.0),
+                algo,
+                machines: 1 + rng.below(64),
+                rounds: 1 + rng.below(500),
+                tol: rng.range_f64(1e-12, 1e-3),
+                seed: rng.next_u64() >> 12,
+                backend: BackendKind::Native,
+                eval_test: rng.bool(0.5),
+                net: NetConfig::datacenter(),
+            }
+        },
+        |cfg| {
+            let s = cfg.to_json_string();
+            let back = ExperimentConfig::from_json_str(&s).map_err(|e| e.to_string())?;
+            if &back != cfg {
+                return Err(format!("roundtrip mismatch:\n{s}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_parse_never_panics_on_fuzz() {
+    forall(
+        37,
+        500,
+        |rng| {
+            let len = rng.below(40);
+            let chars = b"{}[]\",:0123456789.eE+-truefalsn ul\\";
+            (0..len)
+                .map(|_| chars[rng.below(chars.len())] as char)
+                .collect::<String>()
+        },
+        |s| {
+            // must return Ok or Err, never panic
+            let _ = dane::util::Json::parse(s);
+            Ok(())
+        },
+    );
+}
