@@ -94,27 +94,43 @@ fn main() -> Result<(), dane::Error> {
     }
     assert!(resh.converged, "e2e hinge run must converge");
 
-    // ---------------- Part 2: PJRT backend ----------------------------
+    // ---------------- Part 2: PJRT backend (optional) -----------------
+    // The artifacts and the PJRT runtime are build-time optional; without
+    // them this stage degrades to an explicit skip and the native stages
+    // above remain the e2e proof. An artifacts/ tree that exists but
+    // fails to open is a real regression and propagates as an error.
     println!("\n[e2e] PJRT backend (AOT jax/Pallas artifacts), canonical shard ...");
-    let ds2 = dane::data::synthetic_fig2(4_096, 500, paper_reg, 11); // pads to 2048x512 per shard
-    let obj2: Arc<dyn Objective> = Arc::new(Ridge::new(lam));
-    let (_, phi_star2) = erm_solve(obj2.as_ref(), &ds2.as_single_shard())?;
-    let mut pjrt_cluster = SerialCluster::new(&ds2, obj2, 2, 11);
-    let registry = Arc::new(ArtifactRegistry::open(Path::new("artifacts"))?);
-    pjrt_cluster.use_pjrt(registry)?;
-    let ctx2 = RunCtx::new(12).with_reference(phi_star2).with_tol(1e-5);
-    let res2 = dane_algo::run(&mut pjrt_cluster, &dane_algo::DaneOptions::default(), &ctx2);
-    emit::write_csv_file(&res2.trace, &out.join("ridge_dane_pjrt.csv"))?;
-    for r in &res2.trace.rows {
-        println!(
-            "    round {:>2}  subopt={:.3e}",
-            r.round,
-            r.suboptimality.unwrap_or(f64::NAN)
-        );
+    let artifacts = Path::new("artifacts");
+    match ArtifactRegistry::open(artifacts) {
+        Err(e)
+            if !artifacts.exists()
+                || e.to_string().contains("PJRT runtime is unavailable") =>
+        {
+            println!("[e2e] skipping PJRT stage: {e}");
+            println!("\n[e2e] native stages green; traces in results/e2e/");
+        }
+        Err(e) => return Err(e),
+        Ok(registry) => {
+            let ds2 = dane::data::synthetic_fig2(4_096, 500, paper_reg, 11); // pads to 2048x512 per shard
+            let obj2: Arc<dyn Objective> = Arc::new(Ridge::new(lam));
+            let (_, phi_star2) = erm_solve(obj2.as_ref(), &ds2.as_single_shard())?;
+            let mut pjrt_cluster = SerialCluster::new(&ds2, obj2, 2, 11);
+            pjrt_cluster.use_pjrt(Arc::new(registry))?;
+            let ctx2 = RunCtx::new(12).with_reference(phi_star2).with_tol(1e-5);
+            let res2 =
+                dane_algo::run(&mut pjrt_cluster, &dane_algo::DaneOptions::default(), &ctx2);
+            emit::write_csv_file(&res2.trace, &out.join("ridge_dane_pjrt.csv"))?;
+            for r in &res2.trace.rows {
+                println!(
+                    "    round {:>2}  subopt={:.3e}",
+                    r.round,
+                    r.suboptimality.unwrap_or(f64::NAN)
+                );
+            }
+            println!("[e2e] pjrt converged={} (f32 artifact floor ~1e-6)", res2.converged);
+            assert!(res2.converged, "e2e PJRT run must converge");
+            println!("\n[e2e] all three stages green; traces in results/e2e/");
+        }
     }
-    println!("[e2e] pjrt converged={} (f32 artifact floor ~1e-6)", res2.converged);
-    assert!(res2.converged, "e2e PJRT run must converge");
-
-    println!("\n[e2e] all three stages green; traces in results/e2e/");
     Ok(())
 }

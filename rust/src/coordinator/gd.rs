@@ -164,12 +164,20 @@ mod tests {
 
     #[test]
     fn gd_monotone_decrease() {
+        // GD with step 1/L on an L-smooth convex objective descends every
+        // iteration (descent lemma). Asserted up to the f64 noise floor
+        // of the objective evaluation: phi = O(1) here, so suboptimality
+        // differences below ~1e-14 are rounding, not ascent.
         let (mut cluster, phi_star) = setup(512, 8, 0.1);
         let ctx = RunCtx::new(50).with_reference(phi_star).with_tol(1e-30);
         let res = run_gd(&mut cluster, &GdOptions::default(), &ctx);
         let s = res.trace.suboptimality();
         for w in s.windows(2) {
-            assert!(w[1] <= w[0] * (1.0 + 1e-12), "{:?}", &s[..6.min(s.len())]);
+            assert!(
+                w[1] <= w[0] * (1.0 + 1e-12) + 1e-14,
+                "{:?}",
+                &s[..6.min(s.len())]
+            );
         }
     }
 
@@ -183,6 +191,10 @@ mod tests {
         let gd = run_gd(&mut c1, &GdOptions::default(), &ctx);
         let agd = run_agd(&mut c2, &AgdOptions::default(), &ctx);
         assert!(agd.converged, "agd: {:?}", agd.trace.last_suboptimality());
+        // kappa ~ L/lambda ~ 250 here: GD needs O(kappa log 1/eps) ~
+        // thousands of rounds (eq. 8) and cannot finish inside the 400
+        // budget, while AGD's O(sqrt(kappa) log 1/eps) ~ 200 fits — the
+        // gap is structural, not a tuning accident.
         let gd_rounds = gd.trace.rounds_to_tol(1e-6).unwrap_or(usize::MAX);
         let agd_rounds = agd.trace.rounds_to_tol(1e-6).unwrap_or(usize::MAX);
         assert!(

@@ -212,7 +212,11 @@ mod tests {
 
     #[test]
     fn fig2_covariance_decays() {
-        // Column variance should roughly follow i^-1.2.
+        // Column variance should roughly follow i^-1.2 (the paper's
+        // Sigma_ii). With n = 4000 Gaussian samples each variance
+        // estimate has relative std sqrt(2/n) ~ 2.2%, so the ratio
+        // v9/v0 (expected 10^-1.2 ~ 0.063) is measured to ~ +-0.002;
+        // the 0.02 absolute tolerance is ~10 sigma on this pinned seed.
         let ds = synthetic_fig2(4000, 10, 0.005, 11);
         let x = ds.x.to_dense();
         let var = |j: usize| -> f64 {
@@ -225,7 +229,9 @@ mod tests {
         let v0 = var(0);
         let v9 = var(9);
         let expect_ratio = (10.0f64).powf(-1.2);
-        assert!((v9 / v0 - expect_ratio).abs() < 0.05, "{} vs {}", v9 / v0, expect_ratio);
+        assert!((v9 / v0 - expect_ratio).abs() < 0.02, "{} vs {}", v9 / v0, expect_ratio);
+        // ...and the decay is strictly monotone in expectation end-to-end.
+        assert!(v9 < v0, "{v9} vs {v0}");
     }
 
     #[test]
@@ -268,8 +274,12 @@ mod tests {
 
     #[test]
     fn classes_roughly_balanced() {
+        // Labels are fair coin flips: pos ~ Binomial(400, 0.5), std = 10.
+        // The (100, 300) window is +-10 sigma around the mean — loose
+        // enough to be seed-proof while still catching any systematic
+        // class skew in the generator.
         let ds = mnist47_like(400, 10, 19);
         let pos = ds.y.iter().filter(|&&v| v > 0.0).count();
-        assert!(pos > 120 && pos < 280, "pos={pos}");
+        assert!(pos > 100 && pos < 300, "pos={pos}");
     }
 }

@@ -1,38 +1,66 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (the offline build has no
+//! `thiserror`); the message prefixes are part of the public contract —
+//! tests and the CLI grep for them.
+
+use std::fmt;
 
 /// Unified error for all dane subsystems.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Dimension mismatch between operands.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// A numerical routine failed (non-SPD matrix, CG breakdown, ...).
-    #[error("numerical failure: {0}")]
     Numerical(String),
 
     /// Bad or inconsistent configuration / parse failure.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Artifact manifest / PJRT runtime problems.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// An algorithm failed to converge within its round budget.
-    #[error("did not converge: {0}")]
     NoConvergence(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Errors bubbled up from the xla/PJRT bridge.
-    #[error("xla error: {0}")]
     Xla(String),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(s) => write!(f, "shape mismatch: {s}"),
+            Error::Numerical(s) => write!(f, "numerical failure: {s}"),
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::Runtime(s) => write!(f, "runtime error: {s}"),
+            Error::NoConvergence(s) => write!(f, "did not converge: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(s) => write!(f, "xla error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::xla::Error> for Error {
+    fn from(e: crate::xla::Error) -> Self {
         Error::Xla(e.to_string())
     }
 }
@@ -57,5 +85,12 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn xla_error_converts() {
+        let e: Error = crate::xla::Error("no pjrt".into()).into();
+        assert!(matches!(e, Error::Xla(_)));
+        assert!(e.to_string().contains("no pjrt"));
     }
 }

@@ -52,6 +52,7 @@ pub mod runtime;
 pub mod solver;
 pub mod util;
 pub mod worker;
+pub mod xla;
 
 pub use error::{Error, Result};
 

@@ -15,7 +15,8 @@
 //! Figure subcommands call the same harness code the benches use
 //! (`dane::harness`), emitting CSV plus a printed paper-shaped table.
 //! `--scale K` divides sample sizes by K for smoke runs. Argument parsing
-//! is in-tree (offline build — no clap); see `Args`.
+//! is in-tree (offline build — no clap); see `Args`. Unknown subcommands
+//! and unknown flags print USAGE and exit non-zero.
 
 use dane::config::ExperimentConfig;
 use dane::coordinator::driver::run_experiment;
@@ -34,9 +35,7 @@ USAGE:
     dane fig4   [--scale <K>] [--out <dir>]
     dane thm1   [--reps <N>]
     dane lemma2
-    dane help
-
-Set DANE_LOG=debug for verbose logging.";
+    dane help";
 
 /// Tiny flag parser: --key value pairs after the subcommand.
 struct Args {
@@ -80,42 +79,38 @@ impl Args {
     fn has(&self, key: &str) -> bool {
         self.bools.contains(key)
     }
-}
 
-/// Minimal stderr logger backing the `log` facade.
-struct StderrLogger {
-    level: log::LevelFilter,
-}
-
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &log::Metadata) -> bool {
-        metadata.level() <= self.level
-    }
-
-    fn log(&self, record: &log::Record) {
-        if self.enabled(record.metadata()) {
-            eprintln!("[{:>5}] {}", record.level(), record.args());
+    /// Reject flags a subcommand does not understand, value flags missing
+    /// their value, and boolean flags given one: a typo'd or malformed
+    /// flag must fail loudly (USAGE + non-zero exit), not silently change
+    /// the run (e.g. `fig2 --scale --out d` must not default scale to 1).
+    fn check_allowed(
+        &self,
+        cmd: &str,
+        value_flags: &[&str],
+        bool_flags: &[&str],
+    ) -> Result<(), String> {
+        for key in self.flags.keys() {
+            if bool_flags.contains(&key.as_str()) {
+                return Err(format!("--{key} does not take a value"));
+            }
+            if !value_flags.contains(&key.as_str()) {
+                return Err(format!("unknown flag --{key} for {cmd:?}"));
+            }
         }
+        for key in &self.bools {
+            if value_flags.contains(&key.as_str()) {
+                return Err(format!("--{key} requires a value"));
+            }
+            if !bool_flags.contains(&key.as_str()) {
+                return Err(format!("unknown flag --{key} for {cmd:?}"));
+            }
+        }
+        Ok(())
     }
-
-    fn flush(&self) {}
-}
-
-fn init_logging() {
-    let level = match std::env::var("DANE_LOG").as_deref() {
-        Ok("trace") => log::LevelFilter::Trace,
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("error") => log::LevelFilter::Error,
-        _ => log::LevelFilter::Info,
-    };
-    let logger = Box::leak(Box::new(StderrLogger { level }));
-    let _ = log::set_logger(logger);
-    log::set_max_level(level);
 }
 
 fn main() {
-    init_logging();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let code = match run(&argv) {
         Ok(()) => 0,
@@ -133,6 +128,14 @@ fn run(argv: &[String]) -> Result<(), String> {
         return Err("missing subcommand".into());
     };
     let args = Args::parse(&argv[1..])?;
+    let (value_flags, bool_flags): (&[&str], &[&str]) = match cmd.as_str() {
+        "run" => (&["config", "csv"], &["quiet"]),
+        "fig2" | "fig3" | "fig4" => (&["scale", "out"], &[]),
+        "thm1" => (&["reps"], &[]),
+        "quickstart" | "lemma2" | "help" | "--help" | "-h" => (&[], &[]),
+        other => return Err(format!("unknown subcommand {other:?}")),
+    };
+    args.check_allowed(cmd, value_flags, bool_flags)?;
     let e2s = |e: dane::Error| e.to_string();
 
     match cmd.as_str() {

@@ -8,6 +8,7 @@
 //! executables — one compile per (entry, shape) per process.
 
 use crate::util::Json;
+use crate::xla;
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -163,11 +164,6 @@ impl ArtifactRegistry {
     pub fn open(dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu()?;
-        log::info!(
-            "artifact registry opened: platform={} entries={}",
-            client.platform_name(),
-            manifest.entries.len()
-        );
         Ok(ArtifactRegistry {
             dir: dir.to_path_buf(),
             client,
@@ -212,7 +208,6 @@ impl ArtifactRegistry {
         }
         let entry = self.entry(name)?.clone();
         let path = self.dir.join(&entry.file);
-        let t0 = std::time::Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().ok_or_else(|| {
                 Error::Runtime(format!("non-utf8 path {}", path.display()))
@@ -220,7 +215,6 @@ impl ArtifactRegistry {
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = std::sync::Arc::new(self.client.compile(&comp)?);
-        log::info!("compiled artifact {name} in {} ms", t0.elapsed().as_millis());
         let mut map = self.compiled.lock().unwrap();
         Ok(map.entry(name.to_string()).or_insert(exe).clone())
     }

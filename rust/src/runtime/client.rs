@@ -11,6 +11,7 @@
 use super::artifact::ArtifactRegistry;
 use super::literal::{literal_to_scalar, literal_to_vec, mat_literal, scalar_literal, vec_literal};
 use crate::data::Shard;
+use crate::xla;
 use crate::loss::Objective;
 use crate::{Error, Result};
 use std::sync::Arc;

@@ -5,6 +5,7 @@
 //! target's natural width). Conversions happen only at the PJRT boundary;
 //! the native/pjrt agreement tests pin the acceptable drift.
 
+use crate::xla;
 use crate::{Error, Result};
 
 /// Build a rank-1 f32 literal from an f64 slice.

@@ -27,13 +27,7 @@ pub fn solve(obj: &dyn Objective, shard: &Shard) -> Result<(Vec<f64>, f64)> {
         ..Default::default()
     };
     let problem = Composite { obj, shard, c: None, mu: 0.0, w0: None };
-    let report = minimize(&problem, &mut w, &opts, &mut rowbuf, &mut weights, &mut cg)?;
-    log::debug!(
-        "reference ERM solved: newton_steps={} cg_iters={} grad_norm={:.3e}",
-        report.newton_steps,
-        report.cg_iters_total,
-        report.final_grad_norm
-    );
+    minimize(&problem, &mut w, &opts, &mut rowbuf, &mut weights, &mut cg)?;
     let value = obj.value(shard, &w, &mut rowbuf);
     Ok((w, value))
 }

@@ -23,6 +23,83 @@ fn unknown_subcommand_fails_with_usage() {
     assert!(!out.status.success());
     let text = String::from_utf8_lossy(&out.stderr);
     assert!(text.contains("unknown subcommand"));
+    assert!(text.contains("USAGE"), "{text}");
+}
+
+#[test]
+fn unknown_flag_fails_with_usage() {
+    // A typo'd flag must not be silently ignored (it would change the run).
+    let out = Command::new(dane_bin())
+        .args(["thm1", "--rep", "20"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("unknown flag"), "{text}");
+    assert!(text.contains("USAGE"), "{text}");
+
+    // boolean-style unknown flags are rejected too
+    let out = Command::new(dane_bin())
+        .args(["quickstart", "--verbose"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("unknown flag"), "{text}");
+}
+
+#[test]
+fn value_flag_without_value_fails() {
+    // `--scale` swallowed by `--out` must not silently default to scale=1.
+    let out = Command::new(dane_bin())
+        .args(["fig2", "--scale", "--out", "results"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("--scale requires a value"), "{text}");
+
+    // trailing value flag with no value at all
+    let out = Command::new(dane_bin())
+        .args(["thm1", "--reps"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("--reps requires a value"), "{text}");
+}
+
+#[test]
+fn bool_flag_with_value_fails() {
+    let out = Command::new(dane_bin())
+        .args(["run", "--config", "c.json", "--quiet", "extra"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("--quiet does not take a value"), "{text}");
+}
+
+#[test]
+fn no_subcommand_fails_with_usage() {
+    let out = Command::new(dane_bin()).output().unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("missing subcommand"), "{text}");
+    assert!(text.contains("USAGE"), "{text}");
+}
+
+#[test]
+fn quickstart_runs_and_exits_zero() {
+    let out = Command::new(dane_bin()).arg("quickstart").output().unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("quickstart"), "{text}");
+    assert!(text.contains("converged"), "{text}");
 }
 
 #[test]
