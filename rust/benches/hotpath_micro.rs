@@ -3,9 +3,19 @@
 //! Criterion-style timing (in-tree harness, util::bench) of every
 //! operation on the DANE hot path, bottom-up: vector kernels, dense and
 //! sparse matvecs, Gram assembly, Cholesky factor/solve, CG, the cached
-//! quadratic local solve, a full DANE round, and the PJRT artifact calls.
-//! The canonical shard is 2048 x 512 (matching the AOT artifact shape).
+//! quadratic local solve, a full DANE round on both cluster engines, and
+//! the PJRT artifact calls. The canonical shard is 2048 x 512 (matching
+//! the AOT artifact shape).
+//!
+//! Kernel generations are benched **side by side** — the previous 2-row
+//! Gram and unblocked Cholesky are kept in-tree precisely so every run
+//! re-measures old vs new — and the whole run is serialized to
+//! `BENCH_hotpath.json` at the repo root (see `Bencher::write_json`),
+//! which is the machine-readable perf trajectory PR claims are checked
+//! against. `BENCH_MEASURE_MS` / `BENCH_WARMUP_MS` shrink the run for
+//! CI's bench-smoke job; `BENCH_LABEL` overrides the git label.
 
+use dane::coordinator::threaded::ThreadedCluster;
 use dane::coordinator::{Cluster, RunCtx, SerialCluster};
 use dane::data::{shard_dataset, synthetic_fig2};
 use dane::linalg::cg::{cg_solve, CgScratch};
@@ -13,19 +23,17 @@ use dane::linalg::{ops, CholeskyFactor, DataMatrix};
 use dane::loss::{Objective, Ridge, ShardHvp, SmoothHinge};
 use dane::runtime::{ArtifactRegistry, PjrtSession};
 use dane::solver::erm_solve;
-use dane::util::bench::{black_box, Bencher};
+use dane::util::bench::{black_box, git_label, Bencher};
 use dane::util::Rng64;
 use dane::worker::Worker;
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Duration;
+
+/// Repo root (one above the cargo manifest), where the trajectory lands.
+const BENCH_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
 
 fn main() {
-    let b = Bencher {
-        measure_time: Duration::from_millis(900),
-        warmup_time: Duration::from_millis(150),
-        max_samples: 40,
-    };
+    let b = Bencher::from_env(900, 150, 40);
     println!("== hotpath_micro (canonical shard 2048x512) ==");
 
     let (n, d) = (2048usize, 512usize);
@@ -79,17 +87,33 @@ fn main() {
         black_box(&out_d);
     });
 
-    // ---- Gram + Cholesky (the cached local solver's setup + steady state)
-    let t0 = std::time::Instant::now();
+    // ---- Gram assembly: previous 2-row kernel vs tiled vs parallel ---
+    b.bench("gram 2048x512 (2row)", || {
+        black_box(dense.gram_2row());
+    });
+    b.bench("gram 2048x512 (blocked)", || {
+        black_box(dense.gram());
+    });
+    b.bench("gram 2048x512 (parallel t=4)", || {
+        black_box(dense.par_gram(4));
+    });
+
+    // ---- Cholesky: unblocked vs blocked right-looking ----------------
     let gram = dense.gram();
-    println!("one-shot gram 2048x512 -> 512x512: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
     let shifted = gram.add_diag(lam);
-    let t0 = std::time::Instant::now();
+    b.bench("cholesky factor d=512 (unblocked)", || {
+        black_box(CholeskyFactor::factor_unblocked(&shifted).unwrap());
+    });
+    b.bench("cholesky factor d=512 (blocked)", || {
+        black_box(CholeskyFactor::factor(&shifted).unwrap());
+    });
     let chol = CholeskyFactor::factor(&shifted).unwrap();
-    println!("one-shot cholesky d=512: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
     let rhs: Vec<f64> = (0..d).map(|i| (i as f64).sin()).collect();
+    let mut sol_buf = rhs.clone();
     b.bench("cholesky solve d=512 (steady-state DANE step)", || {
-        black_box(chol.solve(&rhs));
+        sol_buf.copy_from_slice(&rhs);
+        chol.solve_in_place(&mut sol_buf);
+        black_box(&sol_buf);
     });
 
     // ---- CG local solve (the Hessian-free path) ----------------------
@@ -106,10 +130,12 @@ fn main() {
     let w_prev = vec![0.0; d];
     let mut g = vec![0.0; d];
     worker.grad(&w_prev, &mut g).unwrap();
-    // warm the factor cache, then measure steady-state
-    worker.dane_local_solve(&w_prev, &g, 1.0, 0.0).unwrap();
+    // warm the factor cache, then measure steady-state (allocation-free)
+    let mut local = Vec::new();
+    worker.dane_local_solve_into(&w_prev, &g, 1.0, 0.0, &mut local).unwrap();
     b.bench("worker dane_local_solve (cached cholesky)", || {
-        black_box(worker.dane_local_solve(&w_prev, &g, 1.0, 0.0).unwrap());
+        worker.dane_local_solve_into(&w_prev, &g, 1.0, 0.0, &mut local).unwrap();
+        black_box(&local);
     });
 
     // hinge local solve (Newton-CG) on covtype-like
@@ -124,11 +150,11 @@ fn main() {
         black_box(hworker.dane_local_solve(&hw_prev, &hg, 1.0, 3e-3).unwrap());
     });
 
-    // ---- full DANE round, m = 8 --------------------------------------
+    // ---- full DANE round, m = 8, both engines ------------------------
     let big = synthetic_fig2(8192, 256, 0.005, 9);
     let obj2: Arc<dyn Objective> = Arc::new(Ridge::new(lam));
     let (_, phi_star) = erm_solve(obj2.as_ref(), &big.as_single_shard()).unwrap();
-    let mut cluster = SerialCluster::new(&big, obj2, 8, 3);
+    let mut cluster = SerialCluster::new(&big, obj2.clone(), 8, 3);
     // warm caches
     let ctx = RunCtx::new(2).with_reference(phi_star).with_tol(0.0);
     dane::coordinator::dane::run(&mut cluster, &Default::default(), &ctx);
@@ -139,6 +165,20 @@ fn main() {
     let (g2, _) = cluster.eval_grad_loss(&w).unwrap();
     b.bench("cluster dane_round m=8 N=8192 d=256", || {
         black_box(cluster.dane_round(&w, &g2, 1.0, 0.0).unwrap());
+    });
+
+    // threaded engine, zero-allocation protocol, in-place collectives
+    let mut tcluster = ThreadedCluster::new(&big, obj2, 8, 3);
+    let mut tg = vec![0.0; 256];
+    let mut tout = vec![0.0; 256];
+    tcluster.grad_and_loss_into(&w, &mut tg).unwrap();
+    tcluster.dane_round_into(&w, &tg, 1.0, 0.0, &mut tout).unwrap(); // warm factors
+    b.bench("threaded grad_and_loss m=8 N=8192 d=256", || {
+        black_box(tcluster.grad_and_loss_into(&w, &mut tg).unwrap());
+    });
+    b.bench("threaded dane_round m=8 N=8192 d=256", || {
+        tcluster.dane_round_into(&w, &tg, 1.0, 0.0, &mut tout).unwrap();
+        black_box(&tout);
     });
 
     // ---- PJRT artifact calls ------------------------------------------
@@ -172,5 +212,27 @@ fn main() {
         println!("(artifacts/ not built; skipping PJRT benches)");
     }
 
+    // ---- old-vs-new summary + JSON trajectory -------------------------
+    let speedup = |old: &str, new: &str| -> Option<f64> {
+        Some(b.median_ns_of(old)? / b.median_ns_of(new)?)
+    };
+    if let Some(s) = speedup("gram 2048x512 (2row)", "gram 2048x512 (blocked)") {
+        println!("speedup gram 2048x512 (2row -> blocked):        {s:.2}x");
+    }
+    if let Some(s) = speedup("gram 2048x512 (2row)", "gram 2048x512 (parallel t=4)") {
+        println!("speedup gram 2048x512 (2row -> parallel t=4):   {s:.2}x");
+    }
+    if let Some(s) = speedup(
+        "cholesky factor d=512 (unblocked)",
+        "cholesky factor d=512 (blocked)",
+    ) {
+        println!("speedup cholesky factor d=512 (unblocked -> blocked): {s:.2}x");
+    }
+
+    let json_path = Path::new(BENCH_JSON);
+    match b.write_json(json_path, "hotpath_micro", &git_label()) {
+        Ok(()) => println!("wrote {}", json_path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", json_path.display()),
+    }
     println!("== hotpath_micro done ==");
 }

@@ -9,6 +9,8 @@
 
 pub mod collective;
 pub mod netmodel;
+pub mod roundchan;
 
 pub use collective::{Collective, CommStats};
 pub use netmodel::{NetModel, Topology};
+pub use roundchan::{round_channel, RoundReceiver, RoundSender};

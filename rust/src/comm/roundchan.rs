@@ -1,0 +1,184 @@
+//! Allocation-free single-slot rendezvous channel.
+//!
+//! The leader/worker round protocol in
+//! [`crate::coordinator::threaded::ThreadedCluster`] is strictly
+//! lockstep: one command down, one reply up, per worker, per round. A
+//! general mpsc queue pays for that generality with heap-allocated queue
+//! nodes on every send — which would be the only allocation left in a
+//! steady-state DANE round. This channel replaces the queue with a
+//! single `Option<T>` slot guarded by a `Mutex` + `Condvar` (futex-backed
+//! on Linux): `send` moves the value into the slot, `recv` moves it out,
+//! and neither touches the heap after construction. The zero-allocation
+//! contract is pinned by the counting-allocator test
+//! `rust/tests/alloc_steady_state.rs`.
+//!
+//! Disconnect semantics mirror `std::sync::mpsc`: dropping the receiver
+//! makes `send` fail, dropping the sender makes `recv` fail once the
+//! slot is drained — so a panicking worker thread (unwinding drops its
+//! endpoints) surfaces as an `Err` on the leader, never a deadlock.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Slot<T> {
+    value: Option<T>,
+    tx_alive: bool,
+    rx_alive: bool,
+}
+
+struct Shared<T> {
+    slot: Mutex<Slot<T>>,
+    cv: Condvar,
+}
+
+/// Sending half; dropping it disconnects the channel.
+pub struct RoundSender<T>(Arc<Shared<T>>);
+
+/// Receiving half; dropping it disconnects the channel.
+pub struct RoundReceiver<T>(Arc<Shared<T>>);
+
+/// Error returned by [`RoundSender::send`] when the receiver is gone;
+/// carries the unsent value back, like `std::sync::mpsc::SendError`.
+#[derive(Debug)]
+pub struct SendError<T>(pub T);
+
+/// Error returned by [`RoundReceiver::recv`] when the sender is gone and
+/// the slot is empty.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecvError;
+
+/// Create a connected single-slot channel pair.
+pub fn round_channel<T>() -> (RoundSender<T>, RoundReceiver<T>) {
+    let shared = Arc::new(Shared {
+        slot: Mutex::new(Slot { value: None, tx_alive: true, rx_alive: true }),
+        cv: Condvar::new(),
+    });
+    (RoundSender(shared.clone()), RoundReceiver(shared))
+}
+
+impl<T> RoundSender<T> {
+    /// Move `v` into the slot, blocking while the previous value is
+    /// still unclaimed. Fails (returning `v`) if the receiver is gone.
+    pub fn send(&self, v: T) -> std::result::Result<(), SendError<T>> {
+        let mut slot = lock(&self.0.slot);
+        loop {
+            if !slot.rx_alive {
+                return Err(SendError(v));
+            }
+            if slot.value.is_none() {
+                slot.value = Some(v);
+                self.0.cv.notify_all();
+                return Ok(());
+            }
+            slot = wait(&self.0.cv, slot);
+        }
+    }
+}
+
+impl<T> RoundReceiver<T> {
+    /// Take the slot value, blocking until one arrives. Fails once the
+    /// sender is gone and the slot is drained.
+    pub fn recv(&self) -> std::result::Result<T, RecvError> {
+        let mut slot = lock(&self.0.slot);
+        loop {
+            if let Some(v) = slot.value.take() {
+                self.0.cv.notify_all();
+                return Ok(v);
+            }
+            if !slot.tx_alive {
+                return Err(RecvError);
+            }
+            slot = wait(&self.0.cv, slot);
+        }
+    }
+}
+
+impl<T> Drop for RoundSender<T> {
+    fn drop(&mut self) {
+        lock(&self.0.slot).tx_alive = false;
+        self.0.cv.notify_all();
+    }
+}
+
+impl<T> Drop for RoundReceiver<T> {
+    fn drop(&mut self) {
+        lock(&self.0.slot).rx_alive = false;
+        self.0.cv.notify_all();
+    }
+}
+
+/// Lock, shrugging off poisoning: the slot holds plain moved data, so a
+/// panicked peer cannot leave it logically inconsistent.
+fn lock<'a, T>(m: &'a Mutex<Slot<T>>) -> std::sync::MutexGuard<'a, Slot<T>> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn wait<'a, T>(
+    cv: &Condvar,
+    guard: std::sync::MutexGuard<'a, Slot<T>>,
+) -> std::sync::MutexGuard<'a, Slot<T>> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping_pong_roundtrip() {
+        let (cmd_tx, cmd_rx) = round_channel::<u64>();
+        let (rep_tx, rep_rx) = round_channel::<u64>();
+        let worker = std::thread::spawn(move || {
+            while let Ok(x) = cmd_rx.recv() {
+                if rep_tx.send(x * 2).is_err() {
+                    break;
+                }
+            }
+        });
+        for i in 0..100u64 {
+            cmd_tx.send(i).unwrap();
+            assert_eq!(rep_rx.recv().unwrap(), i * 2);
+        }
+        drop(cmd_tx);
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn send_fails_when_receiver_dropped() {
+        let (tx, rx) = round_channel::<i32>();
+        drop(rx);
+        assert!(tx.send(1).is_err());
+    }
+
+    #[test]
+    fn recv_drains_then_fails_when_sender_dropped() {
+        let (tx, rx) = round_channel::<i32>();
+        tx.send(7).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Ok(7));
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn panicking_peer_unblocks_receiver() {
+        let (tx, rx) = round_channel::<i32>();
+        let t = std::thread::spawn(move || {
+            let _hold = tx; // dropped by unwinding
+            panic!("worker died");
+        });
+        assert!(t.join().is_err());
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn backpressure_blocks_until_drained() {
+        let (tx, rx) = round_channel::<i32>();
+        tx.send(1).unwrap();
+        let t = std::thread::spawn(move || {
+            // second send must wait for the recv below
+            tx.send(2).unwrap();
+        });
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+        t.join().unwrap();
+    }
+}

@@ -48,10 +48,17 @@ impl Default for DaneOptions {
 }
 
 /// Run DANE from w = 0.
+///
+/// The steady-state loop is allocation-free on the leader: the iterate
+/// double-buffers through `w`/`w_next` and the gradient lands in a
+/// persistent buffer via the `*_into` collective methods (the trace rows
+/// themselves are instrumentation and amortize their own storage).
 pub fn run(cluster: &mut dyn Cluster, opts: &DaneOptions, ctx: &RunCtx) -> AlgoResult {
     let d = cluster.dim();
     let obj = cluster.objective();
     let mut w = vec![0.0; d];
+    let mut w_next = vec![0.0; d];
+    let mut g = vec![0.0; d];
     let mut trace = Trace::new();
     let mut converged = false;
     let t0 = std::time::Instant::now();
@@ -59,10 +66,13 @@ pub fn run(cluster: &mut dyn Cluster, opts: &DaneOptions, ctx: &RunCtx) -> AlgoR
     for iter in 0..=ctx.max_rounds {
         // Gradient round (also yields the objective for the trace). The
         // final pass is instrumentation only — the algorithm is done.
-        let (g, loss) = if iter < ctx.max_rounds && !converged {
-            cluster.grad_and_loss(&w)
+        let loss = if iter < ctx.max_rounds && !converged {
+            cluster.grad_and_loss_into(&w, &mut g)
         } else {
-            cluster.eval_grad_loss(&w)
+            cluster.eval_grad_loss(&w).map(|(gv, l)| {
+                g.copy_from_slice(&gv);
+                l
+            })
         }
         .expect("gradient round failed");
 
@@ -92,14 +102,19 @@ pub fn run(cluster: &mut dyn Cluster, opts: &DaneOptions, ctx: &RunCtx) -> AlgoR
         }
 
         // Local-solve + combine round.
-        w = match opts.combine {
-            Combine::Average => cluster
-                .dane_round(&w, &g, opts.eta, opts.mu)
-                .expect("dane round failed"),
-            Combine::First => cluster
-                .dane_round_first(&w, &g, opts.eta, opts.mu)
-                .expect("dane round failed"),
-        };
+        match opts.combine {
+            Combine::Average => {
+                cluster
+                    .dane_round_into(&w, &g, opts.eta, opts.mu, &mut w_next)
+                    .expect("dane round failed");
+                std::mem::swap(&mut w, &mut w_next);
+            }
+            Combine::First => {
+                w = cluster
+                    .dane_round_first(&w, &g, opts.eta, opts.mu)
+                    .expect("dane round failed");
+            }
+        }
     }
 
     AlgoResult { name: "dane".into(), w, trace, converged }

@@ -33,7 +33,8 @@ pub struct AgdOptions {
 /// Costs ONE counted round when the step is not supplied.
 fn trace_bound_l(cluster: &mut dyn Cluster) -> f64 {
     let obj = cluster.objective();
-    obj.scalar_smoothness() * cluster.avg_row_sq_norm() + obj.lambda()
+    let row_sq = cluster.avg_row_sq_norm().expect("row-norm round failed");
+    obj.scalar_smoothness() * row_sq + obj.lambda()
 }
 
 /// Run distributed gradient descent from w = 0.

@@ -41,6 +41,16 @@ pub trait Cluster {
     /// loss share the round, as they would share a payload).
     fn grad_and_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)>;
 
+    /// [`Cluster::grad_and_loss`] written into a caller-owned buffer, so
+    /// steady-state driver loops can run allocation-free. Engines
+    /// override this as the primitive; the default delegates (and pays
+    /// the allocation) for exotic implementations.
+    fn grad_and_loss_into(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
+        let (gv, loss) = self.grad_and_loss(w)?;
+        g.copy_from_slice(&gv);
+        Ok(loss)
+    }
+
     /// Averaged objective only — ONE allreduce (line-search probes).
     fn loss_only(&mut self, w: &[f64]) -> Result<f64>;
 
@@ -49,6 +59,22 @@ pub trait Cluster {
     /// allreduce.
     fn dane_round(&mut self, w_prev: &[f64], g: &[f64], eta: f64, mu: f64)
         -> Result<Vec<f64>>;
+
+    /// [`Cluster::dane_round`] written into a caller-owned buffer
+    /// (`out` must not alias `w_prev`/`g`); same override contract as
+    /// [`Cluster::grad_and_loss_into`].
+    fn dane_round_into(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+        out: &mut [f64],
+    ) -> Result<()> {
+        let w = self.dane_round(w_prev, g, eta, mu)?;
+        out.copy_from_slice(&w);
+        Ok(())
+    }
 
     /// Theorem-5 variant of the inner step: only machine 1 solves, and
     /// w^(t) = w_1^(t). Still one (broadcast) round — the solution must
@@ -69,8 +95,9 @@ pub trait Cluster {
     fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Vec<f64>;
 
     /// Mean squared row norm of the data, for smoothness upper bounds —
-    /// ONE allreduce (computed once, then cached by callers).
-    fn avg_row_sq_norm(&mut self) -> f64;
+    /// ONE allreduce (computed once, then cached). Worker death
+    /// propagates as an error like every other round.
+    fn avg_row_sq_norm(&mut self) -> Result<f64>;
 
     /// Instrumentation (uncounted): objective at w.
     fn eval_loss(&mut self, w: &[f64]) -> Result<f64>;
@@ -154,6 +181,10 @@ pub struct SerialCluster {
     weights: Vec<f64>,
     /// cached mean squared row norm
     row_sq: Option<f64>,
+    /// round-persistent scratch: one worker gradient / local solution at
+    /// a time, so steady-state rounds allocate nothing
+    gi_buf: Vec<f64>,
+    wi_buf: Vec<f64>,
 }
 
 impl SerialCluster {
@@ -199,6 +230,8 @@ impl SerialCluster {
             d,
             weights,
             row_sq: None,
+            gi_buf: vec![0.0; d],
+            wi_buf: vec![0.0; d],
         }
     }
 
@@ -220,18 +253,25 @@ impl SerialCluster {
         &self.workers
     }
 
-    /// Weighted (exact) gradient+loss average, shared by the counted and
-    /// uncounted paths.
-    fn gather_grad_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
-        let d = self.d;
-        let mut g = vec![0.0; d];
-        let mut gi = vec![0.0; d];
+    /// Weighted (exact) gradient+loss average into `g`, shared by the
+    /// counted and uncounted paths. Accumulation is n_i-weighted in rank
+    /// order — the reduction the threaded engine must reproduce
+    /// bit-exactly (smoke_cluster_parity).
+    fn gather_grad_loss_into(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
+        g.fill(0.0);
+        let gi = &mut self.gi_buf;
         let mut loss = 0.0;
         for (k, worker) in self.workers.iter_mut().enumerate() {
-            let li = worker.grad(w, &mut gi)?;
-            ops::axpy(self.weights[k], &gi, &mut g);
+            let li = worker.grad(w, gi)?;
+            ops::axpy(self.weights[k], gi, g);
             loss += self.weights[k] * li;
         }
+        Ok(loss)
+    }
+
+    fn gather_grad_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        let mut g = vec![0.0; self.d];
+        let loss = self.gather_grad_loss_into(w, &mut g)?;
         Ok((g, loss))
     }
 
@@ -258,11 +298,17 @@ impl Cluster for SerialCluster {
     }
 
     fn grad_and_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
-        let (g, loss) = self.gather_grad_loss(w)?;
+        let mut g = vec![0.0; self.d];
+        let loss = self.grad_and_loss_into(w, &mut g)?;
+        Ok((g, loss))
+    }
+
+    fn grad_and_loss_into(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
+        let loss = self.gather_grad_loss_into(w, g)?;
         // one allreduce round: d-vector + scalar per worker
         let m = self.m();
         self.comm.count_round(m, self.d + 1);
-        Ok((g, loss))
+        Ok(loss)
     }
 
     fn loss_only(&mut self, w: &[f64]) -> Result<f64> {
@@ -280,15 +326,29 @@ impl Cluster for SerialCluster {
         mu: f64,
     ) -> Result<Vec<f64>> {
         let mut acc = vec![0.0; self.d];
-        let m = self.m() as f64;
+        self.dane_round_into(w_prev, g, eta, mu, &mut acc)?;
+        Ok(acc)
+    }
+
+    fn dane_round_into(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+        out: &mut [f64],
+    ) -> Result<()> {
+        out.fill(0.0);
+        let inv_m = 1.0 / self.workers.len() as f64;
+        let wi = &mut self.wi_buf;
         for worker in &mut self.workers {
-            let wi = worker.dane_local_solve(w_prev, g, eta, mu)?;
+            worker.dane_local_solve_into(w_prev, g, eta, mu, wi)?;
             // paper step (*): unweighted average of local solutions
-            ops::axpy(1.0 / m, &wi, &mut acc);
+            ops::axpy(inv_m, wi, out);
         }
         let m = self.m();
         self.comm.count_round(m, self.d);
-        Ok(acc)
+        Ok(())
     }
 
     fn dane_round_first(
@@ -341,9 +401,9 @@ impl Cluster for SerialCluster {
         out
     }
 
-    fn avg_row_sq_norm(&mut self) -> f64 {
+    fn avg_row_sq_norm(&mut self) -> Result<f64> {
         if let Some(v) = self.row_sq {
-            return v;
+            return Ok(v);
         }
         let mut total = 0.0;
         let mut rows = 0usize;
@@ -360,7 +420,7 @@ impl Cluster for SerialCluster {
         let m = self.m();
         self.comm.count_round(m, 1);
         self.row_sq = Some(v);
-        v
+        Ok(v)
     }
 
     fn eval_loss(&mut self, w: &[f64]) -> Result<f64> {

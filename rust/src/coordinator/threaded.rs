@@ -2,41 +2,63 @@
 //!
 //! Where [`super::SerialCluster`] drives workers inline (deterministic,
 //! the measurement engine for every figure), `ThreadedCluster` runs each
-//! worker on its own OS thread behind an mpsc command/reply protocol —
-//! the actual leader/worker process topology a deployment would have,
-//! minus the sockets. Commands mirror the collective surface of the
+//! worker on its own OS thread behind a command/reply protocol — the
+//! actual leader/worker process topology a deployment would have, minus
+//! the sockets. Commands mirror the collective surface of the
 //! [`super::Cluster`] trait; each round is a broadcast of one command and
 //! a gather of m replies (a synchronous allreduce).
 //!
+//! The protocol is **allocation-free in steady state** (EXPERIMENTS.md
+//! §Perf), pinned by the counting-allocator test
+//! `rust/tests/alloc_steady_state.rs`:
+//!
+//! * transport is the single-slot rendezvous channel
+//!   [`crate::comm::roundchan`] — no per-message queue nodes;
+//! * broadcast payloads live in two persistent `Arc<Vec<f64>>` slots
+//!   (`w`, `g`) that are rewritten in place once every worker has dropped
+//!   its clone (always true after a gather, so `Arc::get_mut` succeeds
+//!   round over round);
+//! * reply vectors are pre-sized, travel leader -> worker inside the
+//!   command, come back filled inside the reply, and return to the
+//!   leader's pool — the same m buffers circulate forever;
+//! * gradient / iterate averages accumulate in place into caller-owned
+//!   buffers via the `*_into` trait methods.
+//!
+//! Failures are recoverable: when a worker reports an error (or dies),
+//! the gather still drains every outstanding reply before surfacing the
+//! *first* error, so the lockstep protocol never desynchronizes — a
+//! failed round leaves the surviving cluster answering subsequent
+//! rounds exactly like a fresh one.
+//!
 //! (The design brief calls for tokio; the offline build has no tokio, so
-//! this engine uses std::thread + channels — the same ownership and
-//! message-flow structure, documented in DESIGN.md §5.)
+//! this engine uses std::thread + the in-tree channel — the same
+//! ownership and message-flow structure, documented in DESIGN.md §5.)
 
 use super::Cluster;
+use crate::comm::roundchan::{round_channel, RoundReceiver, RoundSender};
 use crate::comm::{Collective, CommStats, NetModel};
 use crate::data::{shard_dataset, Dataset, Shard};
 use crate::linalg::ops;
 use crate::loss::Objective;
 use crate::Result;
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-/// Commands the leader broadcasts to workers.
+/// Commands the leader broadcasts to workers. Result-bearing commands
+/// carry the recycled reply buffer (`out`) down with them.
 enum Cmd {
     /// grad + loss at w -> Reply::VecScalar
-    GradLoss(Arc<Vec<f64>>),
+    GradLoss { w: Arc<Vec<f64>>, out: Vec<f64> },
     /// loss at w -> Reply::Scalar
     Loss(Arc<Vec<f64>>),
     /// DANE local solve -> Reply::Vec
-    DaneSolve { w_prev: Arc<Vec<f64>>, g: Arc<Vec<f64>>, eta: f64, mu: f64 },
+    DaneSolve { w_prev: Arc<Vec<f64>>, g: Arc<Vec<f64>>, eta: f64, mu: f64, out: Vec<f64> },
     /// ADMM prox at a per-worker target -> Reply::Vec
     Prox { v: Vec<f64>, rho: f64 },
     /// local ERM (+ optional subsample) -> Reply::VecPair
     Erm { subsample: Option<(f64, u64)> },
     /// mean squared row norm -> Reply::Scalar
     RowSq,
-    Shutdown,
 }
 
 enum Reply {
@@ -48,11 +70,9 @@ enum Reply {
 }
 
 struct WorkerHandle {
-    tx: Sender<Cmd>,
-    rx: Receiver<Reply>,
+    tx: RoundSender<Cmd>,
+    rx: RoundReceiver<Reply>,
     join: Option<JoinHandle<()>>,
-    /// n_i / N weight for exact gradient averaging.
-    weight: f64,
 }
 
 /// Leader + m worker threads.
@@ -61,6 +81,18 @@ pub struct ThreadedCluster {
     obj: Arc<dyn Objective>,
     comm: Collective,
     d: usize,
+    /// n_i / N weights for exact gradient averaging.
+    weights: Vec<f64>,
+    /// cached mean squared row norm (counted once, like SerialCluster)
+    row_sq: Option<f64>,
+    // ---- round-persistent broadcast + reply scratch -----------------
+    /// Broadcast slot for the iterate (w / w_prev).
+    bcast_w: Arc<Vec<f64>>,
+    /// Broadcast slot for the averaged gradient.
+    bcast_g: Arc<Vec<f64>>,
+    /// m recycled d-vectors: out to workers inside commands, back inside
+    /// replies.
+    reply_pool: Vec<Vec<f64>>,
 }
 
 impl ThreadedCluster {
@@ -78,85 +110,201 @@ impl ThreadedCluster {
         let shards = shard_dataset(ds, m, seed);
         let d = ds.d();
         let total: usize = shards.iter().map(|s| s.n_effective()).sum();
+        let weights: Vec<f64> = shards
+            .iter()
+            .map(|s| s.n_effective() as f64 / total as f64)
+            .collect();
+        let reply_pool = vec![vec![0.0; d]; shards.len()];
         let handles = shards
             .into_iter()
             .enumerate()
-            .map(|(id, shard)| spawn_worker(id, shard, obj.clone(), total))
+            .map(|(id, shard)| spawn_worker(id, shard, obj.clone()))
             .collect();
-        ThreadedCluster { handles, obj, comm: Collective::new(net), d }
+        ThreadedCluster {
+            handles,
+            obj,
+            comm: Collective::new(net),
+            d,
+            weights,
+            row_sq: None,
+            bcast_w: Arc::new(vec![0.0; d]),
+            bcast_g: Arc::new(vec![0.0; d]),
+            reply_pool,
+        }
     }
 
-    /// Broadcast one command to all workers, gather all replies in rank
-    /// order. One synchronous phase — the thread-level allreduce body.
-    fn round(&self, make: impl Fn(usize) -> Cmd) -> Result<Vec<Reply>> {
-        for (i, h) in self.handles.iter().enumerate() {
-            h.tx.send(make(i)).map_err(|_| {
-                crate::Error::Runtime(format!("worker {i} channel closed"))
-            })?;
+    fn send_cmd(&self, i: usize, cmd: Cmd) -> Result<()> {
+        self.handles[i]
+            .tx
+            .send(cmd)
+            .map_err(|_| crate::Error::Runtime(format!("worker {i} channel closed")))
+    }
+
+    /// Receive worker i's reply, mapping worker-side and transport
+    /// failures to errors the same way every round does.
+    fn recv_reply(&self, i: usize) -> Result<Reply> {
+        match self.handles[i].rx.recv() {
+            Ok(Reply::Err(e)) => Err(crate::Error::Runtime(format!("worker {i}: {e}"))),
+            Ok(r) => Ok(r),
+            Err(_) => Err(crate::Error::Runtime(format!("worker {i} died mid-round"))),
         }
-        let mut replies = Vec::with_capacity(self.handles.len());
-        for (i, h) in self.handles.iter().enumerate() {
-            match h.rx.recv() {
-                Ok(Reply::Err(e)) => {
-                    return Err(crate::Error::Runtime(format!("worker {i}: {e}")))
+    }
+
+    fn unexpected(&self, i: usize) -> crate::Error {
+        crate::Error::Runtime(format!("worker {i}: unexpected reply type"))
+    }
+
+    /// Put a buffer-carrying reply's vector back into the pool slot it
+    /// came from (drain path); non-carrying replies are dropped. Only
+    /// fills slots the broadcast phase emptied, so pooled and
+    /// worker-allocated replies can share the path.
+    fn recycle(&mut self, i: usize, r: Reply) {
+        match r {
+            Reply::Vec(v) | Reply::VecScalar(v, _) => {
+                if self.reply_pool[i].is_empty() {
+                    self.reply_pool[i] = v;
                 }
-                Ok(r) => replies.push(r),
-                Err(_) => {
-                    return Err(crate::Error::Runtime(format!(
-                        "worker {i} died mid-round"
-                    )))
+            }
+            _ => {}
+        }
+    }
+
+    /// Weighted gradient+loss gather into `g` — the uncounted body shared
+    /// by the counted and instrumentation paths. Accumulates n_i-weighted
+    /// in rank order, bit-identical to SerialCluster's reduction
+    /// (smoke_cluster_parity). On failure every outstanding reply is
+    /// still drained, so the lockstep protocol stays usable and only the
+    /// first error surfaces.
+    fn gather_grad_loss_into(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
+        load_bcast(&mut self.bcast_w, w);
+        let mut sent = 0;
+        let mut first_err: Option<crate::Error> = None;
+        for i in 0..self.handles.len() {
+            let out = std::mem::take(&mut self.reply_pool[i]);
+            match self.send_cmd(i, Cmd::GradLoss { w: self.bcast_w.clone(), out }) {
+                Ok(()) => sent += 1,
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
                 }
             }
         }
-        Ok(replies)
-    }
-
-    fn weights(&self) -> Vec<f64> {
-        self.handles.iter().map(|h| h.weight).collect()
-    }
-
-    fn gather_grad_loss(&self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
-        let w = Arc::new(w.to_vec());
-        let replies = self.round(|_| Cmd::GradLoss(w.clone()))?;
-        let mut g = vec![0.0; self.d];
+        g.fill(0.0);
         let mut loss = 0.0;
-        for (r, wt) in replies.into_iter().zip(self.weights()) {
-            if let Reply::VecScalar(gi, li) = r {
-                ops::axpy(wt, &gi, &mut g);
-                loss += wt * li;
+        for i in 0..sent {
+            match self.recv_reply(i) {
+                Ok(Reply::VecScalar(gi, li)) => {
+                    if first_err.is_none() {
+                        ops::axpy(self.weights[i], &gi, g);
+                        loss += self.weights[i] * li;
+                    }
+                    self.reply_pool[i] = gi;
+                }
+                Ok(other) => {
+                    self.recycle(i, other);
+                    if first_err.is_none() {
+                        first_err = Some(self.unexpected(i));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
             }
         }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(loss),
+        }
+    }
+
+    fn gather_grad_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        let mut g = vec![0.0; self.d];
+        let loss = self.gather_grad_loss_into(w, &mut g)?;
         Ok((g, loss))
+    }
+
+    /// Weighted loss-only gather (uncounted body; drains on failure).
+    fn gather_loss(&mut self, w: &[f64]) -> Result<f64> {
+        load_bcast(&mut self.bcast_w, w);
+        let mut sent = 0;
+        let mut first_err: Option<crate::Error> = None;
+        for i in 0..self.handles.len() {
+            match self.send_cmd(i, Cmd::Loss(self.bcast_w.clone())) {
+                Ok(()) => sent += 1,
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
+            }
+        }
+        let mut loss = 0.0;
+        for i in 0..sent {
+            match self.recv_reply(i) {
+                Ok(Reply::Scalar(l)) => {
+                    if first_err.is_none() {
+                        loss += self.weights[i] * l;
+                    }
+                }
+                Ok(other) => {
+                    self.recycle(i, other);
+                    if first_err.is_none() {
+                        first_err = Some(self.unexpected(i));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(loss),
+        }
     }
 }
 
-fn spawn_worker(
-    id: usize,
-    shard: Shard,
-    obj: Arc<dyn Objective>,
-    total_n: usize,
-) -> WorkerHandle {
-    let weight = shard.n_effective() as f64 / total_n as f64;
-    let (cmd_tx, cmd_rx) = channel::<Cmd>();
-    let (rep_tx, rep_rx) = channel::<Reply>();
+/// Rewrite a persistent broadcast slot in place when the leader holds the
+/// only reference (true in steady state: every worker drops its clone
+/// before replying, and the previous gather consumed all replies);
+/// otherwise fall back to a fresh allocation.
+fn load_bcast(slot: &mut Arc<Vec<f64>>, src: &[f64]) {
+    match Arc::get_mut(slot) {
+        Some(buf) if buf.len() == src.len() => buf.copy_from_slice(src),
+        _ => *slot = Arc::new(src.to_vec()),
+    }
+}
+
+fn spawn_worker(id: usize, shard: Shard, obj: Arc<dyn Objective>) -> WorkerHandle {
+    let (cmd_tx, cmd_rx) = round_channel::<Cmd>();
+    let (rep_tx, rep_rx) = round_channel::<Reply>();
     let join = std::thread::Builder::new()
         .name(format!("dane-worker-{id}"))
         .spawn(move || {
             let mut worker = crate::worker::Worker::new(id, shard, obj);
             let d = worker.dim();
+            // Leader dropping its endpoints disconnects the channel and
+            // breaks both loops — no explicit shutdown message needed.
             while let Ok(cmd) = cmd_rx.recv() {
                 let reply = match cmd {
-                    Cmd::GradLoss(w) => {
-                        let mut g = vec![0.0; d];
-                        match worker.grad(&w, &mut g) {
-                            Ok(loss) => Reply::VecScalar(g, loss),
+                    Cmd::GradLoss { w, mut out } => {
+                        if out.len() != d {
+                            out.clear();
+                            out.resize(d, 0.0);
+                        }
+                        match worker.grad(&w, &mut out) {
+                            Ok(loss) => Reply::VecScalar(out, loss),
                             Err(e) => Reply::Err(e.to_string()),
                         }
                     }
                     Cmd::Loss(w) => Reply::Scalar(worker.loss(&w)),
-                    Cmd::DaneSolve { w_prev, g, eta, mu } => {
-                        match worker.dane_local_solve(&w_prev, &g, eta, mu) {
-                            Ok(w) => Reply::Vec(w),
+                    Cmd::DaneSolve { w_prev, g, eta, mu, mut out } => {
+                        match worker.dane_local_solve_into(&w_prev, &g, eta, mu, &mut out)
+                        {
+                            Ok(()) => Reply::Vec(out),
                             Err(e) => Reply::Err(e.to_string()),
                         }
                     }
@@ -187,24 +335,28 @@ fn spawn_worker(
                         }
                         Reply::Scalar(total / sh.n_effective() as f64)
                     }
-                    Cmd::Shutdown => break,
                 };
+                // Broadcast Arcs were dropped above (the match arm owns
+                // them), so the leader's get_mut succeeds next round.
                 if rep_tx.send(reply).is_err() {
                     break;
                 }
             }
         })
         .expect("spawn worker thread");
-    WorkerHandle { tx: cmd_tx, rx: rep_rx, join: Some(join), weight }
+    WorkerHandle { tx: cmd_tx, rx: rep_rx, join: Some(join) }
 }
 
 impl Drop for ThreadedCluster {
     fn drop(&mut self) {
-        for h in &self.handles {
-            let _ = h.tx.send(Cmd::Shutdown);
-        }
-        for h in &mut self.handles {
-            if let Some(j) = h.join.take() {
+        // Dropping the channel endpoints disconnects every worker: a
+        // worker blocked in recv gets Err and exits; one mid-compute
+        // fails its next reply send and exits.
+        for h in self.handles.drain(..) {
+            let WorkerHandle { tx, rx, join } = h;
+            drop(tx);
+            drop(rx);
+            if let Some(j) = join {
                 let _ = j.join();
             }
         }
@@ -225,21 +377,20 @@ impl Cluster for ThreadedCluster {
     }
 
     fn grad_and_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
-        let out = self.gather_grad_loss(w)?;
+        let mut g = vec![0.0; self.d];
+        let loss = self.grad_and_loss_into(w, &mut g)?;
+        Ok((g, loss))
+    }
+
+    fn grad_and_loss_into(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
+        let loss = self.gather_grad_loss_into(w, g)?;
         let m = self.m();
         self.comm.count_round(m, self.d + 1);
-        Ok(out)
+        Ok(loss)
     }
 
     fn loss_only(&mut self, w: &[f64]) -> Result<f64> {
-        let wv = Arc::new(w.to_vec());
-        let replies = self.round(|_| Cmd::Loss(wv.clone()))?;
-        let mut loss = 0.0;
-        for (r, wt) in replies.into_iter().zip(self.weights()) {
-            if let Reply::Scalar(l) = r {
-                loss += wt * l;
-            }
-        }
+        let loss = self.gather_loss(w)?;
         let m = self.m();
         self.comm.count_round(m, 1);
         Ok(loss)
@@ -252,24 +403,70 @@ impl Cluster for ThreadedCluster {
         eta: f64,
         mu: f64,
     ) -> Result<Vec<f64>> {
-        let wp = Arc::new(w_prev.to_vec());
-        let gv = Arc::new(g.to_vec());
-        let replies = self.round(|_| Cmd::DaneSolve {
-            w_prev: wp.clone(),
-            g: gv.clone(),
-            eta,
-            mu,
-        })?;
         let mut acc = vec![0.0; self.d];
-        let m = self.m() as f64;
-        for r in replies {
-            if let Reply::Vec(wi) = r {
-                ops::axpy(1.0 / m, &wi, &mut acc);
+        self.dane_round_into(w_prev, g, eta, mu, &mut acc)?;
+        Ok(acc)
+    }
+
+    fn dane_round_into(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+        out: &mut [f64],
+    ) -> Result<()> {
+        load_bcast(&mut self.bcast_w, w_prev);
+        load_bcast(&mut self.bcast_g, g);
+        let mut sent = 0;
+        let mut first_err: Option<crate::Error> = None;
+        for i in 0..self.handles.len() {
+            let buf = std::mem::take(&mut self.reply_pool[i]);
+            let cmd = Cmd::DaneSolve {
+                w_prev: self.bcast_w.clone(),
+                g: self.bcast_g.clone(),
+                eta,
+                mu,
+                out: buf,
+            };
+            match self.send_cmd(i, cmd) {
+                Ok(()) => sent += 1,
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
             }
+        }
+        out.fill(0.0);
+        let inv_m = 1.0 / self.handles.len() as f64;
+        for i in 0..sent {
+            match self.recv_reply(i) {
+                Ok(Reply::Vec(wi)) => {
+                    if first_err.is_none() {
+                        // paper step (*): unweighted average in rank order
+                        ops::axpy(inv_m, &wi, out);
+                    }
+                    self.reply_pool[i] = wi;
+                }
+                Ok(other) => {
+                    self.recycle(i, other);
+                    if first_err.is_none() {
+                        first_err = Some(self.unexpected(i));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
         }
         let m = self.m();
         self.comm.count_round(m, self.d);
-        Ok(acc)
+        Ok(())
     }
 
     fn dane_round_first(
@@ -279,20 +476,24 @@ impl Cluster for ThreadedCluster {
         eta: f64,
         mu: f64,
     ) -> Result<Vec<f64>> {
-        // Only rank 0 computes; everyone else idles this round.
-        let h = &self.handles[0];
-        h.tx
-            .send(Cmd::DaneSolve {
-                w_prev: Arc::new(w_prev.to_vec()),
-                g: Arc::new(g.to_vec()),
+        // Only rank 0 computes; everyone else idles this round. Not a
+        // steady-state path, so the reply vector is freshly allocated by
+        // the worker rather than pooled.
+        load_bcast(&mut self.bcast_w, w_prev);
+        load_bcast(&mut self.bcast_g, g);
+        self.send_cmd(
+            0,
+            Cmd::DaneSolve {
+                w_prev: self.bcast_w.clone(),
+                g: self.bcast_g.clone(),
                 eta,
                 mu,
-            })
-            .map_err(|_| crate::Error::Runtime("worker 0 channel closed".into()))?;
-        let w1 = match h.rx.recv() {
-            Ok(Reply::Vec(w)) => w,
-            Ok(Reply::Err(e)) => return Err(crate::Error::Runtime(e)),
-            _ => return Err(crate::Error::Runtime("worker 0 bad reply".into())),
+                out: Vec::new(),
+            },
+        )?;
+        let w1 = match self.recv_reply(0)? {
+            Reply::Vec(w) => w,
+            _ => return Err(self.unexpected(0)),
         };
         let m = self.m();
         self.comm.count_round(m, self.d);
@@ -301,32 +502,88 @@ impl Cluster for ThreadedCluster {
 
     fn prox_all(&mut self, targets: &[Vec<f64>], rho: f64) -> Result<Vec<Vec<f64>>> {
         assert_eq!(targets.len(), self.m());
-        let replies = self.round(|i| Cmd::Prox { v: targets[i].clone(), rho })?;
-        Ok(replies
-            .into_iter()
-            .map(|r| match r {
-                Reply::Vec(w) => w,
-                _ => unreachable!("prox reply type"),
-            })
-            .collect())
+        let mut sent = 0;
+        let mut first_err: Option<crate::Error> = None;
+        for (i, v) in targets.iter().enumerate() {
+            match self.send_cmd(i, Cmd::Prox { v: v.clone(), rho }) {
+                Ok(()) => sent += 1,
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(self.m());
+        for i in 0..sent {
+            match self.recv_reply(i) {
+                Ok(Reply::Vec(w)) => {
+                    if first_err.is_none() {
+                        out.push(w);
+                    }
+                }
+                Ok(other) => {
+                    self.recycle(i, other);
+                    if first_err.is_none() {
+                        first_err = Some(self.unexpected(i));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
     }
 
     fn local_erms(
         &mut self,
         subsample: Option<(f64, u64)>,
     ) -> Result<(Vec<Vec<f64>>, Option<Vec<Vec<f64>>>)> {
-        let replies = self.round(|_| Cmd::Erm { subsample })?;
+        let mut sent = 0;
+        let mut first_err: Option<crate::Error> = None;
+        for i in 0..self.handles.len() {
+            match self.send_cmd(i, Cmd::Erm { subsample }) {
+                Ok(()) => sent += 1,
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
+            }
+        }
         let mut full = Vec::with_capacity(self.m());
         let mut subs: Vec<Vec<f64>> = Vec::new();
         let mut any_sub = false;
-        for r in replies {
-            if let Reply::VecPair(f, s) = r {
-                full.push(f);
-                if let Some(s) = s {
-                    subs.push(s);
-                    any_sub = true;
+        for i in 0..sent {
+            match self.recv_reply(i) {
+                Ok(Reply::VecPair(f, s)) => {
+                    if first_err.is_none() {
+                        full.push(f);
+                        if let Some(s) = s {
+                            subs.push(s);
+                            any_sub = true;
+                        }
+                    }
+                }
+                Ok(other) => {
+                    self.recycle(i, other);
+                    if first_err.is_none() {
+                        first_err = Some(self.unexpected(i));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
                 }
             }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
         }
         Ok((full, if any_sub { Some(subs) } else { None }))
     }
@@ -338,29 +595,53 @@ impl Cluster for ThreadedCluster {
         out
     }
 
-    fn avg_row_sq_norm(&mut self) -> f64 {
-        let replies = self.round(|_| Cmd::RowSq).expect("rowsq round");
-        let mut total = 0.0;
-        for (r, wt) in replies.into_iter().zip(self.weights()) {
-            if let Reply::Scalar(v) = r {
-                total += wt * v;
+    fn avg_row_sq_norm(&mut self) -> Result<f64> {
+        if let Some(v) = self.row_sq {
+            return Ok(v);
+        }
+        let mut sent = 0;
+        let mut first_err: Option<crate::Error> = None;
+        for i in 0..self.handles.len() {
+            match self.send_cmd(i, Cmd::RowSq) {
+                Ok(()) => sent += 1,
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
             }
+        }
+        let mut total = 0.0;
+        for i in 0..sent {
+            match self.recv_reply(i) {
+                Ok(Reply::Scalar(v)) => {
+                    if first_err.is_none() {
+                        total += self.weights[i] * v;
+                    }
+                }
+                Ok(other) => {
+                    self.recycle(i, other);
+                    if first_err.is_none() {
+                        first_err = Some(self.unexpected(i));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
         }
         let m = self.m();
         self.comm.count_round(m, 1);
-        total
+        self.row_sq = Some(total);
+        Ok(total)
     }
 
     fn eval_loss(&mut self, w: &[f64]) -> Result<f64> {
-        let wv = Arc::new(w.to_vec());
-        let replies = self.round(|_| Cmd::Loss(wv.clone()))?;
-        let mut loss = 0.0;
-        for (r, wt) in replies.into_iter().zip(self.weights()) {
-            if let Reply::Scalar(l) = r {
-                loss += wt * l;
-            }
-        }
-        Ok(loss)
+        self.gather_loss(w)
     }
 
     fn eval_grad_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
@@ -411,6 +692,44 @@ mod tests {
     }
 
     #[test]
+    fn into_paths_match_allocating_paths_bitwise() {
+        let (ds, obj, _) = fixture();
+        let mut a = ThreadedCluster::new(&ds, obj.clone(), 4, 3);
+        let mut b = ThreadedCluster::new(&ds, obj, 4, 3);
+        let w = vec![0.1; 12];
+        let (g1, l1) = a.grad_and_loss(&w).unwrap();
+        let mut g2 = vec![0.0; 12];
+        let l2 = b.grad_and_loss_into(&w, &mut g2).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+        let d1 = a.dane_round(&w, &g1, 1.0, 0.01).unwrap();
+        let mut d2 = vec![0.0; 12];
+        b.dane_round_into(&w, &g2, 1.0, 0.01, &mut d2).unwrap();
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn broadcast_slots_are_reused_in_steady_state() {
+        let (ds, obj, _) = fixture();
+        let mut cluster = ThreadedCluster::new(&ds, obj, 4, 3);
+        let mut w = vec![0.1; 12];
+        let mut g = vec![0.0; 12];
+        let mut w_next = vec![0.0; 12];
+        cluster.grad_and_loss_into(&w, &mut g).unwrap();
+        cluster.dane_round_into(&w, &g, 1.0, 0.01, &mut w_next).unwrap();
+        let wp = Arc::as_ptr(&cluster.bcast_w);
+        let gp = Arc::as_ptr(&cluster.bcast_g);
+        for _ in 0..5 {
+            std::mem::swap(&mut w, &mut w_next);
+            cluster.grad_and_loss_into(&w, &mut g).unwrap();
+            cluster.dane_round_into(&w, &g, 1.0, 0.01, &mut w_next).unwrap();
+            assert_eq!(Arc::as_ptr(&cluster.bcast_w), wp, "w slot reallocated");
+            assert_eq!(Arc::as_ptr(&cluster.bcast_g), gp, "g slot reallocated");
+            assert_eq!(Arc::strong_count(&cluster.bcast_w), 1);
+        }
+    }
+
+    #[test]
     fn full_dane_run_on_threads() {
         let (ds, obj, phi_star) = fixture();
         let mut cluster = ThreadedCluster::new(&ds, obj, 4, 3);
@@ -452,5 +771,38 @@ mod tests {
         let (ds, obj, _) = fixture();
         let cluster = ThreadedCluster::new(&ds, obj, 4, 3);
         drop(cluster); // must not hang or panic
+    }
+
+    #[test]
+    fn worker_error_does_not_desync_later_rounds() {
+        use crate::linalg::{DataMatrix, DenseMatrix};
+        // zero feature column -> singular Gram; lam = 0, mu = 0 makes the
+        // cached-Cholesky local solve fail with a nonpositive pivot
+        let mut rng = crate::util::Rng64::seed_from_u64(3);
+        let mut x = DenseMatrix::zeros(32, 4);
+        for i in 0..32 {
+            for j in 0..3 {
+                x.set(i, j, rng.range_f64(-1.0, 1.0));
+            }
+        }
+        let y: Vec<f64> = (0..32).map(|i| (i % 3) as f64 - 1.0).collect();
+        let ds = Dataset::new("degenerate", DataMatrix::Dense(x), y);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.0));
+        let mut t = ThreadedCluster::new(&ds, obj.clone(), 4, 1);
+        let w = vec![0.0; 4];
+        let (g, _) = t.grad_and_loss(&w).unwrap();
+        assert!(
+            t.dane_round(&w, &g, 1.0, 0.0).is_err(),
+            "singular local solve must surface an error"
+        );
+        // the failed round must have drained every reply: the survivor
+        // and a fresh cluster agree bit-for-bit on the next rounds
+        let mut fresh = ThreadedCluster::new(&ds, obj, 4, 1);
+        fresh.grad_and_loss(&w).unwrap();
+        let (g1, l1) = t.grad_and_loss(&w).unwrap();
+        let (g2, l2) = fresh.grad_and_loss(&w).unwrap();
+        assert_eq!(g1, g2);
+        assert_eq!(l1, l2);
+        assert_eq!(t.loss_only(&w).unwrap(), fresh.loss_only(&w).unwrap());
     }
 }

@@ -6,9 +6,26 @@
 //! triangular solves instead of an O(d^3) solve or an O(d^2)-per-CG-step
 //! iteration. This is the main L3 hot-path optimization (EXPERIMENTS.md
 //! §Perf).
+//!
+//! The factorization is *blocked right-looking*: columns are processed in
+//! panels of [`CHOL_BLOCK`], and the trailing submatrix is updated once
+//! per panel with a rank-[`CHOL_BLOCK`] correction whose inner loop is a
+//! contiguous [`ops::dot`] — the 4-lane unrolled kernel LLVM
+//! autovectorizes — instead of the strictly-sequential scalar reduction
+//! of the unblocked scheme (kept as [`CholeskyFactor::factor_unblocked`]
+//! for benches and parity tests). The factor is stored twice, row-major L
+//! *and* row-major L^T, so both triangular solves stream contiguous
+//! memory.
 
 use super::dense::DenseMatrix;
+use super::ops;
 use crate::{Error, Result};
+
+/// Panel width of the blocked factorization. 64 columns x 8 bytes = 512 B
+/// per row segment; the panel's rank-k trailing update then runs dot
+/// products of length 64 — long enough to vectorize, short enough that
+/// two row segments always sit in L1.
+const CHOL_BLOCK: usize = 64;
 
 /// Lower-triangular Cholesky factor L with A = L L^T.
 #[derive(Debug, Clone)]
@@ -18,12 +35,67 @@ pub struct CholeskyFactor {
     /// triangle is unused — simpler indexing beats the halved memory for
     /// the d <= few-thousand regime this crate targets).
     l: Vec<f64>,
+    /// Row-major copy of L^T (upper-triangular), so the backward solve
+    /// L^T x = y streams rows contiguously instead of walking columns of
+    /// `l` with stride d (EXPERIMENTS.md §Perf).
+    lt: Vec<f64>,
 }
 
 impl CholeskyFactor {
-    /// Factor an SPD matrix. Fails with [`Error::Numerical`] when a pivot
-    /// is not strictly positive (matrix not SPD to working precision).
+    /// Factor an SPD matrix with the blocked right-looking scheme. Fails
+    /// with [`Error::Numerical`] when a pivot is not strictly positive
+    /// (matrix not SPD to working precision).
     pub fn factor(a: &DenseMatrix) -> Result<Self> {
+        let d = a.rows();
+        if d != a.cols() {
+            return Err(Error::Shape("cholesky: matrix not square".into()));
+        }
+        // Seed l with the lower triangle of a; the upper stays zero.
+        let mut l = vec![0.0; d * d];
+        for i in 0..d {
+            for j in 0..=i {
+                l[i * d + j] = a.get(i, j);
+            }
+        }
+        let mut k0 = 0;
+        while k0 < d {
+            let k1 = (k0 + CHOL_BLOCK).min(d);
+            // 1. Panel factorization (columns k0..k1, rows k0..d). All
+            // corrections from columns < k0 were applied by earlier
+            // trailing updates, so only within-panel dots remain.
+            for j in k0..k1 {
+                let s = l[j * d + j] - ops::dot(&l[j * d + k0..j * d + j], &l[j * d + k0..j * d + j]);
+                if s <= 0.0 {
+                    return Err(Error::Numerical(format!(
+                        "cholesky pivot {j} nonpositive ({s:.3e}); matrix not SPD"
+                    )));
+                }
+                let ljj = s.sqrt();
+                l[j * d + j] = ljj;
+                for i in (j + 1)..d {
+                    let s = l[i * d + j]
+                        - ops::dot(&l[i * d + k0..i * d + j], &l[j * d + k0..j * d + j]);
+                    l[i * d + j] = s / ljj;
+                }
+            }
+            // 2. Trailing update: A22 -= L21 L21^T, one dot of length
+            // (k1 - k0) per updated entry — the flops-dominant SYRK.
+            for i in k1..d {
+                for j in k1..=i {
+                    let s = ops::dot(&l[i * d + k0..i * d + k1], &l[j * d + k0..j * d + k1]);
+                    l[i * d + j] -= s;
+                }
+            }
+            k0 = k1;
+        }
+        let lt = transpose_lower(&l, d);
+        Ok(CholeskyFactor { d, l, lt })
+    }
+
+    /// The previous unblocked factorization, kept verbatim as the
+    /// before-kernel for `hotpath_micro`'s old-vs-new comparison and as
+    /// a reference for the kernel parity tests.
+    pub fn factor_unblocked(a: &DenseMatrix) -> Result<Self> {
         let d = a.rows();
         if d != a.cols() {
             return Err(Error::Shape("cholesky: matrix not square".into()));
@@ -49,7 +121,8 @@ impl CholeskyFactor {
                 }
             }
         }
-        Ok(CholeskyFactor { d, l })
+        let lt = transpose_lower(&l, d);
+        Ok(CholeskyFactor { d, l, lt })
     }
 
     pub fn dim(&self) -> usize {
@@ -57,26 +130,20 @@ impl CholeskyFactor {
     }
 
     /// Solve A x = b in place (b becomes x): forward then backward
-    /// substitution. O(d^2), allocation-free.
+    /// substitution. O(d^2), allocation-free; both sweeps are contiguous
+    /// [`ops::dot`]s (forward over rows of L, backward over rows of L^T).
     pub fn solve_in_place(&self, b: &mut [f64]) {
         let d = self.d;
         debug_assert_eq!(b.len(), d);
         // L y = b
         for i in 0..d {
-            let mut s = b[i];
-            let row = &self.l[i * d..i * d + i];
-            for k in 0..i {
-                s -= row[k] * b[k];
-            }
+            let s = b[i] - ops::dot(&self.l[i * d..i * d + i], &b[..i]);
             b[i] = s / self.l[i * d + i];
         }
-        // L^T x = y
+        // L^T x = y, streaming row i of L^T
         for i in (0..d).rev() {
-            let mut s = b[i];
-            for k in (i + 1)..d {
-                s -= self.l[k * d + i] * b[k];
-            }
-            b[i] = s / self.l[i * d + i];
+            let s = b[i] - ops::dot(&self.lt[i * d + i + 1..(i + 1) * d], &b[i + 1..]);
+            b[i] = s / self.lt[i * d + i];
         }
     }
 
@@ -95,6 +162,17 @@ impl CholeskyFactor {
         }
         2.0 * s
     }
+}
+
+/// Row-major L^T from row-major lower-triangular L.
+fn transpose_lower(l: &[f64], d: usize) -> Vec<f64> {
+    let mut lt = vec![0.0; d * d];
+    for i in 0..d {
+        for j in 0..=i {
+            lt[j * d + i] = l[i * d + j];
+        }
+    }
+    lt
 }
 
 #[cfg(test)]
@@ -128,6 +206,31 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matches_unblocked_across_panel_boundaries() {
+        // d below, at, just past and well past CHOL_BLOCK
+        for &d in &[1usize, 2, 5, 63, 64, 65, 130] {
+            let a = spd(d, 40 + d as u64);
+            let fb = CholeskyFactor::factor(&a).unwrap();
+            let fu = CholeskyFactor::factor_unblocked(&a).unwrap();
+            for i in 0..d {
+                for j in 0..=i {
+                    let (x, y) = (fb.l[i * d + j], fu.l[i * d + j]);
+                    assert!(
+                        (x - y).abs() <= 1e-10 * x.abs().max(1.0),
+                        "d={d} L[{i},{j}]: {x} vs {y}"
+                    );
+                }
+            }
+            // and the transposed copy agrees with the factor
+            for i in 0..d {
+                for j in 0..=i {
+                    assert_eq!(fb.lt[j * d + i], fb.l[i * d + j]);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn identity_is_noop() {
         let f = CholeskyFactor::factor(&DenseMatrix::eye(5)).unwrap();
         let b = vec![1.0, -2.0, 3.0, 0.0, 4.0];
@@ -140,12 +243,14 @@ mod tests {
         let mut a = DenseMatrix::eye(3);
         a.set(1, 1, -1.0);
         assert!(CholeskyFactor::factor(&a).is_err());
+        assert!(CholeskyFactor::factor_unblocked(&a).is_err());
     }
 
     #[test]
     fn rejects_non_square() {
         let a = DenseMatrix::zeros(2, 3);
         assert!(CholeskyFactor::factor(&a).is_err());
+        assert!(CholeskyFactor::factor_unblocked(&a).is_err());
     }
 
     #[test]
@@ -168,5 +273,24 @@ mod tests {
         let mut r = vec![0.0; 30];
         ops::sub(&ax, &b, &mut r);
         assert!(ops::norm2(&r) < 1e-9 * ops::norm2(&b).max(1.0));
+    }
+
+    #[test]
+    fn large_blocked_solve_is_accurate() {
+        // d = 150 crosses two panel boundaries; verify the full pipeline
+        let d = 150;
+        let a = spd(d, 9);
+        let f = CholeskyFactor::factor(&a).unwrap();
+        let x_true: Vec<f64> = (0..d).map(|i| ((i * 7 % 13) as f64) - 6.0).collect();
+        let mut b = vec![0.0; d];
+        a.matvec(&x_true, &mut b);
+        let x = f.solve(&b);
+        let err: f64 = x
+            .iter()
+            .zip(&x_true)
+            .map(|(u, v)| (u - v) * (u - v))
+            .sum::<f64>()
+            .sqrt();
+        assert!(err < 1e-8 * ops::norm2(&x_true), "err {err}");
     }
 }

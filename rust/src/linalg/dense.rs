@@ -7,6 +7,26 @@
 
 use super::ops;
 
+/// Rows per register-blocked Gram panel (microkernel height). 8 rows x
+/// one g-row keeps 9 block-chunks live, comfortably inside L1 with
+/// [`GRAM_COL_BLOCK`]-sized chunks.
+const GRAM_PANEL_ROWS: usize = 8;
+
+/// Features per Gram column block: 128 f64 = 1 KiB per row chunk, so a
+/// full 8-row panel's working set is 8 KiB + the streamed g-row.
+const GRAM_COL_BLOCK: usize = 128;
+
+/// Copy the strictly-upper triangle onto the strictly-lower one.
+fn mirror_upper_to_lower(g: &mut DenseMatrix) {
+    let d = g.cols;
+    for a in 0..d {
+        for b in (a + 1)..d {
+            let v = g.get(a, b);
+            g.set(b, a, v);
+        }
+    }
+}
+
 /// Dense n x d matrix, row-major contiguous storage.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DenseMatrix {
@@ -105,12 +125,77 @@ impl DenseMatrix {
         }
     }
 
-    /// Gram matrix A^T A (d x d), accumulated two rows at a time — a
-    /// single pass over A, mirroring the L1 kernel's streamed schedule.
-    /// Exploits symmetry (upper triangle computed, then mirrored) and
-    /// 2-row register blocking: each pass over a g-row consumes two data
-    /// rows, halving the dominant g-row traffic (EXPERIMENTS.md §Perf).
+    /// Gram matrix A^T A (d x d) via the tiled kernel: row panels of
+    /// [`GRAM_PANEL_ROWS`] data rows x column blocks of
+    /// [`GRAM_COL_BLOCK`] features, with the register-blocked
+    /// [`ops::axpy_panel`] microkernel doing the per-(panel, block)
+    /// update. Compared with the previous 2-row scheme (kept as
+    /// [`DenseMatrix::gram_2row`] for benches and parity tests) the
+    /// dominant g-row traffic drops by panel_rows/2 = 4x, and the
+    /// panel's column-block chunks stay L1-resident across the whole
+    /// feature loop (EXPERIMENTS.md §Perf). Upper triangle is computed,
+    /// then mirrored.
     pub fn gram(&self) -> DenseMatrix {
+        let d = self.cols;
+        let mut g = DenseMatrix::zeros(d, d);
+        self.gram_acc_rows(0, self.rows, &mut g);
+        mirror_upper_to_lower(&mut g);
+        g
+    }
+
+    /// Deterministic multi-threaded Gram: rows are split into `threads`
+    /// fixed contiguous chunks, each chunk's partial Gram is computed
+    /// with the same tiled kernel on its own thread
+    /// (`std::thread::scope`), and the partials are reduced in chunk
+    /// order. For a given (shape, threads) the chunking, the per-chunk
+    /// kernel and the reduction order are all fixed, so the result is
+    /// bit-reproducible across runs; `par_gram(1)` is bit-identical to
+    /// [`DenseMatrix::gram`]. Used for one-time setup costs — QuadCache
+    /// builds on large dense shards (`worker::local_solver`) — never by
+    /// the steady-state round loop.
+    pub fn par_gram(&self, threads: usize) -> DenseMatrix {
+        let d = self.cols;
+        let t = threads.max(1).min(self.rows.max(1));
+        if t <= 1 {
+            return self.gram();
+        }
+        // Fixed chunking: chunk i covers base rows, the first `rem`
+        // chunks one extra — a pure function of (rows, t).
+        let (base, rem) = (self.rows / t, self.rows % t);
+        let mut bounds = Vec::with_capacity(t + 1);
+        bounds.push(0usize);
+        for i in 0..t {
+            bounds.push(bounds[i] + base + usize::from(i < rem));
+        }
+        let mut partials: Vec<DenseMatrix> = Vec::with_capacity(t);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..t)
+                .map(|i| {
+                    let (r0, r1) = (bounds[i], bounds[i + 1]);
+                    s.spawn(move || {
+                        let mut p = DenseMatrix::zeros(d, d);
+                        self.gram_acc_rows(r0, r1, &mut p);
+                        p
+                    })
+                })
+                .collect();
+            for h in handles {
+                partials.push(h.join().expect("par_gram worker panicked"));
+            }
+        });
+        // Fixed-order reduction: chunk 0 seeds, the rest accumulate.
+        let mut g = partials.remove(0);
+        for p in &partials {
+            ops::axpy(1.0, &p.data, &mut g.data);
+        }
+        mirror_upper_to_lower(&mut g);
+        g
+    }
+
+    /// The previous 2-row register-blocked Gram, kept verbatim as the
+    /// before-kernel for `hotpath_micro`'s old-vs-new comparison and as a
+    /// reference implementation for the kernel parity tests.
+    pub fn gram_2row(&self) -> DenseMatrix {
         let d = self.cols;
         let mut g = DenseMatrix::zeros(d, d);
         let pairs = self.rows / 2;
@@ -142,13 +227,65 @@ impl DenseMatrix {
                 }
             }
         }
-        for a in 0..d {
-            for b in (a + 1)..d {
-                let v = g.get(a, b);
-                g.set(b, a, v);
+        mirror_upper_to_lower(&mut g);
+        g
+    }
+
+    /// Accumulate X[row0..row1]^T X[row0..row1]'s *upper triangle* into
+    /// `g`. Column blocks are outer so a panel's block chunks (at most
+    /// 8 x 128 f64 = 8 KiB) stay in L1 across the whole feature loop;
+    /// within a block, rows are consumed in panels of 8/4/2/1. The
+    /// per-entry accumulation order depends only on the row range and
+    /// the sequential microkernel, never on how the remainder decomposes
+    /// into sub-panels (see [`ops::axpy_panel`]) — appending zero rows
+    /// is bit-exact, the invariant padded shards rely on.
+    fn gram_acc_rows(&self, row0: usize, row1: usize, g: &mut DenseMatrix) {
+        let d = self.cols;
+        debug_assert_eq!(g.rows, d);
+        debug_assert!(row1 <= self.rows && row0 <= row1);
+        for b0 in (0..d).step_by(GRAM_COL_BLOCK) {
+            let b1 = (b0 + GRAM_COL_BLOCK).min(d);
+            let mut r = row0;
+            while r + GRAM_PANEL_ROWS <= row1 {
+                self.gram_panel::<GRAM_PANEL_ROWS>(r, b0, b1, g);
+                r += GRAM_PANEL_ROWS;
+            }
+            if r + 4 <= row1 {
+                self.gram_panel::<4>(r, b0, b1, g);
+                r += 4;
+            }
+            if r + 2 <= row1 {
+                self.gram_panel::<2>(r, b0, b1, g);
+                r += 2;
+            }
+            if r < row1 {
+                self.gram_panel::<1>(r, b0, b1, g);
             }
         }
-        g
+    }
+
+    /// One (K-row panel) x (column block [b0, b1)) update of the upper
+    /// triangle of g.
+    #[inline]
+    fn gram_panel<const K: usize>(&self, r: usize, b0: usize, b1: usize, g: &mut DenseMatrix) {
+        let d = self.cols;
+        for a in 0..b1 {
+            let lo = a.max(b0);
+            let mut coeffs = [0.0f64; K];
+            let mut any = false;
+            for k in 0..K {
+                let c = self.data[(r + k) * d + a];
+                coeffs[k] = c;
+                any |= c != 0.0;
+            }
+            if !any {
+                continue;
+            }
+            let rows: [&[f64]; K] =
+                std::array::from_fn(|k| &self.data[(r + k) * d + lo..(r + k) * d + b1]);
+            let out = &mut g.data[a * d + lo..a * d + b1];
+            ops::axpy_panel(&coeffs, &rows, out);
+        }
     }
 
     /// Sub-matrix of the given rows, in order.
@@ -254,6 +391,81 @@ mod tests {
         assert_eq!(g.get(0, 1), 44.0);
         assert_eq!(g.get(1, 0), 44.0);
         assert_eq!(g.get(1, 1), 56.0);
+    }
+
+    fn random(n: usize, d: usize, seed: u64) -> DenseMatrix {
+        let mut rng = crate::util::Rng64::seed_from_u64(seed);
+        let mut m = DenseMatrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.set(i, j, rng.range_f64(-1.0, 1.0));
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn blocked_gram_matches_2row_reference() {
+        for &(n, d) in &[(1usize, 1usize), (3, 2), (7, 5), (16, 8), (33, 17), (64, 130)] {
+            let m = random(n, d, 7 + n as u64 + d as u64);
+            let g = m.gram();
+            let r = m.gram_2row();
+            for a in 0..d {
+                for b in 0..d {
+                    let (x, y) = (g.get(a, b), r.get(a, b));
+                    assert!(
+                        (x - y).abs() <= 1e-12 * x.abs().max(y.abs()).max(1.0),
+                        "({n}x{d}) [{a},{b}]: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gram_padding_rows_are_bit_exact() {
+        // appending all-zero rows must not perturb a single bit, whatever
+        // panel decomposition the new row count lands on
+        let m = random(5, 9, 3);
+        let g = m.gram();
+        for pad in 1..=9usize {
+            let mut rows: Vec<Vec<f64>> = (0..5).map(|i| m.row(i).to_vec()).collect();
+            rows.extend(std::iter::repeat(vec![0.0; 9]).take(pad));
+            let padded = DenseMatrix::from_rows(&rows);
+            assert_eq!(g.data(), padded.gram().data(), "pad={pad}");
+        }
+    }
+
+    #[test]
+    fn par_gram_is_deterministic_and_matches_serial() {
+        let m = random(37, 13, 11);
+        let g = m.gram();
+        // t=1 is the serial kernel verbatim
+        assert_eq!(g.data(), m.par_gram(1).data());
+        for t in [2usize, 3, 5, 8, 64] {
+            let p1 = m.par_gram(t);
+            let p2 = m.par_gram(t);
+            // bit-reproducible for a fixed thread count
+            assert_eq!(p1.data(), p2.data(), "t={t}");
+            for a in 0..13 {
+                for b in 0..13 {
+                    let (x, y) = (p1.get(a, b), g.get(a, b));
+                    assert!(
+                        (x - y).abs() <= 1e-12 * x.abs().max(1.0),
+                        "t={t} [{a},{b}]: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gram_empty_and_degenerate_shapes() {
+        assert_eq!(DenseMatrix::zeros(0, 4).gram().data(), &[0.0; 16][..]);
+        assert_eq!(DenseMatrix::zeros(4, 0).gram().rows(), 0);
+        let one = DenseMatrix::from_rows(&[vec![3.0]]);
+        assert_eq!(one.gram().get(0, 0), 9.0);
+        assert_eq!(one.par_gram(4).get(0, 0), 9.0);
     }
 
     #[test]

@@ -6,7 +6,11 @@
 //! exact local quadratic solves, and conjugate gradient over an abstract
 //! operator for the Hessian-free path ("no Hessians are explicitly
 //! computed!"). Everything is `f64`, no BLAS dependency — the hot loops are
-//! written to autovectorize (see EXPERIMENTS.md §Perf).
+//! written to autovectorize (see EXPERIMENTS.md §Perf): Gram assembly is
+//! tiled (row panels x column blocks over the [`ops::axpy_panel`]
+//! microkernel, with a deterministic multi-threaded variant in
+//! [`DenseMatrix::par_gram`]) and the Cholesky factorization is blocked
+//! right-looking so its inner loops are contiguous [`ops::dot`]s.
 
 pub mod cg;
 pub mod cholesky;

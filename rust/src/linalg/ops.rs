@@ -41,6 +41,32 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
+/// out[i] += sum_k coeffs[k] * rows[k][i] — the register-blocked panel
+/// microkernel of the tiled Gram assembly (`DenseMatrix::gram`).
+///
+/// `K` is a compile-time constant so the inner sum fully unrolls into K
+/// independent fused multiply-adds per output element; the K row slices
+/// stream from L1 while the single `out` row is read and written once.
+/// The accumulation is strictly sequential (out, then coeff 0, 1, ... in
+/// order), which makes the result independent of how a row range is
+/// decomposed into panels: appending all-zero rows adds exact `+0.0`
+/// terms and leaves every partial sum bit-identical — the padded-shard
+/// invariant the QuadCache tests pin.
+#[inline]
+pub fn axpy_panel<const K: usize>(coeffs: &[f64; K], rows: &[&[f64]; K], out: &mut [f64]) {
+    let n = out.len();
+    for k in 0..K {
+        debug_assert!(rows[k].len() >= n);
+    }
+    for i in 0..n {
+        let mut s = out[i];
+        for k in 0..K {
+            s += coeffs[k] * rows[k][i];
+        }
+        out[i] = s;
+    }
+}
+
 /// y = alpha * x + beta * y
 #[inline]
 pub fn axpby(alpha: f64, x: &[f64], beta: f64, y: &mut [f64]) {
@@ -141,6 +167,28 @@ mod tests {
     fn norms() {
         assert_eq!(norm2(&[3.0, 4.0]), 5.0);
         assert_eq!(dist2(&[1.0, 1.0], &[4.0, 5.0]), 5.0);
+    }
+
+    #[test]
+    fn axpy_panel_matches_sequential_axpys() {
+        let r0 = vec![1.0, 2.0, 3.0];
+        let r1 = vec![-1.0, 0.5, 2.0];
+        let r2 = vec![0.0, 4.0, -2.0];
+        let mut out = vec![10.0, 20.0, 30.0];
+        axpy_panel(&[2.0, -1.0, 0.5], &[&r0, &r1, &r2], &mut out);
+        assert_eq!(out, vec![10.0 + 2.0 + 1.0, 20.0 + 4.0 - 0.5 + 2.0, 30.0 + 6.0 - 2.0 - 1.0]);
+    }
+
+    #[test]
+    fn axpy_panel_zero_coeff_rows_are_exact_noops() {
+        // appending zero rows to a panel must not perturb bits
+        let r0 = vec![0.125, -3.5];
+        let z = vec![0.0, 0.0];
+        let mut a = vec![1.0, 2.0];
+        let mut b = vec![1.0, 2.0];
+        axpy_panel(&[0.25], &[&r0], &mut a);
+        axpy_panel(&[0.25, 0.0, 0.0], &[&r0, &z, &z], &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -7,9 +7,8 @@
 //! asked to reach (1e-6).
 
 use crate::data::Shard;
-use crate::linalg::cg::CgScratch;
 use crate::loss::Objective;
-use crate::solver::newton_cg::{minimize, Composite, NewtonCgOptions};
+use crate::solver::newton_cg::{minimize, Composite, NewtonCgOptions, NewtonCgScratch};
 use crate::Result;
 
 /// Reference solve. Returns (w_hat, phi(w_hat)).
@@ -18,7 +17,7 @@ pub fn solve(obj: &dyn Objective, shard: &Shard) -> Result<(Vec<f64>, f64)> {
     let mut w = vec![0.0; d];
     let mut rowbuf = vec![0.0; n];
     let mut weights = vec![0.0; n];
-    let mut cg = CgScratch::new(d);
+    let mut scratch = NewtonCgScratch::new(d);
     let opts = NewtonCgOptions {
         grad_tol: 1e-12,
         max_newton: 100,
@@ -27,7 +26,7 @@ pub fn solve(obj: &dyn Objective, shard: &Shard) -> Result<(Vec<f64>, f64)> {
         ..Default::default()
     };
     let problem = Composite { obj, shard, c: None, mu: 0.0, w0: None };
-    minimize(&problem, &mut w, &opts, &mut rowbuf, &mut weights, &mut cg)?;
+    minimize(&problem, &mut w, &opts, &mut rowbuf, &mut weights, &mut scratch)?;
     let value = obj.value(shard, &w, &mut rowbuf);
     Ok((w, value))
 }

@@ -10,4 +10,4 @@ pub mod erm;
 pub mod newton_cg;
 
 pub use erm::solve as erm_solve;
-pub use newton_cg::{minimize, Composite, NewtonCgOptions, NewtonCgReport};
+pub use newton_cg::{minimize, Composite, NewtonCgOptions, NewtonCgReport, NewtonCgScratch};

@@ -108,18 +108,50 @@ pub struct NewtonCgReport {
     pub converged: bool,
 }
 
+/// All d-sized scratch a [`minimize`] call needs, owned by the caller so
+/// steady-state Newton-CG solves (the non-quadratic DANE local path)
+/// allocate nothing: gradient, step direction, line-search probe, and
+/// the CG work vectors. Buffers resize lazily on a dimension change.
+#[derive(Debug, Clone)]
+pub struct NewtonCgScratch {
+    pub cg: CgScratch,
+    g: Vec<f64>,
+    delta: Vec<f64>,
+    w_try: Vec<f64>,
+}
+
+impl NewtonCgScratch {
+    pub fn new(d: usize) -> Self {
+        NewtonCgScratch {
+            cg: CgScratch::new(d),
+            g: vec![0.0; d],
+            delta: vec![0.0; d],
+            w_try: vec![0.0; d],
+        }
+    }
+
+    fn ensure(&mut self, d: usize) {
+        if self.g.len() != d {
+            self.g.resize(d, 0.0);
+            self.delta.resize(d, 0.0);
+            self.w_try.resize(d, 0.0);
+        }
+    }
+}
+
 /// Minimize the composite from `w` (overwritten with the minimizer).
 ///
-/// Scratch: `rowbuf` (len n), `weights` (len n), `cg` reusable. Returns
-/// the report; errors only on CG breakdown (non-convex curvature, which
-/// cannot happen for the convex objectives in this crate) or shape bugs.
+/// Scratch: `rowbuf` (len n), `weights` (len n), `scratch` reusable
+/// across calls (no per-call allocation once sized). Returns the report;
+/// errors only on CG breakdown (non-convex curvature, which cannot
+/// happen for the convex objectives in this crate) or shape bugs.
 pub fn minimize(
     problem: &Composite<'_>,
     w: &mut [f64],
     opts: &NewtonCgOptions,
     rowbuf: &mut [f64],
     weights: &mut [f64],
-    cg: &mut CgScratch,
+    scratch: &mut NewtonCgScratch,
 ) -> Result<NewtonCgReport> {
     let d = w.len();
     let n = problem.shard.n();
@@ -130,14 +162,13 @@ pub fn minimize(
             weights.len()
         )));
     }
-    let mut g = vec![0.0; d];
-    let mut delta = vec![0.0; d];
-    let mut w_try = vec![0.0; d];
+    scratch.ensure(d);
+    let NewtonCgScratch { cg, g, delta, w_try } = scratch;
     let mut report = NewtonCgReport::default();
 
-    let mut h = problem.value_grad(w, &mut g, rowbuf);
+    let mut h = problem.value_grad(w, g, rowbuf);
     loop {
-        let gnorm = ops::norm2(&g);
+        let gnorm = ops::norm2(g);
         report.final_grad_norm = gnorm;
         report.final_value = h;
         if gnorm <= opts.grad_tol {
@@ -153,20 +184,20 @@ pub fn minimize(
         problem.obj.hess_weights(problem.shard, w, weights);
         let reg = problem.obj.lambda() + problem.mu;
         let hvp = ShardHvp::new(problem.shard, weights, reg);
-        let out = cg_solve(&hvp, &g, &mut delta, opts.cg_tol, opts.cg_max_iters, cg)?;
+        let out = cg_solve(&hvp, g, delta, opts.cg_tol, opts.cg_max_iters, cg)?;
         report.cg_iters_total += out.iters;
 
         // Backtrack: w_try = w - s * delta until Armijo holds.
-        let slope = ops::dot(&g, &delta); // descent: slope > 0 since H SPD
+        let slope = ops::dot(g, delta); // descent: slope > 0 since H SPD
         let mut s = 1.0;
         let mut accepted = false;
         for _ in 0..=opts.max_halvings {
             for j in 0..d {
                 w_try[j] = w[j] - s * delta[j];
             }
-            let h_try = problem.value(&w_try, rowbuf);
+            let h_try = problem.value(w_try, rowbuf);
             if h_try <= h - opts.armijo_c * s * slope {
-                w.copy_from_slice(&w_try);
+                w.copy_from_slice(w_try);
                 accepted = true;
                 break;
             }
@@ -177,7 +208,7 @@ pub fn minimize(
             // (numerical) optimality — report and stop.
             return Ok(report);
         }
-        h = problem.value_grad(w, &mut g, rowbuf);
+        h = problem.value_grad(w, g, rowbuf);
     }
 }
 
@@ -191,14 +222,14 @@ mod tests {
         let mut w = vec![0.0; d];
         let mut rowbuf = vec![0.0; n];
         let mut weights = vec![0.0; n];
-        let mut cg = CgScratch::new(d);
+        let mut scratch = NewtonCgScratch::new(d);
         let rep = minimize(
             problem,
             &mut w,
             &NewtonCgOptions::default(),
             &mut rowbuf,
             &mut weights,
-            &mut cg,
+            &mut scratch,
         )
         .unwrap();
         (w, rep)
@@ -261,23 +292,45 @@ mod tests {
 
     #[test]
     fn dane_identity_m1() {
-        // With one machine, c = grad phi(w') - eta * grad phi(w') ... i.e.
-        // eta = 1 makes the DANE local problem's optimum the global ERM.
+        // With one machine phi_i = phi, so the DANE tilt (paper eq. 13)
+        // is c = grad phi_i(w') - eta grad phi(w') = (1-eta) grad phi(w').
+        // The tilted optimum satisfies grad phi(w) = c; for eta = 1 the
+        // tilt vanishes and the local solve lands on the global ERM.
         let shard = reg_shard(60, 7, 12);
         let obj = Ridge::new(0.05);
         // ERM reference
         let erm = Composite { obj: &obj, shard: &shard, c: None, mu: 0.0, w0: None };
         let (w_star, _) = run(&erm, 7, 60);
-        // DANE local from arbitrary w'
+        // DANE local from arbitrary w', with the tilt built explicitly
         let wp: Vec<f64> = (0..7).map(|i| (i as f64) * 0.3 - 1.0).collect();
         let mut g = vec![0.0; 7];
         let mut rb = vec![0.0; 60];
         obj.value_grad(&shard, &wp, &mut g, &mut rb);
-        // c = grad phi_i(w') - eta grad phi(w') = 0 when phi_i = phi, eta=1
-        let p = Composite { obj: &obj, shard: &shard, c: None, mu: 0.0, w0: None };
-        let (w1, _) = run(&p, 7, 60);
-        for j in 0..7 {
-            assert!((w1[j] - w_star[j]).abs() < 1e-8);
+        for &eta in &[1.0, 0.5] {
+            let c: Vec<f64> = g.iter().map(|gi| (1.0 - eta) * gi).collect();
+            let p = Composite { obj: &obj, shard: &shard, c: Some(&c), mu: 0.0, w0: None };
+            let (w1, rep) = run(&p, 7, 60);
+            assert!(rep.converged, "eta={eta}: {rep:?}");
+            // stationarity of the tilted problem: grad phi(w1) = c
+            let mut g1 = vec![0.0; 7];
+            obj.value_grad(&shard, &w1, &mut g1, &mut rb);
+            for j in 0..7 {
+                assert!(
+                    (g1[j] - c[j]).abs() < 1e-8,
+                    "eta={eta} j={j}: {} vs {}",
+                    g1[j],
+                    c[j]
+                );
+            }
+            if eta == 1.0 {
+                // eta = 1 makes the one-machine DANE step exactly ERM
+                for j in 0..7 {
+                    assert!((w1[j] - w_star[j]).abs() < 1e-8);
+                }
+            } else {
+                // a genuine tilt moves the optimum off the ERM point
+                assert!(ops::dist2(&w1, &w_star) > 1e-6);
+            }
         }
     }
 }

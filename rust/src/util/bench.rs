@@ -6,7 +6,18 @@
 //! interquartile range over sample batches, with warmup — the same
 //! methodology criterion uses, minus the statistical machinery an
 //! offline build can't pull in.
+//!
+//! Every `bench` call is also recorded, and [`Bencher::write_json`]
+//! serializes the run to a machine-readable trajectory file
+//! (`BENCH_hotpath.json` at the repo root for the hot-path suite), so
+//! perf claims in PRs are checkable against committed numbers
+//! (EXPERIMENTS.md §Perf). Durations honor the `BENCH_MEASURE_MS` /
+//! `BENCH_WARMUP_MS` environment variables via [`Bencher::from_env`] —
+//! CI's bench-smoke job shrinks them to seconds-total.
 
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// One benchmark runner with shared settings.
@@ -17,15 +28,13 @@ pub struct Bencher {
     pub warmup_time: Duration,
     /// Max samples (batches) collected.
     pub max_samples: usize,
+    /// Every completed measurement, in call order (JSON sink).
+    records: RefCell<Vec<BenchRecord>>,
 }
 
 impl Default for Bencher {
     fn default() -> Self {
-        Bencher {
-            measure_time: Duration::from_secs(2),
-            warmup_time: Duration::from_millis(300),
-            max_samples: 60,
-        }
+        Bencher::new(Duration::from_secs(2), Duration::from_millis(300), 60)
     }
 }
 
@@ -45,10 +54,42 @@ impl BenchStats {
     }
 }
 
+/// One recorded measurement (per-iteration nanoseconds).
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    pub median_ns: f64,
+    pub p25_ns: f64,
+    pub p75_ns: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
 impl Bencher {
+    pub fn new(measure_time: Duration, warmup_time: Duration, max_samples: usize) -> Self {
+        Bencher { measure_time, warmup_time, max_samples, records: RefCell::new(Vec::new()) }
+    }
+
+    /// [`Bencher::new`] with durations overridable from the environment
+    /// (`BENCH_MEASURE_MS`, `BENCH_WARMUP_MS`) so CI can smoke the bench
+    /// binaries in seconds while local runs keep meaningful sample sizes.
+    pub fn from_env(default_measure_ms: u64, default_warmup_ms: u64, max_samples: usize) -> Self {
+        let env_ms = |key: &str, default: u64| {
+            std::env::var(key)
+                .ok()
+                .and_then(|v| v.parse::<u64>().ok())
+                .unwrap_or(default)
+        };
+        Bencher::new(
+            Duration::from_millis(env_ms("BENCH_MEASURE_MS", default_measure_ms)),
+            Duration::from_millis(env_ms("BENCH_WARMUP_MS", default_warmup_ms)),
+            max_samples,
+        )
+    }
+
     /// Time `f`, batching iterations so each sample lasts >= ~1ms, and
     /// print a criterion-style line. Returns the stats for programmatic
-    /// use (EXPERIMENTS.md tables).
+    /// use and records them for [`Bencher::write_json`].
     pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
         // Warmup + batch-size calibration.
         let mut iters: u64 = 1;
@@ -105,8 +146,76 @@ impl Bencher {
             stats.samples,
             stats.iters_per_sample,
         );
+        self.records.borrow_mut().push(BenchRecord {
+            name: name.to_string(),
+            median_ns: stats.per_iter_ns(),
+            p25_ns: stats.p25.as_nanos() as f64 / iters as f64,
+            p75_ns: stats.p75.as_nanos() as f64 / iters as f64,
+            iters_per_sample: stats.iters_per_sample,
+            samples: stats.samples,
+        });
         stats
     }
+
+    /// Recorded measurements so far, in call order.
+    pub fn records(&self) -> Vec<BenchRecord> {
+        self.records.borrow().clone()
+    }
+
+    /// Median ns of the record whose name matches exactly.
+    pub fn median_ns_of(&self, name: &str) -> Option<f64> {
+        self.records
+            .borrow()
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.median_ns)
+    }
+
+    /// Serialize every recorded measurement to `path` as pretty JSON:
+    /// `{schema, bench, label, results: [{name, median_ns, p25_ns,
+    /// p75_ns, iters_per_sample, samples}, ...]}`. The label should make
+    /// the run git-describable (see [`git_label`]).
+    pub fn write_json(&self, path: &Path, bench_name: &str, label: &str) -> std::io::Result<()> {
+        let results: Vec<Json> = self
+            .records
+            .borrow()
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("median_ns", Json::num(r.median_ns)),
+                    ("p25_ns", Json::num(r.p25_ns)),
+                    ("p75_ns", Json::num(r.p75_ns)),
+                    ("iters_per_sample", Json::num(r.iters_per_sample as f64)),
+                    ("samples", Json::num(r.samples as f64)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("schema", Json::str("dane-bench-v1")),
+            ("bench", Json::str(bench_name)),
+            ("label", Json::str(label)),
+            ("results", Json::Arr(results)),
+        ]);
+        std::fs::write(path, doc.to_string_pretty() + "\n")
+    }
+}
+
+/// A git-describable label for bench trajectories: `BENCH_LABEL` env var
+/// if set, else `git describe --always --dirty`, else "unknown".
+pub fn git_label() -> String {
+    if let Ok(l) = std::env::var("BENCH_LABEL") {
+        return l;
+    }
+    std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
 }
 
 /// Human duration from nanoseconds.
@@ -132,13 +241,13 @@ pub fn black_box<T>(x: T) -> T {
 mod tests {
     use super::*;
 
+    fn quick() -> Bencher {
+        Bencher::new(Duration::from_millis(50), Duration::from_millis(5), 10)
+    }
+
     #[test]
     fn bench_produces_sane_stats() {
-        let b = Bencher {
-            measure_time: Duration::from_millis(50),
-            warmup_time: Duration::from_millis(5),
-            max_samples: 10,
-        };
+        let b = quick();
         let mut acc = 0u64;
         let stats = b.bench("noop-ish", || {
             acc = black_box(acc.wrapping_add(1));
@@ -146,6 +255,48 @@ mod tests {
         assert!(stats.samples >= 1);
         assert!(stats.per_iter_ns() >= 0.0);
         assert!(stats.p25 <= stats.p75);
+    }
+
+    #[test]
+    fn records_and_json_roundtrip() {
+        let b = quick();
+        let mut acc = 0u64;
+        b.bench("first", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        b.bench("second", || {
+            acc = black_box(acc.wrapping_add(3));
+        });
+        assert_eq!(b.records().len(), 2);
+        assert!(b.median_ns_of("first").is_some());
+        assert!(b.median_ns_of("missing").is_none());
+
+        let dir = crate::util::tempdir::TempDir::new("bench_json").unwrap();
+        let path = dir.path().join("out.json");
+        b.write_json(&path, "unit_test", "test-label").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.req("schema").unwrap().as_str(), Some("dane-bench-v1"));
+        assert_eq!(doc.req("bench").unwrap().as_str(), Some("unit_test"));
+        assert_eq!(doc.req("label").unwrap().as_str(), Some("test-label"));
+        let results = doc.req("results").unwrap().as_array().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].req("name").unwrap().as_str(), Some("first"));
+        assert!(results[0].req("median_ns").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(results[1].req("samples").unwrap().as_usize().unwrap() >= 1);
+    }
+
+    #[test]
+    fn from_env_falls_back_to_defaults() {
+        // (environment not set in tests; just pin the default wiring)
+        let b = Bencher::from_env(123, 7, 5);
+        if std::env::var("BENCH_MEASURE_MS").is_err() {
+            assert_eq!(b.measure_time, Duration::from_millis(123));
+        }
+        if std::env::var("BENCH_WARMUP_MS").is_err() {
+            assert_eq!(b.warmup_time, Duration::from_millis(7));
+        }
+        assert_eq!(b.max_samples, 5);
     }
 
     #[test]

@@ -14,8 +14,30 @@ use crate::Result;
 use std::collections::HashMap;
 
 /// Above this dimension the dense Gram (d x d) is not worth materializing
-/// and workers fall back to Hessian-free CG. 1024 doubles^2 = 8 MiB.
+/// and workers fall back to Hessian-free CG. At d = 1024: the Gram is
+/// 8 MiB, and each memoized Cholesky factor stores L *and* L^T (for
+/// contiguous forward/backward solves), i.e. 16 MiB per cached shift —
+/// DANE uses one shift, ADMM a second, so budget up to ~40 MiB per
+/// worker at the cap.
 pub const CHOLESKY_MAX_DIM: usize = 1024;
+
+/// Thread count for the one-time Gram build: the deterministic parallel
+/// kernel pays off only on genuinely large shards, and a fixed
+/// size-ladder keeps the count (hence the reduction order and the bits)
+/// reproducible for a given machine. Below the cutoff the serial tiled
+/// kernel runs — which also keeps every small-fixture test bit-identical
+/// to `DenseMatrix::gram`.
+fn gram_build_threads(rows: usize, cols: usize) -> usize {
+    const PAR_GRAM_MIN_CELLS: usize = 1 << 18; // 256k cells ~ 2 MiB of X
+    if rows.saturating_mul(cols) < PAR_GRAM_MIN_CELLS {
+        1
+    } else {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(4)
+    }
+}
 
 /// Gram matrix + per-shift Cholesky factors + X^T y of one shard.
 pub struct QuadCache {
@@ -30,7 +52,15 @@ pub struct QuadCache {
 impl QuadCache {
     pub fn build(shard: &Shard) -> Result<Self> {
         let n = shard.n_effective() as f64;
-        let mut gram = shard.x.gram();
+        // Dense shards large enough to amortize thread spawns build the
+        // Gram with the deterministic parallel kernel; everything else
+        // takes the serial tiled path (sparse Gram is CSR-specific).
+        let mut gram = match &shard.x {
+            crate::linalg::DataMatrix::Dense(x) => {
+                x.par_gram(gram_build_threads(x.rows(), x.cols()))
+            }
+            other => other.gram(),
+        };
         for i in 0..gram.rows() {
             for j in 0..gram.cols() {
                 let v = gram.get(i, j) / n;
@@ -61,12 +91,30 @@ impl QuadCache {
     /// full-rank). Factors are memoized: DANE reuses one shift for the
     /// whole run, ADMM a second.
     pub fn solve_shifted(&mut self, shift: f64, rhs: &[f64]) -> Result<Vec<f64>> {
+        let mut out = Vec::new();
+        self.solve_shifted_into(shift, rhs, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`QuadCache::solve_shifted`] into a caller-owned buffer: after the
+    /// one-time factorization, steady-state solves are pure O(d^2)
+    /// back-substitution with zero heap allocations — the worker half of
+    /// the zero-allocation round protocol (EXPERIMENTS.md §Perf).
+    pub fn solve_shifted_into(
+        &mut self,
+        shift: f64,
+        rhs: &[f64],
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
         let key = shift.to_bits();
         if !self.factors.contains_key(&key) {
             let shifted = self.gram.add_diag(shift);
             self.factors.insert(key, CholeskyFactor::factor(&shifted)?);
         }
-        Ok(self.factors[&key].solve(rhs))
+        out.clear();
+        out.extend_from_slice(rhs);
+        self.factors[&key].solve_in_place(out);
+        Ok(())
     }
 
     /// Number of distinct factored shifts (diagnostics / tests).
@@ -116,6 +164,21 @@ mod tests {
         assert_eq!(cache.cached_factor_count(), 1);
         cache.solve_shifted(0.7, &rhs).unwrap();
         assert_eq!(cache.cached_factor_count(), 2);
+    }
+
+    #[test]
+    fn solve_into_matches_and_reuses_buffer() {
+        let s = shard();
+        let mut cache = QuadCache::build(&s).unwrap();
+        let rhs = vec![1.0, 0.0, -1.0];
+        let direct = cache.solve_shifted(0.3, &rhs).unwrap();
+        let mut buf = Vec::new();
+        cache.solve_shifted_into(0.3, &rhs, &mut buf).unwrap();
+        assert_eq!(buf, direct);
+        let cap = buf.capacity();
+        cache.solve_shifted_into(0.3, &rhs, &mut buf).unwrap();
+        assert_eq!(buf, direct);
+        assert_eq!(buf.capacity(), cap, "steady-state solve must not reallocate");
     }
 
     #[test]

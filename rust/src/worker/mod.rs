@@ -20,10 +20,9 @@ pub mod local_solver;
 pub use backend::WorkerBackend;
 
 use crate::data::Shard;
-use crate::linalg::cg::CgScratch;
 use crate::linalg::ops;
 use crate::loss::Objective;
-use crate::solver::newton_cg::{minimize, Composite, NewtonCgOptions};
+use crate::solver::newton_cg::{minimize, Composite, NewtonCgOptions, NewtonCgScratch};
 use crate::{Error, Result};
 use local_solver::QuadCache;
 use std::sync::Arc;
@@ -36,10 +35,15 @@ pub struct Worker {
     backend: WorkerBackend,
     /// Lazily-built Gram/Cholesky cache (quadratic objectives, d small).
     quad: Option<QuadCache>,
-    // scratch
+    // scratch — everything a steady-state round needs, owned up front so
+    // the per-round protocol allocates nothing (EXPERIMENTS.md §Perf)
     rowbuf: Vec<f64>,
     weights: Vec<f64>,
-    cg: CgScratch,
+    newton: NewtonCgScratch,
+    /// Cached-Cholesky path: delta = (H_i + mu I)^{-1} g lands here.
+    solve_buf: Vec<f64>,
+    /// Newton-CG path: the DANE tilt c = grad phi_i(w') - eta g.
+    cbuf: Vec<f64>,
     newton_opts: NewtonCgOptions,
 }
 
@@ -54,7 +58,9 @@ impl Worker {
             quad: None,
             rowbuf: vec![0.0; n],
             weights: vec![0.0; n],
-            cg: CgScratch::new(d),
+            newton: NewtonCgScratch::new(d),
+            solve_buf: vec![0.0; d],
+            cbuf: vec![0.0; d],
             newton_opts: NewtonCgOptions::default(),
         }
     }
@@ -119,31 +125,58 @@ impl Worker {
         eta: f64,
         mu: f64,
     ) -> Result<Vec<f64>> {
+        let mut out = Vec::new();
+        self.dane_local_solve_into(w_prev, g, eta, mu, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Worker::dane_local_solve`] into a caller-owned buffer — the
+    /// worker half of the zero-allocation round protocol. On the cached
+    /// quadratic path a steady-state call touches no heap: the factor is
+    /// memoized, delta lands in worker scratch, and the result reuses
+    /// `out`'s existing capacity (the coordinator recycles these buffers
+    /// round over round).
+    pub fn dane_local_solve_into(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
         if let WorkerBackend::Pjrt(rt) = &self.backend {
-            return rt.dane_local_solve(
-                &self.shard,
-                self.obj.as_ref(),
-                w_prev,
-                g,
-                eta,
-                mu,
-            );
+            let w =
+                rt.dane_local_solve(&self.shard, self.obj.as_ref(), w_prev, g, eta, mu)?;
+            out.clear();
+            out.extend_from_slice(&w);
+            return Ok(());
         }
         if self.obj.is_quadratic() && self.quad_usable() {
             // delta = (H_i + mu I)^{-1} g ; w_i = w_prev - eta * delta
             let shift = self.obj.lambda() + mu;
+            let mut delta = std::mem::take(&mut self.solve_buf);
             let cache = self.quad_cache()?;
-            let delta = cache.solve_shifted(shift, g)?;
-            let mut w = w_prev.to_vec();
-            ops::axpy(-eta, &delta, &mut w);
-            return Ok(w);
+            let solved = cache.solve_shifted_into(shift, g, &mut delta);
+            if let Err(e) = solved {
+                self.solve_buf = delta;
+                return Err(e);
+            }
+            out.clear();
+            out.extend_from_slice(w_prev);
+            ops::axpy(-eta, &delta, out);
+            self.solve_buf = delta;
+            return Ok(());
         }
         // General path: Newton-CG on the composite. c = grad phi_i(w') - eta g.
         let d = self.dim();
-        let mut c = vec![0.0; d];
+        let mut c = std::mem::take(&mut self.cbuf);
+        c.clear();
+        c.resize(d, 0.0);
         self.obj
             .value_grad(&self.shard, w_prev, &mut c, &mut self.rowbuf);
         ops::axpy(-eta, g, &mut c);
+        out.clear();
+        out.extend_from_slice(w_prev);
         let problem = Composite {
             obj: self.obj.as_ref(),
             shard: &self.shard,
@@ -151,16 +184,17 @@ impl Worker {
             mu,
             w0: Some(w_prev),
         };
-        let mut w = w_prev.to_vec();
-        minimize(
+        let res = minimize(
             &problem,
-            &mut w,
+            out,
             &self.newton_opts,
             &mut self.rowbuf,
             &mut self.weights,
-            &mut self.cg,
-        )?;
-        Ok(w)
+            &mut self.newton,
+        );
+        self.cbuf = c;
+        res?;
+        Ok(())
     }
 
     /// ADMM proximal step: `argmin_w phi_i(w) + (rho/2)||w - v||^2`.
@@ -187,7 +221,7 @@ impl Worker {
             &self.newton_opts,
             &mut self.rowbuf,
             &mut self.weights,
-            &mut self.cg,
+            &mut self.newton,
         )?;
         Ok(w)
     }
@@ -214,7 +248,7 @@ impl Worker {
             &self.newton_opts,
             &mut self.rowbuf,
             &mut self.weights,
-            &mut self.cg,
+            &mut self.newton,
         )?;
         Ok(w)
     }
@@ -252,7 +286,7 @@ impl Worker {
             &self.newton_opts,
             &mut rowbuf,
             &mut weights,
-            &mut self.cg,
+            &mut self.newton,
         )?;
         Ok(w)
     }
@@ -275,6 +309,13 @@ impl Worker {
     /// of moderate dimension).
     fn quad_usable(&self) -> bool {
         self.dim() <= local_solver::CHOLESKY_MAX_DIM
+    }
+
+    /// Whether the dense Gram/Cholesky cache has actually been built —
+    /// diagnostics for tests pinning the Hessian-free fallback above
+    /// [`local_solver::CHOLESKY_MAX_DIM`].
+    pub fn quad_cache_built(&self) -> bool {
+        self.quad.is_some()
     }
 
     fn quad_cache(&mut self) -> Result<&mut QuadCache> {
@@ -330,8 +371,8 @@ mod tests {
         };
         let mut slow = w_prev.clone();
         let mut weights = vec![0.0; 50];
-        let mut cgs = CgScratch::new(8);
-        minimize(&problem, &mut slow, &NewtonCgOptions::default(), &mut rb, &mut weights, &mut cgs)
+        let mut scratch = NewtonCgScratch::new(8);
+        minimize(&problem, &mut slow, &NewtonCgOptions::default(), &mut rb, &mut weights, &mut scratch)
             .unwrap();
         for j in 0..8 {
             assert!((fast[j] - slow[j]).abs() < 1e-7, "{} vs {}", fast[j], slow[j]);
@@ -387,5 +428,62 @@ mod tests {
         assert_eq!(h.rows(), 6);
         // diagonal includes lambda
         assert!(h.get(0, 0) >= 0.25);
+    }
+
+    #[test]
+    fn solve_into_reuses_out_buffer() {
+        let shard = reg_shard(50, 8, 3);
+        let obj = Arc::new(Ridge::new(0.1));
+        let mut wk = Worker::new(0, shard, obj);
+        let w_prev = vec![0.3; 8];
+        let mut g = vec![0.0; 8];
+        wk.grad(&w_prev, &mut g).unwrap();
+        let direct = wk.dane_local_solve(&w_prev, &g, 1.0, 0.5).unwrap();
+        let mut out = Vec::new();
+        wk.dane_local_solve_into(&w_prev, &g, 1.0, 0.5, &mut out).unwrap();
+        assert_eq!(out, direct);
+        let cap = out.capacity();
+        wk.dane_local_solve_into(&w_prev, &g, 1.0, 0.5, &mut out).unwrap();
+        assert_eq!(out, direct);
+        assert_eq!(out.capacity(), cap, "steady-state solve must not regrow out");
+    }
+
+    #[test]
+    fn falls_back_to_newton_cg_above_cholesky_max_dim() {
+        use crate::linalg::{DataMatrix, DenseMatrix};
+        // few rows, d just past the cap: the dense d x d Gram must never
+        // be materialized; lam > 0 keeps the composite strongly convex
+        let d = local_solver::CHOLESKY_MAX_DIM + 1;
+        let n = 6;
+        let mut rng = crate::util::Rng64::seed_from_u64(5);
+        let mut x = DenseMatrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                x.set(i, j, rng.range_f64(-1.0, 1.0));
+            }
+        }
+        let y: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let shard = Shard::new(DataMatrix::Dense(x), y);
+        let obj = Arc::new(Ridge::new(0.1));
+        let mut wk = Worker::new(0, shard, obj.clone());
+        let w_prev = vec![0.0; d];
+        let mut g = vec![0.0; d];
+        wk.grad(&w_prev, &mut g).unwrap();
+        let (eta, mu) = (1.0, 0.5);
+        let w1 = wk.dane_local_solve(&w_prev, &g, eta, mu).unwrap();
+        assert!(
+            !wk.quad_cache_built(),
+            "d > CHOLESKY_MAX_DIM must take the Hessian-free Newton-CG path"
+        );
+        // DANE local optimality: grad phi(w1) - c + mu (w1 - w') = 0 with
+        // c = grad phi_i(w') - eta g = 0 here (phi_i = phi, eta = 1)
+        let mut g1 = vec![0.0; d];
+        wk.grad(&w1, &mut g1).unwrap();
+        let mut resid: f64 = 0.0;
+        for j in 0..d {
+            let r = g1[j] + mu * (w1[j] - w_prev[j]);
+            resid += r * r;
+        }
+        assert!(resid.sqrt() < 1e-7, "stationarity residual {}", resid.sqrt());
     }
 }

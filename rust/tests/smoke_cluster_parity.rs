@@ -113,7 +113,7 @@ fn parity_holds_for_eval_and_collective_surface() {
     // avg_row_sq_norm reduces in a different association order on the two
     // engines (global sum vs n_i-weighted per-worker means), so it agrees
     // to rounding, not bit-exactly.
-    let (rs, rt) = (s.avg_row_sq_norm(), t.avg_row_sq_norm());
+    let (rs, rt) = (s.avg_row_sq_norm().unwrap(), t.avg_row_sq_norm().unwrap());
     assert!((rs - rt).abs() <= 1e-12 * rs.abs().max(1.0), "{rs} vs {rt}");
     assert_eq!(s.comm_stats(), t.comm_stats());
 }
