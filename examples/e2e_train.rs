@@ -45,7 +45,7 @@ fn main() -> Result<(), dane::Error> {
     let mut cluster =
         SerialCluster::with_net(&ds, obj, m, 42, NetModel::datacenter());
     let ctx = RunCtx::new(30).with_reference(phi_star).with_tol(1e-10);
-    let res = dane_algo::run(&mut cluster, &dane_algo::DaneOptions::default(), &ctx);
+    let res = dane_algo::run(&mut cluster, &dane_algo::DaneOptions::default(), &ctx)?;
     emit::write_csv_file(&res.trace, &out.join("ridge_dane_m16.csv"))?;
 
     println!("[e2e] ridge loss curve (suboptimality by DANE iteration):");
@@ -82,7 +82,7 @@ fn main() -> Result<(), dane::Error> {
         .with_tol(1e-8)
         .with_test_shard(test);
     let opts = dane_algo::DaneOptions { eta: 1.0, mu: 3.0 * lam_h, ..Default::default() };
-    let resh = dane_algo::run(&mut cluster, &opts, &ctx);
+    let resh = dane_algo::run(&mut cluster, &opts, &ctx)?;
     emit::write_csv_file(&resh.trace, &out.join("hinge_dane_m16.csv"))?;
     for r in resh.trace.rows.iter() {
         println!(
@@ -118,7 +118,7 @@ fn main() -> Result<(), dane::Error> {
             pjrt_cluster.use_pjrt(Arc::new(registry))?;
             let ctx2 = RunCtx::new(12).with_reference(phi_star2).with_tol(1e-5);
             let res2 =
-                dane_algo::run(&mut pjrt_cluster, &dane_algo::DaneOptions::default(), &ctx2);
+                dane_algo::run(&mut pjrt_cluster, &dane_algo::DaneOptions::default(), &ctx2)?;
             emit::write_csv_file(&res2.trace, &out.join("ridge_dane_pjrt.csv"))?;
             for r in &res2.trace.rows {
                 println!(

@@ -35,7 +35,7 @@ fn main() -> Result<(), dane::Error> {
             .with_tol(1e-6)
             .with_test_shard(test.clone());
         let opts = dane_algo::DaneOptions { eta: 1.0, mu: 3.0 * lam, ..Default::default() };
-        let res = dane_algo::run(&mut cluster, &opts, &ctx);
+        let res = dane_algo::run(&mut cluster, &opts, &ctx)?;
 
         let acc = {
             // 0/1 test accuracy of the trained predictor

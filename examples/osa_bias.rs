@@ -39,15 +39,15 @@ fn main() -> Result<(), dane::Error> {
     let ctx = RunCtx::new(3).with_reference(phi_star);
 
     let mut c = SerialCluster::new(&ds, obj.clone(), m, 3);
-    let plain = osa::run(&mut c, &osa::OsaOptions::default(), &ctx);
+    let plain = osa::run(&mut c, &osa::OsaOptions::default(), &ctx)?;
     let mut c = SerialCluster::new(&ds, obj.clone(), m, 3);
     let bc = osa::run(
         &mut c,
         &osa::OsaOptions { bias_correction_r: Some(0.5), seed: 1 },
         &ctx,
-    );
+    )?;
     let mut c = SerialCluster::new(&ds, obj, m, 3);
-    let d2 = dane_algo::run(&mut c, &dane_algo::DaneOptions::default(), &ctx);
+    let d2 = dane_algo::run(&mut c, &dane_algo::DaneOptions::default(), &ctx)?;
 
     println!("ridge fig2(N=16384, d=100), m={m}: empirical suboptimality");
     println!("  osa (1 round):        {:.3e}", plain.trace.last_suboptimality().unwrap());

@@ -33,7 +33,7 @@ fn main() -> Result<(), dane::Error> {
 
     // 4. Run DANE with the paper's preferred setting (eta = 1, mu = 0).
     let ctx = RunCtx::new(20).with_reference(phi_star).with_tol(1e-10);
-    let res = dane_algo::run(&mut cluster, &dane_algo::DaneOptions::default(), &ctx);
+    let res = dane_algo::run(&mut cluster, &dane_algo::DaneOptions::default(), &ctx)?;
 
     println!("DANE on fig2(N=8192, d=200), m=8:");
     println!(

@@ -31,9 +31,9 @@ fn main() -> Result<(), dane::Error> {
         let ctx = RunCtx::new(25).with_reference(phi_star).with_tol(1e-12);
 
         let mut c1 = SerialCluster::new(&ds, obj.clone(), m, 3);
-        let r_dane = dane_algo::run(&mut c1, &dane_algo::DaneOptions::default(), &ctx);
+        let r_dane = dane_algo::run(&mut c1, &dane_algo::DaneOptions::default(), &ctx)?;
         let mut c2 = SerialCluster::new(&ds, obj, m, 3);
-        let r_admm = admm::run(&mut c2, &admm::AdmmOptions { rho: 0.05 }, &ctx);
+        let r_admm = admm::run(&mut c2, &admm::AdmmOptions { rho: 0.05 }, &ctx)?;
 
         let rate = |t: &dane::metrics::Trace| {
             let f = t.contraction_factors();

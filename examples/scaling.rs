@@ -27,12 +27,12 @@ fn run_case(n_total: usize, m: usize, d: usize) -> Result<(usize, usize, f64), d
     let tol = 1e-6;
     let ctx = RunCtx::new(200).with_reference(phi_star).with_tol(tol);
     let mut c = SerialCluster::with_net(&ds, obj.clone(), m, 3, NetModel::datacenter());
-    let r_dane = dane_algo::run(&mut c, &dane_algo::DaneOptions::default(), &ctx);
+    let r_dane = dane_algo::run(&mut c, &dane_algo::DaneOptions::default(), &ctx)?;
     let modeled = c.comm_stats().modeled_seconds;
 
     let ctx = RunCtx::new(4000).with_reference(phi_star).with_tol(tol);
     let mut c = SerialCluster::new(&ds, obj, m, 3);
-    let r_agd = gd::run_agd(&mut c, &gd::AgdOptions::default(), &ctx);
+    let r_agd = gd::run_agd(&mut c, &gd::AgdOptions::default(), &ctx)?;
 
     Ok((
         r_dane.trace.rounds_to_tol(tol).unwrap_or(usize::MAX),

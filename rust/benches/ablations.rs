@@ -47,7 +47,7 @@ fn abl_local_solve_exactness() {
         }
         let ctx = RunCtx::new(60).with_reference(phi_star).with_tol(1e-6);
         let opts = dane_algo::DaneOptions { eta: 1.0, mu: 3.0 * lam, ..Default::default() };
-        let res = dane_algo::run(&mut cluster, &opts, &ctx);
+        let res = dane_algo::run(&mut cluster, &opts, &ctx).expect("run");
         println!(
             "{grad_tol:>12.0e} {cg_iters:>10} {:>14}",
             res.trace
@@ -70,7 +70,7 @@ fn abl_mu_sweep() {
         let mut cluster = SerialCluster::new(&ds, obj.clone(), 8, 3);
         let ctx = RunCtx::new(300).with_reference(phi_star).with_tol(1e-9);
         let opts = dane_algo::DaneOptions { eta: 1.0, mu: mu_mult * lam, ..Default::default() };
-        let res = dane_algo::run(&mut cluster, &opts, &ctx);
+        let res = dane_algo::run(&mut cluster, &opts, &ctx).expect("run");
         let f = res.trace.contraction_factors();
         let k = f.len().min(5).max(1);
         let rate = f.iter().take(k).sum::<f64>() / k as f64;
@@ -96,7 +96,7 @@ fn abl_eta_sweep() {
         let mut cluster = SerialCluster::new(&ds, obj.clone(), 8, 3);
         let ctx = RunCtx::new(400).with_reference(phi_star).with_tol(1e-9);
         let opts = dane_algo::DaneOptions { eta, mu: 0.0, ..Default::default() };
-        let res = dane_algo::run(&mut cluster, &opts, &ctx);
+        let res = dane_algo::run(&mut cluster, &opts, &ctx).expect("run");
         println!(
             "{eta:>8} {:>14}",
             res.trace
@@ -123,5 +123,5 @@ fn abl_topology() {
             t(Topology::Tree)
         );
     }
-    println!("(latency-bound at these payloads: tree/star win; ring only pays off for MB+ payloads)");
+    println!("(latency-bound at these payloads: tree wins — the sequential star serializes at the root; ring only pays off for MB+ payloads)");
 }

@@ -7,6 +7,7 @@
 //! bench` under a few minutes on one core; scale 1 is the paper-size
 //! harness recorded in EXPERIMENTS.md).
 
+use dane::config::EngineKind;
 use std::path::Path;
 
 fn main() {
@@ -14,9 +15,15 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(8);
-    println!("== fig2 bench (scale {scale}; DANE_BENCH_SCALE to change) ==");
+    let engine = EngineKind::from_env("DANE_BENCH_ENGINE").expect("DANE_BENCH_ENGINE");
+    println!(
+        "== fig2 bench (scale {scale}; DANE_BENCH_SCALE to change; engine {}; \
+         DANE_BENCH_ENGINE=serial|threaded) ==",
+        engine.name()
+    );
     let t0 = std::time::Instant::now();
-    let cells = dane::harness::fig2(scale, Path::new("results/fig2")).expect("fig2 harness");
+    let cells = dane::harness::fig2(scale, Path::new("results/fig2"), engine)
+        .expect("fig2 harness");
     println!("\nfig2 series (log10 suboptimality by iteration):");
     for c in &cells {
         let series: Vec<String> =

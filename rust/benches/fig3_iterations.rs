@@ -3,6 +3,7 @@
 //!
 //! `DANE_BENCH_SCALE` divides dataset sizes (default 8).
 
+use dane::config::EngineKind;
 use std::path::Path;
 
 fn main() {
@@ -10,9 +11,11 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(8);
-    println!("== fig3 bench (scale {scale}) ==");
+    let engine = EngineKind::from_env("DANE_BENCH_ENGINE").expect("DANE_BENCH_ENGINE");
+    println!("== fig3 bench (scale {scale}, engine {}) ==", engine.name());
     let t0 = std::time::Instant::now();
-    let cols = dane::harness::fig3(scale, Path::new("results/fig3")).expect("fig3 harness");
+    let cols = dane::harness::fig3(scale, Path::new("results/fig3"), engine)
+        .expect("fig3 harness");
     // Shape checks mirroring the paper's table: DANE's row should be flat
     // in m until shards get small; report the spread.
     for c in &cols {

@@ -4,6 +4,7 @@
 //!
 //! `DANE_BENCH_SCALE` divides dataset sizes (default 8).
 
+use dane::config::EngineKind;
 use std::path::Path;
 
 fn main() {
@@ -11,9 +12,11 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(8);
-    println!("== fig4 bench (scale {scale}) ==");
+    let engine = EngineKind::from_env("DANE_BENCH_ENGINE").expect("DANE_BENCH_ENGINE");
+    println!("== fig4 bench (scale {scale}, engine {}) ==", engine.name());
     let t0 = std::time::Instant::now();
-    let panels = dane::harness::fig4(scale, Path::new("results/fig4")).expect("fig4 harness");
+    let panels = dane::harness::fig4(scale, Path::new("results/fig4"), engine)
+        .expect("fig4 harness");
     for p in &panels {
         println!("  [{}] opt test loss {:.6}", p.dataset, p.opt_test_loss);
         for (label, series) in &p.series {

@@ -157,7 +157,7 @@ fn main() {
     let mut cluster = SerialCluster::new(&big, obj2.clone(), 8, 3);
     // warm caches
     let ctx = RunCtx::new(2).with_reference(phi_star).with_tol(0.0);
-    dane::coordinator::dane::run(&mut cluster, &Default::default(), &ctx);
+    dane::coordinator::dane::run(&mut cluster, &Default::default(), &ctx).expect("warmup");
     let w = vec![0.0; 256];
     b.bench("cluster grad_and_loss m=8 N=8192 d=256", || {
         black_box(cluster.grad_and_loss(&w).unwrap());

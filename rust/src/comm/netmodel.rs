@@ -16,7 +16,9 @@
 /// Collective algorithm / topology.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Topology {
-    /// Leader gathers then scatters: 2 steps, 2(m-1)B traffic at the root.
+    /// Leader gathers then scatters through its single link: the root
+    /// sequentially receives m-1 payloads, then sequentially sends m-1 —
+    /// 2(m-1) steps and 2(m-1)B traffic on the critical path.
     Star,
     /// Ring allreduce: 2(m-1) steps, each moving B/m per link.
     Ring,
@@ -59,8 +61,10 @@ impl NetModel {
         let b = bytes as f64;
         let m_f = m as f64;
         let (steps, traffic) = match self.topology {
-            // Root sequentially receives m-1 payloads then sends m-1.
-            Topology::Star => (2.0, 2.0 * (m_f - 1.0) * b),
+            // Root sequentially receives m-1 payloads then sends m-1:
+            // both the latency term and the traffic serialize at the
+            // root, so both scale with (m-1).
+            Topology::Star => (2.0 * (m_f - 1.0), 2.0 * (m_f - 1.0) * b),
             // Classic ring allreduce: 2(m-1) steps of B/m each.
             Topology::Ring => (2.0 * (m_f - 1.0), 2.0 * (m_f - 1.0) * b / m_f),
             // Binomial tree: up + down, B per step on the critical path.
@@ -95,10 +99,39 @@ mod tests {
     }
 
     #[test]
-    fn star_beats_ring_latency_for_tiny_payloads() {
+    fn star_latency_serializes_at_the_root() {
+        // The old 2-step star model under-charged the root's sequential
+        // receive/send; with the serialization modeled, star's latency
+        // term grows linearly in m, exactly tying ring's 2(m-1) steps —
+        // and any bandwidth cost then breaks the tie in ring's favor
+        // (B/m per ring step vs the full B through the root).
         let star = NetModel::new(50e-6, 0.0, Topology::Star);
         let ring = NetModel::new(50e-6, 0.0, Topology::Ring);
-        assert!(star.collective_seconds(64, 8) < ring.collective_seconds(64, 8));
+        assert_eq!(star.collective_seconds(64, 8), ring.collective_seconds(64, 8));
+        assert_eq!(
+            star.collective_seconds(64, 8) / star.collective_seconds(2, 8),
+            63.0,
+            "star latency must scale with (m-1)"
+        );
+        let star_b = NetModel::new(50e-6, 1e-9, Topology::Star);
+        let ring_b = NetModel::new(50e-6, 1e-9, Topology::Ring);
+        assert!(
+            ring_b.collective_seconds(64, 8) < star_b.collective_seconds(64, 8),
+            "with bandwidth charged, ring wins even for tiny payloads"
+        );
+    }
+
+    #[test]
+    fn tree_beats_star_and_ring_latency_for_tiny_payloads() {
+        // The regime where a latency-optimal topology genuinely wins
+        // tiny payloads at scale is the logarithmic one: 2 log2(m)
+        // steps vs 2(m-1) for both the (serialized) star and the ring.
+        let alpha = 50e-6;
+        let tree = NetModel::new(alpha, 0.0, Topology::Tree);
+        let star = NetModel::new(alpha, 0.0, Topology::Star);
+        let ring = NetModel::new(alpha, 0.0, Topology::Ring);
+        assert!(tree.collective_seconds(64, 8) < star.collective_seconds(64, 8));
+        assert!(tree.collective_seconds(64, 8) < ring.collective_seconds(64, 8));
     }
 
     #[test]

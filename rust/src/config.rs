@@ -253,6 +253,51 @@ impl BackendKind {
     }
 }
 
+/// Which cluster engine drives the workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Inline single-threaded leader loop — deterministic, the
+    /// measurement engine for figures and tests.
+    #[default]
+    Serial,
+    /// One OS thread per worker behind the zero-allocation round
+    /// protocol (`coordinator::threaded`). Bit-identical traces to
+    /// `Serial` by construction (smoke_cluster_parity).
+    Threaded,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Serial => "serial",
+            EngineKind::Threaded => "threaded",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s {
+            "serial" => Ok(EngineKind::Serial),
+            "threaded" => Ok(EngineKind::Threaded),
+            other => Err(Error::Config(format!(
+                "unknown engine {other:?} (expected \"serial\" or \"threaded\")"
+            ))),
+        }
+    }
+
+    /// Engine named by the environment variable `var` (the figure
+    /// benches share `DANE_BENCH_ENGINE`); unset = serial, a set but
+    /// invalid value is an error.
+    pub fn from_env(var: &str) -> Result<Self> {
+        match std::env::var(var) {
+            Ok(v) => Self::from_name(&v),
+            Err(std::env::VarError::NotPresent) => Ok(EngineKind::Serial),
+            Err(std::env::VarError::NotUnicode(_)) => {
+                Err(Error::Config(format!("{var} is not valid UTF-8")))
+            }
+        }
+    }
+}
+
 /// Serializable network-model config.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NetConfig {
@@ -302,6 +347,16 @@ pub struct ExperimentConfig {
     pub tol: f64,
     pub seed: u64,
     pub backend: BackendKind,
+    /// Which cluster engine runs the workers (default: serial).
+    pub engine: EngineKind,
+    /// Override for the workers' Gram-build thread count (the
+    /// deterministic `par_gram` kernel). Applies to *both* engines —
+    /// it is a per-worker compute knob, orthogonal to the engine — so
+    /// serial and threaded runs of the same config stay bit-identical.
+    /// Only dense shards have a parallel Gram kernel; on sparse
+    /// datasets (astro-like, libsvm) the override is a documented
+    /// no-op. None = the built-in size ladder.
+    pub threads: Option<usize>,
     /// Evaluate test loss each round (fig. 4).
     pub eval_test: bool,
     pub net: NetConfig,
@@ -320,6 +375,11 @@ impl ExperimentConfig {
             ("tol", Json::num(self.tol)),
             ("seed", Json::num(self.seed as f64)),
             ("backend", Json::str(self.backend.name())),
+            ("engine", Json::str(self.engine.name())),
+            (
+                "threads",
+                self.threads.map(|t| Json::num(t as f64)).unwrap_or(Json::Null),
+            ),
             ("eval_test", Json::Bool(self.eval_test)),
             (
                 "net",
@@ -355,6 +415,16 @@ impl ExperimentConfig {
             Some(s) => BackendKind::from_name(s)?,
             None => BackendKind::Native,
         };
+        let engine = match v.get("engine").and_then(|x| x.as_str()) {
+            Some(s) => EngineKind::from_name(s)?,
+            None => EngineKind::Serial,
+        };
+        let threads = match v.get("threads") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(t.as_usize().ok_or_else(|| {
+                Error::Config("threads must be a nonneg int".into())
+            })?),
+        };
         let eval_test = v.get("eval_test").and_then(|x| x.as_bool()).unwrap_or(false);
         let net = match v.get("net") {
             Some(n) => {
@@ -382,6 +452,8 @@ impl ExperimentConfig {
             tol,
             seed,
             backend,
+            engine,
+            threads,
             eval_test,
             net,
         })
@@ -409,6 +481,14 @@ impl ExperimentConfig {
         }
         if self.lambda < 0.0 {
             return Err(Error::Config("lambda must be >= 0".into()));
+        }
+        if self.threads == Some(0) {
+            return Err(Error::Config("threads must be >= 1".into()));
+        }
+        if self.engine == EngineKind::Threaded && self.backend == BackendKind::Pjrt {
+            return Err(Error::Config(
+                "pjrt backend requires the serial engine".into(),
+            ));
         }
         if matches!(self.loss, LossKind::Ridge)
             && matches!(
@@ -449,6 +529,8 @@ mod tests {
             tol: 1e-6,
             seed: 42,
             backend: BackendKind::Native,
+            engine: EngineKind::Serial,
+            threads: None,
             eval_test: false,
             net: NetConfig::free(),
         }
@@ -478,6 +560,52 @@ mod tests {
         assert_eq!(c.tol, 1e-6); // default
         assert_eq!(c.algo.name(), "dane");
         assert_eq!(c.net, NetConfig::datacenter()); // default
+        assert_eq!(c.engine, EngineKind::Serial); // default
+        assert_eq!(c.threads, None); // default
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn engine_and_threads_roundtrip() {
+        for (engine, threads) in [
+            (EngineKind::Serial, None),
+            (EngineKind::Serial, Some(4)),
+            (EngineKind::Threaded, None),
+            (EngineKind::Threaded, Some(2)),
+        ] {
+            let mut c = sample();
+            c.engine = engine;
+            c.threads = threads;
+            let c2 = ExperimentConfig::from_json_str(&c.to_json_string()).unwrap();
+            assert_eq!(c2.engine, engine);
+            assert_eq!(c2.threads, threads);
+            c2.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn engine_parses_from_handwritten_json() {
+        let mut base = sample().to_json_string();
+        base = base.replacen("\"engine\": \"serial\"", "\"engine\": \"threaded\"", 1);
+        let c = ExperimentConfig::from_json_str(&base).unwrap();
+        assert_eq!(c.engine, EngineKind::Threaded);
+        assert!(EngineKind::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn engine_validation_catches_mismatches() {
+        let mut c = sample();
+        c.threads = Some(0);
+        assert!(c.validate().is_err(), "threads: 0 must be rejected");
+
+        let mut c = sample();
+        c.engine = EngineKind::Threaded;
+        c.backend = BackendKind::Pjrt;
+        assert!(c.validate().is_err(), "pjrt is serial-engine only");
+
+        let mut c = sample();
+        c.engine = EngineKind::Threaded;
+        c.threads = Some(2);
         c.validate().unwrap();
     }
 

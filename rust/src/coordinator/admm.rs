@@ -14,9 +14,10 @@
 //! fig. 2/3 benches show exactly the consequence: its rate does not
 //! improve with the per-machine sample size.
 
-use super::{AlgoResult, Cluster, RunCtx};
+use super::{finish, AlgoOutcome, Cluster, RunCtx};
 use crate::linalg::ops;
 use crate::metrics::Trace;
+use crate::Result;
 
 /// ADMM hyperparameters.
 #[derive(Debug, Clone, Copy)]
@@ -31,25 +32,38 @@ impl Default for AdmmOptions {
     }
 }
 
-/// Run consensus ADMM from z = 0.
-pub fn run(cluster: &mut dyn Cluster, opts: &AdmmOptions, ctx: &RunCtx) -> AlgoResult {
+/// Run consensus ADMM from z = 0. Cluster failures return as an error
+/// carrying the trace-so-far — never a panic.
+pub fn run(cluster: &mut dyn Cluster, opts: &AdmmOptions, ctx: &RunCtx) -> AlgoOutcome {
+    let mut z = vec![0.0; cluster.dim()];
+    let mut trace = Trace::new();
+    let mut converged = false;
+    let res = run_loop(cluster, opts, ctx, &mut z, &mut trace, &mut converged);
+    finish("admm", res, z, trace, converged)
+}
+
+fn run_loop(
+    cluster: &mut dyn Cluster,
+    opts: &AdmmOptions,
+    ctx: &RunCtx,
+    z: &mut Vec<f64>,
+    trace: &mut Trace,
+    converged: &mut bool,
+) -> Result<()> {
     let d = cluster.dim();
     let m = cluster.m();
     let obj = cluster.objective();
-    let mut z = vec![0.0; d];
     let mut u: Vec<Vec<f64>> = vec![vec![0.0; d]; m];
-    let mut trace = Trace::new();
-    let mut converged = false;
     let t0 = std::time::Instant::now();
 
     // round 0: initial point (instrumentation only)
-    let loss0 = cluster.eval_loss(&z).expect("eval failed");
+    let loss0 = cluster.eval_loss(z)?;
     trace.push(
         0,
         loss0,
         ctx.subopt(loss0),
         None,
-        ctx.test_loss(obj.as_ref(), &z),
+        ctx.test_loss(obj.as_ref(), z),
         &cluster.comm_stats(),
         0.0,
     );
@@ -64,7 +78,7 @@ pub fn run(cluster: &mut dyn Cluster, opts: &AdmmOptions, ctx: &RunCtx) -> AlgoR
                 v
             })
             .collect();
-        let w_all = cluster.prox_all(&targets, opts.rho).expect("prox failed");
+        let w_all = cluster.prox_all(&targets, opts.rho)?;
 
         // Consensus average (the iteration's single communication round).
         let sums: Vec<Vec<f64>> = w_all
@@ -76,7 +90,7 @@ pub fn run(cluster: &mut dyn Cluster, opts: &AdmmOptions, ctx: &RunCtx) -> AlgoR
                 s
             })
             .collect();
-        z = cluster.allreduce_mean_vecs(&sums);
+        *z = cluster.allreduce_mean_vecs(&sums);
 
         // Dual updates.
         for (ui, wi) in u.iter_mut().zip(&w_all) {
@@ -86,24 +100,23 @@ pub fn run(cluster: &mut dyn Cluster, opts: &AdmmOptions, ctx: &RunCtx) -> AlgoR
         }
 
         // Instrumentation.
-        let loss = cluster.eval_loss(&z).expect("eval failed");
+        let loss = cluster.eval_loss(z)?;
         let subopt = ctx.subopt(loss);
         trace.push(
             iter,
             loss,
             subopt,
             None,
-            ctx.test_loss(obj.as_ref(), &z),
+            ctx.test_loss(obj.as_ref(), z),
             &cluster.comm_stats(),
             t0.elapsed().as_secs_f64(),
         );
         if subopt.map(|s| s < ctx.tol).unwrap_or(false) {
-            converged = true;
+            *converged = true;
             break;
         }
     }
-
-    AlgoResult { name: "admm".into(), w: z, trace, converged }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -122,7 +135,7 @@ mod tests {
         let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
         let mut cluster = SerialCluster::new(&ds, obj, 4, 5);
         let ctx = RunCtx::new(200).with_reference(phi_star).with_tol(1e-6);
-        let res = run(&mut cluster, &AdmmOptions { rho: 0.1 }, &ctx);
+        let res = run(&mut cluster, &AdmmOptions { rho: 0.1 }, &ctx).unwrap();
         assert!(res.converged, "last: {:?}", res.trace.last_suboptimality());
     }
 
@@ -134,7 +147,7 @@ mod tests {
         let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
         let mut cluster = SerialCluster::new(&ds, obj, 4, 9);
         let ctx = RunCtx::new(300).with_reference(phi_star).with_tol(1e-6);
-        let res = run(&mut cluster, &AdmmOptions { rho: 0.05 }, &ctx);
+        let res = run(&mut cluster, &AdmmOptions { rho: 0.05 }, &ctx).unwrap();
         assert!(res.converged, "last: {:?}", res.trace.last_suboptimality());
     }
 
@@ -144,7 +157,7 @@ mod tests {
         let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
         let mut cluster = SerialCluster::new(&ds, obj, 4, 4);
         let ctx = RunCtx::new(7).with_tol(0.0);
-        let res = run(&mut cluster, &AdmmOptions { rho: 0.1 }, &ctx);
+        let res = run(&mut cluster, &AdmmOptions { rho: 0.1 }, &ctx).unwrap();
         assert_eq!(res.trace.rows.last().unwrap().comm_rounds, 7);
     }
 
@@ -156,7 +169,7 @@ mod tests {
         let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
         let mut cluster = SerialCluster::new(&ds, obj, 1, 4);
         let ctx = RunCtx::new(200).with_reference(phi_star).with_tol(1e-8);
-        let res = run(&mut cluster, &AdmmOptions { rho: 0.05 }, &ctx);
+        let res = run(&mut cluster, &AdmmOptions { rho: 0.05 }, &ctx).unwrap();
         assert!(res.converged);
     }
 }

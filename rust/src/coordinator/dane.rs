@@ -10,9 +10,10 @@
 //! which *improves with n* in the stochastic setting (Theorem 3) — the
 //! fig. 2 bench regenerates exactly that behavior.
 
-use super::{AlgoResult, Cluster, RunCtx};
+use super::{finish, AlgoOutcome, Cluster, RunCtx};
 use crate::linalg::ops;
 use crate::metrics::Trace;
+use crate::Result;
 
 /// How the local solutions combine into w^(t).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -53,28 +54,42 @@ impl Default for DaneOptions {
 /// double-buffers through `w`/`w_next` and the gradient lands in a
 /// persistent buffer via the `*_into` collective methods (the trace rows
 /// themselves are instrumentation and amortize their own storage).
-pub fn run(cluster: &mut dyn Cluster, opts: &DaneOptions, ctx: &RunCtx) -> AlgoResult {
-    let d = cluster.dim();
-    let obj = cluster.objective();
-    let mut w = vec![0.0; d];
-    let mut w_next = vec![0.0; d];
-    let mut g = vec![0.0; d];
+///
+/// A failed cluster round (worker death, singular local solve, ...)
+/// aborts the run and returns the error with the trace-so-far attached —
+/// it never panics.
+pub fn run(cluster: &mut dyn Cluster, opts: &DaneOptions, ctx: &RunCtx) -> AlgoOutcome {
+    let mut w = vec![0.0; cluster.dim()];
     let mut trace = Trace::new();
     let mut converged = false;
+    let res = run_loop(cluster, opts, ctx, &mut w, &mut trace, &mut converged);
+    finish("dane", res, w, trace, converged)
+}
+
+fn run_loop(
+    cluster: &mut dyn Cluster,
+    opts: &DaneOptions,
+    ctx: &RunCtx,
+    w: &mut Vec<f64>,
+    trace: &mut Trace,
+    converged: &mut bool,
+) -> Result<()> {
+    let d = cluster.dim();
+    let obj = cluster.objective();
+    let mut w_next = vec![0.0; d];
+    let mut g = vec![0.0; d];
     let t0 = std::time::Instant::now();
 
     for iter in 0..=ctx.max_rounds {
         // Gradient round (also yields the objective for the trace). The
         // final pass is instrumentation only — the algorithm is done.
-        let loss = if iter < ctx.max_rounds && !converged {
-            cluster.grad_and_loss_into(&w, &mut g)
+        let loss = if iter < ctx.max_rounds && !*converged {
+            cluster.grad_and_loss_into(w, &mut g)?
         } else {
-            cluster.eval_grad_loss(&w).map(|(gv, l)| {
-                g.copy_from_slice(&gv);
-                l
-            })
-        }
-        .expect("gradient round failed");
+            let (gv, l) = cluster.eval_grad_loss(w)?;
+            g.copy_from_slice(&gv);
+            l
+        };
 
         let subopt = ctx.subopt(loss);
         trace.push(
@@ -82,19 +97,19 @@ pub fn run(cluster: &mut dyn Cluster, opts: &DaneOptions, ctx: &RunCtx) -> AlgoR
             loss,
             subopt,
             Some(ops::norm2(&g)),
-            ctx.test_loss(obj.as_ref(), &w),
+            ctx.test_loss(obj.as_ref(), w),
             &cluster.comm_stats(),
             t0.elapsed().as_secs_f64(),
         );
 
         if let Some(s) = subopt {
             if s < ctx.tol {
-                converged = true;
+                *converged = true;
                 break;
             }
         }
         if ops::norm2(&g) < opts.grad_tol {
-            converged = true;
+            *converged = true;
             break;
         }
         if iter == ctx.max_rounds {
@@ -104,20 +119,15 @@ pub fn run(cluster: &mut dyn Cluster, opts: &DaneOptions, ctx: &RunCtx) -> AlgoR
         // Local-solve + combine round.
         match opts.combine {
             Combine::Average => {
-                cluster
-                    .dane_round_into(&w, &g, opts.eta, opts.mu, &mut w_next)
-                    .expect("dane round failed");
-                std::mem::swap(&mut w, &mut w_next);
+                cluster.dane_round_into(w, &g, opts.eta, opts.mu, &mut w_next)?;
+                std::mem::swap(w, &mut w_next);
             }
             Combine::First => {
-                w = cluster
-                    .dane_round_first(&w, &g, opts.eta, opts.mu)
-                    .expect("dane round failed");
+                *w = cluster.dane_round_first(w, &g, opts.eta, opts.mu)?;
             }
         }
     }
-
-    AlgoResult { name: "dane".into(), w, trace, converged }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -137,7 +147,7 @@ mod tests {
         let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
         let mut cluster = SerialCluster::new(&ds, obj, 1, 1);
         let ctx = RunCtx::new(5).with_reference(phi_star).with_tol(1e-10);
-        let res = run(&mut cluster, &DaneOptions::default(), &ctx);
+        let res = run(&mut cluster, &DaneOptions::default(), &ctx).unwrap();
         assert!(res.converged);
         assert_eq!(res.trace.rounds_to_tol(1e-10), Some(1), "one Newton step");
     }
@@ -149,7 +159,7 @@ mod tests {
         let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
         let mut cluster = SerialCluster::new(&ds, obj, 8, 3);
         let ctx = RunCtx::new(30).with_reference(phi_star).with_tol(1e-10);
-        let res = run(&mut cluster, &DaneOptions::default(), &ctx);
+        let res = run(&mut cluster, &DaneOptions::default(), &ctx).unwrap();
         assert!(res.converged, "subopt trace: {:?}", res.trace.suboptimality());
         // contraction factors should be < 1 (linear convergence)
         let f = res.trace.contraction_factors();
@@ -178,7 +188,7 @@ mod tests {
             let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
             let mut cluster = SerialCluster::new(&ds, obj.clone(), 4, 5);
             let ctx = RunCtx::new(25).with_reference(phi_star).with_tol(1e-12);
-            let res = run(&mut cluster, &DaneOptions::default(), &ctx);
+            let res = run(&mut cluster, &DaneOptions::default(), &ctx).unwrap();
             let f = res.trace.contraction_factors();
             assert!(!f.is_empty(), "n={n}: no contraction factors");
             rates.push(geo_rate(&f));
@@ -199,7 +209,7 @@ mod tests {
         let mut cluster = SerialCluster::new(&ds, obj.clone(), 4, 9);
         let ctx = RunCtx::new(40).with_reference(phi_star).with_tol(1e-9);
         let opts = DaneOptions { combine: Combine::First, ..Default::default() };
-        let res_first = run(&mut cluster, &opts, &ctx);
+        let res_first = run(&mut cluster, &opts, &ctx).unwrap();
         assert!(res_first.converged, "{:?}", res_first.trace.suboptimality());
 
         // ...but the averaged variant contracts at least as fast
@@ -208,7 +218,7 @@ mod tests {
         // single seed the measured rates carry shard-sampling noise, so
         // allow a 2x cushion rather than asserting strict dominance.
         let mut cluster = SerialCluster::new(&ds, obj, 4, 9);
-        let res_avg = run(&mut cluster, &DaneOptions::default(), &ctx);
+        let res_avg = run(&mut cluster, &DaneOptions::default(), &ctx).unwrap();
         assert!(res_avg.converged, "{:?}", res_avg.trace.suboptimality());
         let rate = |t: &crate::metrics::Trace| {
             let f = t.contraction_factors();
@@ -224,7 +234,7 @@ mod tests {
         let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
         let mut cluster = SerialCluster::new(&ds, obj, 4, 4);
         let ctx = RunCtx::new(5).with_tol(0.0); // never converges on tol
-        let res = run(&mut cluster, &DaneOptions::default(), &ctx);
+        let res = run(&mut cluster, &DaneOptions::default(), &ctx).unwrap();
         // 5 full iterations = 5 grad rounds + 5 iterate rounds
         let last = res.trace.rows.last().unwrap();
         assert_eq!(last.comm_rounds, 10);
@@ -241,7 +251,7 @@ mod tests {
         let mut cluster = SerialCluster::new(&ds, obj, 4, 13);
         let ctx = RunCtx::new(40).with_reference(phi_star).with_tol(1e-6);
         let opts = DaneOptions { eta: 1.0, mu: 3.0 * lam, ..Default::default() };
-        let res = run(&mut cluster, &opts, &ctx);
+        let res = run(&mut cluster, &opts, &ctx).unwrap();
         assert!(res.converged, "trace: {:?}", res.trace.suboptimality());
     }
 
@@ -257,7 +267,7 @@ mod tests {
         let mut cluster = SerialCluster::new(&ds, obj, 8, 13);
         let ctx = RunCtx::new(15).with_reference(phi_star).with_tol(0.0);
         let opts = DaneOptions { eta: 1.0, mu: 1.0, ..Default::default() };
-        let res = run(&mut cluster, &opts, &ctx);
+        let res = run(&mut cluster, &opts, &ctx).unwrap();
         let s = res.trace.suboptimality();
         assert!(
             s.last().unwrap() < &(s[0] * 0.9),

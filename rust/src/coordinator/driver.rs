@@ -1,8 +1,15 @@
 //! Experiment driver: config -> dataset -> reference ERM -> cluster ->
 //! algorithm -> result. The CLI and all example binaries go through here.
+//!
+//! The cluster engine is config-selected (`engine: serial | threaded`)
+//! and every algorithm runs against `&mut dyn Cluster`, so the whole
+//! path from JSON to trace is engine-generic. Failures (a dead worker, a
+//! singular local solve) propagate as `Err` all the way to the CLI —
+//! nothing on this path panics.
 
-use super::{admm, dane, gd, lbfgs, osa, AlgoResult, RunCtx, SerialCluster};
-use crate::config::{AlgoConfig, BackendKind, ExperimentConfig};
+use super::threaded::ThreadedCluster;
+use super::{admm, dane, gd, lbfgs, osa, AlgoResult, Cluster, RunCtx, SerialCluster};
+use crate::config::{AlgoConfig, BackendKind, EngineKind, ExperimentConfig};
 use crate::loss::make_objective;
 use crate::metrics::Trace;
 use crate::runtime::ArtifactRegistry;
@@ -30,6 +37,41 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunResult> {
     run_experiment_with_artifacts(cfg, None)
 }
 
+/// Build the configured engine over `ds`. The shard seed and the
+/// `threads` override are identical across engines, so a threaded run
+/// of the same config is trace-identical to a serial one
+/// (smoke_cluster_parity pins this through the driver).
+fn build_cluster(
+    cfg: &ExperimentConfig,
+    ds: &crate::data::Dataset,
+    obj: Arc<dyn crate::loss::Objective>,
+    artifact_dir: Option<&Path>,
+) -> Result<Box<dyn Cluster>> {
+    let shard_seed = cfg.seed.wrapping_add(1);
+    Ok(match cfg.engine {
+        EngineKind::Serial => {
+            let mut c =
+                SerialCluster::with_net(ds, obj, cfg.machines, shard_seed, cfg.net.build());
+            c.set_gram_threads(cfg.threads);
+            if cfg.backend == BackendKind::Pjrt {
+                let dir = artifact_dir.unwrap_or_else(|| Path::new("artifacts"));
+                let registry = Arc::new(ArtifactRegistry::open(dir)?);
+                c.use_pjrt(registry)?;
+            }
+            Box::new(c)
+        }
+        // validate() rejects threaded + pjrt, so no backend switch here.
+        EngineKind::Threaded => Box::new(ThreadedCluster::with_net_threads(
+            ds,
+            obj,
+            cfg.machines,
+            shard_seed,
+            cfg.net.build(),
+            cfg.threads,
+        )),
+    })
+}
+
 /// Like [`run_experiment`], with an explicit artifact dir for the PJRT
 /// backend (defaults to `artifacts/`).
 pub fn run_experiment_with_artifacts(
@@ -43,18 +85,7 @@ pub fn run_experiment_with_artifacts(
     // Reference optimum for the suboptimality axis.
     let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard())?;
 
-    let mut cluster = SerialCluster::with_net(
-        &ds,
-        obj,
-        cfg.machines,
-        cfg.seed.wrapping_add(1),
-        cfg.net.build(),
-    );
-    if cfg.backend == BackendKind::Pjrt {
-        let dir = artifact_dir.unwrap_or_else(|| Path::new("artifacts"));
-        let registry = Arc::new(ArtifactRegistry::open(dir)?);
-        cluster.use_pjrt(registry)?;
-    }
+    let mut cluster = build_cluster(cfg, &ds, obj, artifact_dir)?;
 
     let mut ctx = RunCtx::new(cfg.rounds)
         .with_reference(phi_star)
@@ -65,7 +96,7 @@ pub fn run_experiment_with_artifacts(
         }
     }
 
-    let result = dispatch(&mut cluster, &cfg.algo, &ctx, cfg.lambda);
+    let result = dispatch(cluster.as_mut(), &cfg.algo, &ctx, cfg.lambda, cfg.seed)?;
     let rounds_to_tol = result.trace.rounds_to_tol(cfg.tol);
     Ok(RunResult {
         config: cfg.clone(),
@@ -78,51 +109,63 @@ pub fn run_experiment_with_artifacts(
     })
 }
 
-/// Dispatch an algorithm config onto a cluster.
+/// Dispatch an algorithm config onto any cluster engine. `seed` is the
+/// experiment seed; per-algorithm randomness (OSA's subsample draw)
+/// derives from it so that `cfg.seed` reproduces every run. Algorithm
+/// failures come back as `Err` — never a panic. Flattening to
+/// `crate::Error` keeps only a progress summary (algo, rounds
+/// recorded, cause); callers that need the partial trace itself should
+/// call the algorithm's `run` directly and inspect the `AlgoError`.
 pub fn dispatch(
-    cluster: &mut SerialCluster,
+    cluster: &mut dyn Cluster,
     algo: &AlgoConfig,
     ctx: &RunCtx,
     lambda: f64,
-) -> AlgoResult {
-    match algo {
+    seed: u64,
+) -> Result<AlgoResult> {
+    Ok(match algo {
         AlgoConfig::Dane { eta, mu_over_lambda } => {
             let opts = dane::DaneOptions {
                 eta: *eta,
                 mu: mu_over_lambda * lambda,
                 ..Default::default()
             };
-            dane::run(cluster, &opts, ctx)
+            dane::run(cluster, &opts, ctx)?
         }
         AlgoConfig::Gd { step } => {
-            gd::run_gd(cluster, &gd::GdOptions { step: *step }, ctx)
+            gd::run_gd(cluster, &gd::GdOptions { step: *step }, ctx)?
         }
         AlgoConfig::Agd { step } => gd::run_agd(
             cluster,
             &gd::AgdOptions { step: *step, strong_convexity: None },
             ctx,
-        ),
+        )?,
         AlgoConfig::Admm { rho } => {
-            admm::run(cluster, &admm::AdmmOptions { rho: *rho }, ctx)
+            admm::run(cluster, &admm::AdmmOptions { rho: *rho }, ctx)?
         }
+        // Seed streams: cfg.seed draws the dataset, cfg.seed+1 the
+        // sharding, cfg.seed+2 the OSA subsample — disjoint by offset.
         AlgoConfig::Osa { bias_correction_r } => osa::run(
             cluster,
-            &osa::OsaOptions { bias_correction_r: *bias_correction_r, seed: 7 },
+            &osa::OsaOptions {
+                bias_correction_r: *bias_correction_r,
+                seed: seed.wrapping_add(2),
+            },
             ctx,
-        ),
+        )?,
         AlgoConfig::Lbfgs { history } => lbfgs::run(
             cluster,
             &lbfgs::LbfgsOptions { history: *history, ..Default::default() },
             ctx,
-        ),
-    }
+        )?,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{DatasetConfig, LossKind, NetConfig};
     use crate::comm::Topology;
+    use crate::config::{DatasetConfig, LossKind, NetConfig};
 
     fn base_cfg(algo: AlgoConfig) -> ExperimentConfig {
         ExperimentConfig {
@@ -136,6 +179,8 @@ mod tests {
             tol: 1e-8,
             seed: 11,
             backend: BackendKind::Native,
+            engine: EngineKind::Serial,
+            threads: None,
             eval_test: false,
             net: NetConfig { alpha: 0.0, beta: 0.0, topology: Topology::Star },
         }
@@ -170,9 +215,76 @@ mod tests {
     }
 
     #[test]
+    fn every_algorithm_dispatches_on_threaded_engine() {
+        for algo in [
+            AlgoConfig::Dane { eta: 1.0, mu_over_lambda: 0.0 },
+            AlgoConfig::Gd { step: None },
+            AlgoConfig::Agd { step: None },
+            AlgoConfig::Admm { rho: 0.1 },
+            AlgoConfig::Osa { bias_correction_r: Some(0.5) },
+            AlgoConfig::Lbfgs { history: 5 },
+        ] {
+            let mut cfg = base_cfg(algo);
+            cfg.engine = EngineKind::Threaded;
+            cfg.rounds = 5;
+            cfg.tol = 1e-3;
+            let res = run_experiment(&cfg).unwrap();
+            assert!(!res.trace.is_empty(), "{}", res.algo);
+        }
+    }
+
+    #[test]
     fn invalid_config_rejected() {
         let mut cfg = base_cfg(AlgoConfig::Gd { step: None });
         cfg.machines = 0;
         assert!(run_experiment(&cfg).is_err());
+
+        let mut cfg = base_cfg(AlgoConfig::Gd { step: None });
+        cfg.engine = EngineKind::Threaded;
+        cfg.backend = BackendKind::Pjrt;
+        assert!(run_experiment(&cfg).is_err(), "threaded + pjrt must be rejected");
+
+        let mut cfg = base_cfg(AlgoConfig::Gd { step: None });
+        cfg.threads = Some(0);
+        assert!(run_experiment(&cfg).is_err(), "threads: 0 must be rejected");
+    }
+
+    #[test]
+    fn osa_subsample_follows_config_seed() {
+        // The bias-corrected OSA draw must derive from the experiment
+        // seed: same seed -> bit-identical result, different seed (same
+        // data, same shards) -> a different subsample, hence different w.
+        let algo = AlgoConfig::Osa { bias_correction_r: Some(0.5) };
+        let cfg = base_cfg(algo.clone());
+        let ds = cfg.dataset.build(cfg.seed).unwrap();
+        let obj = make_objective(cfg.loss, cfg.lambda);
+        let ctx = RunCtx::new(1);
+
+        let mut run_with = |seed: u64| {
+            let mut c = SerialCluster::new(&ds, obj.clone(), cfg.machines, 7);
+            dispatch(&mut c, &algo, &ctx, cfg.lambda, seed).unwrap().w
+        };
+        let w_a = run_with(11);
+        let w_b = run_with(11);
+        assert_eq!(w_a, w_b, "same experiment seed must reproduce OSA exactly");
+        let w_c = run_with(12);
+        assert!(w_a != w_c, "the OSA subsample draw must follow cfg.seed");
+    }
+
+    #[test]
+    fn threads_override_plumbs_to_workers() {
+        // threads: Some(2) forces the deterministic parallel Gram build;
+        // the resulting run must still converge and match the default
+        // build to numerical rounding.
+        let mut cfg = base_cfg(AlgoConfig::Dane { eta: 1.0, mu_over_lambda: 0.0 });
+        let base = run_experiment(&cfg).unwrap();
+        cfg.threads = Some(2);
+        let forced = run_experiment(&cfg).unwrap();
+        assert!(forced.converged);
+        // same math, different reduction order: low-order-bit drift in
+        // the Gram perturbs the trajectory, not the optimum
+        for (a, b) in base.w.iter().zip(&forced.w) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
     }
 }

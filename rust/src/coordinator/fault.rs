@@ -1,0 +1,222 @@
+//! Deterministic fault injection for the cluster collective surface.
+//!
+//! [`FaultInjectCluster`] decorates any `dyn Cluster` and simulates a
+//! worker dying at a chosen point in the run: the k-th *worker-touching*
+//! collective call (counted and instrumentation rounds alike — a dead
+//! machine cannot answer either) returns `Err` instead of delegating,
+//! and every later call keeps failing, exactly like a real dead worker
+//! under the threaded engine's drain-then-error protocol.
+//!
+//! This is the test harness for the crate's error-propagation contract:
+//! every algorithm must surface the injected failure as an
+//! [`super::AlgoError`] carrying the trace-so-far — never a panic
+//! (`rust/tests/fault_injection.rs` runs the whole matrix on both
+//! engines).
+//!
+//! Leader-local operations (`allreduce_mean_vecs` of already-gathered
+//! vectors, `comm_stats`, dimensions) do not touch workers and pass
+//! through uncounted.
+
+use super::Cluster;
+use crate::comm::CommStats;
+use crate::loss::Objective;
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// A cluster in which worker `fail_worker` "dies" on the
+/// `fail_at_call`-th worker-touching collective call (1-based).
+pub struct FaultInjectCluster {
+    inner: Box<dyn Cluster>,
+    /// Label only: which worker the injected error *reports* as dead.
+    /// Both engines fail the whole round on any worker death (the
+    /// threaded engine drains all replies and surfaces the first
+    /// error), so the wrapper models a failed round, not a per-worker
+    /// degradation — the id never changes behavior.
+    fail_worker: usize,
+    fail_at_call: usize,
+    calls: usize,
+}
+
+impl FaultInjectCluster {
+    /// Wrap `inner`; the fault fires on worker-touching call number
+    /// `fail_at_call` (1-based) and every call after it. A trigger of
+    /// `usize::MAX` never fires (transparent passthrough).
+    /// `fail_worker` only names the dead worker in the error message.
+    pub fn new(inner: Box<dyn Cluster>, fail_worker: usize, fail_at_call: usize) -> Self {
+        FaultInjectCluster { inner, fail_worker, fail_at_call, calls: 0 }
+    }
+
+    /// Worker-touching calls observed so far.
+    pub fn calls(&self) -> usize {
+        self.calls
+    }
+
+    /// Whether the fault has fired.
+    pub fn tripped(&self) -> bool {
+        self.calls >= self.fail_at_call
+    }
+
+    fn tick(&mut self) -> Result<()> {
+        self.calls += 1;
+        if self.calls >= self.fail_at_call {
+            return Err(Error::Runtime(format!(
+                "injected fault: worker {} died (collective call {}, trigger {})",
+                self.fail_worker, self.calls, self.fail_at_call
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Cluster for FaultInjectCluster {
+    fn m(&self) -> usize {
+        self.inner.m()
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn objective(&self) -> Arc<dyn Objective> {
+        self.inner.objective()
+    }
+
+    fn grad_and_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        self.tick()?;
+        self.inner.grad_and_loss(w)
+    }
+
+    fn grad_and_loss_into(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
+        self.tick()?;
+        self.inner.grad_and_loss_into(w, g)
+    }
+
+    fn loss_only(&mut self, w: &[f64]) -> Result<f64> {
+        self.tick()?;
+        self.inner.loss_only(w)
+    }
+
+    fn dane_round(&mut self, w_prev: &[f64], g: &[f64], eta: f64, mu: f64) -> Result<Vec<f64>> {
+        self.tick()?;
+        self.inner.dane_round(w_prev, g, eta, mu)
+    }
+
+    fn dane_round_into(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+        out: &mut [f64],
+    ) -> Result<()> {
+        self.tick()?;
+        self.inner.dane_round_into(w_prev, g, eta, mu, out)
+    }
+
+    fn dane_round_first(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+    ) -> Result<Vec<f64>> {
+        self.tick()?;
+        self.inner.dane_round_first(w_prev, g, eta, mu)
+    }
+
+    fn prox_all(&mut self, targets: &[Vec<f64>], rho: f64) -> Result<Vec<Vec<f64>>> {
+        self.tick()?;
+        self.inner.prox_all(targets, rho)
+    }
+
+    fn local_erms(
+        &mut self,
+        subsample: Option<(f64, u64)>,
+    ) -> Result<(Vec<Vec<f64>>, Option<Vec<Vec<f64>>>)> {
+        self.tick()?;
+        self.inner.local_erms(subsample)
+    }
+
+    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Vec<f64> {
+        // Leader-local reduction of vectors already in hand — no worker
+        // involvement, so the fault cannot fire here.
+        self.inner.allreduce_mean_vecs(vecs)
+    }
+
+    fn avg_row_sq_norm(&mut self) -> Result<f64> {
+        self.tick()?;
+        self.inner.avg_row_sq_norm()
+    }
+
+    fn eval_loss(&mut self, w: &[f64]) -> Result<f64> {
+        self.tick()?;
+        self.inner.eval_loss(w)
+    }
+
+    fn eval_grad_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        self.tick()?;
+        self.inner.eval_grad_loss(w)
+    }
+
+    fn comm_stats(&self) -> CommStats {
+        self.inner.comm_stats()
+    }
+
+    fn reset_comm(&mut self) {
+        self.inner.reset_comm();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SerialCluster;
+    use crate::data::synthetic_fig2;
+    use crate::loss::Ridge;
+
+    fn wrapped(fail_at: usize) -> FaultInjectCluster {
+        let ds = synthetic_fig2(64, 5, 0.005, 3);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        FaultInjectCluster::new(Box::new(SerialCluster::new(&ds, obj, 2, 1)), 1, fail_at)
+    }
+
+    #[test]
+    fn transparent_before_trigger() {
+        let ds = synthetic_fig2(64, 5, 0.005, 3);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        let mut bare = SerialCluster::new(&ds, obj, 2, 1);
+        let mut faulty = wrapped(usize::MAX);
+        let w = vec![0.1; 5];
+        let (g1, l1) = bare.grad_and_loss(&w).unwrap();
+        let (g2, l2) = faulty.grad_and_loss(&w).unwrap();
+        assert_eq!(g1, g2);
+        assert_eq!(l1, l2);
+        assert_eq!(faulty.calls(), 1);
+        assert!(!faulty.tripped());
+    }
+
+    #[test]
+    fn fires_at_trigger_and_stays_dead() {
+        let mut c = wrapped(2);
+        let w = vec![0.0; 5];
+        assert!(c.grad_and_loss(&w).is_ok(), "call 1 precedes the trigger");
+        let err = c.loss_only(&w).unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "{err}");
+        assert!(c.tripped());
+        // a dead worker stays dead: every later call fails too
+        assert!(c.eval_loss(&w).is_err());
+        assert!(c.dane_round(&w, &w, 1.0, 0.1).is_err());
+    }
+
+    #[test]
+    fn leader_local_ops_never_fault() {
+        let mut c = wrapped(1);
+        let w = vec![0.0; 5];
+        assert!(c.grad_and_loss(&w).is_err());
+        // metadata and leader-side averaging still work on a dead cluster
+        assert_eq!(c.m(), 2);
+        assert_eq!(c.dim(), 5);
+        let mean = c.allreduce_mean_vecs(&[vec![1.0; 5], vec![3.0; 5]]);
+        assert_eq!(mean, vec![2.0; 5]);
+    }
+}

@@ -9,9 +9,10 @@
 //! `L <= l''_max * E[||x||^2] + lambda` (one extra counted round to
 //! average the squared row norms, once per run).
 
-use super::{AlgoResult, Cluster, RunCtx};
+use super::{finish, AlgoOutcome, Cluster, RunCtx};
 use crate::linalg::ops;
 use crate::metrics::Trace;
+use crate::Result;
 
 /// Plain GD options.
 #[derive(Debug, Clone, Copy, Default)]
@@ -30,88 +31,44 @@ pub struct AgdOptions {
 }
 
 /// Upper bound on the smoothness of phi via the data trace bound.
-/// Costs ONE counted round when the step is not supplied.
-fn trace_bound_l(cluster: &mut dyn Cluster) -> f64 {
+/// Costs ONE counted round when the step is not supplied; a dead worker
+/// surfaces here as an error like every other round.
+fn trace_bound_l(cluster: &mut dyn Cluster) -> Result<f64> {
     let obj = cluster.objective();
-    let row_sq = cluster.avg_row_sq_norm().expect("row-norm round failed");
-    obj.scalar_smoothness() * row_sq + obj.lambda()
+    let row_sq = cluster.avg_row_sq_norm()?;
+    Ok(obj.scalar_smoothness() * row_sq + obj.lambda())
 }
 
-/// Run distributed gradient descent from w = 0.
-pub fn run_gd(cluster: &mut dyn Cluster, opts: &GdOptions, ctx: &RunCtx) -> AlgoResult {
-    let d = cluster.dim();
-    let obj = cluster.objective();
-    let step = opts.step.unwrap_or_else(|| 1.0 / trace_bound_l(cluster));
-    let mut w = vec![0.0; d];
+/// Run distributed gradient descent from w = 0. Cluster failures return
+/// as an error carrying the trace-so-far — never a panic.
+pub fn run_gd(cluster: &mut dyn Cluster, opts: &GdOptions, ctx: &RunCtx) -> AlgoOutcome {
+    let mut w = vec![0.0; cluster.dim()];
     let mut trace = Trace::new();
     let mut converged = false;
-    let t0 = std::time::Instant::now();
-
-    for iter in 0..=ctx.max_rounds {
-        let (g, loss) = if iter < ctx.max_rounds && !converged {
-            cluster.grad_and_loss(&w)
-        } else {
-            cluster.eval_grad_loss(&w)
-        }
-        .expect("gradient round failed");
-        let subopt = ctx.subopt(loss);
-        trace.push(
-            iter,
-            loss,
-            subopt,
-            Some(ops::norm2(&g)),
-            ctx.test_loss(obj.as_ref(), &w),
-            &cluster.comm_stats(),
-            t0.elapsed().as_secs_f64(),
-        );
-        if subopt.map(|s| s < ctx.tol).unwrap_or(false) {
-            converged = true;
-            break;
-        }
-        if iter == ctx.max_rounds {
-            break;
-        }
-        ops::axpy(-step, &g, &mut w);
-    }
-
-    AlgoResult { name: "gd".into(), w, trace, converged }
+    let res = gd_loop(cluster, opts, ctx, &mut w, &mut trace, &mut converged);
+    finish("gd", res, w, trace, converged)
 }
 
-/// Run Nesterov-accelerated gradient descent (strongly convex variant,
-/// momentum (sqrt(kappa)-1)/(sqrt(kappa)+1)) from w = 0.
-pub fn run_agd(cluster: &mut dyn Cluster, opts: &AgdOptions, ctx: &RunCtx) -> AlgoResult {
-    let d = cluster.dim();
+fn gd_loop(
+    cluster: &mut dyn Cluster,
+    opts: &GdOptions,
+    ctx: &RunCtx,
+    w: &mut Vec<f64>,
+    trace: &mut Trace,
+    converged: &mut bool,
+) -> Result<()> {
     let obj = cluster.objective();
-    let l = match opts.step {
-        Some(s) => 1.0 / s,
-        None => trace_bound_l(cluster),
+    let step = match opts.step {
+        Some(s) => s,
+        None => 1.0 / trace_bound_l(cluster)?,
     };
-    let sc = opts.strong_convexity.unwrap_or_else(|| obj.lambda()).max(1e-300);
-    let kappa = (l / sc).max(1.0);
-    let momentum = (kappa.sqrt() - 1.0) / (kappa.sqrt() + 1.0);
-    let step = 1.0 / l;
-
-    let mut w = vec![0.0; d];
-    let mut w_prev = vec![0.0; d];
-    let mut lookahead = vec![0.0; d];
-    let mut trace = Trace::new();
-    let mut converged = false;
     let t0 = std::time::Instant::now();
 
     for iter in 0..=ctx.max_rounds {
-        // Gradient at the lookahead point drives the update; the trace
-        // reports phi at w (the returned iterate).
-        let (g, loss_look) = if iter < ctx.max_rounds && !converged {
-            cluster.grad_and_loss(&lookahead)
+        let (g, loss) = if iter < ctx.max_rounds && !*converged {
+            cluster.grad_and_loss(w)?
         } else {
-            cluster.eval_grad_loss(&lookahead)
-        }
-        .expect("gradient round failed");
-        // instrumentation: loss at w itself
-        let loss = if ops::dist2(&w, &lookahead) == 0.0 {
-            loss_look
-        } else {
-            cluster.eval_loss(&w).expect("eval failed")
+            cluster.eval_grad_loss(w)?
         };
         let subopt = ctx.subopt(loss);
         trace.push(
@@ -119,19 +76,89 @@ pub fn run_agd(cluster: &mut dyn Cluster, opts: &AgdOptions, ctx: &RunCtx) -> Al
             loss,
             subopt,
             Some(ops::norm2(&g)),
-            ctx.test_loss(obj.as_ref(), &w),
+            ctx.test_loss(obj.as_ref(), w),
             &cluster.comm_stats(),
             t0.elapsed().as_secs_f64(),
         );
         if subopt.map(|s| s < ctx.tol).unwrap_or(false) {
-            converged = true;
+            *converged = true;
+            break;
+        }
+        if iter == ctx.max_rounds {
+            break;
+        }
+        ops::axpy(-step, &g, w);
+    }
+    Ok(())
+}
+
+/// Run Nesterov-accelerated gradient descent (strongly convex variant,
+/// momentum (sqrt(kappa)-1)/(sqrt(kappa)+1)) from w = 0. Cluster
+/// failures return as an error carrying the trace-so-far.
+pub fn run_agd(cluster: &mut dyn Cluster, opts: &AgdOptions, ctx: &RunCtx) -> AlgoOutcome {
+    let mut w = vec![0.0; cluster.dim()];
+    let mut trace = Trace::new();
+    let mut converged = false;
+    let res = agd_loop(cluster, opts, ctx, &mut w, &mut trace, &mut converged);
+    finish("agd", res, w, trace, converged)
+}
+
+fn agd_loop(
+    cluster: &mut dyn Cluster,
+    opts: &AgdOptions,
+    ctx: &RunCtx,
+    w: &mut Vec<f64>,
+    trace: &mut Trace,
+    converged: &mut bool,
+) -> Result<()> {
+    let d = cluster.dim();
+    let obj = cluster.objective();
+    let l = match opts.step {
+        Some(s) => 1.0 / s,
+        None => trace_bound_l(cluster)?,
+    };
+    let sc = opts.strong_convexity.unwrap_or_else(|| obj.lambda()).max(1e-300);
+    let kappa = (l / sc).max(1.0);
+    let momentum = (kappa.sqrt() - 1.0) / (kappa.sqrt() + 1.0);
+    let step = 1.0 / l;
+
+    let mut w_prev = vec![0.0; d];
+    let mut lookahead = vec![0.0; d];
+    let t0 = std::time::Instant::now();
+
+    for iter in 0..=ctx.max_rounds {
+        // Gradient at the lookahead point drives the update; the trace
+        // reports phi at w (the returned iterate).
+        let (g, loss_look) = if iter < ctx.max_rounds && !*converged {
+            cluster.grad_and_loss(&lookahead)?
+        } else {
+            cluster.eval_grad_loss(&lookahead)?
+        };
+        // instrumentation: loss at w itself
+        let loss = if ops::dist2(w, &lookahead) == 0.0 {
+            loss_look
+        } else {
+            cluster.eval_loss(w)?
+        };
+        let subopt = ctx.subopt(loss);
+        trace.push(
+            iter,
+            loss,
+            subopt,
+            Some(ops::norm2(&g)),
+            ctx.test_loss(obj.as_ref(), w),
+            &cluster.comm_stats(),
+            t0.elapsed().as_secs_f64(),
+        );
+        if subopt.map(|s| s < ctx.tol).unwrap_or(false) {
+            *converged = true;
             break;
         }
         if iter == ctx.max_rounds {
             break;
         }
         // w_next = lookahead - step * g
-        w_prev.copy_from_slice(&w);
+        w_prev.copy_from_slice(w);
         for j in 0..d {
             w[j] = lookahead[j] - step * g[j];
         }
@@ -139,8 +166,7 @@ pub fn run_agd(cluster: &mut dyn Cluster, opts: &AgdOptions, ctx: &RunCtx) -> Al
             lookahead[j] = w[j] + momentum * (w[j] - w_prev[j]);
         }
     }
-
-    AlgoResult { name: "agd".into(), w, trace, converged }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -171,7 +197,7 @@ mod tests {
         // differences below ~1e-14 are rounding, not ascent.
         let (mut cluster, phi_star) = setup(512, 8, 0.1);
         let ctx = RunCtx::new(50).with_reference(phi_star).with_tol(1e-30);
-        let res = run_gd(&mut cluster, &GdOptions::default(), &ctx);
+        let res = run_gd(&mut cluster, &GdOptions::default(), &ctx).unwrap();
         let s = res.trace.suboptimality();
         for w in s.windows(2) {
             assert!(
@@ -189,8 +215,8 @@ mod tests {
         let (mut c1, phi_star) = setup(2048, 24, 0.01);
         let (mut c2, _) = setup(2048, 24, 0.01);
         let ctx = RunCtx::new(400).with_reference(phi_star).with_tol(1e-6);
-        let gd = run_gd(&mut c1, &GdOptions::default(), &ctx);
-        let agd = run_agd(&mut c2, &AgdOptions::default(), &ctx);
+        let gd = run_gd(&mut c1, &GdOptions::default(), &ctx).unwrap();
+        let agd = run_agd(&mut c2, &AgdOptions::default(), &ctx).unwrap();
         assert!(agd.converged, "agd: {:?}", agd.trace.last_suboptimality());
         // kappa ~ L/lambda ~ 250 here: GD needs O(kappa log 1/eps) ~
         // thousands of rounds (eq. 8) and cannot finish inside the 400
@@ -208,7 +234,7 @@ mod tests {
     fn gd_counts_one_round_per_iteration() {
         let (mut cluster, _) = setup(256, 6, 0.1);
         let ctx = RunCtx::new(5).with_tol(0.0);
-        let res = run_gd(&mut cluster, &GdOptions::default(), &ctx);
+        let res = run_gd(&mut cluster, &GdOptions::default(), &ctx).unwrap();
         let last = res.trace.rows.last().unwrap();
         // 5 gradient rounds + 1 row-norm round for the step size
         assert_eq!(last.comm_rounds, 6);
@@ -218,7 +244,7 @@ mod tests {
     fn explicit_step_skips_estimation_round() {
         let (mut cluster, _) = setup(256, 6, 0.1);
         let ctx = RunCtx::new(3).with_tol(0.0);
-        let res = run_gd(&mut cluster, &GdOptions { step: Some(0.05) }, &ctx);
+        let res = run_gd(&mut cluster, &GdOptions { step: Some(0.05) }, &ctx).unwrap();
         assert_eq!(res.trace.rows.last().unwrap().comm_rounds, 3);
     }
 }

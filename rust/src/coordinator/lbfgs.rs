@@ -8,9 +8,10 @@
 //! gradient-span methods it is subject to the eq. (8) lower bound; the
 //! benches show it cannot match DANE's n-dependent rate.
 
-use super::{AlgoResult, Cluster, RunCtx};
+use super::{finish, AlgoOutcome, Cluster, RunCtx};
 use crate::linalg::ops;
 use crate::metrics::Trace;
+use crate::Result;
 use std::collections::VecDeque;
 
 /// L-BFGS options.
@@ -54,17 +55,30 @@ fn two_loop(
     q
 }
 
-/// Run distributed L-BFGS from w = 0.
-pub fn run(cluster: &mut dyn Cluster, opts: &LbfgsOptions, ctx: &RunCtx) -> AlgoResult {
-    let d = cluster.dim();
-    let obj = cluster.objective();
-    let mut w = vec![0.0; d];
+/// Run distributed L-BFGS from w = 0. Cluster failures return as an
+/// error carrying the trace-so-far — never a panic.
+pub fn run(cluster: &mut dyn Cluster, opts: &LbfgsOptions, ctx: &RunCtx) -> AlgoOutcome {
+    let mut w = vec![0.0; cluster.dim()];
     let mut trace = Trace::new();
     let mut converged = false;
+    let res = run_loop(cluster, opts, ctx, &mut w, &mut trace, &mut converged);
+    finish("lbfgs", res, w, trace, converged)
+}
+
+fn run_loop(
+    cluster: &mut dyn Cluster,
+    opts: &LbfgsOptions,
+    ctx: &RunCtx,
+    w: &mut Vec<f64>,
+    trace: &mut Trace,
+    converged: &mut bool,
+) -> Result<()> {
+    let d = cluster.dim();
+    let obj = cluster.objective();
     let mut hist: VecDeque<(Vec<f64>, Vec<f64>, f64)> = VecDeque::new();
     let t0 = std::time::Instant::now();
 
-    let (mut g, mut loss) = cluster.grad_and_loss(&w).expect("gradient failed");
+    let (mut g, mut loss) = cluster.grad_and_loss(w)?;
     for iter in 0..=ctx.max_rounds {
         let subopt = ctx.subopt(loss);
         trace.push(
@@ -72,12 +86,12 @@ pub fn run(cluster: &mut dyn Cluster, opts: &LbfgsOptions, ctx: &RunCtx) -> Algo
             loss,
             subopt,
             Some(ops::norm2(&g)),
-            ctx.test_loss(obj.as_ref(), &w),
+            ctx.test_loss(obj.as_ref(), w),
             &cluster.comm_stats(),
             t0.elapsed().as_secs_f64(),
         );
         if subopt.map(|s| s < ctx.tol).unwrap_or(false) || ops::norm2(&g) < 1e-14 {
-            converged = true;
+            *converged = true;
             break;
         }
         if iter == ctx.max_rounds {
@@ -97,7 +111,7 @@ pub fn run(cluster: &mut dyn Cluster, opts: &LbfgsOptions, ctx: &RunCtx) -> Algo
             for j in 0..d {
                 w_try[j] = w[j] - step * dir[j];
             }
-            let f_try = cluster.loss_only(&w_try).expect("probe failed");
+            let f_try = cluster.loss_only(&w_try)?;
             if f_try <= loss - opts.armijo_c * step * slope {
                 accepted = true;
                 break;
@@ -109,7 +123,7 @@ pub fn run(cluster: &mut dyn Cluster, opts: &LbfgsOptions, ctx: &RunCtx) -> Algo
             break;
         }
 
-        let (g_new, loss_new) = cluster.grad_and_loss(&w_try).expect("gradient failed");
+        let (g_new, loss_new) = cluster.grad_and_loss(&w_try)?;
         // Curvature pair.
         let mut s = vec![0.0; d];
         let mut y = vec![0.0; d];
@@ -124,12 +138,11 @@ pub fn run(cluster: &mut dyn Cluster, opts: &LbfgsOptions, ctx: &RunCtx) -> Algo
             }
             hist.push_back((s, y, 1.0 / ys));
         }
-        w = w_try;
+        *w = w_try;
         g = g_new;
         loss = loss_new;
     }
-
-    AlgoResult { name: "lbfgs".into(), w, trace, converged }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -148,7 +161,7 @@ mod tests {
         let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
         let mut cluster = SerialCluster::new(&ds, obj, 4, 3);
         let ctx = RunCtx::new(100).with_reference(phi_star).with_tol(1e-8);
-        let res = run(&mut cluster, &LbfgsOptions::default(), &ctx);
+        let res = run(&mut cluster, &LbfgsOptions::default(), &ctx).unwrap();
         assert!(res.converged, "last {:?}", res.trace.last_suboptimality());
     }
 
@@ -159,7 +172,7 @@ mod tests {
         let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
         let mut cluster = SerialCluster::new(&ds, obj, 4, 7);
         let ctx = RunCtx::new(200).with_reference(phi_star).with_tol(1e-6);
-        let res = run(&mut cluster, &LbfgsOptions::default(), &ctx);
+        let res = run(&mut cluster, &LbfgsOptions::default(), &ctx).unwrap();
         assert!(res.converged, "last {:?}", res.trace.last_suboptimality());
     }
 
@@ -169,7 +182,7 @@ mod tests {
         let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
         let mut cluster = SerialCluster::new(&ds, obj, 2, 2);
         let ctx = RunCtx::new(3).with_tol(0.0);
-        let res = run(&mut cluster, &LbfgsOptions::default(), &ctx);
+        let res = run(&mut cluster, &LbfgsOptions::default(), &ctx).unwrap();
         let last = res.trace.rows.last().unwrap();
         // At minimum: 1 initial grad + per iteration (>=1 probe + 1 grad).
         assert!(last.comm_rounds >= 1 + 3 * 2, "{}", last.comm_rounds);

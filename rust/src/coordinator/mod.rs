@@ -14,6 +14,7 @@
 pub mod admm;
 pub mod dane;
 pub mod driver;
+pub mod fault;
 pub mod gd;
 pub mod lbfgs;
 pub mod osa;
@@ -166,6 +167,69 @@ pub struct AlgoResult {
     pub converged: bool,
 }
 
+/// A failed algorithm run: the underlying cluster error plus everything
+/// the run had recorded when it died — the trace-so-far and the last
+/// accepted iterate — so a partial run can still be post-mortemed.
+///
+/// Worker death (or any cluster round failure) surfaces through this
+/// type from every algorithm: no `.expect()`/panic anywhere on the
+/// cluster-call path. `From<Box<AlgoError>> for crate::Error` lets `?`
+/// flatten it into the crate error at the driver/CLI boundary.
+#[derive(Debug)]
+pub struct AlgoError {
+    /// Which algorithm failed ("dane", "gd", ...).
+    pub algo: &'static str,
+    /// The cluster/numerical error that killed the run.
+    pub error: crate::Error,
+    /// Iterate at the time of failure.
+    pub w: Vec<f64>,
+    /// Trace rows recorded before the failing round.
+    pub trace: Trace,
+}
+
+impl std::fmt::Display for AlgoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} failed after {} recorded rounds: {}",
+            self.algo,
+            self.trace.len(),
+            self.error
+        )
+    }
+}
+
+impl std::error::Error for AlgoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        Some(&self.error)
+    }
+}
+
+impl From<Box<AlgoError>> for crate::Error {
+    fn from(e: Box<AlgoError>) -> Self {
+        crate::Error::Runtime(e.to_string())
+    }
+}
+
+/// What every algorithm run returns: the finished result, or the failure
+/// with the partial trace attached (boxed — the payload is large).
+pub type AlgoOutcome = std::result::Result<AlgoResult, Box<AlgoError>>;
+
+/// Assemble an [`AlgoOutcome`] from an algorithm's inner-loop result and
+/// the state it accumulated (shared tail of all `run` functions).
+pub(crate) fn finish(
+    algo: &'static str,
+    res: Result<()>,
+    w: Vec<f64>,
+    trace: Trace,
+    converged: bool,
+) -> AlgoOutcome {
+    match res {
+        Ok(()) => Ok(AlgoResult { name: algo.into(), w, trace, converged }),
+        Err(error) => Err(Box::new(AlgoError { algo, error, w, trace })),
+    }
+}
+
 /// In-process cluster: m workers driven sequentially by the leader.
 ///
 /// Deterministic (fixed iteration order) and single-threaded — the right
@@ -247,6 +311,14 @@ impl SerialCluster {
 
     pub fn workers_mut(&mut self) -> &mut [Worker] {
         &mut self.workers
+    }
+
+    /// Override every worker's Gram-build thread count (config
+    /// `threads`). Takes effect on caches built after the call.
+    pub fn set_gram_threads(&mut self, threads: Option<usize>) {
+        for w in &mut self.workers {
+            w.set_gram_threads(threads);
+        }
     }
 
     pub fn workers(&self) -> &[Worker] {

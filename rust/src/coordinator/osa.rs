@@ -7,8 +7,9 @@
 //!             subsample-r ERM w_i2, returns (w_i1 - r w_i2)/(1 - r);
 //!             the leader averages — still one round.
 
-use super::{AlgoResult, Cluster, RunCtx};
+use super::{finish, AlgoOutcome, Cluster, RunCtx};
 use crate::metrics::Trace;
+use crate::Result;
 
 /// OSA options.
 #[derive(Debug, Clone, Copy, Default)]
@@ -21,26 +22,42 @@ pub struct OsaOptions {
 }
 
 /// Run one-shot averaging. The trace has exactly two rows: the zero
-/// initial point and the averaged solution.
-pub fn run(cluster: &mut dyn Cluster, opts: &OsaOptions, ctx: &RunCtx) -> AlgoResult {
+/// initial point and the averaged solution. Cluster failures return as
+/// an error carrying the trace-so-far — never a panic.
+pub fn run(cluster: &mut dyn Cluster, opts: &OsaOptions, ctx: &RunCtx) -> AlgoOutcome {
+    let name = if opts.bias_correction_r.is_some() { "osa-bc" } else { "osa" };
+    let mut w = vec![0.0; cluster.dim()];
+    let mut trace = Trace::new();
+    let mut converged = false;
+    let res = run_inner(cluster, opts, ctx, &mut w, &mut trace, &mut converged);
+    finish(name, res, w, trace, converged)
+}
+
+fn run_inner(
+    cluster: &mut dyn Cluster,
+    opts: &OsaOptions,
+    ctx: &RunCtx,
+    w: &mut Vec<f64>,
+    trace: &mut Trace,
+    converged: &mut bool,
+) -> Result<()> {
     let obj = cluster.objective();
     let d = cluster.dim();
-    let mut trace = Trace::new();
     let t0 = std::time::Instant::now();
 
-    let loss0 = cluster.eval_loss(&vec![0.0; d]).expect("eval failed");
+    let loss0 = cluster.eval_loss(w)?;
     trace.push(
         0,
         loss0,
         ctx.subopt(loss0),
         None,
-        ctx.test_loss(obj.as_ref(), &vec![0.0; d]),
+        ctx.test_loss(obj.as_ref(), w),
         &cluster.comm_stats(),
         0.0,
     );
 
     let sub = opts.bias_correction_r.map(|r| (r, opts.seed));
-    let (full, subs) = cluster.local_erms(sub).expect("local ERMs failed");
+    let (full, subs) = cluster.local_erms(sub)?;
 
     // Per-machine combination (local), then ONE averaging round.
     let combined: Vec<Vec<f64>> = match (&subs, opts.bias_correction_r) {
@@ -55,23 +72,22 @@ pub fn run(cluster: &mut dyn Cluster, opts: &OsaOptions, ctx: &RunCtx) -> AlgoRe
             .collect(),
         _ => full,
     };
-    let w = cluster.allreduce_mean_vecs(&combined);
+    *w = cluster.allreduce_mean_vecs(&combined);
 
-    let loss = cluster.eval_loss(&w).expect("eval failed");
+    let loss = cluster.eval_loss(w)?;
     let subopt = ctx.subopt(loss);
     trace.push(
         1,
         loss,
         subopt,
         None,
-        ctx.test_loss(obj.as_ref(), &w),
+        ctx.test_loss(obj.as_ref(), w),
         &cluster.comm_stats(),
         t0.elapsed().as_secs_f64(),
     );
 
-    let converged = subopt.map(|s| s < ctx.tol).unwrap_or(false);
-    let name = if opts.bias_correction_r.is_some() { "osa-bc" } else { "osa" };
-    AlgoResult { name: name.into(), w, trace, converged }
+    *converged = subopt.map(|s| s < ctx.tol).unwrap_or(false);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -88,7 +104,7 @@ mod tests {
         let ds = synthetic_fig2(512, 8, 0.005, 5);
         let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
         let mut cluster = SerialCluster::new(&ds, obj, 8, 3);
-        let res = run(&mut cluster, &OsaOptions::default(), &RunCtx::new(1));
+        let res = run(&mut cluster, &OsaOptions::default(), &RunCtx::new(1)).unwrap();
         assert_eq!(res.trace.rows.last().unwrap().comm_rounds, 1);
     }
 
@@ -99,7 +115,7 @@ mod tests {
         let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
         let mut cluster = SerialCluster::new(&ds, obj, 1, 3);
         let ctx = RunCtx::new(1).with_reference(phi_star).with_tol(1e-9);
-        let res = run(&mut cluster, &OsaOptions::default(), &ctx);
+        let res = run(&mut cluster, &OsaOptions::default(), &ctx).unwrap();
         assert!(res.converged, "subopt {:?}", res.trace.last_suboptimality());
     }
 
@@ -110,7 +126,7 @@ mod tests {
         let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
         let mut cluster = SerialCluster::new(&ds, obj, 16, 9);
         let ctx = RunCtx::new(1).with_reference(phi_star);
-        let res = run(&mut cluster, &OsaOptions::default(), &ctx);
+        let res = run(&mut cluster, &OsaOptions::default(), &ctx).unwrap();
         let s = res.trace.suboptimality();
         assert!(s[1] < s[0], "improves over w=0");
         assert!(s[1] > 1e-10, "but is not the exact ERM");
@@ -122,12 +138,13 @@ mod tests {
         let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
         let mut c1 = SerialCluster::new(&ds, obj.clone(), 8, 3);
         let mut c2 = SerialCluster::new(&ds, obj, 8, 3);
-        let plain = run(&mut c1, &OsaOptions::default(), &RunCtx::new(1));
+        let plain = run(&mut c1, &OsaOptions::default(), &RunCtx::new(1)).unwrap();
         let bc = run(
             &mut c2,
             &OsaOptions { bias_correction_r: Some(0.5), seed: 1 },
             &RunCtx::new(1),
-        );
+        )
+        .unwrap();
         assert_eq!(bc.name, "osa-bc");
         let diff: f64 = plain
             .w

@@ -107,6 +107,21 @@ impl ThreadedCluster {
         seed: u64,
         net: NetModel,
     ) -> Self {
+        Self::with_net_threads(ds, obj, m, seed, net, None)
+    }
+
+    /// [`ThreadedCluster::with_net`] with an explicit Gram-build thread
+    /// count for every worker (config `threads`); None = the size
+    /// ladder. The same count must be used on a serial cluster for the
+    /// two engines to stay bit-identical.
+    pub fn with_net_threads(
+        ds: &Dataset,
+        obj: Arc<dyn Objective>,
+        m: usize,
+        seed: u64,
+        net: NetModel,
+        gram_threads: Option<usize>,
+    ) -> Self {
         let shards = shard_dataset(ds, m, seed);
         let d = ds.d();
         let total: usize = shards.iter().map(|s| s.n_effective()).sum();
@@ -118,7 +133,7 @@ impl ThreadedCluster {
         let handles = shards
             .into_iter()
             .enumerate()
-            .map(|(id, shard)| spawn_worker(id, shard, obj.clone()))
+            .map(|(id, shard)| spawn_worker(id, shard, obj.clone(), gram_threads))
             .collect();
         ThreadedCluster {
             handles,
@@ -278,13 +293,19 @@ fn load_bcast(slot: &mut Arc<Vec<f64>>, src: &[f64]) {
     }
 }
 
-fn spawn_worker(id: usize, shard: Shard, obj: Arc<dyn Objective>) -> WorkerHandle {
+fn spawn_worker(
+    id: usize,
+    shard: Shard,
+    obj: Arc<dyn Objective>,
+    gram_threads: Option<usize>,
+) -> WorkerHandle {
     let (cmd_tx, cmd_rx) = round_channel::<Cmd>();
     let (rep_tx, rep_rx) = round_channel::<Reply>();
     let join = std::thread::Builder::new()
         .name(format!("dane-worker-{id}"))
         .spawn(move || {
             let mut worker = crate::worker::Worker::new(id, shard, obj);
+            worker.set_gram_threads(gram_threads);
             let d = worker.dim();
             // Leader dropping its endpoints disconnects the channel and
             // breaks both loops — no explicit shutdown message needed.
@@ -734,7 +755,7 @@ mod tests {
         let (ds, obj, phi_star) = fixture();
         let mut cluster = ThreadedCluster::new(&ds, obj, 4, 3);
         let ctx = RunCtx::new(20).with_reference(phi_star).with_tol(1e-9);
-        let res = dane::run(&mut cluster, &Default::default(), &ctx);
+        let res = dane::run(&mut cluster, &Default::default(), &ctx).unwrap();
         assert!(res.converged, "{:?}", res.trace.suboptimality());
         // per completed iteration k: k+1 gradient rounds + k iterate rounds
         let last = res.trace.rows.last().unwrap();
@@ -750,7 +771,8 @@ mod tests {
             &mut cluster,
             &crate::coordinator::admm::AdmmOptions { rho: 0.1 },
             &ctx,
-        );
+        )
+        .unwrap();
         assert!(res.converged);
 
         let mut cluster = ThreadedCluster::new(&ds, obj, 8, 3);
@@ -762,7 +784,8 @@ mod tests {
                 seed: 1,
             },
             &ctx,
-        );
+        )
+        .unwrap();
         assert_eq!(res.trace.rows.last().unwrap().comm_rounds, 1);
     }
 

@@ -8,7 +8,9 @@
 //! size; EXPERIMENTS.md records the scale used for the committed numbers.
 
 use crate::comm::NetModel;
-use crate::coordinator::{admm, dane, osa, RunCtx, SerialCluster};
+use crate::config::EngineKind;
+use crate::coordinator::threaded::ThreadedCluster;
+use crate::coordinator::{admm, dane, osa, Cluster, RunCtx, SerialCluster};
 use crate::data::{self, Dataset};
 use crate::loss::{make_objective, Objective};
 use crate::metrics::emit;
@@ -18,20 +20,42 @@ use crate::Result;
 use std::path::Path;
 use std::sync::Arc;
 
+/// Construct the requested cluster engine — the single point where the
+/// harnesses (and through them the CLI figure subcommands and benches)
+/// pick serial vs threaded. Same shards, same reduction order: the
+/// figure numbers are engine-independent bit for bit.
+fn build_cluster(
+    ds: &Dataset,
+    obj: Arc<dyn Objective>,
+    m: usize,
+    seed: u64,
+    net: NetModel,
+    engine: EngineKind,
+) -> Box<dyn Cluster> {
+    match engine {
+        EngineKind::Serial => Box::new(SerialCluster::with_net(ds, obj, m, seed, net)),
+        EngineKind::Threaded => Box::new(ThreadedCluster::with_net(ds, obj, m, seed, net)),
+    }
+}
+
 // ---------------------------------------------------------------------
 // quickstart
 // ---------------------------------------------------------------------
 
-/// Tiny end-to-end smoke run: fig. 2 setup, m = 4, a few rounds.
-pub fn quickstart() -> Result<()> {
+/// Tiny end-to-end smoke run: fig. 2 setup, m = 4, a few rounds, on the
+/// requested engine.
+pub fn quickstart(engine: EngineKind) -> Result<()> {
     let ds = data::synthetic_fig2(2048, 100, 0.005, 42);
     let lam = data::synthetic::fig2_lambda(0.005);
     let obj = make_objective(crate::config::LossKind::Ridge, lam);
     let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard())?;
-    let mut cluster = SerialCluster::new(&ds, obj, 4, 42);
+    let mut cluster = build_cluster(&ds, obj, 4, 42, NetModel::free(), engine);
     let ctx = RunCtx::new(15).with_reference(phi_star).with_tol(1e-10);
-    let res = dane::run(&mut cluster, &dane::DaneOptions::default(), &ctx);
-    println!("quickstart: DANE on fig2(n=2048, d=100), m=4");
+    let res = dane::run(cluster.as_mut(), &dane::DaneOptions::default(), &ctx)?;
+    println!(
+        "quickstart: DANE on fig2(n=2048, d=100), m=4 [engine: {}]",
+        engine.name()
+    );
     for r in &res.trace.rows {
         println!(
             "  round {:>2}  subopt {:>10.3e}  comm_rounds {}",
@@ -62,7 +86,7 @@ pub struct Fig2Cell {
 
 /// The paper's grid: m in {4, 16, 64}, N in {4096, 16384, 65536}/scale,
 /// d = 500, ridge reg 0.005, DANE(eta=1, mu=0) vs ADMM.
-pub fn fig2(scale: usize, out: &Path) -> Result<Vec<Fig2Cell>> {
+pub fn fig2(scale: usize, out: &Path, engine: EngineKind) -> Result<Vec<Fig2Cell>> {
     let d = 500;
     let paper_reg = 0.005;
     let lam = data::synthetic::fig2_lambda(paper_reg);
@@ -85,13 +109,17 @@ pub fn fig2(scale: usize, out: &Path) -> Result<Vec<Fig2Cell>> {
             }
             for algo in ["dane", "admm"] {
                 let mut cluster =
-                    SerialCluster::with_net(&ds, obj.clone(), m, 7, NetModel::datacenter());
+                    build_cluster(&ds, obj.clone(), m, 7, NetModel::datacenter(), engine);
                 let ctx = RunCtx::new(rounds)
                     .with_reference(phi_star)
                     .with_tol(1e-13);
                 let res = match algo {
-                    "dane" => dane::run(&mut cluster, &dane::DaneOptions::default(), &ctx),
-                    _ => admm::run(&mut cluster, &admm::AdmmOptions { rho: lam.max(0.05) }, &ctx),
+                    "dane" => dane::run(cluster.as_mut(), &dane::DaneOptions::default(), &ctx)?,
+                    _ => admm::run(
+                        cluster.as_mut(),
+                        &admm::AdmmOptions { rho: lam.max(0.05) },
+                        &ctx,
+                    )?,
                 };
                 let cell = summarize_fig2(algo, m, n_total, &res.trace);
                 emit::write_csv_file(
@@ -157,7 +185,7 @@ pub fn fig34_datasets(scale: usize) -> Vec<(Dataset, f64)> {
 /// m in {2..64}, DANE (mu = 0 and mu = 3 lambda) and ADMM; entry =
 /// iterations to suboptimality < 1e-6 (None = "*", no convergence within
 /// the budget, exactly the paper's notation).
-pub fn fig3(scale: usize, out: &Path) -> Result<Vec<Fig3Column>> {
+pub fn fig3(scale: usize, out: &Path, engine: EngineKind) -> Result<Vec<Fig3Column>> {
     let ms = vec![2usize, 4, 8, 16, 32, 64];
     let budget = 100;
     std::fs::create_dir_all(out)?;
@@ -174,23 +202,25 @@ pub fn fig3(scale: usize, out: &Path) -> Result<Vec<Fig3Column>> {
         for &m in &ms {
             let ctx = RunCtx::new(budget).with_reference(phi_star).with_tol(1e-6);
             for (idx, mu) in [0.0, 3.0 * lam].into_iter().enumerate() {
-                let mut cluster = SerialCluster::new(&ds, obj.clone(), m, 7);
+                let mut cluster =
+                    build_cluster(&ds, obj.clone(), m, 7, NetModel::free(), engine);
                 let res = dane::run(
-                    &mut cluster,
+                    cluster.as_mut(),
                     &dane::DaneOptions { eta: 1.0, mu, ..Default::default() },
                     &ctx,
-                );
+                )?;
                 rows[idx].1.push(res.trace.rounds_to_tol(1e-6));
             }
-            let mut cluster = SerialCluster::new(&ds, obj.clone(), m, 7);
+            let mut cluster =
+                build_cluster(&ds, obj.clone(), m, 7, NetModel::free(), engine);
             // rho tuned once per workload family: consensus ADMM's rate
             // depends on rho, not on the (tiny) lambda; 0.1 is the best
             // of a coarse {0.02, 0.1, 0.5} sweep on these problems.
             let res = admm::run(
-                &mut cluster,
+                cluster.as_mut(),
                 &admm::AdmmOptions { rho: ADMM_RHO },
                 &ctx,
-            );
+            )?;
             rows[2].1.push(res.trace.rounds_to_tol(1e-6));
         }
         let col = Fig3Column { dataset: ds.name.clone(), ms: ms.clone(), rows };
@@ -258,7 +288,7 @@ pub struct Fig4Panel {
 /// Fig. 4: average regularized test loss vs iteration for m = 64 on the
 /// three datasets; DANE(mu = 3 lambda), ADMM, bias-corrected OSA, and the
 /// exact minimizer's level.
-pub fn fig4(scale: usize, out: &Path) -> Result<Vec<Fig4Panel>> {
+pub fn fig4(scale: usize, out: &Path, engine: EngineKind) -> Result<Vec<Fig4Panel>> {
     let m = 64;
     let rounds = 30;
     std::fs::create_dir_all(out)?;
@@ -280,28 +310,29 @@ pub fn fig4(scale: usize, out: &Path) -> Result<Vec<Fig4Panel>> {
 
         let mut series = Vec::new();
         {
-            let mut cluster = SerialCluster::new(&ds, obj.clone(), m, 7);
+            let mut cluster = build_cluster(&ds, obj.clone(), m, 7, NetModel::free(), engine);
             let res = dane::run(
-                &mut cluster,
+                cluster.as_mut(),
                 &dane::DaneOptions { eta: 1.0, mu: 3.0 * lam, ..Default::default() },
                 &ctx,
-            );
+            )?;
             series.push(("dane mu=3lam".to_string(), test_series(&res.trace)));
             emit::write_csv_file(&res.trace, &out.join(format!("{}_dane.csv", ds.name)))?;
         }
         {
-            let mut cluster = SerialCluster::new(&ds, obj.clone(), m, 7);
-            let res = admm::run(&mut cluster, &admm::AdmmOptions { rho: ADMM_RHO }, &ctx);
+            let mut cluster = build_cluster(&ds, obj.clone(), m, 7, NetModel::free(), engine);
+            let res =
+                admm::run(cluster.as_mut(), &admm::AdmmOptions { rho: ADMM_RHO }, &ctx)?;
             series.push(("admm".to_string(), test_series(&res.trace)));
             emit::write_csv_file(&res.trace, &out.join(format!("{}_admm.csv", ds.name)))?;
         }
         {
-            let mut cluster = SerialCluster::new(&ds, obj.clone(), m, 7);
+            let mut cluster = build_cluster(&ds, obj.clone(), m, 7, NetModel::free(), engine);
             let res = osa::run(
-                &mut cluster,
+                cluster.as_mut(),
                 &osa::OsaOptions { bias_correction_r: Some(0.5), seed: 3 },
                 &ctx,
-            );
+            )?;
             series.push(("osa-bc".to_string(), test_series(&res.trace)));
             emit::write_csv_file(&res.trace, &out.join(format!("{}_osa.csv", ds.name)))?;
         }
@@ -458,7 +489,7 @@ mod tests {
     #[test]
     fn fig2_smoke_scale() {
         let dir = crate::util::tempdir::TempDir::new("fig2").unwrap();
-        let cells = fig2(64, dir.path()).unwrap();
+        let cells = fig2(64, dir.path(), EngineKind::Serial).unwrap();
         assert!(!cells.is_empty());
         // DANE's contraction at the largest N should beat its contraction
         // at the smallest N for the same m (Theorem 3).

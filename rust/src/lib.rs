@@ -32,7 +32,11 @@
 //! let mut cluster = SerialCluster::new(&ds, obj, 16, 42);
 //! let opts = DaneOptions { eta: 1.0, mu: 0.0, ..Default::default() };
 //! let ctx = dane::coordinator::RunCtx::new(20);
-//! let run = dane::coordinator::dane::run(&mut cluster, &opts, &ctx);
+//! // Algorithms run on any `Cluster` engine (SerialCluster here,
+//! // ThreadedCluster for one OS thread per worker) and return a
+//! // Result: a dead worker surfaces as Err with the trace-so-far,
+//! // never a panic.
+//! let run = dane::coordinator::dane::run(&mut cluster, &opts, &ctx).expect("run");
 //! println!("final suboptimality: {:?}", run.trace.last_suboptimality());
 //! ```
 //!
@@ -59,12 +63,14 @@ pub use error::{Error, Result};
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::comm::{CommStats, NetModel, Topology};
-    pub use crate::config::{AlgoConfig, DatasetConfig, ExperimentConfig};
+    pub use crate::config::{AlgoConfig, DatasetConfig, EngineKind, ExperimentConfig};
     pub use crate::coordinator::admm::AdmmOptions;
     pub use crate::coordinator::dane::DaneOptions;
     pub use crate::coordinator::driver::{run_experiment, RunResult};
+    pub use crate::coordinator::fault::FaultInjectCluster;
     pub use crate::coordinator::gd::{AgdOptions, GdOptions};
-    pub use crate::coordinator::SerialCluster;
+    pub use crate::coordinator::threaded::ThreadedCluster;
+    pub use crate::coordinator::{AlgoError, AlgoOutcome, AlgoResult, Cluster, SerialCluster};
     pub use crate::data::{Dataset, Shard};
     pub use crate::linalg::{CsrMatrix, DataMatrix, DenseMatrix};
     pub use crate::loss::{Objective, Ridge, SmoothHinge};

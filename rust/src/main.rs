@@ -18,7 +18,7 @@
 //! is in-tree (offline build — no clap); see `Args`. Unknown subcommands
 //! and unknown flags print USAGE and exit non-zero.
 
-use dane::config::ExperimentConfig;
+use dane::config::{EngineKind, ExperimentConfig};
 use dane::coordinator::driver::run_experiment;
 use dane::harness;
 use dane::metrics::emit;
@@ -29,13 +29,17 @@ dane — Communication-efficient distributed optimization (DANE, ICML 2014)
 
 USAGE:
     dane run --config <exp.json> [--csv <out.csv>] [--quiet]
-    dane quickstart
-    dane fig2   [--scale <K>] [--out <dir>]
-    dane fig3   [--scale <K>] [--out <dir>]
-    dane fig4   [--scale <K>] [--out <dir>]
+    dane quickstart [--engine serial|threaded]
+    dane fig2   [--scale <K>] [--out <dir>] [--engine serial|threaded]
+    dane fig3   [--scale <K>] [--out <dir>] [--engine serial|threaded]
+    dane fig4   [--scale <K>] [--out <dir>] [--engine serial|threaded]
     dane thm1   [--reps <N>]
     dane lemma2
-    dane help";
+    dane help
+
+The cluster engine for `run` comes from the config (\"engine\": \"serial\"
+| \"threaded\", optional \"threads\": N for the workers' Gram-build
+kernel). Worker failures surface as `error: ...` + non-zero exit.";
 
 /// Tiny flag parser: --key value pairs after the subcommand.
 struct Args {
@@ -73,6 +77,24 @@ impl Args {
         match self.get(key) {
             None => Ok(default),
             Some(v) => v.parse().map_err(|_| format!("--{key} must be an integer")),
+        }
+    }
+
+    /// Like [`Args::get_usize`] but rejects 0: a zero scale/rep count is
+    /// malformed input and must fail loudly, not be silently clamped.
+    fn get_positive(&self, key: &str, default: usize) -> Result<usize, String> {
+        let v = self.get_usize(key, default)?;
+        if v == 0 {
+            return Err(format!("--{key} must be >= 1"));
+        }
+        Ok(v)
+    }
+
+    /// Parse `--engine serial|threaded` (default serial).
+    fn get_engine(&self) -> Result<EngineKind, String> {
+        match self.get("engine") {
+            None => Ok(EngineKind::Serial),
+            Some(v) => EngineKind::from_name(v).map_err(|e| e.to_string()),
         }
     }
 
@@ -130,9 +152,10 @@ fn run(argv: &[String]) -> Result<(), String> {
     let args = Args::parse(&argv[1..])?;
     let (value_flags, bool_flags): (&[&str], &[&str]) = match cmd.as_str() {
         "run" => (&["config", "csv"], &["quiet"]),
-        "fig2" | "fig3" | "fig4" => (&["scale", "out"], &[]),
+        "fig2" | "fig3" | "fig4" => (&["scale", "out", "engine"], &[]),
         "thm1" => (&["reps"], &[]),
-        "quickstart" | "lemma2" | "help" | "--help" | "-h" => (&[], &[]),
+        "quickstart" => (&["engine"], &[]),
+        "lemma2" | "help" | "--help" | "-h" => (&[], &[]),
         other => return Err(format!("unknown subcommand {other:?}")),
     };
     args.check_allowed(cmd, value_flags, bool_flags)?;
@@ -159,24 +182,24 @@ fn run(argv: &[String]) -> Result<(), String> {
             }
             Ok(())
         }
-        "quickstart" => harness::quickstart().map_err(e2s),
+        "quickstart" => harness::quickstart(args.get_engine()?).map_err(e2s),
         "fig2" => {
-            let scale = args.get_usize("scale", 1)?.max(1);
+            let scale = args.get_positive("scale", 1)?;
             let out = PathBuf::from(args.get("out").unwrap_or("results/fig2"));
-            harness::fig2(scale, &out).map(|_| ()).map_err(e2s)
+            harness::fig2(scale, &out, args.get_engine()?).map(|_| ()).map_err(e2s)
         }
         "fig3" => {
-            let scale = args.get_usize("scale", 1)?.max(1);
+            let scale = args.get_positive("scale", 1)?;
             let out = PathBuf::from(args.get("out").unwrap_or("results/fig3"));
-            harness::fig3(scale, &out).map(|_| ()).map_err(e2s)
+            harness::fig3(scale, &out, args.get_engine()?).map(|_| ()).map_err(e2s)
         }
         "fig4" => {
-            let scale = args.get_usize("scale", 1)?.max(1);
+            let scale = args.get_positive("scale", 1)?;
             let out = PathBuf::from(args.get("out").unwrap_or("results/fig4"));
-            harness::fig4(scale, &out).map(|_| ()).map_err(e2s)
+            harness::fig4(scale, &out, args.get_engine()?).map(|_| ()).map_err(e2s)
         }
         "thm1" => {
-            let reps = args.get_usize("reps", 200)?.max(1);
+            let reps = args.get_positive("reps", 200)?;
             harness::thm1(reps).map(|_| ()).map_err(e2s)
         }
         "lemma2" => harness::lemma2().map(|_| ()).map_err(e2s),

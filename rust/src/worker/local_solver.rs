@@ -51,13 +51,26 @@ pub struct QuadCache {
 
 impl QuadCache {
     pub fn build(shard: &Shard) -> Result<Self> {
+        Self::build_with_threads(shard, None)
+    }
+
+    /// [`QuadCache::build`] with an explicit Gram-build thread count
+    /// (config `threads`): for *dense* shards `Some(t)` bypasses the
+    /// size ladder and runs `par_gram(t)` regardless of shard size —
+    /// the knob that makes the deterministic parallel kernel reachable
+    /// from `dane run`. Sparse shards always take the serial CSR Gram
+    /// (no parallel kernel exists for it); the override is a no-op
+    /// there.
+    pub fn build_with_threads(shard: &Shard, threads: Option<usize>) -> Result<Self> {
         let n = shard.n_effective() as f64;
         // Dense shards large enough to amortize thread spawns build the
         // Gram with the deterministic parallel kernel; everything else
         // takes the serial tiled path (sparse Gram is CSR-specific).
         let mut gram = match &shard.x {
             crate::linalg::DataMatrix::Dense(x) => {
-                x.par_gram(gram_build_threads(x.rows(), x.cols()))
+                let t = threads
+                    .unwrap_or_else(|| gram_build_threads(x.rows(), x.cols()));
+                x.par_gram(t)
             }
             other => other.gram(),
         };
@@ -152,6 +165,24 @@ mod tests {
         let mut r = vec![0.0; 3];
         ops::sub(&ax, &rhs, &mut r);
         assert!(ops::norm2(&r) < 1e-10);
+    }
+
+    #[test]
+    fn explicit_thread_count_matches_serial_build() {
+        // The `threads` config override must not change the math: the
+        // parallel Gram agrees with the serial one to reduction-order
+        // rounding, and t = 1 is bit-identical by the par_gram contract.
+        let s = shard();
+        let serial = QuadCache::build(&s).unwrap();
+        let one = QuadCache::build_with_threads(&s, Some(1)).unwrap();
+        assert_eq!(one.gram().data(), serial.gram().data());
+        let par = QuadCache::build_with_threads(&s, Some(3)).unwrap();
+        for i in 0..3 {
+            for j in 0..3 {
+                let (a, b) = (par.gram().get(i, j), serial.gram().get(i, j));
+                assert!((a - b).abs() <= 1e-12 * a.abs().max(1.0), "{a} vs {b}");
+            }
+        }
     }
 
     #[test]

@@ -45,6 +45,9 @@ pub struct Worker {
     /// Newton-CG path: the DANE tilt c = grad phi_i(w') - eta g.
     cbuf: Vec<f64>,
     newton_opts: NewtonCgOptions,
+    /// Override for the one-time Gram-build thread count (config
+    /// `threads`); None = the size ladder in `local_solver`.
+    gram_threads: Option<usize>,
 }
 
 impl Worker {
@@ -62,6 +65,7 @@ impl Worker {
             solve_buf: vec![0.0; d],
             cbuf: vec![0.0; d],
             newton_opts: NewtonCgOptions::default(),
+            gram_threads: None,
         }
     }
 
@@ -90,6 +94,14 @@ impl Worker {
     /// Tune the local Newton-CG budget (benches tighten/loosen this).
     pub fn set_newton_options(&mut self, opts: NewtonCgOptions) {
         self.newton_opts = opts;
+    }
+
+    /// Force the thread count of the one-time parallel Gram build
+    /// (`DenseMatrix::par_gram`); None restores the size ladder. Must be
+    /// set before the quadratic cache is first built to have effect —
+    /// the same count on every worker keeps runs bit-reproducible.
+    pub fn set_gram_threads(&mut self, threads: Option<usize>) {
+        self.gram_threads = threads;
     }
 
     /// phi_i(w).
@@ -320,7 +332,8 @@ impl Worker {
 
     fn quad_cache(&mut self) -> Result<&mut QuadCache> {
         if self.quad.is_none() {
-            self.quad = Some(QuadCache::build(&self.shard)?);
+            self.quad =
+                Some(QuadCache::build_with_threads(&self.shard, self.gram_threads)?);
         }
         Ok(self.quad.as_mut().unwrap())
     }

@@ -40,31 +40,31 @@ fn all_multiround_algorithms_reach_the_same_optimum() {
         {
             let mut c = cluster_of(&f, 4);
             let ctx = RunCtx::new(40).with_reference(f.phi_star).with_tol(tol);
-            let r = dane_algo::run(&mut c, &Default::default(), &ctx);
+            let r = dane_algo::run(&mut c, &Default::default(), &ctx).unwrap();
             ("dane", r.w, r.converged)
         },
         {
             let mut c = cluster_of(&f, 4);
             let ctx = RunCtx::new(3000).with_reference(f.phi_star).with_tol(tol);
-            let r = gd::run_gd(&mut c, &Default::default(), &ctx);
+            let r = gd::run_gd(&mut c, &Default::default(), &ctx).unwrap();
             ("gd", r.w, r.converged)
         },
         {
             let mut c = cluster_of(&f, 4);
             let ctx = RunCtx::new(1000).with_reference(f.phi_star).with_tol(tol);
-            let r = gd::run_agd(&mut c, &Default::default(), &ctx);
+            let r = gd::run_agd(&mut c, &Default::default(), &ctx).unwrap();
             ("agd", r.w, r.converged)
         },
         {
             let mut c = cluster_of(&f, 4);
             let ctx = RunCtx::new(500).with_reference(f.phi_star).with_tol(tol);
-            let r = admm::run(&mut c, &admm::AdmmOptions { rho: 0.1 }, &ctx);
+            let r = admm::run(&mut c, &admm::AdmmOptions { rho: 0.1 }, &ctx).unwrap();
             ("admm", r.w, r.converged)
         },
         {
             let mut c = cluster_of(&f, 4);
             let ctx = RunCtx::new(200).with_reference(f.phi_star).with_tol(tol);
-            let r = lbfgs::run(&mut c, &Default::default(), &ctx);
+            let r = lbfgs::run(&mut c, &Default::default(), &ctx).unwrap();
             ("lbfgs", r.w, r.converged)
         },
     ];
@@ -92,15 +92,15 @@ fn round_ordering_matches_paper() {
 
     let mut c = cluster_of(&f, 4);
     let ctx = RunCtx::new(40).with_reference(f.phi_star).with_tol(tol);
-    let dane_rounds = r2t(&dane_algo::run(&mut c, &Default::default(), &ctx).trace);
+    let dane_rounds = r2t(&dane_algo::run(&mut c, &Default::default(), &ctx).unwrap().trace);
 
     let mut c = cluster_of(&f, 4);
     let ctx = RunCtx::new(3000).with_reference(f.phi_star).with_tol(tol);
-    let gd_rounds = r2t(&gd::run_gd(&mut c, &Default::default(), &ctx).trace);
+    let gd_rounds = r2t(&gd::run_gd(&mut c, &Default::default(), &ctx).unwrap().trace);
 
     let mut c = cluster_of(&f, 4);
     let ctx = RunCtx::new(1000).with_reference(f.phi_star).with_tol(tol);
-    let agd_rounds = r2t(&gd::run_agd(&mut c, &Default::default(), &ctx).trace);
+    let agd_rounds = r2t(&gd::run_agd(&mut c, &Default::default(), &ctx).unwrap().trace);
 
     assert!(
         dane_rounds < agd_rounds && agd_rounds < gd_rounds,
@@ -114,7 +114,7 @@ fn osa_single_round_but_inexact() {
     let m = 16;
     let mut c = cluster_of(&f, m);
     let ctx = RunCtx::new(1).with_reference(f.phi_star);
-    let r = osa::run(&mut c, &osa::OsaOptions::default(), &ctx);
+    let r = osa::run(&mut c, &osa::OsaOptions::default(), &ctx).unwrap();
     let last = r.trace.rows.last().unwrap();
     assert_eq!(last.comm_rounds, 1);
     let s = r.trace.last_suboptimality().unwrap();
@@ -143,12 +143,12 @@ fn admm_insensitive_to_data_size_dane_not() {
         let mut c = SerialCluster::new(&ds, obj.clone(), 8, 3);
         let ctx = RunCtx::new(15).with_reference(phi_star).with_tol(1e-14);
         dane_rates.push(mean_rate(
-            &dane_algo::run(&mut c, &Default::default(), &ctx).trace,
+            &dane_algo::run(&mut c, &Default::default(), &ctx).unwrap().trace,
         ));
         let mut c = SerialCluster::new(&ds, obj.clone(), 8, 3);
         let ctx = RunCtx::new(40).with_reference(phi_star).with_tol(1e-14);
         admm_rates.push(mean_rate(
-            &admm::run(&mut c, &admm::AdmmOptions { rho: 0.1 }, &ctx).trace,
+            &admm::run(&mut c, &admm::AdmmOptions { rho: 0.1 }, &ctx).unwrap().trace,
         ));
     }
     // DANE's contraction factor improves by a large multiple...
@@ -175,11 +175,11 @@ fn hinge_baselines_agree() {
     let mut c = SerialCluster::new(&ds, obj.clone(), 4, 3);
     let ctx = RunCtx::new(40).with_reference(phi_star).with_tol(1e-8);
     let opts = dane_algo::DaneOptions { eta: 1.0, mu: 3.0 * lam, ..Default::default() };
-    let r_dane = dane_algo::run(&mut c, &opts, &ctx);
+    let r_dane = dane_algo::run(&mut c, &opts, &ctx).unwrap();
 
     let mut c = SerialCluster::new(&ds, obj.clone(), 4, 3);
     let ctx = RunCtx::new(400).with_reference(phi_star).with_tol(1e-8);
-    let r_admm = admm::run(&mut c, &admm::AdmmOptions { rho: 0.1 }, &ctx);
+    let r_admm = admm::run(&mut c, &admm::AdmmOptions { rho: 0.1 }, &ctx).unwrap();
 
     assert!(r_dane.converged && r_admm.converged);
     assert!(ops::dist2(&r_dane.w, &w_hat) < 1e-3);

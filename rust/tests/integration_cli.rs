@@ -81,6 +81,41 @@ fn bool_flag_with_value_fails() {
 }
 
 #[test]
+fn zero_scale_and_reps_fail_loudly() {
+    // `--scale 0` / `--reps 0` used to be silently clamped to 1 — they
+    // are malformed input and must fail with USAGE + non-zero exit.
+    let out = Command::new(dane_bin())
+        .args(["fig2", "--scale", "0"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("--scale must be >= 1"), "{text}");
+    assert!(text.contains("USAGE"), "{text}");
+
+    let out = Command::new(dane_bin())
+        .args(["thm1", "--reps", "0"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("--reps must be >= 1"), "{text}");
+    assert!(text.contains("USAGE"), "{text}");
+}
+
+#[test]
+fn unknown_engine_fails_with_usage() {
+    let out = Command::new(dane_bin())
+        .args(["quickstart", "--engine", "bogus"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("unknown engine"), "{text}");
+    assert!(text.contains("USAGE"), "{text}");
+}
+
+#[test]
 fn no_subcommand_fails_with_usage() {
     let out = Command::new(dane_bin()).output().unwrap();
     assert!(!out.status.success());
@@ -99,6 +134,22 @@ fn quickstart_runs_and_exits_zero() {
     );
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("quickstart"), "{text}");
+    assert!(text.contains("converged"), "{text}");
+}
+
+#[test]
+fn quickstart_runs_on_threaded_engine() {
+    let out = Command::new(dane_bin())
+        .args(["quickstart", "--engine", "threaded"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("engine: threaded"), "{text}");
     assert!(text.contains("converged"), "{text}");
 }
 
@@ -148,6 +199,78 @@ fn run_experiment_from_json_config_with_csv() {
     let csv = std::fs::read_to_string(&csv_path).unwrap();
     assert!(csv.starts_with("round,objective"));
     assert!(csv.lines().count() > 2);
+}
+
+#[test]
+fn run_config_selects_threaded_engine() {
+    // The same experiment through `engine: threaded` must succeed and
+    // emit a CSV like the serial path does.
+    let dir = TempDir::new("cli-threaded").unwrap();
+    let cfg_path = dir.path().join("exp.json");
+    let csv_path = dir.path().join("trace.csv");
+    std::fs::write(
+        &cfg_path,
+        r#"{
+          "name": "cli-threaded",
+          "dataset": {"kind": "fig2", "n": 512, "d": 8, "paper_reg": 0.005},
+          "loss": "ridge",
+          "lambda": 0.01,
+          "algo": {"kind": "dane", "eta": 1.0, "mu_over_lambda": 0.0},
+          "machines": 4,
+          "rounds": 15,
+          "tol": 1e-8,
+          "seed": 3,
+          "engine": "threaded",
+          "threads": 2
+        }"#,
+    )
+    .unwrap();
+    let out = Command::new(dane_bin())
+        .args([
+            "run",
+            "--config",
+            cfg_path.to_str().unwrap(),
+            "--csv",
+            csv_path.to_str().unwrap(),
+            "--quiet",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let csv = std::fs::read_to_string(&csv_path).unwrap();
+    assert!(csv.starts_with("round,objective"));
+    assert!(csv.lines().count() > 2);
+}
+
+#[test]
+fn invalid_engine_config_reports_error() {
+    let dir = TempDir::new("cli-bad-engine").unwrap();
+    let cfg_path = dir.path().join("bad.json");
+    std::fs::write(
+        &cfg_path,
+        r#"{
+          "name": "bad-engine",
+          "dataset": {"kind": "fig2", "n": 64, "d": 4, "paper_reg": 0.005},
+          "loss": "ridge",
+          "lambda": 0.01,
+          "algo": {"kind": "dane", "eta": 1.0, "mu_over_lambda": 0.0},
+          "machines": 2,
+          "rounds": 5,
+          "engine": "quantum"
+        }"#,
+    )
+    .unwrap();
+    let out = Command::new(dane_bin())
+        .args(["run", "--config", cfg_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("unknown engine"), "{text}");
 }
 
 #[test]

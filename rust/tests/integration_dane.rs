@@ -2,7 +2,7 @@
 //! Theorem-3 rate-vs-n, round accounting, driver plumbing and CSV
 //! emission — the paper's core claims at integration level.
 
-use dane::config::{AlgoConfig, BackendKind, DatasetConfig, ExperimentConfig, LossKind, NetConfig};
+use dane::config::{AlgoConfig, BackendKind, DatasetConfig, EngineKind, ExperimentConfig, LossKind, NetConfig};
 use dane::coordinator::dane as dane_algo;
 use dane::coordinator::driver::run_experiment;
 use dane::coordinator::{Cluster, RunCtx, SerialCluster};
@@ -128,7 +128,7 @@ fn rate_improves_with_total_samples() {
         let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
         let mut cluster = SerialCluster::new(&ds, obj.clone(), 8, 5);
         let ctx = RunCtx::new(20).with_reference(phi_star).with_tol(1e-13);
-        let res = dane_algo::run(&mut cluster, &Default::default(), &ctx);
+        let res = dane_algo::run(&mut cluster, &Default::default(), &ctx).unwrap();
         let f = res.trace.contraction_factors();
         let k = f.len().min(5);
         rates.push(f.iter().take(k).sum::<f64>() / k as f64);
@@ -149,6 +149,8 @@ fn driver_runs_config_end_to_end_and_emits_csv() {
         tol: 1e-8,
         seed: 3,
         backend: BackendKind::Native,
+        engine: EngineKind::Serial,
+        threads: None,
         eval_test: false,
         net: NetConfig::datacenter(),
     };
@@ -181,7 +183,7 @@ fn mu_trades_stability_for_speed() {
         let mut cluster = SerialCluster::new(&ds, obj.clone(), 4, 5);
         let ctx = RunCtx::new(100).with_reference(phi_star).with_tol(1e-9);
         let opts = dane_algo::DaneOptions { eta: 1.0, mu: mu_mult * lam, ..Default::default() };
-        let res = dane_algo::run(&mut cluster, &opts, &ctx);
+        let res = dane_algo::run(&mut cluster, &opts, &ctx).unwrap();
         rounds.push(res.trace.rounds_to_tol(1e-9).unwrap_or(usize::MAX));
     }
     assert!(rounds[0] <= rounds[1], "{rounds:?}");

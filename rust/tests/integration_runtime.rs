@@ -213,7 +213,7 @@ fn full_dane_run_on_pjrt_backend_converges() {
     cluster.use_pjrt(reg).unwrap();
     // f32 artifacts floor the reachable suboptimality around 1e-6..1e-7.
     let ctx = RunCtx::new(12).with_reference(phi_star).with_tol(5e-6);
-    let res = dane_algo::run(&mut cluster, &dane_algo::DaneOptions::default(), &ctx);
+    let res = dane_algo::run(&mut cluster, &dane_algo::DaneOptions::default(), &ctx).unwrap();
     assert!(
         res.converged,
         "pjrt DANE should reach 5e-6: {:?}",

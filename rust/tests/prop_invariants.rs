@@ -4,7 +4,7 @@
 //! and JSON config round-trips.
 
 use dane::comm::{Collective, NetModel};
-use dane::config::{AlgoConfig, BackendKind, DatasetConfig, ExperimentConfig, LossKind, NetConfig};
+use dane::config::{AlgoConfig, BackendKind, DatasetConfig, EngineKind, ExperimentConfig, LossKind, NetConfig};
 use dane::data::sharding::shard_indices;
 use dane::data::Shard;
 use dane::linalg::cg::{cg_solve, CgScratch};
@@ -302,6 +302,12 @@ fn prop_config_json_roundtrip() {
                 tol: rng.range_f64(1e-12, 1e-3),
                 seed: rng.next_u64() >> 12,
                 backend: BackendKind::Native,
+                engine: if rng.bool(0.5) {
+                    EngineKind::Threaded
+                } else {
+                    EngineKind::Serial
+                },
+                threads: if rng.bool(0.5) { Some(1 + rng.below(8)) } else { None },
                 eval_test: rng.bool(0.5),
                 net: NetConfig::datacenter(),
             }

@@ -11,11 +11,17 @@
 //! norms, iterates and communication accounting; only wallclock may
 //! differ.
 
+use dane::config::{
+    AlgoConfig, BackendKind, DatasetConfig, EngineKind, ExperimentConfig, LossKind,
+    NetConfig,
+};
 use dane::coordinator::dane as dane_algo;
+use dane::coordinator::driver::run_experiment;
 use dane::coordinator::threaded::ThreadedCluster;
 use dane::coordinator::{AlgoResult, Cluster, RunCtx, SerialCluster};
 use dane::data::{synthetic_fig2, Dataset};
 use dane::loss::{Objective, Ridge, SmoothHinge};
+use dane::metrics::Trace;
 use dane::solver::erm_solve;
 use std::sync::Arc;
 
@@ -30,16 +36,14 @@ fn run_both(
 ) -> (AlgoResult, AlgoResult) {
     let mut serial = SerialCluster::new(ds, obj.clone(), m, shard_seed);
     let mut threaded = ThreadedCluster::new(ds, obj, m, shard_seed);
-    let r_serial = dane_algo::run(&mut serial, opts, ctx);
-    let r_threaded = dane_algo::run(&mut threaded, opts, ctx);
+    let r_serial = dane_algo::run(&mut serial, opts, ctx).unwrap();
+    let r_threaded = dane_algo::run(&mut threaded, opts, ctx).unwrap();
     (r_serial, r_threaded)
 }
 
-fn assert_traces_identical(a: &AlgoResult, b: &AlgoResult) {
-    assert_eq!(a.converged, b.converged);
-    assert_eq!(a.w, b.w, "final iterates must be bit-identical");
-    assert_eq!(a.trace.len(), b.trace.len());
-    for (ra, rb) in a.trace.rows.iter().zip(&b.trace.rows) {
+fn assert_rows_identical(a: &Trace, b: &Trace) {
+    assert_eq!(a.len(), b.len());
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
         assert_eq!(ra.round, rb.round);
         assert_eq!(ra.objective, rb.objective, "round {}", ra.round);
         assert_eq!(ra.suboptimality, rb.suboptimality, "round {}", ra.round);
@@ -49,6 +53,12 @@ fn assert_traces_identical(a: &AlgoResult, b: &AlgoResult) {
         assert_eq!(ra.comm_bytes, rb.comm_bytes, "round {}", ra.round);
         // elapsed_seconds is wallclock and legitimately differs
     }
+}
+
+fn assert_traces_identical(a: &AlgoResult, b: &AlgoResult) {
+    assert_eq!(a.converged, b.converged);
+    assert_eq!(a.w, b.w, "final iterates must be bit-identical");
+    assert_rows_identical(&a.trace, &b.trace);
 }
 
 #[test]
@@ -90,6 +100,40 @@ fn threaded_first_combination_matches_serial() {
     };
     let (a, b) = run_both(&ds, obj, 4, 1, &opts, &ctx);
     assert_traces_identical(&a, &b);
+}
+
+/// Engine parity through the config/driver path: the fig2-style config
+/// below run with `engine: threaded` must produce a bit-identical trace
+/// to `engine: serial` — the driver seeds shards, constructs the engine
+/// and dispatches identically, so the engines are interchangeable from
+/// `dane run`'s point of view.
+#[test]
+fn driver_engine_parity_on_fig2_config() {
+    let mut cfg = ExperimentConfig {
+        name: "parity".into(),
+        dataset: DatasetConfig::Fig2 { n: 1024, d: 16, paper_reg: 0.005 },
+        loss: LossKind::Ridge,
+        lambda: 0.01,
+        algo: AlgoConfig::Dane { eta: 1.0, mu_over_lambda: 1.0 },
+        machines: 4,
+        rounds: 12,
+        tol: 1e-10,
+        seed: 7,
+        backend: BackendKind::Native,
+        engine: EngineKind::Serial,
+        threads: None,
+        eval_test: false,
+        net: NetConfig::datacenter(),
+    };
+    let serial = run_experiment(&cfg).unwrap();
+    cfg.engine = EngineKind::Threaded;
+    let threaded = run_experiment(&cfg).unwrap();
+
+    assert_eq!(serial.phi_star, threaded.phi_star);
+    assert_eq!(serial.w, threaded.w, "final iterates must be bit-identical");
+    assert_eq!(serial.converged, threaded.converged);
+    assert_eq!(serial.rounds_to_tol, threaded.rounds_to_tol);
+    assert_rows_identical(&serial.trace, &threaded.trace);
 }
 
 #[test]
