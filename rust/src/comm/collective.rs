@@ -13,6 +13,11 @@ pub struct CommStats {
     pub bytes: u64,
     /// Modeled wallclock seconds under the attached [`NetModel`].
     pub modeled_seconds: f64,
+    /// Bytes *measured on a real transport* (frame bytes written to and
+    /// read from sockets by the TCP engine, instrumentation rounds
+    /// included). Exactly zero on the in-memory engines — the
+    /// modeled-vs-measured pair is the point of the column.
+    pub wire_bytes: u64,
 }
 
 impl CommStats {
@@ -20,6 +25,7 @@ impl CommStats {
         self.rounds += other.rounds;
         self.bytes += other.bytes;
         self.modeled_seconds += other.modeled_seconds;
+        self.wire_bytes += other.wire_bytes;
     }
 }
 

@@ -6,10 +6,17 @@
 //! round (so benches can report them), and attaches an alpha-beta network
 //! cost model with star / ring / tree topologies to turn counts into
 //! modeled wallclock — the quantity a real deployment would observe.
+//!
+//! [`wire`] is the protocol made explicit: typed `Command`/`Reply`
+//! messages plus a binary codec, shared by the in-memory engines and the
+//! TCP process cluster. Alongside the *modeled* figures, `CommStats`
+//! carries `wire_bytes` — bytes actually moved over a socket (zero on
+//! in-memory engines).
 
 pub mod collective;
 pub mod netmodel;
 pub mod roundchan;
+pub mod wire;
 
 pub use collective::{Collective, CommStats};
 pub use netmodel::{NetModel, Topology};

@@ -18,6 +18,7 @@
 //! endpoints) surfaces as an `Err` on the leader, never a deadlock.
 
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 struct Slot<T> {
     value: Option<T>,
@@ -45,6 +46,16 @@ pub struct SendError<T>(pub T);
 /// the slot is empty.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RecvError;
+
+/// Error returned by [`RoundReceiver::recv_timeout`]: either the peer is
+/// gone ([`RecvTimeoutError::Disconnected`], same as [`RecvError`]) or it
+/// is *wedged* — alive but silent past the deadline. Mirrors
+/// `std::sync::mpsc::RecvTimeoutError`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvTimeoutError {
+    Timeout,
+    Disconnected,
+}
 
 /// Create a connected single-slot channel pair.
 pub fn round_channel<T>() -> (RoundSender<T>, RoundReceiver<T>) {
@@ -90,6 +101,33 @@ impl<T> RoundReceiver<T> {
             slot = wait(&self.0.cv, slot);
         }
     }
+
+    /// Like [`RoundReceiver::recv`], but gives up after `timeout` — the
+    /// hang-safety primitive: a worker that is wedged (not just dead)
+    /// surfaces as `Err(Timeout)` on the leader instead of a deadlock.
+    /// Allocation-free like `recv`, so the steady-state protocol can use
+    /// it unconditionally.
+    pub fn recv_timeout(
+        &self,
+        timeout: Duration,
+    ) -> std::result::Result<T, RecvTimeoutError> {
+        let deadline = Instant::now() + timeout;
+        let mut slot = lock(&self.0.slot);
+        loop {
+            if let Some(v) = slot.value.take() {
+                self.0.cv.notify_all();
+                return Ok(v);
+            }
+            if !slot.tx_alive {
+                return Err(RecvTimeoutError::Disconnected);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            slot = wait_timeout(&self.0.cv, slot, deadline - now);
+        }
+    }
 }
 
 impl<T> Drop for RoundSender<T> {
@@ -117,6 +155,19 @@ fn wait<'a, T>(
     guard: std::sync::MutexGuard<'a, Slot<T>>,
 ) -> std::sync::MutexGuard<'a, Slot<T>> {
     cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: std::sync::MutexGuard<'a, Slot<T>>,
+    dur: Duration,
+) -> std::sync::MutexGuard<'a, Slot<T>> {
+    // Spurious wakeups and the timed-out flag are both handled by the
+    // caller's loop re-checking the slot and its own deadline.
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, _)) => g,
+        Err(e) => e.into_inner().0,
+    }
 }
 
 #[cfg(test)]
@@ -167,6 +218,29 @@ mod tests {
         });
         assert!(t.join().is_err());
         assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn recv_timeout_times_out_on_wedged_sender() {
+        let (tx, rx) = round_channel::<i32>();
+        // sender alive but silent: must come back as Timeout, not hang
+        let err = rx.recv_timeout(Duration::from_millis(30)).unwrap_err();
+        assert_eq!(err, RecvTimeoutError::Timeout);
+        // the channel survives a timeout: a late value still arrives
+        tx.send(5).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)), Ok(5));
+    }
+
+    #[test]
+    fn recv_timeout_reports_disconnect() {
+        let (tx, rx) = round_channel::<i32>();
+        tx.send(7).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv_timeout(Duration::from_secs(1)), Ok(7));
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(10)),
+            Err(RecvTimeoutError::Disconnected)
+        );
     }
 
     #[test]

@@ -1,0 +1,750 @@
+//! The leader <-> worker round protocol as an explicit wire format.
+//!
+//! Every collective the five algorithms use maps onto one [`Command`]
+//! broadcast and one [`Reply`] gather per worker per round. The same
+//! typed messages travel over three transports:
+//!
+//! * `SerialCluster` — no messages at all (inline calls, the degenerate
+//!   transport);
+//! * `ThreadedCluster` — `Command`/`Reply` values move through the
+//!   in-memory rendezvous channel ([`super::roundchan`]), never touching
+//!   the codec — broadcast payloads stay behind `Arc`s and reply buffers
+//!   recycle, preserving the zero-allocation steady state;
+//! * `TcpCluster` — the same values encoded through the binary codec
+//!   below and moved over real sockets, with every transmitted byte
+//!   counted into `CommStats::wire_bytes`.
+//!
+//! ## Frame format (version 1)
+//!
+//! ```text
+//! frame   := len(u32 LE, length of body) | body
+//! body    := version(u8 = 1) | tag(u8) | payload
+//! vec     := count(u64 LE) | count x f64 LE
+//! str     := len(u32 LE) | len UTF-8 bytes
+//! ```
+//!
+//! `f64` values are moved as their IEEE-754 little-endian bit patterns
+//! (`to_le_bytes`/`from_le_bytes`), so NaN payloads and ±inf round-trip
+//! bit-exactly — the parity tests rely on the codec never perturbing a
+//! value.
+//!
+//! Decoding is **total**: malformed input (truncated frames, bad version
+//! bytes, unknown tags, counts that exceed the received bytes, trailing
+//! garbage) returns `Err` — never a panic, never an attacker-sized
+//! allocation. [`read_frame`] rejects length prefixes above
+//! [`MAX_FRAME_LEN`] before allocating and grows its buffer in bounded
+//! chunks, so a hostile prefix costs at most the bytes actually sent.
+//!
+//! The `out` fields on [`Command::GradLoss`] / [`Command::DaneSolve`] are
+//! a transport detail of the threaded engine (the leader loans each
+//! worker the reply buffer it must fill); they are **not wire content** —
+//! the codec skips them on encode and decodes them as empty.
+
+use crate::data::Shard;
+use crate::linalg::{CsrMatrix, DataMatrix, DenseMatrix};
+use crate::{Error, Result};
+use std::io::Read;
+use std::sync::Arc;
+
+/// Protocol version moved in every frame; bump on any layout change.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Hard cap on one frame body (1 GiB). A length prefix above this is
+/// rejected before any allocation; real frames (the largest is an
+/// [`Command::Init`] carrying a shard) stay far below it.
+pub const MAX_FRAME_LEN: usize = 1 << 30;
+
+/// Body bytes are pulled from the socket in chunks of at most this, so
+/// a hostile length prefix cannot force a large up-front allocation.
+const READ_CHUNK: usize = 1 << 20;
+
+// ---- tags -----------------------------------------------------------
+const CMD_INIT: u8 = 0x01;
+const CMD_GRAD_LOSS: u8 = 0x02;
+const CMD_LOSS: u8 = 0x03;
+const CMD_DANE_SOLVE: u8 = 0x04;
+const CMD_PROX: u8 = 0x05;
+const CMD_ERM: u8 = 0x06;
+const CMD_ROW_SQ: u8 = 0x07;
+
+const REP_VEC: u8 = 0x81;
+const REP_SCALAR: u8 = 0x82;
+const REP_VEC_SCALAR: u8 = 0x83;
+const REP_VEC_PAIR: u8 = 0x84;
+const REP_ERR: u8 = 0x85;
+
+const MAT_DENSE: u8 = 0;
+const MAT_SPARSE: u8 = 1;
+
+/// One-time worker setup: everything a remote process needs to become a
+/// cluster member. In-memory engines construct workers directly and
+/// never see this message.
+#[derive(Debug, Clone)]
+pub struct InitPayload {
+    /// Rank of this worker in the cluster.
+    pub worker_id: usize,
+    /// Objective by name (`config::LossKind::from_name`), so the wire
+    /// layer stays decoupled from the config layer.
+    pub loss_name: String,
+    /// L2 regularization lambda of the objective.
+    pub lambda: f64,
+    /// Gram-build thread override (config `threads`); must match across
+    /// workers and engines for bit-reproducible runs.
+    pub gram_threads: Option<usize>,
+    /// This worker's slice of the data.
+    pub shard: Shard,
+}
+
+/// Commands the leader broadcasts to workers — the collective surface of
+/// the `Cluster` trait, one variant per distinct worker computation.
+/// Broadcast payloads (`w`, `w_prev`, `g`) sit behind `Arc` so the
+/// threaded engine shares one buffer across all m workers; the codec
+/// reads through the `Arc` transparently.
+pub enum Command {
+    /// Handshake: install the shard + objective (TCP transport only).
+    /// Acknowledged with `Reply::Scalar(0.0)`.
+    Init(Box<InitPayload>),
+    /// grad phi_i + phi_i at w -> `Reply::VecScalar`.
+    GradLoss {
+        w: Arc<Vec<f64>>,
+        /// Leader-loaned reply buffer (threaded transport); not on the wire.
+        out: Vec<f64>,
+    },
+    /// phi_i at w -> `Reply::Scalar`.
+    Loss { w: Arc<Vec<f64>> },
+    /// DANE local solve (paper eq. 13) -> `Reply::Vec`.
+    DaneSolve {
+        w_prev: Arc<Vec<f64>>,
+        g: Arc<Vec<f64>>,
+        eta: f64,
+        mu: f64,
+        /// Leader-loaned reply buffer (threaded transport); not on the wire.
+        out: Vec<f64>,
+    },
+    /// ADMM proximal step at a per-worker target -> `Reply::Vec`.
+    Prox { v: Vec<f64>, rho: f64 },
+    /// Local ERM, optionally with a bias-correction subsample
+    /// `(r, seed)` -> `Reply::VecPair`.
+    Erm { subsample: Option<(f64, u64)> },
+    /// Mean squared row norm of the shard -> `Reply::Scalar`.
+    RowSq,
+}
+
+/// Worker replies, one per command. `Err` carries the worker-side
+/// failure message; the leader maps it onto `Error::Runtime`.
+pub enum Reply {
+    Vec(Vec<f64>),
+    Scalar(f64),
+    VecScalar(Vec<f64>, f64),
+    VecPair(Vec<f64>, Option<Vec<f64>>),
+    Err(String),
+}
+
+// ---------------------------------------------------------------------
+// encode
+// ---------------------------------------------------------------------
+
+/// Encode a full command frame (length prefix included) into `buf`.
+/// `buf` is cleared first and reused round over round, so the steady
+/// state costs no allocations once it has grown to the round's size.
+/// Fails (like the decode side) on a body over [`MAX_FRAME_LEN`] —
+/// the length prefix must never wrap or name a frame a peer would
+/// reject.
+pub fn encode_command(cmd: &Command, buf: &mut Vec<u8>) -> Result<()> {
+    begin_frame(buf);
+    match cmd {
+        Command::Init(p) => {
+            buf.push(CMD_INIT);
+            put_u64(buf, p.worker_id as u64);
+            put_str(buf, &p.loss_name);
+            put_f64(buf, p.lambda);
+            match p.gram_threads {
+                None => buf.push(0),
+                Some(t) => {
+                    buf.push(1);
+                    put_u64(buf, t as u64);
+                }
+            }
+            put_shard(buf, &p.shard);
+        }
+        Command::GradLoss { w, out: _ } => {
+            buf.push(CMD_GRAD_LOSS);
+            put_vec(buf, w);
+        }
+        Command::Loss { w } => {
+            buf.push(CMD_LOSS);
+            put_vec(buf, w);
+        }
+        Command::DaneSolve { w_prev, g, eta, mu, out: _ } => {
+            buf.push(CMD_DANE_SOLVE);
+            put_vec(buf, w_prev);
+            put_vec(buf, g);
+            put_f64(buf, *eta);
+            put_f64(buf, *mu);
+        }
+        Command::Prox { v, rho } => {
+            buf.push(CMD_PROX);
+            put_vec(buf, v);
+            put_f64(buf, *rho);
+        }
+        Command::Erm { subsample } => {
+            buf.push(CMD_ERM);
+            match subsample {
+                None => buf.push(0),
+                Some((r, seed)) => {
+                    buf.push(1);
+                    put_f64(buf, *r);
+                    put_u64(buf, *seed);
+                }
+            }
+        }
+        Command::RowSq => buf.push(CMD_ROW_SQ),
+    }
+    end_frame(buf)
+}
+
+/// Encode a full reply frame (length prefix included) into `buf`; same
+/// oversize-body contract as [`encode_command`].
+pub fn encode_reply(rep: &Reply, buf: &mut Vec<u8>) -> Result<()> {
+    begin_frame(buf);
+    match rep {
+        Reply::Vec(v) => {
+            buf.push(REP_VEC);
+            put_vec(buf, v);
+        }
+        Reply::Scalar(x) => {
+            buf.push(REP_SCALAR);
+            put_f64(buf, *x);
+        }
+        Reply::VecScalar(v, x) => {
+            buf.push(REP_VEC_SCALAR);
+            put_vec(buf, v);
+            put_f64(buf, *x);
+        }
+        Reply::VecPair(full, sub) => {
+            buf.push(REP_VEC_PAIR);
+            put_vec(buf, full);
+            match sub {
+                None => buf.push(0),
+                Some(s) => {
+                    buf.push(1);
+                    put_vec(buf, s);
+                }
+            }
+        }
+        Reply::Err(msg) => {
+            buf.push(REP_ERR);
+            put_str(buf, msg);
+        }
+    }
+    end_frame(buf)
+}
+
+fn begin_frame(buf: &mut Vec<u8>) {
+    buf.clear();
+    buf.extend_from_slice(&[0, 0, 0, 0]); // length prefix, patched below
+    buf.push(WIRE_VERSION);
+}
+
+/// Patch the length prefix; rejects bodies the receive side would
+/// refuse (and, past u32::MAX, ones whose prefix would silently wrap).
+fn end_frame(buf: &mut Vec<u8>) -> Result<()> {
+    let body = buf.len() - 4;
+    if body > MAX_FRAME_LEN {
+        return Err(Error::Config(format!(
+            "wire: frame body {body} bytes exceeds cap {MAX_FRAME_LEN} — \
+             shard or payload too large for one frame"
+        )));
+    }
+    buf[..4].copy_from_slice(&(body as u32).to_le_bytes());
+    Ok(())
+}
+
+fn put_f64(buf: &mut Vec<u8>, x: f64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, x: u32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_vec(buf: &mut Vec<u8>, v: &[f64]) {
+    put_u64(buf, v.len() as u64);
+    for &x in v {
+        put_f64(buf, x);
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_shard(buf: &mut Vec<u8>, shard: &Shard) {
+    match &shard.x {
+        DataMatrix::Dense(m) => {
+            buf.push(MAT_DENSE);
+            put_u64(buf, m.rows() as u64);
+            put_u64(buf, m.cols() as u64);
+            for &x in m.data() {
+                put_f64(buf, x);
+            }
+        }
+        DataMatrix::Sparse(s) => {
+            buf.push(MAT_SPARSE);
+            put_u64(buf, s.rows() as u64);
+            put_u64(buf, s.cols() as u64);
+            put_u64(buf, s.nnz() as u64);
+            for i in 0..s.rows() {
+                let (idx, vals) = s.row(i);
+                put_u64(buf, idx.len() as u64);
+                for &j in idx {
+                    put_u32(buf, j);
+                }
+                for &x in vals {
+                    put_f64(buf, x);
+                }
+            }
+        }
+    }
+    put_vec(buf, &shard.y);
+    put_u64(buf, shard.n_effective() as u64);
+}
+
+// ---------------------------------------------------------------------
+// decode
+// ---------------------------------------------------------------------
+
+/// Bounds-checked cursor over a frame body; every accessor fails with a
+/// `Config` error instead of panicking or over-allocating.
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Cur { b, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::Config(format!(
+                "wire: truncated frame (need {n} more bytes, have {})",
+                self.remaining()
+            )));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(s);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let s = self.take(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(s);
+        Ok(f64::from_le_bytes(b))
+    }
+
+    /// A `u64` count that must describe `elem_size`-byte elements still
+    /// present in the frame — the guard that makes hostile counts cost
+    /// nothing (no allocation ever exceeds the received bytes).
+    fn count(&mut self, elem_size: usize, what: &str) -> Result<usize> {
+        let n = self.u64()?;
+        let need = (n as u128) * elem_size as u128;
+        if need > self.remaining() as u128 {
+            return Err(Error::Config(format!(
+                "wire: {what} count {n} exceeds frame ({} bytes left)",
+                self.remaining()
+            )));
+        }
+        Ok(n as usize)
+    }
+
+    fn vec_f64(&mut self) -> Result<Vec<f64>> {
+        let n = self.count(8, "vector")?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| Error::Config("wire: string is not UTF-8".into()))
+    }
+
+    /// Reject trailing garbage: a well-formed frame is consumed exactly.
+    fn done(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(Error::Config(format!(
+                "wire: {} trailing bytes after payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn check_version(cur: &mut Cur) -> Result<u8> {
+    let v = cur.u8()?;
+    if v != WIRE_VERSION {
+        return Err(Error::Config(format!(
+            "wire: version {v} (expected {WIRE_VERSION})"
+        )));
+    }
+    cur.u8()
+}
+
+/// Decode a command frame body (the bytes after the length prefix).
+pub fn decode_command(body: &[u8]) -> Result<Command> {
+    let mut cur = Cur::new(body);
+    let tag = check_version(&mut cur)?;
+    let cmd = match tag {
+        CMD_INIT => {
+            let worker_id = cur.u64()? as usize;
+            let loss_name = cur.string()?;
+            let lambda = cur.f64()?;
+            let gram_threads = match cur.u8()? {
+                0 => None,
+                1 => Some(cur.u64()? as usize),
+                b => {
+                    return Err(Error::Config(format!(
+                        "wire: bad gram_threads marker {b}"
+                    )))
+                }
+            };
+            let shard = take_shard(&mut cur)?;
+            Command::Init(Box::new(InitPayload {
+                worker_id,
+                loss_name,
+                lambda,
+                gram_threads,
+                shard,
+            }))
+        }
+        CMD_GRAD_LOSS => Command::GradLoss {
+            w: Arc::new(cur.vec_f64()?),
+            out: Vec::new(),
+        },
+        CMD_LOSS => Command::Loss { w: Arc::new(cur.vec_f64()?) },
+        CMD_DANE_SOLVE => {
+            let w_prev = Arc::new(cur.vec_f64()?);
+            let g = Arc::new(cur.vec_f64()?);
+            let eta = cur.f64()?;
+            let mu = cur.f64()?;
+            Command::DaneSolve { w_prev, g, eta, mu, out: Vec::new() }
+        }
+        CMD_PROX => {
+            let v = cur.vec_f64()?;
+            let rho = cur.f64()?;
+            Command::Prox { v, rho }
+        }
+        CMD_ERM => {
+            let subsample = match cur.u8()? {
+                0 => None,
+                1 => Some((cur.f64()?, cur.u64()?)),
+                b => {
+                    return Err(Error::Config(format!(
+                        "wire: bad subsample marker {b}"
+                    )))
+                }
+            };
+            Command::Erm { subsample }
+        }
+        CMD_ROW_SQ => Command::RowSq,
+        t => return Err(Error::Config(format!("wire: unknown command tag {t:#x}"))),
+    };
+    cur.done()?;
+    Ok(cmd)
+}
+
+/// Decode a reply frame body (the bytes after the length prefix).
+pub fn decode_reply(body: &[u8]) -> Result<Reply> {
+    let mut cur = Cur::new(body);
+    let tag = check_version(&mut cur)?;
+    let rep = match tag {
+        REP_VEC => Reply::Vec(cur.vec_f64()?),
+        REP_SCALAR => Reply::Scalar(cur.f64()?),
+        REP_VEC_SCALAR => {
+            let v = cur.vec_f64()?;
+            let x = cur.f64()?;
+            Reply::VecScalar(v, x)
+        }
+        REP_VEC_PAIR => {
+            let full = cur.vec_f64()?;
+            let sub = match cur.u8()? {
+                0 => None,
+                1 => Some(cur.vec_f64()?),
+                b => {
+                    return Err(Error::Config(format!(
+                        "wire: bad subsample marker {b}"
+                    )))
+                }
+            };
+            Reply::VecPair(full, sub)
+        }
+        REP_ERR => Reply::Err(cur.string()?),
+        t => return Err(Error::Config(format!("wire: unknown reply tag {t:#x}"))),
+    };
+    cur.done()?;
+    Ok(rep)
+}
+
+/// Decode a shard, validating every invariant the `CsrMatrix::new` /
+/// `Shard::with_padding` constructors would otherwise assert — malformed
+/// frames must come back as `Err`, never a panic.
+fn take_shard(cur: &mut Cur) -> Result<Shard> {
+    let x = match cur.u8()? {
+        MAT_DENSE => {
+            let rows = cur.u64()? as usize;
+            let cols = cur.u64()? as usize;
+            let cells = (rows as u128) * cols as u128;
+            if cells * 8 > cur.remaining() as u128 {
+                return Err(Error::Config(format!(
+                    "wire: dense {rows}x{cols} exceeds frame"
+                )));
+            }
+            let mut data = Vec::with_capacity(cells as usize);
+            for _ in 0..cells as usize {
+                data.push(cur.f64()?);
+            }
+            DataMatrix::Dense(DenseMatrix::from_vec(rows, cols, data))
+        }
+        MAT_SPARSE => {
+            let rows = cur.u64()?;
+            let cols = cur.u64()? as usize;
+            let nnz = cur.u64()?;
+            // every row carries at least its u64 nnz count, so a frame
+            // can only describe remaining/8 rows — reject hostile row
+            // counts before sizing indptr
+            if (rows as u128) * 8 > cur.remaining() as u128 {
+                return Err(Error::Config(format!(
+                    "wire: sparse row count {rows} exceeds frame"
+                )));
+            }
+            let rows = rows as usize;
+            if (nnz as u128) * 12 > cur.remaining() as u128 {
+                return Err(Error::Config(format!(
+                    "wire: sparse nnz {nnz} exceeds frame"
+                )));
+            }
+            let nnz = nnz as usize;
+            let mut indptr = Vec::with_capacity(rows + 1);
+            let mut indices: Vec<u32> = Vec::with_capacity(nnz);
+            let mut data: Vec<f64> = Vec::with_capacity(nnz);
+            indptr.push(0usize);
+            for _ in 0..rows {
+                let k = cur.count(12, "sparse row")?;
+                for _ in 0..k {
+                    let j = cur.u32()?;
+                    if j as usize >= cols {
+                        return Err(Error::Config(format!(
+                            "wire: sparse column {j} out of range (d={cols})"
+                        )));
+                    }
+                    indices.push(j);
+                }
+                for _ in 0..k {
+                    data.push(cur.f64()?);
+                }
+                indptr.push(indices.len());
+            }
+            if indices.len() != nnz {
+                return Err(Error::Config(format!(
+                    "wire: sparse nnz mismatch ({} vs {nnz})",
+                    indices.len()
+                )));
+            }
+            DataMatrix::Sparse(CsrMatrix::new(rows, cols, indptr, indices, data))
+        }
+        k => return Err(Error::Config(format!("wire: unknown matrix kind {k}"))),
+    };
+    let y = cur.vec_f64()?;
+    if y.len() != x.rows() {
+        return Err(Error::Config(format!(
+            "wire: shard y length {} != rows {}",
+            y.len(),
+            x.rows()
+        )));
+    }
+    let n_effective = cur.u64()? as usize;
+    if n_effective > x.rows() {
+        return Err(Error::Config(format!(
+            "wire: n_effective {n_effective} exceeds rows {}",
+            x.rows()
+        )));
+    }
+    Ok(Shard::with_padding(x, y, n_effective))
+}
+
+// ---------------------------------------------------------------------
+// framed I/O
+// ---------------------------------------------------------------------
+
+/// Read one frame body into `body` (cleared and reused). Returns
+/// `Ok(None)` on a clean disconnect *at a frame boundary* (the peer hung
+/// up between rounds), `Ok(Some(total_bytes))` — length prefix included
+/// — on success, and `Err` on mid-frame EOF, an oversize length prefix,
+/// or any transport error.
+pub fn read_frame<R: Read>(r: &mut R, body: &mut Vec<u8>) -> Result<Option<usize>> {
+    let mut prefix = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        let n = r.read(&mut prefix[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None); // clean EOF between frames
+            }
+            return Err(Error::Runtime(
+                "wire: connection closed mid-frame".into(),
+            ));
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(Error::Config(format!(
+            "wire: frame length {len} exceeds cap {MAX_FRAME_LEN}"
+        )));
+    }
+    if len < 2 {
+        return Err(Error::Config(format!(
+            "wire: frame length {len} below header size"
+        )));
+    }
+    body.clear();
+    // Grow in bounded chunks: the buffer only ever holds bytes that
+    // actually arrived, so a hostile prefix cannot force a large
+    // allocation.
+    while body.len() < len {
+        let chunk = (len - body.len()).min(READ_CHUNK);
+        let start = body.len();
+        body.resize(start + chunk, 0);
+        let mut filled = start;
+        while filled < start + chunk {
+            let n = r.read(&mut body[filled..start + chunk])?;
+            if n == 0 {
+                return Err(Error::Runtime(
+                    "wire: connection closed mid-frame".into(),
+                ));
+            }
+            filled += n;
+        }
+    }
+    Ok(Some(4 + len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_reply(r: &Reply) -> Reply {
+        let mut buf = Vec::new();
+        encode_reply(r, &mut buf).unwrap();
+        decode_reply(&buf[4..]).unwrap()
+    }
+
+    #[test]
+    fn reply_scalar_roundtrips() {
+        match roundtrip_reply(&Reply::Scalar(-3.25)) {
+            Reply::Scalar(x) => assert_eq!(x, -3.25),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn command_dane_solve_roundtrips() {
+        let cmd = Command::DaneSolve {
+            w_prev: Arc::new(vec![1.0, f64::NAN, -0.0]),
+            g: Arc::new(vec![f64::INFINITY]),
+            eta: 0.5,
+            mu: 1e-9,
+            out: vec![9.0; 4], // buffer loan: must NOT survive the wire
+        };
+        let mut buf = Vec::new();
+        encode_command(&cmd, &mut buf).unwrap();
+        match decode_command(&buf[4..]).unwrap() {
+            Command::DaneSolve { w_prev, g, eta, mu, out } => {
+                assert_eq!(w_prev.len(), 3);
+                assert_eq!(w_prev[1].to_bits(), f64::NAN.to_bits());
+                assert_eq!(w_prev[2].to_bits(), (-0.0f64).to_bits());
+                assert_eq!(g[0], f64::INFINITY);
+                assert_eq!(eta, 0.5);
+                assert_eq!(mu, 1e-9);
+                assert!(out.is_empty(), "out is transport state, not wire content");
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn bad_version_and_tag_rejected() {
+        let mut buf = Vec::new();
+        encode_reply(&Reply::Scalar(1.0), &mut buf).unwrap();
+        let mut body = buf[4..].to_vec();
+        body[0] = 99; // version
+        assert!(decode_reply(&body).is_err());
+        let mut body = buf[4..].to_vec();
+        body[1] = 0x7f; // tag
+        assert!(decode_reply(&body).is_err());
+    }
+
+    #[test]
+    fn truncation_and_trailing_bytes_rejected() {
+        let mut buf = Vec::new();
+        encode_reply(&Reply::Vec(vec![1.0, 2.0, 3.0]), &mut buf).unwrap();
+        let body = &buf[4..];
+        for cut in 0..body.len() {
+            assert!(decode_reply(&body[..cut]).is_err(), "cut at {cut}");
+        }
+        let mut long = body.to_vec();
+        long.push(0);
+        assert!(decode_reply(&long).is_err(), "trailing byte accepted");
+    }
+
+    #[test]
+    fn oversize_length_prefix_rejected() {
+        let mut frame = ((MAX_FRAME_LEN + 1) as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&[0; 16]);
+        let mut body = Vec::new();
+        assert!(read_frame(&mut frame.as_slice(), &mut body).is_err());
+    }
+
+    #[test]
+    fn read_frame_clean_eof_is_none() {
+        let mut body = Vec::new();
+        let mut empty: &[u8] = &[];
+        assert_eq!(read_frame(&mut empty, &mut body).unwrap(), None);
+        // mid-prefix EOF is an error, not a clean disconnect
+        let mut partial: &[u8] = &[1u8, 0];
+        assert!(read_frame(&mut partial, &mut body).is_err());
+    }
+}

@@ -264,6 +264,12 @@ pub enum EngineKind {
     /// protocol (`coordinator::threaded`). Bit-identical traces to
     /// `Serial` by construction (smoke_cluster_parity).
     Threaded,
+    /// One OS *process* per worker speaking the `comm::wire` frame
+    /// format over real sockets (`coordinator::tcp`). Workers come from
+    /// the config's `workers` address list, or are spawned on loopback
+    /// by the leader when the list is absent. Traces stay bit-identical
+    /// to `Serial`; `wire_bytes` reports the measured socket traffic.
+    Tcp,
 }
 
 impl EngineKind {
@@ -271,6 +277,7 @@ impl EngineKind {
         match self {
             EngineKind::Serial => "serial",
             EngineKind::Threaded => "threaded",
+            EngineKind::Tcp => "tcp",
         }
     }
 
@@ -278,8 +285,9 @@ impl EngineKind {
         match s {
             "serial" => Ok(EngineKind::Serial),
             "threaded" => Ok(EngineKind::Threaded),
+            "tcp" => Ok(EngineKind::Tcp),
             other => Err(Error::Config(format!(
-                "unknown engine {other:?} (expected \"serial\" or \"threaded\")"
+                "unknown engine {other:?} (expected \"serial\", \"threaded\" or \"tcp\")"
             ))),
         }
     }
@@ -349,6 +357,11 @@ pub struct ExperimentConfig {
     pub backend: BackendKind,
     /// Which cluster engine runs the workers (default: serial).
     pub engine: EngineKind,
+    /// TCP engine only: addresses of externally-launched `dane worker
+    /// --listen` processes, one per machine. `None` means self-hosted —
+    /// the leader spawns its own worker processes on loopback. Must be
+    /// absent for in-memory engines.
+    pub workers: Option<Vec<String>>,
     /// Override for the workers' Gram-build thread count (the
     /// deterministic `par_gram` kernel). Applies to *both* engines —
     /// it is a per-worker compute knob, orthogonal to the engine — so
@@ -376,6 +389,15 @@ impl ExperimentConfig {
             ("seed", Json::num(self.seed as f64)),
             ("backend", Json::str(self.backend.name())),
             ("engine", Json::str(self.engine.name())),
+            (
+                "workers",
+                self.workers
+                    .as_ref()
+                    .map(|ws| {
+                        Json::Arr(ws.iter().map(|a| Json::str(a.clone())).collect())
+                    })
+                    .unwrap_or(Json::Null),
+            ),
             (
                 "threads",
                 self.threads.map(|t| Json::num(t as f64)).unwrap_or(Json::Null),
@@ -419,6 +441,27 @@ impl ExperimentConfig {
             Some(s) => EngineKind::from_name(s)?,
             None => EngineKind::Serial,
         };
+        let workers = match v.get("workers") {
+            None | Some(Json::Null) => None,
+            Some(w) => {
+                let arr = w.as_array().ok_or_else(|| {
+                    Error::Config("workers must be an array of addresses".into())
+                })?;
+                let mut addrs = Vec::with_capacity(arr.len());
+                for a in arr {
+                    addrs.push(
+                        a.as_str()
+                            .ok_or_else(|| {
+                                Error::Config(
+                                    "workers entries must be strings".into(),
+                                )
+                            })?
+                            .to_string(),
+                    );
+                }
+                Some(addrs)
+            }
+        };
         let threads = match v.get("threads") {
             None | Some(Json::Null) => None,
             Some(t) => Some(t.as_usize().ok_or_else(|| {
@@ -453,6 +496,7 @@ impl ExperimentConfig {
             seed,
             backend,
             engine,
+            workers,
             threads,
             eval_test,
             net,
@@ -485,10 +529,32 @@ impl ExperimentConfig {
         if self.threads == Some(0) {
             return Err(Error::Config("threads must be >= 1".into()));
         }
-        if self.engine == EngineKind::Threaded && self.backend == BackendKind::Pjrt {
+        if self.engine != EngineKind::Serial && self.backend == BackendKind::Pjrt {
             return Err(Error::Config(
                 "pjrt backend requires the serial engine".into(),
             ));
+        }
+        match (&self.workers, self.engine) {
+            (Some(_), EngineKind::Serial | EngineKind::Threaded) => {
+                return Err(Error::Config(
+                    "workers addresses require engine \"tcp\"".into(),
+                ));
+            }
+            (Some(ws), EngineKind::Tcp) => {
+                if ws.is_empty() {
+                    return Err(Error::Config(
+                        "workers must list >= 1 address".into(),
+                    ));
+                }
+                if ws.len() != self.machines {
+                    return Err(Error::Config(format!(
+                        "workers lists {} addresses but machines = {}",
+                        ws.len(),
+                        self.machines
+                    )));
+                }
+            }
+            (None, _) => {}
         }
         if matches!(self.loss, LossKind::Ridge)
             && matches!(
@@ -530,6 +596,7 @@ mod tests {
             seed: 42,
             backend: BackendKind::Native,
             engine: EngineKind::Serial,
+            workers: None,
             threads: None,
             eval_test: false,
             net: NetConfig::free(),
@@ -581,6 +648,58 @@ mod tests {
             assert_eq!(c2.threads, threads);
             c2.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn tcp_engine_and_workers_roundtrip() {
+        let mut c = sample();
+        c.engine = EngineKind::Tcp;
+        c.workers = Some(vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()]);
+        c.machines = 2;
+        let c2 = ExperimentConfig::from_json_str(&c.to_json_string()).unwrap();
+        assert_eq!(c2.engine, EngineKind::Tcp);
+        assert_eq!(c2.workers, c.workers);
+        c2.validate().unwrap();
+
+        // self-hosted: tcp with no workers list is valid
+        let mut c = sample();
+        c.engine = EngineKind::Tcp;
+        let c2 = ExperimentConfig::from_json_str(&c.to_json_string()).unwrap();
+        assert_eq!(c2.workers, None);
+        c2.validate().unwrap();
+    }
+
+    #[test]
+    fn workers_validation_catches_mismatches() {
+        // workers without the tcp engine
+        let mut c = sample();
+        c.workers = Some(vec!["127.0.0.1:7001".into(); 4]);
+        assert!(c.validate().is_err(), "workers need engine tcp");
+
+        // count mismatch with machines
+        let mut c = sample();
+        c.engine = EngineKind::Tcp;
+        c.workers = Some(vec!["127.0.0.1:7001".into()]);
+        c.machines = 4;
+        assert!(c.validate().is_err(), "workers/machines mismatch");
+
+        // empty list
+        let mut c = sample();
+        c.engine = EngineKind::Tcp;
+        c.workers = Some(Vec::new());
+        assert!(c.validate().is_err(), "empty workers list");
+
+        // tcp + pjrt is rejected like threaded + pjrt
+        let mut c = sample();
+        c.engine = EngineKind::Tcp;
+        c.backend = BackendKind::Pjrt;
+        assert!(c.validate().is_err(), "pjrt is serial-engine only");
+
+        // malformed workers JSON
+        let s = sample()
+            .to_json_string()
+            .replacen("\"workers\": null", "\"workers\": [1, 2]", 1);
+        assert!(ExperimentConfig::from_json_str(&s).is_err());
     }
 
     #[test]

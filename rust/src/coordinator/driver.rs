@@ -7,6 +7,7 @@
 //! singular local solve) propagate as `Err` all the way to the CLI —
 //! nothing on this path panics.
 
+use super::tcp::TcpCluster;
 use super::threaded::ThreadedCluster;
 use super::{admm, dane, gd, lbfgs, osa, AlgoResult, Cluster, RunCtx, SerialCluster};
 use crate::config::{AlgoConfig, BackendKind, EngineKind, ExperimentConfig};
@@ -60,7 +61,7 @@ fn build_cluster(
             }
             Box::new(c)
         }
-        // validate() rejects threaded + pjrt, so no backend switch here.
+        // validate() rejects non-serial + pjrt, so no backend switch here.
         EngineKind::Threaded => Box::new(ThreadedCluster::with_net_threads(
             ds,
             obj,
@@ -69,6 +70,33 @@ fn build_cluster(
             cfg.net.build(),
             cfg.threads,
         )),
+        // Worker processes rebuild the objective from (loss, lambda) in
+        // their Init frame; the leader-side copy in `obj` is dropped.
+        // Same shard seed, same weights, same reduction order — a tcp
+        // run stays trace-bit-identical to a serial one
+        // (tests/tcp_cluster.rs pins it through this function).
+        EngineKind::Tcp => match &cfg.workers {
+            Some(addrs) => Box::new(TcpCluster::connect(
+                ds,
+                cfg.loss,
+                cfg.lambda,
+                addrs,
+                shard_seed,
+                cfg.net.build(),
+                cfg.threads,
+                None,
+            )?),
+            None => Box::new(TcpCluster::self_hosted(
+                ds,
+                cfg.loss,
+                cfg.lambda,
+                cfg.machines,
+                shard_seed,
+                cfg.net.build(),
+                cfg.threads,
+                None,
+            )?),
+        },
     })
 }
 
@@ -180,6 +208,7 @@ mod tests {
             seed: 11,
             backend: BackendKind::Native,
             engine: EngineKind::Serial,
+            workers: None,
             threads: None,
             eval_test: false,
             net: NetConfig { alpha: 0.0, beta: 0.0, topology: Topology::Star },

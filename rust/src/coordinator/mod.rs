@@ -18,6 +18,7 @@ pub mod fault;
 pub mod gd;
 pub mod lbfgs;
 pub mod osa;
+pub mod tcp;
 pub mod threaded;
 
 use crate::comm::{Collective, CommStats, NetModel};

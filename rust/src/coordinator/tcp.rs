@@ -1,0 +1,778 @@
+//! TCP process-cluster engine: the round protocol over real sockets.
+//!
+//! Where [`super::SerialCluster`] drives workers inline and
+//! [`super::threaded::ThreadedCluster`] runs them on OS threads,
+//! `TcpCluster` runs each worker as a **separate OS process** speaking
+//! the [`crate::comm::wire`] frame format over `std::net` sockets — the
+//! paper's leader/worker topology with an actual wire in the middle.
+//! Two deployment modes:
+//!
+//! * **external** ([`TcpCluster::connect`]) — the operator launches
+//!   `dane worker --listen <addr>` anywhere reachable and lists the
+//!   addresses in the config (`"workers": [...]`);
+//! * **self-hosted** ([`TcpCluster::self_hosted`]) — the leader spawns
+//!   its own worker child processes on loopback (`--listen 127.0.0.1:0`,
+//!   parsing the announced port), so `engine: "tcp"` works with zero
+//!   setup. The worker binary is the current executable, overridable via
+//!   the `DANE_WORKER_BIN` env var (the test harness points it at the
+//!   compiled `dane` bin).
+//!
+//! Workers receive their shard, objective and Gram-thread override in a
+//! [`wire::Command::Init`] frame, so worker processes need no config
+//! file and the leader remains the single source of sharding truth —
+//! the same `shard_dataset(ds, m, seed)` call as the in-memory engines,
+//! which is what makes a TCP run **trace-bit-identical** to a serial run
+//! of the same config (`tests/tcp_cluster.rs` pins this through
+//! `run_experiment`).
+//!
+//! Accounting: the modeled figures (`rounds`, `bytes`,
+//! `modeled_seconds`) are counted exactly like the other engines, so
+//! traces stay comparable; `CommStats::wire_bytes` additionally reports
+//! the bytes *measured on the sockets* — every round-protocol frame
+//! written or read, instrumentation rounds included; the one-time Init
+//! (data distribution) is excluded, mirroring the modeled accounting,
+//! which also only counts rounds.
+//!
+//! Hang safety: every stream carries read/write timeouts
+//! ([`DEFAULT_IO_TIMEOUT`], override via [`TcpCluster::set_io_timeout`]),
+//! so a wedged — not just dead — worker surfaces as an `Err` (and at the
+//! CLI as an `AlgoError`) instead of deadlocking the leader. A failed
+//! round drains every outstanding reply it can, like the threaded
+//! engine, so surviving sockets never desynchronize. No
+//! `.expect`/`.unwrap` anywhere on the socket path.
+
+use super::Cluster;
+use crate::comm::wire::{self, Command as Cmd, InitPayload, Reply};
+use crate::comm::{Collective, CommStats, NetModel};
+use crate::config::LossKind;
+use crate::data::{shard_dataset, Dataset};
+use crate::linalg::ops;
+use crate::loss::{make_objective, Objective};
+use crate::{Error, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::process::{Child, Stdio};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Default socket read/write timeout. Rounds are sub-second on every
+/// in-tree workload; a worker silent this long is wedged, and an error
+/// beats a deadlock.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(60);
+
+struct WorkerLink {
+    stream: TcpStream,
+    /// Present in self-hosted mode; killed + reaped on drop.
+    child: Option<Child>,
+}
+
+/// Leader + m worker processes over TCP.
+pub struct TcpCluster {
+    links: Vec<WorkerLink>,
+    obj: Arc<dyn Objective>,
+    comm: Collective,
+    d: usize,
+    /// n_i / N weights for exact gradient averaging (identical to the
+    /// in-memory engines — same shards, same reduction order).
+    weights: Vec<f64>,
+    row_sq: Option<f64>,
+    /// Bytes measured on the sockets (round frames only; Init excluded).
+    wire_bytes: u64,
+    /// Reusable encode buffer — one frame encoded per broadcast, written
+    /// m times.
+    enc: Vec<u8>,
+    /// Reusable receive buffer.
+    frame: Vec<u8>,
+    io_timeout: Duration,
+}
+
+impl TcpCluster {
+    /// Connect to externally-launched `dane worker --listen` processes.
+    /// `m = addrs.len()`; shards are assigned to addresses in order.
+    pub fn connect(
+        ds: &Dataset,
+        loss: LossKind,
+        lambda: f64,
+        addrs: &[String],
+        seed: u64,
+        net: NetModel,
+        gram_threads: Option<usize>,
+        timeout: Option<Duration>,
+    ) -> Result<Self> {
+        if addrs.is_empty() {
+            return Err(Error::Config("tcp engine needs >= 1 worker address".into()));
+        }
+        let mut cluster = Self::empty(ds, loss, lambda, net, timeout);
+        for (i, addr) in addrs.iter().enumerate() {
+            let stream = TcpStream::connect(addr).map_err(|e| {
+                Error::Runtime(format!("tcp: connect worker {i} at {addr}: {e}"))
+            })?;
+            cluster.add_link(stream, None)?;
+        }
+        cluster.init_workers(ds, loss, lambda, seed, gram_threads)?;
+        Ok(cluster)
+    }
+
+    /// Spawn `m` worker child processes on loopback and connect to them.
+    /// The worker binary is `$DANE_WORKER_BIN` if set, else the current
+    /// executable (which is the `dane` bin when launched from the CLI).
+    pub fn self_hosted(
+        ds: &Dataset,
+        loss: LossKind,
+        lambda: f64,
+        m: usize,
+        seed: u64,
+        net: NetModel,
+        gram_threads: Option<usize>,
+        timeout: Option<Duration>,
+    ) -> Result<Self> {
+        if m == 0 {
+            return Err(Error::Config("tcp engine needs >= 1 worker".into()));
+        }
+        let bin = worker_binary()?;
+        // `cluster` owns each child as soon as its link is pushed, so
+        // any `?` below tears the already-started fleet down via Drop.
+        let mut cluster = Self::empty(ds, loss, lambda, net, timeout);
+        for i in 0..m {
+            let (mut child, addr) = spawn_worker_process(&bin, i, cluster.io_timeout)?;
+            let stream = match TcpStream::connect(&addr) {
+                Ok(s) => s,
+                Err(e) => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return Err(Error::Runtime(format!(
+                        "tcp: connect spawned worker {i} at {addr}: {e}"
+                    )));
+                }
+            };
+            cluster.links.push(WorkerLink { stream, child: Some(child) });
+            cluster.configure_stream(i)?;
+        }
+        cluster.init_workers(ds, loss, lambda, seed, gram_threads)?;
+        Ok(cluster)
+    }
+
+    fn empty(
+        ds: &Dataset,
+        loss: LossKind,
+        lambda: f64,
+        net: NetModel,
+        timeout: Option<Duration>,
+    ) -> Self {
+        TcpCluster {
+            links: Vec::new(),
+            obj: make_objective(loss, lambda),
+            comm: Collective::new(net),
+            d: ds.d(),
+            weights: Vec::new(),
+            row_sq: None,
+            wire_bytes: 0,
+            enc: Vec::new(),
+            frame: Vec::new(),
+            io_timeout: timeout.unwrap_or(DEFAULT_IO_TIMEOUT),
+        }
+    }
+
+    fn add_link(&mut self, stream: TcpStream, child: Option<Child>) -> Result<()> {
+        self.links.push(WorkerLink { stream, child });
+        self.configure_stream(self.links.len() - 1)
+    }
+
+    fn configure_stream(&mut self, i: usize) -> Result<()> {
+        let s = &self.links[i].stream;
+        s.set_nodelay(true)
+            .map_err(|e| Error::Runtime(format!("tcp: worker {i} set_nodelay: {e}")))?;
+        s.set_read_timeout(Some(self.io_timeout))
+            .map_err(|e| Error::Runtime(format!("tcp: worker {i} read timeout: {e}")))?;
+        s.set_write_timeout(Some(self.io_timeout))
+            .map_err(|e| Error::Runtime(format!("tcp: worker {i} write timeout: {e}")))?;
+        Ok(())
+    }
+
+    /// Re-arm the socket timeouts (tests tighten them to exercise the
+    /// wedged-worker path quickly).
+    pub fn set_io_timeout(&mut self, timeout: Duration) -> Result<()> {
+        self.io_timeout = timeout;
+        for i in 0..self.links.len() {
+            self.configure_stream(i)?;
+        }
+        Ok(())
+    }
+
+    /// Shard the dataset (same seed discipline as the in-memory engines)
+    /// and ship each worker its Init frame; lockstep ack gather.
+    fn init_workers(
+        &mut self,
+        ds: &Dataset,
+        loss: LossKind,
+        lambda: f64,
+        seed: u64,
+        gram_threads: Option<usize>,
+    ) -> Result<()> {
+        let m = self.links.len();
+        let shards = shard_dataset(ds, m, seed);
+        if shards.len() != m {
+            return Err(Error::Config(format!(
+                "tcp: {} shards for {m} workers",
+                shards.len()
+            )));
+        }
+        let total: usize = shards.iter().map(|s| s.n_effective()).sum();
+        self.weights = shards
+            .iter()
+            .map(|s| s.n_effective() as f64 / total as f64)
+            .collect();
+        for (i, shard) in shards.into_iter().enumerate() {
+            let init = Cmd::Init(Box::new(InitPayload {
+                worker_id: i,
+                loss_name: loss.name().to_string(),
+                lambda,
+                gram_threads,
+                shard,
+            }));
+            wire::encode_command(&init, &mut self.enc)?;
+            self.write_frame_uncounted(i)?;
+        }
+        for i in 0..m {
+            match self.recv_reply_uncounted(i)? {
+                Reply::Scalar(_) => {}
+                _ => {
+                    return Err(Error::Runtime(format!(
+                        "tcp: worker {i}: unexpected init ack"
+                    )))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---- framed I/O --------------------------------------------------
+
+    /// Write the frame sitting in `self.enc` to worker i, counting the
+    /// bytes into `wire_bytes`.
+    fn write_frame(&mut self, i: usize) -> Result<()> {
+        self.write_frame_uncounted(i)?;
+        self.wire_bytes += self.enc.len() as u64;
+        Ok(())
+    }
+
+    fn write_frame_uncounted(&mut self, i: usize) -> Result<()> {
+        self.links[i]
+            .stream
+            .write_all(&self.enc)
+            .map_err(|e| io_err(i, "send", &e))
+    }
+
+    /// Read one reply frame from worker i, counting bytes; worker-side
+    /// `Reply::Err` becomes an `Error::Runtime` like every round does.
+    fn recv_reply(&mut self, i: usize) -> Result<Reply> {
+        let n = self.read_reply_frame(i)?;
+        self.wire_bytes += n as u64;
+        self.decode_current_reply(i)
+    }
+
+    fn recv_reply_uncounted(&mut self, i: usize) -> Result<Reply> {
+        self.read_reply_frame(i)?;
+        self.decode_current_reply(i)
+    }
+
+    fn read_reply_frame(&mut self, i: usize) -> Result<usize> {
+        match wire::read_frame(&mut self.links[i].stream, &mut self.frame) {
+            Ok(Some(n)) => Ok(n),
+            Ok(None) => Err(Error::Runtime(format!(
+                "tcp: worker {i} closed the connection mid-round"
+            ))),
+            Err(Error::Io(e)) => Err(io_err(i, "reply read", &e)),
+            Err(e) => Err(Error::Runtime(format!("tcp: worker {i}: {e}"))),
+        }
+    }
+
+    fn decode_current_reply(&mut self, i: usize) -> Result<Reply> {
+        match wire::decode_reply(&self.frame) {
+            Ok(Reply::Err(e)) => {
+                Err(Error::Runtime(format!("worker {i}: {e}")))
+            }
+            Ok(r) => Ok(r),
+            Err(e) => Err(Error::Runtime(format!(
+                "tcp: worker {i} sent a malformed reply: {e}"
+            ))),
+        }
+    }
+
+    fn unexpected(&self, i: usize) -> Error {
+        Error::Runtime(format!("worker {i}: unexpected reply type"))
+    }
+
+    /// Broadcast the frame in `self.enc` to all workers; returns how
+    /// many sends succeeded plus the first send error, mirroring the
+    /// threaded engine's drain discipline.
+    fn broadcast_enc(&mut self) -> (usize, Option<Error>) {
+        let mut sent = 0;
+        for i in 0..self.links.len() {
+            match self.write_frame(i) {
+                Ok(()) => sent += 1,
+                Err(e) => return (sent, Some(e)),
+            }
+        }
+        (sent, None)
+    }
+
+    // ---- gathers (shared by counted and instrumentation paths) -------
+
+    fn gather_grad_loss_into(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
+        wire::encode_command(
+            &Cmd::GradLoss { w: Arc::new(w.to_vec()), out: Vec::new() },
+            &mut self.enc,
+        )?;
+        let (sent, mut first_err) = self.broadcast_enc();
+        g.fill(0.0);
+        let mut loss = 0.0;
+        for i in 0..sent {
+            match self.recv_reply(i) {
+                Ok(Reply::VecScalar(gi, li)) => {
+                    if first_err.is_none() {
+                        if gi.len() == g.len() {
+                            ops::axpy(self.weights[i], &gi, g);
+                            loss += self.weights[i] * li;
+                        } else {
+                            first_err = Some(self.unexpected(i));
+                        }
+                    }
+                }
+                Ok(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(self.unexpected(i));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(loss),
+        }
+    }
+
+    fn gather_loss(&mut self, w: &[f64]) -> Result<f64> {
+        wire::encode_command(&Cmd::Loss { w: Arc::new(w.to_vec()) }, &mut self.enc)?;
+        let (sent, mut first_err) = self.broadcast_enc();
+        let mut loss = 0.0;
+        for i in 0..sent {
+            match self.recv_reply(i) {
+                Ok(Reply::Scalar(l)) => {
+                    if first_err.is_none() {
+                        loss += self.weights[i] * l;
+                    }
+                }
+                Ok(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(self.unexpected(i));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(loss),
+        }
+    }
+
+    /// Kill worker child i (self-hosted mode) — the fault-injection
+    /// tests' "machine dies mid-run". The socket is shut down too, so
+    /// the very next round observes the death deterministically. A
+    /// no-op on externally-launched workers.
+    pub fn kill_worker(&mut self, i: usize) {
+        if let Some(mut child) = self.links[i].child.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        let _ = self.links[i].stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+fn io_err(i: usize, what: &str, e: &std::io::Error) -> Error {
+    use std::io::ErrorKind;
+    match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => Error::Runtime(format!(
+            "tcp: worker {i} wedged: {what} timed out"
+        )),
+        _ => Error::Runtime(format!("tcp: worker {i} {what} failed: {e}")),
+    }
+}
+
+fn worker_binary() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("DANE_WORKER_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    std::env::current_exe()
+        .map_err(|e| Error::Runtime(format!("tcp: cannot locate worker binary: {e}")))
+}
+
+/// Parse the `listening on <addr>` line a worker announces on stdout.
+fn parse_listen_line(line: &str) -> Option<&str> {
+    let addr = line.trim().strip_prefix("listening on ")?;
+    if addr.is_empty() {
+        None
+    } else {
+        Some(addr)
+    }
+}
+
+fn spawn_worker_process(
+    bin: &PathBuf,
+    i: usize,
+    announce_timeout: Duration,
+) -> Result<(Child, String)> {
+    let mut child = std::process::Command::new(bin)
+        .args(["worker", "--listen", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .map_err(|e| {
+            Error::Runtime(format!("tcp: spawn worker {i} ({}): {e}", bin.display()))
+        })?;
+    let Some(stdout) = child.stdout.take() else {
+        let _ = child.kill();
+        let _ = child.wait();
+        return Err(Error::Runtime(format!("tcp: worker {i}: no stdout pipe")));
+    };
+    // Read the announce line on a helper thread so a child that never
+    // prints (wrong binary, wedged startup) surfaces as an error within
+    // the io timeout instead of hanging bring-up — the pipe read itself
+    // has no timeout facility. Killing the child below unblocks the
+    // helper (its read returns EOF), so it never lingers.
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let mut line = String::new();
+        let res = BufReader::new(stdout).read_line(&mut line).map(|_| line);
+        let _ = tx.send(res);
+    });
+    let line = match rx.recv_timeout(announce_timeout) {
+        Ok(Ok(line)) => line,
+        Ok(Err(_)) | Err(_) => String::new(),
+    };
+    match parse_listen_line(&line).map(str::to_string) {
+        Some(a) => Ok((child, a)),
+        None => {
+            let _ = child.kill();
+            let _ = child.wait();
+            Err(Error::Runtime(format!(
+                "tcp: worker {i} did not announce its address within \
+                 {announce_timeout:?} (got {line:?})"
+            )))
+        }
+    }
+}
+
+impl Drop for TcpCluster {
+    fn drop(&mut self) {
+        // Closing the sockets lets externally-launched workers exit
+        // their serve loop cleanly (EOF at a frame boundary); self-
+        // hosted children are killed and reaped so no zombies outlive
+        // the cluster.
+        for link in self.links.drain(..) {
+            let WorkerLink { stream, child } = link;
+            drop(stream);
+            if let Some(mut c) = child {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+}
+
+impl Cluster for TcpCluster {
+    fn m(&self) -> usize {
+        self.links.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn objective(&self) -> Arc<dyn Objective> {
+        self.obj.clone()
+    }
+
+    fn grad_and_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        let mut g = vec![0.0; self.d];
+        let loss = self.grad_and_loss_into(w, &mut g)?;
+        Ok((g, loss))
+    }
+
+    fn grad_and_loss_into(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
+        let loss = self.gather_grad_loss_into(w, g)?;
+        let m = self.m();
+        self.comm.count_round(m, self.d + 1);
+        Ok(loss)
+    }
+
+    fn loss_only(&mut self, w: &[f64]) -> Result<f64> {
+        let loss = self.gather_loss(w)?;
+        let m = self.m();
+        self.comm.count_round(m, 1);
+        Ok(loss)
+    }
+
+    fn dane_round(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+    ) -> Result<Vec<f64>> {
+        let mut acc = vec![0.0; self.d];
+        self.dane_round_into(w_prev, g, eta, mu, &mut acc)?;
+        Ok(acc)
+    }
+
+    fn dane_round_into(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+        out: &mut [f64],
+    ) -> Result<()> {
+        wire::encode_command(
+            &Cmd::DaneSolve {
+                w_prev: Arc::new(w_prev.to_vec()),
+                g: Arc::new(g.to_vec()),
+                eta,
+                mu,
+                out: Vec::new(),
+            },
+            &mut self.enc,
+        )?;
+        let (sent, mut first_err) = self.broadcast_enc();
+        out.fill(0.0);
+        let inv_m = 1.0 / self.links.len() as f64;
+        for i in 0..sent {
+            match self.recv_reply(i) {
+                Ok(Reply::Vec(wi)) => {
+                    if first_err.is_none() {
+                        if wi.len() == out.len() {
+                            // paper step (*): unweighted average in rank order
+                            ops::axpy(inv_m, &wi, out);
+                        } else {
+                            first_err = Some(self.unexpected(i));
+                        }
+                    }
+                }
+                Ok(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(self.unexpected(i));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let m = self.m();
+        self.comm.count_round(m, self.d);
+        Ok(())
+    }
+
+    fn dane_round_first(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+    ) -> Result<Vec<f64>> {
+        wire::encode_command(
+            &Cmd::DaneSolve {
+                w_prev: Arc::new(w_prev.to_vec()),
+                g: Arc::new(g.to_vec()),
+                eta,
+                mu,
+                out: Vec::new(),
+            },
+            &mut self.enc,
+        )?;
+        self.write_frame(0)?;
+        let w1 = match self.recv_reply(0)? {
+            Reply::Vec(w) if w.len() == self.d => w,
+            _ => return Err(self.unexpected(0)),
+        };
+        let m = self.m();
+        self.comm.count_round(m, self.d);
+        Ok(w1)
+    }
+
+    fn prox_all(&mut self, targets: &[Vec<f64>], rho: f64) -> Result<Vec<Vec<f64>>> {
+        assert_eq!(targets.len(), self.m());
+        let mut sent = 0;
+        let mut first_err: Option<Error> = None;
+        for (i, v) in targets.iter().enumerate() {
+            if let Err(e) = wire::encode_command(&Cmd::Prox { v: v.clone(), rho }, &mut self.enc)
+            {
+                first_err = Some(e);
+                break;
+            }
+            match self.write_frame(i) {
+                Ok(()) => sent += 1,
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(self.m());
+        for i in 0..sent {
+            match self.recv_reply(i) {
+                Ok(Reply::Vec(w)) => {
+                    if first_err.is_none() {
+                        out.push(w);
+                    }
+                }
+                Ok(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(self.unexpected(i));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
+
+    fn local_erms(
+        &mut self,
+        subsample: Option<(f64, u64)>,
+    ) -> Result<(Vec<Vec<f64>>, Option<Vec<Vec<f64>>>)> {
+        wire::encode_command(&Cmd::Erm { subsample }, &mut self.enc)?;
+        let (sent, mut first_err) = self.broadcast_enc();
+        let mut full = Vec::with_capacity(self.m());
+        let mut subs: Vec<Vec<f64>> = Vec::new();
+        let mut any_sub = false;
+        for i in 0..sent {
+            match self.recv_reply(i) {
+                Ok(Reply::VecPair(f, s)) => {
+                    if first_err.is_none() {
+                        full.push(f);
+                        if let Some(s) = s {
+                            subs.push(s);
+                            any_sub = true;
+                        }
+                    }
+                }
+                Ok(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(self.unexpected(i));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok((full, if any_sub { Some(subs) } else { None }))
+    }
+
+    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Vec<f64> {
+        let mut out = vec![0.0; self.d];
+        let views: Vec<&[f64]> = vecs.iter().map(|v| v.as_slice()).collect();
+        self.comm.allreduce_mean(&views, &mut out);
+        out
+    }
+
+    fn avg_row_sq_norm(&mut self) -> Result<f64> {
+        if let Some(v) = self.row_sq {
+            return Ok(v);
+        }
+        wire::encode_command(&Cmd::RowSq, &mut self.enc)?;
+        let (sent, mut first_err) = self.broadcast_enc();
+        let mut total = 0.0;
+        for i in 0..sent {
+            match self.recv_reply(i) {
+                Ok(Reply::Scalar(v)) => {
+                    if first_err.is_none() {
+                        total += self.weights[i] * v;
+                    }
+                }
+                Ok(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(self.unexpected(i));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let m = self.m();
+        self.comm.count_round(m, 1);
+        self.row_sq = Some(total);
+        Ok(total)
+    }
+
+    fn eval_loss(&mut self, w: &[f64]) -> Result<f64> {
+        self.gather_loss(w)
+    }
+
+    fn eval_grad_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        let mut g = vec![0.0; self.d];
+        let loss = self.gather_grad_loss_into(w, &mut g)?;
+        Ok((g, loss))
+    }
+
+    fn comm_stats(&self) -> CommStats {
+        let mut s = self.comm.stats().clone();
+        s.wire_bytes = self.wire_bytes;
+        s
+    }
+
+    fn reset_comm(&mut self) {
+        self.comm.reset();
+        self.wire_bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn listen_line_parses() {
+        assert_eq!(
+            parse_listen_line("listening on 127.0.0.1:4471\n"),
+            Some("127.0.0.1:4471")
+        );
+        assert_eq!(parse_listen_line("listening on "), None);
+        assert_eq!(parse_listen_line("warming up"), None);
+    }
+}

@@ -4,9 +4,12 @@
 //! the measurement engine for every figure), `ThreadedCluster` runs each
 //! worker on its own OS thread behind a command/reply protocol — the
 //! actual leader/worker process topology a deployment would have, minus
-//! the sockets. Commands mirror the collective surface of the
-//! [`super::Cluster`] trait; each round is a broadcast of one command and
-//! a gather of m replies (a synchronous allreduce).
+//! the sockets. Messages are the typed [`crate::comm::wire`]
+//! `Command`/`Reply` enums — the same protocol `TcpCluster` moves over
+//! real sockets, here passed by value through the in-memory channel (no
+//! codec, no copies) — and workers answer them through the shared
+//! `worker::serve::execute_command`. Each round is a broadcast of one
+//! command and a gather of m replies (a synchronous allreduce).
 //!
 //! The protocol is **allocation-free in steady state** (EXPERIMENTS.md
 //! §Perf), pinned by the counting-allocator test
@@ -35,7 +38,10 @@
 //! ownership and message-flow structure, documented in DESIGN.md §5.)
 
 use super::Cluster;
-use crate::comm::roundchan::{round_channel, RoundReceiver, RoundSender};
+use crate::comm::roundchan::{
+    round_channel, RecvTimeoutError, RoundReceiver, RoundSender,
+};
+use crate::comm::wire::{Command as Cmd, Reply};
 use crate::comm::{Collective, CommStats, NetModel};
 use crate::data::{shard_dataset, Dataset, Shard};
 use crate::linalg::ops;
@@ -43,31 +49,14 @@ use crate::loss::Objective;
 use crate::Result;
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
-/// Commands the leader broadcasts to workers. Result-bearing commands
-/// carry the recycled reply buffer (`out`) down with them.
-enum Cmd {
-    /// grad + loss at w -> Reply::VecScalar
-    GradLoss { w: Arc<Vec<f64>>, out: Vec<f64> },
-    /// loss at w -> Reply::Scalar
-    Loss(Arc<Vec<f64>>),
-    /// DANE local solve -> Reply::Vec
-    DaneSolve { w_prev: Arc<Vec<f64>>, g: Arc<Vec<f64>>, eta: f64, mu: f64, out: Vec<f64> },
-    /// ADMM prox at a per-worker target -> Reply::Vec
-    Prox { v: Vec<f64>, rho: f64 },
-    /// local ERM (+ optional subsample) -> Reply::VecPair
-    Erm { subsample: Option<(f64, u64)> },
-    /// mean squared row norm -> Reply::Scalar
-    RowSq,
-}
-
-enum Reply {
-    Vec(Vec<f64>),
-    Scalar(f64),
-    VecScalar(Vec<f64>, f64),
-    VecPair(Vec<f64>, Option<Vec<f64>>),
-    Err(String),
-}
+/// How long the leader waits on any single worker reply before calling
+/// the worker wedged. Rounds are sub-second on every workload in tree;
+/// a reply this late means a stuck thread, and surfacing an error beats
+/// a silent deadlock. Override per cluster via
+/// [`ThreadedCluster::set_reply_timeout`].
+pub const DEFAULT_REPLY_TIMEOUT: Duration = Duration::from_secs(120);
 
 struct WorkerHandle {
     tx: RoundSender<Cmd>,
@@ -93,6 +82,9 @@ pub struct ThreadedCluster {
     /// m recycled d-vectors: out to workers inside commands, back inside
     /// replies.
     reply_pool: Vec<Vec<f64>>,
+    /// Per-reply wait budget (hang safety): a worker silent past this is
+    /// reported wedged instead of deadlocking the leader.
+    reply_timeout: Duration,
 }
 
 impl ThreadedCluster {
@@ -145,7 +137,14 @@ impl ThreadedCluster {
             bcast_w: Arc::new(vec![0.0; d]),
             bcast_g: Arc::new(vec![0.0; d]),
             reply_pool,
+            reply_timeout: DEFAULT_REPLY_TIMEOUT,
         }
+    }
+
+    /// Override the per-reply wait budget (tests use tight budgets to
+    /// exercise the wedged-worker path quickly).
+    pub fn set_reply_timeout(&mut self, timeout: Duration) {
+        self.reply_timeout = timeout;
     }
 
     fn send_cmd(&self, i: usize, cmd: Cmd) -> Result<()> {
@@ -155,13 +154,20 @@ impl ThreadedCluster {
             .map_err(|_| crate::Error::Runtime(format!("worker {i} channel closed")))
     }
 
-    /// Receive worker i's reply, mapping worker-side and transport
-    /// failures to errors the same way every round does.
+    /// Receive worker i's reply, mapping worker-side failures, death
+    /// *and* silence past the timeout to errors the same way every round
+    /// does — a wedged worker surfaces as `Err`, never a deadlock.
     fn recv_reply(&self, i: usize) -> Result<Reply> {
-        match self.handles[i].rx.recv() {
+        match self.handles[i].rx.recv_timeout(self.reply_timeout) {
             Ok(Reply::Err(e)) => Err(crate::Error::Runtime(format!("worker {i}: {e}"))),
             Ok(r) => Ok(r),
-            Err(_) => Err(crate::Error::Runtime(format!("worker {i} died mid-round"))),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(crate::Error::Runtime(format!("worker {i} died mid-round")))
+            }
+            Err(RecvTimeoutError::Timeout) => Err(crate::Error::Runtime(format!(
+                "worker {i} wedged: no reply within {:?}",
+                self.reply_timeout
+            ))),
         }
     }
 
@@ -246,7 +252,7 @@ impl ThreadedCluster {
         let mut sent = 0;
         let mut first_err: Option<crate::Error> = None;
         for i in 0..self.handles.len() {
-            match self.send_cmd(i, Cmd::Loss(self.bcast_w.clone())) {
+            match self.send_cmd(i, Cmd::Loss { w: self.bcast_w.clone() }) {
                 Ok(()) => sent += 1,
                 Err(e) => {
                     first_err = Some(e);
@@ -306,59 +312,16 @@ fn spawn_worker(
         .spawn(move || {
             let mut worker = crate::worker::Worker::new(id, shard, obj);
             worker.set_gram_threads(gram_threads);
-            let d = worker.dim();
             // Leader dropping its endpoints disconnects the channel and
             // breaks both loops — no explicit shutdown message needed.
+            // The command execution itself is the transport-shared
+            // `worker::serve::execute_command`, so this engine answers
+            // every wire command exactly like a TCP worker process.
             while let Ok(cmd) = cmd_rx.recv() {
-                let reply = match cmd {
-                    Cmd::GradLoss { w, mut out } => {
-                        if out.len() != d {
-                            out.clear();
-                            out.resize(d, 0.0);
-                        }
-                        match worker.grad(&w, &mut out) {
-                            Ok(loss) => Reply::VecScalar(out, loss),
-                            Err(e) => Reply::Err(e.to_string()),
-                        }
-                    }
-                    Cmd::Loss(w) => Reply::Scalar(worker.loss(&w)),
-                    Cmd::DaneSolve { w_prev, g, eta, mu, mut out } => {
-                        match worker.dane_local_solve_into(&w_prev, &g, eta, mu, &mut out)
-                        {
-                            Ok(()) => Reply::Vec(out),
-                            Err(e) => Reply::Err(e.to_string()),
-                        }
-                    }
-                    Cmd::Prox { v, rho } => match worker.admm_prox(&v, rho) {
-                        Ok(w) => Reply::Vec(w),
-                        Err(e) => Reply::Err(e.to_string()),
-                    },
-                    Cmd::Erm { subsample } => {
-                        let full = worker.local_erm();
-                        match full {
-                            Err(e) => Reply::Err(e.to_string()),
-                            Ok(full) => match subsample {
-                                None => Reply::VecPair(full, None),
-                                Some((r, seed)) => {
-                                    match worker.local_erm_subsample(r, seed) {
-                                        Ok(sub) => Reply::VecPair(full, Some(sub)),
-                                        Err(e) => Reply::Err(e.to_string()),
-                                    }
-                                }
-                            },
-                        }
-                    }
-                    Cmd::RowSq => {
-                        let sh = worker.shard();
-                        let mut total = 0.0;
-                        for i in 0..sh.n_effective() {
-                            total += super::row_sq_norm(sh, i);
-                        }
-                        Reply::Scalar(total / sh.n_effective() as f64)
-                    }
-                };
-                // Broadcast Arcs were dropped above (the match arm owns
-                // them), so the leader's get_mut succeeds next round.
+                // execute_command consumes the command, dropping the
+                // broadcast Arcs with it, so the leader's get_mut
+                // succeeds next round.
+                let reply = crate::worker::serve::execute_command(&mut worker, cmd);
                 if rep_tx.send(reply).is_err() {
                     break;
                 }

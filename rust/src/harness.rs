@@ -8,7 +8,8 @@
 //! size; EXPERIMENTS.md records the scale used for the committed numbers.
 
 use crate::comm::NetModel;
-use crate::config::EngineKind;
+use crate::config::{EngineKind, LossKind};
+use crate::coordinator::tcp::TcpCluster;
 use crate::coordinator::threaded::ThreadedCluster;
 use crate::coordinator::{admm, dane, osa, Cluster, RunCtx, SerialCluster};
 use crate::data::{self, Dataset};
@@ -22,20 +23,29 @@ use std::sync::Arc;
 
 /// Construct the requested cluster engine — the single point where the
 /// harnesses (and through them the CLI figure subcommands and benches)
-/// pick serial vs threaded. Same shards, same reduction order: the
-/// figure numbers are engine-independent bit for bit.
+/// pick serial vs threaded vs tcp. Same shards, same reduction order:
+/// the figure numbers are engine-independent bit for bit. The tcp
+/// engine self-hosts worker processes on loopback (it needs the loss by
+/// name to ship in the Init frames, hence the `loss`/`lambda` pair
+/// instead of a prebuilt objective); it can fail to come up, hence the
+/// `Result`.
 fn build_cluster(
     ds: &Dataset,
-    obj: Arc<dyn Objective>,
+    loss: LossKind,
+    lambda: f64,
     m: usize,
     seed: u64,
     net: NetModel,
     engine: EngineKind,
-) -> Box<dyn Cluster> {
-    match engine {
+) -> Result<Box<dyn Cluster>> {
+    let obj = make_objective(loss, lambda);
+    Ok(match engine {
         EngineKind::Serial => Box::new(SerialCluster::with_net(ds, obj, m, seed, net)),
         EngineKind::Threaded => Box::new(ThreadedCluster::with_net(ds, obj, m, seed, net)),
-    }
+        EngineKind::Tcp => Box::new(TcpCluster::self_hosted(
+            ds, loss, lambda, m, seed, net, None, None,
+        )?),
+    })
 }
 
 // ---------------------------------------------------------------------
@@ -49,7 +59,8 @@ pub fn quickstart(engine: EngineKind) -> Result<()> {
     let lam = data::synthetic::fig2_lambda(0.005);
     let obj = make_objective(crate::config::LossKind::Ridge, lam);
     let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard())?;
-    let mut cluster = build_cluster(&ds, obj, 4, 42, NetModel::free(), engine);
+    let mut cluster =
+        build_cluster(&ds, crate::config::LossKind::Ridge, lam, 4, 42, NetModel::free(), engine)?;
     let ctx = RunCtx::new(15).with_reference(phi_star).with_tol(1e-10);
     let res = dane::run(cluster.as_mut(), &dane::DaneOptions::default(), &ctx)?;
     println!(
@@ -108,8 +119,15 @@ pub fn fig2(scale: usize, out: &Path, engine: EngineKind) -> Result<Vec<Fig2Cell
                 continue;
             }
             for algo in ["dane", "admm"] {
-                let mut cluster =
-                    build_cluster(&ds, obj.clone(), m, 7, NetModel::datacenter(), engine);
+                let mut cluster = build_cluster(
+                    &ds,
+                    crate::config::LossKind::Ridge,
+                    lam,
+                    m,
+                    7,
+                    NetModel::datacenter(),
+                    engine,
+                )?;
                 let ctx = RunCtx::new(rounds)
                     .with_reference(phi_star)
                     .with_tol(1e-13);
@@ -202,8 +220,15 @@ pub fn fig3(scale: usize, out: &Path, engine: EngineKind) -> Result<Vec<Fig3Colu
         for &m in &ms {
             let ctx = RunCtx::new(budget).with_reference(phi_star).with_tol(1e-6);
             for (idx, mu) in [0.0, 3.0 * lam].into_iter().enumerate() {
-                let mut cluster =
-                    build_cluster(&ds, obj.clone(), m, 7, NetModel::free(), engine);
+                let mut cluster = build_cluster(
+                    &ds,
+                    crate::config::LossKind::SmoothHinge,
+                    lam,
+                    m,
+                    7,
+                    NetModel::free(),
+                    engine,
+                )?;
                 let res = dane::run(
                     cluster.as_mut(),
                     &dane::DaneOptions { eta: 1.0, mu, ..Default::default() },
@@ -211,8 +236,15 @@ pub fn fig3(scale: usize, out: &Path, engine: EngineKind) -> Result<Vec<Fig3Colu
                 )?;
                 rows[idx].1.push(res.trace.rounds_to_tol(1e-6));
             }
-            let mut cluster =
-                build_cluster(&ds, obj.clone(), m, 7, NetModel::free(), engine);
+            let mut cluster = build_cluster(
+                &ds,
+                crate::config::LossKind::SmoothHinge,
+                lam,
+                m,
+                7,
+                NetModel::free(),
+                engine,
+            )?;
             // rho tuned once per workload family: consensus ADMM's rate
             // depends on rho, not on the (tiny) lambda; 0.1 is the best
             // of a coarse {0.02, 0.1, 0.5} sweep on these problems.
@@ -310,7 +342,15 @@ pub fn fig4(scale: usize, out: &Path, engine: EngineKind) -> Result<Vec<Fig4Pane
 
         let mut series = Vec::new();
         {
-            let mut cluster = build_cluster(&ds, obj.clone(), m, 7, NetModel::free(), engine);
+            let mut cluster = build_cluster(
+                &ds,
+                crate::config::LossKind::SmoothHinge,
+                lam,
+                m,
+                7,
+                NetModel::free(),
+                engine,
+            )?;
             let res = dane::run(
                 cluster.as_mut(),
                 &dane::DaneOptions { eta: 1.0, mu: 3.0 * lam, ..Default::default() },
@@ -320,14 +360,30 @@ pub fn fig4(scale: usize, out: &Path, engine: EngineKind) -> Result<Vec<Fig4Pane
             emit::write_csv_file(&res.trace, &out.join(format!("{}_dane.csv", ds.name)))?;
         }
         {
-            let mut cluster = build_cluster(&ds, obj.clone(), m, 7, NetModel::free(), engine);
+            let mut cluster = build_cluster(
+                &ds,
+                crate::config::LossKind::SmoothHinge,
+                lam,
+                m,
+                7,
+                NetModel::free(),
+                engine,
+            )?;
             let res =
                 admm::run(cluster.as_mut(), &admm::AdmmOptions { rho: ADMM_RHO }, &ctx)?;
             series.push(("admm".to_string(), test_series(&res.trace)));
             emit::write_csv_file(&res.trace, &out.join(format!("{}_admm.csv", ds.name)))?;
         }
         {
-            let mut cluster = build_cluster(&ds, obj.clone(), m, 7, NetModel::free(), engine);
+            let mut cluster = build_cluster(
+                &ds,
+                crate::config::LossKind::SmoothHinge,
+                lam,
+                m,
+                7,
+                NetModel::free(),
+                engine,
+            )?;
             let res = osa::run(
                 cluster.as_mut(),
                 &osa::OsaOptions { bias_correction_r: Some(0.5), seed: 3 },

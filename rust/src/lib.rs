@@ -6,11 +6,15 @@
 //!
 //! The crate is the **L3 coordinator** of a three-layer stack:
 //!
-//! * **L3 (here, rust)** — leader/worker round engine, simulated collective
-//!   layer with communication accounting, DANE and every baseline the paper
-//!   compares against (GD, accelerated GD, consensus ADMM, one-shot
-//!   averaging ± bias correction, distributed L-BFGS), data generators,
-//!   losses, local solvers, metrics and a CLI launcher.
+//! * **L3 (here, rust)** — leader/worker round engine with three
+//!   transports over one typed wire protocol ([`comm::wire`]): inline
+//!   (`SerialCluster`), OS threads (`ThreadedCluster`) and real TCP
+//!   worker processes (`TcpCluster`, with measured `wire_bytes`
+//!   accounting); simulated collective layer with communication
+//!   accounting, DANE and every baseline the paper compares against
+//!   (GD, accelerated GD, consensus ADMM, one-shot averaging ± bias
+//!   correction, distributed L-BFGS), data generators, losses, local
+//!   solvers, metrics and a CLI launcher.
 //! * **L2 (jax, build-time)** — the per-worker compute graphs
 //!   (`python/compile/model.py`), AOT-lowered to HLO text.
 //! * **L1 (pallas, build-time)** — the tiled Gram-matvec and fused
@@ -69,6 +73,7 @@ pub mod prelude {
     pub use crate::coordinator::driver::{run_experiment, RunResult};
     pub use crate::coordinator::fault::FaultInjectCluster;
     pub use crate::coordinator::gd::{AgdOptions, GdOptions};
+    pub use crate::coordinator::tcp::TcpCluster;
     pub use crate::coordinator::threaded::ThreadedCluster;
     pub use crate::coordinator::{AlgoError, AlgoOutcome, AlgoResult, Cluster, SerialCluster};
     pub use crate::data::{Dataset, Shard};

@@ -4,6 +4,7 @@
 //!
 //! ```text
 //! dane run --config exp.json [--csv out.csv]   # any configured experiment
+//! dane worker --listen addr                    # TCP worker process
 //! dane quickstart                              # tiny end-to-end smoke run
 //! dane fig2  [--scale K] [--out DIR]           # synthetic DANE-vs-ADMM grid
 //! dane fig3  [--scale K] [--out DIR]           # iterations-to-1e-6 table
@@ -29,17 +30,23 @@ dane — Communication-efficient distributed optimization (DANE, ICML 2014)
 
 USAGE:
     dane run --config <exp.json> [--csv <out.csv>] [--quiet]
-    dane quickstart [--engine serial|threaded]
-    dane fig2   [--scale <K>] [--out <dir>] [--engine serial|threaded]
-    dane fig3   [--scale <K>] [--out <dir>] [--engine serial|threaded]
-    dane fig4   [--scale <K>] [--out <dir>] [--engine serial|threaded]
+             [--engine serial|threaded|tcp]
+    dane worker --listen <addr>          # serve one shard over TCP
+    dane quickstart [--engine serial|threaded|tcp]
+    dane fig2   [--scale <K>] [--out <dir>] [--engine serial|threaded|tcp]
+    dane fig3   [--scale <K>] [--out <dir>] [--engine serial|threaded|tcp]
+    dane fig4   [--scale <K>] [--out <dir>] [--engine serial|threaded|tcp]
     dane thm1   [--reps <N>]
     dane lemma2
     dane help
 
 The cluster engine for `run` comes from the config (\"engine\": \"serial\"
-| \"threaded\", optional \"threads\": N for the workers' Gram-build
-kernel). Worker failures surface as `error: ...` + non-zero exit.";
+| \"threaded\" | \"tcp\", optional \"threads\": N for the workers'
+Gram-build kernel); `--engine` overrides the config value. The tcp
+engine connects to the config's \"workers\" address list
+(`dane worker --listen <addr>` processes), or spawns its own loopback
+worker processes when the list is absent. Worker failures and wedged
+workers surface as `error: ...` + non-zero exit.";
 
 /// Tiny flag parser: --key value pairs after the subcommand.
 struct Args {
@@ -151,7 +158,8 @@ fn run(argv: &[String]) -> Result<(), String> {
     };
     let args = Args::parse(&argv[1..])?;
     let (value_flags, bool_flags): (&[&str], &[&str]) = match cmd.as_str() {
-        "run" => (&["config", "csv"], &["quiet"]),
+        "run" => (&["config", "csv", "engine"], &["quiet"]),
+        "worker" => (&["listen"], &[]),
         "fig2" | "fig3" | "fig4" => (&["scale", "out", "engine"], &[]),
         "thm1" => (&["reps"], &[]),
         "quickstart" => (&["engine"], &[]),
@@ -166,8 +174,12 @@ fn run(argv: &[String]) -> Result<(), String> {
             let config = args
                 .get("config")
                 .ok_or("run requires --config <exp.json>")?;
-            let cfg = ExperimentConfig::from_json_file(&PathBuf::from(config))
+            let mut cfg = ExperimentConfig::from_json_file(&PathBuf::from(config))
                 .map_err(e2s)?;
+            // The config's engine wins unless the flag is passed.
+            if let Some(engine) = args.get("engine") {
+                cfg.engine = EngineKind::from_name(engine).map_err(e2s)?;
+            }
             let res = run_experiment(&cfg).map_err(e2s)?;
             if let Some(path) = args.get("csv") {
                 emit::write_csv_file(&res.trace, &PathBuf::from(path)).map_err(e2s)?;
@@ -181,6 +193,12 @@ fn run(argv: &[String]) -> Result<(), String> {
                 println!("rounds to {:.0e}: {r}", cfg.tol);
             }
             Ok(())
+        }
+        "worker" => {
+            let addr = args
+                .get("listen")
+                .ok_or("worker requires --listen <addr>")?;
+            dane::worker::serve::serve_addr(addr).map_err(e2s)
         }
         "quickstart" => harness::quickstart(args.get_engine()?).map_err(e2s),
         "fig2" => {

@@ -5,8 +5,11 @@ use crate::util::Json;
 use crate::Result;
 use std::io::Write;
 
-/// CSV header matching [`super::TraceRow`] field order.
-pub const CSV_HEADER: &str = "round,objective,suboptimality,grad_norm,test_loss,comm_rounds,comm_bytes,comm_modeled_seconds,elapsed_seconds";
+/// CSV header matching [`super::TraceRow`] field order. The two
+/// run-specific columns sit last: `elapsed_seconds` (wallclock) and
+/// `wire_bytes` (measured socket bytes, 0 off the TCP engine) — so
+/// cross-engine trace comparison is "all columns but the last two".
+pub const CSV_HEADER: &str = "round,objective,suboptimality,grad_norm,test_loss,comm_rounds,comm_bytes,comm_modeled_seconds,elapsed_seconds,wire_bytes";
 
 /// Write a trace as CSV.
 pub fn write_csv<W: Write>(trace: &Trace, mut w: W) -> Result<()> {
@@ -14,7 +17,7 @@ pub fn write_csv<W: Write>(trace: &Trace, mut w: W) -> Result<()> {
     for r in &trace.rows {
         writeln!(
             w,
-            "{},{:.17e},{},{},{},{},{},{:.6e},{:.6}",
+            "{},{:.17e},{},{},{},{},{},{:.6e},{:.6},{}",
             r.round,
             r.objective,
             opt(r.suboptimality),
@@ -24,6 +27,7 @@ pub fn write_csv<W: Write>(trace: &Trace, mut w: W) -> Result<()> {
             r.comm_bytes,
             r.comm_modeled_seconds,
             r.elapsed_seconds,
+            r.wire_bytes,
         )?;
     }
     Ok(())
@@ -53,6 +57,7 @@ pub fn summary_json(name: &str, trace: &Trace) -> Json {
         ("final_suboptimality", num_or_null(trace.last_suboptimality())),
         ("comm_rounds", num_or_null(last.map(|r| r.comm_rounds as f64))),
         ("comm_bytes", num_or_null(last.map(|r| r.comm_bytes as f64))),
+        ("wire_bytes", num_or_null(last.map(|r| r.wire_bytes as f64))),
         (
             "comm_modeled_seconds",
             num_or_null(last.map(|r| r.comm_modeled_seconds)),
@@ -68,7 +73,12 @@ mod tests {
 
     fn sample() -> Trace {
         let mut t = Trace::new();
-        let comm = CommStats { rounds: 2, bytes: 128, modeled_seconds: 1e-3 };
+        let comm = CommStats {
+            rounds: 2,
+            bytes: 128,
+            modeled_seconds: 1e-3,
+            wire_bytes: 96,
+        };
         t.push(0, 1.5, Some(0.5), None, Some(0.7), &comm, 0.01);
         t
     }
@@ -92,6 +102,7 @@ mod tests {
         let j = summary_json("t", &sample());
         assert_eq!(j.get("name").unwrap().as_str(), Some("t"));
         assert_eq!(j.get("comm_bytes").unwrap().as_f64(), Some(128.0));
+        assert_eq!(j.get("wire_bytes").unwrap().as_f64(), Some(96.0));
         let s = j.get("final_suboptimality").unwrap().as_f64().unwrap();
         assert!((s - 0.5).abs() < 1e-15);
     }

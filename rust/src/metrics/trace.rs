@@ -23,6 +23,10 @@ pub struct TraceRow {
     pub comm_modeled_seconds: f64,
     /// Wallclock seconds since the run started.
     pub elapsed_seconds: f64,
+    /// Cumulative bytes *measured on the socket* (TCP engine; exactly 0
+    /// on in-memory engines). Sits next to the modeled `comm_bytes` so
+    /// figures can plot convergence against real bytes moved.
+    pub wire_bytes: u64,
 }
 
 /// A full run's trace.
@@ -57,6 +61,7 @@ impl Trace {
             comm_bytes: comm.bytes,
             comm_modeled_seconds: comm.modeled_seconds,
             elapsed_seconds,
+            wire_bytes: comm.wire_bytes,
         });
     }
 

@@ -16,6 +16,7 @@
 
 pub mod backend;
 pub mod local_solver;
+pub mod serve;
 
 pub use backend::WorkerBackend;
 

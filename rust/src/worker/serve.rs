@@ -1,0 +1,263 @@
+//! The worker side of the wire protocol: one command in, one reply out.
+//!
+//! [`execute_command`] is the single implementation of every collective a
+//! worker answers — the threaded engine calls it from its per-worker
+//! thread loop and the TCP engine calls it from [`serve_conn`], so the
+//! three transports cannot drift apart semantically.
+//!
+//! [`serve_addr`] is the process entry point behind `dane worker
+//! --listen <addr>`: bind, announce the bound address on stdout
+//! (`listening on <addr>` — the self-hosted leader parses this line to
+//! learn OS-assigned ports), accept one leader connection, answer frames
+//! until the leader hangs up. The worker learns everything else — shard,
+//! objective, Gram-thread override — from the leader's
+//! [`Command::Init`] frame, so a worker process needs no config file.
+//!
+//! Errors on the compute path become [`Reply::Err`] frames (the leader
+//! maps them to `Error::Runtime` and the algorithms to `AlgoError`);
+//! only transport failures tear the loop down. Nothing here panics on
+//! malformed input.
+
+use crate::comm::wire::{self, Command, InitPayload, Reply};
+use crate::config::LossKind;
+use crate::loss::make_objective;
+use crate::worker::Worker;
+use crate::{Error, Result};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+
+/// Reject a payload vector whose length does not match the shard
+/// dimension. A frame can be perfectly well-formed at the codec level
+/// and still carry a wrong-size vector (a buggy or hostile leader); the
+/// objectives index rows against `w` unchecked in release builds, so
+/// this is the line that keeps "malformed input never panics a worker"
+/// true end to end.
+fn dim_check(what: &str, len: usize, d: usize) -> Option<Reply> {
+    if len != d {
+        Some(Reply::Err(format!(
+            "{what}: payload has {len} elements, shard dimension is {d}"
+        )))
+    } else {
+        None
+    }
+}
+
+/// Answer one compute command. `Init` is transport setup, not compute —
+/// transports that construct their workers directly (threaded) or that
+/// handle the handshake themselves (TCP, in [`serve_conn`]) never route
+/// it here, so it answers with an error reply.
+pub fn execute_command(worker: &mut Worker, cmd: Command) -> Reply {
+    let d = worker.dim();
+    match cmd {
+        Command::Init(_) => {
+            Reply::Err("init sent to an already-initialized worker".into())
+        }
+        Command::GradLoss { w, mut out } => {
+            if let Some(err) = dim_check("grad_loss", w.len(), d) {
+                return err;
+            }
+            if out.len() != d {
+                out.clear();
+                out.resize(d, 0.0);
+            }
+            match worker.grad(&w, &mut out) {
+                Ok(loss) => Reply::VecScalar(out, loss),
+                Err(e) => Reply::Err(e.to_string()),
+            }
+        }
+        Command::Loss { w } => match dim_check("loss", w.len(), d) {
+            Some(err) => err,
+            None => Reply::Scalar(worker.loss(&w)),
+        },
+        Command::DaneSolve { w_prev, g, eta, mu, mut out } => {
+            if let Some(err) = dim_check("dane_solve w_prev", w_prev.len(), d) {
+                return err;
+            }
+            if let Some(err) = dim_check("dane_solve g", g.len(), d) {
+                return err;
+            }
+            match worker.dane_local_solve_into(&w_prev, &g, eta, mu, &mut out) {
+                Ok(()) => Reply::Vec(out),
+                Err(e) => Reply::Err(e.to_string()),
+            }
+        }
+        Command::Prox { v, rho } => {
+            if let Some(err) = dim_check("prox", v.len(), d) {
+                return err;
+            }
+            match worker.admm_prox(&v, rho) {
+                Ok(w) => Reply::Vec(w),
+                Err(e) => Reply::Err(e.to_string()),
+            }
+        }
+        Command::Erm { subsample } => match worker.local_erm() {
+            Err(e) => Reply::Err(e.to_string()),
+            Ok(full) => match subsample {
+                None => Reply::VecPair(full, None),
+                Some((r, seed)) => match worker.local_erm_subsample(r, seed) {
+                    Ok(sub) => Reply::VecPair(full, Some(sub)),
+                    Err(e) => Reply::Err(e.to_string()),
+                },
+            },
+        },
+        Command::RowSq => {
+            let sh = worker.shard();
+            let mut total = 0.0;
+            for i in 0..sh.n_effective() {
+                total += crate::coordinator::row_sq_norm(sh, i);
+            }
+            Reply::Scalar(total / sh.n_effective() as f64)
+        }
+    }
+}
+
+/// Build a worker from an [`Command::Init`] payload.
+fn build_worker(p: InitPayload) -> Result<Worker> {
+    let kind = LossKind::from_name(&p.loss_name)?;
+    let obj = make_objective(kind, p.lambda);
+    let mut w = Worker::new(p.worker_id, p.shard, obj);
+    w.set_gram_threads(p.gram_threads);
+    Ok(w)
+}
+
+/// `dane worker --listen <addr>`: bind, announce, serve one leader.
+pub fn serve_addr(addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| Error::Runtime(format!("worker: bind {addr}: {e}")))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| Error::Runtime(format!("worker: local_addr: {e}")))?;
+    // The self-hosted leader reads this exact line to learn the port
+    // when the operator (or harness) asked for :0.
+    println!("listening on {local}");
+    std::io::stdout().flush()?;
+    let (stream, _peer) = listener
+        .accept()
+        .map_err(|e| Error::Runtime(format!("worker: accept: {e}")))?;
+    serve_conn(stream)
+}
+
+/// Frame loop over an accepted leader connection. Returns `Ok(())` on a
+/// clean leader hangup (EOF at a frame boundary), `Err` on transport
+/// failure. Compute errors never end the loop — they travel back as
+/// [`Reply::Err`] frames.
+pub fn serve_conn(stream: TcpStream) -> Result<()> {
+    let mut stream = stream;
+    stream
+        .set_nodelay(true)
+        .map_err(|e| Error::Runtime(format!("worker: set_nodelay: {e}")))?;
+    let mut frame = Vec::new();
+    let mut enc = Vec::new();
+    let mut worker: Option<Worker> = None;
+    loop {
+        match wire::read_frame(&mut stream, &mut frame)? {
+            None => return Ok(()), // leader hung up between rounds
+            Some(_) => {}
+        }
+        let reply = match wire::decode_command(&frame) {
+            Err(e) => Reply::Err(e.to_string()),
+            Ok(Command::Init(p)) => match build_worker(*p) {
+                Ok(w) => {
+                    worker = Some(w);
+                    Reply::Scalar(0.0) // init ack
+                }
+                Err(e) => Reply::Err(e.to_string()),
+            },
+            Ok(cmd) => match worker.as_mut() {
+                Some(w) => execute_command(w, cmd),
+                None => Reply::Err("worker not initialized (no Init frame)".into()),
+            },
+        };
+        wire::encode_reply(&reply, &mut enc)?;
+        stream
+            .write_all(&enc)
+            .map_err(|e| Error::Runtime(format!("worker: reply write: {e}")))?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Shard;
+    use crate::linalg::{DataMatrix, DenseMatrix};
+    use std::sync::Arc;
+
+    fn tiny_worker() -> Worker {
+        let x = DenseMatrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 2.0]]);
+        let shard = Shard::new(DataMatrix::Dense(x), vec![1.0, -1.0]);
+        Worker::new(0, shard, Arc::new(crate::loss::Ridge::new(0.1)))
+    }
+
+    #[test]
+    fn grad_loss_resizes_loaned_buffer() {
+        let mut w = tiny_worker();
+        let cmd = Command::GradLoss {
+            w: Arc::new(vec![0.0, 0.0]),
+            out: Vec::new(), // wrong size on purpose
+        };
+        match execute_command(&mut w, cmd) {
+            Reply::VecScalar(g, loss) => {
+                assert_eq!(g.len(), 2);
+                assert!(loss.is_finite());
+            }
+            _ => panic!("wrong reply"),
+        }
+    }
+
+    #[test]
+    fn wrong_dimension_payloads_are_error_replies_not_panics() {
+        let mut wk = tiny_worker(); // shard dimension 2
+        let short = Arc::new(vec![0.0]); // 1 element
+        for cmd in [
+            Command::GradLoss { w: short.clone(), out: Vec::new() },
+            Command::Loss { w: short.clone() },
+            Command::DaneSolve {
+                w_prev: short.clone(),
+                g: Arc::new(vec![0.0, 0.0, 0.0]),
+                eta: 1.0,
+                mu: 0.0,
+                out: Vec::new(),
+            },
+            Command::Prox { v: vec![0.0; 5], rho: 1.0 },
+        ] {
+            match execute_command(&mut wk, cmd) {
+                Reply::Err(msg) => {
+                    assert!(msg.contains("shard dimension"), "{msg}")
+                }
+                _ => panic!("wrong-size payload must be rejected"),
+            }
+        }
+        // and the worker still answers well-formed commands afterwards
+        let ok = Command::Loss { w: Arc::new(vec![0.0, 0.0]) };
+        assert!(matches!(execute_command(&mut wk, ok), Reply::Scalar(_)));
+    }
+
+    #[test]
+    fn init_on_running_worker_is_error_reply() {
+        let mut w = tiny_worker();
+        let p = InitPayload {
+            worker_id: 0,
+            loss_name: "ridge".into(),
+            lambda: 0.1,
+            gram_threads: None,
+            shard: w.shard().clone(),
+        };
+        match execute_command(&mut w, Command::Init(Box::new(p))) {
+            Reply::Err(msg) => assert!(msg.contains("initialized"), "{msg}"),
+            _ => panic!("init must not be a compute command"),
+        }
+    }
+
+    #[test]
+    fn build_worker_rejects_unknown_loss() {
+        let w = tiny_worker();
+        let p = InitPayload {
+            worker_id: 1,
+            loss_name: "bogus".into(),
+            lambda: 0.1,
+            gram_threads: None,
+            shard: w.shard().clone(),
+        };
+        assert!(build_worker(p).is_err());
+    }
+}

@@ -207,6 +207,206 @@ fn real_singular_local_solve_fails_cleanly_on_both_engines() {
     }
 }
 
+// ---------------------------------------------------------------------
+// TCP engine: a worker child process killed mid-run
+// ---------------------------------------------------------------------
+
+use dane::config::LossKind;
+use dane::coordinator::tcp::TcpCluster;
+
+/// Decorator that SIGKILLs a real worker child process just before the
+/// N-th worker-touching collective call delegates — a deterministic
+/// "machine dies mid-run" for the process engine, where timing-based
+/// kills would be flaky. The failing call and every later one hit a
+/// dead socket, so the error comes from the genuine transport path.
+struct KillChildAt {
+    inner: TcpCluster,
+    at: usize,
+    calls: usize,
+    victim: usize,
+}
+
+impl KillChildAt {
+    fn tick(&mut self) {
+        self.calls += 1;
+        if self.calls == self.at {
+            self.inner.kill_worker(self.victim);
+        }
+    }
+}
+
+impl Cluster for KillChildAt {
+    fn m(&self) -> usize {
+        self.inner.m()
+    }
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+    fn objective(&self) -> std::sync::Arc<dyn Objective> {
+        self.inner.objective()
+    }
+    fn grad_and_loss(&mut self, w: &[f64]) -> dane::Result<(Vec<f64>, f64)> {
+        self.tick();
+        self.inner.grad_and_loss(w)
+    }
+    fn grad_and_loss_into(&mut self, w: &[f64], g: &mut [f64]) -> dane::Result<f64> {
+        self.tick();
+        self.inner.grad_and_loss_into(w, g)
+    }
+    fn loss_only(&mut self, w: &[f64]) -> dane::Result<f64> {
+        self.tick();
+        self.inner.loss_only(w)
+    }
+    fn dane_round(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+    ) -> dane::Result<Vec<f64>> {
+        self.tick();
+        self.inner.dane_round(w_prev, g, eta, mu)
+    }
+    fn dane_round_into(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+        out: &mut [f64],
+    ) -> dane::Result<()> {
+        self.tick();
+        self.inner.dane_round_into(w_prev, g, eta, mu, out)
+    }
+    fn dane_round_first(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+    ) -> dane::Result<Vec<f64>> {
+        self.tick();
+        self.inner.dane_round_first(w_prev, g, eta, mu)
+    }
+    fn prox_all(&mut self, targets: &[Vec<f64>], rho: f64) -> dane::Result<Vec<Vec<f64>>> {
+        self.tick();
+        self.inner.prox_all(targets, rho)
+    }
+    fn local_erms(
+        &mut self,
+        subsample: Option<(f64, u64)>,
+    ) -> dane::Result<(Vec<Vec<f64>>, Option<Vec<Vec<f64>>>)> {
+        self.tick();
+        self.inner.local_erms(subsample)
+    }
+    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Vec<f64> {
+        self.inner.allreduce_mean_vecs(vecs)
+    }
+    fn avg_row_sq_norm(&mut self) -> dane::Result<f64> {
+        self.tick();
+        self.inner.avg_row_sq_norm()
+    }
+    fn eval_loss(&mut self, w: &[f64]) -> dane::Result<f64> {
+        self.tick();
+        self.inner.eval_loss(w)
+    }
+    fn eval_grad_loss(&mut self, w: &[f64]) -> dane::Result<(Vec<f64>, f64)> {
+        self.tick();
+        self.inner.eval_grad_loss(w)
+    }
+    fn comm_stats(&self) -> dane::comm::CommStats {
+        self.inner.comm_stats()
+    }
+    fn reset_comm(&mut self) {
+        self.inner.reset_comm();
+    }
+}
+
+/// Self-hosted 4-process cluster whose worker-2 child is killed at
+/// worker-touching collective call `at`.
+fn tcp_killing_cluster(at: usize) -> KillChildAt {
+    // One set_var per process, ordered before every read (see
+    // tcp_cluster.rs::ensure_worker_bin for the setenv/getenv UB note).
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| std::env::set_var("DANE_WORKER_BIN", env!("CARGO_BIN_EXE_dane")));
+    let ds = synthetic_fig2(256, 6, 0.005, 4);
+    let inner = TcpCluster::self_hosted(
+        &ds,
+        LossKind::Ridge,
+        0.01,
+        4,
+        3,
+        dane::comm::NetModel::free(),
+        None,
+        Some(std::time::Duration::from_secs(10)),
+    )
+    .expect("self-hosted tcp cluster must come up");
+    KillChildAt { inner, at, calls: 0, victim: 2 }
+}
+
+/// TCP counterpart of `assert_fault_surfaced`: the cause is a real
+/// socket-level failure, not an injected message.
+fn assert_tcp_fault_surfaced(err: Box<AlgoError>, algo: &str, min_rows: usize) {
+    assert_eq!(err.algo, algo);
+    assert!(
+        err.trace.len() >= min_rows,
+        "[tcp] {algo}: expected >= {min_rows} trace rows before the kill, got {}",
+        err.trace.len()
+    );
+    let cause = err.error.to_string();
+    assert!(
+        cause.contains("worker"),
+        "[tcp] {algo}: cause should name the worker: {cause}"
+    );
+    assert_eq!(err.w.len(), 6);
+}
+
+#[test]
+fn tcp_dane_surfaces_child_kill_with_partial_trace() {
+    // calls: grad(1) row0, dane_round(2), grad(3) row1, dane_round(4) X
+    let mut c = tcp_killing_cluster(4);
+    let err = dane_algo::run(&mut c, &dane_algo::DaneOptions::default(), &RunCtx::new(10))
+        .expect_err("child kill must surface");
+    assert_tcp_fault_surfaced(err, "dane", 2);
+}
+
+#[test]
+fn tcp_gd_and_agd_surface_child_kill() {
+    let mut c = tcp_killing_cluster(4);
+    let err = gd::run_gd(&mut c, &gd::GdOptions::default(), &RunCtx::new(10))
+        .expect_err("child kill must surface");
+    assert_tcp_fault_surfaced(err, "gd", 2);
+
+    let mut c = tcp_killing_cluster(4);
+    let err = gd::run_agd(&mut c, &gd::AgdOptions::default(), &RunCtx::new(10))
+        .expect_err("child kill must surface");
+    assert_tcp_fault_surfaced(err, "agd", 1);
+}
+
+#[test]
+fn tcp_admm_surfaces_child_kill() {
+    let mut c = tcp_killing_cluster(4);
+    let err = admm::run(&mut c, &admm::AdmmOptions { rho: 0.1 }, &RunCtx::new(10))
+        .expect_err("child kill must surface");
+    assert_tcp_fault_surfaced(err, "admm", 2);
+}
+
+#[test]
+fn tcp_osa_surfaces_child_kill() {
+    let mut c = tcp_killing_cluster(2);
+    let err = osa::run(&mut c, &osa::OsaOptions::default(), &RunCtx::new(1))
+        .expect_err("child kill must surface");
+    assert_tcp_fault_surfaced(err, "osa", 1);
+}
+
+#[test]
+fn tcp_lbfgs_surfaces_child_kill() {
+    let mut c = tcp_killing_cluster(4);
+    let err = lbfgs::run(&mut c, &lbfgs::LbfgsOptions::default(), &RunCtx::new(10))
+        .expect_err("child kill must surface");
+    assert_tcp_fault_surfaced(err, "lbfgs", 1);
+}
+
 #[test]
 fn passthrough_wrapper_preserves_results_bitwise() {
     // Sanity: with the trigger unreachable, the decorator is invisible —

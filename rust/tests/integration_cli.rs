@@ -287,6 +287,132 @@ fn bad_config_reports_error() {
     assert!(text.contains("missing JSON key"), "{text}");
 }
 
+/// Write a minimal serial fig2 config and return its path.
+fn write_small_cfg(dir: &TempDir) -> std::path::PathBuf {
+    let cfg_path = dir.path().join("exp.json");
+    std::fs::write(
+        &cfg_path,
+        r#"{
+          "name": "cli-engine-flag",
+          "dataset": {"kind": "fig2", "n": 256, "d": 6, "paper_reg": 0.005},
+          "loss": "ridge",
+          "lambda": 0.01,
+          "algo": {"kind": "dane", "eta": 1.0, "mu_over_lambda": 0.0},
+          "machines": 2,
+          "rounds": 8,
+          "tol": 1e-8,
+          "seed": 3
+        }"#,
+    )
+    .unwrap();
+    cfg_path
+}
+
+#[test]
+fn run_engine_flag_overrides_config() {
+    // The config says nothing (defaults to serial); --engine threaded
+    // must run the threaded engine and still succeed.
+    let dir = TempDir::new("cli-engine-flag").unwrap();
+    let cfg_path = write_small_cfg(&dir);
+    let out = Command::new(dane_bin())
+        .args([
+            "run",
+            "--config",
+            cfg_path.to_str().unwrap(),
+            "--engine",
+            "threaded",
+            "--quiet",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn run_engine_flag_rejects_unknown_value() {
+    let dir = TempDir::new("cli-engine-bad").unwrap();
+    let cfg_path = write_small_cfg(&dir);
+    let out = Command::new(dane_bin())
+        .args(["run", "--config", cfg_path.to_str().unwrap(), "--engine", "quantum"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("unknown engine"), "{text}");
+    assert!(text.contains("USAGE"), "{text}");
+}
+
+#[test]
+fn run_engine_tcp_self_hosts_workers_and_emits_wire_bytes() {
+    // `--engine tcp` with no workers list: the CLI leader spawns its own
+    // worker processes on loopback and the CSV gains a measured
+    // wire_bytes column with nonzero entries.
+    let dir = TempDir::new("cli-tcp").unwrap();
+    let cfg_path = write_small_cfg(&dir);
+    let csv_path = dir.path().join("trace.csv");
+    let out = Command::new(dane_bin())
+        .args([
+            "run",
+            "--config",
+            cfg_path.to_str().unwrap(),
+            "--engine",
+            "tcp",
+            "--csv",
+            csv_path.to_str().unwrap(),
+            "--quiet",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let csv = std::fs::read_to_string(&csv_path).unwrap();
+    let mut lines = csv.lines();
+    let header = lines.next().unwrap();
+    assert!(header.ends_with(",elapsed_seconds,wire_bytes"), "{header}");
+    let last = lines.last().unwrap();
+    let wire: u64 = last.rsplit(',').next().unwrap().parse().unwrap();
+    assert!(wire > 0, "tcp run recorded no measured bytes: {last}");
+}
+
+#[test]
+fn worker_subcommand_requires_listen() {
+    let out = Command::new(dane_bin()).arg("worker").output().unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("--listen"), "{text}");
+    assert!(text.contains("USAGE"), "{text}");
+}
+
+#[test]
+fn worker_announces_bound_address() {
+    // `dane worker --listen 127.0.0.1:0` must print the resolved port
+    // and exit cleanly once the leader (us) connects and hangs up.
+    let mut child = Command::new(dane_bin())
+        .args(["worker", "--listen", "127.0.0.1:0"])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    let stdout = child.stdout.take().unwrap();
+    let mut line = String::new();
+    use std::io::BufRead;
+    std::io::BufReader::new(stdout).read_line(&mut line).unwrap();
+    let addr = line
+        .trim()
+        .strip_prefix("listening on ")
+        .unwrap_or_else(|| panic!("bad announce line: {line:?}"));
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    drop(stream); // leader hangs up at a frame boundary -> clean exit
+    let status = child.wait().unwrap();
+    assert!(status.success(), "worker exit: {status:?}");
+}
+
 #[test]
 fn thm1_subcommand_runs() {
     let out = Command::new(dane_bin())

@@ -150,6 +150,7 @@ fn driver_runs_config_end_to_end_and_emits_csv() {
         seed: 3,
         backend: BackendKind::Native,
         engine: EngineKind::Serial,
+        workers: None,
         threads: None,
         eval_test: false,
         net: NetConfig::datacenter(),

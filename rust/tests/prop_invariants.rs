@@ -307,6 +307,7 @@ fn prop_config_json_roundtrip() {
                 } else {
                     EngineKind::Serial
                 },
+                workers: None,
                 threads: if rng.bool(0.5) { Some(1 + rng.below(8)) } else { None },
                 eval_test: rng.bool(0.5),
                 net: NetConfig::datacenter(),

@@ -121,6 +121,7 @@ fn driver_engine_parity_on_fig2_config() {
         seed: 7,
         backend: BackendKind::Native,
         engine: EngineKind::Serial,
+        workers: None,
         threads: None,
         eval_test: false,
         net: NetConfig::datacenter(),

@@ -1,0 +1,276 @@
+//! The TCP process-cluster engine, end to end with **real spawned worker
+//! processes on loopback**:
+//!
+//! * serial ≡ tcp trace parity, bit-exact modulo the wallclock and
+//!   `wire_bytes` columns, through `run_experiment` on a fig2-style
+//!   config (the acceptance pin for the wire refactor);
+//! * collective-surface parity against `SerialCluster` outside a full
+//!   run;
+//! * measured `wire_bytes` accounting: zero on in-memory engines,
+//!   positive and monotone on tcp;
+//! * hang safety: a *wedged* (accepting but never replying) worker
+//!   surfaces as `Err` within the socket timeout — at the algorithm
+//!   level as an `AlgoError` — never a deadlock.
+//!
+//! Self-hosted clusters need the `dane` binary for their worker
+//! children; tests run inside the test harness binary, so they point
+//! `DANE_WORKER_BIN` at the compiled CLI.
+
+use dane::comm::wire::{self, Reply};
+use dane::config::{
+    AlgoConfig, BackendKind, DatasetConfig, EngineKind, ExperimentConfig, LossKind,
+    NetConfig,
+};
+use dane::coordinator::driver::run_experiment;
+use dane::coordinator::tcp::TcpCluster;
+use dane::coordinator::{dane as dane_algo, Cluster, RunCtx, SerialCluster};
+use dane::data::synthetic_fig2;
+use dane::loss::{Objective, Ridge};
+use dane::metrics::Trace;
+use std::io::Write;
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn ensure_worker_bin() {
+    // Exactly one set_var, before any test thread can read the var
+    // through worker_binary(): every test calls this first and Once
+    // blocks until the closure is done, so no getenv races a setenv
+    // (concurrent setenv/getenv is UB on glibc).
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| std::env::set_var("DANE_WORKER_BIN", env!("CARGO_BIN_EXE_dane")));
+}
+
+fn fig2_cfg(engine: EngineKind) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "tcp-parity".into(),
+        dataset: DatasetConfig::Fig2 { n: 1024, d: 16, paper_reg: 0.005 },
+        loss: LossKind::Ridge,
+        lambda: 0.01,
+        algo: AlgoConfig::Dane { eta: 1.0, mu_over_lambda: 1.0 },
+        machines: 4,
+        rounds: 12,
+        tol: 1e-10,
+        seed: 7,
+        backend: BackendKind::Native,
+        engine,
+        workers: None,
+        threads: None,
+        eval_test: false,
+        net: NetConfig::datacenter(),
+    }
+}
+
+/// Bit-exact row compare, modulo the two run-specific columns
+/// (`elapsed_seconds` is wallclock, `wire_bytes` is transport-specific).
+fn assert_rows_identical_mod_wire(a: &Trace, b: &Trace) {
+    assert_eq!(a.len(), b.len());
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(ra.round, rb.round);
+        assert_eq!(ra.objective, rb.objective, "round {}", ra.round);
+        assert_eq!(ra.suboptimality, rb.suboptimality, "round {}", ra.round);
+        assert_eq!(ra.grad_norm, rb.grad_norm, "round {}", ra.round);
+        assert_eq!(ra.test_loss, rb.test_loss, "round {}", ra.round);
+        assert_eq!(ra.comm_rounds, rb.comm_rounds, "round {}", ra.round);
+        assert_eq!(ra.comm_bytes, rb.comm_bytes, "round {}", ra.round);
+        assert_eq!(
+            ra.comm_modeled_seconds, rb.comm_modeled_seconds,
+            "round {}",
+            ra.round
+        );
+    }
+}
+
+#[test]
+fn driver_serial_tcp_parity_on_fig2_config() {
+    ensure_worker_bin();
+    let serial = run_experiment(&fig2_cfg(EngineKind::Serial)).unwrap();
+    let tcp = run_experiment(&fig2_cfg(EngineKind::Tcp)).unwrap();
+
+    assert_eq!(serial.phi_star, tcp.phi_star);
+    assert_eq!(serial.w, tcp.w, "final iterates must be bit-identical");
+    assert_eq!(serial.converged, tcp.converged);
+    assert_eq!(serial.rounds_to_tol, tcp.rounds_to_tol);
+    assert_rows_identical_mod_wire(&serial.trace, &tcp.trace);
+
+    // the wire column is the one legitimate difference: zero in memory,
+    // positive and monotone over the socket
+    assert!(serial.trace.rows.iter().all(|r| r.wire_bytes == 0));
+    let wire: Vec<u64> = tcp.trace.rows.iter().map(|r| r.wire_bytes).collect();
+    assert!(wire[0] > 0, "first tcp round moved no measured bytes");
+    assert!(wire.windows(2).all(|w| w[0] <= w[1]), "wire_bytes not monotone: {wire:?}");
+}
+
+#[test]
+fn collective_surface_matches_serial_bitwise() {
+    ensure_worker_bin();
+    let ds = synthetic_fig2(600, 10, 0.005, 13);
+    let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.02));
+    let mut s = SerialCluster::new(&ds, obj, 4, 7);
+    let mut t = TcpCluster::self_hosted(
+        &ds,
+        LossKind::Ridge,
+        0.02,
+        4,
+        7,
+        dane::comm::NetModel::free(),
+        None,
+        None,
+    )
+    .unwrap();
+    assert_eq!(s.m(), t.m());
+    assert_eq!(s.dim(), t.dim());
+
+    let w = vec![0.05; 10];
+    let (gs, ls) = s.grad_and_loss(&w).unwrap();
+    let (gt, lt) = t.grad_and_loss(&w).unwrap();
+    assert_eq!(gs, gt, "gradient must survive the wire bit-exactly");
+    assert_eq!(ls, lt);
+    assert_eq!(s.loss_only(&w).unwrap(), t.loss_only(&w).unwrap());
+    assert_eq!(s.eval_loss(&w).unwrap(), t.eval_loss(&w).unwrap());
+
+    let ds1 = s.dane_round(&w, &gs, 1.0, 0.01).unwrap();
+    let dt1 = t.dane_round(&w, &gt, 1.0, 0.01).unwrap();
+    assert_eq!(ds1, dt1, "DANE local-solve average must be bit-identical");
+
+    let fs = s.dane_round_first(&w, &gs, 1.0, 0.01).unwrap();
+    let ft = t.dane_round_first(&w, &gt, 1.0, 0.01).unwrap();
+    assert_eq!(fs, ft);
+
+    let (es, _) = s.local_erms(Some((0.5, 3))).unwrap();
+    let (et, _) = t.local_erms(Some((0.5, 3))).unwrap();
+    assert_eq!(es, et, "per-worker ERMs must be bit-identical");
+
+    let targets: Vec<Vec<f64>> = (0..4).map(|k| vec![0.01 * k as f64; 10]).collect();
+    assert_eq!(
+        s.prox_all(&targets, 0.3).unwrap(),
+        t.prox_all(&targets, 0.3).unwrap()
+    );
+
+    // modeled accounting identical; measured bytes only on the socket
+    assert_eq!(s.comm_stats().rounds, t.comm_stats().rounds);
+    assert_eq!(s.comm_stats().bytes, t.comm_stats().bytes);
+    assert_eq!(s.comm_stats().wire_bytes, 0);
+    assert!(t.comm_stats().wire_bytes > 0);
+
+    // reset clears the measured counter with the modeled ones
+    t.reset_comm();
+    assert_eq!(t.comm_stats().wire_bytes, 0);
+    assert_eq!(t.comm_stats().rounds, 0);
+}
+
+#[test]
+fn full_dane_run_on_tcp_converges() {
+    ensure_worker_bin();
+    let ds = synthetic_fig2(1024, 12, 0.005, 7);
+    let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+    let (_, phi_star) =
+        dane::solver::erm_solve(obj.as_ref(), &ds.as_single_shard()).unwrap();
+    let mut cluster = TcpCluster::self_hosted(
+        &ds,
+        LossKind::Ridge,
+        0.01,
+        4,
+        3,
+        dane::comm::NetModel::free(),
+        None,
+        None,
+    )
+    .unwrap();
+    let ctx = RunCtx::new(20).with_reference(phi_star).with_tol(1e-9);
+    let res = dane_algo::run(&mut cluster, &Default::default(), &ctx).unwrap();
+    assert!(res.converged, "{:?}", res.trace.suboptimality());
+    let last = res.trace.rows.last().unwrap();
+    assert_eq!(last.comm_rounds, 2 * last.round as u64 + 1);
+    assert!(last.wire_bytes > 0);
+}
+
+/// A protocol-speaking stub worker that acks Init and then goes silent
+/// forever (reads commands, never replies) — a wedged, not dead, worker.
+fn spawn_wedged_worker() -> std::net::SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let (mut stream, _) = match listener.accept() {
+            Ok(x) => x,
+            Err(_) => return,
+        };
+        let mut body = Vec::new();
+        // frame 1: Init — ack it so the cluster comes up
+        if !matches!(wire::read_frame(&mut stream, &mut body), Ok(Some(_))) {
+            return;
+        }
+        let mut enc = Vec::new();
+        if wire::encode_reply(&Reply::Scalar(0.0), &mut enc).is_err()
+            || stream.write_all(&enc).is_err()
+        {
+            return;
+        }
+        // then: swallow every further frame without ever answering,
+        // until the leader hangs up
+        while let Ok(Some(_)) = wire::read_frame(&mut stream, &mut body) {}
+    });
+    addr
+}
+
+#[test]
+fn wedged_worker_times_out_instead_of_deadlocking() {
+    ensure_worker_bin();
+    let addr = spawn_wedged_worker();
+    let ds = synthetic_fig2(128, 6, 0.005, 3);
+    let mut cluster = TcpCluster::connect(
+        &ds,
+        LossKind::Ridge,
+        0.01,
+        &[addr.to_string()],
+        3,
+        dane::comm::NetModel::free(),
+        None,
+        Some(Duration::from_millis(300)),
+    )
+    .unwrap();
+
+    let t0 = std::time::Instant::now();
+    let err = cluster.grad_and_loss(&[0.0; 6]).unwrap_err();
+    assert!(
+        err.to_string().contains("wedged") || err.to_string().contains("timed out"),
+        "unexpected cause: {err}"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "timeout did not bound the wait"
+    );
+
+    // and through an algorithm: AlgoError, the CLI's error contract
+    let out = dane_algo::run(&mut cluster, &Default::default(), &RunCtx::new(5));
+    let algo_err = out.expect_err("wedged worker must fail the run");
+    assert_eq!(algo_err.algo, "dane");
+    assert!(
+        algo_err.error.to_string().contains("timed out")
+            || algo_err.error.to_string().contains("wedged"),
+        "{}",
+        algo_err.error
+    );
+}
+
+#[test]
+fn connect_to_nobody_fails_fast() {
+    // A connect() to an address with no listener must be an Err, not a
+    // hang or a panic. Bind-then-drop reserves a port that is closed.
+    let port = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let ds = synthetic_fig2(64, 4, 0.005, 1);
+    let res = TcpCluster::connect(
+        &ds,
+        LossKind::Ridge,
+        0.01,
+        &[format!("127.0.0.1:{port}")],
+        1,
+        dane::comm::NetModel::free(),
+        None,
+        Some(Duration::from_millis(500)),
+    );
+    assert!(res.is_err());
+}

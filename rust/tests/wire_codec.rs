@@ -1,0 +1,399 @@
+//! Codec contract for `comm::wire`: every `Command`/`Reply` variant
+//! round-trips bit-exactly (odd dims, empty vectors, NaN/±inf payloads
+//! preserved bit for bit), and malformed input — truncated frames, bad
+//! version bytes, unknown tags, oversize length prefixes, hostile
+//! element counts, trailing garbage — returns `Err`, never a panic and
+//! never an attacker-sized allocation.
+
+use dane::comm::wire::{
+    decode_command, decode_reply, encode_command, encode_reply, read_frame, Command,
+    InitPayload, Reply, MAX_FRAME_LEN, WIRE_VERSION,
+};
+use dane::data::Shard;
+use dane::linalg::{CsrMatrix, DataMatrix, DenseMatrix};
+use dane::util::Rng64;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------
+
+/// Random vector mixing ordinary values with the IEEE specials the codec
+/// must carry through untouched.
+fn weird_vec(rng: &mut Rng64, len: usize) -> Vec<f64> {
+    (0..len)
+        .map(|_| match rng.below(8) {
+            0 => f64::NAN,
+            1 => f64::INFINITY,
+            2 => f64::NEG_INFINITY,
+            3 => -0.0,
+            4 => f64::MIN_POSITIVE / 2.0, // subnormal
+            _ => rng.range_f64(-1e300, 1e300),
+        })
+        .collect()
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y} differ in bits");
+    }
+}
+
+fn body(buf: &[u8]) -> &[u8] {
+    &buf[4..]
+}
+
+fn rt_cmd(cmd: &Command) -> Command {
+    let mut buf = Vec::new();
+    encode_command(cmd, &mut buf).unwrap();
+    // the length prefix must describe the body exactly
+    let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    assert_eq!(len, buf.len() - 4);
+    decode_command(body(&buf)).expect("well-formed command must decode")
+}
+
+fn rt_rep(rep: &Reply) -> Reply {
+    let mut buf = Vec::new();
+    encode_reply(rep, &mut buf).unwrap();
+    let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    assert_eq!(len, buf.len() - 4);
+    decode_reply(body(&buf)).expect("well-formed reply must decode")
+}
+
+// ---------------------------------------------------------------------
+// command round-trips
+// ---------------------------------------------------------------------
+
+#[test]
+fn grad_loss_and_loss_roundtrip_all_lengths() {
+    let mut rng = Rng64::seed_from_u64(1);
+    // empty, length-1, odd, power-of-two-straddling lengths
+    for len in [0usize, 1, 3, 7, 17, 63, 64, 65, 255] {
+        let w = weird_vec(&mut rng, len);
+        match rt_cmd(&Command::GradLoss { w: Arc::new(w.clone()), out: vec![1.0; 4] }) {
+            Command::GradLoss { w: w2, out } => {
+                assert_bits_eq(&w, &w2);
+                assert!(out.is_empty(), "out buffer must not cross the wire");
+            }
+            _ => panic!("variant changed"),
+        }
+        match rt_cmd(&Command::Loss { w: Arc::new(w.clone()) }) {
+            Command::Loss { w: w2 } => assert_bits_eq(&w, &w2),
+            _ => panic!("variant changed"),
+        }
+    }
+}
+
+#[test]
+fn dane_solve_roundtrips_with_special_hyperparams() {
+    let mut rng = Rng64::seed_from_u64(2);
+    for len in [1usize, 5, 33] {
+        let w_prev = weird_vec(&mut rng, len);
+        let g = weird_vec(&mut rng, len);
+        for (eta, mu) in [(1.0, 0.0), (f64::NAN, f64::INFINITY), (-0.0, 1e-300)] {
+            let cmd = Command::DaneSolve {
+                w_prev: Arc::new(w_prev.clone()),
+                g: Arc::new(g.clone()),
+                eta,
+                mu,
+                out: Vec::new(),
+            };
+            match rt_cmd(&cmd) {
+                Command::DaneSolve { w_prev: a, g: b, eta: e, mu: m, out } => {
+                    assert_bits_eq(&w_prev, &a);
+                    assert_bits_eq(&g, &b);
+                    assert_eq!(e.to_bits(), eta.to_bits());
+                    assert_eq!(m.to_bits(), mu.to_bits());
+                    assert!(out.is_empty());
+                }
+                _ => panic!("variant changed"),
+            }
+        }
+    }
+}
+
+#[test]
+fn prox_erm_rowsq_roundtrip() {
+    let mut rng = Rng64::seed_from_u64(3);
+    let v = weird_vec(&mut rng, 9);
+    match rt_cmd(&Command::Prox { v: v.clone(), rho: 0.25 }) {
+        Command::Prox { v: v2, rho } => {
+            assert_bits_eq(&v, &v2);
+            assert_eq!(rho, 0.25);
+        }
+        _ => panic!("variant changed"),
+    }
+    for subsample in [None, Some((0.5, u64::MAX)), Some((f64::MIN_POSITIVE, 0))] {
+        match rt_cmd(&Command::Erm { subsample }) {
+            Command::Erm { subsample: s } => match (subsample, s) {
+                (None, None) => {}
+                (Some((r1, k1)), Some((r2, k2))) => {
+                    assert_eq!(r1.to_bits(), r2.to_bits());
+                    assert_eq!(k1, k2);
+                }
+                _ => panic!("subsample flag flipped"),
+            },
+            _ => panic!("variant changed"),
+        }
+    }
+    assert!(matches!(rt_cmd(&Command::RowSq), Command::RowSq));
+}
+
+#[test]
+fn init_roundtrips_dense_and_sparse_shards() {
+    let mut rng = Rng64::seed_from_u64(4);
+    // dense, odd shape, with padding rows
+    let mut x = DenseMatrix::zeros(5, 3);
+    for i in 0..5 {
+        for j in 0..3 {
+            x.set(i, j, rng.normal());
+        }
+    }
+    let dense = Shard::with_padding(DataMatrix::Dense(x), weird_vec(&mut rng, 5), 4);
+    // sparse, including an all-zero row and an empty trailing row
+    let sparse_x = CsrMatrix::from_triplets(
+        4,
+        10_000,
+        &[(0, 9_999, 1.5), (0, 3, -2.0), (2, 500, f64::NAN)],
+    );
+    let sparse = Shard::new(DataMatrix::Sparse(sparse_x), vec![1.0, -1.0, 1.0, -1.0]);
+
+    for (shard, gram_threads) in [(dense, None), (sparse, Some(4))] {
+        let p = InitPayload {
+            worker_id: 7,
+            loss_name: "smooth_hinge".into(),
+            lambda: 1e-5,
+            gram_threads,
+            shard: shard.clone(),
+        };
+        match rt_cmd(&Command::Init(Box::new(p))) {
+            Command::Init(q) => {
+                assert_eq!(q.worker_id, 7);
+                assert_eq!(q.loss_name, "smooth_hinge");
+                assert_eq!(q.lambda, 1e-5);
+                assert_eq!(q.gram_threads, gram_threads);
+                assert_eq!(q.shard.n(), shard.n());
+                assert_eq!(q.shard.n_effective(), shard.n_effective());
+                assert_eq!(q.shard.d(), shard.d());
+                assert_bits_eq(&shard.y, &q.shard.y);
+                // matrix content, bit for bit, via the generic row view
+                for i in 0..shard.n() {
+                    for j in 0..shard.d().min(64) {
+                        let a = shard.x.to_dense().get(i, j);
+                        let b = q.shard.x.to_dense().get(i, j);
+                        assert_eq!(a.to_bits(), b.to_bits(), "cell ({i},{j})");
+                    }
+                }
+            }
+            _ => panic!("variant changed"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// reply round-trips
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_reply_variant_roundtrips() {
+    let mut rng = Rng64::seed_from_u64(5);
+    for len in [0usize, 1, 11, 100] {
+        let v = weird_vec(&mut rng, len);
+        match rt_rep(&Reply::Vec(v.clone())) {
+            Reply::Vec(v2) => assert_bits_eq(&v, &v2),
+            _ => panic!("variant changed"),
+        }
+        match rt_rep(&Reply::VecScalar(v.clone(), f64::NAN)) {
+            Reply::VecScalar(v2, s) => {
+                assert_bits_eq(&v, &v2);
+                assert_eq!(s.to_bits(), f64::NAN.to_bits());
+            }
+            _ => panic!("variant changed"),
+        }
+        let sub = weird_vec(&mut rng, len / 2);
+        match rt_rep(&Reply::VecPair(v.clone(), Some(sub.clone()))) {
+            Reply::VecPair(v2, Some(s2)) => {
+                assert_bits_eq(&v, &v2);
+                assert_bits_eq(&sub, &s2);
+            }
+            _ => panic!("variant changed"),
+        }
+        match rt_rep(&Reply::VecPair(v.clone(), None)) {
+            Reply::VecPair(v2, None) => assert_bits_eq(&v, &v2),
+            _ => panic!("variant changed"),
+        }
+    }
+    match rt_rep(&Reply::Scalar(-f64::INFINITY)) {
+        Reply::Scalar(s) => assert_eq!(s, f64::NEG_INFINITY),
+        _ => panic!("variant changed"),
+    }
+    match rt_rep(&Reply::Err("worker 3: singular Gram — ключ".into())) {
+        Reply::Err(m) => assert!(m.contains("singular") && m.contains("ключ")),
+        _ => panic!("variant changed"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// malformed input
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_truncation_of_every_variant_is_an_error() {
+    let mut rng = Rng64::seed_from_u64(6);
+    let mut frames: Vec<Vec<u8>> = Vec::new();
+    let mut buf = Vec::new();
+    for cmd in [
+        Command::GradLoss { w: Arc::new(weird_vec(&mut rng, 5)), out: Vec::new() },
+        Command::Loss { w: Arc::new(vec![]) },
+        Command::DaneSolve {
+            w_prev: Arc::new(weird_vec(&mut rng, 3)),
+            g: Arc::new(weird_vec(&mut rng, 3)),
+            eta: 1.0,
+            mu: 0.5,
+            out: Vec::new(),
+        },
+        Command::Prox { v: weird_vec(&mut rng, 2), rho: 0.1 },
+        Command::Erm { subsample: Some((0.5, 9)) },
+        Command::RowSq,
+    ] {
+        encode_command(&cmd, &mut buf).unwrap();
+        frames.push(buf[4..].to_vec());
+    }
+    for rep in [
+        Reply::Vec(weird_vec(&mut rng, 4)),
+        Reply::Scalar(1.0),
+        Reply::VecScalar(weird_vec(&mut rng, 4), 2.0),
+        Reply::VecPair(weird_vec(&mut rng, 4), Some(weird_vec(&mut rng, 2))),
+        Reply::Err("x".into()),
+    ] {
+        encode_reply(&rep, &mut buf).unwrap();
+        frames.push(buf[4..].to_vec());
+    }
+    for (k, f) in frames.iter().enumerate() {
+        for cut in 0..f.len() {
+            // a prefix of a valid frame must never decode (as either kind)
+            assert!(
+                decode_command(&f[..cut]).is_err(),
+                "frame {k} cut {cut} decoded as command"
+            );
+            assert!(
+                decode_reply(&f[..cut]).is_err(),
+                "frame {k} cut {cut} decoded as reply"
+            );
+        }
+        // and trailing garbage is rejected too
+        let mut long = f.clone();
+        long.push(0xab);
+        assert!(decode_command(&long).is_err() && decode_reply(&long).is_err());
+    }
+}
+
+#[test]
+fn bad_version_unknown_tag_and_wrong_kind_rejected() {
+    let mut buf = Vec::new();
+    encode_command(&Command::RowSq, &mut buf).unwrap();
+    let good = buf[4..].to_vec();
+
+    let mut bad = good.clone();
+    bad[0] = WIRE_VERSION.wrapping_add(1);
+    assert!(decode_command(&bad).is_err(), "future version accepted");
+    let mut bad = good.clone();
+    bad[0] = 0;
+    assert!(decode_command(&bad).is_err(), "version 0 accepted");
+
+    let mut bad = good.clone();
+    bad[1] = 0x6f; // unknown tag
+    assert!(decode_command(&bad).is_err());
+    assert!(decode_reply(&bad).is_err());
+
+    // a command frame is not a reply frame and vice versa
+    assert!(decode_reply(&good).is_err(), "command tag decoded as reply");
+    encode_reply(&Reply::Scalar(0.0), &mut buf).unwrap();
+    assert!(decode_command(&buf[4..]).is_err(), "reply tag decoded as command");
+}
+
+#[test]
+fn hostile_counts_do_not_allocate_or_panic() {
+    // A tiny frame claiming a 2^60-element vector: must be Err (and, per
+    // the count-vs-remaining-bytes guard, must not try to allocate it).
+    let mut frame = vec![WIRE_VERSION, 0x81]; // REP_VEC
+    frame.extend_from_slice(&(1u64 << 60).to_le_bytes());
+    frame.extend_from_slice(&[0; 16]);
+    assert!(decode_reply(&frame).is_err());
+
+    // Same for a string length.
+    let mut frame = vec![WIRE_VERSION, 0x85]; // REP_ERR
+    frame.extend_from_slice(&(u32::MAX).to_le_bytes());
+    assert!(decode_reply(&frame).is_err());
+
+    // Non-UTF-8 error text is an error, not a panic.
+    let mut frame = vec![WIRE_VERSION, 0x85];
+    frame.extend_from_slice(&2u32.to_le_bytes());
+    frame.extend_from_slice(&[0xff, 0xfe]);
+    assert!(decode_reply(&frame).is_err());
+}
+
+#[test]
+fn oversize_length_prefix_rejected_before_reading_body() {
+    let mut wire = ((MAX_FRAME_LEN + 1) as u32).to_le_bytes().to_vec();
+    wire.extend_from_slice(&[0u8; 64]);
+    let mut body = Vec::new();
+    assert!(read_frame(&mut wire.as_slice(), &mut body).is_err());
+
+    // mid-frame EOF (prefix promises more than the transport delivers)
+    let mut short = 100u32.to_le_bytes().to_vec();
+    short.extend_from_slice(&[1u8; 10]);
+    assert!(read_frame(&mut short.as_slice(), &mut body).is_err());
+
+    // zero / sub-header lengths are malformed
+    let zero = 0u32.to_le_bytes().to_vec();
+    assert!(read_frame(&mut zero.as_slice(), &mut body).is_err());
+}
+
+#[test]
+fn read_frame_roundtrips_what_encode_writes() {
+    let mut buf = Vec::new();
+    encode_reply(&Reply::VecScalar(vec![1.0, -2.5], 7.0), &mut buf).unwrap();
+    let mut body = Vec::new();
+    let n = read_frame(&mut buf.as_slice(), &mut body).unwrap().unwrap();
+    assert_eq!(n, buf.len(), "read_frame must count prefix + body");
+    match decode_reply(&body).unwrap() {
+        Reply::VecScalar(v, s) => {
+            assert_eq!(v, vec![1.0, -2.5]);
+            assert_eq!(s, 7.0);
+        }
+        _ => panic!("variant changed"),
+    }
+    // and the stream is now cleanly exhausted
+    let mut rest: &[u8] = &[];
+    assert_eq!(read_frame(&mut rest, &mut body).unwrap(), None);
+}
+
+#[test]
+fn malformed_init_shards_rejected_not_panicked() {
+    // Build a valid Init frame, then corrupt structural fields.
+    let x = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+    let p = InitPayload {
+        worker_id: 0,
+        loss_name: "ridge".into(),
+        lambda: 0.1,
+        gram_threads: None,
+        shard: Shard::new(DataMatrix::Dense(x), vec![1.0, -1.0]),
+    };
+    let mut buf = Vec::new();
+    encode_command(&Command::Init(Box::new(p)), &mut buf).unwrap();
+    let good = buf[4..].to_vec();
+    assert!(decode_command(&good).is_ok());
+
+    // every single-byte corruption either decodes to *something* or
+    // errors — it must never panic (this sweeps version, tag, dims,
+    // counts, n_effective, the lot)
+    for i in 0..good.len() {
+        for delta in [1u8, 0x80] {
+            let mut bad = good.clone();
+            bad[i] = bad[i].wrapping_add(delta);
+            let _ = decode_command(&bad); // must not panic
+        }
+    }
+}
