@@ -7,6 +7,7 @@
 //! bench` under a few minutes on one core; scale 1 is the paper-size
 //! harness recorded in EXPERIMENTS.md).
 
+use dane::comm::ExecTopology;
 use dane::config::EngineKind;
 use std::path::Path;
 
@@ -16,13 +17,15 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(8);
     let engine = EngineKind::from_env("DANE_BENCH_ENGINE").expect("DANE_BENCH_ENGINE");
+    let topology =
+        ExecTopology::from_env("DANE_BENCH_TOPOLOGY").expect("DANE_BENCH_TOPOLOGY");
     println!(
         "== fig2 bench (scale {scale}; DANE_BENCH_SCALE to change; engine {}; \
          DANE_BENCH_ENGINE=serial|threaded) ==",
         engine.name()
     );
     let t0 = std::time::Instant::now();
-    let cells = dane::harness::fig2(scale, Path::new("results/fig2"), engine)
+    let cells = dane::harness::fig2(scale, Path::new("results/fig2"), engine, topology)
         .expect("fig2 harness");
     println!("\nfig2 series (log10 suboptimality by iteration):");
     for c in &cells {

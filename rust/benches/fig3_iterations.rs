@@ -3,6 +3,7 @@
 //!
 //! `DANE_BENCH_SCALE` divides dataset sizes (default 8).
 
+use dane::comm::ExecTopology;
 use dane::config::EngineKind;
 use std::path::Path;
 
@@ -12,9 +13,11 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(8);
     let engine = EngineKind::from_env("DANE_BENCH_ENGINE").expect("DANE_BENCH_ENGINE");
+    let topology =
+        ExecTopology::from_env("DANE_BENCH_TOPOLOGY").expect("DANE_BENCH_TOPOLOGY");
     println!("== fig3 bench (scale {scale}, engine {}) ==", engine.name());
     let t0 = std::time::Instant::now();
-    let cols = dane::harness::fig3(scale, Path::new("results/fig3"), engine)
+    let cols = dane::harness::fig3(scale, Path::new("results/fig3"), engine, topology)
         .expect("fig3 harness");
     // Shape checks mirroring the paper's table: DANE's row should be flat
     // in m until shards get small; report the spread.

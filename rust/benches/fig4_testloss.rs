@@ -4,6 +4,7 @@
 //!
 //! `DANE_BENCH_SCALE` divides dataset sizes (default 8).
 
+use dane::comm::ExecTopology;
 use dane::config::EngineKind;
 use std::path::Path;
 
@@ -13,9 +14,11 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(8);
     let engine = EngineKind::from_env("DANE_BENCH_ENGINE").expect("DANE_BENCH_ENGINE");
+    let topology =
+        ExecTopology::from_env("DANE_BENCH_TOPOLOGY").expect("DANE_BENCH_TOPOLOGY");
     println!("== fig4 bench (scale {scale}, engine {}) ==", engine.name());
     let t0 = std::time::Instant::now();
-    let panels = dane::harness::fig4(scale, Path::new("results/fig4"), engine)
+    let panels = dane::harness::fig4(scale, Path::new("results/fig4"), engine, topology)
         .expect("fig4 harness");
     for p in &panels {
         println!("  [{}] opt test loss {:.6}", p.dataset, p.opt_test_loss);

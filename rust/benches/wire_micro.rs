@@ -1,0 +1,164 @@
+//! Wire / topology micro-benchmarks (EXPERIMENTS.md §Topologies).
+//!
+//! Two layers, measured with the in-tree criterion-style harness:
+//!
+//! 1. **codec throughput** — encode/decode of the hot round frames
+//!    (GradLoss command, DaneSolve command, VecScalar reply) at the
+//!    canonical d = 512;
+//! 2. **one-collective round-trip latency** — a full `grad_and_loss`
+//!    (broadcast + gather + rank-order fold) on a real socket cluster,
+//!    for the three execution strategies `star-seq` / `star` / `tree`
+//!    at m in {4, 8, 16}. Workers are in-process threads serving the
+//!    genuine `worker::serve` session over loopback TCP — the same
+//!    frames, relays and bundles as worker processes, minus the process
+//!    spawn noise, so the numbers isolate the *collective execution*
+//!    cost the topology layer exists to cut.
+//!
+//! The run is serialized to `BENCH_wire.json` at the repo root (the
+//! same `dane-bench-v1` schema as `BENCH_hotpath.json`), which is the
+//! machine-readable perf trajectory topology claims are checked
+//! against. `BENCH_MEASURE_MS` / `BENCH_WARMUP_MS` shrink the run for
+//! CI's bench-smoke job; `BENCH_LABEL` overrides the git label.
+
+use dane::comm::wire::{self, Command, Reply};
+use dane::comm::{ExecTopology, NetModel};
+use dane::config::LossKind;
+use dane::coordinator::tcp::TcpCluster;
+use dane::coordinator::Cluster;
+use dane::data::{synthetic_fig2, Dataset};
+use dane::util::bench::{black_box, git_label, Bencher};
+use dane::util::Rng64;
+use dane::worker::serve;
+use std::net::TcpListener;
+use std::sync::Arc;
+
+/// Repo root (one above the cargo manifest), where the trajectory lands.
+const BENCH_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_wire.json");
+
+/// Bind m loopback listeners, serve each on an in-process thread, and
+/// return the addresses for `TcpCluster::connect`. The serve sessions
+/// keep their listeners, so tree parents can be accepted exactly like
+/// worker processes do.
+fn spawn_inprocess_workers(m: usize) -> Vec<String> {
+    let mut addrs = Vec::with_capacity(m);
+    for _ in 0..m {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        addrs.push(listener.local_addr().expect("local addr").to_string());
+        std::thread::spawn(move || {
+            // Clean exit on leader hangup; a bench must not panic the
+            // process on teardown races.
+            let _ = serve::serve_listener(listener);
+        });
+    }
+    addrs
+}
+
+fn cluster(ds: &Dataset, m: usize, topology: ExecTopology) -> TcpCluster {
+    let addrs = spawn_inprocess_workers(m);
+    TcpCluster::connect(
+        ds,
+        LossKind::Ridge,
+        0.01,
+        &addrs,
+        7,
+        NetModel::free(),
+        None,
+        None,
+        topology,
+    )
+    .expect("tcp cluster over in-process workers")
+}
+
+fn main() {
+    let b = Bencher::from_env(700, 120, 40);
+    println!("== wire_micro (codec d=512; collectives m in {{4,8,16}}) ==");
+
+    // ---- codec throughput -------------------------------------------
+    let d = 512usize;
+    let mut rng = Rng64::seed_from_u64(3);
+    let w: Arc<Vec<f64>> = Arc::new((0..d).map(|_| rng.normal()).collect());
+    let g: Arc<Vec<f64>> = Arc::new((0..d).map(|_| rng.normal()).collect());
+    let mut buf = Vec::new();
+
+    let grad_cmd = Command::GradLoss { w: w.clone(), out: Vec::new() };
+    b.bench("encode GradLoss d=512", || {
+        wire::encode_command(&grad_cmd, &mut buf).unwrap();
+        black_box(&buf);
+    });
+    wire::encode_command(&grad_cmd, &mut buf).unwrap();
+    let grad_body = buf[4..].to_vec();
+    b.bench("decode GradLoss d=512", || {
+        black_box(wire::decode_command(&grad_body).unwrap());
+    });
+
+    let solve_cmd = Command::DaneSolve {
+        w_prev: w.clone(),
+        g: g.clone(),
+        eta: 1.0,
+        mu: 0.01,
+        out: Vec::new(),
+    };
+    b.bench("encode DaneSolve d=512", || {
+        wire::encode_command(&solve_cmd, &mut buf).unwrap();
+        black_box(&buf);
+    });
+
+    let reply = Reply::VecScalar((0..d).map(|_| rng.normal()).collect(), 0.5);
+    b.bench("encode VecScalar reply d=512", || {
+        wire::encode_reply(&reply, &mut buf).unwrap();
+        black_box(&buf);
+    });
+    wire::encode_reply(&reply, &mut buf).unwrap();
+    let reply_body = buf[4..].to_vec();
+    b.bench("decode VecScalar reply d=512", || {
+        black_box(wire::decode_reply(&reply_body).unwrap());
+    });
+
+    // ---- one-collective round-trip latency --------------------------
+    // Small shards keep the compute share negligible, so the number is
+    // dominated by what we are measuring: frames on the wire and the
+    // leader's fan-out/fan-in strategy.
+    let strategies = [
+        ExecTopology::StarSeq,
+        ExecTopology::Star,
+        ExecTopology::Tree,
+    ];
+    for m in [4usize, 8, 16] {
+        let ds = synthetic_fig2(64 * m, 64, 0.005, 42);
+        let probe = vec![0.05; 64];
+        // reference result from the first strategy, to pin bit-parity
+        // across strategies while we are at it
+        let mut reference: Option<(Vec<f64>, f64)> = None;
+        for topo in strategies {
+            let mut c = cluster(&ds, m, topo);
+            let (g0, l0) = c.grad_and_loss(&probe).expect("collective");
+            match &reference {
+                None => reference = Some((g0, l0)),
+                Some((gr, lr)) => {
+                    assert_eq!(gr, &g0, "m={m} {}: gradient drifted", topo.name());
+                    assert_eq!(*lr, l0, "m={m} {}: loss drifted", topo.name());
+                }
+            }
+            b.bench(&format!("grad_and_loss m={m} {}", topo.name()), || {
+                black_box(c.grad_and_loss(&probe).expect("collective"));
+            });
+        }
+    }
+
+    // ---- strategy summary + JSON trajectory -------------------------
+    for m in [4usize, 8, 16] {
+        let seq = b.median_ns_of(&format!("grad_and_loss m={m} star-seq"));
+        let star = b.median_ns_of(&format!("grad_and_loss m={m} star"));
+        let tree = b.median_ns_of(&format!("grad_and_loss m={m} tree"));
+        if let (Some(seq), Some(star), Some(tree)) = (seq, star, tree) {
+            println!(
+                "m={m:<3} star-seq/star {:.2}x   star-seq/tree {:.2}x",
+                seq / star,
+                seq / tree
+            );
+        }
+    }
+    b.write_json(std::path::Path::new(BENCH_JSON), "wire_micro", &git_label())
+        .expect("write BENCH_wire.json");
+    println!("wrote {BENCH_JSON}");
+}

@@ -12,12 +12,22 @@
 //! TCP process cluster. Alongside the *modeled* figures, `CommStats`
 //! carries `wire_bytes` — bytes actually moved over a socket (zero on
 //! in-memory engines).
+//!
+//! [`topology`] makes the modeled topologies *executable*: the
+//! concurrent engines select sequential-star, parallel-star or
+//! binomial-tree-relay collective execution through
+//! [`topology::ExecTopology`], with the tree shape and the fixed-order
+//! reduction discipline (`topology::{TreePlan, RankGather}`) shared by
+//! both transports so traces stay bit-identical across the whole
+//! engine × topology matrix.
 
 pub mod collective;
 pub mod netmodel;
 pub mod roundchan;
+pub mod topology;
 pub mod wire;
 
 pub use collective::{Collective, CommStats};
 pub use netmodel::{NetModel, Topology};
 pub use roundchan::{round_channel, RoundReceiver, RoundSender};
+pub use topology::{ExecTopology, RankGather, TreePlan};

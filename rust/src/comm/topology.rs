@@ -1,0 +1,418 @@
+//! Transport-level collective topologies: how a round's fan-out and
+//! fan-in are *executed*, as opposed to how they are *modeled*
+//! ([`super::netmodel`]).
+//!
+//! The paper's premise is that communication rounds dominate wallclock;
+//! `netmodel` quantifies that with alpha-beta costs per topology. This
+//! module makes the topologies real: the concurrent engines
+//! (`coordinator::threaded`, `coordinator::tcp`) select one of three
+//! execution strategies through [`ExecTopology`] (config/CLI key
+//! `topology`):
+//!
+//! * **`star-seq`** — the historical baseline: the leader writes and
+//!   reads every worker sequentially, an O(m·B) critical path through
+//!   the root. Kept selectable so `benches/wire_micro.rs` can measure
+//!   what the other two strategies buy.
+//! * **`star`** (default) — parallel star: one I/O actor per
+//!   leader-adjacent connection (a socket-owning thread on `TcpCluster`;
+//!   on `ThreadedCluster` the per-worker worker threads already play
+//!   this role), so the m broadcast-writes and m gather-reads overlap
+//!   instead of serializing on the leader thread.
+//! * **`tree`** — binomial-tree relay: the leader talks only to its
+//!   O(log m) direct children; interior workers forward command frames
+//!   to their children and relay ordered reply bundles back up
+//!   ([`TreePlan`]).
+//!
+//! ## The fixed-order reduction guarantee
+//!
+//! Whatever the topology, the *numerical reduction* is always performed
+//! at the root, in worker-rank order, from buffered per-worker
+//! contributions ([`RankGather`]) — the same discipline as the
+//! deterministic `par_gram` kernel (fixed partials, fixed combine
+//! order). Interior tree nodes aggregate *ordered bundles* of their
+//! subtree's replies; they never combine floating-point values, because
+//! a tree-shaped numeric combine would change summation associativity
+//! and break the bit-exact serial ≡ threaded ≡ tcp trace parity the
+//! test suite pins. Consequently traces are bit-identical across the
+//! whole engine × topology matrix; only `modeled_seconds` (which
+//! switches on the configured topology — like for like with the
+//! execution strategy) and `wire_bytes` (transport-measured) differ.
+//!
+//! ## Tree shape
+//!
+//! The binomial broadcast tree over m workers + 1 leader, nodes
+//! numbered 0..=m with the leader at node 0 and worker rank r at node
+//! r + 1 (so worker 0 is always a direct child of the leader — the
+//! `dane_round_first` point-to-point path never needs relaying):
+//!
+//! * children(node k) = { k + 2^j : 2^j > k, k + 2^j <= m }
+//! * parent(node k)   = k with its highest set bit cleared
+//!
+//! which gives the leader ceil(log2(m+1)) direct links and depth
+//! O(log m) — the `2·log2(m)` critical path `netmodel::Topology::Tree`
+//! models.
+
+use super::netmodel::Topology;
+use super::wire::Reply;
+use crate::{Error, Result};
+
+/// Which execution strategy a concurrent engine uses for its
+/// collectives. Orthogonal to [`crate::config::EngineKind`] (which picks
+/// the transport) and mapped onto [`Topology`] for the modeled-seconds
+/// accounting via [`ExecTopology::net_topology`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecTopology {
+    /// Sequential star: leader-serialized per-worker I/O (baseline).
+    StarSeq,
+    /// Parallel star: per-connection I/O actors; writes/reads overlap.
+    #[default]
+    Star,
+    /// Binomial-tree relay: workers forward frames to child workers.
+    Tree,
+}
+
+impl ExecTopology {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecTopology::StarSeq => "star-seq",
+            ExecTopology::Star => "star",
+            ExecTopology::Tree => "tree",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s {
+            "star-seq" => Ok(ExecTopology::StarSeq),
+            "star" => Ok(ExecTopology::Star),
+            "tree" => Ok(ExecTopology::Tree),
+            other => Err(Error::Config(format!(
+                "unknown topology {other:?} (expected \"star\", \"star-seq\" or \"tree\")"
+            ))),
+        }
+    }
+
+    /// Topology named by the environment variable `var` (the figure
+    /// benches share `DANE_BENCH_TOPOLOGY`); unset = the default
+    /// parallel star, a set but invalid value is an error.
+    pub fn from_env(var: &str) -> Result<Self> {
+        match std::env::var(var) {
+            Ok(v) => Self::from_name(&v),
+            Err(std::env::VarError::NotPresent) => Ok(ExecTopology::default()),
+            Err(std::env::VarError::NotUnicode(_)) => {
+                Err(Error::Config(format!("{var} is not valid UTF-8")))
+            }
+        }
+    }
+
+    /// The network-model topology whose cost matches this execution
+    /// strategy. Both star strategies model as [`Topology::Star`]: the
+    /// parallel star overlaps the *leader thread's* work, but the
+    /// root's single link still serializes the traffic, which is
+    /// exactly what the alpha-beta star model charges.
+    pub fn net_topology(&self) -> Topology {
+        match self {
+            ExecTopology::StarSeq | ExecTopology::Star => Topology::Star,
+            ExecTopology::Tree => Topology::Tree,
+        }
+    }
+
+    pub fn is_tree(&self) -> bool {
+        matches!(self, ExecTopology::Tree)
+    }
+}
+
+/// The static shape of the binomial relay tree over `m` workers: who the
+/// leader talks to, who relays to whom, and the exact order replies
+/// travel upward. Both concurrent engines and the worker serve loop
+/// derive their relay behavior from one plan, so the frame-count
+/// discipline (every link carries exactly `ranks.len()` replies per
+/// round) can never drift between transports.
+#[derive(Debug, Clone)]
+pub struct TreePlan {
+    m: usize,
+    /// children[r] = worker r's child ranks, ascending.
+    children: Vec<Vec<usize>>,
+    /// For each leader-adjacent link: the worker ranks whose replies
+    /// travel over it, in up-relay (preorder) order. `root_links[l][0]`
+    /// is the root child itself; `root_links[0][0] == 0` always.
+    root_links: Vec<Vec<usize>>,
+}
+
+impl TreePlan {
+    /// Plan the binomial tree for `m >= 1` workers.
+    pub fn new(m: usize) -> Self {
+        assert!(m >= 1, "tree plan needs >= 1 worker");
+        let n = m + 1; // nodes: leader = 0, worker r = node r + 1
+        let mut children = vec![Vec::new(); m];
+        let mut roots = Vec::new();
+        for node in 1..n {
+            // children(k) = { k + 2^j : 2^j > k, k + 2^j < n }; node m is
+            // the largest, so the loop is bounded.
+            let mut p = 1usize;
+            while p <= node {
+                p <<= 1;
+            }
+            let rank = node - 1;
+            let mut cs = Vec::new();
+            while node + p <= m {
+                cs.push(node + p - 1); // child node -> child rank
+                p <<= 1;
+            }
+            children[rank] = cs;
+            // parent(node) = node with highest bit cleared; direct root
+            // children are the powers of two.
+            if node.is_power_of_two() {
+                roots.push(rank);
+            }
+        }
+        let mut plan = TreePlan { m, children, root_links: Vec::new() };
+        plan.root_links = roots
+            .into_iter()
+            .map(|r| plan.subtree_ranks(r))
+            .collect();
+        plan
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Worker `rank`'s children, ascending.
+    pub fn children_of(&self, rank: usize) -> &[usize] {
+        &self.children[rank]
+    }
+
+    /// The leader-adjacent links: per link, the ranks served through it
+    /// in up-relay (preorder) order.
+    pub fn root_links(&self) -> &[Vec<usize>] {
+        &self.root_links
+    }
+
+    /// Whether `rank` is a direct child of the leader.
+    pub fn is_root_child(&self, rank: usize) -> bool {
+        (rank + 1).is_power_of_two()
+    }
+
+    /// Preorder rank list of `rank`'s subtree: the rank itself, then
+    /// each child's subtree in child order. This is the exact order a
+    /// node sends replies upward, and therefore the order a parent (or
+    /// the leader) attributes incoming frames to ranks.
+    pub fn subtree_ranks(&self, rank: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.push_subtree(rank, &mut out);
+        out
+    }
+
+    fn push_subtree(&self, rank: usize, out: &mut Vec<usize>) {
+        out.push(rank);
+        for &c in &self.children[rank] {
+            self.push_subtree(c, out);
+        }
+    }
+
+    /// Total workers in `rank`'s subtree (itself included).
+    pub fn subtree_size(&self, rank: usize) -> usize {
+        1 + self
+            .children[rank]
+            .iter()
+            .map(|&c| self.subtree_size(c))
+            .sum::<usize>()
+    }
+}
+
+/// Rank-slotted reply buffer enforcing the fixed-order reduction
+/// discipline: replies arrive in whatever order the links deliver them,
+/// land in their rank's slot, and the caller folds the slots 0..m in
+/// rank order — bit-identical to the serial engine's inline left fold
+/// regardless of topology or arrival order.
+///
+/// Error discipline matches the engines' historical drain-then-fail
+/// contract: every link is drained before anything surfaces, and the
+/// error reported is the one belonging to the **lowest rank** (the
+/// first the serial engine would have hit). Worker-side
+/// [`Reply::Err`] frames are converted to [`Error::Runtime`] here, so
+/// both engines name failed workers identically.
+pub struct RankGather {
+    slots: Vec<Option<Reply>>,
+    first_err: Option<(usize, Error)>,
+}
+
+impl RankGather {
+    pub fn new(m: usize) -> Self {
+        RankGather { slots: (0..m).map(|_| None).collect(), first_err: None }
+    }
+
+    /// Record worker `rank`'s reply (or the transport error that stands
+    /// in for it).
+    pub fn put(&mut self, rank: usize, reply: Result<Reply>) {
+        let err = match reply {
+            Ok(Reply::Err(msg)) => {
+                Error::Runtime(format!("worker {rank}: {msg}"))
+            }
+            Ok(r) => {
+                if self.slots[rank].is_none() {
+                    self.slots[rank] = Some(r);
+                } else if self.first_err.is_none() {
+                    self.first_err = Some((
+                        rank,
+                        Error::Runtime(format!("worker {rank}: duplicate reply")),
+                    ));
+                }
+                return;
+            }
+            Err(e) => e,
+        };
+        match &self.first_err {
+            Some((r, _)) if *r <= rank => {}
+            _ => self.first_err = Some((rank, err)),
+        }
+    }
+
+    /// Lowest-rank error recorded so far, if any.
+    pub fn failed(&self) -> bool {
+        self.first_err.is_some()
+    }
+
+    /// Finish the gather: the lowest-rank error if any reply failed,
+    /// otherwise every worker's reply in rank order. A silently missing
+    /// slot is a protocol violation and fails too — the frame-count
+    /// discipline means it can only happen through an engine bug.
+    pub fn into_result(self) -> Result<Vec<Reply>> {
+        if let Some((_, e)) = self.first_err {
+            return Err(e);
+        }
+        let mut out = Vec::with_capacity(self.slots.len());
+        for (rank, s) in self.slots.into_iter().enumerate() {
+            match s {
+                Some(r) => out.push(r),
+                None => {
+                    return Err(Error::Runtime(format!(
+                        "collective gather: no reply slotted for worker {rank}"
+                    )))
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_topology_names_roundtrip() {
+        for t in [ExecTopology::StarSeq, ExecTopology::Star, ExecTopology::Tree] {
+            assert_eq!(ExecTopology::from_name(t.name()).unwrap(), t);
+        }
+        assert!(ExecTopology::from_name("ring").is_err());
+        assert_eq!(ExecTopology::default(), ExecTopology::Star);
+        assert_eq!(ExecTopology::Tree.net_topology(), Topology::Tree);
+        assert_eq!(ExecTopology::Star.net_topology(), Topology::Star);
+        assert_eq!(ExecTopology::StarSeq.net_topology(), Topology::Star);
+    }
+
+    #[test]
+    fn tree_m4_shape() {
+        // nodes 0..=4: children(0)={1,2,4}, children(1)={3} =>
+        // root links: workers 0 (with child 2), 1, 3.
+        let p = TreePlan::new(4);
+        assert_eq!(p.root_links(), &[vec![0, 2], vec![1], vec![3]]);
+        assert_eq!(p.children_of(0), &[2]);
+        assert_eq!(p.children_of(1), &[] as &[usize]);
+        assert_eq!(p.children_of(2), &[] as &[usize]);
+        assert_eq!(p.children_of(3), &[] as &[usize]);
+        assert!(p.is_root_child(0) && p.is_root_child(1) && p.is_root_child(3));
+        assert!(!p.is_root_child(2));
+    }
+
+    #[test]
+    fn tree_m8_preorder_and_sizes() {
+        // nodes 0..=8: root children are nodes {1,2,4,8} = ranks
+        // {0,1,3,7}; children(1)={3,5}, children(2)={6}, children(3)={7}
+        // at node level => ranks: 0->{2,4}, 1->{5}, 2->{6}.
+        let p = TreePlan::new(8);
+        assert_eq!(p.children_of(0), &[2, 4]);
+        assert_eq!(p.children_of(1), &[5]);
+        assert_eq!(p.children_of(2), &[6]);
+        assert_eq!(p.children_of(3), &[] as &[usize]);
+        assert_eq!(
+            p.root_links(),
+            &[vec![0, 2, 6, 4], vec![1, 5], vec![3], vec![7]]
+        );
+        assert_eq!(p.subtree_size(0), 4);
+        assert_eq!(p.subtree_size(2), 2);
+        assert_eq!(p.subtree_ranks(0), vec![0, 2, 6, 4]);
+    }
+
+    #[test]
+    fn every_rank_appears_exactly_once_across_root_links() {
+        for m in 1..=33 {
+            let p = TreePlan::new(m);
+            let mut seen = vec![0usize; m];
+            for link in p.root_links() {
+                assert!(!link.is_empty());
+                assert!(p.is_root_child(link[0]));
+                for &r in link {
+                    seen[r] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "m={m}: {seen:?}");
+            // leader degree is logarithmic: ceil(log2(m+1))
+            let deg = p.root_links().len();
+            assert!(1 << (deg - 1) <= m && (1usize << deg) > m, "m={m} deg={deg}");
+            // worker 0 heads the first link — dane_round_first never relays
+            assert_eq!(p.root_links()[0][0], 0);
+            // parent/child consistency: each child appears once
+            let mut child_seen = vec![0usize; m];
+            for r in 0..m {
+                for &c in p.children_of(r) {
+                    assert!(c > r, "child rank must exceed parent rank");
+                    child_seen[c] += 1;
+                }
+            }
+            for r in 0..m {
+                let expected = usize::from(!p.is_root_child(r));
+                assert_eq!(child_seen[r], expected, "m={m} rank={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_tree_degenerates_to_one_link() {
+        let p = TreePlan::new(1);
+        assert_eq!(p.root_links(), &[vec![0]]);
+        assert_eq!(p.children_of(0), &[] as &[usize]);
+    }
+
+    #[test]
+    fn rank_gather_orders_and_reports_lowest_rank_error() {
+        let mut g = RankGather::new(3);
+        g.put(2, Ok(Reply::Scalar(2.0)));
+        g.put(0, Ok(Reply::Scalar(0.0)));
+        g.put(1, Ok(Reply::Scalar(1.0)));
+        let out = g.into_result().unwrap();
+        for (i, r) in out.iter().enumerate() {
+            match r {
+                Reply::Scalar(x) => assert_eq!(*x, i as f64),
+                _ => panic!("wrong variant"),
+            }
+        }
+
+        let mut g = RankGather::new(3);
+        g.put(2, Err(Error::Runtime("late".into())));
+        g.put(0, Ok(Reply::Scalar(0.0)));
+        g.put(1, Ok(Reply::Err("boom".into())));
+        assert!(g.failed());
+        let e = g.into_result().unwrap_err().to_string();
+        assert!(e.contains("worker 1") && e.contains("boom"), "{e}");
+    }
+
+    #[test]
+    fn rank_gather_missing_slot_is_an_error() {
+        let mut g = RankGather::new(2);
+        g.put(0, Ok(Reply::Scalar(0.0)));
+        let e = g.into_result().unwrap_err().to_string();
+        assert!(e.contains("no reply slotted for worker 1"), "{e}");
+    }
+}

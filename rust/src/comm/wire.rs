@@ -66,6 +66,9 @@ const CMD_DANE_SOLVE: u8 = 0x04;
 const CMD_PROX: u8 = 0x05;
 const CMD_ERM: u8 = 0x06;
 const CMD_ROW_SQ: u8 = 0x07;
+const CMD_PEERS: u8 = 0x08;
+const CMD_PROX_ALL: u8 = 0x09;
+const CMD_FOR: u8 = 0x0a;
 
 const REP_VEC: u8 = 0x81;
 const REP_SCALAR: u8 = 0x82;
@@ -93,6 +96,34 @@ pub struct InitPayload {
     pub gram_threads: Option<usize>,
     /// This worker's slice of the data.
     pub shard: Shard,
+}
+
+/// One child entry of a [`Command::Peers`] frame: everything a relay
+/// node needs to serve one downstream link.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PeerChild {
+    /// The child worker's rank.
+    pub rank: usize,
+    /// Where to open the worker-to-worker round connection.
+    pub addr: String,
+    /// Preorder rank list of the child's whole subtree
+    /// ([`crate::comm::topology::TreePlan::subtree_ranks`]): both the
+    /// number of reply frames to expect from the child each round and
+    /// the order they are attributed to ranks on the way up.
+    pub ranks: Vec<usize>,
+}
+
+/// Tree-relay setup payload (TCP transport only): sent to every worker
+/// after Init, before the first round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PeersPayload {
+    /// Downstream links this worker must open and relay over (empty for
+    /// leaves).
+    pub children: Vec<PeerChild>,
+    /// True when the worker's round-plane parent is another worker: the
+    /// leader closes the setup connection after the ack, and the worker
+    /// accepts its parent's connection from its listener.
+    pub expect_parent: bool,
 }
 
 /// Commands the leader broadcasts to workers — the collective surface of
@@ -128,6 +159,54 @@ pub enum Command {
     Erm { subsample: Option<(f64, u64)> },
     /// Mean squared row norm of the shard -> `Reply::Scalar`.
     RowSq,
+    /// Tree-relay setup: which child workers to open round connections
+    /// to (TCP transport only). Acknowledged with `Reply::Scalar(0.0)`.
+    Peers(Box<PeersPayload>),
+    /// ADMM proximal step with *all* per-worker targets broadcast in one
+    /// frame: each worker picks `targets[its rank]`. The tree topology's
+    /// uniform relay shape for the one per-worker-payload collective
+    /// (star topologies keep per-worker [`Command::Prox`] frames) ->
+    /// `Reply::Vec`.
+    ProxAll { targets: Vec<Vec<f64>>, rho: f64 },
+    /// Point-to-point envelope: only worker `rank` executes `inner`;
+    /// relay nodes route the frame toward it and pipe the single reply
+    /// back up, so a tree round can address one worker without waking
+    /// the rest (the Theorem-5 `dane_round_first` path). `inner` must
+    /// itself be a compute command — nesting `For` (or the setup
+    /// frames) is rejected by the codec.
+    For { rank: usize, inner: Box<Command> },
+}
+
+impl Command {
+    /// Clone for relaying to another worker: broadcast `Arc` payloads
+    /// are shared, leader-loaned reply buffers (`out`) never propagate
+    /// (each receiver allocates its own reply).
+    pub fn relay_copy(&self) -> Command {
+        match self {
+            Command::Init(p) => Command::Init(p.clone()),
+            Command::GradLoss { w, out: _ } => {
+                Command::GradLoss { w: w.clone(), out: Vec::new() }
+            }
+            Command::Loss { w } => Command::Loss { w: w.clone() },
+            Command::DaneSolve { w_prev, g, eta, mu, out: _ } => Command::DaneSolve {
+                w_prev: w_prev.clone(),
+                g: g.clone(),
+                eta: *eta,
+                mu: *mu,
+                out: Vec::new(),
+            },
+            Command::Prox { v, rho } => Command::Prox { v: v.clone(), rho: *rho },
+            Command::Erm { subsample } => Command::Erm { subsample: *subsample },
+            Command::RowSq => Command::RowSq,
+            Command::Peers(p) => Command::Peers(p.clone()),
+            Command::ProxAll { targets, rho } => {
+                Command::ProxAll { targets: targets.clone(), rho: *rho }
+            }
+            Command::For { rank, inner } => {
+                Command::For { rank: *rank, inner: Box::new(inner.relay_copy()) }
+            }
+        }
+    }
 }
 
 /// Worker replies, one per command. `Err` carries the worker-side
@@ -152,6 +231,15 @@ pub enum Reply {
 /// reject.
 pub fn encode_command(cmd: &Command, buf: &mut Vec<u8>) -> Result<()> {
     begin_frame(buf);
+    put_command_body(cmd, buf, true)?;
+    end_frame(buf)
+}
+
+/// Append one command's tag + payload (no frame header). `envelope`
+/// permits the `For` wrapper at this level; it is cleared for the nested
+/// command so envelopes (and, by the same guard, setup frames) cannot
+/// nest.
+fn put_command_body(cmd: &Command, buf: &mut Vec<u8>, envelope: bool) -> Result<()> {
     match cmd {
         Command::Init(p) => {
             buf.push(CMD_INIT);
@@ -199,8 +287,44 @@ pub fn encode_command(cmd: &Command, buf: &mut Vec<u8>) -> Result<()> {
             }
         }
         Command::RowSq => buf.push(CMD_ROW_SQ),
+        Command::Peers(p) => {
+            buf.push(CMD_PEERS);
+            put_u64(buf, p.children.len() as u64);
+            for c in &p.children {
+                put_u64(buf, c.rank as u64);
+                put_str(buf, &c.addr);
+                put_u64(buf, c.ranks.len() as u64);
+                for &r in &c.ranks {
+                    put_u64(buf, r as u64);
+                }
+            }
+            buf.push(u8::from(p.expect_parent));
+        }
+        Command::ProxAll { targets, rho } => {
+            buf.push(CMD_PROX_ALL);
+            put_u64(buf, targets.len() as u64);
+            for t in targets {
+                put_vec(buf, t);
+            }
+            put_f64(buf, *rho);
+        }
+        Command::For { rank, inner } => {
+            if !envelope
+                || matches!(
+                    **inner,
+                    Command::For { .. } | Command::Init(_) | Command::Peers(_)
+                )
+            {
+                return Err(Error::Config(
+                    "wire: For may only wrap a top-level compute command".into(),
+                ));
+            }
+            buf.push(CMD_FOR);
+            put_u64(buf, *rank as u64);
+            put_command_body(inner, buf, false)?;
+        }
     }
-    end_frame(buf)
+    Ok(())
 }
 
 /// Encode a full reply frame (length prefix included) into `buf`; same
@@ -427,6 +551,14 @@ fn check_version(cur: &mut Cur) -> Result<u8> {
 pub fn decode_command(body: &[u8]) -> Result<Command> {
     let mut cur = Cur::new(body);
     let tag = check_version(&mut cur)?;
+    let cmd = take_command(&mut cur, tag, true)?;
+    cur.done()?;
+    Ok(cmd)
+}
+
+/// Decode one command's payload given its already-read `tag`.
+/// `envelope` permits `For` at this level only (no nesting).
+fn take_command(cur: &mut Cur, tag: u8, envelope: bool) -> Result<Command> {
     let cmd = match tag {
         CMD_INIT => {
             let worker_id = cur.u64()? as usize;
@@ -480,9 +612,65 @@ pub fn decode_command(body: &[u8]) -> Result<Command> {
             Command::Erm { subsample }
         }
         CMD_ROW_SQ => Command::RowSq,
+        CMD_PEERS => {
+            // each child carries at least rank(8) + addr len(4) +
+            // ranks count(8) = 20 bytes
+            let n = cur.count(20, "peers children")?;
+            let mut children = Vec::with_capacity(n);
+            for _ in 0..n {
+                let rank = cur.u64()? as usize;
+                let addr = cur.string()?;
+                let k = cur.count(8, "peer subtree")?;
+                let mut ranks = Vec::with_capacity(k);
+                for _ in 0..k {
+                    ranks.push(cur.u64()? as usize);
+                }
+                if ranks.first() != Some(&rank) {
+                    return Err(Error::Config(format!(
+                        "wire: peer subtree must start at its root \
+                         (child {rank}, got {:?})",
+                        ranks.first()
+                    )));
+                }
+                children.push(PeerChild { rank, addr, ranks });
+            }
+            let expect_parent = match cur.u8()? {
+                0 => false,
+                1 => true,
+                b => {
+                    return Err(Error::Config(format!(
+                        "wire: bad expect_parent marker {b}"
+                    )))
+                }
+            };
+            Command::Peers(Box::new(PeersPayload { children, expect_parent }))
+        }
+        CMD_PROX_ALL => {
+            // each target carries at least its own u64 length
+            let n = cur.count(8, "prox targets")?;
+            let mut targets = Vec::with_capacity(n);
+            for _ in 0..n {
+                targets.push(cur.vec_f64()?);
+            }
+            let rho = cur.f64()?;
+            Command::ProxAll { targets, rho }
+        }
+        CMD_FOR if envelope => {
+            let rank = cur.u64()? as usize;
+            let inner_tag = cur.u8()?;
+            if matches!(inner_tag, CMD_INIT | CMD_PEERS) {
+                return Err(Error::Config(
+                    "wire: For may only wrap a compute command".into(),
+                ));
+            }
+            let inner = take_command(cur, inner_tag, false)?;
+            Command::For { rank, inner: Box::new(inner) }
+        }
+        CMD_FOR => {
+            return Err(Error::Config("wire: nested For envelope".into()))
+        }
         t => return Err(Error::Config(format!("wire: unknown command tag {t:#x}"))),
     };
-    cur.done()?;
     Ok(cmd)
 }
 
@@ -736,6 +924,103 @@ mod tests {
         frame.extend_from_slice(&[0; 16]);
         let mut body = Vec::new();
         assert!(read_frame(&mut frame.as_slice(), &mut body).is_err());
+    }
+
+    #[test]
+    fn peers_and_prox_all_roundtrip() {
+        let p = PeersPayload {
+            children: vec![
+                PeerChild {
+                    rank: 2,
+                    addr: "127.0.0.1:4471".into(),
+                    ranks: vec![2, 6],
+                },
+                PeerChild { rank: 4, addr: "10.0.0.3:9".into(), ranks: vec![4] },
+            ],
+            expect_parent: true,
+        };
+        let mut buf = Vec::new();
+        encode_command(&Command::Peers(Box::new(p.clone())), &mut buf).unwrap();
+        match decode_command(&buf[4..]).unwrap() {
+            Command::Peers(q) => assert_eq!(*q, p),
+            _ => panic!("wrong variant"),
+        }
+
+        let targets = vec![vec![1.0, f64::NAN], vec![-0.0, 2.0]];
+        encode_command(&Command::ProxAll { targets: targets.clone(), rho: 0.3 }, &mut buf)
+            .unwrap();
+        match decode_command(&buf[4..]).unwrap() {
+            Command::ProxAll { targets: t, rho } => {
+                assert_eq!(rho, 0.3);
+                assert_eq!(t.len(), 2);
+                assert_eq!(t[0][1].to_bits(), f64::NAN.to_bits());
+                assert_eq!(t[1], vec![-0.0, 2.0]);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn for_envelope_roundtrips_and_rejects_nesting() {
+        let inner = Command::DaneSolve {
+            w_prev: Arc::new(vec![1.0]),
+            g: Arc::new(vec![2.0]),
+            eta: 1.0,
+            mu: 0.0,
+            out: vec![9.0], // loaned buffer must not survive the wire
+        };
+        let cmd = Command::For { rank: 5, inner: Box::new(inner) };
+        let mut buf = Vec::new();
+        encode_command(&cmd, &mut buf).unwrap();
+        match decode_command(&buf[4..]).unwrap() {
+            Command::For { rank, inner } => {
+                assert_eq!(rank, 5);
+                match *inner {
+                    Command::DaneSolve { ref w_prev, ref out, .. } => {
+                        assert_eq!(**w_prev, vec![1.0]);
+                        assert!(out.is_empty());
+                    }
+                    _ => panic!("inner variant changed"),
+                }
+            }
+            _ => panic!("wrong variant"),
+        }
+
+        // nesting an envelope (or a setup frame) inside For is rejected
+        // on the encode side...
+        let nested = Command::For {
+            rank: 0,
+            inner: Box::new(Command::For { rank: 1, inner: Box::new(Command::RowSq) }),
+        };
+        assert!(encode_command(&nested, &mut buf).is_err());
+        let setup = Command::For {
+            rank: 0,
+            inner: Box::new(Command::Peers(Box::new(PeersPayload {
+                children: Vec::new(),
+                expect_parent: false,
+            }))),
+        };
+        assert!(encode_command(&setup, &mut buf).is_err());
+        // ...and a handcrafted nested frame is rejected on decode.
+        let mut body = vec![WIRE_VERSION, 0x0a];
+        body.extend_from_slice(&0u64.to_le_bytes());
+        body.push(0x0a); // inner tag: For again
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.push(0x07); // RowSq
+        assert!(decode_command(&body).is_err());
+    }
+
+    #[test]
+    fn relay_copy_shares_arcs_and_drops_loans() {
+        let w = Arc::new(vec![1.0, 2.0]);
+        let cmd = Command::GradLoss { w: w.clone(), out: vec![0.0; 2] };
+        match cmd.relay_copy() {
+            Command::GradLoss { w: w2, out } => {
+                assert!(Arc::ptr_eq(&w, &w2), "broadcast payload must be shared");
+                assert!(out.is_empty(), "loaned buffer must not be copied");
+            }
+            _ => panic!("wrong variant"),
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! binaries build runs from these structs; benches construct them in
 //! code. Defaults reproduce the paper's settings.
 
-use crate::comm::{NetModel, Topology};
+use crate::comm::{ExecTopology, NetModel, Topology};
 use crate::util::Json;
 use crate::{Error, Result};
 use std::path::Path;
@@ -370,6 +370,18 @@ pub struct ExperimentConfig {
     /// datasets (astro-like, libsvm) the override is a documented
     /// no-op. None = the built-in size ladder.
     pub threads: Option<usize>,
+    /// Collective execution topology for the concurrent engines
+    /// (`"star"` = parallel star, `"star-seq"` = the leader-serialized
+    /// baseline, `"tree"` = binomial relay). When set, the network
+    /// model's topology follows it ([`ExperimentConfig::effective_net`])
+    /// so modeled and measured wallclock compare like with like; when
+    /// absent (`None`) execution defaults to the parallel star and the
+    /// `net.topology` key alone drives the model (legacy behavior).
+    /// The serial engine executes inline either way — for it the key
+    /// only selects the model, which is what makes a serial run's trace
+    /// bit-comparable to a tree run's. Traces are bit-identical across
+    /// topologies regardless; only `modeled_seconds`/`wire_bytes` move.
+    pub topology: Option<ExecTopology>,
     /// Evaluate test loss each round (fig. 4).
     pub eval_test: bool,
     pub net: NetConfig,
@@ -401,6 +413,10 @@ impl ExperimentConfig {
             (
                 "threads",
                 self.threads.map(|t| Json::num(t as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "topology",
+                self.topology.map(|t| Json::str(t.name())).unwrap_or(Json::Null),
             ),
             ("eval_test", Json::Bool(self.eval_test)),
             (
@@ -468,6 +484,12 @@ impl ExperimentConfig {
                 Error::Config("threads must be a nonneg int".into())
             })?),
         };
+        let topology = match v.get("topology") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(ExecTopology::from_name(t.as_str().ok_or_else(
+                || Error::Config("topology must be a string".into()),
+            )?)?),
+        };
         let eval_test = v.get("eval_test").and_then(|x| x.as_bool()).unwrap_or(false);
         let net = match v.get("net") {
             Some(n) => {
@@ -498,9 +520,29 @@ impl ExperimentConfig {
             engine,
             workers,
             threads,
+            topology,
             eval_test,
             net,
         })
+    }
+
+    /// The collective execution topology the concurrent engines run
+    /// (default: parallel star).
+    pub fn exec_topology(&self) -> ExecTopology {
+        self.topology.unwrap_or_default()
+    }
+
+    /// The network model the run is accounted under. An explicit
+    /// `topology` key overrides the model's topology to match the
+    /// execution strategy, so `modeled_seconds` and measured wallclock
+    /// describe the same collective algorithm; without it the
+    /// `net.topology` key stands alone (legacy configs keep their
+    /// numbers).
+    pub fn effective_net(&self) -> NetModel {
+        match self.topology {
+            Some(t) => NetModel::new(self.net.alpha, self.net.beta, t.net_topology()),
+            None => self.net.build(),
+        }
     }
 
     pub fn from_json_str(s: &str) -> Result<Self> {
@@ -598,6 +640,7 @@ mod tests {
             engine: EngineKind::Serial,
             workers: None,
             threads: None,
+            topology: None,
             eval_test: false,
             net: NetConfig::free(),
         }
@@ -630,6 +673,47 @@ mod tests {
         assert_eq!(c.engine, EngineKind::Serial); // default
         assert_eq!(c.threads, None); // default
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn topology_roundtrips_and_drives_the_net_model() {
+        for topo in [
+            None,
+            Some(ExecTopology::StarSeq),
+            Some(ExecTopology::Star),
+            Some(ExecTopology::Tree),
+        ] {
+            let mut c = sample();
+            c.engine = EngineKind::Threaded;
+            c.topology = topo;
+            c.net = NetConfig::datacenter(); // net.topology = Ring
+            let c2 = ExperimentConfig::from_json_str(&c.to_json_string()).unwrap();
+            assert_eq!(c2.topology, topo);
+            c2.validate().unwrap();
+            // an explicit topology key overrides the model's topology;
+            // absent, the net config stands alone (legacy behavior)
+            let expect = match topo {
+                None => Topology::Ring,
+                Some(t) => t.net_topology(),
+            };
+            assert_eq!(c2.effective_net().topology, expect);
+            assert_eq!(c2.effective_net().alpha, c2.net.alpha);
+            assert_eq!(c2.exec_topology(), topo.unwrap_or(ExecTopology::Star));
+        }
+        // handwritten key + bad value
+        let s = sample()
+            .to_json_string()
+            .replacen("\"topology\": null", "\"topology\": \"tree\"", 1);
+        let c = ExperimentConfig::from_json_str(&s).unwrap();
+        assert_eq!(c.topology, Some(ExecTopology::Tree));
+        let s = sample()
+            .to_json_string()
+            .replacen("\"topology\": null", "\"topology\": \"ring\"", 1);
+        assert!(ExperimentConfig::from_json_str(&s).is_err());
+        let s = sample()
+            .to_json_string()
+            .replacen("\"topology\": null", "\"topology\": 3", 1);
+        assert!(ExperimentConfig::from_json_str(&s).is_err());
     }
 
     #[test]

@@ -90,7 +90,7 @@ fn run_loop(
                 s
             })
             .collect();
-        *z = cluster.allreduce_mean_vecs(&sums);
+        *z = cluster.allreduce_mean_vecs(&sums)?;
 
         // Dual updates.
         for (ui, wi) in u.iter_mut().zip(&w_all) {

@@ -38,10 +38,14 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunResult> {
     run_experiment_with_artifacts(cfg, None)
 }
 
-/// Build the configured engine over `ds`. The shard seed and the
-/// `threads` override are identical across engines, so a threaded run
-/// of the same config is trace-identical to a serial one
-/// (smoke_cluster_parity pins this through the driver).
+/// Build the configured engine over `ds`. The shard seed, the `threads`
+/// override and the execution topology are identical across engines, so
+/// a threaded or tcp run of the same config — under *any* topology — is
+/// trace-identical to a serial one (smoke_cluster_parity and
+/// topology_parity pin this through the driver). The network model
+/// comes from [`ExperimentConfig::effective_net`], so an explicit
+/// `topology` key keeps `modeled_seconds` on the same collective
+/// algorithm the transport actually executes.
 fn build_cluster(
     cfg: &ExperimentConfig,
     ds: &crate::data::Dataset,
@@ -49,10 +53,14 @@ fn build_cluster(
     artifact_dir: Option<&Path>,
 ) -> Result<Box<dyn Cluster>> {
     let shard_seed = cfg.seed.wrapping_add(1);
+    let net = cfg.effective_net();
+    let topology = cfg.exec_topology();
     Ok(match cfg.engine {
+        // The serial engine executes inline whatever the topology; the
+        // key still drove `net` above, keeping its modeled columns
+        // comparable to any concurrent engine's run.
         EngineKind::Serial => {
-            let mut c =
-                SerialCluster::with_net(ds, obj, cfg.machines, shard_seed, cfg.net.build());
+            let mut c = SerialCluster::with_net(ds, obj, cfg.machines, shard_seed, net);
             c.set_gram_threads(cfg.threads);
             if cfg.backend == BackendKind::Pjrt {
                 let dir = artifact_dir.unwrap_or_else(|| Path::new("artifacts"));
@@ -62,13 +70,14 @@ fn build_cluster(
             Box::new(c)
         }
         // validate() rejects non-serial + pjrt, so no backend switch here.
-        EngineKind::Threaded => Box::new(ThreadedCluster::with_net_threads(
+        EngineKind::Threaded => Box::new(ThreadedCluster::with_topology(
             ds,
             obj,
             cfg.machines,
             shard_seed,
-            cfg.net.build(),
+            net,
             cfg.threads,
+            topology,
         )),
         // Worker processes rebuild the objective from (loss, lambda) in
         // their Init frame; the leader-side copy in `obj` is dropped.
@@ -82,9 +91,10 @@ fn build_cluster(
                 cfg.lambda,
                 addrs,
                 shard_seed,
-                cfg.net.build(),
+                net,
                 cfg.threads,
                 None,
+                topology,
             )?),
             None => Box::new(TcpCluster::self_hosted(
                 ds,
@@ -92,9 +102,10 @@ fn build_cluster(
                 cfg.lambda,
                 cfg.machines,
                 shard_seed,
-                cfg.net.build(),
+                net,
                 cfg.threads,
                 None,
+                topology,
             )?),
         },
     })
@@ -210,6 +221,7 @@ mod tests {
             engine: EngineKind::Serial,
             workers: None,
             threads: None,
+            topology: None,
             eval_test: false,
             net: NetConfig { alpha: 0.0, beta: 0.0, topology: Topology::Star },
         }
@@ -255,6 +267,27 @@ mod tests {
         ] {
             let mut cfg = base_cfg(algo);
             cfg.engine = EngineKind::Threaded;
+            cfg.rounds = 5;
+            cfg.tol = 1e-3;
+            let res = run_experiment(&cfg).unwrap();
+            assert!(!res.trace.is_empty(), "{}", res.algo);
+        }
+    }
+
+    #[test]
+    fn every_algorithm_dispatches_on_threaded_tree() {
+        use crate::comm::ExecTopology;
+        for algo in [
+            AlgoConfig::Dane { eta: 1.0, mu_over_lambda: 0.0 },
+            AlgoConfig::Gd { step: None },
+            AlgoConfig::Agd { step: None },
+            AlgoConfig::Admm { rho: 0.1 },
+            AlgoConfig::Osa { bias_correction_r: Some(0.5) },
+            AlgoConfig::Lbfgs { history: 5 },
+        ] {
+            let mut cfg = base_cfg(algo);
+            cfg.engine = EngineKind::Threaded;
+            cfg.topology = Some(ExecTopology::Tree);
             cfg.rounds = 5;
             cfg.tol = 1e-3;
             let res = run_experiment(&cfg).unwrap();

@@ -137,9 +137,10 @@ impl Cluster for FaultInjectCluster {
         self.inner.local_erms(subsample)
     }
 
-    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Vec<f64> {
+    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Result<Vec<f64>> {
         // Leader-local reduction of vectors already in hand — no worker
-        // involvement, so the fault cannot fire here.
+        // involvement, so the fault cannot fire here (the inner engine
+        // may still fail it on its own terms).
         self.inner.allreduce_mean_vecs(vecs)
     }
 
@@ -216,7 +217,7 @@ mod tests {
         // metadata and leader-side averaging still work on a dead cluster
         assert_eq!(c.m(), 2);
         assert_eq!(c.dim(), 5);
-        let mean = c.allreduce_mean_vecs(&[vec![1.0; 5], vec![3.0; 5]]);
+        let mean = c.allreduce_mean_vecs(&[vec![1.0; 5], vec![3.0; 5]]).unwrap();
         assert_eq!(mean, vec![2.0; 5]);
     }
 }

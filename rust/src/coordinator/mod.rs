@@ -93,8 +93,12 @@ pub trait Cluster {
     fn local_erms(&mut self, subsample: Option<(f64, u64)>)
         -> Result<(Vec<Vec<f64>>, Option<Vec<Vec<f64>>>)>;
 
-    /// Average per-worker vectors — ONE allreduce.
-    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Vec<f64>;
+    /// Average per-worker vectors — ONE allreduce. The reduction itself
+    /// is leader-local (the inputs are already in hand), but the round
+    /// it accounts for is a real collective, and exotic engines may
+    /// fail it — `Result` keeps the whole trait on the PR-3 error
+    /// contract (no collective method panics on a dead cluster).
+    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Result<Vec<f64>>;
 
     /// Mean squared row norm of the data, for smoothness upper bounds —
     /// ONE allreduce (computed once, then cached). Worker death
@@ -467,11 +471,11 @@ impl Cluster for SerialCluster {
         Ok((full, sub))
     }
 
-    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Vec<f64> {
+    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Result<Vec<f64>> {
         let mut out = vec![0.0; self.d];
         let views: Vec<&[f64]> = vecs.iter().map(|v| v.as_slice()).collect();
         self.comm.allreduce_mean(&views, &mut out);
-        out
+        Ok(out)
     }
 
     fn avg_row_sq_norm(&mut self) -> Result<f64> {
@@ -586,7 +590,7 @@ mod tests {
         let ds = tiny_dataset(32, 4, 5);
         let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
         let mut cluster = SerialCluster::new(&ds, obj, 2, 2);
-        let out = cluster.allreduce_mean_vecs(&[vec![1.0; 4], vec![3.0; 4]]);
+        let out = cluster.allreduce_mean_vecs(&[vec![1.0; 4], vec![3.0; 4]]).unwrap();
         assert_eq!(out, vec![2.0; 4]);
         assert_eq!(cluster.comm_stats().rounds, 1);
     }

@@ -72,7 +72,7 @@ fn run_inner(
             .collect(),
         _ => full,
     };
-    *w = cluster.allreduce_mean_vecs(&combined);
+    *w = cluster.allreduce_mean_vecs(&combined)?;
 
     let loss = cluster.eval_loss(w)?;
     let subopt = ctx.subopt(loss);

@@ -1,4 +1,5 @@
-//! TCP process-cluster engine: the round protocol over real sockets.
+//! TCP process-cluster engine: the round protocol over real sockets,
+//! with topology-aware collective execution.
 //!
 //! Where [`super::SerialCluster`] drives workers inline and
 //! [`super::threaded::ThreadedCluster`] runs them on OS threads,
@@ -17,33 +18,57 @@
 //!   the `DANE_WORKER_BIN` env var (the test harness points it at the
 //!   compiled `dane` bin).
 //!
-//! Workers receive their shard, objective and Gram-thread override in a
-//! [`wire::Command::Init`] frame, so worker processes need no config
-//! file and the leader remains the single source of sharding truth —
-//! the same `shard_dataset(ds, m, seed)` call as the in-memory engines,
-//! which is what makes a TCP run **trace-bit-identical** to a serial run
-//! of the same config (`tests/tcp_cluster.rs` pins this through
+//! ## Collective execution ([`ExecTopology`])
+//!
+//! The transport executes rounds under one of three strategies:
+//!
+//! * **`star-seq`** — the leader writes and reads every worker socket
+//!   sequentially on its own thread: an O(m·B) critical path through
+//!   the leader, kept as the measurable baseline;
+//! * **`star`** (default) — one socket-owning I/O thread per worker
+//!   connection: the m broadcast-writes and m gather-reads overlap, so
+//!   the leader-thread critical path stops scaling with m;
+//! * **`tree`** — binomial relay: the leader keeps connections only to
+//!   its O(log m) direct children ([`TreePlan`]); a `Peers` frame
+//!   tells every worker which child workers to open round connections
+//!   to, interior workers relay command frames down and preorder reply
+//!   bundles up, and workers whose parent is another worker accept the
+//!   parent's connection from their own listener after the leader
+//!   closes the setup connection.
+//!
+//! Whatever the strategy, replies land in rank-indexed slots and the
+//! numeric reduction is a rank-order fold at the leader
+//! ([`RankGather`]) — so a TCP run stays **trace-bit-identical** to a
+//! serial run of the same config across every topology
+//! (`tests/topology_parity.rs` pins the whole matrix through
 //! `run_experiment`).
 //!
 //! Accounting: the modeled figures (`rounds`, `bytes`,
-//! `modeled_seconds`) are counted exactly like the other engines, so
-//! traces stay comparable; `CommStats::wire_bytes` additionally reports
-//! the bytes *measured on the sockets* — every round-protocol frame
-//! written or read, instrumentation rounds included; the one-time Init
-//! (data distribution) is excluded, mirroring the modeled accounting,
-//! which also only counts rounds.
+//! `modeled_seconds`) are counted exactly like the other engines;
+//! `CommStats::wire_bytes` additionally reports the bytes *measured on
+//! the leader-adjacent sockets* — every round-protocol frame written or
+//! read by the leader, instrumentation rounds included; the one-time
+//! Init/Peers setup (data distribution) is excluded, mirroring the
+//! modeled accounting, and worker-to-worker relay traffic is not
+//! observable from the leader (documented in EXPERIMENTS.md
+//! §Topologies).
 //!
-//! Hang safety: every stream carries read/write timeouts
-//! ([`DEFAULT_IO_TIMEOUT`], override via [`TcpCluster::set_io_timeout`]),
-//! so a wedged — not just dead — worker surfaces as an `Err` (and at the
-//! CLI as an `AlgoError`) instead of deadlocking the leader. A failed
-//! round drains every outstanding reply it can, like the threaded
-//! engine, so surviving sockets never desynchronize. No
-//! `.expect`/`.unwrap` anywhere on the socket path.
+//! Hang safety: every leader-adjacent stream carries read/write
+//! timeouts ([`DEFAULT_IO_TIMEOUT`], override via
+//! [`TcpCluster::set_io_timeout`]), and the channel wait on a link I/O
+//! thread is budgeted by the replies it owes — so a wedged (not just
+//! dead) worker surfaces as an `Err` (and at the CLI as an `AlgoError`)
+//! instead of deadlocking the leader. A failed round drains every link
+//! completely (dead subtrees are answered for with synthesized errors,
+//! worker-side by the relays, leader-side by the gather), so surviving
+//! sockets never desynchronize. No `.expect`/`.unwrap` anywhere on the
+//! socket path.
 
 use super::Cluster;
-use crate::comm::wire::{self, Command as Cmd, InitPayload, Reply};
+use crate::comm::topology::{ExecTopology, RankGather, TreePlan};
+use crate::comm::wire::{self, Command as Cmd, InitPayload, PeerChild, PeersPayload, Reply};
 use crate::comm::{Collective, CommStats, NetModel};
+use crate::comm::roundchan::{round_channel, RecvTimeoutError, RoundReceiver, RoundSender};
 use crate::config::LossKind;
 use crate::data::{shard_dataset, Dataset};
 use crate::linalg::ops;
@@ -54,6 +79,7 @@ use std::net::TcpStream;
 use std::path::PathBuf;
 use std::process::{Child, Stdio};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::Duration;
 
 /// Default socket read/write timeout. Rounds are sub-second on every
@@ -61,15 +87,78 @@ use std::time::Duration;
 /// beats a deadlock.
 pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(60);
 
-struct WorkerLink {
-    stream: TcpStream,
-    /// Present in self-hosted mode; killed + reaped on drop.
-    child: Option<Child>,
+/// One round's work order for a link I/O thread: write `frame`, then
+/// read `expect` reply frames.
+struct LinkJob {
+    frame: Arc<Vec<u8>>,
+    expect: usize,
+}
+
+/// A link I/O thread's round result: one entry per expected reply, in
+/// the order they arrived (= the link's preorder rank order), plus the
+/// socket bytes moved.
+struct LinkBatch {
+    replies: Vec<Result<Reply>>,
+    bytes: u64,
+}
+
+enum LinkIo {
+    /// `star-seq`: blocking I/O on the leader thread.
+    Inline(TcpStream),
+    /// `star`/`tree`: a socket-owning I/O thread fed through the
+    /// in-tree rendezvous channel.
+    Thread {
+        tx: RoundSender<LinkJob>,
+        rx: RoundReceiver<LinkBatch>,
+        join: Option<JoinHandle<()>>,
+    },
+    /// Latched after a failure that could leave the link out of
+    /// lockstep — a budget timeout (the I/O thread may park a *stale*
+    /// batch later; reading it would attribute old replies to a new
+    /// round), a mid-frame transport error, or I/O thread death. Every
+    /// later round fails fast instead of trusting the link. Replacing
+    /// the Thread variant drops its channel ends, so the orphaned I/O
+    /// thread exits on its next send/recv (detached; its socket read is
+    /// unblocked by the control-handle shutdown in Drop at the latest).
+    Dead(String),
+}
+
+/// One leader-adjacent connection and the worker ranks served over it —
+/// a single rank under the star strategies, a whole subtree in preorder
+/// under the tree.
+struct Link {
+    ranks: Vec<usize>,
+    io: LinkIo,
+}
+
+/// Kills and reaps self-hosted children if bring-up fails partway.
+struct ProcGuard(Vec<Option<Child>>);
+
+impl Drop for ProcGuard {
+    fn drop(&mut self) {
+        kill_procs(&mut self.0);
+    }
+}
+
+fn kill_procs(procs: &mut [Option<Child>]) {
+    for p in procs.iter_mut() {
+        if let Some(mut child) = p.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
 }
 
 /// Leader + m worker processes over TCP.
 pub struct TcpCluster {
-    links: Vec<WorkerLink>,
+    topology: ExecTopology,
+    links: Vec<Link>,
+    /// `try_clone` handles of the leader-adjacent sockets, one per link:
+    /// re-arm timeouts, force shutdowns (fault tests, Drop unblock).
+    ctrl: Vec<TcpStream>,
+    /// Self-hosted child processes by rank (None for external workers
+    /// and already-killed children).
+    procs: Vec<Option<Child>>,
     obj: Arc<dyn Objective>,
     comm: Collective,
     d: usize,
@@ -77,12 +166,12 @@ pub struct TcpCluster {
     /// in-memory engines — same shards, same reduction order).
     weights: Vec<f64>,
     row_sq: Option<f64>,
-    /// Bytes measured on the sockets (round frames only; Init excluded).
+    /// Bytes measured on the leader-adjacent sockets (round frames
+    /// only; Init/Peers setup excluded).
     wire_bytes: u64,
-    /// Reusable encode buffer — one frame encoded per broadcast, written
-    /// m times.
+    /// Reusable encode buffer — one frame encoded per broadcast.
     enc: Vec<u8>,
-    /// Reusable receive buffer.
+    /// Reusable receive buffer (inline reads + setup acks).
     frame: Vec<u8>,
     io_timeout: Duration,
 }
@@ -90,6 +179,10 @@ pub struct TcpCluster {
 impl TcpCluster {
     /// Connect to externally-launched `dane worker --listen` processes.
     /// `m = addrs.len()`; shards are assigned to addresses in order.
+    /// Under `ExecTopology::Tree` the workers must be able to reach
+    /// *each other* at the listed addresses (they open the relay
+    /// connections the `Peers` frames name).
+    #[allow(clippy::too_many_arguments)]
     pub fn connect(
         ds: &Dataset,
         loss: LossKind,
@@ -99,24 +192,39 @@ impl TcpCluster {
         net: NetModel,
         gram_threads: Option<usize>,
         timeout: Option<Duration>,
+        topology: ExecTopology,
     ) -> Result<Self> {
         if addrs.is_empty() {
             return Err(Error::Config("tcp engine needs >= 1 worker address".into()));
         }
-        let mut cluster = Self::empty(ds, loss, lambda, net, timeout);
+        let io_timeout = timeout.unwrap_or(DEFAULT_IO_TIMEOUT);
+        let mut streams = Vec::with_capacity(addrs.len());
         for (i, addr) in addrs.iter().enumerate() {
             let stream = TcpStream::connect(addr).map_err(|e| {
                 Error::Runtime(format!("tcp: connect worker {i} at {addr}: {e}"))
             })?;
-            cluster.add_link(stream, None)?;
+            streams.push(stream);
         }
-        cluster.init_workers(ds, loss, lambda, seed, gram_threads)?;
-        Ok(cluster)
+        let procs = (0..addrs.len()).map(|_| None).collect();
+        Self::bring_up(
+            ds,
+            loss,
+            lambda,
+            seed,
+            net,
+            gram_threads,
+            io_timeout,
+            topology,
+            streams,
+            addrs.to_vec(),
+            procs,
+        )
     }
 
     /// Spawn `m` worker child processes on loopback and connect to them.
     /// The worker binary is `$DANE_WORKER_BIN` if set, else the current
     /// executable (which is the `dane` bin when launched from the CLI).
+    #[allow(clippy::too_many_arguments)]
     pub fn self_hosted(
         ds: &Dataset,
         loss: LossKind,
@@ -126,91 +234,69 @@ impl TcpCluster {
         net: NetModel,
         gram_threads: Option<usize>,
         timeout: Option<Duration>,
+        topology: ExecTopology,
     ) -> Result<Self> {
         if m == 0 {
             return Err(Error::Config("tcp engine needs >= 1 worker".into()));
         }
         let bin = worker_binary()?;
-        // `cluster` owns each child as soon as its link is pushed, so
-        // any `?` below tears the already-started fleet down via Drop.
-        let mut cluster = Self::empty(ds, loss, lambda, net, timeout);
+        let io_timeout = timeout.unwrap_or(DEFAULT_IO_TIMEOUT);
+        let mut procs: Vec<Option<Child>> = Vec::with_capacity(m);
+        let mut streams = Vec::with_capacity(m);
+        let mut addrs = Vec::with_capacity(m);
         for i in 0..m {
-            let (mut child, addr) = spawn_worker_process(&bin, i, cluster.io_timeout)?;
-            let stream = match TcpStream::connect(&addr) {
-                Ok(s) => s,
-                Err(e) => {
-                    let _ = child.kill();
-                    let _ = child.wait();
-                    return Err(Error::Runtime(format!(
-                        "tcp: connect spawned worker {i} at {addr}: {e}"
-                    )));
+            match spawn_worker_process(&bin, i, io_timeout) {
+                Ok((child, addr)) => {
+                    procs.push(Some(child));
+                    match TcpStream::connect(&addr) {
+                        Ok(s) => {
+                            streams.push(s);
+                            addrs.push(addr);
+                        }
+                        Err(e) => {
+                            kill_procs(&mut procs);
+                            return Err(Error::Runtime(format!(
+                                "tcp: connect spawned worker {i} at {addr}: {e}"
+                            )));
+                        }
+                    }
                 }
-            };
-            cluster.links.push(WorkerLink { stream, child: Some(child) });
-            cluster.configure_stream(i)?;
+                Err(e) => {
+                    kill_procs(&mut procs);
+                    return Err(e);
+                }
+            }
         }
-        cluster.init_workers(ds, loss, lambda, seed, gram_threads)?;
-        Ok(cluster)
+        Self::bring_up(
+            ds, loss, lambda, seed, net, gram_threads, io_timeout, topology, streams,
+            addrs, procs,
+        )
     }
 
-    fn empty(
-        ds: &Dataset,
-        loss: LossKind,
-        lambda: f64,
-        net: NetModel,
-        timeout: Option<Duration>,
-    ) -> Self {
-        TcpCluster {
-            links: Vec::new(),
-            obj: make_objective(loss, lambda),
-            comm: Collective::new(net),
-            d: ds.d(),
-            weights: Vec::new(),
-            row_sq: None,
-            wire_bytes: 0,
-            enc: Vec::new(),
-            frame: Vec::new(),
-            io_timeout: timeout.unwrap_or(DEFAULT_IO_TIMEOUT),
-        }
-    }
-
-    fn add_link(&mut self, stream: TcpStream, child: Option<Child>) -> Result<()> {
-        self.links.push(WorkerLink { stream, child });
-        self.configure_stream(self.links.len() - 1)
-    }
-
-    fn configure_stream(&mut self, i: usize) -> Result<()> {
-        let s = &self.links[i].stream;
-        s.set_nodelay(true)
-            .map_err(|e| Error::Runtime(format!("tcp: worker {i} set_nodelay: {e}")))?;
-        s.set_read_timeout(Some(self.io_timeout))
-            .map_err(|e| Error::Runtime(format!("tcp: worker {i} read timeout: {e}")))?;
-        s.set_write_timeout(Some(self.io_timeout))
-            .map_err(|e| Error::Runtime(format!("tcp: worker {i} write timeout: {e}")))?;
-        Ok(())
-    }
-
-    /// Re-arm the socket timeouts (tests tighten them to exercise the
-    /// wedged-worker path quickly).
-    pub fn set_io_timeout(&mut self, timeout: Duration) -> Result<()> {
-        self.io_timeout = timeout;
-        for i in 0..self.links.len() {
-            self.configure_stream(i)?;
-        }
-        Ok(())
-    }
-
-    /// Shard the dataset (same seed discipline as the in-memory engines)
-    /// and ship each worker its Init frame; lockstep ack gather.
-    fn init_workers(
-        &mut self,
+    /// Shared bring-up: configure the setup streams, shard the dataset
+    /// (same seed discipline as the in-memory engines), ship Init (and,
+    /// for the tree, Peers) frames in lockstep, then partition the
+    /// connections into round-plane links per the topology. On any
+    /// failure the `ProcGuard` reaps already-spawned children.
+    #[allow(clippy::too_many_arguments)]
+    fn bring_up(
         ds: &Dataset,
         loss: LossKind,
         lambda: f64,
         seed: u64,
+        net: NetModel,
         gram_threads: Option<usize>,
-    ) -> Result<()> {
-        let m = self.links.len();
+        io_timeout: Duration,
+        topology: ExecTopology,
+        streams: Vec<TcpStream>,
+        addrs: Vec<String>,
+        procs: Vec<Option<Child>>,
+    ) -> Result<Self> {
+        let m = streams.len();
+        let mut guard = ProcGuard(procs);
+        for (i, s) in streams.iter().enumerate() {
+            configure_stream(s, i, io_timeout)?;
+        }
         let shards = shard_dataset(ds, m, seed);
         if shards.len() != m {
             return Err(Error::Config(format!(
@@ -219,10 +305,17 @@ impl TcpCluster {
             )));
         }
         let total: usize = shards.iter().map(|s| s.n_effective()).sum();
-        self.weights = shards
+        let weights: Vec<f64> = shards
             .iter()
             .map(|s| s.n_effective() as f64 / total as f64)
             .collect();
+
+        let mut streams = streams;
+        let mut enc = Vec::new();
+        let mut frame = Vec::new();
+        // Init handshake: the leader is the single source of sharding
+        // truth; worker processes need no config file. Uncounted (data
+        // distribution, like the modeled accounting).
         for (i, shard) in shards.into_iter().enumerate() {
             let init = Cmd::Init(Box::new(InitPayload {
                 worker_id: i,
@@ -231,72 +324,120 @@ impl TcpCluster {
                 gram_threads,
                 shard,
             }));
-            wire::encode_command(&init, &mut self.enc)?;
-            self.write_frame_uncounted(i)?;
+            wire::encode_command(&init, &mut enc)?;
+            streams[i]
+                .write_all(&enc)
+                .map_err(|e| io_err(i, "init send", &e))?;
         }
-        for i in 0..m {
-            match self.recv_reply_uncounted(i)? {
-                Reply::Scalar(_) => {}
-                _ => {
-                    return Err(Error::Runtime(format!(
-                        "tcp: worker {i}: unexpected init ack"
-                    )))
+        for (i, s) in streams.iter_mut().enumerate() {
+            read_setup_ack(s, &mut frame, i, "init")?;
+        }
+
+        // Tree setup: every worker learns its children (rank, address,
+        // subtree preorder) and whether its round-plane parent is
+        // another worker. Parents dial children while handling their
+        // own Peers; the accept backlog makes the ordering race-free.
+        let plan = topology.is_tree().then(|| TreePlan::new(m));
+        if let Some(plan) = &plan {
+            for i in 0..m {
+                let children: Vec<PeerChild> = plan
+                    .children_of(i)
+                    .iter()
+                    .map(|&c| PeerChild {
+                        rank: c,
+                        addr: addrs[c].clone(),
+                        ranks: plan.subtree_ranks(c),
+                    })
+                    .collect();
+                let peers = Cmd::Peers(Box::new(PeersPayload {
+                    children,
+                    expect_parent: !plan.is_root_child(i),
+                }));
+                wire::encode_command(&peers, &mut enc)?;
+                streams[i]
+                    .write_all(&enc)
+                    .map_err(|e| io_err(i, "peers send", &e))?;
+            }
+            for (i, s) in streams.iter_mut().enumerate() {
+                read_setup_ack(s, &mut frame, i, "peers")?;
+            }
+        }
+
+        // Partition into round-plane links. Non-root setup connections
+        // are dropped: the EOF tells interior workers to accept their
+        // parent's (already-dialed) connection.
+        let rank_sets: Vec<Vec<usize>> = match &plan {
+            Some(plan) => plan.root_links().to_vec(),
+            None => (0..m).map(|i| vec![i]).collect(),
+        };
+        let mut streams: Vec<Option<TcpStream>> = streams.into_iter().map(Some).collect();
+        let mut links = Vec::with_capacity(rank_sets.len());
+        let mut ctrl = Vec::with_capacity(rank_sets.len());
+        for ranks in rank_sets {
+            let stream = streams[ranks[0]].take().expect("root stream unclaimed");
+            ctrl.push(stream.try_clone().map_err(|e| {
+                Error::Runtime(format!("tcp: clone control handle: {e}"))
+            })?);
+            let io = match topology {
+                ExecTopology::StarSeq => LinkIo::Inline(stream),
+                ExecTopology::Star | ExecTopology::Tree => {
+                    spawn_link_io(stream, ranks[0])
                 }
-            }
+            };
+            links.push(Link { ranks, io });
+        }
+        drop(streams);
+
+        let procs = std::mem::take(&mut guard.0);
+        Ok(TcpCluster {
+            topology,
+            links,
+            ctrl,
+            procs,
+            obj: make_objective(loss, lambda),
+            comm: Collective::new(net),
+            d: ds.d(),
+            weights,
+            row_sq: None,
+            wire_bytes: 0,
+            enc,
+            frame,
+            io_timeout,
+        })
+    }
+
+    /// Re-arm the socket timeouts (tests tighten them to exercise the
+    /// wedged-worker path quickly). The control clones share the
+    /// underlying sockets with the link I/O threads, so the new options
+    /// apply immediately.
+    pub fn set_io_timeout(&mut self, timeout: Duration) -> Result<()> {
+        self.io_timeout = timeout;
+        for (li, c) in self.ctrl.iter().enumerate() {
+            c.set_read_timeout(Some(timeout))
+                .map_err(|e| Error::Runtime(format!("tcp: link {li} read timeout: {e}")))?;
+            c.set_write_timeout(Some(timeout))
+                .map_err(|e| Error::Runtime(format!("tcp: link {li} write timeout: {e}")))?;
         }
         Ok(())
     }
 
-    // ---- framed I/O --------------------------------------------------
-
-    /// Write the frame sitting in `self.enc` to worker i, counting the
-    /// bytes into `wire_bytes`.
-    fn write_frame(&mut self, i: usize) -> Result<()> {
-        self.write_frame_uncounted(i)?;
-        self.wire_bytes += self.enc.len() as u64;
-        Ok(())
-    }
-
-    fn write_frame_uncounted(&mut self, i: usize) -> Result<()> {
-        self.links[i]
-            .stream
-            .write_all(&self.enc)
-            .map_err(|e| io_err(i, "send", &e))
-    }
-
-    /// Read one reply frame from worker i, counting bytes; worker-side
-    /// `Reply::Err` becomes an `Error::Runtime` like every round does.
-    fn recv_reply(&mut self, i: usize) -> Result<Reply> {
-        let n = self.read_reply_frame(i)?;
-        self.wire_bytes += n as u64;
-        self.decode_current_reply(i)
-    }
-
-    fn recv_reply_uncounted(&mut self, i: usize) -> Result<Reply> {
-        self.read_reply_frame(i)?;
-        self.decode_current_reply(i)
-    }
-
-    fn read_reply_frame(&mut self, i: usize) -> Result<usize> {
-        match wire::read_frame(&mut self.links[i].stream, &mut self.frame) {
-            Ok(Some(n)) => Ok(n),
-            Ok(None) => Err(Error::Runtime(format!(
-                "tcp: worker {i} closed the connection mid-round"
-            ))),
-            Err(Error::Io(e)) => Err(io_err(i, "reply read", &e)),
-            Err(e) => Err(Error::Runtime(format!("tcp: worker {i}: {e}"))),
-        }
-    }
-
-    fn decode_current_reply(&mut self, i: usize) -> Result<Reply> {
-        match wire::decode_reply(&self.frame) {
-            Ok(Reply::Err(e)) => {
-                Err(Error::Runtime(format!("worker {i}: {e}")))
+    /// Kill worker `rank` (self-hosted mode: SIGKILL the child process;
+    /// any mode: shut down its leader-adjacent socket if it heads a
+    /// link) — the fault-injection tests' "machine dies mid-run". The
+    /// very next round observes the death deterministically; for an
+    /// interior tree worker the kill propagates through its parent's
+    /// relay (synthesized error replies), exercising the genuine
+    /// relay-failure path.
+    pub fn kill_worker(&mut self, rank: usize) {
+        if let Some(slot) = self.procs.get_mut(rank) {
+            if let Some(mut child) = slot.take() {
+                let _ = child.kill();
+                let _ = child.wait();
             }
-            Ok(r) => Ok(r),
-            Err(e) => Err(Error::Runtime(format!(
-                "tcp: worker {i} sent a malformed reply: {e}"
-            ))),
+        }
+        if let Some(li) = self.links.iter().position(|l| l.ranks.first() == Some(&rank))
+        {
+            let _ = self.ctrl[li].shutdown(std::net::Shutdown::Both);
         }
     }
 
@@ -304,18 +445,265 @@ impl TcpCluster {
         Error::Runtime(format!("worker {i}: unexpected reply type"))
     }
 
-    /// Broadcast the frame in `self.enc` to all workers; returns how
-    /// many sends succeeded plus the first send error, mirroring the
-    /// threaded engine's drain discipline.
-    fn broadcast_enc(&mut self) -> (usize, Option<Error>) {
-        let mut sent = 0;
-        for i in 0..self.links.len() {
-            match self.write_frame(i) {
-                Ok(()) => sent += 1,
-                Err(e) => return (sent, Some(e)),
+    /// One collective round: send `frames[li]` over link `li`, gather
+    /// every link's full reply bundle, slot replies by rank, surface
+    /// the lowest-rank error after draining everything. All writes go
+    /// out before any read (threaded links overlap both on their own).
+    fn dispatch(&mut self, frames: Vec<Arc<Vec<u8>>>) -> Result<Vec<Reply>> {
+        debug_assert_eq!(frames.len(), self.links.len());
+        let m = self.weights.len();
+        let io_timeout = self.io_timeout;
+        let budget = |expect: usize| {
+            io_timeout.checked_mul(expect as u32 + 2).unwrap_or(io_timeout)
+        };
+        let TcpCluster { links, frame: buf, wire_bytes, .. } = self;
+        let mut gather = RankGather::new(m);
+        let mut bytes = 0u64;
+        let mut pending = vec![false; links.len()];
+        for (li, frame) in frames.iter().enumerate() {
+            let link = &mut links[li];
+            let expect = link.ranks.len();
+            let mut latch: Option<String> = None;
+            match &mut link.io {
+                LinkIo::Thread { tx, .. } => {
+                    match tx.send(LinkJob { frame: frame.clone(), expect }) {
+                        Ok(()) => pending[li] = true,
+                        Err(_) => {
+                            let msg = "link I/O thread died".to_string();
+                            fail_ranks(&mut gather, &link.ranks, &msg);
+                            latch = Some(msg);
+                        }
+                    }
+                }
+                LinkIo::Inline(stream) => match stream.write_all(frame.as_slice()) {
+                    Ok(()) => {
+                        bytes += frame.len() as u64;
+                        pending[li] = true;
+                    }
+                    Err(e) => {
+                        let msg = describe_io("send", &e);
+                        fail_ranks(&mut gather, &link.ranks, &msg);
+                        latch = Some(msg);
+                    }
+                },
+                LinkIo::Dead(msg) => {
+                    let msg = msg.clone();
+                    fail_ranks(&mut gather, &link.ranks, &msg);
+                }
+            }
+            if let Some(msg) = latch {
+                link.io = LinkIo::Dead(msg);
             }
         }
-        (sent, None)
+        drop(frames);
+        for (li, link) in links.iter_mut().enumerate() {
+            if !pending[li] {
+                continue;
+            }
+            let mut latch: Option<String> = None;
+            match &mut link.io {
+                LinkIo::Thread { rx, .. } => {
+                    match rx.recv_timeout(budget(link.ranks.len())) {
+                        Ok(batch) => {
+                            bytes += batch.bytes;
+                            for (rank, r) in link.ranks.iter().zip(batch.replies) {
+                                gather.put(
+                                    *rank,
+                                    r.map_err(|e| {
+                                        Error::Runtime(format!(
+                                            "tcp: worker {rank}: {e}"
+                                        ))
+                                    }),
+                                );
+                            }
+                        }
+                        Err(RecvTimeoutError::Timeout) => {
+                            // The I/O thread may deliver this round's
+                            // batch *later*; trusting the link again
+                            // would attribute stale replies to a future
+                            // round — latch it dead instead.
+                            let msg =
+                                "wedged: no reply within the link budget".to_string();
+                            fail_ranks(&mut gather, &link.ranks, &msg);
+                            latch = Some(msg);
+                        }
+                        Err(RecvTimeoutError::Disconnected) => {
+                            let msg = "link I/O thread died".to_string();
+                            fail_ranks(&mut gather, &link.ranks, &msg);
+                            latch = Some(msg);
+                        }
+                    }
+                }
+                LinkIo::Inline(stream) => {
+                    let mut failed: Option<String> = None;
+                    for k in 0..link.ranks.len() {
+                        let rank = link.ranks[k];
+                        if let Some(msg) = &failed {
+                            gather.put(
+                                rank,
+                                Err(Error::Runtime(format!("tcp: worker {rank}: {msg}"))),
+                            );
+                            continue;
+                        }
+                        match wire::read_frame(stream, buf) {
+                            Ok(Some(n)) => {
+                                bytes += n as u64;
+                                gather.put(
+                                    rank,
+                                    wire::decode_reply(buf).map_err(|e| {
+                                        Error::Runtime(format!(
+                                            "tcp: worker {rank} sent a malformed reply: {e}"
+                                        ))
+                                    }),
+                                );
+                            }
+                            Ok(None) => {
+                                let msg = "connection closed mid-round".to_string();
+                                gather.put(
+                                    rank,
+                                    Err(Error::Runtime(format!(
+                                        "tcp: worker {rank}: {msg}"
+                                    ))),
+                                );
+                                failed = Some(msg);
+                            }
+                            Err(e) => {
+                                let msg = match e {
+                                    Error::Io(e) => describe_io("reply read", &e),
+                                    other => other.to_string(),
+                                };
+                                gather.put(
+                                    rank,
+                                    Err(Error::Runtime(format!(
+                                        "tcp: worker {rank}: {msg}"
+                                    ))),
+                                );
+                                failed = Some(msg);
+                            }
+                        }
+                    }
+                    // A mid-bundle transport failure leaves unread (or
+                    // unsent) frames in flight: the stream is out of
+                    // lockstep, never trustworthy again.
+                    latch = failed;
+                }
+                LinkIo::Dead(_) => {}
+            }
+            if let Some(msg) = latch {
+                link.io = LinkIo::Dead(msg);
+            }
+        }
+        *wire_bytes += bytes;
+        gather.into_result()
+    }
+
+    /// Broadcast the frame sitting in `self.enc` to every link and
+    /// gather the full cluster's replies; recovers the encode buffer
+    /// when every link has released its share.
+    fn broadcast_round(&mut self) -> Result<Vec<Reply>> {
+        let frame = Arc::new(std::mem::take(&mut self.enc));
+        let frames = vec![frame.clone(); self.links.len()];
+        let out = self.dispatch(frames);
+        if let Ok(buf) = Arc::try_unwrap(frame) {
+            self.enc = buf;
+        }
+        out
+    }
+
+    /// Point-to-point round: send the frame in `self.enc` over the one
+    /// link that holds `rank` and read a single reply (the tree relays
+    /// route a `For` envelope; the star strategies address the worker's
+    /// own link).
+    fn fetch_single(&mut self, rank: usize) -> Result<Reply> {
+        let io_timeout = self.io_timeout;
+        let budget = io_timeout.checked_mul(3).unwrap_or(io_timeout);
+        let TcpCluster { links, enc, frame: buf, wire_bytes, .. } = self;
+        let li = links
+            .iter()
+            .position(|l| l.ranks.contains(&rank))
+            .ok_or_else(|| Error::Runtime(format!("tcp: no link holds worker {rank}")))?;
+        // Transport failures that could leave the link out of lockstep
+        // latch it dead (same discipline as `dispatch`); the error
+        // still surfaces to the caller.
+        let mut latch: Option<String> = None;
+        let result = match &mut links[li].io {
+            LinkIo::Thread { tx, rx, .. } => loop {
+                // single-iteration loop: a `break` target so every
+                // failure path falls through to the latch below
+                let frame = Arc::new(std::mem::take(enc));
+                if tx.send(LinkJob { frame: frame.clone(), expect: 1 }).is_err() {
+                    let msg = "link I/O thread died".to_string();
+                    latch = Some(msg.clone());
+                    break Err(Error::Runtime(format!("tcp: worker {rank}: {msg}")));
+                }
+                let batch = match rx.recv_timeout(budget) {
+                    Ok(b) => b,
+                    Err(RecvTimeoutError::Timeout) => {
+                        let msg = format!("wedged: no reply within {budget:?}");
+                        latch = Some(msg.clone());
+                        break Err(Error::Runtime(format!("tcp: worker {rank} {msg}")));
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        let msg = "link I/O thread died".to_string();
+                        latch = Some(msg.clone());
+                        break Err(Error::Runtime(format!("tcp: worker {rank}: {msg}")));
+                    }
+                };
+                *wire_bytes += batch.bytes;
+                if let Ok(b) = Arc::try_unwrap(frame) {
+                    *enc = b;
+                }
+                break batch
+                    .replies
+                    .into_iter()
+                    .next()
+                    .unwrap_or_else(|| {
+                        Err(Error::Runtime("link returned no reply".into()))
+                    })
+                    .map_err(|e| Error::Runtime(format!("tcp: worker {rank}: {e}")));
+            },
+            LinkIo::Inline(stream) => loop {
+                if let Err(e) = stream.write_all(enc.as_slice()) {
+                    let msg = describe_io("send", &e);
+                    latch = Some(msg.clone());
+                    break Err(Error::Runtime(format!("tcp: worker {rank} {msg}")));
+                }
+                *wire_bytes += enc.len() as u64;
+                break match wire::read_frame(stream, buf) {
+                    Ok(Some(n)) => {
+                        *wire_bytes += n as u64;
+                        wire::decode_reply(buf).map_err(|e| {
+                            Error::Runtime(format!(
+                                "tcp: worker {rank} sent a malformed reply: {e}"
+                            ))
+                        })
+                    }
+                    Ok(None) => {
+                        let msg = "connection closed mid-round".to_string();
+                        latch = Some(msg.clone());
+                        Err(Error::Runtime(format!("tcp: worker {rank}: {msg}")))
+                    }
+                    Err(Error::Io(e)) => {
+                        let msg = describe_io("reply read", &e);
+                        latch = Some(msg.clone());
+                        Err(Error::Runtime(format!("tcp: worker {rank} {msg}")))
+                    }
+                    Err(e) => {
+                        Err(Error::Runtime(format!("tcp: worker {rank}: {e}")))
+                    }
+                };
+            },
+            LinkIo::Dead(msg) => {
+                Err(Error::Runtime(format!("tcp: worker {rank}: {msg}")))
+            }
+        };
+        if let Some(msg) = latch {
+            links[li].io = LinkIo::Dead(msg);
+        }
+        match result? {
+            Reply::Err(e) => Err(Error::Runtime(format!("worker {rank}: {e}"))),
+            r => Ok(r),
+        }
     }
 
     // ---- gathers (shared by counted and instrumentation paths) -------
@@ -325,89 +713,150 @@ impl TcpCluster {
             &Cmd::GradLoss { w: Arc::new(w.to_vec()), out: Vec::new() },
             &mut self.enc,
         )?;
-        let (sent, mut first_err) = self.broadcast_enc();
+        let replies = self.broadcast_round()?;
         g.fill(0.0);
         let mut loss = 0.0;
-        for i in 0..sent {
-            match self.recv_reply(i) {
-                Ok(Reply::VecScalar(gi, li)) => {
-                    if first_err.is_none() {
-                        if gi.len() == g.len() {
-                            ops::axpy(self.weights[i], &gi, g);
-                            loss += self.weights[i] * li;
-                        } else {
-                            first_err = Some(self.unexpected(i));
-                        }
-                    }
+        for (i, r) in replies.into_iter().enumerate() {
+            match r {
+                Reply::VecScalar(gi, li) if gi.len() == g.len() => {
+                    ops::axpy(self.weights[i], &gi, g);
+                    loss += self.weights[i] * li;
                 }
-                Ok(_) => {
-                    if first_err.is_none() {
-                        first_err = Some(self.unexpected(i));
-                    }
-                }
-                Err(e) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
+                _ => return Err(self.unexpected(i)),
             }
         }
-        match first_err {
-            Some(e) => Err(e),
-            None => Ok(loss),
-        }
+        Ok(loss)
     }
 
     fn gather_loss(&mut self, w: &[f64]) -> Result<f64> {
         wire::encode_command(&Cmd::Loss { w: Arc::new(w.to_vec()) }, &mut self.enc)?;
-        let (sent, mut first_err) = self.broadcast_enc();
+        let replies = self.broadcast_round()?;
         let mut loss = 0.0;
-        for i in 0..sent {
-            match self.recv_reply(i) {
-                Ok(Reply::Scalar(l)) => {
-                    if first_err.is_none() {
-                        loss += self.weights[i] * l;
-                    }
-                }
-                Ok(_) => {
-                    if first_err.is_none() {
-                        first_err = Some(self.unexpected(i));
-                    }
-                }
-                Err(e) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
+        for (i, r) in replies.into_iter().enumerate() {
+            match r {
+                Reply::Scalar(l) => loss += self.weights[i] * l,
+                _ => return Err(self.unexpected(i)),
             }
         }
-        match first_err {
-            Some(e) => Err(e),
-            None => Ok(loss),
-        }
+        Ok(loss)
     }
+}
 
-    /// Kill worker child i (self-hosted mode) — the fault-injection
-    /// tests' "machine dies mid-run". The socket is shut down too, so
-    /// the very next round observes the death deterministically. A
-    /// no-op on externally-launched workers.
-    pub fn kill_worker(&mut self, i: usize) {
-        if let Some(mut child) = self.links[i].child.take() {
-            let _ = child.kill();
-            let _ = child.wait();
+fn fail_ranks(gather: &mut RankGather, ranks: &[usize], msg: &str) {
+    for &r in ranks {
+        gather.put(r, Err(Error::Runtime(format!("tcp: worker {r}: {msg}"))));
+    }
+}
+
+fn describe_io(what: &str, e: &std::io::Error) -> String {
+    use std::io::ErrorKind;
+    match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+            format!("wedged: {what} timed out")
         }
-        let _ = self.links[i].stream.shutdown(std::net::Shutdown::Both);
+        _ => format!("{what} failed: {e}"),
     }
 }
 
 fn io_err(i: usize, what: &str, e: &std::io::Error) -> Error {
-    use std::io::ErrorKind;
-    match e.kind() {
-        ErrorKind::WouldBlock | ErrorKind::TimedOut => Error::Runtime(format!(
-            "tcp: worker {i} wedged: {what} timed out"
-        )),
-        _ => Error::Runtime(format!("tcp: worker {i} {what} failed: {e}")),
+    Error::Runtime(format!("tcp: worker {i} {}", describe_io(what, e)))
+}
+
+fn configure_stream(s: &TcpStream, i: usize, timeout: Duration) -> Result<()> {
+    s.set_nodelay(true)
+        .map_err(|e| Error::Runtime(format!("tcp: worker {i} set_nodelay: {e}")))?;
+    s.set_read_timeout(Some(timeout))
+        .map_err(|e| Error::Runtime(format!("tcp: worker {i} read timeout: {e}")))?;
+    s.set_write_timeout(Some(timeout))
+        .map_err(|e| Error::Runtime(format!("tcp: worker {i} write timeout: {e}")))?;
+    Ok(())
+}
+
+/// Read one setup ack (`Reply::Scalar`) during bring-up.
+fn read_setup_ack(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    i: usize,
+    what: &str,
+) -> Result<()> {
+    match wire::read_frame(stream, buf) {
+        Ok(Some(_)) => {}
+        Ok(None) => {
+            return Err(Error::Runtime(format!(
+                "tcp: worker {i} closed the connection during {what}"
+            )))
+        }
+        Err(Error::Io(e)) => return Err(io_err(i, "ack read", &e)),
+        Err(e) => return Err(Error::Runtime(format!("tcp: worker {i}: {e}"))),
     }
+    match wire::decode_reply(buf) {
+        Ok(Reply::Scalar(_)) => Ok(()),
+        Ok(Reply::Err(e)) => Err(Error::Runtime(format!("worker {i}: {e}"))),
+        Ok(_) => Err(Error::Runtime(format!("tcp: worker {i}: unexpected {what} ack"))),
+        Err(e) => Err(Error::Runtime(format!(
+            "tcp: worker {i} sent a malformed {what} ack: {e}"
+        ))),
+    }
+}
+
+/// The socket-owning I/O actor of the parallel star / tree root link:
+/// one write + `expect` reads per round, every transport failure turned
+/// into per-reply errors so the leader's gather always drains. A dead
+/// socket stays dead (every later round errors immediately).
+fn spawn_link_io(mut stream: TcpStream, root: usize) -> LinkIo {
+    let (job_tx, job_rx) = round_channel::<LinkJob>();
+    let (batch_tx, batch_rx) = round_channel::<LinkBatch>();
+    let join = std::thread::Builder::new()
+        .name(format!("dane-link-{root}"))
+        .spawn(move || {
+            let mut frame = Vec::new();
+            let mut dead: Option<String> = None;
+            while let Ok(LinkJob { frame: out, expect }) = job_rx.recv() {
+                let mut bytes = 0u64;
+                let mut replies: Vec<Result<Reply>> = Vec::with_capacity(expect);
+                if dead.is_none() {
+                    match stream.write_all(out.as_slice()) {
+                        Ok(()) => bytes += out.len() as u64,
+                        Err(e) => dead = Some(describe_io("send", &e)),
+                    }
+                }
+                drop(out); // release the leader's encode buffer promptly
+                for _ in 0..expect {
+                    if let Some(msg) = &dead {
+                        replies.push(Err(Error::Runtime(msg.clone())));
+                        continue;
+                    }
+                    match wire::read_frame(&mut stream, &mut frame) {
+                        Ok(Some(n)) => {
+                            bytes += n as u64;
+                            replies.push(wire::decode_reply(&frame).map_err(|e| {
+                                Error::Runtime(format!("malformed reply: {e}"))
+                            }));
+                        }
+                        Ok(None) => {
+                            let msg = "connection closed mid-round".to_string();
+                            replies.push(Err(Error::Runtime(msg.clone())));
+                            dead = Some(msg);
+                        }
+                        Err(Error::Io(e)) => {
+                            let msg = describe_io("reply read", &e);
+                            replies.push(Err(Error::Runtime(msg.clone())));
+                            dead = Some(msg);
+                        }
+                        Err(e) => {
+                            let msg = e.to_string();
+                            replies.push(Err(Error::Runtime(msg.clone())));
+                            dead = Some(msg);
+                        }
+                    }
+                }
+                if batch_tx.send(LinkBatch { replies, bytes }).is_err() {
+                    break; // leader gone
+                }
+            }
+        })
+        .expect("spawn link io thread");
+    LinkIo::Thread { tx: job_tx, rx: batch_rx, join: Some(join) }
 }
 
 fn worker_binary() -> Result<PathBuf> {
@@ -476,24 +925,39 @@ fn spawn_worker_process(
 
 impl Drop for TcpCluster {
     fn drop(&mut self) {
-        // Closing the sockets lets externally-launched workers exit
-        // their serve loop cleanly (EOF at a frame boundary); self-
-        // hosted children are killed and reaped so no zombies outlive
-        // the cluster.
+        // Shut the sockets first: a link I/O thread stuck mid-read
+        // returns immediately instead of waiting out its socket
+        // timeout, and externally-launched workers see EOF at a frame
+        // boundary and exit their serve loops cleanly (in tree mode the
+        // EOF cascades down the relay links). Self-hosted children are
+        // killed and reaped so no zombies outlive the cluster.
+        for c in &self.ctrl {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
         for link in self.links.drain(..) {
-            let WorkerLink { stream, child } = link;
-            drop(stream);
-            if let Some(mut c) = child {
-                let _ = c.kill();
-                let _ = c.wait();
+            match link.io {
+                LinkIo::Inline(stream) => drop(stream),
+                LinkIo::Thread { tx, rx, join } => {
+                    drop(tx);
+                    drop(rx);
+                    if let Some(j) = join {
+                        let _ = j.join();
+                    }
+                }
+                // latched-dead links already dropped their channel ends;
+                // the orphaned I/O thread exits on its own (its socket
+                // read was unblocked by the ctrl shutdown above)
+                LinkIo::Dead(_) => {}
             }
         }
+        self.ctrl.clear();
+        kill_procs(&mut self.procs);
     }
 }
 
 impl Cluster for TcpCluster {
     fn m(&self) -> usize {
-        self.links.len()
+        self.weights.len()
     }
 
     fn dim(&self) -> usize {
@@ -554,35 +1018,17 @@ impl Cluster for TcpCluster {
             },
             &mut self.enc,
         )?;
-        let (sent, mut first_err) = self.broadcast_enc();
+        let replies = self.broadcast_round()?;
         out.fill(0.0);
-        let inv_m = 1.0 / self.links.len() as f64;
-        for i in 0..sent {
-            match self.recv_reply(i) {
-                Ok(Reply::Vec(wi)) => {
-                    if first_err.is_none() {
-                        if wi.len() == out.len() {
-                            // paper step (*): unweighted average in rank order
-                            ops::axpy(inv_m, &wi, out);
-                        } else {
-                            first_err = Some(self.unexpected(i));
-                        }
-                    }
+        let inv_m = 1.0 / self.weights.len() as f64;
+        for (i, r) in replies.into_iter().enumerate() {
+            match r {
+                Reply::Vec(wi) if wi.len() == out.len() => {
+                    // paper step (*): unweighted average in rank order
+                    ops::axpy(inv_m, &wi, out);
                 }
-                Ok(_) => {
-                    if first_err.is_none() {
-                        first_err = Some(self.unexpected(i));
-                    }
-                }
-                Err(e) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
+                _ => return Err(self.unexpected(i)),
             }
-        }
-        if let Some(e) = first_err {
-            return Err(e);
         }
         let m = self.m();
         self.comm.count_round(m, self.d);
@@ -596,18 +1042,23 @@ impl Cluster for TcpCluster {
         eta: f64,
         mu: f64,
     ) -> Result<Vec<f64>> {
-        wire::encode_command(
-            &Cmd::DaneSolve {
-                w_prev: Arc::new(w_prev.to_vec()),
-                g: Arc::new(g.to_vec()),
-                eta,
-                mu,
-                out: Vec::new(),
-            },
-            &mut self.enc,
-        )?;
-        self.write_frame(0)?;
-        let w1 = match self.recv_reply(0)? {
+        let solve = Cmd::DaneSolve {
+            w_prev: Arc::new(w_prev.to_vec()),
+            g: Arc::new(g.to_vec()),
+            eta,
+            mu,
+            out: Vec::new(),
+        };
+        // Under the tree, a bare compute frame would be relayed as a
+        // broadcast; the For envelope keeps it point-to-point (worker 0
+        // heads the first root link, so it never actually relays).
+        let cmd = if self.topology.is_tree() {
+            Cmd::For { rank: 0, inner: Box::new(solve) }
+        } else {
+            solve
+        };
+        wire::encode_command(&cmd, &mut self.enc)?;
+        let w1 = match self.fetch_single(0)? {
             Reply::Vec(w) if w.len() == self.d => w,
             _ => return Err(self.unexpected(0)),
         };
@@ -618,46 +1069,31 @@ impl Cluster for TcpCluster {
 
     fn prox_all(&mut self, targets: &[Vec<f64>], rho: f64) -> Result<Vec<Vec<f64>>> {
         assert_eq!(targets.len(), self.m());
-        let mut sent = 0;
-        let mut first_err: Option<Error> = None;
-        for (i, v) in targets.iter().enumerate() {
-            if let Err(e) = wire::encode_command(&Cmd::Prox { v: v.clone(), rho }, &mut self.enc)
-            {
-                first_err = Some(e);
-                break;
+        let replies = if self.topology.is_tree() {
+            // One ProxAll frame relays down the tree; each worker picks
+            // its own target by rank.
+            wire::encode_command(
+                &Cmd::ProxAll { targets: targets.to_vec(), rho },
+                &mut self.enc,
+            )?;
+            self.broadcast_round()?
+        } else {
+            // Star strategies: per-worker frames, one per link.
+            let mut frames = Vec::with_capacity(self.links.len());
+            for v in targets {
+                wire::encode_command(&Cmd::Prox { v: v.clone(), rho }, &mut self.enc)?;
+                frames.push(Arc::new(self.enc.clone()));
             }
-            match self.write_frame(i) {
-                Ok(()) => sent += 1,
-                Err(e) => {
-                    first_err = Some(e);
-                    break;
-                }
-            }
-        }
-        let mut out = Vec::with_capacity(self.m());
-        for i in 0..sent {
-            match self.recv_reply(i) {
-                Ok(Reply::Vec(w)) => {
-                    if first_err.is_none() {
-                        out.push(w);
-                    }
-                }
-                Ok(_) => {
-                    if first_err.is_none() {
-                        first_err = Some(self.unexpected(i));
-                    }
-                }
-                Err(e) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
+            self.dispatch(frames)?
+        };
+        let mut out = Vec::with_capacity(replies.len());
+        for (i, r) in replies.into_iter().enumerate() {
+            match r {
+                Reply::Vec(w) => out.push(w),
+                _ => return Err(self.unexpected(i)),
             }
         }
-        match first_err {
-            Some(e) => Err(e),
-            None => Ok(out),
-        }
+        Ok(out)
     }
 
     fn local_erms(
@@ -665,44 +1101,30 @@ impl Cluster for TcpCluster {
         subsample: Option<(f64, u64)>,
     ) -> Result<(Vec<Vec<f64>>, Option<Vec<Vec<f64>>>)> {
         wire::encode_command(&Cmd::Erm { subsample }, &mut self.enc)?;
-        let (sent, mut first_err) = self.broadcast_enc();
-        let mut full = Vec::with_capacity(self.m());
+        let replies = self.broadcast_round()?;
+        let mut full = Vec::with_capacity(replies.len());
         let mut subs: Vec<Vec<f64>> = Vec::new();
         let mut any_sub = false;
-        for i in 0..sent {
-            match self.recv_reply(i) {
-                Ok(Reply::VecPair(f, s)) => {
-                    if first_err.is_none() {
-                        full.push(f);
-                        if let Some(s) = s {
-                            subs.push(s);
-                            any_sub = true;
-                        }
+        for (i, r) in replies.into_iter().enumerate() {
+            match r {
+                Reply::VecPair(f, s) => {
+                    full.push(f);
+                    if let Some(s) = s {
+                        subs.push(s);
+                        any_sub = true;
                     }
                 }
-                Ok(_) => {
-                    if first_err.is_none() {
-                        first_err = Some(self.unexpected(i));
-                    }
-                }
-                Err(e) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
+                _ => return Err(self.unexpected(i)),
             }
-        }
-        if let Some(e) = first_err {
-            return Err(e);
         }
         Ok((full, if any_sub { Some(subs) } else { None }))
     }
 
-    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Vec<f64> {
+    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Result<Vec<f64>> {
         let mut out = vec![0.0; self.d];
         let views: Vec<&[f64]> = vecs.iter().map(|v| v.as_slice()).collect();
         self.comm.allreduce_mean(&views, &mut out);
-        out
+        Ok(out)
     }
 
     fn avg_row_sq_norm(&mut self) -> Result<f64> {
@@ -710,29 +1132,13 @@ impl Cluster for TcpCluster {
             return Ok(v);
         }
         wire::encode_command(&Cmd::RowSq, &mut self.enc)?;
-        let (sent, mut first_err) = self.broadcast_enc();
+        let replies = self.broadcast_round()?;
         let mut total = 0.0;
-        for i in 0..sent {
-            match self.recv_reply(i) {
-                Ok(Reply::Scalar(v)) => {
-                    if first_err.is_none() {
-                        total += self.weights[i] * v;
-                    }
-                }
-                Ok(_) => {
-                    if first_err.is_none() {
-                        first_err = Some(self.unexpected(i));
-                    }
-                }
-                Err(e) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
+        for (i, r) in replies.into_iter().enumerate() {
+            match r {
+                Reply::Scalar(v) => total += self.weights[i] * v,
+                _ => return Err(self.unexpected(i)),
             }
-        }
-        if let Some(e) = first_err {
-            return Err(e);
         }
         let m = self.m();
         self.comm.count_round(m, 1);
@@ -775,4 +1181,5 @@ mod tests {
         assert_eq!(parse_listen_line("listening on "), None);
         assert_eq!(parse_listen_line("warming up"), None);
     }
+
 }

@@ -41,12 +41,14 @@ use super::Cluster;
 use crate::comm::roundchan::{
     round_channel, RecvTimeoutError, RoundReceiver, RoundSender,
 };
+use crate::comm::topology::{ExecTopology, RankGather, TreePlan};
 use crate::comm::wire::{Command as Cmd, Reply};
 use crate::comm::{Collective, CommStats, NetModel};
 use crate::data::{shard_dataset, Dataset, Shard};
 use crate::linalg::ops;
 use crate::loss::Objective;
 use crate::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -64,9 +66,48 @@ struct WorkerHandle {
     join: Option<JoinHandle<()>>,
 }
 
+/// One leader-adjacent link of the tree wiring: the root child's
+/// channels, carrying its whole subtree's replies in preorder
+/// (`ranks`), exactly like a TCP root link carries preorder frames.
+struct TreeRootLink {
+    ranks: Vec<usize>,
+    tx: RoundSender<Cmd>,
+    rx: RoundReceiver<Reply>,
+    /// Latched after a reply-budget timeout: the wedged subtree may put
+    /// a *stale* reply in the rendezvous slot later, and reading it
+    /// would attribute an old round's value to a new round. A latched
+    /// link fails every later round fast instead.
+    dead: Option<String>,
+}
+
+/// One downstream link held by a relaying worker thread.
+struct TreeChildLink {
+    rank: usize,
+    ranks: Vec<usize>,
+    tx: RoundSender<Cmd>,
+    rx: RoundReceiver<Reply>,
+}
+
+/// Binomial-relay wiring: the leader holds only the root links; every
+/// other channel pair lives between a worker and its tree parent.
+struct TreeWiring {
+    links: Vec<TreeRootLink>,
+    joins: Vec<Option<JoinHandle<()>>>,
+}
+
 /// Leader + m worker threads.
 pub struct ThreadedCluster {
+    /// Star wiring: one command/reply channel pair per worker (empty in
+    /// tree mode).
     handles: Vec<WorkerHandle>,
+    /// Tree wiring (`ExecTopology::Tree`); `None` for the star
+    /// strategies.
+    tree: Option<TreeWiring>,
+    /// Per-worker kill switches (fault-injection tests): a flagged
+    /// worker exits on its next command without replying, exactly like
+    /// a SIGKILLed process — its channels disconnect and, in tree mode,
+    /// its whole subtree unwinds.
+    kills: Vec<Arc<AtomicBool>>,
     obj: Arc<dyn Objective>,
     comm: Collective,
     d: usize,
@@ -114,6 +155,29 @@ impl ThreadedCluster {
         net: NetModel,
         gram_threads: Option<usize>,
     ) -> Self {
+        Self::with_topology(ds, obj, m, seed, net, gram_threads, ExecTopology::Star)
+    }
+
+    /// Full constructor: like [`ThreadedCluster::with_net_threads`] with
+    /// an explicit collective execution topology. The star strategies
+    /// share one wiring — the per-worker worker threads *are* the
+    /// parallel star's I/O actors, so sequential and parallel star
+    /// coincide in memory (the distinction is real on `TcpCluster`,
+    /// where writes and reads serialize on actual sockets). `Tree`
+    /// builds the binomial relay wiring instead: the leader talks to
+    /// O(log m) root children and interior workers relay
+    /// ([`crate::comm::topology::TreePlan`]). Traces are bit-identical
+    /// across all three — the reduction is always a rank-order fold at
+    /// the root.
+    pub fn with_topology(
+        ds: &Dataset,
+        obj: Arc<dyn Objective>,
+        m: usize,
+        seed: u64,
+        net: NetModel,
+        gram_threads: Option<usize>,
+        topology: ExecTopology,
+    ) -> Self {
         let shards = shard_dataset(ds, m, seed);
         let d = ds.d();
         let total: usize = shards.iter().map(|s| s.n_effective()).sum();
@@ -121,24 +185,51 @@ impl ThreadedCluster {
             .iter()
             .map(|s| s.n_effective() as f64 / total as f64)
             .collect();
-        let reply_pool = vec![vec![0.0; d]; shards.len()];
-        let handles = shards
-            .into_iter()
-            .enumerate()
-            .map(|(id, shard)| spawn_worker(id, shard, obj.clone(), gram_threads))
-            .collect();
+        let kills: Vec<Arc<AtomicBool>> =
+            (0..shards.len()).map(|_| Arc::new(AtomicBool::new(false))).collect();
+        // The zero-allocation scratch (reply pool, broadcast slots) only
+        // serves the star wiring; tree rounds allocate their replies, so
+        // tree mode carries no dead buffers.
+        let star = !topology.is_tree();
+        let reply_pool =
+            if star { vec![vec![0.0; d]; shards.len()] } else { Vec::new() };
+        let slot = || Arc::new(if star { vec![0.0; d] } else { Vec::new() });
+        let (bcast_w, bcast_g) = (slot(), slot());
+        let (handles, tree) = if topology.is_tree() {
+            (Vec::new(), Some(build_tree_wiring(shards, &obj, gram_threads, &kills)))
+        } else {
+            let handles = shards
+                .into_iter()
+                .enumerate()
+                .map(|(id, shard)| {
+                    spawn_worker(id, shard, obj.clone(), gram_threads, kills[id].clone())
+                })
+                .collect();
+            (handles, None)
+        };
         ThreadedCluster {
             handles,
+            tree,
+            kills,
             obj,
             comm: Collective::new(net),
             d,
             weights,
             row_sq: None,
-            bcast_w: Arc::new(vec![0.0; d]),
-            bcast_g: Arc::new(vec![0.0; d]),
+            bcast_w,
+            bcast_g,
             reply_pool,
             reply_timeout: DEFAULT_REPLY_TIMEOUT,
         }
+    }
+
+    /// Flip worker `i`'s kill switch: it exits on its next command
+    /// without replying — the in-memory analog of SIGKILLing a worker
+    /// process, deterministic for fault-injection tests. In tree mode a
+    /// killed interior node takes its whole subtree's channels down;
+    /// the round that observes it surfaces `Err` and drains cleanly.
+    pub fn kill_worker(&mut self, i: usize) {
+        self.kills[i].store(true, Ordering::Relaxed);
     }
 
     /// Override the per-reply wait budget (tests use tight budgets to
@@ -190,6 +281,143 @@ impl ThreadedCluster {
         }
     }
 
+    // ---- tree-relay leader side -------------------------------------
+
+    /// One broadcast round over the tree wiring: send `cmd` down every
+    /// root link, collect each link's preorder reply bundle, slot by
+    /// rank, surface the lowest-rank error after draining everything.
+    /// A link that disconnects or goes silent past the reply budget has
+    /// its remaining ranks answered with errors immediately — no
+    /// per-rank timeout stacking.
+    fn tree_round(&mut self, cmd: &Cmd) -> Result<Vec<Reply>> {
+        let m = self.weights.len();
+        let timeout = self.reply_timeout;
+        let tree = self.tree.as_mut().expect("tree wiring");
+        let mut gather = RankGather::new(m);
+        let mut sent = Vec::with_capacity(tree.links.len());
+        for l in &tree.links {
+            sent.push(l.dead.is_none() && l.tx.send(cmd.relay_copy()).is_ok());
+        }
+        for (li, l) in tree.links.iter_mut().enumerate() {
+            let mut dead: Option<String> = if let Some(msg) = &l.dead {
+                Some(msg.clone())
+            } else if sent[li] {
+                None
+            } else {
+                Some(format!("worker {} died before the round", l.ranks[0]))
+            };
+            let mut latch: Option<String> = None;
+            for &rank in &l.ranks {
+                let res = match &dead {
+                    Some(msg) => Err(crate::Error::Runtime(msg.clone())),
+                    None => match l.rx.recv_timeout(timeout) {
+                        Ok(rep) => Ok(rep),
+                        Err(RecvTimeoutError::Disconnected) => {
+                            let msg =
+                                format!("worker {} died mid-round", l.ranks[0]);
+                            dead = Some(msg.clone());
+                            Err(crate::Error::Runtime(msg))
+                        }
+                        Err(RecvTimeoutError::Timeout) => {
+                            // A wedged (alive) subtree may still deliver
+                            // this round's replies later — latch the
+                            // link so they are never read as a future
+                            // round's values.
+                            let msg = format!(
+                                "worker {} wedged: no reply within {timeout:?}",
+                                l.ranks[0]
+                            );
+                            dead = Some(msg.clone());
+                            latch = Some(msg.clone());
+                            Err(crate::Error::Runtime(msg))
+                        }
+                    },
+                };
+                gather.put(rank, res);
+            }
+            if latch.is_some() {
+                l.dead = latch;
+            }
+        }
+        gather.into_result()
+    }
+
+    /// Point-to-point round over the tree wiring: a `For` envelope down
+    /// the link holding `rank`, one reply back. Only the path nodes are
+    /// touched — the rest of the cluster idles, like the star engines'
+    /// single-worker sends.
+    fn tree_single(&mut self, rank: usize, cmd: Cmd) -> Result<Reply> {
+        let timeout = self.reply_timeout;
+        let tree = self.tree.as_mut().expect("tree wiring");
+        let link = tree
+            .links
+            .iter_mut()
+            .find(|l| l.ranks.contains(&rank))
+            .ok_or_else(|| {
+                crate::Error::Runtime(format!("no tree link holds worker {rank}"))
+            })?;
+        if let Some(msg) = &link.dead {
+            return Err(crate::Error::Runtime(msg.clone()));
+        }
+        link.tx
+            .send(Cmd::For { rank, inner: Box::new(cmd) })
+            .map_err(|_| {
+                crate::Error::Runtime(format!("worker {} died mid-round", link.ranks[0]))
+            })?;
+        match link.rx.recv_timeout(timeout) {
+            Ok(Reply::Err(e)) => {
+                Err(crate::Error::Runtime(format!("worker {rank}: {e}")))
+            }
+            Ok(r) => Ok(r),
+            Err(RecvTimeoutError::Disconnected) => Err(crate::Error::Runtime(format!(
+                "worker {} died mid-round",
+                link.ranks[0]
+            ))),
+            Err(RecvTimeoutError::Timeout) => {
+                // see tree_round: a late reply must not leak into a
+                // future round — latch the link dead.
+                let msg = format!(
+                    "worker {} wedged: no reply within {timeout:?}",
+                    link.ranks[0]
+                );
+                link.dead = Some(msg.clone());
+                Err(crate::Error::Runtime(msg))
+            }
+        }
+    }
+
+    /// Tree-mode gradient+loss gather: rank-order weighted fold from the
+    /// buffered bundle — bit-identical to the star engines' reduction.
+    fn tree_grad_loss_into(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
+        let cmd = Cmd::GradLoss { w: Arc::new(w.to_vec()), out: Vec::new() };
+        let replies = self.tree_round(&cmd)?;
+        g.fill(0.0);
+        let mut loss = 0.0;
+        for (i, r) in replies.into_iter().enumerate() {
+            match r {
+                Reply::VecScalar(gi, li) if gi.len() == g.len() => {
+                    ops::axpy(self.weights[i], &gi, g);
+                    loss += self.weights[i] * li;
+                }
+                _ => return Err(self.unexpected(i)),
+            }
+        }
+        Ok(loss)
+    }
+
+    fn tree_loss(&mut self, w: &[f64]) -> Result<f64> {
+        let cmd = Cmd::Loss { w: Arc::new(w.to_vec()) };
+        let replies = self.tree_round(&cmd)?;
+        let mut loss = 0.0;
+        for (i, r) in replies.into_iter().enumerate() {
+            match r {
+                Reply::Scalar(l) => loss += self.weights[i] * l,
+                _ => return Err(self.unexpected(i)),
+            }
+        }
+        Ok(loss)
+    }
+
     /// Weighted gradient+loss gather into `g` — the uncounted body shared
     /// by the counted and instrumentation paths. Accumulates n_i-weighted
     /// in rank order, bit-identical to SerialCluster's reduction
@@ -197,6 +425,9 @@ impl ThreadedCluster {
     /// still drained, so the lockstep protocol stays usable and only the
     /// first error surfaces.
     fn gather_grad_loss_into(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
+        if self.tree.is_some() {
+            return self.tree_grad_loss_into(w, g);
+        }
         load_bcast(&mut self.bcast_w, w);
         let mut sent = 0;
         let mut first_err: Option<crate::Error> = None;
@@ -248,6 +479,9 @@ impl ThreadedCluster {
 
     /// Weighted loss-only gather (uncounted body; drains on failure).
     fn gather_loss(&mut self, w: &[f64]) -> Result<f64> {
+        if self.tree.is_some() {
+            return self.tree_loss(w);
+        }
         load_bcast(&mut self.bcast_w, w);
         let mut sent = 0;
         let mut first_err: Option<crate::Error> = None;
@@ -304,6 +538,7 @@ fn spawn_worker(
     shard: Shard,
     obj: Arc<dyn Objective>,
     gram_threads: Option<usize>,
+    kill: Arc<AtomicBool>,
 ) -> WorkerHandle {
     let (cmd_tx, cmd_rx) = round_channel::<Cmd>();
     let (rep_tx, rep_rx) = round_channel::<Reply>();
@@ -318,6 +553,11 @@ fn spawn_worker(
             // `worker::serve::execute_command`, so this engine answers
             // every wire command exactly like a TCP worker process.
             while let Ok(cmd) = cmd_rx.recv() {
+                // A flagged worker dies silently mid-round, like a
+                // SIGKILLed process: channels disconnect, no reply.
+                if kill.load(Ordering::Relaxed) {
+                    return;
+                }
                 // execute_command consumes the command, dropping the
                 // broadcast Arcs with it, so the leader's get_mut
                 // succeeds next round.
@@ -329,6 +569,158 @@ fn spawn_worker(
         })
         .expect("spawn worker thread");
     WorkerHandle { tx: cmd_tx, rx: rep_rx, join: Some(join) }
+}
+
+/// Build the binomial relay wiring: one command/reply channel pair per
+/// tree edge. The leader ends up holding only the root links; every
+/// interior worker owns the links to its children and runs the relay
+/// loop ([`spawn_tree_worker`]).
+fn build_tree_wiring(
+    shards: Vec<Shard>,
+    obj: &Arc<dyn Objective>,
+    gram_threads: Option<usize>,
+    kills: &[Arc<AtomicBool>],
+) -> TreeWiring {
+    let m = shards.len();
+    let plan = TreePlan::new(m);
+    let mut cmd_tx: Vec<Option<RoundSender<Cmd>>> = Vec::with_capacity(m);
+    let mut cmd_rx: Vec<Option<RoundReceiver<Cmd>>> = Vec::with_capacity(m);
+    let mut rep_tx: Vec<Option<RoundSender<Reply>>> = Vec::with_capacity(m);
+    let mut rep_rx: Vec<Option<RoundReceiver<Reply>>> = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (ct, cr) = round_channel::<Cmd>();
+        let (rt, rr) = round_channel::<Reply>();
+        cmd_tx.push(Some(ct));
+        cmd_rx.push(Some(cr));
+        rep_tx.push(Some(rt));
+        rep_rx.push(Some(rr));
+    }
+    // Hand each parent the downstream ends of its children's channels.
+    let mut child_links: Vec<Vec<TreeChildLink>> = (0..m).map(|_| Vec::new()).collect();
+    for r in 0..m {
+        for &c in plan.children_of(r) {
+            child_links[r].push(TreeChildLink {
+                rank: c,
+                ranks: plan.subtree_ranks(c),
+                tx: cmd_tx[c].take().expect("child cmd end unclaimed"),
+                rx: rep_rx[c].take().expect("child rep end unclaimed"),
+            });
+        }
+    }
+    let mut joins = Vec::with_capacity(m);
+    let mut child_links = child_links.into_iter();
+    for (id, shard) in shards.into_iter().enumerate() {
+        let links = child_links.next().expect("one link set per worker");
+        joins.push(Some(spawn_tree_worker(
+            id,
+            shard,
+            obj.clone(),
+            gram_threads,
+            kills[id].clone(),
+            cmd_rx[id].take().expect("own cmd end unclaimed"),
+            rep_tx[id].take().expect("own rep end unclaimed"),
+            links,
+        )));
+    }
+    let links = plan
+        .root_links()
+        .iter()
+        .map(|ranks| {
+            let root = ranks[0];
+            TreeRootLink {
+                ranks: ranks.clone(),
+                tx: cmd_tx[root].take().expect("root cmd end unclaimed"),
+                rx: rep_rx[root].take().expect("root rep end unclaimed"),
+                dead: None,
+            }
+        })
+        .collect();
+    TreeWiring { links, joins }
+}
+
+/// The relay loop an interior (or leaf) tree worker runs: the in-memory
+/// mirror of the TCP worker's serve session — commands fan out to
+/// children before local compute, replies bundle upward in preorder,
+/// and a dead child is answered for with synthesized `Reply::Err`
+/// values so the frame-count discipline holds.
+#[allow(clippy::too_many_arguments)]
+fn spawn_tree_worker(
+    id: usize,
+    shard: Shard,
+    obj: Arc<dyn Objective>,
+    gram_threads: Option<usize>,
+    kill: Arc<AtomicBool>,
+    parent_rx: RoundReceiver<Cmd>,
+    parent_tx: RoundSender<Reply>,
+    children: Vec<TreeChildLink>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("dane-tree-worker-{id}"))
+        .spawn(move || {
+            let mut worker = crate::worker::Worker::new(id, shard, obj);
+            worker.set_gram_threads(gram_threads);
+            let child_died = |rank: usize| {
+                Reply::Err(format!("relay child worker {rank} died mid-round"))
+            };
+            while let Ok(cmd) = parent_rx.recv() {
+                if kill.load(Ordering::Relaxed) {
+                    return; // silent death: parent + children disconnect
+                }
+                match cmd {
+                    Cmd::For { rank, inner } if rank != id => {
+                        // Route toward the subtree that holds the target;
+                        // exactly one reply flows back.
+                        let reply = match children
+                            .iter()
+                            .find(|c| c.ranks.contains(&rank))
+                        {
+                            None => Reply::Err(format!(
+                                "unroutable For: no subtree holds worker {rank}"
+                            )),
+                            Some(c) => {
+                                if c.tx.send(Cmd::For { rank, inner }).is_ok() {
+                                    c.rx.recv().unwrap_or_else(|_| child_died(c.rank))
+                                } else {
+                                    child_died(c.rank)
+                                }
+                            }
+                        };
+                        if parent_tx.send(reply).is_err() {
+                            return;
+                        }
+                    }
+                    cmd => {
+                        // Broadcast round (For-to-self included: no child
+                        // is addressed, execute_command unwraps it).
+                        let fan_out = !matches!(cmd, Cmd::For { .. });
+                        if fan_out {
+                            for c in &children {
+                                let _ = c.tx.send(cmd.relay_copy());
+                            }
+                        }
+                        let own =
+                            crate::worker::serve::execute_command(&mut worker, cmd);
+                        if parent_tx.send(own).is_err() {
+                            return;
+                        }
+                        if fan_out {
+                            for c in &children {
+                                for _ in 0..c.ranks.len() {
+                                    let rep = c
+                                        .rx
+                                        .recv()
+                                        .unwrap_or_else(|_| child_died(c.rank));
+                                    if parent_tx.send(rep).is_err() {
+                                        return;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        })
+        .expect("spawn tree worker thread")
 }
 
 impl Drop for ThreadedCluster {
@@ -344,12 +736,24 @@ impl Drop for ThreadedCluster {
                 let _ = j.join();
             }
         }
+        // Tree wiring: the leader only holds the root links; dropping
+        // them unwinds the root children, whose dropped child links
+        // unwind the next level — the disconnect cascades to the leaves,
+        // after which every join completes.
+        if let Some(mut tree) = self.tree.take() {
+            tree.links.clear();
+            for j in tree.joins.iter_mut() {
+                if let Some(j) = j.take() {
+                    let _ = j.join();
+                }
+            }
+        }
     }
 }
 
 impl Cluster for ThreadedCluster {
     fn m(&self) -> usize {
-        self.handles.len()
+        self.weights.len()
     }
 
     fn dim(&self) -> usize {
@@ -400,6 +804,30 @@ impl Cluster for ThreadedCluster {
         mu: f64,
         out: &mut [f64],
     ) -> Result<()> {
+        if self.tree.is_some() {
+            let cmd = Cmd::DaneSolve {
+                w_prev: Arc::new(w_prev.to_vec()),
+                g: Arc::new(g.to_vec()),
+                eta,
+                mu,
+                out: Vec::new(),
+            };
+            let replies = self.tree_round(&cmd)?;
+            out.fill(0.0);
+            let inv_m = 1.0 / self.weights.len() as f64;
+            for (i, r) in replies.into_iter().enumerate() {
+                match r {
+                    Reply::Vec(wi) if wi.len() == out.len() => {
+                        // paper step (*): unweighted average in rank order
+                        ops::axpy(inv_m, &wi, out);
+                    }
+                    _ => return Err(self.unexpected(i)),
+                }
+            }
+            let m = self.m();
+            self.comm.count_round(m, self.d);
+            return Ok(());
+        }
         load_bcast(&mut self.bcast_w, w_prev);
         load_bcast(&mut self.bcast_g, g);
         let mut sent = 0;
@@ -460,6 +888,24 @@ impl Cluster for ThreadedCluster {
         eta: f64,
         mu: f64,
     ) -> Result<Vec<f64>> {
+        if self.tree.is_some() {
+            // Worker 0 heads the first root link (TreePlan invariant),
+            // so the For envelope reaches it without relaying.
+            let cmd = Cmd::DaneSolve {
+                w_prev: Arc::new(w_prev.to_vec()),
+                g: Arc::new(g.to_vec()),
+                eta,
+                mu,
+                out: Vec::new(),
+            };
+            let w1 = match self.tree_single(0, cmd)? {
+                Reply::Vec(w) if w.len() == self.d => w,
+                _ => return Err(self.unexpected(0)),
+            };
+            let m = self.m();
+            self.comm.count_round(m, self.d);
+            return Ok(w1);
+        }
         // Only rank 0 computes; everyone else idles this round. Not a
         // steady-state path, so the reply vector is freshly allocated by
         // the worker rather than pooled.
@@ -486,6 +932,21 @@ impl Cluster for ThreadedCluster {
 
     fn prox_all(&mut self, targets: &[Vec<f64>], rho: f64) -> Result<Vec<Vec<f64>>> {
         assert_eq!(targets.len(), self.m());
+        if self.tree.is_some() {
+            // One ProxAll frame relays down the tree; each worker picks
+            // its own target by rank (the uniform relay shape for the
+            // only per-worker-payload collective).
+            let cmd = Cmd::ProxAll { targets: targets.to_vec(), rho };
+            let replies = self.tree_round(&cmd)?;
+            let mut out = Vec::with_capacity(replies.len());
+            for (i, r) in replies.into_iter().enumerate() {
+                match r {
+                    Reply::Vec(w) => out.push(w),
+                    _ => return Err(self.unexpected(i)),
+                }
+            }
+            return Ok(out);
+        }
         let mut sent = 0;
         let mut first_err: Option<crate::Error> = None;
         for (i, v) in targets.iter().enumerate() {
@@ -528,6 +989,25 @@ impl Cluster for ThreadedCluster {
         &mut self,
         subsample: Option<(f64, u64)>,
     ) -> Result<(Vec<Vec<f64>>, Option<Vec<Vec<f64>>>)> {
+        if self.tree.is_some() {
+            let replies = self.tree_round(&Cmd::Erm { subsample })?;
+            let mut full = Vec::with_capacity(replies.len());
+            let mut subs: Vec<Vec<f64>> = Vec::new();
+            let mut any_sub = false;
+            for (i, r) in replies.into_iter().enumerate() {
+                match r {
+                    Reply::VecPair(f, s) => {
+                        full.push(f);
+                        if let Some(s) = s {
+                            subs.push(s);
+                            any_sub = true;
+                        }
+                    }
+                    _ => return Err(self.unexpected(i)),
+                }
+            }
+            return Ok((full, if any_sub { Some(subs) } else { None }));
+        }
         let mut sent = 0;
         let mut first_err: Option<crate::Error> = None;
         for i in 0..self.handles.len() {
@@ -572,16 +1052,30 @@ impl Cluster for ThreadedCluster {
         Ok((full, if any_sub { Some(subs) } else { None }))
     }
 
-    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Vec<f64> {
+    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Result<Vec<f64>> {
         let mut out = vec![0.0; self.d];
         let views: Vec<&[f64]> = vecs.iter().map(|v| v.as_slice()).collect();
         self.comm.allreduce_mean(&views, &mut out);
-        out
+        Ok(out)
     }
 
     fn avg_row_sq_norm(&mut self) -> Result<f64> {
         if let Some(v) = self.row_sq {
             return Ok(v);
+        }
+        if self.tree.is_some() {
+            let replies = self.tree_round(&Cmd::RowSq)?;
+            let mut total = 0.0;
+            for (i, r) in replies.into_iter().enumerate() {
+                match r {
+                    Reply::Scalar(v) => total += self.weights[i] * v,
+                    _ => return Err(self.unexpected(i)),
+                }
+            }
+            let m = self.m();
+            self.comm.count_round(m, 1);
+            self.row_sq = Some(total);
+            return Ok(total);
         }
         let mut sent = 0;
         let mut first_err: Option<crate::Error> = None;
@@ -756,6 +1250,104 @@ mod tests {
     fn worker_thread_shutdown_is_clean() {
         let (ds, obj, _) = fixture();
         let cluster = ThreadedCluster::new(&ds, obj, 4, 3);
+        drop(cluster); // must not hang or panic
+    }
+
+    fn tree_cluster(ds: &Dataset, obj: Arc<dyn Objective>, m: usize) -> ThreadedCluster {
+        ThreadedCluster::with_topology(
+            ds,
+            obj,
+            m,
+            3,
+            NetModel::free(),
+            None,
+            ExecTopology::Tree,
+        )
+    }
+
+    #[test]
+    fn tree_relay_matches_star_bitwise_on_every_collective() {
+        let (ds, obj, _) = fixture();
+        for m in [1usize, 2, 4, 7, 8] {
+            let mut star = ThreadedCluster::new(&ds, obj.clone(), m, 3);
+            let mut tree = tree_cluster(&ds, obj.clone(), m);
+            assert_eq!(star.m(), m);
+            assert_eq!(tree.m(), m);
+            let w = vec![0.1; 12];
+            let (gs, ls) = star.grad_and_loss(&w).unwrap();
+            let (gt, lt) = tree.grad_and_loss(&w).unwrap();
+            assert_eq!(gs, gt, "m={m}: gradient must be bit-identical");
+            assert_eq!(ls, lt);
+            assert_eq!(star.loss_only(&w).unwrap(), tree.loss_only(&w).unwrap());
+
+            let ds1 = star.dane_round(&w, &gs, 1.0, 0.01).unwrap();
+            let dt1 = tree.dane_round(&w, &gt, 1.0, 0.01).unwrap();
+            assert_eq!(ds1, dt1, "m={m}: DANE average must be bit-identical");
+
+            let fs = star.dane_round_first(&w, &gs, 1.0, 0.01).unwrap();
+            let ft = tree.dane_round_first(&w, &gt, 1.0, 0.01).unwrap();
+            assert_eq!(fs, ft, "m={m}: Theorem-5 path must be bit-identical");
+
+            let targets: Vec<Vec<f64>> =
+                (0..m).map(|k| vec![0.01 * k as f64; 12]).collect();
+            assert_eq!(
+                star.prox_all(&targets, 0.3).unwrap(),
+                tree.prox_all(&targets, 0.3).unwrap(),
+                "m={m}: prox"
+            );
+            let (es, _) = star.local_erms(Some((0.5, 3))).unwrap();
+            let (et, _) = tree.local_erms(Some((0.5, 3))).unwrap();
+            assert_eq!(es, et, "m={m}: local ERMs");
+            assert_eq!(
+                star.avg_row_sq_norm().unwrap(),
+                tree.avg_row_sq_norm().unwrap()
+            );
+            // same round/byte accounting; modeled seconds differ only
+            // through the NetModel topology, identical (free) here
+            assert_eq!(star.comm_stats(), tree.comm_stats());
+        }
+    }
+
+    #[test]
+    fn full_dane_run_on_tree_matches_star() {
+        let (ds, obj, phi_star) = fixture();
+        let ctx = RunCtx::new(20).with_reference(phi_star).with_tol(1e-9);
+        let mut star = ThreadedCluster::new(&ds, obj.clone(), 8, 3);
+        let mut tree = tree_cluster(&ds, obj, 8);
+        let rs = dane::run(&mut star, &Default::default(), &ctx).unwrap();
+        let rt = dane::run(&mut tree, &Default::default(), &ctx).unwrap();
+        assert!(rt.converged);
+        assert_eq!(rs.w, rt.w, "final iterates must be bit-identical");
+        assert_eq!(rs.trace.len(), rt.trace.len());
+        for (a, b) in rs.trace.rows.iter().zip(&rt.trace.rows) {
+            assert_eq!(a.objective, b.objective);
+            assert_eq!(a.comm_rounds, b.comm_rounds);
+            assert_eq!(a.comm_bytes, b.comm_bytes);
+        }
+    }
+
+    #[test]
+    fn killed_interior_tree_worker_surfaces_err_and_drains() {
+        let (ds, obj, _) = fixture();
+        // m=4: worker 0 relays for worker 2 — kill the *relay target*
+        // (interior link) and the root child in turn
+        for victim in [2usize, 0] {
+            let mut tree = tree_cluster(&ds, obj.clone(), 4);
+            let w = vec![0.1; 12];
+            tree.grad_and_loss(&w).unwrap();
+            tree.kill_worker(victim);
+            let err = tree.grad_and_loss(&w).unwrap_err().to_string();
+            assert!(err.contains("worker"), "victim {victim}: {err}");
+            // every later round keeps failing instead of hanging
+            assert!(tree.loss_only(&w).is_err(), "victim {victim}");
+            assert!(tree.dane_round(&w, &w, 1.0, 0.01).is_err(), "victim {victim}");
+        }
+    }
+
+    #[test]
+    fn tree_cluster_shutdown_is_clean() {
+        let (ds, obj, _) = fixture();
+        let cluster = tree_cluster(&ds, obj, 8);
         drop(cluster); // must not hang or panic
     }
 

@@ -12,9 +12,12 @@ use crate::{Error, Result};
 use std::io::BufRead;
 use std::path::Path;
 
-/// Parse a LIBSVM file: `label idx:val idx:val ...` per line, 1-based
-/// indices. `dim` pads/overrides the inferred feature dimension (0 =
-/// infer from the data).
+/// Parse a LIBSVM file: `label [qid:N] idx:val idx:val ...` per line,
+/// 1-based indices. `#` comment lines (and `#`-introduced trailing
+/// comments, per the LIBSVM tools convention) are skipped, as are
+/// ranking `qid:` tokens — the group id has no feature column. `dim`
+/// pads/overrides the inferred feature dimension (0 = infer from the
+/// data).
 pub fn load(path: &Path, dim: usize) -> Result<Dataset> {
     let file = std::fs::File::open(path)?;
     let reader = std::io::BufReader::new(file);
@@ -32,8 +35,10 @@ where
     let mut max_col = 0usize;
     for (lineno, line) in lines.enumerate() {
         let line = line?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
+        // `#` starts a comment: a whole comment line, or a trailing
+        // comment after the features (LIBSVM tools emit both).
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
             continue;
         }
         let mut parts = line.split_ascii_whitespace();
@@ -48,6 +53,14 @@ where
             let (idx, val) = tok
                 .split_once(':')
                 .ok_or_else(|| bad(lineno, "feature not idx:val"))?;
+            // Ranking files carry a query-group token (`qid:7`) between
+            // the label and the features; it names no feature column,
+            // so it is validated and skipped.
+            if idx == "qid" {
+                val.parse::<u64>()
+                    .map_err(|_| bad(lineno, "bad qid value"))?;
+                continue;
+            }
             let idx: usize =
                 idx.parse().map_err(|_| bad(lineno, "bad feature index"))?;
             if idx == 0 {
@@ -105,6 +118,45 @@ mod tests {
         assert_eq!(ds.y, vec![1.0, -1.0, 1.0]);
         assert_eq!(ds.x.row_dot(0, &[1.0, 0.0, 0.0]), 0.5);
         assert_eq!(ds.x.row_dot(0, &[0.0, 0.0, 1.0]), 2.0);
+    }
+
+    #[test]
+    fn comment_lines_and_trailing_comments_skipped() {
+        let ds = parse(
+            lines("# header comment\n+1 1:0.5 # trailing note 9:9\n  # indented\n-1 2:1.0"),
+            0,
+            "test",
+        )
+        .unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d(), 2, "commented-out features must not widen the data");
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+        assert_eq!(ds.x.row_dot(0, &[1.0, 0.0]), 0.5);
+    }
+
+    #[test]
+    fn qid_tokens_are_skipped_not_features() {
+        let ds = parse(
+            lines("+1 qid:1 1:0.5 3:2.0\n-1 qid:1 2:1.0\n+1 qid:2 1:0.25"),
+            0,
+            "test",
+        )
+        .unwrap();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.d(), 3, "qid must not become a feature column");
+        assert_eq!(ds.x.row_dot(0, &[1.0, 0.0, 0.0]), 0.5);
+        assert_eq!(ds.x.row_dot(2, &[1.0, 0.0, 0.0]), 0.25);
+        // malformed qid values are rejected, not silently dropped
+        assert!(parse(lines("+1 qid:x 1:1"), 0, "t").is_err());
+    }
+
+    #[test]
+    fn dimension_inferred_from_data_when_dim_is_zero() {
+        let ds = parse(lines("+1 7:1.0\n-1 2:1.0"), 0, "test").unwrap();
+        assert_eq!(ds.d(), 7, "dim 0 must infer the max 1-based index");
+        // and inference composes with qid/comments
+        let ds = parse(lines("+1 qid:3 5:1.0 # tail\n-1 2:1.0"), 0, "test").unwrap();
+        assert_eq!(ds.d(), 5);
     }
 
     #[test]

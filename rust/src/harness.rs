@@ -7,7 +7,7 @@
 //! sizes so the same code smoke-tests in seconds and reproduces at full
 //! size; EXPERIMENTS.md records the scale used for the committed numbers.
 
-use crate::comm::NetModel;
+use crate::comm::{ExecTopology, NetModel};
 use crate::config::{EngineKind, LossKind};
 use crate::coordinator::tcp::TcpCluster;
 use crate::coordinator::threaded::ThreadedCluster;
@@ -29,6 +29,7 @@ use std::sync::Arc;
 /// name to ship in the Init frames, hence the `loss`/`lambda` pair
 /// instead of a prebuilt objective); it can fail to come up, hence the
 /// `Result`.
+#[allow(clippy::too_many_arguments)]
 fn build_cluster(
     ds: &Dataset,
     loss: LossKind,
@@ -37,13 +38,18 @@ fn build_cluster(
     seed: u64,
     net: NetModel,
     engine: EngineKind,
+    topology: ExecTopology,
 ) -> Result<Box<dyn Cluster>> {
     let obj = make_objective(loss, lambda);
     Ok(match engine {
+        // inline execution — the topology only matters to the model,
+        // which the caller already picked via `net`
         EngineKind::Serial => Box::new(SerialCluster::with_net(ds, obj, m, seed, net)),
-        EngineKind::Threaded => Box::new(ThreadedCluster::with_net(ds, obj, m, seed, net)),
+        EngineKind::Threaded => Box::new(ThreadedCluster::with_topology(
+            ds, obj, m, seed, net, None, topology,
+        )),
         EngineKind::Tcp => Box::new(TcpCluster::self_hosted(
-            ds, loss, lambda, m, seed, net, None, None,
+            ds, loss, lambda, m, seed, net, None, None, topology,
         )?),
     })
 }
@@ -53,19 +59,28 @@ fn build_cluster(
 // ---------------------------------------------------------------------
 
 /// Tiny end-to-end smoke run: fig. 2 setup, m = 4, a few rounds, on the
-/// requested engine.
-pub fn quickstart(engine: EngineKind) -> Result<()> {
+/// requested engine and collective topology.
+pub fn quickstart(engine: EngineKind, topology: ExecTopology) -> Result<()> {
     let ds = data::synthetic_fig2(2048, 100, 0.005, 42);
     let lam = data::synthetic::fig2_lambda(0.005);
     let obj = make_objective(crate::config::LossKind::Ridge, lam);
     let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard())?;
-    let mut cluster =
-        build_cluster(&ds, crate::config::LossKind::Ridge, lam, 4, 42, NetModel::free(), engine)?;
+    let mut cluster = build_cluster(
+        &ds,
+        crate::config::LossKind::Ridge,
+        lam,
+        4,
+        42,
+        NetModel::free(),
+        engine,
+        topology,
+    )?;
     let ctx = RunCtx::new(15).with_reference(phi_star).with_tol(1e-10);
     let res = dane::run(cluster.as_mut(), &dane::DaneOptions::default(), &ctx)?;
     println!(
-        "quickstart: DANE on fig2(n=2048, d=100), m=4 [engine: {}]",
-        engine.name()
+        "quickstart: DANE on fig2(n=2048, d=100), m=4 [engine: {} topology: {}]",
+        engine.name(),
+        topology.name()
     );
     for r in &res.trace.rows {
         println!(
@@ -97,7 +112,12 @@ pub struct Fig2Cell {
 
 /// The paper's grid: m in {4, 16, 64}, N in {4096, 16384, 65536}/scale,
 /// d = 500, ridge reg 0.005, DANE(eta=1, mu=0) vs ADMM.
-pub fn fig2(scale: usize, out: &Path, engine: EngineKind) -> Result<Vec<Fig2Cell>> {
+pub fn fig2(
+    scale: usize,
+    out: &Path,
+    engine: EngineKind,
+    topology: ExecTopology,
+) -> Result<Vec<Fig2Cell>> {
     let d = 500;
     let paper_reg = 0.005;
     let lam = data::synthetic::fig2_lambda(paper_reg);
@@ -127,6 +147,7 @@ pub fn fig2(scale: usize, out: &Path, engine: EngineKind) -> Result<Vec<Fig2Cell
                     7,
                     NetModel::datacenter(),
                     engine,
+                    topology,
                 )?;
                 let ctx = RunCtx::new(rounds)
                     .with_reference(phi_star)
@@ -203,7 +224,12 @@ pub fn fig34_datasets(scale: usize) -> Vec<(Dataset, f64)> {
 /// m in {2..64}, DANE (mu = 0 and mu = 3 lambda) and ADMM; entry =
 /// iterations to suboptimality < 1e-6 (None = "*", no convergence within
 /// the budget, exactly the paper's notation).
-pub fn fig3(scale: usize, out: &Path, engine: EngineKind) -> Result<Vec<Fig3Column>> {
+pub fn fig3(
+    scale: usize,
+    out: &Path,
+    engine: EngineKind,
+    topology: ExecTopology,
+) -> Result<Vec<Fig3Column>> {
     let ms = vec![2usize, 4, 8, 16, 32, 64];
     let budget = 100;
     std::fs::create_dir_all(out)?;
@@ -228,6 +254,7 @@ pub fn fig3(scale: usize, out: &Path, engine: EngineKind) -> Result<Vec<Fig3Colu
                     7,
                     NetModel::free(),
                     engine,
+                    topology,
                 )?;
                 let res = dane::run(
                     cluster.as_mut(),
@@ -244,6 +271,7 @@ pub fn fig3(scale: usize, out: &Path, engine: EngineKind) -> Result<Vec<Fig3Colu
                 7,
                 NetModel::free(),
                 engine,
+                topology,
             )?;
             // rho tuned once per workload family: consensus ADMM's rate
             // depends on rho, not on the (tiny) lambda; 0.1 is the best
@@ -320,7 +348,12 @@ pub struct Fig4Panel {
 /// Fig. 4: average regularized test loss vs iteration for m = 64 on the
 /// three datasets; DANE(mu = 3 lambda), ADMM, bias-corrected OSA, and the
 /// exact minimizer's level.
-pub fn fig4(scale: usize, out: &Path, engine: EngineKind) -> Result<Vec<Fig4Panel>> {
+pub fn fig4(
+    scale: usize,
+    out: &Path,
+    engine: EngineKind,
+    topology: ExecTopology,
+) -> Result<Vec<Fig4Panel>> {
     let m = 64;
     let rounds = 30;
     std::fs::create_dir_all(out)?;
@@ -350,6 +383,7 @@ pub fn fig4(scale: usize, out: &Path, engine: EngineKind) -> Result<Vec<Fig4Pane
                 7,
                 NetModel::free(),
                 engine,
+                topology,
             )?;
             let res = dane::run(
                 cluster.as_mut(),
@@ -368,6 +402,7 @@ pub fn fig4(scale: usize, out: &Path, engine: EngineKind) -> Result<Vec<Fig4Pane
                 7,
                 NetModel::free(),
                 engine,
+                topology,
             )?;
             let res =
                 admm::run(cluster.as_mut(), &admm::AdmmOptions { rho: ADMM_RHO }, &ctx)?;
@@ -383,6 +418,7 @@ pub fn fig4(scale: usize, out: &Path, engine: EngineKind) -> Result<Vec<Fig4Pane
                 7,
                 NetModel::free(),
                 engine,
+                topology,
             )?;
             let res = osa::run(
                 cluster.as_mut(),
@@ -545,7 +581,7 @@ mod tests {
     #[test]
     fn fig2_smoke_scale() {
         let dir = crate::util::tempdir::TempDir::new("fig2").unwrap();
-        let cells = fig2(64, dir.path(), EngineKind::Serial).unwrap();
+        let cells = fig2(64, dir.path(), EngineKind::Serial, ExecTopology::Star).unwrap();
         assert!(!cells.is_empty());
         // DANE's contraction at the largest N should beat its contraction
         // at the smallest N for the same m (Theorem 3).

@@ -66,7 +66,7 @@ pub use error::{Error, Result};
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
-    pub use crate::comm::{CommStats, NetModel, Topology};
+    pub use crate::comm::{CommStats, ExecTopology, NetModel, Topology};
     pub use crate::config::{AlgoConfig, DatasetConfig, EngineKind, ExperimentConfig};
     pub use crate::coordinator::admm::AdmmOptions;
     pub use crate::coordinator::dane::DaneOptions;

@@ -19,6 +19,7 @@
 //! is in-tree (offline build — no clap); see `Args`. Unknown subcommands
 //! and unknown flags print USAGE and exit non-zero.
 
+use dane::comm::ExecTopology;
 use dane::config::{EngineKind, ExperimentConfig};
 use dane::coordinator::driver::run_experiment;
 use dane::harness;
@@ -30,12 +31,12 @@ dane — Communication-efficient distributed optimization (DANE, ICML 2014)
 
 USAGE:
     dane run --config <exp.json> [--csv <out.csv>] [--quiet]
-             [--engine serial|threaded|tcp]
+             [--engine serial|threaded|tcp] [--topology star|star-seq|tree]
     dane worker --listen <addr>          # serve one shard over TCP
-    dane quickstart [--engine serial|threaded|tcp]
-    dane fig2   [--scale <K>] [--out <dir>] [--engine serial|threaded|tcp]
-    dane fig3   [--scale <K>] [--out <dir>] [--engine serial|threaded|tcp]
-    dane fig4   [--scale <K>] [--out <dir>] [--engine serial|threaded|tcp]
+    dane quickstart [--engine serial|threaded|tcp] [--topology star|star-seq|tree]
+    dane fig2   [--scale <K>] [--out <dir>] [--engine ...] [--topology ...]
+    dane fig3   [--scale <K>] [--out <dir>] [--engine ...] [--topology ...]
+    dane fig4   [--scale <K>] [--out <dir>] [--engine ...] [--topology ...]
     dane thm1   [--reps <N>]
     dane lemma2
     dane help
@@ -45,8 +46,13 @@ The cluster engine for `run` comes from the config (\"engine\": \"serial\"
 Gram-build kernel); `--engine` overrides the config value. The tcp
 engine connects to the config's \"workers\" address list
 (`dane worker --listen <addr>` processes), or spawns its own loopback
-worker processes when the list is absent. Worker failures and wedged
-workers surface as `error: ...` + non-zero exit.";
+worker processes when the list is absent. `--topology` (config key
+\"topology\") picks how the concurrent engines execute collectives:
+\"star\" = parallel star (default, per-connection I/O threads),
+\"star-seq\" = the leader-serialized baseline, \"tree\" = binomial
+relay through the workers; traces are bit-identical across topologies,
+only the modeled seconds and measured wire bytes move. Worker failures
+and wedged workers surface as `error: ...` + non-zero exit.";
 
 /// Tiny flag parser: --key value pairs after the subcommand.
 struct Args {
@@ -97,11 +103,19 @@ impl Args {
         Ok(v)
     }
 
-    /// Parse `--engine serial|threaded` (default serial).
+    /// Parse `--engine serial|threaded|tcp` (default serial).
     fn get_engine(&self) -> Result<EngineKind, String> {
         match self.get("engine") {
             None => Ok(EngineKind::Serial),
             Some(v) => EngineKind::from_name(v).map_err(|e| e.to_string()),
+        }
+    }
+
+    /// Parse `--topology star|star-seq|tree` (default: parallel star).
+    fn get_topology(&self) -> Result<ExecTopology, String> {
+        match self.get("topology") {
+            None => Ok(ExecTopology::default()),
+            Some(v) => ExecTopology::from_name(v).map_err(|e| e.to_string()),
         }
     }
 
@@ -158,11 +172,11 @@ fn run(argv: &[String]) -> Result<(), String> {
     };
     let args = Args::parse(&argv[1..])?;
     let (value_flags, bool_flags): (&[&str], &[&str]) = match cmd.as_str() {
-        "run" => (&["config", "csv", "engine"], &["quiet"]),
+        "run" => (&["config", "csv", "engine", "topology"], &["quiet"]),
         "worker" => (&["listen"], &[]),
-        "fig2" | "fig3" | "fig4" => (&["scale", "out", "engine"], &[]),
+        "fig2" | "fig3" | "fig4" => (&["scale", "out", "engine", "topology"], &[]),
         "thm1" => (&["reps"], &[]),
-        "quickstart" => (&["engine"], &[]),
+        "quickstart" => (&["engine", "topology"], &[]),
         "lemma2" | "help" | "--help" | "-h" => (&[], &[]),
         other => return Err(format!("unknown subcommand {other:?}")),
     };
@@ -176,9 +190,13 @@ fn run(argv: &[String]) -> Result<(), String> {
                 .ok_or("run requires --config <exp.json>")?;
             let mut cfg = ExperimentConfig::from_json_file(&PathBuf::from(config))
                 .map_err(e2s)?;
-            // The config's engine wins unless the flag is passed.
+            // The config's engine/topology win unless the flags are
+            // passed.
             if let Some(engine) = args.get("engine") {
                 cfg.engine = EngineKind::from_name(engine).map_err(e2s)?;
+            }
+            if let Some(topology) = args.get("topology") {
+                cfg.topology = Some(ExecTopology::from_name(topology).map_err(e2s)?);
             }
             let res = run_experiment(&cfg).map_err(e2s)?;
             if let Some(path) = args.get("csv") {
@@ -200,21 +218,29 @@ fn run(argv: &[String]) -> Result<(), String> {
                 .ok_or("worker requires --listen <addr>")?;
             dane::worker::serve::serve_addr(addr).map_err(e2s)
         }
-        "quickstart" => harness::quickstart(args.get_engine()?).map_err(e2s),
+        "quickstart" => {
+            harness::quickstart(args.get_engine()?, args.get_topology()?).map_err(e2s)
+        }
         "fig2" => {
             let scale = args.get_positive("scale", 1)?;
             let out = PathBuf::from(args.get("out").unwrap_or("results/fig2"));
-            harness::fig2(scale, &out, args.get_engine()?).map(|_| ()).map_err(e2s)
+            harness::fig2(scale, &out, args.get_engine()?, args.get_topology()?)
+                .map(|_| ())
+                .map_err(e2s)
         }
         "fig3" => {
             let scale = args.get_positive("scale", 1)?;
             let out = PathBuf::from(args.get("out").unwrap_or("results/fig3"));
-            harness::fig3(scale, &out, args.get_engine()?).map(|_| ()).map_err(e2s)
+            harness::fig3(scale, &out, args.get_engine()?, args.get_topology()?)
+                .map(|_| ())
+                .map_err(e2s)
         }
         "fig4" => {
             let scale = args.get_positive("scale", 1)?;
             let out = PathBuf::from(args.get("out").unwrap_or("results/fig4"));
-            harness::fig4(scale, &out, args.get_engine()?).map(|_| ()).map_err(e2s)
+            harness::fig4(scale, &out, args.get_engine()?, args.get_topology()?)
+                .map(|_| ())
+                .map_err(e2s)
         }
         "thm1" => {
             let reps = args.get_positive("reps", 200)?;

@@ -1,9 +1,11 @@
-//! The worker side of the wire protocol: one command in, one reply out.
+//! The worker side of the wire protocol: one command in, one reply out —
+//! plus, under the tree topology, the relay plane that moves frames
+//! down to child workers and ordered reply bundles back up.
 //!
 //! [`execute_command`] is the single implementation of every collective a
 //! worker answers — the threaded engine calls it from its per-worker
-//! thread loop and the TCP engine calls it from [`serve_conn`], so the
-//! three transports cannot drift apart semantically.
+//! thread loop and the TCP engine calls it from the serve session, so
+//! the transports cannot drift apart semantically.
 //!
 //! [`serve_addr`] is the process entry point behind `dane worker
 //! --listen <addr>`: bind, announce the bound address on stdout
@@ -13,12 +15,38 @@
 //! objective, Gram-thread override — from the leader's
 //! [`Command::Init`] frame, so a worker process needs no config file.
 //!
+//! ## Tree relay ([`Command::Peers`])
+//!
+//! Under `topology: "tree"` the leader additionally sends every worker a
+//! `Peers` frame naming its child workers (rank, address, and the
+//! preorder rank list of each child's subtree). The worker opens one
+//! round connection per child; interior workers whose parent is another
+//! worker ack with `expect_parent` set, after which the leader closes
+//! the setup connection and the worker **accepts its parent's
+//! connection from its own listener** (the parent dialed it while
+//! handling its own `Peers`; the OS accept backlog makes the ordering
+//! race-free). From then on each round is:
+//!
+//! 1. read one command frame from the parent,
+//! 2. relay the raw frame to every child (they start computing first),
+//! 3. execute locally and send the own reply up,
+//! 4. pump exactly `ranks.len()` reply frames per child upward, in
+//!    child order — the preorder bundle the parent (ultimately the
+//!    leader) attributes to ranks positionally.
+//!
+//! A dead child never breaks the frame-count discipline: the relay
+//! synthesizes a [`Reply::Err`] frame for every reply the child still
+//! owed, so the leader drains a failed round completely and surfaces
+//! the error instead of hanging. [`Command::For`] frames are routed
+//! point-to-point toward their target rank with a single reply piped
+//! back; no other subtree worker is touched.
+//!
 //! Errors on the compute path become [`Reply::Err`] frames (the leader
 //! maps them to `Error::Runtime` and the algorithms to `AlgoError`);
-//! only transport failures tear the loop down. Nothing here panics on
-//! malformed input.
+//! only transport failures on the *upstream* connection tear the loop
+//! down. Nothing here panics on malformed input.
 
-use crate::comm::wire::{self, Command, InitPayload, Reply};
+use crate::comm::wire::{self, Command, InitPayload, PeersPayload, Reply};
 use crate::config::LossKind;
 use crate::loss::make_objective;
 use crate::worker::Worker;
@@ -42,15 +70,30 @@ fn dim_check(what: &str, len: usize, d: usize) -> Option<Reply> {
     }
 }
 
-/// Answer one compute command. `Init` is transport setup, not compute —
-/// transports that construct their workers directly (threaded) or that
-/// handle the handshake themselves (TCP, in [`serve_conn`]) never route
-/// it here, so it answers with an error reply.
+/// Answer one compute command. `Init`/`Peers` are transport setup, not
+/// compute — transports that construct their workers directly (threaded)
+/// or that handle the handshake themselves (TCP, in the serve session)
+/// never route them here, so they answer with an error reply.
 pub fn execute_command(worker: &mut Worker, cmd: Command) -> Reply {
     let d = worker.dim();
     match cmd {
         Command::Init(_) => {
             Reply::Err("init sent to an already-initialized worker".into())
+        }
+        Command::Peers(_) => {
+            Reply::Err("peers sent to the compute layer".into())
+        }
+        Command::For { rank, inner } => {
+            // Routing lives in the relay loops; by the time an envelope
+            // reaches the compute layer it must address this worker.
+            if rank == worker.id {
+                execute_command(worker, *inner)
+            } else {
+                Reply::Err(format!(
+                    "misrouted For: targets worker {rank}, reached {}",
+                    worker.id
+                ))
+            }
         }
         Command::GradLoss { w, mut out } => {
             if let Some(err) = dim_check("grad_loss", w.len(), d) {
@@ -86,6 +129,22 @@ pub fn execute_command(worker: &mut Worker, cmd: Command) -> Reply {
                 return err;
             }
             match worker.admm_prox(&v, rho) {
+                Ok(w) => Reply::Vec(w),
+                Err(e) => Reply::Err(e.to_string()),
+            }
+        }
+        Command::ProxAll { targets, rho } => {
+            let Some(v) = targets.get(worker.id) else {
+                return Reply::Err(format!(
+                    "prox_all: {} targets, none for worker {}",
+                    targets.len(),
+                    worker.id
+                ));
+            };
+            if let Some(err) = dim_check("prox_all", v.len(), d) {
+                return err;
+            }
+            match worker.admm_prox(v, rho) {
                 Ok(w) => Reply::Vec(w),
                 Err(e) => Reply::Err(e.to_string()),
             }
@@ -131,48 +190,262 @@ pub fn serve_addr(addr: &str) -> Result<()> {
     // when the operator (or harness) asked for :0.
     println!("listening on {local}");
     std::io::stdout().flush()?;
+    serve_listener(listener)
+}
+
+/// Accept one leader connection on an already-bound listener and serve
+/// it, keeping the listener alive so a tree parent can be accepted
+/// later. No announce line — in-process workers (benches, tests) bind
+/// their own listeners and already know the address.
+pub fn serve_listener(listener: TcpListener) -> Result<()> {
     let (stream, _peer) = listener
         .accept()
         .map_err(|e| Error::Runtime(format!("worker: accept: {e}")))?;
-    serve_conn(stream)
+    serve_session(stream, Some(&listener))
 }
 
-/// Frame loop over an accepted leader connection. Returns `Ok(())` on a
-/// clean leader hangup (EOF at a frame boundary), `Err` on transport
+/// Frame loop over an accepted leader connection with no retained
+/// listener — star topologies only (a `Peers` frame asking this worker
+/// to await a tree parent is answered with an error, since there is no
+/// listener to accept the parent on).
+pub fn serve_conn(stream: TcpStream) -> Result<()> {
+    serve_session(stream, None)
+}
+
+/// One downstream relay link.
+struct ChildLink {
+    rank: usize,
+    /// Preorder ranks of the child's subtree: replies owed per round.
+    ranks: Vec<usize>,
+    /// `None` once the link died; the pump synthesizes `Reply::Err`
+    /// frames in its place so the count discipline holds.
+    stream: Option<TcpStream>,
+}
+
+/// Write one frame (length prefix + `body`) to `w`.
+fn write_raw<W: Write>(w: &mut W, body: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)
+}
+
+/// Encode `reply` into `enc` and write it to `up`; upstream write
+/// failures are fatal for the session.
+fn send_reply(up: &mut TcpStream, enc: &mut Vec<u8>, reply: &Reply) -> Result<()> {
+    wire::encode_reply(reply, enc)?;
+    up.write_all(enc.as_slice())
+        .map_err(|e| Error::Runtime(format!("worker: reply write: {e}")))
+}
+
+/// The frame loop: leader handshake (`Init`, optionally `Peers`),
+/// optional parent takeover, then rounds — executing, relaying, and
+/// bundling as the topology demands. Returns `Ok(())` on a clean
+/// upstream hangup (EOF at a frame boundary), `Err` on transport
 /// failure. Compute errors never end the loop — they travel back as
 /// [`Reply::Err`] frames.
-pub fn serve_conn(stream: TcpStream) -> Result<()> {
-    let mut stream = stream;
-    stream
-        .set_nodelay(true)
+fn serve_session(stream: TcpStream, listener: Option<&TcpListener>) -> Result<()> {
+    let mut up = stream;
+    up.set_nodelay(true)
         .map_err(|e| Error::Runtime(format!("worker: set_nodelay: {e}")))?;
     let mut frame = Vec::new();
+    let mut childbuf = Vec::new();
     let mut enc = Vec::new();
     let mut worker: Option<Worker> = None;
+    let mut children: Vec<ChildLink> = Vec::new();
+    let mut awaiting_parent = false;
     loop {
-        match wire::read_frame(&mut stream, &mut frame)? {
-            None => return Ok(()), // leader hung up between rounds
+        match wire::read_frame(&mut up, &mut frame)? {
             Some(_) => {}
-        }
-        let reply = match wire::decode_command(&frame) {
-            Err(e) => Reply::Err(e.to_string()),
-            Ok(Command::Init(p)) => match build_worker(*p) {
-                Ok(w) => {
-                    worker = Some(w);
-                    Reply::Scalar(0.0) // init ack
+            None => {
+                if awaiting_parent {
+                    // The leader closed the setup connection; the round
+                    // plane continues on the parent's connection, which
+                    // the parent dialed while handling its own Peers.
+                    let listener = listener.ok_or_else(|| {
+                        Error::Runtime("worker: no listener for parent".into())
+                    })?;
+                    let (parent, _peer) = listener.accept().map_err(|e| {
+                        Error::Runtime(format!("worker: accept parent: {e}"))
+                    })?;
+                    up = parent;
+                    up.set_nodelay(true).map_err(|e| {
+                        Error::Runtime(format!("worker: set_nodelay: {e}"))
+                    })?;
+                    awaiting_parent = false;
+                    continue;
                 }
-                Err(e) => Reply::Err(e.to_string()),
-            },
-            Ok(cmd) => match worker.as_mut() {
-                Some(w) => execute_command(w, cmd),
-                None => Reply::Err("worker not initialized (no Init frame)".into()),
-            },
-        };
-        wire::encode_reply(&reply, &mut enc)?;
-        stream
-            .write_all(&enc)
-            .map_err(|e| Error::Runtime(format!("worker: reply write: {e}")))?;
+                return Ok(()); // upstream hung up between rounds
+            }
+        }
+        match wire::decode_command(&frame) {
+            Err(e) => send_reply(&mut up, &mut enc, &Reply::Err(e.to_string()))?,
+            Ok(Command::Init(p)) => {
+                let reply = match build_worker(*p) {
+                    Ok(w) => {
+                        worker = Some(w);
+                        Reply::Scalar(0.0) // init ack
+                    }
+                    Err(e) => Reply::Err(e.to_string()),
+                };
+                send_reply(&mut up, &mut enc, &reply)?;
+            }
+            Ok(Command::Peers(p)) => {
+                let reply = match install_peers(&mut children, *p, listener.is_some()) {
+                    Ok(expect_parent) => {
+                        awaiting_parent = expect_parent;
+                        Reply::Scalar(0.0) // peers ack
+                    }
+                    Err(e) => Reply::Err(e.to_string()),
+                };
+                send_reply(&mut up, &mut enc, &reply)?;
+            }
+            Ok(Command::For { rank, inner }) => {
+                let own = worker.as_ref().map(|w| w.id);
+                if own == Some(rank) {
+                    let reply = match worker.as_mut() {
+                        Some(w) => execute_command(w, *inner),
+                        None => Reply::Err("worker not initialized".into()),
+                    };
+                    send_reply(&mut up, &mut enc, &reply)?;
+                } else {
+                    relay_for(&mut up, &mut children, rank, &frame, &mut childbuf, &mut enc)?;
+                }
+            }
+            Ok(cmd) => {
+                // Broadcast round: children first (they start computing
+                // while this worker does), own compute + reply, then the
+                // preorder bundle pump.
+                relay_down(&mut children, &frame);
+                let reply = match worker.as_mut() {
+                    Some(w) => execute_command(w, cmd),
+                    None => Reply::Err("worker not initialized (no Init frame)".into()),
+                };
+                send_reply(&mut up, &mut enc, &reply)?;
+                pump_children(&mut up, &mut children, &mut childbuf, &mut enc)?;
+            }
+        }
     }
+}
+
+/// Open the round connections a `Peers` frame names. Returns the
+/// `expect_parent` flag on success; any child connect failure is
+/// reported (the leader aborts bring-up on a failed peers ack).
+fn install_peers(
+    children: &mut Vec<ChildLink>,
+    p: PeersPayload,
+    have_listener: bool,
+) -> Result<bool> {
+    if p.expect_parent && !have_listener {
+        return Err(Error::Runtime(
+            "worker has no listener to accept a tree parent on".into(),
+        ));
+    }
+    let mut links = Vec::with_capacity(p.children.len());
+    for c in p.children {
+        let stream = TcpStream::connect(&c.addr).map_err(|e| {
+            Error::Runtime(format!("connect child worker {} at {}: {e}", c.rank, c.addr))
+        })?;
+        stream.set_nodelay(true).map_err(|e| {
+            Error::Runtime(format!("child worker {} set_nodelay: {e}", c.rank))
+        })?;
+        links.push(ChildLink { rank: c.rank, ranks: c.ranks, stream: Some(stream) });
+    }
+    *children = links;
+    Ok(p.expect_parent)
+}
+
+/// Relay the raw command frame in `body` to every live child; a failed
+/// write kills that link (its replies are synthesized by the pump).
+fn relay_down(children: &mut [ChildLink], body: &[u8]) {
+    for c in children.iter_mut() {
+        if let Some(stream) = &mut c.stream {
+            if write_raw(stream, body).is_err() {
+                c.stream = None;
+            }
+        }
+    }
+}
+
+/// Route a `For` frame toward the child whose subtree holds `rank` and
+/// pipe the single reply back up.
+fn relay_for(
+    up: &mut TcpStream,
+    children: &mut [ChildLink],
+    rank: usize,
+    body: &[u8],
+    childbuf: &mut Vec<u8>,
+    enc: &mut Vec<u8>,
+) -> Result<()> {
+    let Some(c) = children.iter_mut().find(|c| c.ranks.contains(&rank)) else {
+        return send_reply(
+            up,
+            enc,
+            &Reply::Err(format!("unroutable For: no subtree holds worker {rank}")),
+        );
+    };
+    let relayed = match &mut c.stream {
+        None => None,
+        Some(stream) => {
+            if write_raw(stream, body).is_err() {
+                None
+            } else {
+                match wire::read_frame(stream, childbuf) {
+                    Ok(Some(_)) => Some(()),
+                    _ => None,
+                }
+            }
+        }
+    };
+    match relayed {
+        Some(()) => write_raw(up, childbuf)
+            .map_err(|e| Error::Runtime(format!("worker: relay write: {e}"))),
+        None => {
+            c.stream = None;
+            let msg = format!(
+                "relay toward worker {rank} failed: child {} link down",
+                c.rank
+            );
+            send_reply(up, enc, &Reply::Err(msg))
+        }
+    }
+}
+
+/// Forward each child's preorder reply bundle upward, child by child.
+/// A child that dies mid-bundle (or was already dead) still accounts
+/// for every reply it owed, as synthesized `Reply::Err` frames.
+fn pump_children(
+    up: &mut TcpStream,
+    children: &mut [ChildLink],
+    childbuf: &mut Vec<u8>,
+    enc: &mut Vec<u8>,
+) -> Result<()> {
+    for c in children.iter_mut() {
+        let expect = c.ranks.len();
+        let mut done = 0;
+        if let Some(stream) = &mut c.stream {
+            while done < expect {
+                match wire::read_frame(stream, childbuf) {
+                    Ok(Some(_)) => {
+                        write_raw(up, childbuf).map_err(|e| {
+                            Error::Runtime(format!("worker: relay write: {e}"))
+                        })?;
+                        done += 1;
+                    }
+                    _ => break,
+                }
+            }
+            if done < expect {
+                c.stream = None;
+            }
+        }
+        for _ in done..expect {
+            send_reply(
+                up,
+                enc,
+                &Reply::Err(format!("relay child worker {} died mid-round", c.rank)),
+            )?;
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -219,6 +492,7 @@ mod tests {
                 out: Vec::new(),
             },
             Command::Prox { v: vec![0.0; 5], rho: 1.0 },
+            Command::ProxAll { targets: vec![vec![0.0; 5]], rho: 1.0 },
         ] {
             match execute_command(&mut wk, cmd) {
                 Reply::Err(msg) => {
@@ -233,7 +507,40 @@ mod tests {
     }
 
     #[test]
-    fn init_on_running_worker_is_error_reply() {
+    fn prox_all_picks_own_rank_and_rejects_missing_target() {
+        let mut wk = tiny_worker(); // rank 0, d = 2
+        let cmd = Command::ProxAll {
+            targets: vec![vec![0.1, 0.2], vec![9.0, 9.0]],
+            rho: 1.0,
+        };
+        match execute_command(&mut wk, cmd) {
+            Reply::Vec(w) => assert_eq!(w.len(), 2),
+            _ => panic!("prox_all must answer with the local prox solution"),
+        }
+        match execute_command(&mut wk, Command::ProxAll { targets: vec![], rho: 1.0 }) {
+            Reply::Err(msg) => assert!(msg.contains("none for worker 0"), "{msg}"),
+            _ => panic!("missing target must be an error reply"),
+        }
+    }
+
+    #[test]
+    fn for_envelope_executes_own_rank_and_rejects_misroutes() {
+        let mut wk = tiny_worker(); // rank 0
+        let inner = Command::Loss { w: Arc::new(vec![0.0, 0.0]) };
+        let own = Command::For { rank: 0, inner: Box::new(inner) };
+        assert!(matches!(execute_command(&mut wk, own), Reply::Scalar(_)));
+        let other = Command::For {
+            rank: 3,
+            inner: Box::new(Command::Loss { w: Arc::new(vec![0.0, 0.0]) }),
+        };
+        match execute_command(&mut wk, other) {
+            Reply::Err(msg) => assert!(msg.contains("misrouted"), "{msg}"),
+            _ => panic!("misrouted For must be rejected"),
+        }
+    }
+
+    #[test]
+    fn init_and_peers_on_running_worker_are_error_replies() {
         let mut w = tiny_worker();
         let p = InitPayload {
             worker_id: 0,
@@ -245,6 +552,14 @@ mod tests {
         match execute_command(&mut w, Command::Init(Box::new(p))) {
             Reply::Err(msg) => assert!(msg.contains("initialized"), "{msg}"),
             _ => panic!("init must not be a compute command"),
+        }
+        let peers = Command::Peers(Box::new(PeersPayload {
+            children: Vec::new(),
+            expect_parent: false,
+        }));
+        match execute_command(&mut w, peers) {
+            Reply::Err(msg) => assert!(msg.contains("peers"), "{msg}"),
+            _ => panic!("peers must not be a compute command"),
         }
     }
 

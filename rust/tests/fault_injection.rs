@@ -211,31 +211,53 @@ fn real_singular_local_solve_fails_cleanly_on_both_engines() {
 // TCP engine: a worker child process killed mid-run
 // ---------------------------------------------------------------------
 
+use dane::comm::ExecTopology;
 use dane::config::LossKind;
 use dane::coordinator::tcp::TcpCluster;
 
-/// Decorator that SIGKILLs a real worker child process just before the
-/// N-th worker-touching collective call delegates — a deterministic
-/// "machine dies mid-run" for the process engine, where timing-based
-/// kills would be flaky. The failing call and every later one hit a
-/// dead socket, so the error comes from the genuine transport path.
-struct KillChildAt {
-    inner: TcpCluster,
+/// The engines that can kill a specific worker mid-run: SIGKILL of a
+/// real child process (tcp) or the kill switch that makes a worker
+/// thread exit silently on its next command (threaded) — both
+/// deterministic stand-ins for "the machine died".
+trait Killable: Cluster {
+    fn kill(&mut self, rank: usize);
+}
+
+impl Killable for TcpCluster {
+    fn kill(&mut self, rank: usize) {
+        self.kill_worker(rank);
+    }
+}
+
+impl Killable for ThreadedCluster {
+    fn kill(&mut self, rank: usize) {
+        self.kill_worker(rank);
+    }
+}
+
+/// Decorator that kills a real worker just before the N-th
+/// worker-touching collective call delegates — a deterministic
+/// "machine dies mid-run" where timing-based kills would be flaky. The
+/// failing call and every later one hit the dead worker, so the error
+/// comes from the genuine transport path (dead socket, disconnected
+/// channel, or a relay's synthesized error replies under the tree).
+struct KillChildAt<C: Killable> {
+    inner: C,
     at: usize,
     calls: usize,
     victim: usize,
 }
 
-impl KillChildAt {
+impl<C: Killable> KillChildAt<C> {
     fn tick(&mut self) {
         self.calls += 1;
         if self.calls == self.at {
-            self.inner.kill_worker(self.victim);
+            self.inner.kill(self.victim);
         }
     }
 }
 
-impl Cluster for KillChildAt {
+impl<C: Killable> Cluster for KillChildAt<C> {
     fn m(&self) -> usize {
         self.inner.m()
     }
@@ -299,7 +321,7 @@ impl Cluster for KillChildAt {
         self.tick();
         self.inner.local_erms(subsample)
     }
-    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Vec<f64> {
+    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> dane::Result<Vec<f64>> {
         self.inner.allreduce_mean_vecs(vecs)
     }
     fn avg_row_sq_norm(&mut self) -> dane::Result<f64> {
@@ -322,9 +344,13 @@ impl Cluster for KillChildAt {
     }
 }
 
-/// Self-hosted 4-process cluster whose worker-2 child is killed at
-/// worker-touching collective call `at`.
-fn tcp_killing_cluster(at: usize) -> KillChildAt {
+/// Self-hosted 4-process cluster (under `topology`) whose worker
+/// `victim` child is killed at worker-touching collective call `at`.
+fn tcp_killing_cluster_at(
+    at: usize,
+    victim: usize,
+    topology: ExecTopology,
+) -> KillChildAt<TcpCluster> {
     // One set_var per process, ordered before every read (see
     // tcp_cluster.rs::ensure_worker_bin for the setenv/getenv UB note).
     static ONCE: std::sync::Once = std::sync::Once::new();
@@ -339,9 +365,14 @@ fn tcp_killing_cluster(at: usize) -> KillChildAt {
         dane::comm::NetModel::free(),
         None,
         Some(std::time::Duration::from_secs(10)),
+        topology,
     )
     .expect("self-hosted tcp cluster must come up");
-    KillChildAt { inner, at, calls: 0, victim: 2 }
+    KillChildAt { inner, at, calls: 0, victim }
+}
+
+fn tcp_killing_cluster(at: usize) -> KillChildAt<TcpCluster> {
+    tcp_killing_cluster_at(at, 2, ExecTopology::Star)
 }
 
 /// TCP counterpart of `assert_fault_surfaced`: the cause is a real
@@ -405,6 +436,104 @@ fn tcp_lbfgs_surfaces_child_kill() {
     let err = lbfgs::run(&mut c, &lbfgs::LbfgsOptions::default(), &RunCtx::new(10))
         .expect_err("child kill must surface");
     assert_tcp_fault_surfaced(err, "lbfgs", 1);
+}
+
+// ---------------------------------------------------------------------
+// Tree relay: a SIGKILLed interior (relaying) node must fail every
+// algorithm on both concurrent engines — Err with the partial trace
+// intact, no hang. m = 4 binomial plan: leader -> {0, 1, 3}, worker 0
+// relays for worker 2, so worker 0 is the interior node.
+// ---------------------------------------------------------------------
+
+use dane::coordinator::AlgoOutcome;
+
+fn threaded_tree_killing_cluster(
+    at: usize,
+    victim: usize,
+) -> KillChildAt<ThreadedCluster> {
+    let ds = synthetic_fig2(256, 6, 0.005, 4);
+    let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+    let inner = ThreadedCluster::with_topology(
+        &ds,
+        obj,
+        4,
+        3,
+        dane::comm::NetModel::free(),
+        None,
+        ExecTopology::Tree,
+    );
+    KillChildAt { inner, at, calls: 0, victim }
+}
+
+fn run_algo(c: &mut dyn Cluster, algo: &str) -> AlgoOutcome {
+    match algo {
+        "dane" => dane_algo::run(c, &Default::default(), &RunCtx::new(10)),
+        "gd" => gd::run_gd(c, &Default::default(), &RunCtx::new(10)),
+        "agd" => gd::run_agd(c, &Default::default(), &RunCtx::new(10)),
+        "admm" => admm::run(c, &admm::AdmmOptions { rho: 0.1 }, &RunCtx::new(10)),
+        "osa" => osa::run(c, &Default::default(), &RunCtx::new(1)),
+        "lbfgs" => lbfgs::run(c, &Default::default(), &RunCtx::new(10)),
+        other => panic!("unknown algo {other}"),
+    }
+}
+
+#[test]
+fn tree_relay_interior_kill_fails_every_algorithm_on_both_engines() {
+    let cases: [(&str, usize, usize); 6] = [
+        ("dane", 4, 2),
+        ("gd", 4, 2),
+        ("agd", 4, 1),
+        ("admm", 4, 2),
+        ("osa", 2, 1),
+        ("lbfgs", 4, 1),
+    ];
+    for (algo, at, min_rows) in cases {
+        for engine in ["threaded", "tcp"] {
+            let out = match engine {
+                "threaded" => {
+                    let mut c = threaded_tree_killing_cluster(at, 0);
+                    run_algo(&mut c, algo)
+                }
+                _ => {
+                    let mut c = tcp_killing_cluster_at(at, 0, ExecTopology::Tree);
+                    run_algo(&mut c, algo)
+                }
+            };
+            let err = out.expect_err("interior-node kill must surface as Err");
+            assert!(
+                err.trace.len() >= min_rows,
+                "[{engine}-tree] {algo}: expected >= {min_rows} rows, got {}",
+                err.trace.len()
+            );
+            assert!(
+                err.error.to_string().contains("worker"),
+                "[{engine}-tree] {algo}: cause should name a worker: {}",
+                err.error
+            );
+            assert_eq!(err.w.len(), 6, "[{engine}-tree] {algo}");
+        }
+    }
+}
+
+#[test]
+fn tcp_tree_leaf_behind_relay_kill_surfaces_through_the_relay() {
+    // Killing the leaf (worker 2) reached only through worker 0's relay
+    // exercises the relay's synthesized-error path over real sockets:
+    // worker 0 must keep the frame-count discipline for its dead child.
+    let mut c = tcp_killing_cluster_at(4, 2, ExecTopology::Tree);
+    let err = dane_algo::run(&mut c, &dane_algo::DaneOptions::default(), &RunCtx::new(10))
+        .expect_err("leaf kill must surface through the relay");
+    assert_tcp_fault_surfaced(err, "dane", 2);
+}
+
+#[test]
+fn threaded_tree_leaf_behind_relay_kill_surfaces_through_the_relay() {
+    let mut c = threaded_tree_killing_cluster(4, 2);
+    let err = dane_algo::run(&mut c, &dane_algo::DaneOptions::default(), &RunCtx::new(10))
+        .expect_err("leaf kill must surface through the relay");
+    assert_eq!(err.algo, "dane");
+    assert!(err.trace.len() >= 2, "got {}", err.trace.len());
+    assert!(err.error.to_string().contains("worker"), "{}", err.error);
 }
 
 #[test]

@@ -160,6 +160,34 @@ fn missing_config_flag_fails() {
 }
 
 #[test]
+fn quickstart_runs_tree_topology_on_threaded_engine() {
+    let out = Command::new(dane_bin())
+        .args(["quickstart", "--engine", "threaded", "--topology", "tree"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("topology: tree"), "{text}");
+    assert!(text.contains("converged: true"), "{text}");
+}
+
+#[test]
+fn unknown_topology_fails_with_usage() {
+    let out = Command::new(dane_bin())
+        .args(["quickstart", "--topology", "ring"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("unknown topology"), "{text}");
+    assert!(text.contains("USAGE"), "{text}");
+}
+
+#[test]
 fn run_experiment_from_json_config_with_csv() {
     let dir = TempDir::new("cli").unwrap();
     let cfg_path = dir.path().join("exp.json");

@@ -152,6 +152,7 @@ fn driver_runs_config_end_to_end_and_emits_csv() {
         engine: EngineKind::Serial,
         workers: None,
         threads: None,
+        topology: None,
         eval_test: false,
         net: NetConfig::datacenter(),
     };

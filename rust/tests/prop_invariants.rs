@@ -309,6 +309,12 @@ fn prop_config_json_roundtrip() {
                 },
                 workers: None,
                 threads: if rng.bool(0.5) { Some(1 + rng.below(8)) } else { None },
+                topology: match rng.below(4) {
+                    0 => Some(dane::comm::ExecTopology::StarSeq),
+                    1 => Some(dane::comm::ExecTopology::Star),
+                    2 => Some(dane::comm::ExecTopology::Tree),
+                    _ => None,
+                },
                 eval_test: rng.bool(0.5),
                 net: NetConfig::datacenter(),
             }

@@ -123,6 +123,7 @@ fn driver_engine_parity_on_fig2_config() {
         engine: EngineKind::Serial,
         workers: None,
         threads: None,
+        topology: None,
         eval_test: false,
         net: NetConfig::datacenter(),
     };

@@ -17,6 +17,7 @@
 //! `DANE_WORKER_BIN` at the compiled CLI.
 
 use dane::comm::wire::{self, Reply};
+use dane::comm::ExecTopology;
 use dane::config::{
     AlgoConfig, BackendKind, DatasetConfig, EngineKind, ExperimentConfig, LossKind,
     NetConfig,
@@ -56,6 +57,7 @@ fn fig2_cfg(engine: EngineKind) -> ExperimentConfig {
         engine,
         workers: None,
         threads: None,
+        topology: None,
         eval_test: false,
         net: NetConfig::datacenter(),
     }
@@ -116,6 +118,7 @@ fn collective_surface_matches_serial_bitwise() {
         dane::comm::NetModel::free(),
         None,
         None,
+        ExecTopology::Star,
     )
     .unwrap();
     assert_eq!(s.m(), t.m());
@@ -175,6 +178,7 @@ fn full_dane_run_on_tcp_converges() {
         dane::comm::NetModel::free(),
         None,
         None,
+        ExecTopology::Star,
     )
     .unwrap();
     let ctx = RunCtx::new(20).with_reference(phi_star).with_tol(1e-9);
@@ -227,6 +231,7 @@ fn wedged_worker_times_out_instead_of_deadlocking() {
         dane::comm::NetModel::free(),
         None,
         Some(Duration::from_millis(300)),
+        ExecTopology::Star,
     )
     .unwrap();
 
@@ -271,6 +276,7 @@ fn connect_to_nobody_fails_fast() {
         dane::comm::NetModel::free(),
         None,
         Some(Duration::from_millis(500)),
+        ExecTopology::Star,
     );
     assert!(res.is_err());
 }

@@ -1,0 +1,192 @@
+//! The acceptance pin of the topology layer: **bit-exact trace parity
+//! across the full engine × topology matrix**, through `run_experiment`
+//! with real spawned worker processes on the TCP side.
+//!
+//! The fixed-order reduction guarantee (rank-order folds from buffered
+//! partials at the root, `comm::topology`) means the *numbers* of a run
+//! may not depend on how its collectives were executed:
+//!
+//! * serial ≡ threaded ≡ tcp for the same config, under every
+//!   `topology` key — all columns except wallclock and `wire_bytes`;
+//! * star ≡ star-seq ≡ tree for the same engine — all columns except
+//!   wallclock, `wire_bytes` and `comm_modeled_seconds` (the model
+//!   follows the configured topology, which is the point: modeled vs
+//!   measured compares like with like).
+//!
+//! The tree's measured effect shows up where it should: the leader's
+//! `wire_bytes` shrink (it writes the broadcast frame to O(log m) links
+//! instead of m) and its modeled seconds drop below the star's.
+
+use dane::comm::ExecTopology;
+use dane::config::{
+    AlgoConfig, BackendKind, DatasetConfig, EngineKind, ExperimentConfig, LossKind,
+    NetConfig,
+};
+use dane::coordinator::driver::{run_experiment, RunResult};
+use dane::metrics::Trace;
+
+fn ensure_worker_bin() {
+    // One set_var before any read through worker_binary() (see
+    // tcp_cluster.rs::ensure_worker_bin for the setenv/getenv UB note).
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| std::env::set_var("DANE_WORKER_BIN", env!("CARGO_BIN_EXE_dane")));
+}
+
+fn cfg(
+    engine: EngineKind,
+    topology: Option<ExecTopology>,
+    machines: usize,
+) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "topology-parity".into(),
+        dataset: DatasetConfig::Fig2 { n: 1024, d: 16, paper_reg: 0.005 },
+        loss: LossKind::Ridge,
+        lambda: 0.01,
+        algo: AlgoConfig::Dane { eta: 1.0, mu_over_lambda: 1.0 },
+        machines,
+        rounds: 12,
+        tol: 1e-10,
+        seed: 7,
+        backend: BackendKind::Native,
+        engine,
+        workers: None,
+        threads: None,
+        topology,
+        eval_test: false,
+        net: NetConfig::datacenter(),
+    }
+}
+
+/// All deterministic columns, `comm_modeled_seconds` included — the
+/// same-config cross-engine contract.
+fn assert_rows_identical_mod_wire(a: &Trace, b: &Trace, tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}");
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(ra.round, rb.round, "{tag}");
+        assert_eq!(ra.objective, rb.objective, "{tag} round {}", ra.round);
+        assert_eq!(ra.suboptimality, rb.suboptimality, "{tag} round {}", ra.round);
+        assert_eq!(ra.grad_norm, rb.grad_norm, "{tag} round {}", ra.round);
+        assert_eq!(ra.test_loss, rb.test_loss, "{tag} round {}", ra.round);
+        assert_eq!(ra.comm_rounds, rb.comm_rounds, "{tag} round {}", ra.round);
+        assert_eq!(ra.comm_bytes, rb.comm_bytes, "{tag} round {}", ra.round);
+        assert_eq!(
+            ra.comm_modeled_seconds, rb.comm_modeled_seconds,
+            "{tag} round {}",
+            ra.round
+        );
+    }
+}
+
+/// Deterministic columns minus `comm_modeled_seconds` — the
+/// cross-*topology* contract (the model legitimately moves with the
+/// configured topology).
+fn assert_rows_identical_mod_model(a: &Trace, b: &Trace, tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}");
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(ra.round, rb.round, "{tag}");
+        assert_eq!(ra.objective, rb.objective, "{tag} round {}", ra.round);
+        assert_eq!(ra.suboptimality, rb.suboptimality, "{tag} round {}", ra.round);
+        assert_eq!(ra.grad_norm, rb.grad_norm, "{tag} round {}", ra.round);
+        assert_eq!(ra.test_loss, rb.test_loss, "{tag} round {}", ra.round);
+        assert_eq!(ra.comm_rounds, rb.comm_rounds, "{tag} round {}", ra.round);
+        assert_eq!(ra.comm_bytes, rb.comm_bytes, "{tag} round {}", ra.round);
+    }
+}
+
+fn assert_results_identical(a: &RunResult, b: &RunResult, tag: &str) {
+    assert_eq!(a.phi_star, b.phi_star, "{tag}");
+    assert_eq!(a.w, b.w, "{tag}: final iterates must be bit-identical");
+    assert_eq!(a.converged, b.converged, "{tag}");
+    assert_eq!(a.rounds_to_tol, b.rounds_to_tol, "{tag}");
+    assert_rows_identical_mod_wire(&a.trace, &b.trace, tag);
+}
+
+#[test]
+fn engine_topology_matrix_is_bit_exact_through_run_experiment() {
+    ensure_worker_bin();
+    for topo in [ExecTopology::StarSeq, ExecTopology::Star, ExecTopology::Tree] {
+        // serial baseline under the same topology key: identical modeled
+        // columns by construction (effective_net follows the key).
+        let baseline = run_experiment(&cfg(EngineKind::Serial, Some(topo), 4)).unwrap();
+        assert!(baseline.trace.rows.iter().all(|r| r.wire_bytes == 0));
+        for engine in [EngineKind::Threaded, EngineKind::Tcp] {
+            let run = run_experiment(&cfg(engine, Some(topo), 4)).unwrap();
+            let tag = format!("{}-{}", engine.name(), topo.name());
+            assert_results_identical(&baseline, &run, &tag);
+            let wire: Vec<u64> = run.trace.rows.iter().map(|r| r.wire_bytes).collect();
+            match engine {
+                EngineKind::Tcp => {
+                    assert!(wire[0] > 0, "{tag}: no measured bytes");
+                    assert!(
+                        wire.windows(2).all(|w| w[0] <= w[1]),
+                        "{tag}: wire_bytes not monotone: {wire:?}"
+                    );
+                }
+                _ => assert!(
+                    wire.iter().all(|&b| b == 0),
+                    "{tag}: in-memory engine measured bytes"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn cross_topology_traces_agree_on_deterministic_columns() {
+    // Same engine, different topology key: everything deterministic
+    // matches except the modeled seconds (which *must* move — that is
+    // the modeled-vs-measured point of the key).
+    let seq = run_experiment(&cfg(EngineKind::Serial, Some(ExecTopology::StarSeq), 4))
+        .unwrap();
+    let star =
+        run_experiment(&cfg(EngineKind::Serial, Some(ExecTopology::Star), 4)).unwrap();
+    let tree =
+        run_experiment(&cfg(EngineKind::Serial, Some(ExecTopology::Tree), 4)).unwrap();
+
+    // both star strategies model as Star: fully identical
+    assert_rows_identical_mod_wire(&seq.trace, &star.trace, "star-seq vs star");
+    // tree: identical modulo the model...
+    assert_rows_identical_mod_model(&star.trace, &tree.trace, "star vs tree");
+    assert_eq!(star.w, tree.w, "iterates must not depend on the topology");
+    // ...and the tree model is strictly cheaper at m = 4 under the
+    // datacenter alpha-beta (2·log2(4) = 4 steps vs 2·(4-1) = 6).
+    let last_star = star.trace.rows.last().unwrap().comm_modeled_seconds;
+    let last_tree = tree.trace.rows.last().unwrap().comm_modeled_seconds;
+    assert!(
+        last_tree < last_star,
+        "tree modeled {last_tree} should beat star modeled {last_star}"
+    );
+}
+
+#[test]
+fn tcp_tree_moves_fewer_leader_bytes_than_tcp_star() {
+    // The tree's point on a real wire: the leader writes the broadcast
+    // frame to O(log m) root links instead of m sockets, so its
+    // measured (leader-adjacent) bytes shrink; the gathered reply
+    // bundle is the same m frames either way.
+    ensure_worker_bin();
+    let star =
+        run_experiment(&cfg(EngineKind::Tcp, Some(ExecTopology::Star), 4)).unwrap();
+    let tree =
+        run_experiment(&cfg(EngineKind::Tcp, Some(ExecTopology::Tree), 4)).unwrap();
+    assert_eq!(star.w, tree.w, "topologies must agree bit-exactly");
+    let (s, t) = (
+        star.trace.rows.last().unwrap().wire_bytes,
+        tree.trace.rows.last().unwrap().wire_bytes,
+    );
+    assert!(t > 0, "tree run measured no bytes");
+    assert!(t < s, "tree leader bytes {t} should be below star's {s} (m=4, 3 root links)");
+}
+
+#[test]
+fn non_power_of_two_tree_matches_star_through_run_experiment() {
+    // m = 7: uneven shards, a lopsided binomial tree (root links
+    // {0,2,6,4?}.. whatever the plan says) — parity must not depend on
+    // m being a power of two. In-memory engines keep it cheap.
+    let star =
+        run_experiment(&cfg(EngineKind::Threaded, Some(ExecTopology::Star), 7)).unwrap();
+    let tree =
+        run_experiment(&cfg(EngineKind::Threaded, Some(ExecTopology::Tree), 7)).unwrap();
+    assert_eq!(star.w, tree.w, "m=7: final iterates must be bit-identical");
+    assert_rows_identical_mod_model(&star.trace, &tree.trace, "m=7 star vs tree");
+}

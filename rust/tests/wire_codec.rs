@@ -7,7 +7,7 @@
 
 use dane::comm::wire::{
     decode_command, decode_reply, encode_command, encode_reply, read_frame, Command,
-    InitPayload, Reply, MAX_FRAME_LEN, WIRE_VERSION,
+    InitPayload, PeerChild, PeersPayload, Reply, MAX_FRAME_LEN, WIRE_VERSION,
 };
 use dane::data::Shard;
 use dane::linalg::{CsrMatrix, DataMatrix, DenseMatrix};
@@ -191,6 +191,94 @@ fn init_roundtrips_dense_and_sparse_shards() {
     }
 }
 
+#[test]
+fn peers_prox_all_and_for_roundtrip() {
+    let mut rng = Rng64::seed_from_u64(9);
+    let p = PeersPayload {
+        children: vec![
+            PeerChild { rank: 2, addr: "10.1.2.3:7001".into(), ranks: vec![2, 6] },
+            PeerChild { rank: 4, addr: "[::1]:9".into(), ranks: vec![4] },
+        ],
+        expect_parent: false,
+    };
+    match rt_cmd(&Command::Peers(Box::new(p.clone()))) {
+        Command::Peers(q) => assert_eq!(*q, p),
+        _ => panic!("variant changed"),
+    }
+    // empty children (a tree leaf's Peers) round-trips too
+    let leaf = PeersPayload { children: Vec::new(), expect_parent: true };
+    match rt_cmd(&Command::Peers(Box::new(leaf.clone()))) {
+        Command::Peers(q) => assert_eq!(*q, leaf),
+        _ => panic!("variant changed"),
+    }
+
+    let targets = vec![weird_vec(&mut rng, 5), weird_vec(&mut rng, 5), vec![]];
+    match rt_cmd(&Command::ProxAll { targets: targets.clone(), rho: f64::MIN_POSITIVE })
+    {
+        Command::ProxAll { targets: t, rho } => {
+            assert_eq!(rho, f64::MIN_POSITIVE);
+            assert_eq!(t.len(), 3);
+            for (a, b) in targets.iter().zip(&t) {
+                assert_bits_eq(a, b);
+            }
+        }
+        _ => panic!("variant changed"),
+    }
+
+    let inner = Command::DaneSolve {
+        w_prev: Arc::new(weird_vec(&mut rng, 3)),
+        g: Arc::new(weird_vec(&mut rng, 3)),
+        eta: 1.0,
+        mu: 0.5,
+        out: vec![1.0; 3], // loan must not survive the wire
+    };
+    match rt_cmd(&Command::For { rank: usize::MAX >> 8, inner: Box::new(inner) }) {
+        Command::For { rank, inner } => {
+            assert_eq!(rank, usize::MAX >> 8);
+            match *inner {
+                Command::DaneSolve { ref out, .. } => assert!(out.is_empty()),
+                _ => panic!("inner variant changed"),
+            }
+        }
+        _ => panic!("variant changed"),
+    }
+}
+
+#[test]
+fn hostile_peers_and_for_frames_rejected() {
+    // peer subtree not rooted at the child rank
+    let p = PeersPayload {
+        children: vec![PeerChild { rank: 2, addr: "x:1".into(), ranks: vec![6, 2] }],
+        expect_parent: false,
+    };
+    let mut buf = Vec::new();
+    encode_command(&Command::Peers(Box::new(p)), &mut buf).unwrap();
+    assert!(decode_command(&buf[4..]).is_err(), "mis-rooted subtree accepted");
+
+    // hostile children count: tiny frame claiming 2^50 children
+    let mut frame = vec![WIRE_VERSION, 0x08]; // CMD_PEERS
+    frame.extend_from_slice(&(1u64 << 50).to_le_bytes());
+    frame.extend_from_slice(&[0; 8]);
+    assert!(decode_command(&frame).is_err());
+
+    // hostile ProxAll target count
+    let mut frame = vec![WIRE_VERSION, 0x09]; // CMD_PROX_ALL
+    frame.extend_from_slice(&(1u64 << 50).to_le_bytes());
+    assert!(decode_command(&frame).is_err());
+
+    // For wrapping a setup frame is rejected on encode and decode
+    let setup = Command::For {
+        rank: 0,
+        inner: Box::new(Command::Erm { subsample: None }),
+    };
+    encode_command(&setup, &mut buf).unwrap(); // compute inner is fine
+    let mut body = buf[4..].to_vec();
+    body[10] = 0x01; // rewrite inner tag to CMD_INIT
+    assert!(decode_command(&body).is_err(), "For(Init) accepted");
+    body[10] = 0x0a; // rewrite inner tag to CMD_FOR (nesting)
+    assert!(decode_command(&body).is_err(), "For(For) accepted");
+}
+
 // ---------------------------------------------------------------------
 // reply round-trips
 // ---------------------------------------------------------------------
@@ -256,6 +344,22 @@ fn every_truncation_of_every_variant_is_an_error() {
         Command::Prox { v: weird_vec(&mut rng, 2), rho: 0.1 },
         Command::Erm { subsample: Some((0.5, 9)) },
         Command::RowSq,
+        Command::Peers(Box::new(PeersPayload {
+            children: vec![PeerChild {
+                rank: 2,
+                addr: "127.0.0.1:4471".into(),
+                ranks: vec![2, 6],
+            }],
+            expect_parent: true,
+        })),
+        Command::ProxAll {
+            targets: vec![weird_vec(&mut rng, 3), weird_vec(&mut rng, 3)],
+            rho: 0.25,
+        },
+        Command::For {
+            rank: 3,
+            inner: Box::new(Command::Loss { w: Arc::new(weird_vec(&mut rng, 4)) }),
+        },
     ] {
         encode_command(&cmd, &mut buf).unwrap();
         frames.push(buf[4..].to_vec());
