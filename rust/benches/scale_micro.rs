@@ -1,0 +1,172 @@
+//! Sparse-at-scale micro-benchmarks (EXPERIMENTS.md §Scale).
+//!
+//! Three layers of the sparse data plane, measured with the in-tree
+//! criterion-style harness:
+//!
+//! 1. **CSR kernels** — serial `matvec` vs deterministic `par_matvec`
+//!    at t in {2, 4, 8} on square sparse instances (the parallel kernel
+//!    is bit-identical to the serial one by construction, asserted here
+//!    before timing);
+//! 2. **matrix-free local solve** — a full DANE Newton-CG local solve
+//!    on a sparse shard across a (d, n) sweep, the O(nnz)-per-HVP path
+//!    that replaces the d x d Gram/Cholesky at scale;
+//! 3. **by-ref startup plane** — `LineIndex::build` plus one shard's
+//!    `load_rows` on a generated LIBSVM file, the per-worker disk cost
+//!    that Init-by-reference trades against shipping O(n·d) shard bytes
+//!    (the corresponding frame sizes are printed next to the timings).
+//!
+//! The run is serialized to `BENCH_scale.json` at the repo root (the
+//! same `dane-bench-v1` schema as the other BENCH_*.json trajectories).
+//! `BENCH_MEASURE_MS` / `BENCH_WARMUP_MS` shrink the run for CI's
+//! bench-smoke job; `BENCH_LABEL` overrides the git label.
+
+use dane::comm::wire::{self, Command, InitPayload, InitRefPayload};
+use dane::data::{shard_indices, sparse_ridge, Shard};
+use dane::linalg::DataMatrix;
+use dane::loss::{Objective, Ridge};
+use dane::util::bench::{black_box, fmt_ns, git_label, Bencher};
+use dane::worker::Worker;
+use std::sync::Arc;
+
+/// Repo root (one above the cargo manifest), where the trajectory lands.
+const BENCH_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_scale.json");
+
+const NNZ_PER_ROW: usize = 8;
+
+fn main() {
+    let b = Bencher::from_env(500, 100, 40);
+    println!("== scale_micro (sparse data plane; nnz/row = {NNZ_PER_ROW}) ==");
+
+    // ---- 1. CSR kernels: matvec vs par_matvec -----------------------
+    for (n, d) in [(10_000usize, 10_000usize), (50_000, 50_000)] {
+        let ds = sparse_ridge(n, d, NNZ_PER_ROW, 11);
+        let DataMatrix::Sparse(x) = &ds.x else {
+            panic!("sparse_ridge builds CSR");
+        };
+        let v: Vec<f64> = (0..d).map(|j| (j % 17) as f64 * 0.125 - 1.0).collect();
+        let mut serial = vec![0.0; n];
+        let mut par = vec![0.0; n];
+        x.matvec(&v, &mut serial);
+        b.bench(&format!("matvec n=d={n} serial"), || {
+            x.matvec(&v, &mut par);
+            black_box(&par);
+        });
+        for t in [2usize, 4, 8] {
+            // parity first: the deterministic split must be bit-exact
+            x.par_matvec(&v, &mut par, t);
+            assert_eq!(serial, par, "par_matvec t={t} drifted from serial");
+            b.bench(&format!("matvec n=d={n} par t={t}"), || {
+                x.par_matvec(&v, &mut par, t);
+                black_box(&par);
+            });
+        }
+    }
+
+    // ---- 2. matrix-free DANE local solve ----------------------------
+    // One shard's worth of rows at each scale; the Newton-CG path is
+    // what every sparse worker runs each round instead of a Cholesky.
+    let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.1));
+    for (n, d) in [(4_096usize, 10_000usize), (4_096, 50_000)] {
+        let ds = sparse_ridge(n, d, NNZ_PER_ROW, 23);
+        let shard = Shard::new(ds.x.clone(), ds.y.clone());
+        let mut wk = Worker::new(0, shard, obj.clone());
+        let w_prev = vec![0.0; d];
+        let mut g = vec![0.0; d];
+        wk.grad(&w_prev, &mut g).expect("gradient");
+        let mut out = Vec::new();
+        b.bench(&format!("dane_local_solve sparse n={n} d={d}"), || {
+            wk.dane_local_solve_into(&w_prev, &g, 1.0, 0.0, &mut out)
+                .expect("matrix-free local solve");
+            black_box(&out);
+        });
+        assert!(
+            !wk.quad_cache_built(),
+            "sparse local solve must never build the dense Gram"
+        );
+    }
+
+    // ---- 3. by-ref startup plane ------------------------------------
+    let (n, d, m) = (20_000usize, 5_000usize, 4usize);
+    let ds = sparse_ridge(n, d, NNZ_PER_ROW, 31);
+    let dir = dane::util::tempdir::TempDir::new("scale-micro").expect("tempdir");
+    let path = dir.path().join("scale.svm");
+    {
+        use std::io::Write;
+        let file = std::fs::File::create(&path).expect("create libsvm file");
+        let mut out = std::io::BufWriter::new(file);
+        let DataMatrix::Sparse(x) = &ds.x else { panic!("sparse") };
+        for i in 0..n {
+            let label = if ds.y[i] >= 0.0 { "+1" } else { "-1" };
+            write!(out, "{label}").unwrap();
+            let (idx, val) = x.row(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                write!(out, " {}:{}", j + 1, v).unwrap();
+            }
+            writeln!(out).unwrap();
+        }
+    }
+    b.bench(&format!("LineIndex::build n={n}"), || {
+        black_box(dane::data::libsvm::LineIndex::build(&path).expect("index"));
+    });
+    let rows = shard_indices(n, m, 7);
+    b.bench(&format!("load_rows shard n/m={}", rows[0].len()), || {
+        black_box(
+            dane::data::libsvm::load_rows(&path, d, &rows[0]).expect("shard load"),
+        );
+    });
+
+    // frame sizes: what by-ref actually saves at startup
+    let shards = dane::data::shard_dataset(&ds, m, 7);
+    let mut buf = Vec::new();
+    wire::encode_command(
+        &Command::Init(Box::new(InitPayload {
+            worker_id: 0,
+            loss_name: "ridge".into(),
+            lambda: 0.1,
+            gram_threads: None,
+            shard: shards[0].clone(),
+        })),
+        &mut buf,
+    )
+    .expect("encode Init");
+    let by_value = buf.len();
+    wire::encode_command(
+        &Command::InitRef(Box::new(InitRefPayload {
+            worker_id: 0,
+            loss_name: "ridge".into(),
+            lambda: 0.1,
+            gram_threads: None,
+            path: path.to_string_lossy().into_owned(),
+            dim: d,
+            n,
+            machines: m,
+            shard_seed: 7,
+        })),
+        &mut buf,
+    )
+    .expect("encode InitRef");
+    let by_ref = buf.len();
+    println!(
+        "startup frame, one worker (n={n} d={d} m={m}): by-value {by_value} B, \
+         by-ref {by_ref} B ({:.0}x smaller)",
+        by_value as f64 / by_ref as f64
+    );
+
+    // ---- summary + JSON trajectory ----------------------------------
+    for (n, _) in [(10_000usize, 0usize), (50_000, 0)] {
+        if let (Some(serial), Some(par4)) = (
+            b.median_ns_of(&format!("matvec n=d={n} serial")),
+            b.median_ns_of(&format!("matvec n=d={n} par t=4")),
+        ) {
+            println!(
+                "n=d={n:<6} serial {} vs par t=4 {} ({:.2}x)",
+                fmt_ns(serial),
+                fmt_ns(par4),
+                serial / par4
+            );
+        }
+    }
+    b.write_json(std::path::Path::new(BENCH_JSON), "scale_micro", &git_label())
+        .expect("write BENCH_scale.json");
+    println!("wrote {BENCH_JSON}");
+}

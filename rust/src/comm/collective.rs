@@ -18,6 +18,12 @@ pub struct CommStats {
     /// included). Exactly zero on the in-memory engines — the
     /// modeled-vs-measured pair is the point of the column.
     pub wire_bytes: u64,
+    /// One-time bring-up bytes measured on a real transport (Init or
+    /// InitRef frames, Peers frames, and their acks). O(n·d) when
+    /// shards go by value, O(m) when they go by reference
+    /// (`--data-by-ref`). Zero on the in-memory engines; never reset
+    /// with the per-window round counters.
+    pub startup_bytes: u64,
 }
 
 impl CommStats {
@@ -26,6 +32,7 @@ impl CommStats {
         self.bytes += other.bytes;
         self.modeled_seconds += other.modeled_seconds;
         self.wire_bytes += other.wire_bytes;
+        self.startup_bytes += other.startup_bytes;
     }
 }
 

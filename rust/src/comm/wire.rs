@@ -69,6 +69,7 @@ const CMD_ROW_SQ: u8 = 0x07;
 const CMD_PEERS: u8 = 0x08;
 const CMD_PROX_ALL: u8 = 0x09;
 const CMD_FOR: u8 = 0x0a;
+const CMD_INIT_REF: u8 = 0x0b;
 
 const REP_VEC: u8 = 0x81;
 const REP_SCALAR: u8 = 0x82;
@@ -96,6 +97,40 @@ pub struct InitPayload {
     pub gram_threads: Option<usize>,
     /// This worker's slice of the data.
     pub shard: Shard,
+}
+
+/// Init **by reference**: instead of the shard's rows, the frame names
+/// the dataset file plus the sharding parameters, and the worker
+/// recomputes its own row list (`data::shard_indices(n, machines,
+/// shard_seed)[worker_id]`) and streams exactly those rows from local
+/// disk (`data::libsvm::load_rows`). The frame is O(1) in the data
+/// size, so cluster startup traffic through the leader drops from
+/// O(n) to O(m) — the point of the by-ref data plane. Requires every
+/// worker to see the dataset file at `path` (shared filesystem or
+/// pre-staged copy); the deterministic shuffle makes the resulting
+/// shard bit-identical to the by-value one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InitRefPayload {
+    /// Rank of this worker in the cluster.
+    pub worker_id: usize,
+    /// Objective by name (`config::LossKind::from_name`).
+    pub loss_name: String,
+    /// L2 regularization lambda of the objective.
+    pub lambda: f64,
+    /// Gram-build thread override (config `threads`).
+    pub gram_threads: Option<usize>,
+    /// Dataset file (LIBSVM format) as the worker should open it.
+    pub path: String,
+    /// The full dataset's feature dimension (leader-authoritative; a
+    /// row subset cannot infer it).
+    pub dim: usize,
+    /// Total data rows in the file — the `n` of the sharding shuffle.
+    pub n: usize,
+    /// Cluster size — the `m` of the sharding shuffle.
+    pub machines: usize,
+    /// Seed of the deterministic sharding shuffle
+    /// (`cfg.seed.wrapping_add(1)`, same discipline as every engine).
+    pub shard_seed: u64,
 }
 
 /// One child entry of a [`Command::Peers`] frame: everything a relay
@@ -135,6 +170,10 @@ pub enum Command {
     /// Handshake: install the shard + objective (TCP transport only).
     /// Acknowledged with `Reply::Scalar(0.0)`.
     Init(Box<InitPayload>),
+    /// Handshake by reference: install the objective and load the
+    /// shard from local disk (TCP transport only, `data_by_ref`
+    /// config). Acknowledged with `Reply::Scalar(0.0)`.
+    InitRef(Box<InitRefPayload>),
     /// grad phi_i + phi_i at w -> `Reply::VecScalar`.
     GradLoss {
         w: Arc<Vec<f64>>,
@@ -184,6 +223,7 @@ impl Command {
     pub fn relay_copy(&self) -> Command {
         match self {
             Command::Init(p) => Command::Init(p.clone()),
+            Command::InitRef(p) => Command::InitRef(p.clone()),
             Command::GradLoss { w, out: _ } => {
                 Command::GradLoss { w: w.clone(), out: Vec::new() }
             }
@@ -255,6 +295,24 @@ fn put_command_body(cmd: &Command, buf: &mut Vec<u8>, envelope: bool) -> Result<
             }
             put_shard(buf, &p.shard);
         }
+        Command::InitRef(p) => {
+            buf.push(CMD_INIT_REF);
+            put_u64(buf, p.worker_id as u64);
+            put_str(buf, &p.loss_name);
+            put_f64(buf, p.lambda);
+            match p.gram_threads {
+                None => buf.push(0),
+                Some(t) => {
+                    buf.push(1);
+                    put_u64(buf, t as u64);
+                }
+            }
+            put_str(buf, &p.path);
+            put_u64(buf, p.dim as u64);
+            put_u64(buf, p.n as u64);
+            put_u64(buf, p.machines as u64);
+            put_u64(buf, p.shard_seed);
+        }
         Command::GradLoss { w, out: _ } => {
             buf.push(CMD_GRAD_LOSS);
             put_vec(buf, w);
@@ -312,7 +370,10 @@ fn put_command_body(cmd: &Command, buf: &mut Vec<u8>, envelope: bool) -> Result<
             if !envelope
                 || matches!(
                     **inner,
-                    Command::For { .. } | Command::Init(_) | Command::Peers(_)
+                    Command::For { .. }
+                        | Command::Init(_)
+                        | Command::InitRef(_)
+                        | Command::Peers(_)
                 )
             {
                 return Err(Error::Config(
@@ -582,6 +643,54 @@ fn take_command(cur: &mut Cur, tag: u8, envelope: bool) -> Result<Command> {
                 shard,
             }))
         }
+        CMD_INIT_REF => {
+            let worker_id = cur.u64()? as usize;
+            let loss_name = cur.string()?;
+            let lambda = cur.f64()?;
+            let gram_threads = match cur.u8()? {
+                0 => None,
+                1 => Some(cur.u64()? as usize),
+                b => {
+                    return Err(Error::Config(format!(
+                        "wire: bad gram_threads marker {b}"
+                    )))
+                }
+            };
+            let path = cur.string()?;
+            let dim = cur.u64()? as usize;
+            let n = cur.u64()? as usize;
+            let machines = cur.u64()? as usize;
+            let shard_seed = cur.u64()?;
+            // Validate the sharding parameters here so the serve loop
+            // can hand them straight to `shard_indices` (which asserts)
+            // without a hostile frame ever reaching a panic.
+            if machines == 0 || worker_id >= machines {
+                return Err(Error::Config(format!(
+                    "wire: init-ref rank {worker_id} out of range (m={machines})"
+                )));
+            }
+            if n < machines {
+                return Err(Error::Config(format!(
+                    "wire: init-ref has fewer rows ({n}) than machines ({machines})"
+                )));
+            }
+            if dim == 0 {
+                return Err(Error::Config(
+                    "wire: init-ref dim must be explicit (nonzero)".into(),
+                ));
+            }
+            Command::InitRef(Box::new(InitRefPayload {
+                worker_id,
+                loss_name,
+                lambda,
+                gram_threads,
+                path,
+                dim,
+                n,
+                machines,
+                shard_seed,
+            }))
+        }
         CMD_GRAD_LOSS => Command::GradLoss {
             w: Arc::new(cur.vec_f64()?),
             out: Vec::new(),
@@ -658,7 +767,7 @@ fn take_command(cur: &mut Cur, tag: u8, envelope: bool) -> Result<Command> {
         CMD_FOR if envelope => {
             let rank = cur.u64()? as usize;
             let inner_tag = cur.u8()?;
-            if matches!(inner_tag, CMD_INIT | CMD_PEERS) {
+            if matches!(inner_tag, CMD_INIT | CMD_INIT_REF | CMD_PEERS) {
                 return Err(Error::Config(
                     "wire: For may only wrap a compute command".into(),
                 ));
@@ -1007,6 +1116,66 @@ mod tests {
         body.push(0x0a); // inner tag: For again
         body.extend_from_slice(&1u64.to_le_bytes());
         body.push(0x07); // RowSq
+        assert!(decode_command(&body).is_err());
+    }
+
+    fn init_ref() -> InitRefPayload {
+        InitRefPayload {
+            worker_id: 2,
+            loss_name: "ridge".into(),
+            lambda: 0.01,
+            gram_threads: Some(3),
+            path: "/data/rcv1.svm".into(),
+            dim: 47_236,
+            n: 677_399,
+            machines: 8,
+            shard_seed: 12,
+        }
+    }
+
+    #[test]
+    fn init_ref_roundtrips_and_stays_small() {
+        let p = init_ref();
+        let mut buf = Vec::new();
+        encode_command(&Command::InitRef(Box::new(p.clone())), &mut buf).unwrap();
+        // O(1) in the dataset size: metadata only
+        assert!(buf.len() < 256, "InitRef frame ballooned to {} bytes", buf.len());
+        match decode_command(&buf[4..]).unwrap() {
+            Command::InitRef(q) => assert_eq!(*q, p),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn init_ref_rejects_hostile_sharding_params() {
+        let mut buf = Vec::new();
+        let cases: [(fn(&mut InitRefPayload), &str); 4] = [
+            (|p| p.machines = 0, "rank"),
+            (|p| p.worker_id = 8, "rank"),
+            (|p| p.n = 7, "fewer rows"),
+            (|p| p.dim = 0, "dim"),
+        ];
+        for (fix, expect) in cases {
+            let mut p = init_ref();
+            fix(&mut p);
+            encode_command(&Command::InitRef(Box::new(p)), &mut buf).unwrap();
+            let err = decode_command(&buf[4..]).unwrap_err();
+            assert!(err.to_string().contains(expect), "{err}");
+        }
+    }
+
+    #[test]
+    fn init_ref_cannot_ride_a_for_envelope() {
+        let mut buf = Vec::new();
+        let cmd = Command::For {
+            rank: 0,
+            inner: Box::new(Command::InitRef(Box::new(init_ref()))),
+        };
+        assert!(encode_command(&cmd, &mut buf).is_err());
+        // and a handcrafted For{InitRef} frame dies on decode
+        let mut body = vec![WIRE_VERSION, 0x0a];
+        body.extend_from_slice(&0u64.to_le_bytes());
+        body.push(0x0b); // inner tag: InitRef
         assert!(decode_command(&body).is_err());
     }
 

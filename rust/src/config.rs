@@ -382,6 +382,17 @@ pub struct ExperimentConfig {
     /// bit-comparable to a tree run's. Traces are bit-identical across
     /// topologies regardless; only `modeled_seconds`/`wire_bytes` move.
     pub topology: Option<ExecTopology>,
+    /// TCP engine + libsvm dataset only: distribute shards **by
+    /// reference**. Instead of streaming every shard row over the
+    /// setup connections (O(n·d) startup bytes), the leader sends each
+    /// worker one small `InitRef` frame naming the libsvm file and the
+    /// sharding parameters, and the worker reads its own rows from
+    /// local disk (O(m) startup bytes — see `startup_bytes` in the
+    /// trace). Requires the file to be readable at the same path on
+    /// every worker host; shard assignment and traces stay
+    /// bit-identical to by-value distribution. JSON:
+    /// `"data": {"by_ref": true}`.
+    pub data_by_ref: bool,
     /// Evaluate test loss each round (fig. 4).
     pub eval_test: bool,
     pub net: NetConfig,
@@ -417,6 +428,10 @@ impl ExperimentConfig {
             (
                 "topology",
                 self.topology.map(|t| Json::str(t.name())).unwrap_or(Json::Null),
+            ),
+            (
+                "data",
+                Json::obj(vec![("by_ref", Json::Bool(self.data_by_ref))]),
             ),
             ("eval_test", Json::Bool(self.eval_test)),
             (
@@ -490,6 +505,15 @@ impl ExperimentConfig {
                 || Error::Config("topology must be a string".into()),
             )?)?),
         };
+        let data_by_ref = match v.get("data") {
+            None | Some(Json::Null) => false,
+            Some(d) => match d.get("by_ref") {
+                None | Some(Json::Null) => false,
+                Some(b) => b.as_bool().ok_or_else(|| {
+                    Error::Config("data.by_ref must be a bool".into())
+                })?,
+            },
+        };
         let eval_test = v.get("eval_test").and_then(|x| x.as_bool()).unwrap_or(false);
         let net = match v.get("net") {
             Some(n) => {
@@ -521,6 +545,7 @@ impl ExperimentConfig {
             workers,
             threads,
             topology,
+            data_by_ref,
             eval_test,
             net,
         })
@@ -598,6 +623,22 @@ impl ExperimentConfig {
             }
             (None, _) => {}
         }
+        if self.data_by_ref {
+            if self.engine != EngineKind::Tcp {
+                return Err(Error::Config(
+                    "data.by_ref requires engine \"tcp\" (in-memory engines share \
+                     the leader's address space — there is no wire to save)"
+                        .into(),
+                ));
+            }
+            if !matches!(self.dataset, DatasetConfig::Libsvm { .. }) {
+                return Err(Error::Config(
+                    "data.by_ref requires a libsvm dataset (workers re-read their \
+                     shard rows from the file; synthetic datasets have no file)"
+                        .into(),
+                ));
+            }
+        }
         if matches!(self.loss, LossKind::Ridge)
             && matches!(
                 self.dataset,
@@ -641,6 +682,7 @@ mod tests {
             workers: None,
             threads: None,
             topology: None,
+            data_by_ref: false,
             eval_test: false,
             net: NetConfig::free(),
         }
@@ -751,6 +793,45 @@ mod tests {
         let c2 = ExperimentConfig::from_json_str(&c.to_json_string()).unwrap();
         assert_eq!(c2.workers, None);
         c2.validate().unwrap();
+    }
+
+    #[test]
+    fn data_by_ref_roundtrips_and_is_gated() {
+        // roundtrip with the flag on (tcp + libsvm is the valid combo)
+        let mut c = sample();
+        c.engine = EngineKind::Tcp;
+        c.dataset = DatasetConfig::Libsvm { path: "/data/f.svm".into(), dim: 10 };
+        c.data_by_ref = true;
+        let c2 = ExperimentConfig::from_json_str(&c.to_json_string()).unwrap();
+        assert!(c2.data_by_ref);
+        c2.validate().unwrap();
+
+        // absent "data" key defaults to by-value
+        let s = r#"{
+            "name": "t", "loss": "ridge", "lambda": 0.01,
+            "machines": 2, "rounds": 5,
+            "dataset": {"kind": "fig2", "n": 100, "d": 5, "paper_reg": 0.005},
+            "algo": {"kind": "dane", "eta": 1.0, "mu_over_lambda": 0.0}
+        }"#;
+        assert!(!ExperimentConfig::from_json_str(s).unwrap().data_by_ref);
+
+        // by_ref needs the tcp engine
+        let mut c = sample();
+        c.dataset = DatasetConfig::Libsvm { path: "/data/f.svm".into(), dim: 10 };
+        c.data_by_ref = true;
+        assert!(c.validate().is_err(), "by_ref off-tcp must be rejected");
+
+        // ... and a libsvm dataset (synthetic data has no file)
+        let mut c = sample();
+        c.engine = EngineKind::Tcp;
+        c.data_by_ref = true;
+        assert!(c.validate().is_err(), "by_ref without a file must be rejected");
+
+        // malformed flag type
+        let s = sample()
+            .to_json_string()
+            .replacen("\"by_ref\": false", "\"by_ref\": 1", 1);
+        assert!(ExperimentConfig::from_json_str(&s).is_err());
     }
 
     #[test]

@@ -84,30 +84,72 @@ fn build_cluster(
         // Same shard seed, same weights, same reduction order — a tcp
         // run stays trace-bit-identical to a serial one
         // (tests/tcp_cluster.rs pins it through this function).
-        EngineKind::Tcp => match &cfg.workers {
-            Some(addrs) => Box::new(TcpCluster::connect(
-                ds,
-                cfg.loss,
-                cfg.lambda,
-                addrs,
-                shard_seed,
-                net,
-                cfg.threads,
-                None,
-                topology,
-            )?),
-            None => Box::new(TcpCluster::self_hosted(
-                ds,
-                cfg.loss,
-                cfg.lambda,
-                cfg.machines,
-                shard_seed,
-                net,
-                cfg.threads,
-                None,
-                topology,
-            )?),
-        },
+        // With `data: {by_ref: true}` (validate(): tcp + libsvm only)
+        // the Init frames carry the dataset *path* and sharding
+        // parameters instead of the rows — O(m) startup bytes — and
+        // every worker streams its own shard from local disk. Shard
+        // assignment uses the same (n, m, shard_seed), so the trace is
+        // still bit-identical to a by-value run.
+        EngineKind::Tcp => {
+            let by_ref_path = if cfg.data_by_ref {
+                match &cfg.dataset {
+                    crate::config::DatasetConfig::Libsvm { path, .. } => {
+                        Some(path.clone())
+                    }
+                    _ => None, // unreachable past validate()
+                }
+            } else {
+                None
+            };
+            match (&cfg.workers, by_ref_path) {
+                (Some(addrs), None) => Box::new(TcpCluster::connect(
+                    ds,
+                    cfg.loss,
+                    cfg.lambda,
+                    addrs,
+                    shard_seed,
+                    net,
+                    cfg.threads,
+                    None,
+                    topology,
+                )?),
+                (Some(addrs), Some(path)) => Box::new(TcpCluster::connect_by_ref(
+                    ds,
+                    cfg.loss,
+                    cfg.lambda,
+                    addrs,
+                    shard_seed,
+                    net,
+                    cfg.threads,
+                    None,
+                    topology,
+                    &path,
+                )?),
+                (None, None) => Box::new(TcpCluster::self_hosted(
+                    ds,
+                    cfg.loss,
+                    cfg.lambda,
+                    cfg.machines,
+                    shard_seed,
+                    net,
+                    cfg.threads,
+                    None,
+                    topology,
+                )?),
+                (None, Some(path)) => Box::new(TcpCluster::self_hosted_by_ref(
+                    ds,
+                    cfg.loss,
+                    cfg.lambda,
+                    cfg.machines,
+                    shard_seed,
+                    net,
+                    cfg.threads,
+                    None,
+                    topology,
+                    &path,
+                )?),
+            }
+        }
     })
 }
 
@@ -222,6 +264,7 @@ mod tests {
             workers: None,
             threads: None,
             topology: None,
+            data_by_ref: false,
             eval_test: false,
             net: NetConfig { alpha: 0.0, beta: 0.0, topology: Topology::Star },
         }

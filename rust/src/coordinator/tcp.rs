@@ -66,11 +66,13 @@
 
 use super::Cluster;
 use crate::comm::topology::{ExecTopology, RankGather, TreePlan};
-use crate::comm::wire::{self, Command as Cmd, InitPayload, PeerChild, PeersPayload, Reply};
+use crate::comm::wire::{
+    self, Command as Cmd, InitPayload, InitRefPayload, PeerChild, PeersPayload, Reply,
+};
 use crate::comm::{Collective, CommStats, NetModel};
 use crate::comm::roundchan::{round_channel, RecvTimeoutError, RoundReceiver, RoundSender};
 use crate::config::LossKind;
-use crate::data::{shard_dataset, Dataset};
+use crate::data::{shard_dataset, shard_indices, Dataset};
 use crate::linalg::ops;
 use crate::loss::{make_objective, Objective};
 use crate::{Error, Result};
@@ -169,6 +171,12 @@ pub struct TcpCluster {
     /// Bytes measured on the leader-adjacent sockets (round frames
     /// only; Init/Peers setup excluded).
     wire_bytes: u64,
+    /// Bytes measured during bring-up (Init or InitRef frames, Peers
+    /// frames, and their acks): the one-time data-distribution cost.
+    /// By-value Init ships every shard row, O(n·d); by-ref InitRef
+    /// ships one small frame per worker, O(m). Reported separately
+    /// from `wire_bytes` and *not* cleared by `reset_comm`.
+    startup_bytes: u64,
     /// Reusable encode buffer — one frame encoded per broadcast.
     enc: Vec<u8>,
     /// Reusable receive buffer (inline reads + setup acks).
@@ -194,6 +202,60 @@ impl TcpCluster {
         timeout: Option<Duration>,
         topology: ExecTopology,
     ) -> Result<Self> {
+        Self::connect_impl(
+            ds, loss, lambda, addrs, seed, net, gram_threads, timeout, topology, None,
+        )
+    }
+
+    /// Like [`TcpCluster::connect`], but ship shards **by reference**:
+    /// each worker gets one small [`wire::InitRefPayload`] frame naming
+    /// the libsvm file at `path` plus the sharding parameters
+    /// `(n, m, seed)`, and streams its own rows from local disk —
+    /// O(m) startup bytes instead of O(n·d). Requirements: the file
+    /// must hold exactly `ds.n()` data rows in dataset order (true for
+    /// any dataset loaded from that same file — libsvm loads carry no
+    /// test split) and be readable at `path` on every worker host.
+    /// Shard assignment is bit-identical to by-value `connect`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn connect_by_ref(
+        ds: &Dataset,
+        loss: LossKind,
+        lambda: f64,
+        addrs: &[String],
+        seed: u64,
+        net: NetModel,
+        gram_threads: Option<usize>,
+        timeout: Option<Duration>,
+        topology: ExecTopology,
+        path: &str,
+    ) -> Result<Self> {
+        Self::connect_impl(
+            ds,
+            loss,
+            lambda,
+            addrs,
+            seed,
+            net,
+            gram_threads,
+            timeout,
+            topology,
+            Some(path.to_string()),
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn connect_impl(
+        ds: &Dataset,
+        loss: LossKind,
+        lambda: f64,
+        addrs: &[String],
+        seed: u64,
+        net: NetModel,
+        gram_threads: Option<usize>,
+        timeout: Option<Duration>,
+        topology: ExecTopology,
+        data_path: Option<String>,
+    ) -> Result<Self> {
         if addrs.is_empty() {
             return Err(Error::Config("tcp engine needs >= 1 worker address".into()));
         }
@@ -218,6 +280,7 @@ impl TcpCluster {
             streams,
             addrs.to_vec(),
             procs,
+            data_path,
         )
     }
 
@@ -235,6 +298,55 @@ impl TcpCluster {
         gram_threads: Option<usize>,
         timeout: Option<Duration>,
         topology: ExecTopology,
+    ) -> Result<Self> {
+        Self::self_hosted_impl(
+            ds, loss, lambda, m, seed, net, gram_threads, timeout, topology, None,
+        )
+    }
+
+    /// Like [`TcpCluster::self_hosted`], but with by-reference data
+    /// distribution (see [`TcpCluster::connect_by_ref`]). Self-hosted
+    /// children run on the same host, so "readable on every worker
+    /// host" is just "readable here".
+    #[allow(clippy::too_many_arguments)]
+    pub fn self_hosted_by_ref(
+        ds: &Dataset,
+        loss: LossKind,
+        lambda: f64,
+        m: usize,
+        seed: u64,
+        net: NetModel,
+        gram_threads: Option<usize>,
+        timeout: Option<Duration>,
+        topology: ExecTopology,
+        path: &str,
+    ) -> Result<Self> {
+        Self::self_hosted_impl(
+            ds,
+            loss,
+            lambda,
+            m,
+            seed,
+            net,
+            gram_threads,
+            timeout,
+            topology,
+            Some(path.to_string()),
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn self_hosted_impl(
+        ds: &Dataset,
+        loss: LossKind,
+        lambda: f64,
+        m: usize,
+        seed: u64,
+        net: NetModel,
+        gram_threads: Option<usize>,
+        timeout: Option<Duration>,
+        topology: ExecTopology,
+        data_path: Option<String>,
     ) -> Result<Self> {
         if m == 0 {
             return Err(Error::Config("tcp engine needs >= 1 worker".into()));
@@ -269,7 +381,7 @@ impl TcpCluster {
         }
         Self::bring_up(
             ds, loss, lambda, seed, net, gram_threads, io_timeout, topology, streams,
-            addrs, procs,
+            addrs, procs, data_path,
         )
     }
 
@@ -291,46 +403,89 @@ impl TcpCluster {
         streams: Vec<TcpStream>,
         addrs: Vec<String>,
         procs: Vec<Option<Child>>,
+        data_path: Option<String>,
     ) -> Result<Self> {
         let m = streams.len();
         let mut guard = ProcGuard(procs);
         for (i, s) in streams.iter().enumerate() {
             configure_stream(s, i, io_timeout)?;
         }
-        let shards = shard_dataset(ds, m, seed);
-        if shards.len() != m {
-            return Err(Error::Config(format!(
-                "tcp: {} shards for {m} workers",
-                shards.len()
-            )));
-        }
-        let total: usize = shards.iter().map(|s| s.n_effective()).sum();
-        let weights: Vec<f64> = shards
-            .iter()
-            .map(|s| s.n_effective() as f64 / total as f64)
-            .collect();
 
         let mut streams = streams;
         let mut enc = Vec::new();
         let mut frame = Vec::new();
+        let mut startup_bytes: u64 = 0;
         // Init handshake: the leader is the single source of sharding
-        // truth; worker processes need no config file. Uncounted (data
-        // distribution, like the modeled accounting).
-        for (i, shard) in shards.into_iter().enumerate() {
-            let init = Cmd::Init(Box::new(InitPayload {
-                worker_id: i,
-                loss_name: loss.name().to_string(),
-                lambda,
-                gram_threads,
-                shard,
-            }));
-            wire::encode_command(&init, &mut enc)?;
-            streams[i]
-                .write_all(&enc)
-                .map_err(|e| io_err(i, "init send", &e))?;
-        }
+        // truth; worker processes need no config file. Excluded from
+        // the per-round accounting (modeled and wire) but measured as
+        // `startup_bytes`: by value every shard row crosses the wire
+        // (O(n·d)), by reference one InitRef frame per worker does
+        // (O(m)) and workers stream their rows from local disk.
+        let weights: Vec<f64> = match &data_path {
+            None => {
+                let shards = shard_dataset(ds, m, seed);
+                if shards.len() != m {
+                    return Err(Error::Config(format!(
+                        "tcp: {} shards for {m} workers",
+                        shards.len()
+                    )));
+                }
+                let total: usize = shards.iter().map(|s| s.n_effective()).sum();
+                let weights = shards
+                    .iter()
+                    .map(|s| s.n_effective() as f64 / total as f64)
+                    .collect();
+                for (i, shard) in shards.into_iter().enumerate() {
+                    let init = Cmd::Init(Box::new(InitPayload {
+                        worker_id: i,
+                        loss_name: loss.name().to_string(),
+                        lambda,
+                        gram_threads,
+                        shard,
+                    }));
+                    wire::encode_command(&init, &mut enc)?;
+                    startup_bytes += enc.len() as u64;
+                    streams[i]
+                        .write_all(&enc)
+                        .map_err(|e| io_err(i, "init send", &e))?;
+                }
+                weights
+            }
+            Some(path) => {
+                if ds.n() < m {
+                    return Err(Error::Config(format!(
+                        "tcp: by-ref init needs >= 1 row per worker ({} rows, {m} workers)",
+                        ds.n()
+                    )));
+                }
+                // Same `(n, m, seed)` triple the by-value path feeds
+                // `shard_dataset`, so assignment is bit-identical.
+                let rows = shard_indices(ds.n(), m, seed);
+                let total = ds.n() as f64;
+                let weights = rows.iter().map(|r| r.len() as f64 / total).collect();
+                for i in 0..m {
+                    let init = Cmd::InitRef(Box::new(InitRefPayload {
+                        worker_id: i,
+                        loss_name: loss.name().to_string(),
+                        lambda,
+                        gram_threads,
+                        path: path.clone(),
+                        dim: ds.d(),
+                        n: ds.n(),
+                        machines: m,
+                        shard_seed: seed,
+                    }));
+                    wire::encode_command(&init, &mut enc)?;
+                    startup_bytes += enc.len() as u64;
+                    streams[i]
+                        .write_all(&enc)
+                        .map_err(|e| io_err(i, "init send", &e))?;
+                }
+                weights
+            }
+        };
         for (i, s) in streams.iter_mut().enumerate() {
-            read_setup_ack(s, &mut frame, i, "init")?;
+            startup_bytes += read_setup_ack(s, &mut frame, i, "init")?;
         }
 
         // Tree setup: every worker learns its children (rank, address,
@@ -354,12 +509,13 @@ impl TcpCluster {
                     expect_parent: !plan.is_root_child(i),
                 }));
                 wire::encode_command(&peers, &mut enc)?;
+                startup_bytes += enc.len() as u64;
                 streams[i]
                     .write_all(&enc)
                     .map_err(|e| io_err(i, "peers send", &e))?;
             }
             for (i, s) in streams.iter_mut().enumerate() {
-                read_setup_ack(s, &mut frame, i, "peers")?;
+                startup_bytes += read_setup_ack(s, &mut frame, i, "peers")?;
             }
         }
 
@@ -400,6 +556,7 @@ impl TcpCluster {
             weights,
             row_sq: None,
             wire_bytes: 0,
+            startup_bytes,
             enc,
             frame,
             io_timeout,
@@ -778,9 +935,9 @@ fn read_setup_ack(
     buf: &mut Vec<u8>,
     i: usize,
     what: &str,
-) -> Result<()> {
-    match wire::read_frame(stream, buf) {
-        Ok(Some(_)) => {}
+) -> Result<u64> {
+    let got = match wire::read_frame(stream, buf) {
+        Ok(Some(total)) => total as u64,
         Ok(None) => {
             return Err(Error::Runtime(format!(
                 "tcp: worker {i} closed the connection during {what}"
@@ -788,9 +945,9 @@ fn read_setup_ack(
         }
         Err(Error::Io(e)) => return Err(io_err(i, "ack read", &e)),
         Err(e) => return Err(Error::Runtime(format!("tcp: worker {i}: {e}"))),
-    }
+    };
     match wire::decode_reply(buf) {
-        Ok(Reply::Scalar(_)) => Ok(()),
+        Ok(Reply::Scalar(_)) => Ok(got),
         Ok(Reply::Err(e)) => Err(Error::Runtime(format!("worker {i}: {e}"))),
         Ok(_) => Err(Error::Runtime(format!("tcp: worker {i}: unexpected {what} ack"))),
         Err(e) => Err(Error::Runtime(format!(
@@ -1159,12 +1316,15 @@ impl Cluster for TcpCluster {
     fn comm_stats(&self) -> CommStats {
         let mut s = self.comm.stats().clone();
         s.wire_bytes = self.wire_bytes;
+        s.startup_bytes = self.startup_bytes;
         s
     }
 
     fn reset_comm(&mut self) {
         self.comm.reset();
         self.wire_bytes = 0;
+        // startup_bytes survives: it is a one-time data-distribution
+        // cost, not per-window round traffic.
     }
 }
 

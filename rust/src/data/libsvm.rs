@@ -24,6 +24,48 @@ pub fn load(path: &Path, dim: usize) -> Result<Dataset> {
     parse(reader.lines().map(|l| l.map_err(Error::from)), dim, path.display())
 }
 
+/// One data line, parsed: coerced {-1,+1} label plus (1-based index,
+/// value) features; `None` for comment / blank lines. Shared by the
+/// whole-file [`parse`] and the by-reference [`load_rows`] so both
+/// paths run the identical per-token `str -> f64` parses — the
+/// bit-exactness contract between Init-by-value and Init-by-ref shards.
+fn parse_data_line(line: &str, lineno: usize) -> Result<Option<(f64, Vec<(usize, f64)>)>> {
+    // `#` starts a comment: a whole comment line, or a trailing
+    // comment after the features (LIBSVM tools emit both).
+    let line = line.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut parts = line.split_ascii_whitespace();
+    let label: f64 = parts
+        .next()
+        .ok_or_else(|| bad(lineno, "missing label"))?
+        .parse()
+        .map_err(|_| bad(lineno, "unparseable label"))?;
+    let label = if label > 0.0 { 1.0 } else { -1.0 };
+    let mut feats = Vec::new();
+    for tok in parts {
+        let (idx, val) = tok
+            .split_once(':')
+            .ok_or_else(|| bad(lineno, "feature not idx:val"))?;
+        // Ranking files carry a query-group token (`qid:7`) between
+        // the label and the features; it names no feature column,
+        // so it is validated and skipped.
+        if idx == "qid" {
+            val.parse::<u64>()
+                .map_err(|_| bad(lineno, "bad qid value"))?;
+            continue;
+        }
+        let idx: usize = idx.parse().map_err(|_| bad(lineno, "bad feature index"))?;
+        if idx == 0 {
+            return Err(bad(lineno, "indices are 1-based"));
+        }
+        let val: f64 = val.parse().map_err(|_| bad(lineno, "bad feature value"))?;
+        feats.push((idx, val));
+    }
+    Ok(Some((label, feats)))
+}
+
 /// Parse from any line iterator (unit tests feed strings).
 pub fn parse<I, D>(lines: I, dim: usize, origin: D) -> Result<Dataset>
 where
@@ -35,39 +77,12 @@ where
     let mut max_col = 0usize;
     for (lineno, line) in lines.enumerate() {
         let line = line?;
-        // `#` starts a comment: a whole comment line, or a trailing
-        // comment after the features (LIBSVM tools emit both).
-        let line = line.split('#').next().unwrap_or("").trim();
-        if line.is_empty() {
+        let Some((label, feats)) = parse_data_line(&line, lineno)? else {
             continue;
-        }
-        let mut parts = line.split_ascii_whitespace();
-        let label: f64 = parts
-            .next()
-            .ok_or_else(|| bad(lineno, "missing label"))?
-            .parse()
-            .map_err(|_| bad(lineno, "unparseable label"))?;
+        };
         let row = y.len();
-        y.push(if label > 0.0 { 1.0 } else { -1.0 });
-        for tok in parts {
-            let (idx, val) = tok
-                .split_once(':')
-                .ok_or_else(|| bad(lineno, "feature not idx:val"))?;
-            // Ranking files carry a query-group token (`qid:7`) between
-            // the label and the features; it names no feature column,
-            // so it is validated and skipped.
-            if idx == "qid" {
-                val.parse::<u64>()
-                    .map_err(|_| bad(lineno, "bad qid value"))?;
-                continue;
-            }
-            let idx: usize =
-                idx.parse().map_err(|_| bad(lineno, "bad feature index"))?;
-            if idx == 0 {
-                return Err(bad(lineno, "indices are 1-based"));
-            }
-            let val: f64 =
-                val.parse().map_err(|_| bad(lineno, "bad feature value"))?;
+        y.push(label);
+        for (idx, val) in feats {
             max_col = max_col.max(idx);
             trips.push((row, idx - 1, val));
         }
@@ -91,6 +106,110 @@ where
         DataMatrix::Sparse(x),
         y,
     ))
+}
+
+/// Byte-offset index of a LIBSVM file: where every *data* row starts
+/// (comment and blank lines excluded) and its 0-based line number (so
+/// errors attribute the same line as a whole-file [`load`]). One
+/// sequential scan, O(1) per row thereafter — the piece that lets a
+/// by-reference worker read only its own shard's lines.
+pub struct LineIndex {
+    /// (byte offset of line start, 0-based line number) per data row.
+    entries: Vec<(u64, usize)>,
+}
+
+impl LineIndex {
+    /// Number of data rows in the file.
+    pub fn rows(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Scan the file once, recording where every data row starts.
+    pub fn build(path: &Path) -> Result<LineIndex> {
+        let file = std::fs::File::open(path)?;
+        let mut reader = std::io::BufReader::new(file);
+        let mut entries = Vec::new();
+        let mut offset = 0u64;
+        let mut lineno = 0usize;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = reader.read_line(&mut line)?;
+            if n == 0 {
+                break;
+            }
+            let content = line.split('#').next().unwrap_or("").trim();
+            if !content.is_empty() {
+                entries.push((offset, lineno));
+            }
+            offset += n as u64;
+            lineno += 1;
+        }
+        Ok(LineIndex { entries })
+    }
+}
+
+/// Load only the given rows (0-based data-row indices, any order,
+/// duplicates allowed) of a LIBSVM file — the worker half of
+/// Init-by-reference. Bit-identical to `load(path, dim)` followed by
+/// `take_rows(rows)`: the same [`parse_data_line`] runs on the same
+/// bytes, and rows are assembled in the caller's (shuffled-shard)
+/// order. `dim` must be the full dataset's feature dimension (> 0) — a
+/// row subset cannot infer it, so the leader ships its authoritative
+/// value in the `InitRef` payload.
+pub fn load_rows(path: &Path, dim: usize, rows: &[usize]) -> Result<(CsrMatrix, Vec<f64>)> {
+    use std::io::{Seek, SeekFrom};
+    if dim == 0 {
+        return Err(Error::Config(format!(
+            "{}: load_rows needs the dataset's full dim (0 = infer is whole-file only)",
+            path.display()
+        )));
+    }
+    let index = LineIndex::build(path)?;
+    let n = index.rows();
+    for &r in rows {
+        if r >= n {
+            return Err(Error::Config(format!(
+                "{}: shard row {r} out of range ({n} data rows)",
+                path.display()
+            )));
+        }
+    }
+    // Parse each distinct wanted row once, in file order (forward seeks
+    // only), then assemble in the caller's order below.
+    let mut uniq: Vec<usize> = rows.to_vec();
+    uniq.sort_unstable();
+    uniq.dedup();
+    let file = std::fs::File::open(path)?;
+    let mut reader = std::io::BufReader::new(file);
+    let mut line = String::new();
+    let mut parsed: std::collections::HashMap<usize, (f64, Vec<(usize, f64)>)> =
+        std::collections::HashMap::with_capacity(uniq.len());
+    for r in uniq {
+        let (off, lineno) = index.entries[r];
+        reader.seek(SeekFrom::Start(off))?;
+        line.clear();
+        reader.read_line(&mut line)?;
+        let row = parse_data_line(&line, lineno)?
+            .ok_or_else(|| bad(lineno, "indexed data row changed under the reader"))?;
+        parsed.insert(r, row);
+    }
+    let mut trips: Vec<(usize, usize, f64)> = Vec::new();
+    let mut y = Vec::with_capacity(rows.len());
+    for (p, r) in rows.iter().enumerate() {
+        let (label, feats) = &parsed[r];
+        y.push(*label);
+        for &(idx, val) in feats {
+            if idx > dim {
+                return Err(Error::Config(format!(
+                    "{}: feature index {idx} exceeds requested dim {dim}",
+                    path.display()
+                )));
+            }
+            trips.push((p, idx - 1, val));
+        }
+    }
+    Ok((CsrMatrix::from_triplets(rows.len(), dim, &trips), y))
 }
 
 fn bad(lineno: usize, what: &str) -> Error {
@@ -178,5 +297,61 @@ mod tests {
         assert!(parse(lines("+1 0:1"), 0, "t").is_err());
         assert!(parse(lines("+1 1"), 0, "t").is_err());
         assert!(parse(lines(""), 0, "t").is_err());
+    }
+
+    /// A file exercising every line shape the parser knows: comments,
+    /// blank lines, trailing comments, qid tokens, exponent-format
+    /// values (bit-exactness hinges on parsing the identical token).
+    const MIXED: &str = "# header\n\
+        +1 qid:1 1:0.5 3:2.0e-1\n\
+        \n\
+        -1 2:1.25 # trailing 9:9\n\
+        0 1:3.0 4:-0.75\n\
+        +2 qid:3 2:1e3\n\
+        -1 3:0.1\n";
+
+    fn write_mixed() -> (crate::util::tempdir::TempDir, std::path::PathBuf) {
+        let dir = crate::util::tempdir::TempDir::new("libsvm").unwrap();
+        let p = dir.path().join("mixed.svm");
+        std::fs::write(&p, MIXED).unwrap();
+        (dir, p)
+    }
+
+    #[test]
+    fn line_index_counts_data_rows() {
+        let (_dir, p) = write_mixed();
+        let idx = LineIndex::build(&p).unwrap();
+        assert_eq!(idx.rows(), 5);
+    }
+
+    #[test]
+    fn load_rows_is_bit_identical_to_load_plus_take_rows() {
+        let (_dir, p) = write_mixed();
+        let full = load(&p, 4).unwrap();
+        // shuffled order with a duplicate: exactly take_rows semantics
+        let rows = [3usize, 0, 4, 0, 2];
+        let (x, y) = load_rows(&p, 4, &rows).unwrap();
+        let DataMatrix::Sparse(reference) = full.x.take_rows(&rows) else {
+            panic!("libsvm loads sparse");
+        };
+        assert_eq!(x, reference, "CSR structure and bits must match take_rows");
+        let want_y: Vec<f64> = rows.iter().map(|&r| full.y[r]).collect();
+        assert_eq!(y, want_y);
+    }
+
+    #[test]
+    fn load_rows_rejects_bad_inputs() {
+        let (_dir, p) = write_mixed();
+        // row out of range
+        assert!(load_rows(&p, 4, &[5]).is_err());
+        // dim must be explicit for a subset
+        assert!(load_rows(&p, 0, &[0]).is_err());
+        // dim too small for a loaded row's features
+        assert!(load_rows(&p, 2, &[3]).is_err());
+        // malformed line inside the subset surfaces as Err
+        let bad = p.with_file_name("bad.svm");
+        std::fs::write(&bad, "+1 1:0.5\n+1 0:1\n").unwrap();
+        assert!(load_rows(&bad, 4, &[1]).is_err());
+        assert!(load_rows(&bad, 4, &[0]).is_ok(), "good rows stay loadable");
     }
 }

@@ -13,8 +13,8 @@ pub mod sharding;
 pub mod synthetic;
 pub mod thm1;
 
-pub use sharding::shard_dataset;
-pub use synthetic::{astro_like, covtype_like, mnist47_like, synthetic_fig2};
+pub use sharding::{shard_dataset, shard_indices};
+pub use synthetic::{astro_like, covtype_like, mnist47_like, sparse_ridge, synthetic_fig2};
 
 use crate::linalg::DataMatrix;
 

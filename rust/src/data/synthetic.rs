@@ -190,6 +190,39 @@ fn template(j: usize, class: usize) -> f64 {
     0.8 * (-dist2 / (2.0 * s * s)).exp()
 }
 
+/// High-dimensional sparse ridge instance: each row has `nnz_per_row`
+/// nonzero columns (uniform, duplicates summed), standard-normal
+/// values; `y = <x, w*> + 0.1 xi` with a unit teacher. The regime the
+/// paper's sparse datasets live in (d up to ~10^5, a handful of
+/// features per row) where a dense d x d Gram is unbuildable — the
+/// workload for the matrix-free local-solve path and the `scale`
+/// benches/tests. No test split.
+pub fn sparse_ridge(n: usize, d: usize, nnz_per_row: usize, seed: u64) -> Dataset {
+    assert!(d > 0 && nnz_per_row > 0, "sparse_ridge needs d, nnz >= 1");
+    let mut rng = Rng64::seed_from_u64(seed);
+    let teacher = sample_unit_teacher(d, &mut rng);
+    let mut trips = Vec::with_capacity(n * nnz_per_row);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut cols = std::collections::BTreeMap::new();
+        for _ in 0..nnz_per_row {
+            let j = rng.below(d);
+            *cols.entry(j).or_insert(0.0) += rng.normal();
+        }
+        let mut mean = 0.0;
+        for (&j, &v) in &cols {
+            trips.push((i, j, v));
+            mean += v * teacher[j];
+        }
+        y.push(mean + 0.1 * rng.normal());
+    }
+    Dataset::new(
+        format!("sparse-ridge-n{n}-d{d}"),
+        DataMatrix::Sparse(CsrMatrix::from_triplets(n, d, &trips)),
+        y,
+    )
+}
+
 fn sample_unit_teacher(d: usize, rng: &mut Rng64) -> Vec<f64> {
     let v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
     let nrm = v.iter().map(|a| a * a).sum::<f64>().sqrt();
@@ -270,6 +303,22 @@ mod tests {
                 assert!((0.0..=1.0).contains(&v));
             }
         }
+    }
+
+    #[test]
+    fn sparse_ridge_shapes_and_determinism() {
+        let a = sparse_ridge(120, 5000, 3, 9);
+        let b = sparse_ridge(120, 5000, 3, 9);
+        assert_eq!(a.n(), 120);
+        assert_eq!(a.d(), 5000);
+        assert!(a.test_shard().is_none());
+        assert_eq!(a.y, b.y);
+        let DataMatrix::Sparse(s) = &a.x else { panic!("must be sparse") };
+        assert!(s.nnz() <= 120 * 3, "nnz {}", s.nnz());
+        assert!(s.nnz() >= 120, "nnz {}", s.nnz());
+        // bit-equal matrices under the same seed
+        let DataMatrix::Sparse(s2) = &b.x else { panic!() };
+        assert_eq!(s, s2);
     }
 
     #[test]

@@ -94,6 +94,48 @@ pub fn quickstart(engine: EngineKind, topology: ExecTopology) -> Result<()> {
     Ok(())
 }
 
+/// Sparse high-dimensional smoke run (`dane quickstart --sparse`):
+/// ridge on a d = 50_000 sparse instance, m = 4, a few DANE rounds.
+/// Every local solve is matrix-free Newton-CG — a dense d x d Gram
+/// here would be 20 GB, so this run doubles as the CI memory canary
+/// (scale-smoke runs it under `ulimit -v`). No reference ERM (the
+/// suboptimality axis needs a full-precision solve; the smoke prints
+/// objective and gradient norm instead).
+pub fn quickstart_sparse(engine: EngineKind, topology: ExecTopology) -> Result<()> {
+    let (n, d, nnz) = (4096, 50_000, 3);
+    let ds = data::sparse_ridge(n, d, nnz, 42);
+    let lam = 1e-3;
+    let mut cluster = build_cluster(
+        &ds,
+        crate::config::LossKind::Ridge,
+        lam,
+        4,
+        42,
+        NetModel::free(),
+        engine,
+        topology,
+    )?;
+    let ctx = RunCtx::new(6).with_tol(0.0);
+    let res = dane::run(cluster.as_mut(), &dane::DaneOptions::default(), &ctx)?;
+    println!(
+        "quickstart-sparse: DANE on sparse-ridge(n={n}, d={d}, {nnz} nnz/row), m=4 \
+         [engine: {} topology: {}]",
+        engine.name(),
+        topology.name()
+    );
+    for r in &res.trace.rows {
+        println!(
+            "  round {:>2}  objective {:>12.6e}  gradnorm {:>10}  comm_rounds {}",
+            r.round,
+            r.objective,
+            r.grad_norm.map(|g| format!("{g:.3e}")).unwrap_or_default(),
+            r.comm_rounds
+        );
+    }
+    println!("final objective: {:.6e}", res.trace.last_objective().unwrap_or(f64::NAN));
+    Ok(())
+}
+
 // ---------------------------------------------------------------------
 // fig. 2 — synthetic ridge: DANE vs ADMM across m x N
 // ---------------------------------------------------------------------
@@ -547,11 +589,11 @@ pub fn lemma2() -> Result<Vec<Lemma2Row>> {
 }
 
 fn max_row_sq(ds: &Dataset) -> f64 {
-    let dense = ds.x.to_dense();
+    // Representation-generic: never densifies (a 10^5-dim sparse
+    // dataset must not materialize n*d zeros just to take row norms).
     let mut best: f64 = 0.0;
-    for i in 0..dense.rows() {
-        let r = dense.row(i);
-        best = best.max(crate::linalg::ops::dot(r, r));
+    for i in 0..ds.n() {
+        best = best.max(ds.x.row_sq_norm(i));
     }
     best
 }

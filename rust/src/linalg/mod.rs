@@ -60,6 +60,31 @@ impl DataMatrix {
         Ok(())
     }
 
+    /// [`DataMatrix::matvec`] with a deterministic thread count: sparse
+    /// matrices fan rows out over `threads` fixed chunks
+    /// ([`CsrMatrix::par_matvec`], bit-identical to the serial kernel
+    /// for any count); dense matrices take the serial kernel — their
+    /// matvec is not the scale bottleneck this path exists for.
+    pub fn par_matvec(&self, v: &[f64], out: &mut [f64], threads: usize) -> Result<()> {
+        self.check_dims(v.len(), out.len(), "par_matvec")?;
+        match self {
+            DataMatrix::Dense(m) => m.matvec(v, out),
+            DataMatrix::Sparse(m) => m.par_matvec(v, out, threads),
+        }
+        Ok(())
+    }
+
+    /// ||row_i||^2 without materializing the row densely.
+    pub fn row_sq_norm(&self, i: usize) -> f64 {
+        match self {
+            DataMatrix::Dense(m) => {
+                let r = m.row(i);
+                ops::dot(r, r)
+            }
+            DataMatrix::Sparse(m) => m.row_sq_norm(i),
+        }
+    }
+
     /// out = X^T u   (out: d, u: n)
     pub fn rmatvec(&self, u: &[f64], out: &mut [f64]) -> Result<()> {
         self.check_dims(out.len(), u.len(), "rmatvec")?;
@@ -206,6 +231,25 @@ mod tests {
         d.row_axpy(2, 2.0, &mut od);
         s.row_axpy(2, 2.0, &mut os);
         assert_eq!(od, os);
+    }
+
+    #[test]
+    fn par_matvec_and_row_sq_agree_across_representations() {
+        let (d, s) = small();
+        let v = vec![1.0, -2.0, 0.5];
+        let mut serial = vec![0.0; 4];
+        d.matvec(&v, &mut serial).unwrap();
+        for t in [1usize, 3, 16] {
+            let mut od = vec![0.0; 4];
+            let mut os = vec![0.0; 4];
+            d.par_matvec(&v, &mut od, t).unwrap();
+            s.par_matvec(&v, &mut os, t).unwrap();
+            assert_eq!(od, serial, "dense t={t}");
+            assert_eq!(os, serial, "sparse t={t}");
+        }
+        for i in 0..4 {
+            assert_eq!(d.row_sq_norm(i), s.row_sq_norm(i), "row {i}");
+        }
     }
 
     #[test]

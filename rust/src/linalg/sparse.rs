@@ -106,6 +106,54 @@ impl CsrMatrix {
         }
     }
 
+    /// Deterministic multi-threaded `out = X v`: rows are split into
+    /// `threads` fixed contiguous chunks (same chunking as
+    /// [`super::DenseMatrix::par_gram`] — chunk i covers `base` rows, the
+    /// first `rem` chunks one extra) and each chunk fills its own
+    /// disjoint slice of `out` with the identical per-row [`Self::row_dot`]
+    /// the serial kernel uses. Because no element is ever reduced across
+    /// threads, the result is **bit-identical to [`Self::matvec`] for any
+    /// thread count**, not just reproducible per count — engine parity
+    /// survives whatever `t` a worker picks. Used for one-time setup and
+    /// bench sweeps; the steady-state CG loop stays serial per worker.
+    pub fn par_matvec(&self, v: &[f64], out: &mut [f64], threads: usize) {
+        let t = threads.max(1).min(self.rows.max(1));
+        if t <= 1 {
+            self.matvec(v, out);
+            return;
+        }
+        let (base, rem) = (self.rows / t, self.rows % t);
+        std::thread::scope(|s| {
+            let mut rest = &mut out[..self.rows];
+            let mut r0 = 0usize;
+            for i in 0..t {
+                let len = base + usize::from(i < rem);
+                let (chunk, tail) = rest.split_at_mut(len);
+                rest = tail;
+                let start = r0;
+                s.spawn(move || {
+                    for (k, o) in chunk.iter_mut().enumerate() {
+                        *o = self.row_dot(start + k, v);
+                    }
+                });
+                r0 += len;
+            }
+        });
+    }
+
+    /// ||row_i||^2 — O(nnz_i), no densification. The harness and the
+    /// workers' `RowSq` reply use this so sparse datasets never build a
+    /// dense copy just to compute eta (paper Lemma 1 scaling).
+    #[inline]
+    pub fn row_sq_norm(&self, i: usize) -> f64 {
+        let (_, val) = self.row(i);
+        let mut acc = 0.0;
+        for &v in val {
+            acc += v * v;
+        }
+        acc
+    }
+
     /// Dot of row i with a dense vector.
     #[inline]
     pub fn row_dot(&self, i: usize, v: &[f64]) -> f64 {
@@ -218,6 +266,42 @@ mod tests {
         m.matvec(&v, &mut o1);
         d.matvec(&v, &mut o2);
         assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn par_matvec_bitwise_matches_serial_for_any_thread_count() {
+        // build a ragged sparse matrix large enough that every chunking
+        // in the t-sweep is non-trivial
+        let mut trips = Vec::new();
+        let (n, d) = (37usize, 13usize);
+        for i in 0..n {
+            for k in 0..(i % 5) {
+                let j = (i * 7 + k * 3) % d;
+                trips.push((i, j, (i as f64 - 2.0 * k as f64) * 0.37 + 0.1));
+            }
+        }
+        let m = CsrMatrix::from_triplets(n, d, &trips);
+        let v: Vec<f64> = (0..d).map(|j| (j as f64 * 0.71) - 1.3).collect();
+        let mut serial = vec![0.0; n];
+        m.matvec(&v, &mut serial);
+        for t in [1usize, 2, 3, 5, 8, 64] {
+            let mut par = vec![f64::NAN; n];
+            m.par_matvec(&v, &mut par, t);
+            assert_eq!(par, serial, "t={t}");
+        }
+    }
+
+    #[test]
+    fn row_sq_norm_matches_row_dot() {
+        let m = x();
+        for i in 0..3 {
+            let (_, val) = m.row(i);
+            let expect: f64 = val.iter().map(|v| v * v).sum();
+            assert_eq!(m.row_sq_norm(i), expect);
+        }
+        // empty row: zero
+        let e = CsrMatrix::from_triplets(2, 3, &[(0, 1, 2.0)]);
+        assert_eq!(e.row_sq_norm(1), 0.0);
     }
 
     #[test]

@@ -32,8 +32,10 @@ dane — Communication-efficient distributed optimization (DANE, ICML 2014)
 USAGE:
     dane run --config <exp.json> [--csv <out.csv>] [--quiet]
              [--engine serial|threaded|tcp] [--topology star|star-seq|tree]
+             [--data-by-ref]
     dane worker --listen <addr>          # serve one shard over TCP
     dane quickstart [--engine serial|threaded|tcp] [--topology star|star-seq|tree]
+                    [--sparse]
     dane fig2   [--scale <K>] [--out <dir>] [--engine ...] [--topology ...]
     dane fig3   [--scale <K>] [--out <dir>] [--engine ...] [--topology ...]
     dane fig4   [--scale <K>] [--out <dir>] [--engine ...] [--topology ...]
@@ -51,7 +53,13 @@ worker processes when the list is absent. `--topology` (config key
 \"star\" = parallel star (default, per-connection I/O threads),
 \"star-seq\" = the leader-serialized baseline, \"tree\" = binomial
 relay through the workers; traces are bit-identical across topologies,
-only the modeled seconds and measured wire bytes move. Worker failures
+only the modeled seconds and measured wire bytes move. `--data-by-ref`
+(config key \"data\": {\"by_ref\": true}; tcp engine + libsvm dataset
+only) ships each worker a reference to the dataset file instead of its
+shard rows — O(m) startup bytes instead of O(n*d), with workers
+streaming their own rows from local disk; traces stay bit-identical to
+by-value runs. `quickstart --sparse` smoke-runs the high-dimensional
+sparse path (matrix-free local solves, no dense Gram). Worker failures
 and wedged workers surface as `error: ...` + non-zero exit.";
 
 /// Tiny flag parser: --key value pairs after the subcommand.
@@ -172,11 +180,14 @@ fn run(argv: &[String]) -> Result<(), String> {
     };
     let args = Args::parse(&argv[1..])?;
     let (value_flags, bool_flags): (&[&str], &[&str]) = match cmd.as_str() {
-        "run" => (&["config", "csv", "engine", "topology"], &["quiet"]),
+        "run" => (
+            &["config", "csv", "engine", "topology"],
+            &["quiet", "data-by-ref"],
+        ),
         "worker" => (&["listen"], &[]),
         "fig2" | "fig3" | "fig4" => (&["scale", "out", "engine", "topology"], &[]),
         "thm1" => (&["reps"], &[]),
-        "quickstart" => (&["engine", "topology"], &[]),
+        "quickstart" => (&["engine", "topology"], &["sparse"]),
         "lemma2" | "help" | "--help" | "-h" => (&[], &[]),
         other => return Err(format!("unknown subcommand {other:?}")),
     };
@@ -197,6 +208,9 @@ fn run(argv: &[String]) -> Result<(), String> {
             }
             if let Some(topology) = args.get("topology") {
                 cfg.topology = Some(ExecTopology::from_name(topology).map_err(e2s)?);
+            }
+            if args.has("data-by-ref") {
+                cfg.data_by_ref = true;
             }
             let res = run_experiment(&cfg).map_err(e2s)?;
             if let Some(path) = args.get("csv") {
@@ -219,7 +233,12 @@ fn run(argv: &[String]) -> Result<(), String> {
             dane::worker::serve::serve_addr(addr).map_err(e2s)
         }
         "quickstart" => {
-            harness::quickstart(args.get_engine()?, args.get_topology()?).map_err(e2s)
+            if args.has("sparse") {
+                harness::quickstart_sparse(args.get_engine()?, args.get_topology()?)
+                    .map_err(e2s)
+            } else {
+                harness::quickstart(args.get_engine()?, args.get_topology()?).map_err(e2s)
+            }
         }
         "fig2" => {
             let scale = args.get_positive("scale", 1)?;

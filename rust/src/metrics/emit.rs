@@ -5,11 +5,13 @@ use crate::util::Json;
 use crate::Result;
 use std::io::Write;
 
-/// CSV header matching [`super::TraceRow`] field order. The two
-/// run-specific columns sit last: `elapsed_seconds` (wallclock) and
-/// `wire_bytes` (measured socket bytes, 0 off the TCP engine) — so
-/// cross-engine trace comparison is "all columns but the last two".
-pub const CSV_HEADER: &str = "round,objective,suboptimality,grad_norm,test_loss,comm_rounds,comm_bytes,comm_modeled_seconds,elapsed_seconds,wire_bytes";
+/// CSV header matching [`super::TraceRow`] field order. The
+/// run-specific columns sit last: `elapsed_seconds` (wallclock),
+/// `wire_bytes` (measured socket bytes, 0 off the TCP engine) and
+/// `startup_bytes` (one-time bring-up bytes, 0 off the TCP engine) —
+/// so cross-engine trace comparison is "all columns but the last
+/// three" (`cut -d, -f1-8`).
+pub const CSV_HEADER: &str = "round,objective,suboptimality,grad_norm,test_loss,comm_rounds,comm_bytes,comm_modeled_seconds,elapsed_seconds,wire_bytes,startup_bytes";
 
 /// Write a trace as CSV.
 pub fn write_csv<W: Write>(trace: &Trace, mut w: W) -> Result<()> {
@@ -17,7 +19,7 @@ pub fn write_csv<W: Write>(trace: &Trace, mut w: W) -> Result<()> {
     for r in &trace.rows {
         writeln!(
             w,
-            "{},{:.17e},{},{},{},{},{},{:.6e},{:.6},{}",
+            "{},{:.17e},{},{},{},{},{},{:.6e},{:.6},{},{}",
             r.round,
             r.objective,
             opt(r.suboptimality),
@@ -28,6 +30,7 @@ pub fn write_csv<W: Write>(trace: &Trace, mut w: W) -> Result<()> {
             r.comm_modeled_seconds,
             r.elapsed_seconds,
             r.wire_bytes,
+            r.startup_bytes,
         )?;
     }
     Ok(())
@@ -59,6 +62,10 @@ pub fn summary_json(name: &str, trace: &Trace) -> Json {
         ("comm_bytes", num_or_null(last.map(|r| r.comm_bytes as f64))),
         ("wire_bytes", num_or_null(last.map(|r| r.wire_bytes as f64))),
         (
+            "startup_bytes",
+            num_or_null(last.map(|r| r.startup_bytes as f64)),
+        ),
+        (
             "comm_modeled_seconds",
             num_or_null(last.map(|r| r.comm_modeled_seconds)),
         ),
@@ -78,6 +85,7 @@ mod tests {
             bytes: 128,
             modeled_seconds: 1e-3,
             wire_bytes: 96,
+            startup_bytes: 4096,
         };
         t.push(0, 1.5, Some(0.5), None, Some(0.7), &comm, 0.01);
         t
@@ -103,6 +111,7 @@ mod tests {
         assert_eq!(j.get("name").unwrap().as_str(), Some("t"));
         assert_eq!(j.get("comm_bytes").unwrap().as_f64(), Some(128.0));
         assert_eq!(j.get("wire_bytes").unwrap().as_f64(), Some(96.0));
+        assert_eq!(j.get("startup_bytes").unwrap().as_f64(), Some(4096.0));
         let s = j.get("final_suboptimality").unwrap().as_f64().unwrap();
         assert!((s - 0.5).abs() < 1e-15);
     }

@@ -27,6 +27,10 @@ pub struct TraceRow {
     /// on in-memory engines). Sits next to the modeled `comm_bytes` so
     /// figures can plot convergence against real bytes moved.
     pub wire_bytes: u64,
+    /// One-time bring-up bytes measured on the socket (Init/InitRef +
+    /// Peers and their acks; 0 on in-memory engines). Constant across a
+    /// run's rows; O(n·d) for by-value Init, O(m) for `--data-by-ref`.
+    pub startup_bytes: u64,
 }
 
 /// A full run's trace.
@@ -62,6 +66,7 @@ impl Trace {
             comm_modeled_seconds: comm.modeled_seconds,
             elapsed_seconds,
             wire_bytes: comm.wire_bytes,
+            startup_bytes: comm.startup_bytes,
         });
     }
 

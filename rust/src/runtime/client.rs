@@ -51,11 +51,25 @@ impl PjrtSession {
         let fit = registry.fit_shape(grad_family, shard.n(), shard.d())?;
         let (n_pad, d_pad) = (fit.n, fit.d);
 
-        // Pad row-major X into (n_pad, d_pad); padding stays zero.
-        let dense = shard.x.to_dense();
+        // Pad row-major X into (n_pad, d_pad); padding stays zero. Rows
+        // stream straight from the shard's own representation — never
+        // densify the whole matrix first (a sparse shard would briefly
+        // hold two full dense copies).
         let mut xbuf = vec![0.0f64; n_pad * d_pad];
-        for i in 0..shard.n() {
-            xbuf[i * d_pad..i * d_pad + shard.d()].copy_from_slice(dense.row(i));
+        match &shard.x {
+            crate::linalg::DataMatrix::Dense(m) => {
+                for i in 0..shard.n() {
+                    xbuf[i * d_pad..i * d_pad + shard.d()].copy_from_slice(m.row(i));
+                }
+            }
+            crate::linalg::DataMatrix::Sparse(s) => {
+                for i in 0..shard.n() {
+                    let (idx, val) = s.row(i);
+                    for (&j, &v) in idx.iter().zip(val) {
+                        xbuf[i * d_pad + j as usize] = v;
+                    }
+                }
+            }
         }
         let mut ybuf = vec![0.0f64; n_pad];
         ybuf[..shard.n()].copy_from_slice(&shard.y);

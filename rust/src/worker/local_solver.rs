@@ -55,24 +55,32 @@ impl QuadCache {
     }
 
     /// [`QuadCache::build`] with an explicit Gram-build thread count
-    /// (config `threads`): for *dense* shards `Some(t)` bypasses the
+    /// (config `threads`): for dense shards `Some(t)` bypasses the
     /// size ladder and runs `par_gram(t)` regardless of shard size —
     /// the knob that makes the deterministic parallel kernel reachable
-    /// from `dane run`. Sparse shards always take the serial CSR Gram
-    /// (no parallel kernel exists for it); the override is a no-op
-    /// there.
+    /// from `dane run`. **Sparse shards are refused**: building a dense
+    /// d x d Gram of a sparse dataset is exactly the densification the
+    /// matrix-free path exists to avoid, and `Worker::quad_usable`
+    /// never routes them here — an `Err` (not a silent densify) keeps
+    /// any future caller honest.
     pub fn build_with_threads(shard: &Shard, threads: Option<usize>) -> Result<Self> {
         let n = shard.n_effective() as f64;
         // Dense shards large enough to amortize thread spawns build the
-        // Gram with the deterministic parallel kernel; everything else
-        // takes the serial tiled path (sparse Gram is CSR-specific).
+        // Gram with the deterministic parallel kernel.
         let mut gram = match &shard.x {
             crate::linalg::DataMatrix::Dense(x) => {
                 let t = threads
                     .unwrap_or_else(|| gram_build_threads(x.rows(), x.cols()));
                 x.par_gram(t)
             }
-            other => other.gram(),
+            crate::linalg::DataMatrix::Sparse(x) => {
+                return Err(crate::Error::Config(format!(
+                    "QuadCache: refusing to densify a {}x{} sparse shard \
+                     (matrix-free Newton-CG handles sparse local solves)",
+                    x.rows(),
+                    x.cols()
+                )));
+            }
         };
         for i in 0..gram.rows() {
             for j in 0..gram.cols() {
@@ -183,6 +191,18 @@ mod tests {
                 assert!((a - b).abs() <= 1e-12 * a.abs().max(1.0), "{a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn sparse_shard_is_refused_not_densified() {
+        let x = crate::linalg::CsrMatrix::from_triplets(
+            3,
+            4,
+            &[(0, 1, 2.0), (1, 0, 5.0), (2, 3, 4.0)],
+        );
+        let s = Shard::new(DataMatrix::Sparse(x), vec![1.0, -1.0, 0.5]);
+        let err = QuadCache::build(&s).unwrap_err();
+        assert!(err.to_string().contains("sparse"), "{err}");
     }
 
     #[test]

@@ -318,10 +318,13 @@ impl Worker {
         h.add_diag(self.obj.lambda())
     }
 
-    /// Whether the cached-Cholesky path applies (dense-representable Gram
-    /// of moderate dimension).
+    /// Whether the cached-Cholesky path applies: a **dense** shard of
+    /// moderate dimension. Sparse shards take the matrix-free Newton-CG
+    /// path at any d — a d x d dense Gram of a 10^5-dimensional sparse
+    /// dataset would be 80 GB, and the CG HVPs cost O(nnz) instead.
     fn quad_usable(&self) -> bool {
-        self.dim() <= local_solver::CHOLESKY_MAX_DIM
+        matches!(self.shard.x, crate::linalg::DataMatrix::Dense(_))
+            && self.dim() <= local_solver::CHOLESKY_MAX_DIM
     }
 
     /// Whether the dense Gram/Cholesky cache has actually been built —
@@ -499,5 +502,52 @@ mod tests {
             resid += r * r;
         }
         assert!(resid.sqrt() < 1e-7, "stationarity residual {}", resid.sqrt());
+    }
+
+    #[test]
+    fn sparse_shard_takes_matrix_free_path_below_the_dim_cap() {
+        use crate::linalg::{CsrMatrix, DataMatrix};
+        // d well under CHOLESKY_MAX_DIM: the *representation*, not the
+        // dimension, must route a sparse quadratic shard to Newton-CG —
+        // the dense Gram/Cholesky cache is never built
+        let (n, d) = (40usize, 12usize);
+        let mut rng = crate::util::Rng64::seed_from_u64(9);
+        let mut trips = Vec::new();
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            for k in 0..3 {
+                let j = (i * 5 + k * 7) % d;
+                trips.push((i, j, rng.range_f64(-1.0, 1.0)));
+            }
+            y.push(rng.range_f64(-1.0, 1.0));
+        }
+        let shard = Shard::new(
+            DataMatrix::Sparse(CsrMatrix::from_triplets(n, d, &trips)),
+            y,
+        );
+        let obj = Arc::new(Ridge::new(0.1));
+        let mut wk = Worker::new(0, shard, obj);
+        let w_prev = vec![0.0; d];
+        let mut g = vec![0.0; d];
+        wk.grad(&w_prev, &mut g).unwrap();
+        let mu = 0.5;
+        let w1 = wk.dane_local_solve(&w_prev, &g, 1.0, mu).unwrap();
+        assert!(
+            !wk.quad_cache_built(),
+            "sparse shards must never build the dense Gram/Cholesky cache"
+        );
+        // same DANE local stationarity condition as the dense-d test
+        let mut g1 = vec![0.0; d];
+        wk.grad(&w1, &mut g1).unwrap();
+        let mut resid: f64 = 0.0;
+        for j in 0..d {
+            let r = g1[j] + mu * (w1[j] - w_prev[j]);
+            resid += r * r;
+        }
+        assert!(resid.sqrt() < 1e-7, "stationarity residual {}", resid.sqrt());
+        // the other quad-gated entry points stay matrix-free too
+        wk.admm_prox(&vec![0.1; d], 1.0).unwrap();
+        wk.local_erm().unwrap();
+        assert!(!wk.quad_cache_built());
     }
 }

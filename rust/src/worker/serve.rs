@@ -46,7 +46,7 @@
 //! only transport failures on the *upstream* connection tear the loop
 //! down. Nothing here panics on malformed input.
 
-use crate::comm::wire::{self, Command, InitPayload, PeersPayload, Reply};
+use crate::comm::wire::{self, Command, InitPayload, InitRefPayload, PeersPayload, Reply};
 use crate::config::LossKind;
 use crate::loss::make_objective;
 use crate::worker::Worker;
@@ -77,7 +77,7 @@ fn dim_check(what: &str, len: usize, d: usize) -> Option<Reply> {
 pub fn execute_command(worker: &mut Worker, cmd: Command) -> Reply {
     let d = worker.dim();
     match cmd {
-        Command::Init(_) => {
+        Command::Init(_) | Command::InitRef(_) => {
             Reply::Err("init sent to an already-initialized worker".into())
         }
         Command::Peers(_) => {
@@ -175,6 +175,25 @@ fn build_worker(p: InitPayload) -> Result<Worker> {
     let kind = LossKind::from_name(&p.loss_name)?;
     let obj = make_objective(kind, p.lambda);
     let mut w = Worker::new(p.worker_id, p.shard, obj);
+    w.set_gram_threads(p.gram_threads);
+    Ok(w)
+}
+
+/// Build a worker from an [`Command::InitRef`] payload: recompute this
+/// rank's row list with the same deterministic shuffle every engine
+/// uses and stream exactly those rows from the named LIBSVM file. The
+/// decode layer already validated the sharding parameters
+/// (`worker_id < machines <= n`), so `shard_indices` cannot panic here;
+/// a wrong or missing file surfaces as an `Err` → `Reply::Err` ack.
+fn build_worker_by_ref(p: InitRefPayload) -> Result<Worker> {
+    let kind = LossKind::from_name(&p.loss_name)?;
+    let obj = make_objective(kind, p.lambda);
+    let rows = crate::data::shard_indices(p.n, p.machines, p.shard_seed);
+    let mine = &rows[p.worker_id];
+    let (x, y) =
+        crate::data::libsvm::load_rows(std::path::Path::new(&p.path), p.dim, mine)?;
+    let shard = crate::data::Shard::new(crate::linalg::DataMatrix::Sparse(x), y);
+    let mut w = Worker::new(p.worker_id, shard, obj);
     w.set_gram_threads(p.gram_threads);
     Ok(w)
 }
@@ -280,6 +299,16 @@ fn serve_session(stream: TcpStream, listener: Option<&TcpListener>) -> Result<()
             Err(e) => send_reply(&mut up, &mut enc, &Reply::Err(e.to_string()))?,
             Ok(Command::Init(p)) => {
                 let reply = match build_worker(*p) {
+                    Ok(w) => {
+                        worker = Some(w);
+                        Reply::Scalar(0.0) // init ack
+                    }
+                    Err(e) => Reply::Err(e.to_string()),
+                };
+                send_reply(&mut up, &mut enc, &reply)?;
+            }
+            Ok(Command::InitRef(p)) => {
+                let reply = match build_worker_by_ref(*p) {
                     Ok(w) => {
                         worker = Some(w);
                         Reply::Scalar(0.0) // init ack
@@ -561,6 +590,68 @@ mod tests {
             Reply::Err(msg) => assert!(msg.contains("peers"), "{msg}"),
             _ => panic!("peers must not be a compute command"),
         }
+        let by_ref = Command::InitRef(Box::new(InitRefPayload {
+            worker_id: 0,
+            loss_name: "ridge".into(),
+            lambda: 0.1,
+            gram_threads: None,
+            path: "/nonexistent.svm".into(),
+            dim: 2,
+            n: 2,
+            machines: 1,
+            shard_seed: 0,
+        }));
+        match execute_command(&mut w, by_ref) {
+            Reply::Err(msg) => assert!(msg.contains("initialized"), "{msg}"),
+            _ => panic!("init-ref must not be a compute command"),
+        }
+    }
+
+    #[test]
+    fn build_worker_by_ref_loads_the_shard_this_rank_owns() {
+        let dir = crate::util::tempdir::TempDir::new("serve-byref").unwrap();
+        let path = dir.path().join("tiny.svm");
+        let mut body = String::new();
+        for i in 0..10 {
+            body.push_str(&format!("{} 1:{}.0 3:0.5\n", if i % 2 == 0 { 1 } else { -1 }, i));
+        }
+        std::fs::write(&path, &body).unwrap();
+        let (n, m, seed) = (10usize, 3usize, 42u64);
+        let ds = crate::data::libsvm::load(&path, 3).unwrap();
+        let shards = crate::data::shard_dataset(&ds, m, seed);
+        for rank in 0..m {
+            let wk = build_worker_by_ref(InitRefPayload {
+                worker_id: rank,
+                loss_name: "ridge".into(),
+                lambda: 0.1,
+                gram_threads: None,
+                path: path.display().to_string(),
+                dim: 3,
+                n,
+                machines: m,
+                shard_seed: seed,
+            })
+            .unwrap();
+            assert_eq!(wk.shard().y, shards[rank].y, "rank {rank}");
+            assert_eq!(
+                wk.shard().x.to_dense().data(),
+                shards[rank].x.to_dense().data(),
+                "rank {rank}"
+            );
+        }
+        // a missing file is an Err, not a panic
+        assert!(build_worker_by_ref(InitRefPayload {
+            worker_id: 0,
+            loss_name: "ridge".into(),
+            lambda: 0.1,
+            gram_threads: None,
+            path: "/nonexistent.svm".into(),
+            dim: 3,
+            n,
+            machines: m,
+            shard_seed: seed,
+        })
+        .is_err());
     }
 
     #[test]

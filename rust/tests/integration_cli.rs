@@ -403,10 +403,16 @@ fn run_engine_tcp_self_hosts_workers_and_emits_wire_bytes() {
     let csv = std::fs::read_to_string(&csv_path).unwrap();
     let mut lines = csv.lines();
     let header = lines.next().unwrap();
-    assert!(header.ends_with(",elapsed_seconds,wire_bytes"), "{header}");
+    assert!(
+        header.ends_with(",elapsed_seconds,wire_bytes,startup_bytes"),
+        "{header}"
+    );
     let last = lines.last().unwrap();
-    let wire: u64 = last.rsplit(',').next().unwrap().parse().unwrap();
+    let mut tail = last.rsplit(',');
+    let startup: u64 = tail.next().unwrap().parse().unwrap();
+    let wire: u64 = tail.next().unwrap().parse().unwrap();
     assert!(wire > 0, "tcp run recorded no measured bytes: {last}");
+    assert!(startup > 0, "tcp run recorded no startup bytes: {last}");
 }
 
 #[test]

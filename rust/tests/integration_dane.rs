@@ -153,6 +153,7 @@ fn driver_runs_config_end_to_end_and_emits_csv() {
         workers: None,
         threads: None,
         topology: None,
+        data_by_ref: false,
         eval_test: false,
         net: NetConfig::datacenter(),
     };

@@ -315,6 +315,7 @@ fn prop_config_json_roundtrip() {
                     2 => Some(dane::comm::ExecTopology::Tree),
                     _ => None,
                 },
+                data_by_ref: false,
                 eval_test: rng.bool(0.5),
                 net: NetConfig::datacenter(),
             }

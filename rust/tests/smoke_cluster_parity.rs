@@ -124,6 +124,7 @@ fn driver_engine_parity_on_fig2_config() {
         workers: None,
         threads: None,
         topology: None,
+        data_by_ref: false,
         eval_test: false,
         net: NetConfig::datacenter(),
     };

@@ -58,6 +58,7 @@ fn fig2_cfg(engine: EngineKind) -> ExperimentConfig {
         workers: None,
         threads: None,
         topology: None,
+        data_by_ref: false,
         eval_test: false,
         net: NetConfig::datacenter(),
     }
@@ -279,4 +280,133 @@ fn connect_to_nobody_fails_fast() {
         ExecTopology::Star,
     );
     assert!(res.is_err());
+}
+
+/// Deterministic LIBSVM file for the by-ref tests: every row carries a
+/// handful of exact-decimal features so both load paths parse the same
+/// tokens (values like 0.25/0.5 are exactly representable, so parity
+/// failures mean a real data-plane bug, not float formatting).
+fn write_libsvm_fixture(rows: usize, d: usize) -> (dane::util::tempdir::TempDir, String) {
+    let dir = dane::util::tempdir::TempDir::new("tcp-byref").unwrap();
+    let path = dir.path().join("fixture.svm");
+    let mut body = String::from("# by-ref fixture\n");
+    for i in 0..rows {
+        let label = if i % 3 == 0 { "+1" } else { "-1" };
+        let j1 = i % d + 1;
+        let j2 = (i * 7 + 3) % d + 1;
+        let v1 = 0.25 + (i % 8) as f64 * 0.125;
+        let v2 = -0.5 + (i % 5) as f64 * 0.25;
+        if j1 == j2 {
+            body.push_str(&format!("{label} {j1}:{v1}\n"));
+        } else if j1 < j2 {
+            body.push_str(&format!("{label} {j1}:{v1} {j2}:{v2}\n"));
+        } else {
+            body.push_str(&format!("{label} {j2}:{v2} {j1}:{v1}\n"));
+        }
+    }
+    std::fs::write(&path, body).unwrap();
+    (dir, path.to_string_lossy().into_owned())
+}
+
+/// The by-reference acceptance pin: InitRef workers that stream their
+/// own rows from disk run DANE **bit-identically** to by-value Init
+/// workers fed the leader's shards — and bring-up costs O(m) bytes
+/// instead of O(n*d).
+#[test]
+fn by_ref_init_matches_by_value_bitwise_and_ships_o_of_m_startup_bytes() {
+    ensure_worker_bin();
+    let (_dir, path) = write_libsvm_fixture(600, 24);
+    let ds = dane::data::libsvm::load(std::path::Path::new(&path), 24).unwrap();
+    let ctx = RunCtx::new(6).with_tol(0.0);
+
+    let mut by_value = TcpCluster::self_hosted(
+        &ds,
+        LossKind::Ridge,
+        0.02,
+        4,
+        11,
+        dane::comm::NetModel::free(),
+        None,
+        None,
+        ExecTopology::Star,
+    )
+    .unwrap();
+    let value_res = dane_algo::run(&mut by_value, &Default::default(), &ctx).unwrap();
+    let value_stats = by_value.comm_stats();
+    drop(by_value);
+
+    let mut by_ref = TcpCluster::self_hosted_by_ref(
+        &ds,
+        LossKind::Ridge,
+        0.02,
+        4,
+        11,
+        dane::comm::NetModel::free(),
+        None,
+        None,
+        ExecTopology::Star,
+        &path,
+    )
+    .unwrap();
+    let ref_res = dane_algo::run(&mut by_ref, &Default::default(), &ctx).unwrap();
+    let ref_stats = by_ref.comm_stats();
+
+    assert_eq!(value_res.w, ref_res.w, "final iterates must be bit-identical");
+    assert_rows_identical_mod_wire(&value_res.trace, &ref_res.trace);
+    // steady-state measured traffic is identical too: InitRef changes
+    // bring-up only, never the round plane
+    for (rv, rr) in value_res.trace.rows.iter().zip(&ref_res.trace.rows) {
+        assert_eq!(rv.wire_bytes, rr.wire_bytes, "round {}", rv.round);
+    }
+
+    // O(n*d) vs O(m): 600 rows of shard data by value vs 4 small
+    // InitRef frames (+acks) by reference
+    assert!(
+        value_stats.startup_bytes > 10_000,
+        "by-value startup {} should carry the whole dataset",
+        value_stats.startup_bytes
+    );
+    assert!(
+        ref_stats.startup_bytes < 2_048,
+        "by-ref startup {} should be a handful of small frames",
+        ref_stats.startup_bytes
+    );
+    assert!(ref_stats.startup_bytes > 0, "bring-up is measured, not free");
+
+    // startup_bytes is a one-time cost: reset_comm clears the per-window
+    // counters but keeps it
+    by_ref.reset_comm();
+    let after = by_ref.comm_stats();
+    assert_eq!(after.wire_bytes, 0);
+    assert_eq!(after.rounds, 0);
+    assert_eq!(after.startup_bytes, ref_stats.startup_bytes);
+}
+
+/// A by-ref path that points at a missing file must surface as `Err`
+/// from the constructor (the worker's InitRef reply), never a panic or
+/// a hang.
+#[test]
+fn by_ref_init_with_a_missing_file_fails_fast() {
+    ensure_worker_bin();
+    let ds = synthetic_fig2(64, 4, 0.005, 1);
+    let (_dir, path) = write_libsvm_fixture(4, 4);
+    let missing = format!("{path}.does-not-exist");
+    let res = TcpCluster::self_hosted_by_ref(
+        &ds,
+        LossKind::Ridge,
+        0.01,
+        2,
+        1,
+        dane::comm::NetModel::free(),
+        None,
+        Some(Duration::from_secs(5)),
+        ExecTopology::Star,
+        &missing,
+    );
+    let err = res.expect_err("missing by-ref file must fail bring-up");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("worker"),
+        "error should attribute the failing worker: {msg}"
+    );
 }

@@ -52,6 +52,7 @@ fn cfg(
         workers: None,
         threads: None,
         topology,
+        data_by_ref: false,
         eval_test: false,
         net: NetConfig::datacenter(),
     }

@@ -7,7 +7,8 @@
 
 use dane::comm::wire::{
     decode_command, decode_reply, encode_command, encode_reply, read_frame, Command,
-    InitPayload, PeerChild, PeersPayload, Reply, MAX_FRAME_LEN, WIRE_VERSION,
+    InitPayload, InitRefPayload, PeerChild, PeersPayload, Reply, MAX_FRAME_LEN,
+    WIRE_VERSION,
 };
 use dane::data::Shard;
 use dane::linalg::{CsrMatrix, DataMatrix, DenseMatrix};
@@ -192,6 +193,91 @@ fn init_roundtrips_dense_and_sparse_shards() {
 }
 
 #[test]
+fn init_ref_roundtrips_with_hostile_strings_and_specials() {
+    // paths with spaces/unicode, NaN lambda: all must survive untouched
+    let p = InitRefPayload {
+        worker_id: 3,
+        loss_name: "smooth_hinge".into(),
+        lambda: f64::NAN,
+        gram_threads: Some(usize::MAX >> 8),
+        path: "/data/ASTRO — копия (1).svm".into(),
+        dim: usize::MAX >> 8,
+        n: 1 << 40,
+        machines: 4,
+        shard_seed: u64::MAX,
+    };
+    match rt_cmd(&Command::InitRef(Box::new(p.clone()))) {
+        Command::InitRef(q) => {
+            assert_eq!(q.worker_id, p.worker_id);
+            assert_eq!(q.loss_name, p.loss_name);
+            assert_eq!(q.lambda.to_bits(), p.lambda.to_bits());
+            assert_eq!(q.gram_threads, p.gram_threads);
+            assert_eq!(q.path, p.path);
+            assert_eq!(q.dim, p.dim);
+            assert_eq!(q.n, p.n);
+            assert_eq!(q.machines, p.machines);
+            assert_eq!(q.shard_seed, p.shard_seed);
+        }
+        _ => panic!("variant changed"),
+    }
+}
+
+#[test]
+fn hostile_init_ref_frames_rejected_not_panicked() {
+    let good_payload = InitRefPayload {
+        worker_id: 1,
+        loss_name: "ridge".into(),
+        lambda: 0.01,
+        gram_threads: None,
+        path: "/tmp/shard.svm".into(),
+        dim: 16,
+        n: 64,
+        machines: 4,
+        shard_seed: 9,
+    };
+    let mut buf = Vec::new();
+    encode_command(&Command::InitRef(Box::new(good_payload)), &mut buf).unwrap();
+    let good = buf[4..].to_vec();
+    assert!(decode_command(&good).is_ok());
+
+    // The trailing four u64 fields are (dim, n, machines, shard_seed).
+    // Rewrite them in place to forge parameter sets that would panic
+    // `shard_indices` if they ever got past the decoder.
+    let forge = |dim: u64, n: u64, machines: u64| {
+        let mut f = good.clone();
+        let end = f.len();
+        f[end - 32..end - 24].copy_from_slice(&dim.to_le_bytes());
+        f[end - 24..end - 16].copy_from_slice(&n.to_le_bytes());
+        f[end - 16..end - 8].copy_from_slice(&machines.to_le_bytes());
+        f
+    };
+    // machines = 0 (division by zero / empty partition)
+    assert!(decode_command(&forge(16, 64, 0)).is_err(), "m=0 accepted");
+    // worker_id (1) >= machines (1)
+    assert!(decode_command(&forge(16, 64, 1)).is_err(), "rank >= m accepted");
+    // fewer rows than machines (shard_indices asserts n >= m)
+    assert!(decode_command(&forge(16, 2, 4)).is_err(), "n < m accepted");
+    // dim 0 (a subset load cannot infer it)
+    assert!(decode_command(&forge(0, 64, 4)).is_err(), "dim=0 accepted");
+
+    // hostile path length: tiny frame claiming a huge string — must be
+    // Err without an attacker-sized allocation
+    let mut frame = vec![WIRE_VERSION, 0x0b]; // CMD_INIT_REF
+    frame.extend_from_slice(&1u64.to_le_bytes()); // worker_id
+    frame.extend_from_slice(&(1u64 << 60).to_le_bytes()); // loss_name "len"
+    assert!(decode_command(&frame).is_err());
+
+    // every single-byte corruption decodes or errors — never panics
+    for i in 0..good.len() {
+        for delta in [1u8, 0x80] {
+            let mut bad = good.clone();
+            bad[i] = bad[i].wrapping_add(delta);
+            let _ = decode_command(&bad);
+        }
+    }
+}
+
+#[test]
 fn peers_prox_all_and_for_roundtrip() {
     let mut rng = Rng64::seed_from_u64(9);
     let p = PeersPayload {
@@ -344,6 +430,17 @@ fn every_truncation_of_every_variant_is_an_error() {
         Command::Prox { v: weird_vec(&mut rng, 2), rho: 0.1 },
         Command::Erm { subsample: Some((0.5, 9)) },
         Command::RowSq,
+        Command::InitRef(Box::new(InitRefPayload {
+            worker_id: 0,
+            loss_name: "ridge".into(),
+            lambda: 0.5,
+            gram_threads: Some(2),
+            path: "/tmp/x.svm".into(),
+            dim: 3,
+            n: 12,
+            machines: 2,
+            shard_seed: 1,
+        })),
         Command::Peers(Box::new(PeersPayload {
             children: vec![PeerChild {
                 rank: 2,
