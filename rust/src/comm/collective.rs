@@ -24,6 +24,17 @@ pub struct CommStats {
     /// (`--data-by-ref`). Zero on the in-memory engines; never reset
     /// with the per-window round counters.
     pub startup_bytes: u64,
+    /// Workers currently answering collectives. Set by the cluster
+    /// engines when a snapshot is taken (`Cluster::comm_stats`), not
+    /// accumulated here — equal to `machines` on a fault-free run and
+    /// under `respawn`; drops below it when a `degrade` policy
+    /// quarantines a dead rank. 0 in raw `Collective`-level stats that
+    /// never passed through an engine.
+    pub alive_workers: u64,
+    /// Successful fault recoveries (respawn/redial or quorum
+    /// degradation) performed so far. Set by the supervision layer when
+    /// a snapshot is taken; 0 on fault-free runs.
+    pub recoveries: u64,
 }
 
 impl CommStats {
@@ -33,6 +44,11 @@ impl CommStats {
         self.modeled_seconds += other.modeled_seconds;
         self.wire_bytes += other.wire_bytes;
         self.startup_bytes += other.startup_bytes;
+        // Snapshot fields, not counters: a merged window reports the
+        // last snapshot's quorum and the total recoveries across
+        // windows.
+        self.alive_workers = other.alive_workers;
+        self.recoveries += other.recoveries;
     }
 }
 
@@ -60,6 +76,12 @@ impl Collective {
 
     pub fn reset(&mut self) {
         self.stats = CommStats::default();
+    }
+
+    /// Overwrite the cumulative stats wholesale — checkpoint resume
+    /// continues the crashed run's accounting instead of starting at 0.
+    pub fn restore(&mut self, stats: &CommStats) {
+        self.stats = stats.clone();
     }
 
     /// Allreduce-mean over per-worker vectors: every worker contributes a

@@ -237,6 +237,15 @@ pub struct RankGather {
     first_err: Option<(usize, Error)>,
 }
 
+/// Message prefix a relaying node uses when it synthesizes a
+/// [`Reply::Err`] for a child whose link died. Both relay
+/// implementations (threaded tree workers and the TCP serve loop) emit
+/// it, and [`RankGather::put`] keys on it to classify the failure as
+/// [`Error::WorkerLost`] — a transport loss observed one hop away, not
+/// a deterministic compute error — so supervision can recover from a
+/// leaf dying *behind* a live relay.
+pub const RELAY_CHILD_LOST: &str = "relay child worker";
+
 impl RankGather {
     pub fn new(m: usize) -> Self {
         RankGather { slots: (0..m).map(|_| None).collect(), first_err: None }
@@ -246,6 +255,9 @@ impl RankGather {
     /// in for it).
     pub fn put(&mut self, rank: usize, reply: Result<Reply>) {
         let err = match reply {
+            Ok(Reply::Err(msg)) if msg.starts_with(RELAY_CHILD_LOST) => {
+                Error::WorkerLost(format!("worker {rank}: {msg}"))
+            }
             Ok(Reply::Err(msg)) => {
                 Error::Runtime(format!("worker {rank}: {msg}"))
             }
@@ -286,6 +298,38 @@ impl RankGather {
             match s {
                 Some(r) => out.push(r),
                 None => {
+                    return Err(Error::Runtime(format!(
+                        "collective gather: no reply slotted for worker {rank}"
+                    )))
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Quorum-degraded finish: ranks flagged in `dead` are *expected* to
+    /// be absent and come back as `None`; everything else keeps the
+    /// strict [`RankGather::into_result`] discipline (lowest-rank error
+    /// wins, a missing reply from a live rank is a protocol violation).
+    /// The engines call this only when a `degrade` policy has already
+    /// quarantined at least one rank, so the fault-free path is
+    /// untouched.
+    pub fn into_result_masked(self, dead: &[bool]) -> Result<Vec<Option<Reply>>> {
+        if let Some((_, e)) = self.first_err {
+            return Err(e);
+        }
+        assert_eq!(dead.len(), self.slots.len(), "dead mask length mismatch");
+        let mut out = Vec::with_capacity(self.slots.len());
+        for (rank, s) in self.slots.into_iter().enumerate() {
+            match (s, dead[rank]) {
+                (Some(r), false) => out.push(Some(r)),
+                (None, true) => out.push(None),
+                (Some(_), true) => {
+                    return Err(Error::Runtime(format!(
+                        "collective gather: reply from quarantined worker {rank}"
+                    )))
+                }
+                (None, false) => {
                     return Err(Error::Runtime(format!(
                         "collective gather: no reply slotted for worker {rank}"
                     )))
@@ -414,5 +458,68 @@ mod tests {
         g.put(0, Ok(Reply::Scalar(0.0)));
         let e = g.into_result().unwrap_err().to_string();
         assert!(e.contains("no reply slotted for worker 1"), "{e}");
+    }
+
+    #[test]
+    fn masked_gather_skips_dead_ranks_only() {
+        // dead rank 1 absent: fine, comes back as None
+        let mut g = RankGather::new(3);
+        g.put(0, Ok(Reply::Scalar(0.0)));
+        g.put(2, Ok(Reply::Scalar(2.0)));
+        let out = g.into_result_masked(&[false, true, false]).unwrap();
+        assert!(out[0].is_some() && out[1].is_none() && out[2].is_some());
+
+        // a live rank missing is still a protocol violation
+        let mut g = RankGather::new(3);
+        g.put(0, Ok(Reply::Scalar(0.0)));
+        let e = g
+            .into_result_masked(&[false, true, false])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("no reply slotted for worker 2"), "{e}");
+
+        // a reply from a quarantined rank is too
+        let mut g = RankGather::new(2);
+        g.put(0, Ok(Reply::Scalar(0.0)));
+        g.put(1, Ok(Reply::Scalar(1.0)));
+        let e = g
+            .into_result_masked(&[false, true])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("quarantined worker 1"), "{e}");
+
+        // live-rank errors keep lowest-rank-wins
+        let mut g = RankGather::new(3);
+        g.put(0, Ok(Reply::Scalar(0.0)));
+        g.put(2, Ok(Reply::Err("boom".into())));
+        let e = g
+            .into_result_masked(&[false, true, false])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("worker 2") && e.contains("boom"), "{e}");
+    }
+
+    #[test]
+    fn relayed_child_death_classifies_as_worker_lost() {
+        let mut g = RankGather::new(2);
+        g.put(0, Ok(Reply::Scalar(0.0)));
+        g.put(
+            1,
+            Ok(Reply::Err(format!("{RELAY_CHILD_LOST} 1 died mid-round"))),
+        );
+        match g.into_result().unwrap_err() {
+            Error::WorkerLost(msg) => {
+                assert!(msg.contains("worker 1"), "{msg}")
+            }
+            other => panic!("expected WorkerLost, got {other}"),
+        }
+
+        // an ordinary worker-computed error stays Runtime
+        let mut g = RankGather::new(1);
+        g.put(0, Ok(Reply::Err("singular system".into())));
+        assert!(matches!(
+            g.into_result().unwrap_err(),
+            Error::Runtime(_)
+        ));
     }
 }

@@ -306,6 +306,80 @@ impl EngineKind {
     }
 }
 
+/// What the run does when a worker dies or wedges mid-collective.
+///
+/// `FailFast` preserves the historical contract: the first lost worker
+/// surfaces as an `AlgoError` and the run ends. `Respawn` restarts the
+/// worker (re-spawning a self-hosted child or redialing an external
+/// `dane worker --listen` address) with capped exponential backoff and
+/// deterministic seeded jitter, then retries the failed collective.
+/// `Degrade` quarantines the dead rank and continues on the surviving
+/// quorum: the leader folds in rank order over the `alive` set with
+/// 1/|alive| weighting, erroring out only when `alive < min_quorum`.
+/// Fault-free runs are bit-identical under every policy.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum FaultPolicy {
+    /// Any lost worker ends the run (the historical behavior).
+    #[default]
+    FailFast,
+    /// Respawn/redial the lost worker and retry the round, up to
+    /// `max_retries` recovery attempts per collective, sleeping
+    /// `backoff_ms * 2^k` (+ seeded jitter, capped) between attempts.
+    Respawn { max_retries: u32, backoff_ms: u64 },
+    /// Drop the dead rank and continue on the survivors as long as at
+    /// least `min_quorum` workers stay alive.
+    Degrade { min_quorum: usize },
+}
+
+impl FaultPolicy {
+    fn to_json(self) -> Json {
+        match self {
+            FaultPolicy::FailFast => {
+                Json::obj(vec![("policy", Json::str("fail_fast"))])
+            }
+            FaultPolicy::Respawn { max_retries, backoff_ms } => Json::obj(vec![
+                ("policy", Json::str("respawn")),
+                ("max_retries", Json::num(max_retries as f64)),
+                ("backoff_ms", Json::num(backoff_ms as f64)),
+            ]),
+            FaultPolicy::Degrade { min_quorum } => Json::obj(vec![
+                ("policy", Json::str("degrade")),
+                ("min_quorum", Json::num(min_quorum as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let policy = v
+            .req("policy")?
+            .as_str()
+            .ok_or_else(|| Error::Config("fault.policy must be a string".into()))?;
+        match policy {
+            "fail_fast" => Ok(FaultPolicy::FailFast),
+            "respawn" => Ok(FaultPolicy::Respawn {
+                max_retries: v
+                    .get("max_retries")
+                    .and_then(|x| x.as_u64())
+                    .unwrap_or(3) as u32,
+                backoff_ms: v
+                    .get("backoff_ms")
+                    .and_then(|x| x.as_u64())
+                    .unwrap_or(100),
+            }),
+            "degrade" => Ok(FaultPolicy::Degrade {
+                min_quorum: v
+                    .get("min_quorum")
+                    .and_then(|x| x.as_usize())
+                    .unwrap_or(1),
+            }),
+            other => Err(Error::Config(format!(
+                "unknown fault policy {other:?} (expected \"fail_fast\", \
+                 \"respawn\" or \"degrade\")"
+            ))),
+        }
+    }
+}
+
 /// Serializable network-model config.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NetConfig {
@@ -395,6 +469,11 @@ pub struct ExperimentConfig {
     pub data_by_ref: bool,
     /// Evaluate test loss each round (fig. 4).
     pub eval_test: bool,
+    /// What happens when a worker dies or wedges mid-run (default:
+    /// fail fast, the historical behavior). JSON:
+    /// `"fault": {"policy": "respawn", "max_retries": 3, "backoff_ms": 100}`
+    /// or `{"policy": "degrade", "min_quorum": 2}`.
+    pub fault: FaultPolicy,
     pub net: NetConfig,
 }
 
@@ -434,6 +513,7 @@ impl ExperimentConfig {
                 Json::obj(vec![("by_ref", Json::Bool(self.data_by_ref))]),
             ),
             ("eval_test", Json::Bool(self.eval_test)),
+            ("fault", self.fault.to_json()),
             (
                 "net",
                 Json::obj(vec![
@@ -515,6 +595,10 @@ impl ExperimentConfig {
             },
         };
         let eval_test = v.get("eval_test").and_then(|x| x.as_bool()).unwrap_or(false);
+        let fault = match v.get("fault") {
+            None | Some(Json::Null) => FaultPolicy::FailFast,
+            Some(f) => FaultPolicy::from_json(f)?,
+        };
         let net = match v.get("net") {
             Some(n) => {
                 let topology = match n.get("topology").and_then(|x| x.as_str()) {
@@ -547,6 +631,7 @@ impl ExperimentConfig {
             topology,
             data_by_ref,
             eval_test,
+            fault,
             net,
         })
     }
@@ -651,6 +736,25 @@ impl ExperimentConfig {
                 "classification datasets need a classification loss".into(),
             ));
         }
+        match self.fault {
+            FaultPolicy::FailFast => {}
+            FaultPolicy::Respawn { max_retries, .. } => {
+                if max_retries == 0 {
+                    return Err(Error::Config(
+                        "fault.max_retries must be >= 1 (0 retries is fail_fast)"
+                            .into(),
+                    ));
+                }
+            }
+            FaultPolicy::Degrade { min_quorum } => {
+                if min_quorum == 0 || min_quorum > self.machines {
+                    return Err(Error::Config(format!(
+                        "fault.min_quorum must be in 1..={} (machines)",
+                        self.machines
+                    )));
+                }
+            }
+        }
         if let AlgoConfig::Osa { bias_correction_r: Some(r) } = self.algo {
             if !(0.0 < r && r < 1.0) {
                 return Err(Error::Config(
@@ -684,6 +788,7 @@ mod tests {
             topology: None,
             data_by_ref: false,
             eval_test: false,
+            fault: FaultPolicy::FailFast,
             net: NetConfig::free(),
         }
     }
@@ -891,6 +996,62 @@ mod tests {
         c.engine = EngineKind::Threaded;
         c.threads = Some(2);
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_policy_roundtrips_and_validates() {
+        for fault in [
+            FaultPolicy::FailFast,
+            FaultPolicy::Respawn { max_retries: 5, backoff_ms: 50 },
+            FaultPolicy::Degrade { min_quorum: 2 },
+        ] {
+            let mut c = sample();
+            c.fault = fault;
+            let c2 = ExperimentConfig::from_json_str(&c.to_json_string()).unwrap();
+            assert_eq!(c2.fault, fault);
+            c2.validate().unwrap();
+        }
+
+        // absent key defaults to fail_fast
+        let s = r#"{
+            "name": "t", "loss": "ridge", "lambda": 0.01,
+            "machines": 2, "rounds": 5,
+            "dataset": {"kind": "fig2", "n": 100, "d": 5, "paper_reg": 0.005},
+            "algo": {"kind": "dane", "eta": 1.0, "mu_over_lambda": 0.0}
+        }"#;
+        let c = ExperimentConfig::from_json_str(s).unwrap();
+        assert_eq!(c.fault, FaultPolicy::FailFast);
+
+        // handwritten policy with defaults filled in
+        let s = r#"{
+            "name": "t", "loss": "ridge", "lambda": 0.01,
+            "machines": 2, "rounds": 5,
+            "dataset": {"kind": "fig2", "n": 100, "d": 5, "paper_reg": 0.005},
+            "algo": {"kind": "dane", "eta": 1.0, "mu_over_lambda": 0.0},
+            "fault": {"policy": "respawn"}
+        }"#;
+        let c = ExperimentConfig::from_json_str(s).unwrap();
+        assert_eq!(
+            c.fault,
+            FaultPolicy::Respawn { max_retries: 3, backoff_ms: 100 }
+        );
+
+        // unknown policy is a parse error
+        let s = sample()
+            .to_json_string()
+            .replacen("\"fail_fast\"", "\"bogus\"", 1);
+        assert!(ExperimentConfig::from_json_str(&s).is_err());
+
+        // validation gates
+        let mut c = sample();
+        c.fault = FaultPolicy::Respawn { max_retries: 0, backoff_ms: 10 };
+        assert!(c.validate().is_err(), "0 retries must be rejected");
+        let mut c = sample();
+        c.fault = FaultPolicy::Degrade { min_quorum: 0 };
+        assert!(c.validate().is_err(), "quorum 0 must be rejected");
+        let mut c = sample();
+        c.fault = FaultPolicy::Degrade { min_quorum: 5 };
+        assert!(c.validate().is_err(), "quorum > machines must be rejected");
     }
 
     #[test]

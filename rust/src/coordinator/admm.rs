@@ -54,21 +54,39 @@ fn run_loop(
     let m = cluster.m();
     let obj = cluster.objective();
     let mut u: Vec<Vec<f64>> = vec![vec![0.0; d]; m];
+    let u_names: Vec<String> = (0..m).map(|i| format!("u{i}")).collect();
     let t0 = std::time::Instant::now();
 
-    // round 0: initial point (instrumentation only)
-    let loss0 = cluster.eval_loss(z)?;
-    trace.push(
-        0,
-        loss0,
-        ctx.subopt(loss0),
-        None,
-        ctx.test_loss(obj.as_ref(), z),
-        &cluster.comm_stats(),
-        0.0,
-    );
+    let mut start = 1;
+    if let Some(c) = ctx.ckpt.as_ref().and_then(|ck| ck.resume_for("admm")) {
+        *z = c
+            .vec("z")
+            .ok_or_else(|| crate::Error::Runtime("checkpoint lacks consensus z".into()))?
+            .to_vec();
+        for (ui, name) in u.iter_mut().zip(&u_names) {
+            *ui = c
+                .vec(name)
+                .ok_or_else(|| crate::Error::Runtime(format!("checkpoint lacks dual {name}")))?
+                .to_vec();
+        }
+        *trace = c.trace.clone();
+        cluster.restore_comm(&c.comm);
+        start = c.round as usize + 1;
+    } else {
+        // round 0: initial point (instrumentation only)
+        let loss0 = cluster.eval_loss(z)?;
+        trace.push(
+            0,
+            loss0,
+            ctx.subopt(loss0),
+            None,
+            ctx.test_loss(obj.as_ref(), z),
+            &cluster.comm_stats(),
+            0.0,
+        );
+    }
 
-    for iter in 1..=ctx.max_rounds {
+    for iter in start..=ctx.max_rounds {
         // Local proximal solves at v_i = z - u_i.
         let targets: Vec<Vec<f64>> = u
             .iter()
@@ -81,21 +99,28 @@ fn run_loop(
         let w_all = cluster.prox_all(&targets, opts.rho)?;
 
         // Consensus average (the iteration's single communication round).
+        // Under a degraded quorum only the surviving ranks contribute —
+        // the mean is over |alive| slots; a quarantined rank's dual is
+        // frozen with its shard out of the consensus.
         let sums: Vec<Vec<f64>> = w_all
             .iter()
             .zip(&u)
-            .map(|(wi, ui)| {
-                let mut s = wi.clone();
-                ops::axpy(1.0, ui, &mut s);
-                s
+            .filter_map(|(wi, ui)| {
+                wi.as_ref().map(|wi| {
+                    let mut s = wi.clone();
+                    ops::axpy(1.0, ui, &mut s);
+                    s
+                })
             })
             .collect();
         *z = cluster.allreduce_mean_vecs(&sums)?;
 
-        // Dual updates.
+        // Dual updates (survivors only).
         for (ui, wi) in u.iter_mut().zip(&w_all) {
-            for j in 0..d {
-                ui[j] += wi[j] - z[j];
+            if let Some(wi) = wi {
+                for j in 0..d {
+                    ui[j] += wi[j] - z[j];
+                }
             }
         }
 
@@ -114,6 +139,14 @@ fn run_loop(
         if subopt.map(|s| s < ctx.tol).unwrap_or(false) {
             *converged = true;
             break;
+        }
+        if let Some(ck) = &ctx.ckpt {
+            let mut vecs: Vec<(&str, &[f64])> = Vec::with_capacity(m + 1);
+            vecs.push(("z", z.as_slice()));
+            for (name, ui) in u_names.iter().zip(&u) {
+                vecs.push((name, ui.as_slice()));
+            }
+            ck.maybe_save("admm", iter, &cluster.comm_stats(), &[], &vecs, trace)?;
         }
     }
     Ok(())

@@ -1,0 +1,499 @@
+//! Checkpoint/resume: periodic binary snapshots of an algorithm run so
+//! a crashed driver can continue **bit-exactly** where it left off.
+//!
+//! A checkpoint captures everything a round loop needs to reproduce its
+//! next iteration: the named state vectors (iterate, momentum buffers,
+//! ADMM duals, L-BFGS history), named scalars (step sizes), cumulative
+//! [`CommStats`], and the trace-so-far. Floats are stored as raw IEEE
+//! bit patterns (little-endian `f64::to_bits`), so a resumed run starts
+//! from the *identical* f64s — no decimal round-trip — and the stitched
+//! trace matches an uninterrupted run byte-for-byte (modulo the
+//! wallclock column).
+//!
+//! Writes are atomic (`<path>.tmp` + rename): a crash mid-write leaves
+//! the previous checkpoint intact, never a torn file.
+
+use crate::comm::CommStats;
+use crate::metrics::{Trace, TraceRow};
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const MAGIC: &[u8; 8] = b"DANECKPT";
+const VERSION: u32 = 1;
+
+/// FNV-1a 64-bit hash of the canonical config JSON — stored in every
+/// checkpoint and checked on `--resume` so a checkpoint can't silently
+/// continue under a different experiment.
+pub fn config_hash(canonical_json: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in canonical_json.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One resumable snapshot of an algorithm run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Which algorithm wrote it ("dane", "gd", ...) — resume refuses a
+    /// mismatch.
+    pub algo: String,
+    /// Last completed round: trace rows `0..=round` are recorded and
+    /// the state vectors are post-update. Resume continues at
+    /// `round + 1`.
+    pub round: u64,
+    /// Cumulative communication accounting at the snapshot.
+    pub comm: CommStats,
+    /// Named scalar state (step sizes, L-BFGS curvatures).
+    pub scalars: Vec<(String, f64)>,
+    /// Named vector state (iterate, duals, history pairs).
+    pub vecs: Vec<(String, Vec<f64>)>,
+    /// Trace rows recorded so far.
+    pub trace: Trace,
+    /// [`config_hash`] of the experiment config that produced the run.
+    pub config_hash: u64,
+}
+
+impl Checkpoint {
+    pub fn scalar(&self, name: &str) -> Option<f64> {
+        self.scalars.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn vec(&self, name: &str) -> Option<&[f64]> {
+        self.vecs
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_slice())
+    }
+
+    /// Serialize and write atomically: the file at `path` is either the
+    /// previous checkpoint or this one, never a torn mix.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let tmp = tmp_path(path);
+        std::fs::write(&tmp, self.encode())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)?;
+        Self::decode(&bytes).map_err(|msg| {
+            Error::Runtime(format!(
+                "checkpoint {}: {msg}",
+                path.display()
+            ))
+        })
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        put_u32(&mut out, VERSION);
+        put_u64(&mut out, self.config_hash);
+        put_str(&mut out, &self.algo);
+        put_u64(&mut out, self.round);
+        put_comm(&mut out, &self.comm);
+        put_u32(&mut out, self.scalars.len() as u32);
+        for (name, v) in &self.scalars {
+            put_str(&mut out, name);
+            put_f64(&mut out, *v);
+        }
+        put_u32(&mut out, self.vecs.len() as u32);
+        for (name, v) in &self.vecs {
+            put_str(&mut out, name);
+            put_u32(&mut out, v.len() as u32);
+            for x in v {
+                put_f64(&mut out, *x);
+            }
+        }
+        put_u32(&mut out, self.trace.rows.len() as u32);
+        for r in &self.trace.rows {
+            put_row(&mut out, r);
+        }
+        out
+    }
+
+    fn decode(bytes: &[u8]) -> std::result::Result<Checkpoint, String> {
+        let mut rd = Reader { bytes, pos: 0 };
+        if rd.take(8)? != MAGIC {
+            return Err("bad magic (not a checkpoint file)".into());
+        }
+        let version = rd.u32()?;
+        if version != VERSION {
+            return Err(format!("unsupported version {version}"));
+        }
+        let config_hash = rd.u64()?;
+        let algo = rd.string()?;
+        let round = rd.u64()?;
+        let comm = rd.comm()?;
+        let n_scalars = rd.u32()? as usize;
+        let mut scalars = Vec::with_capacity(n_scalars.min(1024));
+        for _ in 0..n_scalars {
+            let name = rd.string()?;
+            scalars.push((name, rd.f64()?));
+        }
+        let n_vecs = rd.u32()? as usize;
+        let mut vecs = Vec::with_capacity(n_vecs.min(1024));
+        for _ in 0..n_vecs {
+            let name = rd.string()?;
+            let len = rd.u32()? as usize;
+            let mut v = Vec::with_capacity(len.min(1 << 20));
+            for _ in 0..len {
+                v.push(rd.f64()?);
+            }
+            vecs.push((name, v));
+        }
+        let n_rows = rd.u32()? as usize;
+        let mut trace = Trace::new();
+        for _ in 0..n_rows {
+            trace.rows.push(rd.row()?);
+        }
+        if rd.pos != bytes.len() {
+            return Err("trailing bytes after checkpoint".into());
+        }
+        Ok(Checkpoint { algo, round, comm, scalars, vecs, trace, config_hash })
+    }
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Driver-owned checkpoint policy for one run: where to write, how
+/// often, and (on `--resume`) the restored snapshot. Shared into
+/// [`super::RunCtx`] behind an `Arc` so the algorithm loops can call
+/// [`CkptSpec::maybe_save`] without threading mutable state.
+#[derive(Debug)]
+pub struct CkptSpec {
+    path: PathBuf,
+    /// Save every `every` rounds (`round % every == 0`).
+    every: usize,
+    /// Snapshot restored from `--resume`, already validated by the
+    /// driver (config hash + algorithm name).
+    pub resume: Option<Checkpoint>,
+    /// [`config_hash`] of the live config, stamped into every save.
+    pub config_hash: u64,
+    writes: AtomicU64,
+    /// Chaos hook (`DANE_CHAOS_CRASH_AFTER=k`): hard-exit the process
+    /// right after the k-th successful checkpoint write — the CI
+    /// crash/resume scenario's deterministic "power cut".
+    crash_after: Option<u64>,
+}
+
+impl CkptSpec {
+    pub fn new(path: PathBuf, every: usize, config_hash: u64) -> Self {
+        let crash_after = std::env::var("DANE_CHAOS_CRASH_AFTER")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok());
+        CkptSpec {
+            path,
+            every: every.max(1),
+            resume: None,
+            config_hash,
+            writes: AtomicU64::new(0),
+            crash_after,
+        }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The snapshot to restore for `algo`, if this spec carries one.
+    pub fn resume_for(&self, algo: &str) -> Option<&Checkpoint> {
+        self.resume.as_ref().filter(|c| c.algo == algo)
+    }
+
+    /// Round the loop should start from: one past the restored round,
+    /// or 0 on a fresh run.
+    pub fn start_round(&self, algo: &str) -> usize {
+        self.resume_for(algo).map(|c| c.round as usize + 1).unwrap_or(0)
+    }
+
+    /// Save a snapshot if `round` is on the cadence. Called at the
+    /// bottom of every algorithm iteration, after the state update and
+    /// the trace push for `round`.
+    pub fn maybe_save(
+        &self,
+        algo: &str,
+        round: usize,
+        comm: &CommStats,
+        scalars: &[(&str, f64)],
+        vecs: &[(&str, &[f64])],
+        trace: &Trace,
+    ) -> Result<()> {
+        if round % self.every != 0 {
+            return Ok(());
+        }
+        let ck = Checkpoint {
+            algo: algo.to_string(),
+            round: round as u64,
+            comm: comm.clone(),
+            scalars: scalars.iter().map(|(n, v)| (n.to_string(), *v)).collect(),
+            vecs: vecs
+                .iter()
+                .map(|(n, v)| (n.to_string(), v.to_vec()))
+                .collect(),
+            trace: trace.clone(),
+            config_hash: self.config_hash,
+        };
+        ck.save(&self.path)?;
+        let done = self.writes.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.crash_after == Some(done) {
+            eprintln!(
+                "chaos: crashing after checkpoint write {done} (round {round})"
+            );
+            std::process::exit(3);
+        }
+        Ok(())
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_opt_f64(out: &mut Vec<u8>, v: Option<f64>) {
+    match v {
+        None => out.push(0),
+        Some(x) => {
+            out.push(1);
+            put_f64(out, x);
+        }
+    }
+}
+
+fn put_comm(out: &mut Vec<u8>, c: &CommStats) {
+    put_u64(out, c.rounds);
+    put_u64(out, c.bytes);
+    put_f64(out, c.modeled_seconds);
+    put_u64(out, c.wire_bytes);
+    put_u64(out, c.startup_bytes);
+    put_u64(out, c.alive_workers);
+    put_u64(out, c.recoveries);
+}
+
+fn put_row(out: &mut Vec<u8>, r: &TraceRow) {
+    put_u64(out, r.round as u64);
+    put_f64(out, r.objective);
+    put_opt_f64(out, r.suboptimality);
+    put_opt_f64(out, r.grad_norm);
+    put_opt_f64(out, r.test_loss);
+    put_u64(out, r.comm_rounds);
+    put_u64(out, r.comm_bytes);
+    put_f64(out, r.comm_modeled_seconds);
+    put_f64(out, r.elapsed_seconds);
+    put_u64(out, r.wire_bytes);
+    put_u64(out, r.startup_bytes);
+    put_u64(out, r.alive_workers);
+    put_u64(out, r.recoveries);
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> std::result::Result<&'a [u8], String> {
+        if self.pos + n > self.bytes.len() {
+            return Err("truncated checkpoint".into());
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> std::result::Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> std::result::Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> std::result::Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn opt_f64(&mut self) -> std::result::Result<Option<f64>, String> {
+        match self.take(1)?[0] {
+            0 => Ok(None),
+            1 => Ok(Some(self.f64()?)),
+            t => Err(format!("bad option tag {t}")),
+        }
+    }
+
+    fn string(&mut self) -> std::result::Result<String, String> {
+        let len = self.u32()? as usize;
+        let raw = self.take(len)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| "bad utf8".to_string())
+    }
+
+    fn comm(&mut self) -> std::result::Result<CommStats, String> {
+        Ok(CommStats {
+            rounds: self.u64()?,
+            bytes: self.u64()?,
+            modeled_seconds: self.f64()?,
+            wire_bytes: self.u64()?,
+            startup_bytes: self.u64()?,
+            alive_workers: self.u64()?,
+            recoveries: self.u64()?,
+        })
+    }
+
+    fn row(&mut self) -> std::result::Result<TraceRow, String> {
+        Ok(TraceRow {
+            round: self.u64()? as usize,
+            objective: self.f64()?,
+            suboptimality: self.opt_f64()?,
+            grad_norm: self.opt_f64()?,
+            test_loss: self.opt_f64()?,
+            comm_rounds: self.u64()?,
+            comm_bytes: self.u64()?,
+            comm_modeled_seconds: self.f64()?,
+            elapsed_seconds: self.f64()?,
+            wire_bytes: self.u64()?,
+            startup_bytes: self.u64()?,
+            alive_workers: self.u64()?,
+            recoveries: self.u64()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    // A value with a messy bit pattern, to prove bit-exact round-trips.
+    const MESSY: f64 = std::f64::consts::PI / 3.0;
+
+    fn sample() -> Checkpoint {
+        let mut trace = Trace::new();
+        let comm = CommStats {
+            rounds: 7,
+            bytes: 1024,
+            modeled_seconds: 0.25,
+            wire_bytes: 2048,
+            startup_bytes: 512,
+            alive_workers: 3,
+            recoveries: 2,
+        };
+        trace.push(0, 1.5, Some(0.5), None, Some(0.9), &comm, 0.01);
+        trace.push(1, 1.25, None, Some(1e-3), None, &comm, 0.02);
+        Checkpoint {
+            algo: "dane".into(),
+            round: 1,
+            comm,
+            scalars: vec![("step".into(), 0.125)],
+            vecs: vec![
+                ("w".into(), vec![1.0, -2.5, MESSY]),
+                ("g".into(), vec![]),
+            ],
+            trace,
+            config_hash: config_hash("{\"name\":\"t\"}"),
+        }
+    }
+
+    #[test]
+    fn roundtrips_bit_exactly() {
+        let ck = sample();
+        let dir = TempDir::new("ckpt").unwrap();
+        let path = dir.path().join("run.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(back.vec("w").unwrap()[2].to_bits(), MESSY.to_bits());
+        assert_eq!(back.scalar("step"), Some(0.125));
+        assert!(back.scalar("missing").is_none());
+        // no stray tmp file after the atomic rename
+        assert!(!tmp_path(&path).exists());
+    }
+
+    #[test]
+    fn save_overwrites_atomically() {
+        let dir = TempDir::new("ckpt").unwrap();
+        let path = dir.path().join("run.ckpt");
+        let mut ck = sample();
+        ck.save(&path).unwrap();
+        ck.round = 5;
+        ck.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().round, 5);
+    }
+
+    #[test]
+    fn rejects_garbage_and_truncation() {
+        let dir = TempDir::new("ckpt").unwrap();
+        let path = dir.path().join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+
+        let ck = sample();
+        let good = dir.path().join("good.ckpt");
+        ck.save(&good).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn spec_cadence_and_resume_gate() {
+        let dir = TempDir::new("ckpt").unwrap();
+        let path = dir.path().join("run.ckpt");
+        let spec = CkptSpec::new(path.clone(), 3, 42);
+        let trace = Trace::new();
+        let comm = CommStats::default();
+        let w = [1.0, 2.0];
+        // rounds 1,2 skipped; 3 saved
+        spec.maybe_save("gd", 1, &comm, &[], &[("w", &w)], &trace).unwrap();
+        spec.maybe_save("gd", 2, &comm, &[], &[("w", &w)], &trace).unwrap();
+        assert!(!path.exists());
+        spec.maybe_save("gd", 3, &comm, &[], &[("w", &w)], &trace).unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.round, 3);
+        assert_eq!(ck.config_hash, 42);
+
+        let mut spec = CkptSpec::new(path, 1, 42);
+        assert_eq!(spec.start_round("gd"), 0);
+        spec.resume = Some(ck);
+        assert_eq!(spec.start_round("gd"), 4);
+        // wrong algorithm: the snapshot is not offered
+        assert_eq!(spec.start_round("dane"), 0);
+        assert!(spec.resume_for("dane").is_none());
+    }
+
+    #[test]
+    fn fnv_hash_is_stable_and_sensitive() {
+        let a = config_hash("{\"seed\":1}");
+        let b = config_hash("{\"seed\":2}");
+        assert_ne!(a, b);
+        assert_eq!(a, config_hash("{\"seed\":1}"));
+        // FNV-1a of empty string is the offset basis
+        assert_eq!(config_hash(""), 0xcbf2_9ce4_8422_2325);
+    }
+}

@@ -80,7 +80,18 @@ fn run_loop(
     let mut g = vec![0.0; d];
     let t0 = std::time::Instant::now();
 
-    for iter in 0..=ctx.max_rounds {
+    let mut start = 0;
+    if let Some(c) = ctx.ckpt.as_ref().and_then(|ck| ck.resume_for("dane")) {
+        *w = c
+            .vec("w")
+            .ok_or_else(|| crate::Error::Runtime("checkpoint lacks iterate w".into()))?
+            .to_vec();
+        *trace = c.trace.clone();
+        cluster.restore_comm(&c.comm);
+        start = c.round as usize + 1;
+    }
+
+    for iter in start..=ctx.max_rounds {
         // Gradient round (also yields the objective for the trace). The
         // final pass is instrumentation only — the algorithm is done.
         let loss = if iter < ctx.max_rounds && !*converged {
@@ -125,6 +136,17 @@ fn run_loop(
             Combine::First => {
                 *w = cluster.dane_round_first(w, &g, opts.eta, opts.mu)?;
             }
+        }
+
+        if let Some(ck) = &ctx.ckpt {
+            ck.maybe_save(
+                "dane",
+                iter,
+                &cluster.comm_stats(),
+                &[],
+                &[("w", w.as_slice())],
+                trace,
+            )?;
         }
     }
     Ok(())

@@ -7,16 +7,18 @@
 //! singular local solve) propagate as `Err` all the way to the CLI —
 //! nothing on this path panics.
 
+use super::checkpoint::{self, Checkpoint, CkptSpec};
+use super::fault::SupervisedCluster;
 use super::tcp::TcpCluster;
 use super::threaded::ThreadedCluster;
 use super::{admm, dane, gd, lbfgs, osa, AlgoResult, Cluster, RunCtx, SerialCluster};
-use crate::config::{AlgoConfig, BackendKind, EngineKind, ExperimentConfig};
+use crate::config::{AlgoConfig, BackendKind, EngineKind, ExperimentConfig, FaultPolicy};
 use crate::loss::make_objective;
 use crate::metrics::Trace;
 use crate::runtime::ArtifactRegistry;
 use crate::solver::erm_solve;
-use crate::Result;
-use std::path::Path;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 /// Everything a finished experiment produced.
@@ -35,7 +37,25 @@ pub struct RunResult {
 
 /// Run a full experiment from its config.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunResult> {
-    run_experiment_with_artifacts(cfg, None)
+    run_experiment_full(cfg, None, &RunOpts::default())
+}
+
+/// CLI-facing knobs that live outside the experiment config because they
+/// do not affect the math of the run: periodic checkpointing and resume.
+#[derive(Debug, Clone, Default)]
+pub struct RunOpts {
+    /// Write a checkpoint to this path periodically.
+    pub checkpoint: Option<PathBuf>,
+    /// Checkpoint cadence in rounds (0 or 1 = every round).
+    pub ckpt_every: usize,
+    /// Resume from this checkpoint file. Saving continues to the same
+    /// file unless `checkpoint` overrides the destination.
+    pub resume: Option<PathBuf>,
+}
+
+/// Like [`run_experiment`], with checkpoint/resume options.
+pub fn run_experiment_with_opts(cfg: &ExperimentConfig, opts: &RunOpts) -> Result<RunResult> {
+    run_experiment_full(cfg, None, opts)
 }
 
 /// Build the configured engine over `ds`. The shard seed, the `threads`
@@ -159,6 +179,15 @@ pub fn run_experiment_with_artifacts(
     cfg: &ExperimentConfig,
     artifact_dir: Option<&Path>,
 ) -> Result<RunResult> {
+    run_experiment_full(cfg, artifact_dir, &RunOpts::default())
+}
+
+/// The full driver path: config -> cluster -> supervisor -> algorithm.
+pub fn run_experiment_full(
+    cfg: &ExperimentConfig,
+    artifact_dir: Option<&Path>,
+    opts: &RunOpts,
+) -> Result<RunResult> {
     cfg.validate()?;
     let ds = cfg.dataset.build(cfg.seed)?;
     let obj = make_objective(cfg.loss, cfg.lambda);
@@ -167,6 +196,21 @@ pub fn run_experiment_with_artifacts(
     let (_, phi_star) = erm_solve(obj.as_ref(), &ds.as_single_shard())?;
 
     let mut cluster = build_cluster(cfg, &ds, obj, artifact_dir)?;
+    if cfg.fault != FaultPolicy::FailFast {
+        cluster.enable_recovery(&ds, cfg.seed.wrapping_add(1), cfg.threads);
+    }
+    // Every run goes through the supervisor: under fail_fast (the
+    // default) it is a transparent passthrough, so fault-free traces
+    // stay bit-identical across policies. Backoff jitter draws from the
+    // cfg.seed+3 stream (dataset / sharding / OSA take +0 / +1 / +2).
+    let mut cluster = SupervisedCluster::new(cluster, cfg.fault, cfg.seed.wrapping_add(3));
+    if let Ok(spec) = std::env::var("DANE_CHAOS_KILL") {
+        if let Some((call, rank)) = spec.split_once(':') {
+            if let (Ok(call), Ok(rank)) = (call.parse(), rank.parse()) {
+                cluster = cluster.chaos_kill_at(call, rank);
+            }
+        }
+    }
 
     let mut ctx = RunCtx::new(cfg.rounds)
         .with_reference(phi_star)
@@ -177,7 +221,31 @@ pub fn run_experiment_with_artifacts(
         }
     }
 
-    let result = dispatch(cluster.as_mut(), &cfg.algo, &ctx, cfg.lambda, cfg.seed)?;
+    if opts.checkpoint.is_some() || opts.resume.is_some() {
+        let hash = checkpoint::config_hash(&cfg.to_json_string());
+        let dest = opts
+            .checkpoint
+            .clone()
+            .or_else(|| opts.resume.clone())
+            .expect("checkpoint or resume path present");
+        let mut spec = CkptSpec::new(dest, opts.ckpt_every.max(1), hash);
+        if let Some(rp) = &opts.resume {
+            let c = Checkpoint::load(rp)?;
+            if c.config_hash != hash {
+                return Err(Error::Runtime(format!(
+                    "checkpoint {} was written by a different config \
+                     (hash {:#018x} != {:#018x}); resume refuses to mix runs",
+                    rp.display(),
+                    c.config_hash,
+                    hash
+                )));
+            }
+            spec.resume = Some(c);
+        }
+        ctx = ctx.with_checkpoint(Arc::new(spec));
+    }
+
+    let result = dispatch(&mut cluster, &cfg.algo, &ctx, cfg.lambda, cfg.seed)?;
     let rounds_to_tol = result.trace.rounds_to_tol(cfg.tol);
     Ok(RunResult {
         config: cfg.clone(),
@@ -267,6 +335,7 @@ mod tests {
             data_by_ref: false,
             eval_test: false,
             net: NetConfig { alpha: 0.0, beta: 0.0, topology: Topology::Star },
+            fault: FaultPolicy::FailFast,
         }
     }
 

@@ -1,27 +1,279 @@
-//! Deterministic fault injection for the cluster collective surface.
+//! Fault supervision and deterministic fault injection for the
+//! cluster collective surface.
 //!
-//! [`FaultInjectCluster`] decorates any `dyn Cluster` and simulates a
-//! worker dying at a chosen point in the run: the k-th *worker-touching*
-//! collective call (counted and instrumentation rounds alike — a dead
-//! machine cannot answer either) returns `Err` instead of delegating,
-//! and every later call keeps failing, exactly like a real dead worker
-//! under the threaded engine's drain-then-error protocol.
+//! Two decorators over `dyn Cluster` live here:
 //!
-//! This is the test harness for the crate's error-propagation contract:
-//! every algorithm must surface the injected failure as an
-//! [`super::AlgoError`] carrying the trace-so-far — never a panic
-//! (`rust/tests/fault_injection.rs` runs the whole matrix on both
-//! engines).
+//! * [`SupervisedCluster`] — the production-side supervisor. Every
+//!   worker-touching collective runs under the configured
+//!   [`FaultPolicy`]: `fail_fast` propagates the first
+//!   [`Error::WorkerLost`] unchanged (the pre-fault behavior),
+//!   `respawn` sleeps a capped exponential backoff with deterministic
+//!   seeded jitter and asks the engine to [`Cluster::recover`] at full
+//!   strength before retrying the failed round, and `degrade`
+//!   quarantines the dead ranks and retries over the survivors as long
+//!   as the quorum holds. Compute errors (a worker *answered* with an
+//!   error) stay hard under every policy — retrying a deterministic
+//!   failure cannot help.
+//!
+//! * [`FaultInjectCluster`] — the test harness for the crate's
+//!   error-propagation contract: it simulates a worker dying at a
+//!   chosen point in the run, and every algorithm must surface the
+//!   injected failure as an [`super::AlgoError`] carrying the
+//!   trace-so-far — never a panic (`rust/tests/fault_injection.rs`
+//!   runs the whole matrix on both engines). A *transient* injector
+//!   additionally lets a recovery succeed, modeling a crash whose
+//!   respawn works.
 //!
 //! Leader-local operations (`allreduce_mean_vecs` of already-gathered
 //! vectors, `comm_stats`, dimensions) do not touch workers and pass
-//! through uncounted.
+//! through unsupervised and uncounted.
 
 use super::Cluster;
 use crate::comm::CommStats;
+use crate::config::FaultPolicy;
 use crate::loss::Objective;
+use crate::util::Rng64;
 use crate::{Error, Result};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Longest single backoff sleep, whatever the exponent says.
+const MAX_BACKOFF_MS: u64 = 10_000;
+
+/// Policy-driven retry/respawn/degrade supervision over any engine.
+///
+/// The driver wraps the built engine in this decorator whenever the
+/// config's fault policy is not `fail_fast` (and for `fail_fast` too —
+/// the wrapper is transparent there, so the fault-free trace stays
+/// bit-identical under every policy).
+pub struct SupervisedCluster {
+    inner: Box<dyn Cluster>,
+    policy: FaultPolicy,
+    /// Deterministic jitter stream (seed discipline: `cfg.seed + 3`).
+    rng: Rng64,
+    recoveries: u64,
+    /// Chaos hook: SIGKILL worker `.1` right before worker-touching
+    /// call number `.0` (1-based). Drives the CI chaos-smoke job.
+    chaos_kill: Option<(u64, usize)>,
+    calls: u64,
+}
+
+impl SupervisedCluster {
+    pub fn new(inner: Box<dyn Cluster>, policy: FaultPolicy, jitter_seed: u64) -> Self {
+        SupervisedCluster {
+            inner,
+            policy,
+            rng: Rng64::seed_from_u64(jitter_seed),
+            recoveries: 0,
+            chaos_kill: None,
+            calls: 0,
+        }
+    }
+
+    /// Arm the chaos hook: kill worker `rank` immediately before the
+    /// `call`-th worker-touching collective call (1-based). Fires once.
+    pub fn chaos_kill_at(mut self, call: u64, rank: usize) -> Self {
+        self.chaos_kill = Some((call, rank));
+        self
+    }
+
+    /// Successful recoveries (respawns/redials or quorum degradations)
+    /// so far.
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries
+    }
+
+    fn sleep_backoff(&mut self, backoff_ms: u64, attempt: u32) {
+        let exp = attempt.saturating_sub(1).min(6);
+        let base = backoff_ms.saturating_mul(1u64 << exp).min(MAX_BACKOFF_MS);
+        let jitter = (base as f64 * 0.1 * self.rng.f64()) as u64;
+        let ms = base.saturating_add(jitter);
+        if ms > 0 {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+    }
+
+    /// Run one worker-touching collective under the policy: retry the
+    /// whole round after each successful recovery, so the leader never
+    /// folds a half-answered round.
+    fn with_retry<T>(
+        &mut self,
+        mut op: impl FnMut(&mut dyn Cluster) -> Result<T>,
+    ) -> Result<T> {
+        self.calls += 1;
+        if let Some((at, rank)) = self.chaos_kill {
+            if self.calls == at {
+                self.inner.fault_kill_worker(rank);
+                self.chaos_kill = None;
+            }
+        }
+        let mut attempt: u32 = 0;
+        loop {
+            let lost = match op(self.inner.as_mut()) {
+                Ok(v) => return Ok(v),
+                Err(Error::WorkerLost(msg)) => msg,
+                // compute errors, config errors, quorum loss: hard
+                Err(e) => return Err(e),
+            };
+            match self.policy {
+                FaultPolicy::FailFast => return Err(Error::WorkerLost(lost)),
+                FaultPolicy::Respawn { max_retries, backoff_ms } => {
+                    // consume attempts until one recovery brings the
+                    // cluster back to full strength, then retry the op
+                    loop {
+                        attempt += 1;
+                        if attempt > max_retries {
+                            return Err(Error::WorkerLost(format!(
+                                "gave up after {max_retries} respawn attempts: {lost}"
+                            )));
+                        }
+                        self.sleep_backoff(backoff_ms, attempt);
+                        if self.inner.recover(true).is_ok() {
+                            self.recoveries += 1;
+                            break;
+                        }
+                    }
+                }
+                FaultPolicy::Degrade { min_quorum } => {
+                    attempt += 1;
+                    // each failed attempt quarantines at least one rank
+                    // (or heals transiently); m+1 attempts bound the loop
+                    if attempt as usize > self.inner.m() + 1 {
+                        return Err(Error::WorkerLost(format!(
+                            "degrade retries exhausted: {lost}"
+                        )));
+                    }
+                    let alive = self.inner.recover(false)?;
+                    self.recoveries += 1;
+                    if alive < min_quorum {
+                        return Err(Error::Runtime(format!(
+                            "quorum lost: {alive} alive < min_quorum \
+                             {min_quorum}: {lost}"
+                        )));
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Cluster for SupervisedCluster {
+    fn m(&self) -> usize {
+        self.inner.m()
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn objective(&self) -> Arc<dyn Objective> {
+        self.inner.objective()
+    }
+
+    fn grad_and_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        self.with_retry(|c| c.grad_and_loss(w))
+    }
+
+    fn grad_and_loss_into(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
+        self.with_retry(|c| c.grad_and_loss_into(w, g))
+    }
+
+    fn loss_only(&mut self, w: &[f64]) -> Result<f64> {
+        self.with_retry(|c| c.loss_only(w))
+    }
+
+    fn dane_round(&mut self, w_prev: &[f64], g: &[f64], eta: f64, mu: f64) -> Result<Vec<f64>> {
+        self.with_retry(|c| c.dane_round(w_prev, g, eta, mu))
+    }
+
+    fn dane_round_into(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+        out: &mut [f64],
+    ) -> Result<()> {
+        self.with_retry(|c| c.dane_round_into(w_prev, g, eta, mu, out))
+    }
+
+    fn dane_round_first(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+    ) -> Result<Vec<f64>> {
+        self.with_retry(|c| c.dane_round_first(w_prev, g, eta, mu))
+    }
+
+    fn prox_all(
+        &mut self,
+        targets: &[Vec<f64>],
+        rho: f64,
+    ) -> Result<Vec<Option<Vec<f64>>>> {
+        self.with_retry(|c| c.prox_all(targets, rho))
+    }
+
+    fn local_erms(
+        &mut self,
+        subsample: Option<(f64, u64)>,
+    ) -> Result<(Vec<Option<Vec<f64>>>, Option<Vec<Option<Vec<f64>>>>)> {
+        self.with_retry(|c| c.local_erms(subsample))
+    }
+
+    fn allreduce_mean_vecs(&mut self, vecs: &[Vec<f64>]) -> Result<Vec<f64>> {
+        self.inner.allreduce_mean_vecs(vecs)
+    }
+
+    fn avg_row_sq_norm(&mut self) -> Result<f64> {
+        self.with_retry(|c| c.avg_row_sq_norm())
+    }
+
+    fn eval_loss(&mut self, w: &[f64]) -> Result<f64> {
+        self.with_retry(|c| c.eval_loss(w))
+    }
+
+    fn eval_grad_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
+        self.with_retry(|c| c.eval_grad_loss(w))
+    }
+
+    fn comm_stats(&self) -> CommStats {
+        let mut s = self.inner.comm_stats();
+        s.recoveries = self.recoveries;
+        s
+    }
+
+    fn reset_comm(&mut self) {
+        self.inner.reset_comm();
+    }
+
+    fn alive(&self) -> usize {
+        self.inner.alive()
+    }
+
+    fn recover(&mut self, respawn: bool) -> Result<usize> {
+        self.inner.recover(respawn)
+    }
+
+    fn restore_comm(&mut self, stats: &CommStats) {
+        self.recoveries = stats.recoveries;
+        self.inner.restore_comm(stats);
+    }
+
+    fn fault_kill_worker(&mut self, rank: usize) {
+        self.inner.fault_kill_worker(rank);
+    }
+
+    fn enable_recovery(
+        &mut self,
+        ds: &crate::data::Dataset,
+        shard_seed: u64,
+        gram_threads: Option<usize>,
+    ) {
+        self.inner.enable_recovery(ds, shard_seed, gram_threads);
+    }
+}
 
 /// A cluster in which worker `fail_worker` "dies" on the
 /// `fail_at_call`-th worker-touching collective call (1-based).
@@ -34,6 +286,10 @@ pub struct FaultInjectCluster {
     /// degradation — the id never changes behavior.
     fail_worker: usize,
     fail_at_call: usize,
+    /// Transient faults heal on the first recovery attempt: `recover`
+    /// disarms the trigger and reports the inner cluster's strength
+    /// without touching it (the simulated worker "respawned").
+    transient: bool,
     calls: usize,
 }
 
@@ -43,7 +299,14 @@ impl FaultInjectCluster {
     /// `usize::MAX` never fires (transparent passthrough).
     /// `fail_worker` only names the dead worker in the error message.
     pub fn new(inner: Box<dyn Cluster>, fail_worker: usize, fail_at_call: usize) -> Self {
-        FaultInjectCluster { inner, fail_worker, fail_at_call, calls: 0 }
+        FaultInjectCluster { inner, fail_worker, fail_at_call, transient: false, calls: 0 }
+    }
+
+    /// Make the injected fault transient: the first `recover` call
+    /// succeeds and disarms it.
+    pub fn transient(mut self) -> Self {
+        self.transient = true;
+        self
     }
 
     /// Worker-touching calls observed so far.
@@ -59,7 +322,7 @@ impl FaultInjectCluster {
     fn tick(&mut self) -> Result<()> {
         self.calls += 1;
         if self.calls >= self.fail_at_call {
-            return Err(Error::Runtime(format!(
+            return Err(Error::WorkerLost(format!(
                 "injected fault: worker {} died (collective call {}, trigger {})",
                 self.fail_worker, self.calls, self.fail_at_call
             )));
@@ -124,7 +387,11 @@ impl Cluster for FaultInjectCluster {
         self.inner.dane_round_first(w_prev, g, eta, mu)
     }
 
-    fn prox_all(&mut self, targets: &[Vec<f64>], rho: f64) -> Result<Vec<Vec<f64>>> {
+    fn prox_all(
+        &mut self,
+        targets: &[Vec<f64>],
+        rho: f64,
+    ) -> Result<Vec<Option<Vec<f64>>>> {
         self.tick()?;
         self.inner.prox_all(targets, rho)
     }
@@ -132,7 +399,7 @@ impl Cluster for FaultInjectCluster {
     fn local_erms(
         &mut self,
         subsample: Option<(f64, u64)>,
-    ) -> Result<(Vec<Vec<f64>>, Option<Vec<Vec<f64>>>)> {
+    ) -> Result<(Vec<Option<Vec<f64>>>, Option<Vec<Option<Vec<f64>>>>)> {
         self.tick()?;
         self.inner.local_erms(subsample)
     }
@@ -165,6 +432,35 @@ impl Cluster for FaultInjectCluster {
 
     fn reset_comm(&mut self) {
         self.inner.reset_comm();
+    }
+
+    fn alive(&self) -> usize {
+        self.inner.alive()
+    }
+
+    fn recover(&mut self, respawn: bool) -> Result<usize> {
+        if self.transient && self.tripped() {
+            self.fail_at_call = usize::MAX;
+            return Ok(self.inner.alive());
+        }
+        self.inner.recover(respawn)
+    }
+
+    fn restore_comm(&mut self, stats: &CommStats) {
+        self.inner.restore_comm(stats);
+    }
+
+    fn fault_kill_worker(&mut self, rank: usize) {
+        self.inner.fault_kill_worker(rank);
+    }
+
+    fn enable_recovery(
+        &mut self,
+        ds: &crate::data::Dataset,
+        shard_seed: u64,
+        gram_threads: Option<usize>,
+    ) {
+        self.inner.enable_recovery(ds, shard_seed, gram_threads);
     }
 }
 
@@ -203,6 +499,7 @@ mod tests {
         assert!(c.grad_and_loss(&w).is_ok(), "call 1 precedes the trigger");
         let err = c.loss_only(&w).unwrap_err();
         assert!(err.to_string().contains("injected fault"), "{err}");
+        assert!(matches!(err, Error::WorkerLost(_)), "recoverable class: {err}");
         assert!(c.tripped());
         // a dead worker stays dead: every later call fails too
         assert!(c.eval_loss(&w).is_err());
@@ -219,5 +516,89 @@ mod tests {
         assert_eq!(c.dim(), 5);
         let mean = c.allreduce_mean_vecs(&[vec![1.0; 5], vec![3.0; 5]]).unwrap();
         assert_eq!(mean, vec![2.0; 5]);
+    }
+
+    #[test]
+    fn transient_fault_heals_on_recover() {
+        let mut c = wrapped(1).transient();
+        let w = vec![0.0; 5];
+        assert!(c.grad_and_loss(&w).is_err());
+        assert_eq!(c.recover(true).unwrap(), 2);
+        let (_, l) = c.grad_and_loss(&w).unwrap();
+        assert!(l.is_finite());
+    }
+
+    #[test]
+    fn supervised_respawn_retries_transient_fault() {
+        let ds = synthetic_fig2(64, 5, 0.005, 3);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        let mut bare = SerialCluster::new(&ds, obj, 2, 1);
+        let inner = wrapped(2).transient();
+        let mut sup = SupervisedCluster::new(
+            Box::new(inner),
+            FaultPolicy::Respawn { max_retries: 3, backoff_ms: 0 },
+            7,
+        );
+        let w = vec![0.1; 5];
+        let (g0, l0) = bare.grad_and_loss(&w).unwrap();
+        let (g1, l1) = sup.grad_and_loss(&w).unwrap(); // call 1: clean
+        let (g2, l2) = sup.grad_and_loss(&w).unwrap(); // call 2: dies, respawns
+        assert_eq!(g0, g1);
+        assert_eq!(g1, g2);
+        assert_eq!(l1, l2);
+        assert_eq!(l0, l1);
+        assert_eq!(sup.recoveries(), 1);
+        assert_eq!(sup.comm_stats().recoveries, 1);
+    }
+
+    #[test]
+    fn supervised_fail_fast_propagates() {
+        let inner = wrapped(1).transient();
+        let mut sup = SupervisedCluster::new(Box::new(inner), FaultPolicy::FailFast, 7);
+        let err = sup.grad_and_loss(&[0.0; 5]).unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "{err}");
+        assert_eq!(sup.recoveries(), 0);
+    }
+
+    #[test]
+    fn supervised_respawn_gives_up_on_permanent_fault() {
+        // non-transient: recover() delegates to SerialCluster, which
+        // cannot recover, so every attempt is consumed
+        let inner = wrapped(1);
+        let mut sup = SupervisedCluster::new(
+            Box::new(inner),
+            FaultPolicy::Respawn { max_retries: 2, backoff_ms: 0 },
+            7,
+        );
+        let err = sup.grad_and_loss(&[0.0; 5]).unwrap_err();
+        assert!(err.to_string().contains("gave up after 2"), "{err}");
+    }
+
+    #[test]
+    fn supervised_degrade_rejects_quorum_loss() {
+        // transient heal keeps both workers alive, but the configured
+        // quorum demands more than the cluster has
+        let inner = wrapped(1).transient();
+        let mut sup = SupervisedCluster::new(
+            Box::new(inner),
+            FaultPolicy::Degrade { min_quorum: 3 },
+            7,
+        );
+        let err = sup.grad_and_loss(&[0.0; 5]).unwrap_err();
+        assert!(err.to_string().contains("quorum lost"), "{err}");
+    }
+
+    #[test]
+    fn supervised_degrade_continues_within_quorum() {
+        let inner = wrapped(2).transient();
+        let mut sup = SupervisedCluster::new(
+            Box::new(inner),
+            FaultPolicy::Degrade { min_quorum: 1 },
+            7,
+        );
+        let w = vec![0.1; 5];
+        assert!(sup.grad_and_loss(&w).is_ok());
+        assert!(sup.grad_and_loss(&w).is_ok()); // dies, heals, retries
+        assert_eq!(sup.recoveries(), 1);
     }
 }

@@ -58,13 +58,29 @@ fn gd_loop(
     converged: &mut bool,
 ) -> Result<()> {
     let obj = cluster.objective();
-    let step = match opts.step {
-        Some(s) => s,
-        None => 1.0 / trace_bound_l(cluster)?,
+    let resume = ctx.ckpt.as_ref().and_then(|ck| ck.resume_for("gd"));
+    // On resume the (counted) step-estimation round already ran before
+    // the checkpoint; reuse its result instead of re-charging it.
+    let step = match (&resume, opts.step) {
+        (Some(c), _) => c
+            .scalar("step")
+            .ok_or_else(|| crate::Error::Runtime("checkpoint lacks step".into()))?,
+        (None, Some(s)) => s,
+        (None, None) => 1.0 / trace_bound_l(cluster)?,
     };
+    let mut start = 0;
+    if let Some(c) = resume {
+        *w = c
+            .vec("w")
+            .ok_or_else(|| crate::Error::Runtime("checkpoint lacks iterate w".into()))?
+            .to_vec();
+        *trace = c.trace.clone();
+        cluster.restore_comm(&c.comm);
+        start = c.round as usize + 1;
+    }
     let t0 = std::time::Instant::now();
 
-    for iter in 0..=ctx.max_rounds {
+    for iter in start..=ctx.max_rounds {
         let (g, loss) = if iter < ctx.max_rounds && !*converged {
             cluster.grad_and_loss(w)?
         } else {
@@ -88,6 +104,16 @@ fn gd_loop(
             break;
         }
         ops::axpy(-step, &g, w);
+        if let Some(ck) = &ctx.ckpt {
+            ck.maybe_save(
+                "gd",
+                iter,
+                &cluster.comm_stats(),
+                &[("step", step)],
+                &[("w", w.as_slice())],
+                trace,
+            )?;
+        }
     }
     Ok(())
 }
@@ -113,9 +139,15 @@ fn agd_loop(
 ) -> Result<()> {
     let d = cluster.dim();
     let obj = cluster.objective();
-    let l = match opts.step {
-        Some(s) => 1.0 / s,
-        None => trace_bound_l(cluster)?,
+    let resume = ctx.ckpt.as_ref().and_then(|ck| ck.resume_for("agd"));
+    // On resume the (counted) smoothness-estimation round already ran
+    // before the checkpoint; reuse the saved L instead of re-charging it.
+    let l = match (&resume, opts.step) {
+        (Some(c), _) => c
+            .scalar("l")
+            .ok_or_else(|| crate::Error::Runtime("checkpoint lacks smoothness l".into()))?,
+        (None, Some(s)) => 1.0 / s,
+        (None, None) => trace_bound_l(cluster)?,
     };
     let sc = opts.strong_convexity.unwrap_or_else(|| obj.lambda()).max(1e-300);
     let kappa = (l / sc).max(1.0);
@@ -124,9 +156,23 @@ fn agd_loop(
 
     let mut w_prev = vec![0.0; d];
     let mut lookahead = vec![0.0; d];
+    let mut start = 0;
+    if let Some(c) = resume {
+        let restore = |name: &str| -> Result<Vec<f64>> {
+            Ok(c.vec(name)
+                .ok_or_else(|| crate::Error::Runtime(format!("checkpoint lacks {name}")))?
+                .to_vec())
+        };
+        *w = restore("w")?;
+        w_prev = restore("w_prev")?;
+        lookahead = restore("lookahead")?;
+        *trace = c.trace.clone();
+        cluster.restore_comm(&c.comm);
+        start = c.round as usize + 1;
+    }
     let t0 = std::time::Instant::now();
 
-    for iter in 0..=ctx.max_rounds {
+    for iter in start..=ctx.max_rounds {
         // Gradient at the lookahead point drives the update; the trace
         // reports phi at w (the returned iterate).
         let (g, loss_look) = if iter < ctx.max_rounds && !*converged {
@@ -164,6 +210,20 @@ fn agd_loop(
         }
         for j in 0..d {
             lookahead[j] = w[j] + momentum * (w[j] - w_prev[j]);
+        }
+        if let Some(ck) = &ctx.ckpt {
+            ck.maybe_save(
+                "agd",
+                iter,
+                &cluster.comm_stats(),
+                &[("l", l)],
+                &[
+                    ("w", w.as_slice()),
+                    ("w_prev", w_prev.as_slice()),
+                    ("lookahead", lookahead.as_slice()),
+                ],
+                trace,
+            )?;
         }
     }
     Ok(())

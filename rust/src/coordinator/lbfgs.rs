@@ -78,8 +78,38 @@ fn run_loop(
     let mut hist: VecDeque<(Vec<f64>, Vec<f64>, f64)> = VecDeque::new();
     let t0 = std::time::Instant::now();
 
-    let (mut g, mut loss) = cluster.grad_and_loss(w)?;
-    for iter in 0..=ctx.max_rounds {
+    let mut start = 0;
+    let (mut g, mut loss);
+    if let Some(c) = ctx.ckpt.as_ref().and_then(|ck| ck.resume_for("lbfgs")) {
+        let restore = |name: &str| -> Result<Vec<f64>> {
+            Ok(c.vec(name)
+                .ok_or_else(|| crate::Error::Runtime(format!("checkpoint lacks {name}")))?
+                .to_vec())
+        };
+        *w = restore("w")?;
+        g = restore("g")?;
+        loss = c
+            .scalar("loss")
+            .ok_or_else(|| crate::Error::Runtime("checkpoint lacks loss".into()))?;
+        // Curvature pairs s{i}/y{i}/rho{i}, oldest first, as saved.
+        let mut i = 0;
+        while let (Some(s), Some(y), Some(rho)) = (
+            c.vec(&format!("s{i}")),
+            c.vec(&format!("y{i}")),
+            c.scalar(&format!("rho{i}")),
+        ) {
+            hist.push_back((s.to_vec(), y.to_vec(), rho));
+            i += 1;
+        }
+        *trace = c.trace.clone();
+        cluster.restore_comm(&c.comm);
+        start = c.round as usize + 1;
+    } else {
+        let (g0, loss0) = cluster.grad_and_loss(w)?;
+        g = g0;
+        loss = loss0;
+    }
+    for iter in start..=ctx.max_rounds {
         let subopt = ctx.subopt(loss);
         trace.push(
             iter,
@@ -141,6 +171,20 @@ fn run_loop(
         *w = w_try;
         g = g_new;
         loss = loss_new;
+
+        if let Some(ck) = &ctx.ckpt {
+            let names: Vec<(String, String, String)> = (0..hist.len())
+                .map(|i| (format!("s{i}"), format!("y{i}"), format!("rho{i}")))
+                .collect();
+            let mut scalars: Vec<(&str, f64)> = vec![("loss", loss)];
+            let mut vecs: Vec<(&str, &[f64])> = vec![("w", w.as_slice()), ("g", g.as_slice())];
+            for ((sn, yn, rn), (s, y, rho)) in names.iter().zip(&hist) {
+                vecs.push((sn, s.as_slice()));
+                vecs.push((yn, y.as_slice()));
+                scalars.push((rn, *rho));
+            }
+            ck.maybe_save("lbfgs", iter, &cluster.comm_stats(), &scalars, &vecs, trace)?;
+        }
     }
     Ok(())
 }

@@ -12,6 +12,7 @@
 //! (gradient, iterate), GD/ADMM/L-BFGS = 1, OSA = 1 total (footnote 5).
 
 pub mod admm;
+pub mod checkpoint;
 pub mod dane;
 pub mod driver;
 pub mod fault;
@@ -85,13 +86,19 @@ pub trait Cluster {
         -> Result<Vec<f64>>;
 
     /// ADMM proximal solves on per-worker targets — local compute, no
-    /// communication (the averaging is a separate explicit round).
-    fn prox_all(&mut self, targets: &[Vec<f64>], rho: f64) -> Result<Vec<Vec<f64>>>;
+    /// communication (the averaging is a separate explicit round). Slot
+    /// k is `None` exactly when rank k is quarantined under a `degrade`
+    /// fault policy; fault-free engines return all-`Some`.
+    fn prox_all(&mut self, targets: &[Vec<f64>], rho: f64)
+        -> Result<Vec<Option<Vec<f64>>>>;
 
     /// Per-worker ERMs (optionally each worker also solves a subsampled
     /// ERM for bias correction) — local compute, no communication.
-    fn local_erms(&mut self, subsample: Option<(f64, u64)>)
-        -> Result<(Vec<Vec<f64>>, Option<Vec<Vec<f64>>>)>;
+    /// `None` slots mark quarantined ranks, as in [`Cluster::prox_all`].
+    fn local_erms(
+        &mut self,
+        subsample: Option<(f64, u64)>,
+    ) -> Result<(Vec<Option<Vec<f64>>>, Option<Vec<Option<Vec<f64>>>>)>;
 
     /// Average per-worker vectors — ONE allreduce. The reduction itself
     /// is leader-local (the inputs are already in hand), but the round
@@ -112,6 +119,43 @@ pub trait Cluster {
 
     fn comm_stats(&self) -> CommStats;
     fn reset_comm(&mut self);
+
+    /// Workers currently answering collectives. Equals [`Cluster::m`]
+    /// fault-free; drops below it when a `degrade` policy quarantines
+    /// dead ranks.
+    fn alive(&self) -> usize {
+        self.m()
+    }
+
+    /// Recover from worker loss: quarantine dead ranks and — when
+    /// `respawn` is set and the engine can — bring replacements back up
+    /// and re-initialize them. Returns the number of alive workers
+    /// afterwards. Engines that cannot recover keep the default.
+    fn recover(&mut self, _respawn: bool) -> Result<usize> {
+        Err(crate::Error::Runtime(
+            "this cluster engine cannot recover workers".into(),
+        ))
+    }
+
+    /// Overwrite cumulative communication stats (checkpoint resume picks
+    /// up the crashed run's accounting). No-op where unsupported.
+    fn restore_comm(&mut self, _stats: &CommStats) {}
+
+    /// Chaos hook: forcibly kill worker `rank` (test/CI fault
+    /// injection). No-op on engines without killable workers.
+    fn fault_kill_worker(&mut self, _rank: usize) {}
+
+    /// Arm [`Cluster::recover`] with everything a rebuild needs (the
+    /// source dataset and the sharding seed). Called by the driver
+    /// before a supervised run; no-op on engines that either cannot
+    /// recover or (like TCP) retain their init payloads unconditionally.
+    fn enable_recovery(
+        &mut self,
+        _ds: &Dataset,
+        _shard_seed: u64,
+        _gram_threads: Option<usize>,
+    ) {
+    }
 }
 
 /// Shared run parameters + instrumentation context.
@@ -125,11 +169,20 @@ pub struct RunCtx {
     pub phi_star: Option<f64>,
     /// Evaluate test loss each round (fig. 4).
     pub test_shard: Option<Shard>,
+    /// Periodic checkpoint spec (and, on `--resume`, the restored
+    /// state). `None` = no checkpointing — the fault-free common case.
+    pub ckpt: Option<Arc<checkpoint::CkptSpec>>,
 }
 
 impl RunCtx {
     pub fn new(max_rounds: usize) -> Self {
-        RunCtx { max_rounds, tol: 1e-6, phi_star: None, test_shard: None }
+        RunCtx {
+            max_rounds,
+            tol: 1e-6,
+            phi_star: None,
+            test_shard: None,
+            ckpt: None,
+        }
     }
 
     pub fn with_reference(mut self, phi_star: f64) -> Self {
@@ -144,6 +197,11 @@ impl RunCtx {
 
     pub fn with_test_shard(mut self, shard: Shard) -> Self {
         self.test_shard = Some(shard);
+        self
+    }
+
+    pub fn with_checkpoint(mut self, spec: Arc<checkpoint::CkptSpec>) -> Self {
+        self.ckpt = Some(spec);
         self
     }
 
@@ -212,7 +270,10 @@ impl std::error::Error for AlgoError {
 
 impl From<Box<AlgoError>> for crate::Error {
     fn from(e: Box<AlgoError>) -> Self {
-        crate::Error::Runtime(e.to_string())
+        // Carry the whole payload (iterate + partial trace) instead of
+        // flattening to a string: the CLI writes the partial CSV from
+        // it. `Display` output is unchanged.
+        crate::Error::Algo(e)
     }
 }
 
@@ -441,29 +502,33 @@ impl Cluster for SerialCluster {
         Ok(w1)
     }
 
-    fn prox_all(&mut self, targets: &[Vec<f64>], rho: f64) -> Result<Vec<Vec<f64>>> {
+    fn prox_all(
+        &mut self,
+        targets: &[Vec<f64>],
+        rho: f64,
+    ) -> Result<Vec<Option<Vec<f64>>>> {
         assert_eq!(targets.len(), self.m());
         self.workers
             .iter_mut()
             .zip(targets)
-            .map(|(w, v)| w.admm_prox(v, rho))
+            .map(|(w, v)| w.admm_prox(v, rho).map(Some))
             .collect()
     }
 
     fn local_erms(
         &mut self,
         subsample: Option<(f64, u64)>,
-    ) -> Result<(Vec<Vec<f64>>, Option<Vec<Vec<f64>>>)> {
+    ) -> Result<(Vec<Option<Vec<f64>>>, Option<Vec<Option<Vec<f64>>>>)> {
         let mut full = Vec::with_capacity(self.m());
         for w in &mut self.workers {
-            full.push(w.local_erm()?);
+            full.push(Some(w.local_erm()?));
         }
         let sub = match subsample {
             None => None,
             Some((r, seed)) => {
                 let mut out = Vec::with_capacity(self.m());
                 for w in &mut self.workers {
-                    out.push(w.local_erm_subsample(r, seed)?);
+                    out.push(Some(w.local_erm_subsample(r, seed)?));
                 }
                 Some(out)
             }
@@ -509,11 +574,17 @@ impl Cluster for SerialCluster {
     }
 
     fn comm_stats(&self) -> CommStats {
-        self.comm.stats().clone()
+        let mut s = self.comm.stats().clone();
+        s.alive_workers = self.workers.len() as u64;
+        s
     }
 
     fn reset_comm(&mut self) {
         self.comm.reset();
+    }
+
+    fn restore_comm(&mut self, stats: &CommStats) {
+        self.comm.restore(stats);
     }
 }
 

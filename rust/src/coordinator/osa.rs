@@ -59,18 +59,22 @@ fn run_inner(
     let sub = opts.bias_correction_r.map(|r| (r, opts.seed));
     let (full, subs) = cluster.local_erms(sub)?;
 
-    // Per-machine combination (local), then ONE averaging round.
+    // Per-machine combination (local), then ONE averaging round. Under a
+    // degraded quorum absent ranks come back as None and drop out of the
+    // mean (1/|alive|). OSA is single-shot, so there is no checkpoint —
+    // a failed run is simply rerun.
     let combined: Vec<Vec<f64>> = match (&subs, opts.bias_correction_r) {
         (Some(subs), Some(r)) => full
             .iter()
             .zip(subs)
-            .map(|(w1, w2)| {
-                (0..d)
-                    .map(|j| (w1[j] - r * w2[j]) / (1.0 - r))
-                    .collect()
+            .filter_map(|(w1, w2)| match (w1, w2) {
+                (Some(w1), Some(w2)) => {
+                    Some((0..d).map(|j| (w1[j] - r * w2[j]) / (1.0 - r)).collect())
+                }
+                _ => None,
             })
             .collect(),
-        _ => full,
+        _ => full.into_iter().flatten().collect(),
     };
     *w = cluster.allreduce_mean_vecs(&combined)?;
 

@@ -63,9 +63,18 @@
 //! worker-side by the relays, leader-side by the gather), so surviving
 //! sockets never desynchronize. No `.expect`/`.unwrap` anywhere on the
 //! socket path.
+//!
+//! Fault recovery: transport failures surface as
+//! [`Error::WorkerLost`] (compute errors stay hard), and
+//! [`Cluster::recover`] rebuilds the whole round plane — redial every
+//! surviving rank at its retained address, replay the retained
+//! Init/InitRef frame (workers are stateless between rounds), respawn
+//! self-hosted children whose dial is refused, and re-link the
+//! cluster as a **star over the alive ranks**. Fault-free runs never
+//! rebuild, so the bit-exact rank-order fold is untouched.
 
 use super::Cluster;
-use crate::comm::topology::{ExecTopology, RankGather, TreePlan};
+use crate::comm::topology::{ExecTopology, RankGather, TreePlan, RELAY_CHILD_LOST};
 use crate::comm::wire::{
     self, Command as Cmd, InitPayload, InitRefPayload, PeerChild, PeersPayload, Reply,
 };
@@ -167,6 +176,30 @@ pub struct TcpCluster {
     /// n_i / N weights for exact gradient averaging (identical to the
     /// in-memory engines — same shards, same reduction order).
     weights: Vec<f64>,
+    /// Fold weights actually applied: `weights` verbatim (bitwise
+    /// identical) while every rank is alive, renormalized over the
+    /// survivors (0.0 at quarantined ranks) after a degrade recovery.
+    eff_weights: Vec<f64>,
+    /// Ranks quarantined by a degrade recovery; all-false on the
+    /// fault-free path and under respawn.
+    dead: Vec<bool>,
+    n_alive: usize,
+    /// Worker addresses by rank, retained for recovery redials
+    /// (self-hosted respawns refresh the entry with the new child's
+    /// announced address).
+    addrs: Vec<String>,
+    /// Self-hosted children can be respawned; external workers can
+    /// only be redialed.
+    hosted: bool,
+    /// The encoded Init/InitRef frame per rank, retained so a
+    /// recovered worker can be re-initialized without re-sharding.
+    /// By-value frames hold the shard rows (one extra copy of the
+    /// training data on the leader); by-ref frames are O(1) each.
+    init_frames: Vec<Vec<u8>>,
+    /// Whether the links follow the tree plan. Bring-up sets this from
+    /// the topology; recovery rebuilds always produce star links, so
+    /// command routing consults this, not `topology`.
+    tree_links: bool,
     row_sq: Option<f64>,
     /// Bytes measured on the leader-adjacent sockets (round frames
     /// only; Init/Peers setup excluded).
@@ -415,6 +448,7 @@ impl TcpCluster {
         let mut enc = Vec::new();
         let mut frame = Vec::new();
         let mut startup_bytes: u64 = 0;
+        let mut init_frames: Vec<Vec<u8>> = Vec::with_capacity(m);
         // Init handshake: the leader is the single source of sharding
         // truth; worker processes need no config file. Excluded from
         // the per-round accounting (modeled and wire) but measured as
@@ -445,6 +479,7 @@ impl TcpCluster {
                     }));
                     wire::encode_command(&init, &mut enc)?;
                     startup_bytes += enc.len() as u64;
+                    init_frames.push(enc.clone());
                     streams[i]
                         .write_all(&enc)
                         .map_err(|e| io_err(i, "init send", &e))?;
@@ -477,6 +512,7 @@ impl TcpCluster {
                     }));
                     wire::encode_command(&init, &mut enc)?;
                     startup_bytes += enc.len() as u64;
+                    init_frames.push(enc.clone());
                     streams[i]
                         .write_all(&enc)
                         .map_err(|e| io_err(i, "init send", &e))?;
@@ -545,6 +581,8 @@ impl TcpCluster {
         drop(streams);
 
         let procs = std::mem::take(&mut guard.0);
+        let hosted = procs.iter().any(|p| p.is_some());
+        let n_alive = weights.len();
         Ok(TcpCluster {
             topology,
             links,
@@ -553,7 +591,14 @@ impl TcpCluster {
             obj: make_objective(loss, lambda),
             comm: Collective::new(net),
             d: ds.d(),
+            eff_weights: weights.clone(),
             weights,
+            dead: vec![false; n_alive],
+            n_alive,
+            addrs,
+            hosted,
+            init_frames,
+            tree_links: topology.is_tree(),
             row_sq: None,
             wire_bytes: 0,
             startup_bytes,
@@ -598,6 +643,135 @@ impl TcpCluster {
         }
     }
 
+    /// Shut down and drain every leader-adjacent link (joining the I/O
+    /// threads), keeping worker processes, addresses, and retained
+    /// init frames. Workers see EOF at a frame boundary and loop back
+    /// to accepting, ready for a recovery redial.
+    fn teardown_links(&mut self) {
+        for c in &self.ctrl {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
+        for link in self.links.drain(..) {
+            match link.io {
+                LinkIo::Inline(stream) => drop(stream),
+                LinkIo::Thread { tx, rx, join } => {
+                    drop(tx);
+                    drop(rx);
+                    if let Some(j) = join {
+                        let _ = j.join();
+                    }
+                }
+                // latched-dead links already dropped their channel
+                // ends; the orphaned I/O thread exits on its own
+                LinkIo::Dead(_) => {}
+            }
+        }
+        self.ctrl.clear();
+    }
+
+    /// Dial rank's retained address, replay its retained Init frame,
+    /// and consume the ack — a fresh worker session ready for rounds.
+    fn redial_rank(&mut self, rank: usize) -> Result<TcpStream> {
+        let addr = self.addrs[rank].clone();
+        let mut stream = TcpStream::connect(&addr).map_err(|e| {
+            Error::WorkerLost(format!("tcp: redial worker {rank} at {addr}: {e}"))
+        })?;
+        configure_stream(&stream, rank, self.io_timeout)?;
+        stream.write_all(&self.init_frames[rank]).map_err(|e| {
+            Error::WorkerLost(format!("tcp: worker {rank} re-init: {e}"))
+        })?;
+        self.startup_bytes += self.init_frames[rank].len() as u64;
+        self.startup_bytes +=
+            read_setup_ack(&mut stream, &mut self.frame, rank, "re-init")?;
+        Ok(stream)
+    }
+
+    /// Kill and reap the dead self-hosted child at `rank`, spawn a
+    /// fresh worker process, record its announced address, and
+    /// initialize it.
+    fn respawn_rank(&mut self, rank: usize, dial_err: Error) -> Result<TcpStream> {
+        let bin = worker_binary()?;
+        if let Some(slot) = self.procs.get_mut(rank) {
+            if let Some(mut child) = slot.take() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+        let (child, addr) = spawn_worker_process(&bin, rank, self.io_timeout)
+            .map_err(|e| Error::WorkerLost(format!("{dial_err}; respawn: {e}")))?;
+        self.procs[rank] = Some(child);
+        self.addrs[rank] = addr;
+        self.redial_rank(rank)
+    }
+
+    /// Full-rebuild recovery: abandon every leader-adjacent
+    /// connection, redial each previously-alive rank (respawning
+    /// self-hosted children whose dial fails when `respawn` is set,
+    /// quarantining unreachable ranks otherwise), and rebuild the
+    /// round plane as a star over the alive ranks — a recovered run
+    /// never relays through a possibly-dead interior worker. Under
+    /// `respawn` any unrecoverable rank is an error (the supervisor
+    /// backs off and calls again); under degrade the survivor count is
+    /// returned and the fold weights are renormalized.
+    fn recover_impl(&mut self, respawn: bool) -> Result<usize> {
+        let m = self.weights.len();
+        self.teardown_links();
+        let mut streams: Vec<Option<TcpStream>> = (0..m).map(|_| None).collect();
+        for rank in 0..m {
+            if self.dead[rank] {
+                continue;
+            }
+            match self.redial_rank(rank) {
+                Ok(s) => streams[rank] = Some(s),
+                Err(first) if respawn && self.hosted => {
+                    streams[rank] = Some(self.respawn_rank(rank, first)?);
+                }
+                // External worker under respawn: nothing to spawn —
+                // the supervisor backs off and redials.
+                Err(first) if respawn => return Err(first),
+                Err(_) => {
+                    if let Some(slot) = self.procs.get_mut(rank) {
+                        if let Some(mut child) = slot.take() {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                        }
+                    }
+                    self.dead[rank] = true;
+                }
+            }
+        }
+        for (rank, slot) in streams.iter_mut().enumerate() {
+            let Some(stream) = slot.take() else { continue };
+            self.ctrl.push(stream.try_clone().map_err(|e| {
+                Error::Runtime(format!("tcp: clone control handle: {e}"))
+            })?);
+            let io = match self.topology {
+                ExecTopology::StarSeq => LinkIo::Inline(stream),
+                ExecTopology::Star | ExecTopology::Tree => spawn_link_io(stream, rank),
+            };
+            self.links.push(Link { ranks: vec![rank], io });
+        }
+        self.tree_links = false;
+        self.n_alive = self.dead.iter().filter(|&&dd| !dd).count();
+        if self.dead.iter().any(|&dd| dd) {
+            let wsum: f64 =
+                (0..m).filter(|&r| !self.dead[r]).map(|r| self.weights[r]).sum();
+            self.eff_weights = (0..m)
+                .map(|r| {
+                    if self.dead[r] {
+                        0.0
+                    } else {
+                        self.weights[r] / wsum
+                    }
+                })
+                .collect();
+            self.row_sq = None;
+        } else {
+            self.eff_weights = self.weights.clone();
+        }
+        Ok(self.n_alive)
+    }
+
     fn unexpected(&self, i: usize) -> Error {
         Error::Runtime(format!("worker {i}: unexpected reply type"))
     }
@@ -606,14 +780,15 @@ impl TcpCluster {
     /// every link's full reply bundle, slot replies by rank, surface
     /// the lowest-rank error after draining everything. All writes go
     /// out before any read (threaded links overlap both on their own).
-    fn dispatch(&mut self, frames: Vec<Arc<Vec<u8>>>) -> Result<Vec<Reply>> {
+    /// Quarantined ranks have no link and come back as `None` slots.
+    fn dispatch(&mut self, frames: Vec<Arc<Vec<u8>>>) -> Result<Vec<Option<Reply>>> {
         debug_assert_eq!(frames.len(), self.links.len());
         let m = self.weights.len();
         let io_timeout = self.io_timeout;
         let budget = |expect: usize| {
             io_timeout.checked_mul(expect as u32 + 2).unwrap_or(io_timeout)
         };
-        let TcpCluster { links, frame: buf, wire_bytes, .. } = self;
+        let TcpCluster { links, frame: buf, wire_bytes, dead, .. } = self;
         let mut gather = RankGather::new(m);
         let mut bytes = 0u64;
         let mut pending = vec![false; links.len()];
@@ -664,12 +839,19 @@ impl TcpCluster {
                         Ok(batch) => {
                             bytes += batch.bytes;
                             for (rank, r) in link.ranks.iter().zip(batch.replies) {
+                                // keep the transport/compute split the
+                                // I/O thread already made
                                 gather.put(
                                     *rank,
-                                    r.map_err(|e| {
-                                        Error::Runtime(format!(
+                                    r.map_err(|e| match e {
+                                        Error::WorkerLost(msg) => {
+                                            Error::WorkerLost(format!(
+                                                "tcp: worker {rank}: {msg}"
+                                            ))
+                                        }
+                                        e => Error::Runtime(format!(
                                             "tcp: worker {rank}: {e}"
-                                        ))
+                                        )),
                                     }),
                                 );
                             }
@@ -698,7 +880,9 @@ impl TcpCluster {
                         if let Some(msg) = &failed {
                             gather.put(
                                 rank,
-                                Err(Error::Runtime(format!("tcp: worker {rank}: {msg}"))),
+                                Err(Error::WorkerLost(format!(
+                                    "tcp: worker {rank}: {msg}"
+                                ))),
                             );
                             continue;
                         }
@@ -718,17 +902,24 @@ impl TcpCluster {
                                 let msg = "connection closed mid-round".to_string();
                                 gather.put(
                                     rank,
-                                    Err(Error::Runtime(format!(
+                                    Err(Error::WorkerLost(format!(
+                                        "tcp: worker {rank}: {msg}"
+                                    ))),
+                                );
+                                failed = Some(msg);
+                            }
+                            Err(Error::Io(e)) => {
+                                let msg = describe_io("reply read", &e);
+                                gather.put(
+                                    rank,
+                                    Err(Error::WorkerLost(format!(
                                         "tcp: worker {rank}: {msg}"
                                     ))),
                                 );
                                 failed = Some(msg);
                             }
                             Err(e) => {
-                                let msg = match e {
-                                    Error::Io(e) => describe_io("reply read", &e),
-                                    other => other.to_string(),
-                                };
+                                let msg = e.to_string();
                                 gather.put(
                                     rank,
                                     Err(Error::Runtime(format!(
@@ -751,13 +942,13 @@ impl TcpCluster {
             }
         }
         *wire_bytes += bytes;
-        gather.into_result()
+        gather.into_result_masked(dead)
     }
 
     /// Broadcast the frame sitting in `self.enc` to every link and
     /// gather the full cluster's replies; recovers the encode buffer
     /// when every link has released its share.
-    fn broadcast_round(&mut self) -> Result<Vec<Reply>> {
+    fn broadcast_round(&mut self) -> Result<Vec<Option<Reply>>> {
         let frame = Arc::new(std::mem::take(&mut self.enc));
         let frames = vec![frame.clone(); self.links.len()];
         let out = self.dispatch(frames);
@@ -791,19 +982,23 @@ impl TcpCluster {
                 if tx.send(LinkJob { frame: frame.clone(), expect: 1 }).is_err() {
                     let msg = "link I/O thread died".to_string();
                     latch = Some(msg.clone());
-                    break Err(Error::Runtime(format!("tcp: worker {rank}: {msg}")));
+                    break Err(Error::WorkerLost(format!("tcp: worker {rank}: {msg}")));
                 }
                 let batch = match rx.recv_timeout(budget) {
                     Ok(b) => b,
                     Err(RecvTimeoutError::Timeout) => {
                         let msg = format!("wedged: no reply within {budget:?}");
                         latch = Some(msg.clone());
-                        break Err(Error::Runtime(format!("tcp: worker {rank} {msg}")));
+                        break Err(Error::WorkerLost(format!(
+                            "tcp: worker {rank} {msg}"
+                        )));
                     }
                     Err(RecvTimeoutError::Disconnected) => {
                         let msg = "link I/O thread died".to_string();
                         latch = Some(msg.clone());
-                        break Err(Error::Runtime(format!("tcp: worker {rank}: {msg}")));
+                        break Err(Error::WorkerLost(format!(
+                            "tcp: worker {rank}: {msg}"
+                        )));
                     }
                 };
                 *wire_bytes += batch.bytes;
@@ -817,13 +1012,18 @@ impl TcpCluster {
                     .unwrap_or_else(|| {
                         Err(Error::Runtime("link returned no reply".into()))
                     })
-                    .map_err(|e| Error::Runtime(format!("tcp: worker {rank}: {e}")));
+                    .map_err(|e| match e {
+                        Error::WorkerLost(msg) => Error::WorkerLost(format!(
+                            "tcp: worker {rank}: {msg}"
+                        )),
+                        e => Error::Runtime(format!("tcp: worker {rank}: {e}")),
+                    });
             },
             LinkIo::Inline(stream) => loop {
                 if let Err(e) = stream.write_all(enc.as_slice()) {
                     let msg = describe_io("send", &e);
                     latch = Some(msg.clone());
-                    break Err(Error::Runtime(format!("tcp: worker {rank} {msg}")));
+                    break Err(Error::WorkerLost(format!("tcp: worker {rank} {msg}")));
                 }
                 *wire_bytes += enc.len() as u64;
                 break match wire::read_frame(stream, buf) {
@@ -838,12 +1038,12 @@ impl TcpCluster {
                     Ok(None) => {
                         let msg = "connection closed mid-round".to_string();
                         latch = Some(msg.clone());
-                        Err(Error::Runtime(format!("tcp: worker {rank}: {msg}")))
+                        Err(Error::WorkerLost(format!("tcp: worker {rank}: {msg}")))
                     }
                     Err(Error::Io(e)) => {
                         let msg = describe_io("reply read", &e);
                         latch = Some(msg.clone());
-                        Err(Error::Runtime(format!("tcp: worker {rank} {msg}")))
+                        Err(Error::WorkerLost(format!("tcp: worker {rank} {msg}")))
                     }
                     Err(e) => {
                         Err(Error::Runtime(format!("tcp: worker {rank}: {e}")))
@@ -851,13 +1051,16 @@ impl TcpCluster {
                 };
             },
             LinkIo::Dead(msg) => {
-                Err(Error::Runtime(format!("tcp: worker {rank}: {msg}")))
+                Err(Error::WorkerLost(format!("tcp: worker {rank}: {msg}")))
             }
         };
         if let Some(msg) = latch {
             links[li].io = LinkIo::Dead(msg);
         }
         match result? {
+            Reply::Err(e) if e.starts_with(RELAY_CHILD_LOST) => {
+                Err(Error::WorkerLost(format!("worker {rank}: {e}")))
+            }
             Reply::Err(e) => Err(Error::Runtime(format!("worker {rank}: {e}"))),
             r => Ok(r),
         }
@@ -875,9 +1078,10 @@ impl TcpCluster {
         let mut loss = 0.0;
         for (i, r) in replies.into_iter().enumerate() {
             match r {
-                Reply::VecScalar(gi, li) if gi.len() == g.len() => {
-                    ops::axpy(self.weights[i], &gi, g);
-                    loss += self.weights[i] * li;
+                None => {}
+                Some(Reply::VecScalar(gi, li)) if gi.len() == g.len() => {
+                    ops::axpy(self.eff_weights[i], &gi, g);
+                    loss += self.eff_weights[i] * li;
                 }
                 _ => return Err(self.unexpected(i)),
             }
@@ -891,7 +1095,8 @@ impl TcpCluster {
         let mut loss = 0.0;
         for (i, r) in replies.into_iter().enumerate() {
             match r {
-                Reply::Scalar(l) => loss += self.weights[i] * l,
+                None => {}
+                Some(Reply::Scalar(l)) => loss += self.eff_weights[i] * l,
                 _ => return Err(self.unexpected(i)),
             }
         }
@@ -901,7 +1106,7 @@ impl TcpCluster {
 
 fn fail_ranks(gather: &mut RankGather, ranks: &[usize], msg: &str) {
     for &r in ranks {
-        gather.put(r, Err(Error::Runtime(format!("tcp: worker {r}: {msg}"))));
+        gather.put(r, Err(Error::WorkerLost(format!("tcp: worker {r}: {msg}"))));
     }
 }
 
@@ -980,7 +1185,7 @@ fn spawn_link_io(mut stream: TcpStream, root: usize) -> LinkIo {
                 drop(out); // release the leader's encode buffer promptly
                 for _ in 0..expect {
                     if let Some(msg) = &dead {
-                        replies.push(Err(Error::Runtime(msg.clone())));
+                        replies.push(Err(Error::WorkerLost(msg.clone())));
                         continue;
                     }
                     match wire::read_frame(&mut stream, &mut frame) {
@@ -992,12 +1197,12 @@ fn spawn_link_io(mut stream: TcpStream, root: usize) -> LinkIo {
                         }
                         Ok(None) => {
                             let msg = "connection closed mid-round".to_string();
-                            replies.push(Err(Error::Runtime(msg.clone())));
+                            replies.push(Err(Error::WorkerLost(msg.clone())));
                             dead = Some(msg);
                         }
                         Err(Error::Io(e)) => {
                             let msg = describe_io("reply read", &e);
-                            replies.push(Err(Error::Runtime(msg.clone())));
+                            replies.push(Err(Error::WorkerLost(msg.clone())));
                             dead = Some(msg);
                         }
                         Err(e) => {
@@ -1085,29 +1290,11 @@ impl Drop for TcpCluster {
         // Shut the sockets first: a link I/O thread stuck mid-read
         // returns immediately instead of waiting out its socket
         // timeout, and externally-launched workers see EOF at a frame
-        // boundary and exit their serve loops cleanly (in tree mode the
-        // EOF cascades down the relay links). Self-hosted children are
-        // killed and reaped so no zombies outlive the cluster.
-        for c in &self.ctrl {
-            let _ = c.shutdown(std::net::Shutdown::Both);
-        }
-        for link in self.links.drain(..) {
-            match link.io {
-                LinkIo::Inline(stream) => drop(stream),
-                LinkIo::Thread { tx, rx, join } => {
-                    drop(tx);
-                    drop(rx);
-                    if let Some(j) = join {
-                        let _ = j.join();
-                    }
-                }
-                // latched-dead links already dropped their channel ends;
-                // the orphaned I/O thread exits on its own (its socket
-                // read was unblocked by the ctrl shutdown above)
-                LinkIo::Dead(_) => {}
-            }
-        }
-        self.ctrl.clear();
+        // boundary, end the session cleanly and return to accepting
+        // the next leader (in tree mode the EOF cascades down the relay
+        // links). Self-hosted children are killed and reaped so no
+        // zombies outlive the cluster.
+        self.teardown_links();
         kill_procs(&mut self.procs);
     }
 }
@@ -1177,12 +1364,14 @@ impl Cluster for TcpCluster {
         )?;
         let replies = self.broadcast_round()?;
         out.fill(0.0);
-        let inv_m = 1.0 / self.weights.len() as f64;
+        // paper step (*): unweighted average in rank order; under a
+        // degraded quorum it's the average over the surviving solvers
+        let inv = 1.0 / self.n_alive as f64;
         for (i, r) in replies.into_iter().enumerate() {
             match r {
-                Reply::Vec(wi) if wi.len() == out.len() => {
-                    // paper step (*): unweighted average in rank order
-                    ops::axpy(inv_m, &wi, out);
+                None => {}
+                Some(Reply::Vec(wi)) if wi.len() == out.len() => {
+                    ops::axpy(inv, &wi, out);
                 }
                 _ => return Err(self.unexpected(i)),
             }
@@ -1209,24 +1398,31 @@ impl Cluster for TcpCluster {
         // Under the tree, a bare compute frame would be relayed as a
         // broadcast; the For envelope keeps it point-to-point (worker 0
         // heads the first root link, so it never actually relays).
-        let cmd = if self.topology.is_tree() {
-            Cmd::For { rank: 0, inner: Box::new(solve) }
+        let first = (0..self.dead.len())
+            .find(|&r| !self.dead[r])
+            .ok_or_else(|| Error::WorkerLost("no alive workers".into()))?;
+        let cmd = if self.tree_links {
+            Cmd::For { rank: first, inner: Box::new(solve) }
         } else {
             solve
         };
         wire::encode_command(&cmd, &mut self.enc)?;
-        let w1 = match self.fetch_single(0)? {
+        let w1 = match self.fetch_single(first)? {
             Reply::Vec(w) if w.len() == self.d => w,
-            _ => return Err(self.unexpected(0)),
+            _ => return Err(self.unexpected(first)),
         };
         let m = self.m();
         self.comm.count_round(m, self.d);
         Ok(w1)
     }
 
-    fn prox_all(&mut self, targets: &[Vec<f64>], rho: f64) -> Result<Vec<Vec<f64>>> {
+    fn prox_all(
+        &mut self,
+        targets: &[Vec<f64>],
+        rho: f64,
+    ) -> Result<Vec<Option<Vec<f64>>>> {
         assert_eq!(targets.len(), self.m());
-        let replies = if self.topology.is_tree() {
+        let replies = if self.tree_links {
             // One ProxAll frame relays down the tree; each worker picks
             // its own target by rank.
             wire::encode_command(
@@ -1235,19 +1431,25 @@ impl Cluster for TcpCluster {
             )?;
             self.broadcast_round()?
         } else {
-            // Star strategies: per-worker frames, one per link.
-            let mut frames = Vec::with_capacity(self.links.len());
-            for v in targets {
-                wire::encode_command(&Cmd::Prox { v: v.clone(), rho }, &mut self.enc)?;
+            // Star links: per-worker frames, keyed by the rank each
+            // link serves (links cover only the alive ranks).
+            let ranks: Vec<usize> = self.links.iter().map(|l| l.ranks[0]).collect();
+            let mut frames = Vec::with_capacity(ranks.len());
+            for &r in &ranks {
+                wire::encode_command(
+                    &Cmd::Prox { v: targets[r].clone(), rho },
+                    &mut self.enc,
+                )?;
                 frames.push(Arc::new(self.enc.clone()));
             }
             self.dispatch(frames)?
         };
-        let mut out = Vec::with_capacity(replies.len());
+        let mut out: Vec<Option<Vec<f64>>> = (0..self.m()).map(|_| None).collect();
         for (i, r) in replies.into_iter().enumerate() {
             match r {
-                Reply::Vec(w) => out.push(w),
-                _ => return Err(self.unexpected(i)),
+                None => {}
+                Some(Reply::Vec(w)) => out[i] = Some(w),
+                Some(_) => return Err(self.unexpected(i)),
             }
         }
         Ok(out)
@@ -1256,22 +1458,24 @@ impl Cluster for TcpCluster {
     fn local_erms(
         &mut self,
         subsample: Option<(f64, u64)>,
-    ) -> Result<(Vec<Vec<f64>>, Option<Vec<Vec<f64>>>)> {
+    ) -> Result<(Vec<Option<Vec<f64>>>, Option<Vec<Option<Vec<f64>>>>)> {
         wire::encode_command(&Cmd::Erm { subsample }, &mut self.enc)?;
         let replies = self.broadcast_round()?;
-        let mut full = Vec::with_capacity(replies.len());
-        let mut subs: Vec<Vec<f64>> = Vec::new();
+        let m = self.m();
+        let mut full: Vec<Option<Vec<f64>>> = (0..m).map(|_| None).collect();
+        let mut subs: Vec<Option<Vec<f64>>> = (0..m).map(|_| None).collect();
         let mut any_sub = false;
         for (i, r) in replies.into_iter().enumerate() {
             match r {
-                Reply::VecPair(f, s) => {
-                    full.push(f);
+                None => {}
+                Some(Reply::VecPair(f, s)) => {
+                    full[i] = Some(f);
                     if let Some(s) = s {
-                        subs.push(s);
+                        subs[i] = Some(s);
                         any_sub = true;
                     }
                 }
-                _ => return Err(self.unexpected(i)),
+                Some(_) => return Err(self.unexpected(i)),
             }
         }
         Ok((full, if any_sub { Some(subs) } else { None }))
@@ -1293,7 +1497,8 @@ impl Cluster for TcpCluster {
         let mut total = 0.0;
         for (i, r) in replies.into_iter().enumerate() {
             match r {
-                Reply::Scalar(v) => total += self.weights[i] * v,
+                None => {}
+                Some(Reply::Scalar(v)) => total += self.eff_weights[i] * v,
                 _ => return Err(self.unexpected(i)),
             }
         }
@@ -1317,6 +1522,7 @@ impl Cluster for TcpCluster {
         let mut s = self.comm.stats().clone();
         s.wire_bytes = self.wire_bytes;
         s.startup_bytes = self.startup_bytes;
+        s.alive_workers = self.n_alive as u64;
         s
     }
 
@@ -1325,6 +1531,24 @@ impl Cluster for TcpCluster {
         self.wire_bytes = 0;
         // startup_bytes survives: it is a one-time data-distribution
         // cost, not per-window round traffic.
+    }
+
+    fn alive(&self) -> usize {
+        self.n_alive
+    }
+
+    fn recover(&mut self, respawn: bool) -> Result<usize> {
+        self.recover_impl(respawn)
+    }
+
+    fn restore_comm(&mut self, stats: &CommStats) {
+        self.comm.restore(stats);
+        self.wire_bytes = stats.wire_bytes;
+        self.startup_bytes = stats.startup_bytes;
+    }
+
+    fn fault_kill_worker(&mut self, rank: usize) {
+        self.kill_worker(rank);
     }
 }
 

@@ -41,7 +41,7 @@ use super::Cluster;
 use crate::comm::roundchan::{
     round_channel, RecvTimeoutError, RoundReceiver, RoundSender,
 };
-use crate::comm::topology::{ExecTopology, RankGather, TreePlan};
+use crate::comm::topology::{ExecTopology, RankGather, TreePlan, RELAY_CHILD_LOST};
 use crate::comm::wire::{Command as Cmd, Reply};
 use crate::comm::{Collective, CommStats, NetModel};
 use crate::data::{shard_dataset, Dataset, Shard};
@@ -95,6 +95,15 @@ struct TreeWiring {
     joins: Vec<Option<JoinHandle<()>>>,
 }
 
+/// Retained rebuild inputs for [`Cluster::recover`]: the shards workers
+/// were built from (threads are stateless between rounds — respawning
+/// from the same shard reproduces the worker exactly) and the
+/// Gram-build thread count they must keep for bit-parity.
+struct RecoveryCtx {
+    shards: Vec<Shard>,
+    gram_threads: Option<usize>,
+}
+
 /// Leader + m worker threads.
 pub struct ThreadedCluster {
     /// Star wiring: one command/reply channel pair per worker (empty in
@@ -113,6 +122,17 @@ pub struct ThreadedCluster {
     d: usize,
     /// n_i / N weights for exact gradient averaging.
     weights: Vec<f64>,
+    /// Fold weights actually applied: bitwise equal to `weights` while
+    /// every rank is alive; renormalized over survivors (dead ranks
+    /// 0.0) after a `degrade` recovery.
+    eff_weights: Vec<f64>,
+    /// Quarantined ranks (`degrade` policy). All-false fault-free.
+    dead: Vec<bool>,
+    /// Ranks currently participating in collectives.
+    n_alive: usize,
+    /// Everything a post-fault rebuild needs; armed by
+    /// [`Cluster::enable_recovery`], `None` on unsupervised runs.
+    recovery: Option<RecoveryCtx>,
     /// cached mean squared row norm (counted once, like SerialCluster)
     row_sq: Option<f64>,
     // ---- round-persistent broadcast + reply scratch -----------------
@@ -207,6 +227,7 @@ impl ThreadedCluster {
                 .collect();
             (handles, None)
         };
+        let n_alive = weights.len();
         ThreadedCluster {
             handles,
             tree,
@@ -214,6 +235,10 @@ impl ThreadedCluster {
             obj,
             comm: Collective::new(net),
             d,
+            eff_weights: weights.clone(),
+            dead: vec![false; n_alive],
+            n_alive,
+            recovery: None,
             weights,
             row_sq: None,
             bcast_w,
@@ -242,20 +267,23 @@ impl ThreadedCluster {
         self.handles[i]
             .tx
             .send(cmd)
-            .map_err(|_| crate::Error::Runtime(format!("worker {i} channel closed")))
+            .map_err(|_| crate::Error::WorkerLost(format!("worker {i} channel closed")))
     }
 
     /// Receive worker i's reply, mapping worker-side failures, death
     /// *and* silence past the timeout to errors the same way every round
     /// does — a wedged worker surfaces as `Err`, never a deadlock.
+    /// Transport death ([`crate::Error::WorkerLost`]) is the recoverable
+    /// class; a worker-*reported* error stays `Runtime` — the compute
+    /// failed and would fail again on a respawned replacement.
     fn recv_reply(&self, i: usize) -> Result<Reply> {
         match self.handles[i].rx.recv_timeout(self.reply_timeout) {
             Ok(Reply::Err(e)) => Err(crate::Error::Runtime(format!("worker {i}: {e}"))),
             Ok(r) => Ok(r),
             Err(RecvTimeoutError::Disconnected) => {
-                Err(crate::Error::Runtime(format!("worker {i} died mid-round")))
+                Err(crate::Error::WorkerLost(format!("worker {i} died mid-round")))
             }
-            Err(RecvTimeoutError::Timeout) => Err(crate::Error::Runtime(format!(
+            Err(RecvTimeoutError::Timeout) => Err(crate::Error::WorkerLost(format!(
                 "worker {i} wedged: no reply within {:?}",
                 self.reply_timeout
             ))),
@@ -309,14 +337,14 @@ impl ThreadedCluster {
             let mut latch: Option<String> = None;
             for &rank in &l.ranks {
                 let res = match &dead {
-                    Some(msg) => Err(crate::Error::Runtime(msg.clone())),
+                    Some(msg) => Err(crate::Error::WorkerLost(msg.clone())),
                     None => match l.rx.recv_timeout(timeout) {
                         Ok(rep) => Ok(rep),
                         Err(RecvTimeoutError::Disconnected) => {
                             let msg =
                                 format!("worker {} died mid-round", l.ranks[0]);
                             dead = Some(msg.clone());
-                            Err(crate::Error::Runtime(msg))
+                            Err(crate::Error::WorkerLost(msg))
                         }
                         Err(RecvTimeoutError::Timeout) => {
                             // A wedged (alive) subtree may still deliver
@@ -329,7 +357,7 @@ impl ThreadedCluster {
                             );
                             dead = Some(msg.clone());
                             latch = Some(msg.clone());
-                            Err(crate::Error::Runtime(msg))
+                            Err(crate::Error::WorkerLost(msg))
                         }
                     },
                 };
@@ -357,22 +385,27 @@ impl ThreadedCluster {
                 crate::Error::Runtime(format!("no tree link holds worker {rank}"))
             })?;
         if let Some(msg) = &link.dead {
-            return Err(crate::Error::Runtime(msg.clone()));
+            return Err(crate::Error::WorkerLost(msg.clone()));
         }
         link.tx
             .send(Cmd::For { rank, inner: Box::new(cmd) })
             .map_err(|_| {
-                crate::Error::Runtime(format!("worker {} died mid-round", link.ranks[0]))
+                crate::Error::WorkerLost(format!(
+                    "worker {} died mid-round",
+                    link.ranks[0]
+                ))
             })?;
         match link.rx.recv_timeout(timeout) {
             Ok(Reply::Err(e)) => {
                 Err(crate::Error::Runtime(format!("worker {rank}: {e}")))
             }
             Ok(r) => Ok(r),
-            Err(RecvTimeoutError::Disconnected) => Err(crate::Error::Runtime(format!(
-                "worker {} died mid-round",
-                link.ranks[0]
-            ))),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(crate::Error::WorkerLost(format!(
+                    "worker {} died mid-round",
+                    link.ranks[0]
+                )))
+            }
             Err(RecvTimeoutError::Timeout) => {
                 // see tree_round: a late reply must not leak into a
                 // future round — latch the link dead.
@@ -381,7 +414,7 @@ impl ThreadedCluster {
                     link.ranks[0]
                 );
                 link.dead = Some(msg.clone());
-                Err(crate::Error::Runtime(msg))
+                Err(crate::Error::WorkerLost(msg))
             }
         }
     }
@@ -396,8 +429,8 @@ impl ThreadedCluster {
         for (i, r) in replies.into_iter().enumerate() {
             match r {
                 Reply::VecScalar(gi, li) if gi.len() == g.len() => {
-                    ops::axpy(self.weights[i], &gi, g);
-                    loss += self.weights[i] * li;
+                    ops::axpy(self.eff_weights[i], &gi, g);
+                    loss += self.eff_weights[i] * li;
                 }
                 _ => return Err(self.unexpected(i)),
             }
@@ -411,7 +444,7 @@ impl ThreadedCluster {
         let mut loss = 0.0;
         for (i, r) in replies.into_iter().enumerate() {
             match r {
-                Reply::Scalar(l) => loss += self.weights[i] * l,
+                Reply::Scalar(l) => loss += self.eff_weights[i] * l,
                 _ => return Err(self.unexpected(i)),
             }
         }
@@ -432,6 +465,9 @@ impl ThreadedCluster {
         let mut sent = 0;
         let mut first_err: Option<crate::Error> = None;
         for i in 0..self.handles.len() {
+            if self.dead[i] {
+                continue;
+            }
             let out = std::mem::take(&mut self.reply_pool[i]);
             match self.send_cmd(i, Cmd::GradLoss { w: self.bcast_w.clone(), out }) {
                 Ok(()) => sent += 1,
@@ -443,12 +479,20 @@ impl ThreadedCluster {
         }
         g.fill(0.0);
         let mut loss = 0.0;
-        for i in 0..sent {
+        let mut drained = 0;
+        for i in 0..self.handles.len() {
+            if drained == sent {
+                break;
+            }
+            if self.dead[i] {
+                continue;
+            }
+            drained += 1;
             match self.recv_reply(i) {
                 Ok(Reply::VecScalar(gi, li)) => {
                     if first_err.is_none() {
-                        ops::axpy(self.weights[i], &gi, g);
-                        loss += self.weights[i] * li;
+                        ops::axpy(self.eff_weights[i], &gi, g);
+                        loss += self.eff_weights[i] * li;
                     }
                     self.reply_pool[i] = gi;
                 }
@@ -486,6 +530,9 @@ impl ThreadedCluster {
         let mut sent = 0;
         let mut first_err: Option<crate::Error> = None;
         for i in 0..self.handles.len() {
+            if self.dead[i] {
+                continue;
+            }
             match self.send_cmd(i, Cmd::Loss { w: self.bcast_w.clone() }) {
                 Ok(()) => sent += 1,
                 Err(e) => {
@@ -495,11 +542,19 @@ impl ThreadedCluster {
             }
         }
         let mut loss = 0.0;
-        for i in 0..sent {
+        let mut drained = 0;
+        for i in 0..self.handles.len() {
+            if drained == sent {
+                break;
+            }
+            if self.dead[i] {
+                continue;
+            }
+            drained += 1;
             match self.recv_reply(i) {
                 Ok(Reply::Scalar(l)) => {
                     if first_err.is_none() {
-                        loss += self.weights[i] * l;
+                        loss += self.eff_weights[i] * l;
                     }
                 }
                 Ok(other) => {
@@ -660,7 +715,7 @@ fn spawn_tree_worker(
             let mut worker = crate::worker::Worker::new(id, shard, obj);
             worker.set_gram_threads(gram_threads);
             let child_died = |rank: usize| {
-                Reply::Err(format!("relay child worker {rank} died mid-round"))
+                Reply::Err(format!("{RELAY_CHILD_LOST} {rank} died mid-round"))
             };
             while let Ok(cmd) = parent_rx.recv() {
                 if kill.load(Ordering::Relaxed) {
@@ -723,11 +778,13 @@ fn spawn_tree_worker(
         .expect("spawn tree worker thread")
 }
 
-impl Drop for ThreadedCluster {
-    fn drop(&mut self) {
-        // Dropping the channel endpoints disconnects every worker: a
-        // worker blocked in recv gets Err and exits; one mid-compute
-        // fails its next reply send and exits.
+impl ThreadedCluster {
+    /// Disconnect and join every worker thread (star and tree wiring).
+    /// Dropping the channel endpoints disconnects every worker: a
+    /// worker blocked in recv gets Err and exits; one mid-compute fails
+    /// its next reply send and exits. Shared by [`Drop`] and the
+    /// full-rebuild path of [`Cluster::recover`].
+    fn teardown_wiring(&mut self) {
         for h in self.handles.drain(..) {
             let WorkerHandle { tx, rx, join } = h;
             drop(tx);
@@ -748,6 +805,12 @@ impl Drop for ThreadedCluster {
                 }
             }
         }
+    }
+}
+
+impl Drop for ThreadedCluster {
+    fn drop(&mut self) {
+        self.teardown_wiring();
     }
 }
 
@@ -814,7 +877,7 @@ impl Cluster for ThreadedCluster {
             };
             let replies = self.tree_round(&cmd)?;
             out.fill(0.0);
-            let inv_m = 1.0 / self.weights.len() as f64;
+            let inv_m = 1.0 / self.n_alive as f64;
             for (i, r) in replies.into_iter().enumerate() {
                 match r {
                     Reply::Vec(wi) if wi.len() == out.len() => {
@@ -833,6 +896,9 @@ impl Cluster for ThreadedCluster {
         let mut sent = 0;
         let mut first_err: Option<crate::Error> = None;
         for i in 0..self.handles.len() {
+            if self.dead[i] {
+                continue;
+            }
             let buf = std::mem::take(&mut self.reply_pool[i]);
             let cmd = Cmd::DaneSolve {
                 w_prev: self.bcast_w.clone(),
@@ -850,8 +916,18 @@ impl Cluster for ThreadedCluster {
             }
         }
         out.fill(0.0);
-        let inv_m = 1.0 / self.handles.len() as f64;
-        for i in 0..sent {
+        // paper step (*) degrades to the unweighted average over the
+        // surviving solvers
+        let inv_m = 1.0 / self.n_alive as f64;
+        let mut drained = 0;
+        for i in 0..self.handles.len() {
+            if drained == sent {
+                break;
+            }
+            if self.dead[i] {
+                continue;
+            }
+            drained += 1;
             match self.recv_reply(i) {
                 Ok(Reply::Vec(wi)) => {
                     if first_err.is_none() {
@@ -906,13 +982,17 @@ impl Cluster for ThreadedCluster {
             self.comm.count_round(m, self.d);
             return Ok(w1);
         }
-        // Only rank 0 computes; everyone else idles this round. Not a
-        // steady-state path, so the reply vector is freshly allocated by
-        // the worker rather than pooled.
+        // Only the first alive rank computes (rank 0 fault-free);
+        // everyone else idles this round. Not a steady-state path, so
+        // the reply vector is freshly allocated by the worker rather
+        // than pooled.
+        let first = (0..self.dead.len())
+            .find(|&r| !self.dead[r])
+            .ok_or_else(|| crate::Error::WorkerLost("no alive workers".into()))?;
         load_bcast(&mut self.bcast_w, w_prev);
         load_bcast(&mut self.bcast_g, g);
         self.send_cmd(
-            0,
+            first,
             Cmd::DaneSolve {
                 w_prev: self.bcast_w.clone(),
                 g: self.bcast_g.clone(),
@@ -921,16 +1001,20 @@ impl Cluster for ThreadedCluster {
                 out: Vec::new(),
             },
         )?;
-        let w1 = match self.recv_reply(0)? {
+        let w1 = match self.recv_reply(first)? {
             Reply::Vec(w) => w,
-            _ => return Err(self.unexpected(0)),
+            _ => return Err(self.unexpected(first)),
         };
         let m = self.m();
         self.comm.count_round(m, self.d);
         Ok(w1)
     }
 
-    fn prox_all(&mut self, targets: &[Vec<f64>], rho: f64) -> Result<Vec<Vec<f64>>> {
+    fn prox_all(
+        &mut self,
+        targets: &[Vec<f64>],
+        rho: f64,
+    ) -> Result<Vec<Option<Vec<f64>>>> {
         assert_eq!(targets.len(), self.m());
         if self.tree.is_some() {
             // One ProxAll frame relays down the tree; each worker picks
@@ -941,7 +1025,7 @@ impl Cluster for ThreadedCluster {
             let mut out = Vec::with_capacity(replies.len());
             for (i, r) in replies.into_iter().enumerate() {
                 match r {
-                    Reply::Vec(w) => out.push(w),
+                    Reply::Vec(w) => out.push(Some(w)),
                     _ => return Err(self.unexpected(i)),
                 }
             }
@@ -950,6 +1034,9 @@ impl Cluster for ThreadedCluster {
         let mut sent = 0;
         let mut first_err: Option<crate::Error> = None;
         for (i, v) in targets.iter().enumerate() {
+            if self.dead[i] {
+                continue;
+            }
             match self.send_cmd(i, Cmd::Prox { v: v.clone(), rho }) {
                 Ok(()) => sent += 1,
                 Err(e) => {
@@ -958,12 +1045,21 @@ impl Cluster for ThreadedCluster {
                 }
             }
         }
-        let mut out = Vec::with_capacity(self.m());
-        for i in 0..sent {
+        // slot by rank: dead ranks stay None
+        let mut out: Vec<Option<Vec<f64>>> = (0..self.m()).map(|_| None).collect();
+        let mut drained = 0;
+        for i in 0..self.handles.len() {
+            if drained == sent {
+                break;
+            }
+            if self.dead[i] {
+                continue;
+            }
+            drained += 1;
             match self.recv_reply(i) {
                 Ok(Reply::Vec(w)) => {
                     if first_err.is_none() {
-                        out.push(w);
+                        out[i] = Some(w);
                     }
                 }
                 Ok(other) => {
@@ -988,18 +1084,18 @@ impl Cluster for ThreadedCluster {
     fn local_erms(
         &mut self,
         subsample: Option<(f64, u64)>,
-    ) -> Result<(Vec<Vec<f64>>, Option<Vec<Vec<f64>>>)> {
+    ) -> Result<(Vec<Option<Vec<f64>>>, Option<Vec<Option<Vec<f64>>>>)> {
         if self.tree.is_some() {
             let replies = self.tree_round(&Cmd::Erm { subsample })?;
             let mut full = Vec::with_capacity(replies.len());
-            let mut subs: Vec<Vec<f64>> = Vec::new();
+            let mut subs: Vec<Option<Vec<f64>>> = Vec::new();
             let mut any_sub = false;
             for (i, r) in replies.into_iter().enumerate() {
                 match r {
                     Reply::VecPair(f, s) => {
-                        full.push(f);
+                        full.push(Some(f));
                         if let Some(s) = s {
-                            subs.push(s);
+                            subs.push(Some(s));
                             any_sub = true;
                         }
                     }
@@ -1011,6 +1107,9 @@ impl Cluster for ThreadedCluster {
         let mut sent = 0;
         let mut first_err: Option<crate::Error> = None;
         for i in 0..self.handles.len() {
+            if self.dead[i] {
+                continue;
+            }
             match self.send_cmd(i, Cmd::Erm { subsample }) {
                 Ok(()) => sent += 1,
                 Err(e) => {
@@ -1019,16 +1118,28 @@ impl Cluster for ThreadedCluster {
                 }
             }
         }
-        let mut full = Vec::with_capacity(self.m());
-        let mut subs: Vec<Vec<f64>> = Vec::new();
+        let mut full: Vec<Option<Vec<f64>>> =
+            (0..self.m()).map(|_| None).collect();
+        let mut subs: Vec<Option<Vec<f64>>> = Vec::new();
         let mut any_sub = false;
-        for i in 0..sent {
+        let mut drained = 0;
+        for i in 0..self.handles.len() {
+            if drained == sent {
+                break;
+            }
+            if self.dead[i] {
+                continue;
+            }
+            drained += 1;
             match self.recv_reply(i) {
                 Ok(Reply::VecPair(f, s)) => {
                     if first_err.is_none() {
-                        full.push(f);
+                        full[i] = Some(f);
                         if let Some(s) = s {
-                            subs.push(s);
+                            while subs.len() < i {
+                                subs.push(None);
+                            }
+                            subs.push(Some(s));
                             any_sub = true;
                         }
                     }
@@ -1049,6 +1160,11 @@ impl Cluster for ThreadedCluster {
         if let Some(e) = first_err {
             return Err(e);
         }
+        if any_sub {
+            while subs.len() < self.m() {
+                subs.push(None);
+            }
+        }
         Ok((full, if any_sub { Some(subs) } else { None }))
     }
 
@@ -1068,7 +1184,7 @@ impl Cluster for ThreadedCluster {
             let mut total = 0.0;
             for (i, r) in replies.into_iter().enumerate() {
                 match r {
-                    Reply::Scalar(v) => total += self.weights[i] * v,
+                    Reply::Scalar(v) => total += self.eff_weights[i] * v,
                     _ => return Err(self.unexpected(i)),
                 }
             }
@@ -1080,6 +1196,9 @@ impl Cluster for ThreadedCluster {
         let mut sent = 0;
         let mut first_err: Option<crate::Error> = None;
         for i in 0..self.handles.len() {
+            if self.dead[i] {
+                continue;
+            }
             match self.send_cmd(i, Cmd::RowSq) {
                 Ok(()) => sent += 1,
                 Err(e) => {
@@ -1089,11 +1208,19 @@ impl Cluster for ThreadedCluster {
             }
         }
         let mut total = 0.0;
-        for i in 0..sent {
+        let mut drained = 0;
+        for i in 0..self.handles.len() {
+            if drained == sent {
+                break;
+            }
+            if self.dead[i] {
+                continue;
+            }
+            drained += 1;
             match self.recv_reply(i) {
                 Ok(Reply::Scalar(v)) => {
                     if first_err.is_none() {
-                        total += self.weights[i] * v;
+                        total += self.eff_weights[i] * v;
                     }
                 }
                 Ok(other) => {
@@ -1127,11 +1254,113 @@ impl Cluster for ThreadedCluster {
     }
 
     fn comm_stats(&self) -> CommStats {
-        self.comm.stats().clone()
+        let mut s = self.comm.stats().clone();
+        s.alive_workers = self.n_alive as u64;
+        s
     }
 
     fn reset_comm(&mut self) {
         self.comm.reset();
+    }
+
+    fn alive(&self) -> usize {
+        self.n_alive
+    }
+
+    fn restore_comm(&mut self, stats: &CommStats) {
+        self.comm.restore(stats);
+    }
+
+    fn fault_kill_worker(&mut self, rank: usize) {
+        self.kill_worker(rank);
+    }
+
+    fn enable_recovery(
+        &mut self,
+        ds: &Dataset,
+        shard_seed: u64,
+        gram_threads: Option<usize>,
+    ) {
+        // Re-sharding with the same seed reproduces the construction
+        // shards exactly; workers are stateless between rounds, so a
+        // respawn from the retained shard is indistinguishable from the
+        // original thread.
+        self.recovery = Some(RecoveryCtx {
+            shards: shard_dataset(ds, self.weights.len(), shard_seed),
+            gram_threads,
+        });
+    }
+
+    /// Full-rebuild recovery: tear the whole round plane down, respawn
+    /// every (non-quarantined) worker thread from the retained shards,
+    /// and rewire as a **star** regardless of the original topology —
+    /// star links work for every collective, and only faulted runs ever
+    /// rebuild, so fault-free topology traces are untouched. Under
+    /// `respawn` (`respawn == true`) everyone comes back; under
+    /// `degrade` the kill switches flagged since the last rebuild are
+    /// quarantined first and fold weights renormalize over survivors.
+    fn recover(&mut self, respawn: bool) -> Result<usize> {
+        let (shards, gram_threads) = match &self.recovery {
+            Some(rec) => (rec.shards.clone(), rec.gram_threads),
+            None => {
+                return Err(crate::Error::Runtime(
+                    "recovery not enabled on this threaded cluster".into(),
+                ))
+            }
+        };
+        let m = self.weights.len();
+        if !respawn {
+            for r in 0..m {
+                if self.kills[r].load(Ordering::Relaxed) {
+                    self.dead[r] = true;
+                }
+            }
+        }
+        self.teardown_wiring();
+        self.kills =
+            (0..m).map(|_| Arc::new(AtomicBool::new(false))).collect();
+        self.handles = shards
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| {
+                // quarantined ranks get a thread too (uniform rank
+                // indexing); it idles until Drop and never sees a
+                // command
+                spawn_worker(
+                    id,
+                    shard,
+                    self.obj.clone(),
+                    gram_threads,
+                    self.kills[id].clone(),
+                )
+            })
+            .collect();
+        self.tree = None;
+        self.reply_pool = vec![vec![0.0; self.d]; m];
+        self.bcast_w = Arc::new(vec![0.0; self.d]);
+        self.bcast_g = Arc::new(vec![0.0; self.d]);
+        self.n_alive = self.dead.iter().filter(|&&dd| !dd).count();
+        if self.dead.iter().any(|&dd| dd) {
+            let wsum: f64 = (0..m)
+                .filter(|&r| !self.dead[r])
+                .map(|r| self.weights[r])
+                .sum();
+            self.eff_weights = (0..m)
+                .map(|r| {
+                    if self.dead[r] {
+                        0.0
+                    } else {
+                        self.weights[r] / wsum
+                    }
+                })
+                .collect();
+            // weighted mean over a different worker set: recompute on
+            // next use
+            self.row_sq = None;
+        } else {
+            self.eff_weights = self.weights.clone();
+        }
+        Ok(self.n_alive)
     }
 }
 
@@ -1349,6 +1578,94 @@ mod tests {
         let (ds, obj, _) = fixture();
         let cluster = tree_cluster(&ds, obj, 8);
         drop(cluster); // must not hang or panic
+    }
+
+    #[test]
+    fn respawn_recovery_matches_fresh_cluster_bitwise() {
+        let (ds, obj, _) = fixture();
+        let mut c = ThreadedCluster::new(&ds, obj.clone(), 4, 3);
+        c.enable_recovery(&ds, 3, None);
+        let w = vec![0.1; 12];
+        let (g0, l0) = c.grad_and_loss(&w).unwrap();
+        c.kill_worker(2);
+        assert!(matches!(
+            c.grad_and_loss(&w).unwrap_err(),
+            crate::Error::WorkerLost(_)
+        ));
+        assert_eq!(c.recover(true).unwrap(), 4);
+        assert_eq!(c.alive(), 4);
+        let (g1, l1) = c.grad_and_loss(&w).unwrap();
+        assert_eq!(g0, g1, "respawned cluster must reproduce the gradient");
+        assert_eq!(l0, l1);
+        assert_eq!(c.comm_stats().alive_workers, 4);
+    }
+
+    #[test]
+    fn tree_recovery_rebuilds_as_star() {
+        let (ds, obj, _) = fixture();
+        let mut star = ThreadedCluster::new(&ds, obj.clone(), 4, 3);
+        let mut tree = tree_cluster(&ds, obj, 4);
+        tree.enable_recovery(&ds, 3, None);
+        let w = vec![0.1; 12];
+        let expect = star.grad_and_loss(&w).unwrap();
+        // kill the interior relay (rank 0 relays rank 2 at m=4)
+        tree.kill_worker(0);
+        assert!(tree.grad_and_loss(&w).is_err());
+        assert_eq!(tree.recover(true).unwrap(), 4);
+        let got = tree.grad_and_loss(&w).unwrap();
+        assert_eq!(expect.0, got.0);
+        assert_eq!(expect.1, got.1);
+    }
+
+    #[test]
+    fn degrade_recovery_quarantines_and_renormalizes() {
+        let (ds, obj, _) = fixture();
+        let mut c = ThreadedCluster::new(&ds, obj.clone(), 4, 3);
+        c.enable_recovery(&ds, 3, None);
+        let w = vec![0.1; 12];
+        c.kill_worker(1);
+        assert!(c.grad_and_loss(&w).is_err());
+        assert_eq!(c.recover(false).unwrap(), 3);
+        assert_eq!(c.alive(), 3);
+        assert_eq!(c.comm_stats().alive_workers, 3);
+
+        // reference: a serial cluster over the surviving shards — its
+        // n_i/N' weights are the renormalized fold up to rounding
+        let shards = crate::data::shard_dataset(&ds, 4, 3);
+        let survivors: Vec<_> = shards
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| *i != 1)
+            .map(|(_, s)| s)
+            .collect();
+        let mut reference =
+            SerialCluster::from_shards(survivors, obj, NetModel::free());
+        let (g, l) = c.grad_and_loss(&w).unwrap();
+        let (gr, lr) = reference.grad_and_loss(&w).unwrap();
+        assert!((l - lr).abs() < 1e-12, "{l} vs {lr}");
+        for j in 0..12 {
+            assert!((g[j] - gr[j]).abs() < 1e-12);
+        }
+
+        // per-worker collectives mark the quarantined rank None
+        let targets: Vec<Vec<f64>> = (0..4).map(|_| vec![0.1; 12]).collect();
+        let prox = c.prox_all(&targets, 0.3).unwrap();
+        assert!(prox[1].is_none());
+        assert_eq!(prox.iter().filter(|p| p.is_some()).count(), 3);
+        let (erms, _) = c.local_erms(None).unwrap();
+        assert!(erms[1].is_none());
+
+        // dane averages over survivors only
+        let (gd, _) = c.eval_grad_loss(&w).unwrap();
+        assert!(c.dane_round(&w, &gd, 1.0, 0.01).is_ok());
+    }
+
+    #[test]
+    fn recover_without_arming_is_an_error() {
+        let (ds, obj, _) = fixture();
+        let mut c = ThreadedCluster::new(&ds, obj, 4, 3);
+        let err = c.recover(true).unwrap_err().to_string();
+        assert!(err.contains("recovery not enabled"), "{err}");
     }
 
     #[test]

@@ -28,6 +28,18 @@ pub enum Error {
 
     /// Errors bubbled up from the xla/PJRT bridge.
     Xla(String),
+
+    /// A worker became unreachable mid-run: dead socket, wedged link,
+    /// disconnected channel. The one *recoverable* failure class — a
+    /// `FaultPolicy` supervisor may respawn the worker or degrade the
+    /// quorum and retry, where every other variant (including a
+    /// worker-side compute failure reported over a healthy link) stays
+    /// fatal under every policy.
+    WorkerLost(String),
+
+    /// An algorithm run failed, carrying the iterate and trace recorded
+    /// before the failure so callers can emit partial artifacts.
+    Algo(Box<crate::coordinator::AlgoError>),
 }
 
 impl fmt::Display for Error {
@@ -40,6 +52,11 @@ impl fmt::Display for Error {
             Error::NoConvergence(s) => write!(f, "did not converge: {s}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(s) => write!(f, "xla error: {s}"),
+            Error::WorkerLost(s) => write!(f, "worker lost: {s}"),
+            // Renders exactly as the old stringly flattening did
+            // ("runtime error: <algo> failed after ..."), so the CLI's
+            // error output is byte-identical.
+            Error::Algo(e) => write!(f, "runtime error: {e}"),
         }
     }
 }
@@ -48,6 +65,7 @@ impl std::error::Error for Error {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             Error::Io(e) => Some(e),
+            Error::Algo(e) => Some(e.as_ref()),
             _ => None,
         }
     }
@@ -85,6 +103,13 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn worker_lost_displays_the_link() {
+        let e = Error::WorkerLost("tcp: worker 2: wedged".into());
+        assert!(e.to_string().contains("worker lost"));
+        assert!(e.to_string().contains("worker 2"));
     }
 
     #[test]

@@ -21,7 +21,7 @@
 
 use dane::comm::ExecTopology;
 use dane::config::{EngineKind, ExperimentConfig};
-use dane::coordinator::driver::run_experiment;
+use dane::coordinator::driver::{run_experiment_with_opts, RunOpts};
 use dane::harness;
 use dane::metrics::emit;
 use std::path::PathBuf;
@@ -32,8 +32,9 @@ dane — Communication-efficient distributed optimization (DANE, ICML 2014)
 USAGE:
     dane run --config <exp.json> [--csv <out.csv>] [--quiet]
              [--engine serial|threaded|tcp] [--topology star|star-seq|tree]
-             [--data-by-ref]
-    dane worker --listen <addr>          # serve one shard over TCP
+             [--data-by-ref] [--checkpoint <ckpt> [--ckpt-every <K>]]
+             [--resume <ckpt>]
+    dane worker --listen <addr> [--once] # serve shards over TCP
     dane quickstart [--engine serial|threaded|tcp] [--topology star|star-seq|tree]
                     [--sparse]
     dane fig2   [--scale <K>] [--out <dir>] [--engine ...] [--topology ...]
@@ -60,7 +61,13 @@ shard rows — O(m) startup bytes instead of O(n*d), with workers
 streaming their own rows from local disk; traces stay bit-identical to
 by-value runs. `quickstart --sparse` smoke-runs the high-dimensional
 sparse path (matrix-free local solves, no dense Gram). Worker failures
-and wedged workers surface as `error: ...` + non-zero exit.";
+and wedged workers surface as `error: ...` + non-zero exit; with
+--csv the partial trace is still written, ending in a `# truncated:`
+trailer. The config's \"fault\" policy (fail_fast | respawn | degrade)
+decides whether a run survives a dead worker; `--checkpoint` writes
+resumable state every K rounds and `--resume` continues a crashed run
+bit-exactly. `worker --listen` serves leaders in a loop (redial after
+a fault re-initializes it); `--once` exits after the first session.";
 
 /// Tiny flag parser: --key value pairs after the subcommand.
 struct Args {
@@ -181,10 +188,10 @@ fn run(argv: &[String]) -> Result<(), String> {
     let args = Args::parse(&argv[1..])?;
     let (value_flags, bool_flags): (&[&str], &[&str]) = match cmd.as_str() {
         "run" => (
-            &["config", "csv", "engine", "topology"],
+            &["config", "csv", "engine", "topology", "checkpoint", "ckpt-every", "resume"],
             &["quiet", "data-by-ref"],
         ),
-        "worker" => (&["listen"], &[]),
+        "worker" => (&["listen"], &["once"]),
         "fig2" | "fig3" | "fig4" => (&["scale", "out", "engine", "topology"], &[]),
         "thm1" => (&["reps"], &[]),
         "quickstart" => (&["engine", "topology"], &["sparse"]),
@@ -212,7 +219,30 @@ fn run(argv: &[String]) -> Result<(), String> {
             if args.has("data-by-ref") {
                 cfg.data_by_ref = true;
             }
-            let res = run_experiment(&cfg).map_err(e2s)?;
+            let opts = RunOpts {
+                checkpoint: args.get("checkpoint").map(PathBuf::from),
+                ckpt_every: args.get_positive("ckpt-every", 1)?,
+                resume: args.get("resume").map(PathBuf::from),
+            };
+            let res = match run_experiment_with_opts(&cfg, &opts) {
+                Ok(res) => res,
+                // A failed run still writes what it recorded: the partial
+                // trace lands in --csv with a `# truncated: <cause>`
+                // trailer before the error propagates.
+                Err(dane::Error::Algo(ae)) => {
+                    if let Some(path) = args.get("csv") {
+                        emit::write_csv_file_truncated(
+                            &ae.trace,
+                            &PathBuf::from(path),
+                            &ae.error.to_string(),
+                        )
+                        .map_err(e2s)?;
+                        eprintln!("wrote partial trace to {path}");
+                    }
+                    return Err(ae.to_string());
+                }
+                Err(e) => return Err(e2s(e)),
+            };
             if let Some(path) = args.get("csv") {
                 emit::write_csv_file(&res.trace, &PathBuf::from(path)).map_err(e2s)?;
                 println!("wrote {path}");
@@ -230,7 +260,7 @@ fn run(argv: &[String]) -> Result<(), String> {
             let addr = args
                 .get("listen")
                 .ok_or("worker requires --listen <addr>")?;
-            dane::worker::serve::serve_addr(addr).map_err(e2s)
+            dane::worker::serve::serve_addr(addr, args.has("once")).map_err(e2s)
         }
         "quickstart" => {
             if args.has("sparse") {

@@ -6,20 +6,32 @@ use crate::Result;
 use std::io::Write;
 
 /// CSV header matching [`super::TraceRow`] field order. The
-/// run-specific columns sit last: `elapsed_seconds` (wallclock),
-/// `wire_bytes` (measured socket bytes, 0 off the TCP engine) and
-/// `startup_bytes` (one-time bring-up bytes, 0 off the TCP engine) —
-/// so cross-engine trace comparison is "all columns but the last
-/// three" (`cut -d, -f1-8`).
-pub const CSV_HEADER: &str = "round,objective,suboptimality,grad_norm,test_loss,comm_rounds,comm_bytes,comm_modeled_seconds,elapsed_seconds,wire_bytes,startup_bytes";
+/// run-specific columns: `elapsed_seconds` (col 9, wallclock — the one
+/// column excluded from bit-exact comparisons), `wire_bytes` (col 10,
+/// measured socket bytes, 0 off the TCP engine), `startup_bytes` (col
+/// 11, one-time bring-up bytes, 0 off the TCP engine), `alive_workers`
+/// (col 12) and `recoveries` (col 13, both fault-policy observability;
+/// `machines` resp. 0 on fault-free runs).
+pub const CSV_HEADER: &str = "round,objective,suboptimality,grad_norm,test_loss,comm_rounds,comm_bytes,comm_modeled_seconds,elapsed_seconds,wire_bytes,startup_bytes,alive_workers,recoveries";
 
 /// Write a trace as CSV.
-pub fn write_csv<W: Write>(trace: &Trace, mut w: W) -> Result<()> {
+pub fn write_csv<W: Write>(trace: &Trace, w: W) -> Result<()> {
+    write_csv_impl(trace, w, None)
+}
+
+/// Write a trace as CSV with a `# truncated: <cause>` trailer line —
+/// the artifact a failed run leaves behind so partial progress is never
+/// lost (the `#` prefix keeps naive CSV readers from choking).
+pub fn write_csv_truncated<W: Write>(trace: &Trace, w: W, cause: &str) -> Result<()> {
+    write_csv_impl(trace, w, Some(cause))
+}
+
+fn write_csv_impl<W: Write>(trace: &Trace, mut w: W, truncated: Option<&str>) -> Result<()> {
     writeln!(w, "{CSV_HEADER}")?;
     for r in &trace.rows {
         writeln!(
             w,
-            "{},{:.17e},{},{},{},{},{},{:.6e},{:.6},{},{}",
+            "{},{:.17e},{},{},{},{},{},{:.6e},{:.6},{},{},{},{}",
             r.round,
             r.objective,
             opt(r.suboptimality),
@@ -31,7 +43,13 @@ pub fn write_csv<W: Write>(trace: &Trace, mut w: W) -> Result<()> {
             r.elapsed_seconds,
             r.wire_bytes,
             r.startup_bytes,
+            r.alive_workers,
+            r.recoveries,
         )?;
+    }
+    if let Some(cause) = truncated {
+        // keep the trailer single-line whatever the cause contains
+        writeln!(w, "# truncated: {}", cause.replace('\n', " "))?;
     }
     Ok(())
 }
@@ -47,6 +65,20 @@ pub fn write_csv_file(trace: &Trace, path: &std::path::Path) -> Result<()> {
     }
     let f = std::fs::File::create(path)?;
     write_csv(trace, std::io::BufWriter::new(f))
+}
+
+/// [`write_csv_file`] for a run that died mid-way: the partial trace
+/// plus a `# truncated: <cause>` trailer.
+pub fn write_csv_file_truncated(
+    trace: &Trace,
+    path: &std::path::Path,
+    cause: &str,
+) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let f = std::fs::File::create(path)?;
+    write_csv_truncated(trace, std::io::BufWriter::new(f), cause)
 }
 
 /// Compact JSON summary of a run (EXPERIMENTS.md fodder).
@@ -70,6 +102,11 @@ pub fn summary_json(name: &str, trace: &Trace) -> Json {
             num_or_null(last.map(|r| r.comm_modeled_seconds)),
         ),
         ("elapsed_seconds", num_or_null(last.map(|r| r.elapsed_seconds))),
+        (
+            "alive_workers",
+            num_or_null(last.map(|r| r.alive_workers as f64)),
+        ),
+        ("recoveries", num_or_null(last.map(|r| r.recoveries as f64))),
     ])
 }
 
@@ -86,6 +123,8 @@ mod tests {
             modeled_seconds: 1e-3,
             wire_bytes: 96,
             startup_bytes: 4096,
+            alive_workers: 4,
+            recoveries: 1,
         };
         t.push(0, 1.5, Some(0.5), None, Some(0.7), &comm, 0.01);
         t
@@ -114,6 +153,22 @@ mod tests {
         assert_eq!(j.get("startup_bytes").unwrap().as_f64(), Some(4096.0));
         let s = j.get("final_suboptimality").unwrap().as_f64().unwrap();
         assert!((s - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fault_columns_and_truncation_trailer() {
+        let mut buf = Vec::new();
+        write_csv(&sample(), &mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        let row = s.lines().nth(1).unwrap();
+        assert!(row.ends_with(",4,1"), "alive/recoveries trail the row: {row}");
+
+        let mut buf = Vec::new();
+        write_csv_truncated(&sample(), &mut buf, "worker lost: tcp: worker 2")
+            .unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        let last = s.lines().last().unwrap();
+        assert_eq!(last, "# truncated: worker lost: tcp: worker 2");
     }
 
     #[test]

@@ -31,10 +31,17 @@ pub struct TraceRow {
     /// Peers and their acks; 0 on in-memory engines). Constant across a
     /// run's rows; O(n·d) for by-value Init, O(m) for `--data-by-ref`.
     pub startup_bytes: u64,
+    /// Workers alive (answering collectives) when the row was recorded.
+    /// Equals `machines` on fault-free runs and under `respawn`; drops
+    /// when a `degrade` policy quarantines dead ranks.
+    pub alive_workers: u64,
+    /// Cumulative successful fault recoveries (respawns/redials or
+    /// quorum degradations) up to this row. 0 on fault-free runs.
+    pub recoveries: u64,
 }
 
 /// A full run's trace.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Trace {
     pub rows: Vec<TraceRow>,
 }
@@ -67,6 +74,8 @@ impl Trace {
             elapsed_seconds,
             wire_bytes: comm.wire_bytes,
             startup_bytes: comm.startup_bytes,
+            alive_workers: comm.alive_workers,
+            recoveries: comm.recoveries,
         });
     }
 

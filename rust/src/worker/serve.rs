@@ -10,8 +10,10 @@
 //! [`serve_addr`] is the process entry point behind `dane worker
 //! --listen <addr>`: bind, announce the bound address on stdout
 //! (`listening on <addr>` — the self-hosted leader parses this line to
-//! learn OS-assigned ports), accept one leader connection, answer frames
-//! until the leader hangs up. The worker learns everything else — shard,
+//! learn OS-assigned ports), then serve leader sessions in a loop:
+//! answer frames until the leader hangs up, go back to accepting (so a
+//! supervising leader can redial after a fault); `--once` exits after
+//! the first session instead. The worker learns everything else — shard,
 //! objective, Gram-thread override — from the leader's
 //! [`Command::Init`] frame, so a worker process needs no config file.
 //!
@@ -46,6 +48,7 @@
 //! only transport failures on the *upstream* connection tear the loop
 //! down. Nothing here panics on malformed input.
 
+use crate::comm::topology::RELAY_CHILD_LOST;
 use crate::comm::wire::{self, Command, InitPayload, InitRefPayload, PeersPayload, Reply};
 use crate::config::LossKind;
 use crate::loss::make_objective;
@@ -198,8 +201,13 @@ fn build_worker_by_ref(p: InitRefPayload) -> Result<Worker> {
     Ok(w)
 }
 
-/// `dane worker --listen <addr>`: bind, announce, serve one leader.
-pub fn serve_addr(addr: &str) -> Result<()> {
+/// `dane worker --listen <addr>`: bind, announce, then serve leader
+/// sessions in a loop — after a leader hangs up (or the session dies on
+/// a transport error) the worker returns to `accept` on the same bound
+/// listener, so a supervising leader can redial it after a fault
+/// without the operator restarting anything. `once` restores the old
+/// single-session behavior (exit after the first leader is done).
+pub fn serve_addr(addr: &str, once: bool) -> Result<()> {
     let listener = TcpListener::bind(addr)
         .map_err(|e| Error::Runtime(format!("worker: bind {addr}: {e}")))?;
     let local = listener
@@ -209,7 +217,27 @@ pub fn serve_addr(addr: &str) -> Result<()> {
     // when the operator (or harness) asked for :0.
     println!("listening on {local}");
     std::io::stdout().flush()?;
-    serve_listener(listener)
+    serve_loop(listener, once)
+}
+
+/// Serve leader sessions in a loop on an already-bound listener — the
+/// in-process form of [`serve_addr`]'s accept loop (no announce line).
+/// A session that dies on a transport error ends that session only; the
+/// worker returns to `accept`. `once` exits after the first session.
+pub fn serve_loop(listener: TcpListener, once: bool) -> Result<()> {
+    loop {
+        let (stream, _peer) = listener
+            .accept()
+            .map_err(|e| Error::Runtime(format!("worker: accept: {e}")))?;
+        // Session state (worker, relay links) is per-session: a redialed
+        // leader re-Inits from scratch, exactly like a fresh process.
+        if let Err(e) = serve_session(stream, Some(&listener)) {
+            eprintln!("worker: session ended: {e}");
+        }
+        if once {
+            return Ok(());
+        }
+    }
 }
 
 /// Accept one leader connection on an already-bound listener and serve
@@ -429,8 +457,10 @@ fn relay_for(
             .map_err(|e| Error::Runtime(format!("worker: relay write: {e}"))),
         None => {
             c.stream = None;
+            // RELAY_CHILD_LOST prefix: the leader classifies this reply
+            // as a recoverable transport loss, not a compute error.
             let msg = format!(
-                "relay toward worker {rank} failed: child {} link down",
+                "{RELAY_CHILD_LOST} {} died mid-round (For toward worker {rank})",
                 c.rank
             );
             send_reply(up, enc, &Reply::Err(msg))
@@ -470,7 +500,7 @@ fn pump_children(
             send_reply(
                 up,
                 enc,
-                &Reply::Err(format!("relay child worker {} died mid-round", c.rank)),
+                &Reply::Err(format!("{RELAY_CHILD_LOST} {} died mid-round", c.rank)),
             )?;
         }
     }

@@ -1,0 +1,356 @@
+//! The chaos matrix: a worker killed mid-run must NOT kill the run when
+//! the fault policy allows recovery. Every algorithm × {respawn,
+//! degrade} × {threaded, tcp} × {star, tree (interior-node kill)} has to
+//! finish `Ok`, with the recovery visible in the trace (`recoveries >=
+//! 1`, or `alive_workers < m` under degrade) — and fault-free runs under
+//! *any* policy must stay bit-identical to the fail_fast baseline, which
+//! is what keeps the supervisor out of the parity contract.
+//!
+//! Also here: the flaky-link fault (a worker whose listener drops the
+//! first k redials before accepting — respawn's backoff loop must ride
+//! it out) and checkpoint/resume bit-exactness at the algorithm level.
+
+use dane::comm::{ExecTopology, NetModel};
+use dane::config::FaultPolicy;
+use dane::config::LossKind;
+use dane::coordinator::checkpoint::{Checkpoint, CkptSpec};
+use dane::coordinator::dane as dane_algo;
+use dane::coordinator::fault::SupervisedCluster;
+use dane::coordinator::tcp::TcpCluster;
+use dane::coordinator::threaded::ThreadedCluster;
+use dane::coordinator::{admm, gd, lbfgs, osa};
+use dane::coordinator::{AlgoOutcome, Cluster, RunCtx};
+use dane::data::{synthetic_fig2, Dataset};
+use dane::loss::{Objective, Ridge};
+use dane::metrics::Trace;
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+const M: usize = 4;
+const SHARD_SEED: u64 = 3;
+const ALGOS: [&str; 6] = ["dane", "gd", "agd", "admm", "osa", "lbfgs"];
+
+fn ensure_worker_bin() {
+    // One set_var per process, ordered before every read (see
+    // tcp_cluster.rs::ensure_worker_bin for the setenv/getenv UB note).
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| std::env::set_var("DANE_WORKER_BIN", env!("CARGO_BIN_EXE_dane")));
+}
+
+fn dataset() -> Dataset {
+    synthetic_fig2(256, 6, 0.005, 4)
+}
+
+fn threaded_cluster(ds: &Dataset, topology: ExecTopology) -> ThreadedCluster {
+    let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+    ThreadedCluster::with_topology(ds, obj, M, SHARD_SEED, NetModel::free(), None, topology)
+}
+
+fn tcp_cluster(ds: &Dataset, topology: ExecTopology) -> TcpCluster {
+    ensure_worker_bin();
+    TcpCluster::self_hosted(
+        ds,
+        LossKind::Ridge,
+        0.01,
+        M,
+        SHARD_SEED,
+        NetModel::free(),
+        None,
+        Some(Duration::from_secs(10)),
+        topology,
+    )
+    .expect("self-hosted tcp cluster must come up")
+}
+
+fn run_algo(c: &mut dyn Cluster, algo: &str) -> AlgoOutcome {
+    match algo {
+        "dane" => dane_algo::run(c, &Default::default(), &RunCtx::new(5)),
+        "gd" => gd::run_gd(c, &Default::default(), &RunCtx::new(5)),
+        "agd" => gd::run_agd(c, &Default::default(), &RunCtx::new(5)),
+        "admm" => admm::run(c, &admm::AdmmOptions { rho: 0.1 }, &RunCtx::new(5)),
+        "osa" => osa::run(c, &Default::default(), &RunCtx::new(1)),
+        "lbfgs" => lbfgs::run(c, &Default::default(), &RunCtx::new(5)),
+        other => panic!("unknown algo {other}"),
+    }
+}
+
+/// Bit-exact row compare, modulo the wallclock column.
+fn assert_rows_identical_mod_elapsed(a: &Trace, b: &Trace, what: &str) {
+    assert_eq!(a.len(), b.len(), "[{what}] row count");
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        let r = ra.round;
+        assert_eq!(ra.round, rb.round, "[{what}]");
+        assert_eq!(ra.objective, rb.objective, "[{what}] round {r}");
+        assert_eq!(ra.suboptimality, rb.suboptimality, "[{what}] round {r}");
+        assert_eq!(ra.grad_norm, rb.grad_norm, "[{what}] round {r}");
+        assert_eq!(ra.test_loss, rb.test_loss, "[{what}] round {r}");
+        assert_eq!(ra.comm_rounds, rb.comm_rounds, "[{what}] round {r}");
+        assert_eq!(ra.comm_bytes, rb.comm_bytes, "[{what}] round {r}");
+        assert_eq!(ra.comm_modeled_seconds, rb.comm_modeled_seconds, "[{what}] round {r}");
+        assert_eq!(ra.wire_bytes, rb.wire_bytes, "[{what}] round {r}");
+        assert_eq!(ra.startup_bytes, rb.startup_bytes, "[{what}] round {r}");
+        assert_eq!(ra.alive_workers, rb.alive_workers, "[{what}] round {r}");
+        assert_eq!(ra.recoveries, rb.recoveries, "[{what}] round {r}");
+    }
+}
+
+/// The policies the matrix survives a kill under. `backoff_ms: 1` keeps
+/// the respawn path's sleep real but the test fast.
+fn recovery_policies() -> [FaultPolicy; 2] {
+    [
+        FaultPolicy::Respawn { max_retries: 3, backoff_ms: 1 },
+        FaultPolicy::Degrade { min_quorum: 2 },
+    ]
+}
+
+/// Run `algo` with worker `victim` killed right before the 2nd
+/// worker-touching collective, under `policy`; the run must finish and
+/// the trace must show the recovery.
+fn assert_survives(
+    mut inner: Box<dyn Cluster>,
+    ds: &Dataset,
+    algo: &str,
+    policy: FaultPolicy,
+    victim: usize,
+    what: &str,
+) {
+    inner.enable_recovery(ds, SHARD_SEED, None);
+    let mut sup = SupervisedCluster::new(inner, policy, 9).chaos_kill_at(2, victim);
+    let res = run_algo(&mut sup, algo)
+        .unwrap_or_else(|e| panic!("[{what}] {algo} under {policy:?} died: {e}"));
+    let last = res.trace.rows.last().expect("non-empty trace");
+    assert!(
+        last.recoveries >= 1 || last.alive_workers < M as u64,
+        "[{what}] {algo} under {policy:?}: no recovery visible \
+         (recoveries {}, alive {})",
+        last.recoveries,
+        last.alive_workers
+    );
+    match policy {
+        FaultPolicy::Respawn { .. } => {
+            assert_eq!(
+                last.alive_workers,
+                M as u64,
+                "[{what}] {algo}: respawn must restore full strength"
+            );
+            assert!(last.recoveries >= 1, "[{what}] {algo}");
+        }
+        FaultPolicy::Degrade { min_quorum } => {
+            assert!(
+                last.alive_workers >= min_quorum as u64,
+                "[{what}] {algo}: quorum violated in trace"
+            );
+        }
+        FaultPolicy::FailFast => unreachable!(),
+    }
+}
+
+#[test]
+fn chaos_matrix_threaded() {
+    for algo in ALGOS {
+        for policy in recovery_policies() {
+            for topology in [ExecTopology::Star, ExecTopology::Tree] {
+                // Under the binomial tree (m = 4: leader -> {0, 1, 3},
+                // 0 relays for 2) rank 0 is the interior node — killing
+                // it exercises the relay re-plan, not just a leaf loss.
+                let victim = if topology.is_tree() { 0 } else { 2 };
+                let ds = dataset();
+                let inner = Box::new(threaded_cluster(&ds, topology));
+                let what = format!("threaded-{topology:?}");
+                assert_survives(inner, &ds, algo, policy, victim, &what);
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_matrix_tcp_star() {
+    for algo in ALGOS {
+        for policy in recovery_policies() {
+            let ds = dataset();
+            let inner = Box::new(tcp_cluster(&ds, ExecTopology::Star));
+            assert_survives(inner, &ds, algo, policy, 2, "tcp-star");
+        }
+    }
+}
+
+#[test]
+fn chaos_matrix_tcp_tree_interior_kill() {
+    // SIGKILL of the interior relay (rank 0) on real processes; keep the
+    // tcp tree leg to one algorithm per policy — the transport path the
+    // matrix exercises is identical across algorithms, and real process
+    // spawns dominate the test's wall clock.
+    for policy in recovery_policies() {
+        for algo in ["dane", "admm"] {
+            let ds = dataset();
+            let inner = Box::new(tcp_cluster(&ds, ExecTopology::Tree));
+            assert_survives(inner, &ds, algo, policy, 0, "tcp-tree");
+        }
+    }
+}
+
+#[test]
+fn fault_free_runs_bit_identical_under_every_policy() {
+    let policies = [
+        FaultPolicy::FailFast,
+        FaultPolicy::Respawn { max_retries: 3, backoff_ms: 100 },
+        FaultPolicy::Degrade { min_quorum: 2 },
+    ];
+    for algo in ALGOS {
+        let ds = dataset();
+        let mut bare = threaded_cluster(&ds, ExecTopology::Star);
+        let base = run_algo(&mut bare, algo).unwrap();
+        for policy in policies {
+            let ds = dataset();
+            let mut inner = Box::new(threaded_cluster(&ds, ExecTopology::Star));
+            inner.enable_recovery(&ds, SHARD_SEED, None);
+            let mut sup = SupervisedCluster::new(inner, policy, 9);
+            let res = run_algo(&mut sup, algo).unwrap();
+            assert_eq!(res.w, base.w, "{algo} under {policy:?}");
+            assert_rows_identical_mod_elapsed(
+                &base.trace,
+                &res.trace,
+                &format!("{algo} under {policy:?}"),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Flaky links: the victim's listener drops the first k redials before
+// accepting a session — respawn's backoff loop must ride it out.
+// ---------------------------------------------------------------------
+
+/// Spawn `M` in-process loop-serving workers; the `flaky` rank serves
+/// its first session normally, then drops the next `drops` accepted
+/// connections on the floor (a refused redial, as the leader sees it)
+/// before going back to serving. Returns the worker addresses.
+fn spawn_loop_workers(flaky: usize, drops: usize) -> Vec<String> {
+    let mut addrs = Vec::with_capacity(M);
+    for rank in 0..M {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(listener.local_addr().unwrap().to_string());
+        if rank == flaky {
+            std::thread::spawn(move || {
+                // session 1 (bring-up) served cleanly
+                if let Ok((stream, _)) = listener.accept() {
+                    let _ = dane::worker::serve::serve_conn(stream);
+                }
+                for _ in 0..drops {
+                    let _ = listener.accept(); // accepted, dropped
+                }
+                let _ = dane::worker::serve::serve_loop(listener, false);
+            });
+        } else {
+            std::thread::spawn(move || {
+                let _ = dane::worker::serve::serve_loop(listener, false);
+            });
+        }
+    }
+    addrs
+}
+
+#[test]
+fn respawn_rides_out_flaky_redials_to_an_external_worker() {
+    let ds = dataset();
+    let addrs = spawn_loop_workers(2, 2);
+    let inner = TcpCluster::connect(
+        &ds,
+        LossKind::Ridge,
+        0.01,
+        &addrs,
+        SHARD_SEED,
+        NetModel::free(),
+        None,
+        Some(Duration::from_secs(10)),
+        ExecTopology::Star,
+    )
+    .expect("external tcp cluster must come up");
+    // External workers cannot be respawned, only redialed: the first two
+    // recovery attempts die on the dropped connections, the third lands.
+    let mut sup = SupervisedCluster::new(
+        Box::new(inner),
+        FaultPolicy::Respawn { max_retries: 5, backoff_ms: 1 },
+        9,
+    )
+    .chaos_kill_at(2, 2);
+    let res = run_algo(&mut sup, "dane").expect("flaky redials must be survivable");
+    let last = res.trace.rows.last().unwrap();
+    assert_eq!(last.alive_workers, M as u64);
+    assert!(last.recoveries >= 1, "got {}", last.recoveries);
+}
+
+// ---------------------------------------------------------------------
+// Checkpoint/resume: a resumed run continues the trace bit-exactly.
+// ---------------------------------------------------------------------
+
+/// Run `algo` for `rounds` with a checkpoint every round; then resume
+/// from the file with a larger budget and compare against one
+/// uninterrupted run of the full budget.
+fn assert_resume_bit_exact(algo: &str, short: usize, full: usize) {
+    let dir = dane::util::tempdir::TempDir::new("chaos-ckpt").unwrap();
+    let path = dir.path().join(format!("{algo}.ckpt"));
+    let run_rounds = |c: &mut dyn Cluster, ctx: &RunCtx| match algo {
+        "dane" => dane_algo::run(c, &Default::default(), ctx),
+        "gd" => gd::run_gd(c, &Default::default(), ctx),
+        "agd" => gd::run_agd(c, &Default::default(), ctx),
+        "admm" => admm::run(c, &admm::AdmmOptions { rho: 0.1 }, ctx),
+        "lbfgs" => lbfgs::run(c, &Default::default(), ctx),
+        other => panic!("unknown algo {other}"),
+    };
+
+    // leg 1: the "crashed" run — checkpoints every round, stops early
+    let ds = dataset();
+    let mut c1 = threaded_cluster(&ds, ExecTopology::Star);
+    let spec = CkptSpec::new(path.clone(), 1, 7);
+    let ctx1 = RunCtx::new(short).with_checkpoint(Arc::new(spec));
+    run_rounds(&mut c1, &ctx1).unwrap();
+
+    // leg 2: resume from the file with the full budget
+    let mut c2 = threaded_cluster(&ds, ExecTopology::Star);
+    let mut spec2 = CkptSpec::new(path.clone(), 1, 7);
+    spec2.resume = Some(Checkpoint::load(&path).unwrap());
+    let ctx2 = RunCtx::new(full).with_checkpoint(Arc::new(spec2));
+    let resumed = run_rounds(&mut c2, &ctx2).unwrap();
+
+    // reference: one uninterrupted run of the full budget
+    let mut c3 = threaded_cluster(&ds, ExecTopology::Star);
+    let uninterrupted = run_rounds(&mut c3, &RunCtx::new(full)).unwrap();
+
+    assert_eq!(resumed.w, uninterrupted.w, "{algo}: resumed iterate drifted");
+    assert_rows_identical_mod_elapsed(
+        &uninterrupted.trace,
+        &resumed.trace,
+        &format!("{algo} resume"),
+    );
+}
+
+#[test]
+fn resume_is_bit_exact_for_every_checkpointing_algorithm() {
+    // osa is single-shot and has no checkpoint by design.
+    for algo in ["dane", "gd", "agd", "admm", "lbfgs"] {
+        assert_resume_bit_exact(algo, 3, 6);
+    }
+}
+
+#[test]
+fn resume_refuses_a_checkpoint_from_another_algorithm() {
+    // A dane checkpoint under a gd resume must not restore anything:
+    // resume_for filters on the algo name, so the run starts from
+    // scratch (the driver-level config hash rejects this earlier).
+    let dir = dane::util::tempdir::TempDir::new("chaos-ckpt-mismatch").unwrap();
+    let path = dir.path().join("dane.ckpt");
+    let ds = dataset();
+    let mut c1 = threaded_cluster(&ds, ExecTopology::Star);
+    let ctx1 = RunCtx::new(3).with_checkpoint(Arc::new(CkptSpec::new(path.clone(), 1, 7)));
+    dane_algo::run(&mut c1, &Default::default(), &ctx1).unwrap();
+
+    let mut spec = CkptSpec::new(path.clone(), 1, 7);
+    spec.resume = Some(Checkpoint::load(&path).unwrap());
+    let mut c2 = threaded_cluster(&ds, ExecTopology::Star);
+    let ctx2 = RunCtx::new(3).with_checkpoint(Arc::new(spec));
+    let res = gd::run_gd(&mut c2, &Default::default(), &ctx2).unwrap();
+    // a fresh gd run records rounds 0..=3 — nothing was restored
+    assert_eq!(res.trace.rows.first().unwrap().round, 0);
+}

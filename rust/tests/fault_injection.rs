@@ -310,14 +310,18 @@ impl<C: Killable> Cluster for KillChildAt<C> {
         self.tick();
         self.inner.dane_round_first(w_prev, g, eta, mu)
     }
-    fn prox_all(&mut self, targets: &[Vec<f64>], rho: f64) -> dane::Result<Vec<Vec<f64>>> {
+    fn prox_all(
+        &mut self,
+        targets: &[Vec<f64>],
+        rho: f64,
+    ) -> dane::Result<Vec<Option<Vec<f64>>>> {
         self.tick();
         self.inner.prox_all(targets, rho)
     }
     fn local_erms(
         &mut self,
         subsample: Option<(f64, u64)>,
-    ) -> dane::Result<(Vec<Vec<f64>>, Option<Vec<Vec<f64>>>)> {
+    ) -> dane::Result<(Vec<Option<Vec<f64>>>, Option<Vec<Option<Vec<f64>>>>)> {
         self.tick();
         self.inner.local_erms(subsample)
     }
@@ -341,6 +345,21 @@ impl<C: Killable> Cluster for KillChildAt<C> {
     }
     fn reset_comm(&mut self) {
         self.inner.reset_comm();
+    }
+    fn alive(&self) -> usize {
+        self.inner.alive()
+    }
+    fn recover(&mut self, respawn: bool) -> dane::Result<usize> {
+        self.inner.recover(respawn)
+    }
+    fn restore_comm(&mut self, stats: &dane::comm::CommStats) {
+        self.inner.restore_comm(stats);
+    }
+    fn fault_kill_worker(&mut self, rank: usize) {
+        self.inner.fault_kill_worker(rank);
+    }
+    fn enable_recovery(&mut self, ds: &Dataset, shard_seed: u64, gram_threads: Option<usize>) {
+        self.inner.enable_recovery(ds, shard_seed, gram_threads);
     }
 }
 

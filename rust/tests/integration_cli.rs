@@ -404,13 +404,19 @@ fn run_engine_tcp_self_hosts_workers_and_emits_wire_bytes() {
     let mut lines = csv.lines();
     let header = lines.next().unwrap();
     assert!(
-        header.ends_with(",elapsed_seconds,wire_bytes,startup_bytes"),
+        header.ends_with(
+            ",elapsed_seconds,wire_bytes,startup_bytes,alive_workers,recoveries"
+        ),
         "{header}"
     );
     let last = lines.last().unwrap();
     let mut tail = last.rsplit(',');
+    let recoveries: u64 = tail.next().unwrap().parse().unwrap();
+    let alive: u64 = tail.next().unwrap().parse().unwrap();
     let startup: u64 = tail.next().unwrap().parse().unwrap();
     let wire: u64 = tail.next().unwrap().parse().unwrap();
+    assert_eq!(recoveries, 0, "fault-free run recorded a recovery: {last}");
+    assert_eq!(alive, 2, "fault-free run lost workers: {last}");
     assert!(wire > 0, "tcp run recorded no measured bytes: {last}");
     assert!(startup > 0, "tcp run recorded no startup bytes: {last}");
 }
@@ -426,10 +432,12 @@ fn worker_subcommand_requires_listen() {
 
 #[test]
 fn worker_announces_bound_address() {
-    // `dane worker --listen 127.0.0.1:0` must print the resolved port
-    // and exit cleanly once the leader (us) connects and hangs up.
+    // `dane worker --listen 127.0.0.1:0 --once` must print the resolved
+    // port and exit cleanly once the leader (us) connects and hangs up.
+    // (Without --once the worker loops back to accept — fault-tolerant
+    // default since the respawn policy redials external workers.)
     let mut child = Command::new(dane_bin())
-        .args(["worker", "--listen", "127.0.0.1:0"])
+        .args(["worker", "--listen", "127.0.0.1:0", "--once"])
         .stdout(std::process::Stdio::piped())
         .spawn()
         .unwrap();

@@ -2,7 +2,10 @@
 //! Theorem-3 rate-vs-n, round accounting, driver plumbing and CSV
 //! emission — the paper's core claims at integration level.
 
-use dane::config::{AlgoConfig, BackendKind, DatasetConfig, EngineKind, ExperimentConfig, LossKind, NetConfig};
+use dane::config::{
+    AlgoConfig, BackendKind, DatasetConfig, EngineKind, ExperimentConfig, FaultPolicy,
+    LossKind, NetConfig,
+};
 use dane::coordinator::dane as dane_algo;
 use dane::coordinator::driver::run_experiment;
 use dane::coordinator::{Cluster, RunCtx, SerialCluster};
@@ -156,6 +159,7 @@ fn driver_runs_config_end_to_end_and_emits_csv() {
         data_by_ref: false,
         eval_test: false,
         net: NetConfig::datacenter(),
+        fault: FaultPolicy::FailFast,
     };
     let res = run_experiment(&cfg).unwrap();
     assert!(res.converged);

@@ -4,7 +4,10 @@
 //! and JSON config round-trips.
 
 use dane::comm::{Collective, NetModel};
-use dane::config::{AlgoConfig, BackendKind, DatasetConfig, EngineKind, ExperimentConfig, LossKind, NetConfig};
+use dane::config::{
+    AlgoConfig, BackendKind, DatasetConfig, EngineKind, ExperimentConfig, FaultPolicy,
+    LossKind, NetConfig,
+};
 use dane::data::sharding::shard_indices;
 use dane::data::Shard;
 use dane::linalg::cg::{cg_solve, CgScratch};
@@ -318,6 +321,7 @@ fn prop_config_json_roundtrip() {
                 data_by_ref: false,
                 eval_test: rng.bool(0.5),
                 net: NetConfig::datacenter(),
+                fault: FaultPolicy::FailFast,
             }
         },
         |cfg| {

@@ -12,8 +12,8 @@
 //! differ.
 
 use dane::config::{
-    AlgoConfig, BackendKind, DatasetConfig, EngineKind, ExperimentConfig, LossKind,
-    NetConfig,
+    AlgoConfig, BackendKind, DatasetConfig, EngineKind, ExperimentConfig, FaultPolicy,
+    LossKind, NetConfig,
 };
 use dane::coordinator::dane as dane_algo;
 use dane::coordinator::driver::run_experiment;
@@ -127,6 +127,7 @@ fn driver_engine_parity_on_fig2_config() {
         data_by_ref: false,
         eval_test: false,
         net: NetConfig::datacenter(),
+        fault: FaultPolicy::FailFast,
     };
     let serial = run_experiment(&cfg).unwrap();
     cfg.engine = EngineKind::Threaded;

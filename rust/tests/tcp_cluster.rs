@@ -19,8 +19,8 @@
 use dane::comm::wire::{self, Reply};
 use dane::comm::ExecTopology;
 use dane::config::{
-    AlgoConfig, BackendKind, DatasetConfig, EngineKind, ExperimentConfig, LossKind,
-    NetConfig,
+    AlgoConfig, BackendKind, DatasetConfig, EngineKind, ExperimentConfig, FaultPolicy,
+    LossKind, NetConfig,
 };
 use dane::coordinator::driver::run_experiment;
 use dane::coordinator::tcp::TcpCluster;
@@ -61,6 +61,7 @@ fn fig2_cfg(engine: EngineKind) -> ExperimentConfig {
         data_by_ref: false,
         eval_test: false,
         net: NetConfig::datacenter(),
+        fault: FaultPolicy::FailFast,
     }
 }
 

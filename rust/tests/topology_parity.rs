@@ -19,8 +19,8 @@
 
 use dane::comm::ExecTopology;
 use dane::config::{
-    AlgoConfig, BackendKind, DatasetConfig, EngineKind, ExperimentConfig, LossKind,
-    NetConfig,
+    AlgoConfig, BackendKind, DatasetConfig, EngineKind, ExperimentConfig, FaultPolicy,
+    LossKind, NetConfig,
 };
 use dane::coordinator::driver::{run_experiment, RunResult};
 use dane::metrics::Trace;
@@ -55,6 +55,7 @@ fn cfg(
         data_by_ref: false,
         eval_test: false,
         net: NetConfig::datacenter(),
+        fault: FaultPolicy::FailFast,
     }
 }
 
