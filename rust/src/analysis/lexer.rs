@@ -1,0 +1,304 @@
+//! Comment- and string-aware source masking.
+//!
+//! Every `dane-lint` rule works on **masked** source: the same byte
+//! length and line structure as the input, but with comment bodies and
+//! string/char-literal contents blanked to spaces. That is what makes
+//! the rules honest — `.expect()` inside a doc comment (there is one in
+//! `coordinator/mod.rs`) or `panic!` inside an error-message string is
+//! never a violation, and a `lint:allow` marker hidden inside a string
+//! literal is never an escape hatch.
+//!
+//! The lexer understands exactly the token classes that can embed
+//! look-alike code in Rust source:
+//!
+//! * `//` line comments (incl. `///` and `//!` doc comments);
+//! * `/* … */` block comments, **nested**, as in real Rust;
+//! * `"…"` string literals with `\` escapes, plus `b"…"` byte strings;
+//! * `r"…"`, `r#"…"#`, … raw strings with any number of `#` guards
+//!   (and their `br` byte variants);
+//! * `'x'` char literals (with escapes) vs. `'a` lifetimes — a quote
+//!   followed by an escape or by exactly one char and a closing quote
+//!   is a literal, anything else is a lifetime and left alone.
+//!
+//! Comments are additionally collected verbatim (with their line
+//! numbers) so the allow-marker parser and the column-annotation checks
+//! can read them without re-lexing.
+
+/// One comment as it appeared in the source, `//`/`/*` markers included.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line: usize,
+    /// Verbatim text, markers included; block comments keep embedded
+    /// newlines.
+    pub text: String,
+}
+
+/// The masked view of one source file.
+#[derive(Debug, Clone)]
+pub struct Masked {
+    /// Source with comments and literal bodies blanked to spaces.
+    /// Newlines are preserved, so byte offsets and line numbers agree
+    /// with the original text.
+    pub code: String,
+    /// Every comment, in source order.
+    pub comments: Vec<Comment>,
+}
+
+/// Mask `src`: blank comments and string/char-literal contents, keep
+/// everything else (including line structure) byte-for-byte.
+pub fn mask(src: &str) -> Masked {
+    let b = src.as_bytes();
+    let mut code = Vec::with_capacity(b.len());
+    let mut comments = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            code.push(b'\n');
+            line += 1;
+            i += 1;
+        } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                code.push(b' ');
+                i += 1;
+            }
+            comments.push(Comment { line, text: src[start..i].to_string() });
+        } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 0usize;
+            while i < b.len() {
+                if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    code.extend_from_slice(b"  ");
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    code.extend_from_slice(b"  ");
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    if b[i] == b'\n' {
+                        code.push(b'\n');
+                        line += 1;
+                    } else {
+                        code.push(b' ');
+                    }
+                    i += 1;
+                }
+            }
+            comments.push(Comment { line: start_line, text: src[start..i].to_string() });
+        } else if let Some(len) = raw_string_len(b, i) {
+            blank(&mut code, b, i, len, &mut line);
+            i += len;
+        } else if c == b'"' || (c == b'b' && i + 1 < b.len() && b[i + 1] == b'"') {
+            let open = if c == b'b' { i + 1 } else { i };
+            if c == b'b' {
+                code.push(b' ');
+            }
+            let len = plain_string_len(b, open);
+            blank(&mut code, b, open, len, &mut line);
+            i = open + len;
+        } else if c == b'\'' {
+            if let Some(len) = char_literal_len(b, i) {
+                blank(&mut code, b, i, len, &mut line);
+                i += len;
+            } else {
+                // a lifetime: keep the quote and the identifier as code
+                code.push(c);
+                i += 1;
+            }
+        } else if c == b'b' && i + 1 < b.len() && b[i + 1] == b'\'' {
+            if let Some(len) = char_literal_len(b, i + 1) {
+                code.push(b' ');
+                blank(&mut code, b, i + 1, len, &mut line);
+                i += 1 + len;
+            } else {
+                code.push(c);
+                i += 1;
+            }
+        } else {
+            code.push(c);
+            i += 1;
+        }
+    }
+
+    // masking only replaces ASCII bytes with spaces and copies the
+    // rest verbatim, so the result is valid UTF-8 by construction
+    let code = String::from_utf8_lossy(&code).into_owned();
+    Masked { code, comments }
+}
+
+/// Push `len` bytes starting at `i` as blanks (newlines kept).
+fn blank(code: &mut Vec<u8>, b: &[u8], i: usize, len: usize, line: &mut usize) {
+    for &byte in &b[i..(i + len).min(b.len())] {
+        if byte == b'\n' {
+            code.push(b'\n');
+            *line += 1;
+        } else {
+            code.push(b' ');
+        }
+    }
+}
+
+/// Length of a raw string literal (`r"…"`, `r#"…"#`, `br##"…"##`, …)
+/// starting at `i`, or None if `i` does not start one.
+fn raw_string_len(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i;
+    if j < b.len() && b[j] == b'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'"' {
+        return None;
+    }
+    j += 1;
+    while j < b.len() {
+        if b[j] == b'"' {
+            let mut k = 0usize;
+            while k < hashes && j + 1 + k < b.len() && b[j + 1 + k] == b'#' {
+                k += 1;
+            }
+            if k == hashes {
+                return Some(j + 1 + hashes - i);
+            }
+        }
+        j += 1;
+    }
+    Some(b.len() - i)
+}
+
+/// Length of a plain `"…"` literal starting at the opening quote.
+fn plain_string_len(b: &[u8], open: usize) -> usize {
+    let mut j = open + 1;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return j + 1 - open,
+            _ => j += 1,
+        }
+    }
+    b.len() - open
+}
+
+/// Length of a char literal starting at the quote, or None if this is
+/// a lifetime (`'a`) rather than a literal (`'a'`, `'\n'`).
+fn char_literal_len(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    if j >= b.len() {
+        return None;
+    }
+    if b[j] == b'\\' {
+        j += 2;
+        // escapes can be multi-byte (\u{…}, \x41): scan to the quote
+        while j < b.len() && b[j] != b'\'' && b[j] != b'\n' {
+            j += 1;
+        }
+        if j < b.len() && b[j] == b'\'' {
+            return Some(j + 1 - i);
+        }
+        return None;
+    }
+    // multi-byte UTF-8 scalar or single ASCII char, then a quote
+    let mut j = i + 1;
+    let first = b[j];
+    let char_len = if first < 0x80 {
+        1
+    } else if first >= 0xf0 {
+        4
+    } else if first >= 0xe0 {
+        3
+    } else {
+        2
+    };
+    j += char_len;
+    if j < b.len() && b[j] == b'\'' && b[i + 1] != b'\'' {
+        Some(j + 1 - i)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_comments_are_blanked_and_collected() {
+        let src = "let x = 1; // .unwrap() here is fine\nlet y = 2;\n";
+        let m = mask(src);
+        assert!(!m.code.contains("unwrap"));
+        assert!(m.code.contains("let y = 2;"));
+        assert_eq!(m.comments.len(), 1);
+        assert_eq!(m.comments[0].line, 1);
+        assert!(m.comments[0].text.contains(".unwrap() here is fine"));
+        assert_eq!(m.code.len(), src.len());
+    }
+
+    #[test]
+    fn nested_block_comments_and_doc_comments() {
+        let src = "/* outer /* inner panic!() */ still out */ fn f() {}\n/// docs .expect()\nfn g() {}\n";
+        let m = mask(src);
+        assert!(!m.code.contains("panic"));
+        assert!(!m.code.contains("expect"));
+        assert!(m.code.contains("fn f() {}"));
+        assert!(m.code.contains("fn g() {}"));
+        assert_eq!(m.comments.len(), 2);
+    }
+
+    #[test]
+    fn strings_raw_strings_and_chars_are_blanked() {
+        let src = r##"let a = "call .unwrap() now"; let b = r#"panic!("x")"#; let c = '"'; let d = b"todo!()";"##;
+        let m = mask(src);
+        assert!(!m.code.contains("unwrap"));
+        assert!(!m.code.contains("panic"));
+        assert!(!m.code.contains("todo"));
+        assert!(m.code.contains("let a ="));
+        assert!(m.code.contains("let d ="));
+    }
+
+    #[test]
+    fn lifetimes_survive_but_char_literals_do_not() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = 'x'; let nl = '\\n'; c }\n";
+        let m = mask(src);
+        assert!(m.code.contains("<'a>"), "lifetime must stay: {}", m.code);
+        assert!(m.code.contains("&'a str"));
+        assert!(!m.code.contains("'x'"));
+        assert!(!m.code.contains("\\n"));
+    }
+
+    #[test]
+    fn multiline_strings_keep_line_structure() {
+        let src = "let s = \"one\ntwo .unwrap()\nthree\";\nlet t = 5;\n";
+        let m = mask(src);
+        assert_eq!(
+            m.code.matches('\n').count(),
+            src.matches('\n').count(),
+            "newline count must survive masking"
+        );
+        assert!(!m.code.contains("unwrap"));
+        assert!(m.code.contains("let t = 5;"));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_terminate_strings() {
+        let src = r#"let s = "a \" b .expect( c"; let x = 1;"#;
+        let m = mask(src);
+        assert!(!m.code.contains("expect"));
+        assert!(m.code.contains("let x = 1;"));
+    }
+}

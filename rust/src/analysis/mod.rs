@@ -1,0 +1,390 @@
+//! `dane-lint`: the in-tree static-analysis pass behind `cargo run --bin
+//! dane-lint` and the CI `lint` job.
+//!
+//! Seven PRs of reviewer discipline keep two load-bearing invariants
+//! alive — bit-exact cross-engine/topology parity, and "no panic
+//! reachable from a worker failure or a hostile byte stream". This
+//! module makes them machine-checkable. Five rules, each guarding a
+//! contract that already exists in the tree:
+//!
+//! | rule | contract |
+//! |---|---|
+//! | `panic-freedom` | no `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!` in non-test code under `coordinator/`, `comm/`, `worker/` |
+//! | `densify` | `to_dense(` only inside `linalg/` internals and test scopes — dense materialization must never creep onto the big-data path |
+//! | `wire-totality` | every `Command`/`Reply` variant has a tag constant, an encode arm, a decode arm, and hostile-bytes coverage in `tests/wire_codec.rs` |
+//! | `csv-schema` | `TraceRow` fields ≡ `emit.rs` CSV header ≡ the column indices hardcoded in `ci.yml` awk/cut pipelines |
+//! | `determinism` | no `HashMap`/`HashSet` iteration feeding folds or output, no `Instant::now`/`SystemTime::now` outside the metrics timing allowlist |
+//!
+//! Escape hatch: `// lint:allow(<rule>): <reason>` on the violating
+//! line or the line above suppresses exactly one line's findings for
+//! one rule. The reason is mandatory, unknown rule names are errors,
+//! and an allow that suppresses nothing is itself an error
+//! (`lint-allow`), so annotations cannot go stale silently.
+//!
+//! All scanning happens on masked source ([`lexer`]): comments and
+//! string contents never trip a rule, and `#[cfg(test)]` scopes
+//! ([`scope`]) are exempt where a rule says so. The rules themselves
+//! live in [`rules`]; everything is a plain function over in-memory
+//! strings, so `tests/lint_self.rs` can feed fixture snippets through
+//! the exact code path CI runs.
+
+pub mod lexer;
+pub mod rules;
+pub mod scope;
+
+use std::path::{Path, PathBuf};
+
+/// Every rule id `lint:allow(...)` may name.
+pub const RULE_IDS: &[&str] = &[
+    rules::PANIC_FREEDOM,
+    rules::DENSIFY,
+    rules::WIRE_TOTALITY,
+    rules::CSV_SCHEMA,
+    rules::DETERMINISM,
+];
+
+/// One finding: `file:line: rule: message`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    /// Repo-relative path with `/` separators.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Rule id (one of [`RULE_IDS`], or `lint-allow` for marker misuse).
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// A parsed `// lint:allow(<rule>): <reason>` marker.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    /// Line the comment sits on.
+    pub line: usize,
+    /// The rule it suppresses.
+    pub rule: String,
+    /// The (mandatory) justification.
+    pub reason: String,
+    /// The code line it applies to: its own line when that line has
+    /// code, else the next line that does.
+    pub target_line: usize,
+}
+
+/// One file, lexed and scope-tracked, ready for the rules.
+#[derive(Debug)]
+pub struct FileAnalysis {
+    /// Repo-relative path with `/` separators (rules match on it).
+    pub rel_path: String,
+    /// Original text (cross-reference rules read literals from it).
+    pub raw: String,
+    /// Masked code ([`lexer::mask`]).
+    pub code: String,
+    /// Per-line `#[cfg(test)]` flags.
+    pub test_lines: Vec<bool>,
+    /// Parsed allow markers.
+    pub allows: Vec<Allow>,
+    /// Malformed markers found while parsing (missing reason, unknown
+    /// rule) — always reported.
+    pub marker_errors: Vec<Diagnostic>,
+}
+
+impl FileAnalysis {
+    pub fn new(rel_path: &str, source: &str) -> FileAnalysis {
+        let masked = lexer::mask(source);
+        let test_lines = scope::test_lines(&masked.code);
+        let mut allows = Vec::new();
+        let mut marker_errors = Vec::new();
+        let line_has_code = line_code_flags(&masked.code);
+        for c in &masked.comments {
+            parse_allow(
+                rel_path,
+                c,
+                &line_has_code,
+                &mut allows,
+                &mut marker_errors,
+            );
+        }
+        FileAnalysis {
+            rel_path: rel_path.to_string(),
+            raw: source.to_string(),
+            code: masked.code,
+            test_lines,
+            allows,
+            marker_errors,
+        }
+    }
+
+    /// Is 1-based `line` inside test scope?
+    pub fn is_test_line(&self, line: usize) -> bool {
+        self.test_lines.get(line.saturating_sub(1)).copied().unwrap_or(false)
+    }
+}
+
+/// Per-line "has any non-whitespace masked code" flags.
+fn line_code_flags(code: &str) -> Vec<bool> {
+    code.lines().map(|l| !l.trim().is_empty()).collect()
+}
+
+fn parse_allow(
+    rel_path: &str,
+    c: &lexer::Comment,
+    line_has_code: &[bool],
+    allows: &mut Vec<Allow>,
+    errors: &mut Vec<Diagnostic>,
+) {
+    // A marker must BE the comment, not merely appear in it: strip the
+    // comment leader (`//`, `//!`, `///`, `/*`, `/**`) plus whitespace
+    // and require `lint:allow` as a prefix. Prose that mentions the
+    // syntax mid-sentence (this module's own docs, say) is not a marker.
+    let body = c.text.trim_start_matches(['/', '*', '!']).trim_start();
+    if !body.starts_with("lint:allow") {
+        return;
+    }
+    let rest = &body["lint:allow".len()..];
+    let bad = |msg: String| Diagnostic {
+        file: rel_path.to_string(),
+        line: c.line,
+        rule: rules::LINT_ALLOW,
+        msg,
+    };
+    let Some(rest) = rest.strip_prefix('(') else {
+        errors.push(bad("malformed marker: expected `lint:allow(<rule>): <reason>`".into()));
+        return;
+    };
+    let Some(close) = rest.find(')') else {
+        errors.push(bad("malformed marker: unclosed `(`".into()));
+        return;
+    };
+    let rule = rest[..close].trim().to_string();
+    if !RULE_IDS.contains(&rule.as_str()) {
+        errors.push(bad(format!(
+            "unknown rule {rule:?}; valid rules: {}",
+            RULE_IDS.join(", ")
+        )));
+        return;
+    }
+    let after = rest[close + 1..].trim_start();
+    let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+    if reason.is_empty() {
+        errors.push(bad(format!(
+            "lint:allow({rule}) needs a reason: `lint:allow({rule}): <why this site is safe>`"
+        )));
+        return;
+    }
+    // target: this line if it carries code, else the next line that does
+    let mut target = c.line;
+    let has_code =
+        |ln: usize| line_has_code.get(ln - 1).copied().unwrap_or(false);
+    if !has_code(target) {
+        let mut ln = c.line + 1;
+        while ln <= line_has_code.len() && !has_code(ln) {
+            ln += 1;
+        }
+        target = ln;
+    }
+    allows.push(Allow {
+        line: c.line,
+        rule,
+        reason: reason.to_string(),
+        target_line: target,
+    });
+}
+
+/// Filter `diags` through the allow markers of `files`; append
+/// marker-misuse findings (malformed markers, markers that suppressed
+/// nothing).
+pub fn apply_allows(diags: Vec<Diagnostic>, files: &[&FileAnalysis]) -> Vec<Diagnostic> {
+    let mut used: Vec<Vec<bool>> =
+        files.iter().map(|f| vec![false; f.allows.len()]).collect();
+    let mut out: Vec<Diagnostic> = Vec::new();
+    for d in diags {
+        let mut suppressed = false;
+        for (fi, f) in files.iter().enumerate() {
+            if f.rel_path != d.file {
+                continue;
+            }
+            for (ai, a) in f.allows.iter().enumerate() {
+                if a.rule == d.rule && a.target_line == d.line {
+                    used[fi][ai] = true;
+                    suppressed = true;
+                }
+            }
+        }
+        if !suppressed {
+            out.push(d);
+        }
+    }
+    for (fi, f) in files.iter().enumerate() {
+        for e in &f.marker_errors {
+            out.push(e.clone());
+        }
+        for (ai, a) in f.allows.iter().enumerate() {
+            if !used[fi][ai] {
+                out.push(Diagnostic {
+                    file: f.rel_path.clone(),
+                    line: a.line,
+                    rule: rules::LINT_ALLOW,
+                    msg: format!(
+                        "stale lint:allow({}): nothing on line {} trips the rule — \
+                         remove the marker or the fix regressed",
+                        a.rule, a.target_line
+                    ),
+                });
+            }
+        }
+    }
+    dedup_sort(&mut out);
+    out
+}
+
+fn dedup_sort(diags: &mut Vec<Diagnostic>) {
+    diags.sort_by(|a, b| {
+        (&a.file, a.line, a.rule, &a.msg).cmp(&(&b.file, b.line, b.rule, &b.msg))
+    });
+    diags.dedup();
+}
+
+/// Lint the whole repository rooted at `root` (the directory holding
+/// `rust/src`). This is exactly what the `dane-lint` binary and the
+/// `lint_self` integration test run.
+pub fn lint_repo(root: &Path) -> std::io::Result<Vec<Diagnostic>> {
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    let mut paths = Vec::new();
+    walk_rs(&src_root, &mut paths)?;
+    // deterministic order whatever the OS returns
+    paths.sort();
+    for p in &paths {
+        let source = std::fs::read_to_string(p)?;
+        let rel = rel_unix(root, p);
+        files.push(FileAnalysis::new(&rel, &source));
+    }
+
+    let mut diags = Vec::new();
+    for f in &files {
+        diags.extend(rules::panic_freedom(f));
+        diags.extend(rules::densify(f));
+        diags.extend(rules::determinism(f));
+    }
+
+    // cross-reference rules need their anchor files
+    let codec_path = root.join("rust").join("tests").join("wire_codec.rs");
+    let codec = match std::fs::read_to_string(&codec_path) {
+        Ok(s) => Some(FileAnalysis::new(&rel_unix(root, &codec_path), &s)),
+        Err(_) => {
+            diags.push(Diagnostic {
+                file: "rust/tests/wire_codec.rs".into(),
+                line: 1,
+                rule: rules::WIRE_TOTALITY,
+                msg: "hostile-bytes suite missing: cannot cross-check wire variants".into(),
+            });
+            None
+        }
+    };
+    if let (Some(wire), Some(codec)) = (
+        files.iter().find(|f| f.rel_path == "rust/src/comm/wire.rs"),
+        codec.as_ref(),
+    ) {
+        diags.extend(rules::wire_totality(wire, codec));
+    }
+
+    let ci_path = root.join(".github").join("workflows").join("ci.yml");
+    let ci_raw = std::fs::read_to_string(&ci_path).unwrap_or_default();
+    if let (Some(trace), Some(emit)) = (
+        files.iter().find(|f| f.rel_path == "rust/src/metrics/trace.rs"),
+        files.iter().find(|f| f.rel_path == "rust/src/metrics/emit.rs"),
+    ) {
+        diags.extend(rules::csv_schema(
+            trace,
+            emit,
+            &ci_raw,
+            ".github/workflows/ci.yml",
+        ));
+    }
+
+    let mut refs: Vec<&FileAnalysis> = files.iter().collect();
+    if let Some(c) = codec.as_ref() {
+        refs.push(c);
+    }
+    Ok(apply_allows(diags, &refs))
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            walk_rs(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_unix(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root)
+        .unwrap_or(p)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_marker_parses_and_targets_next_code_line() {
+        let src = "fn f() {\n    // lint:allow(panic-freedom): spawn failure is bring-up only\n    // second comment line\n    x.unwrap();\n}\n";
+        let fa = FileAnalysis::new("rust/src/comm/x.rs", src);
+        assert_eq!(fa.allows.len(), 1);
+        assert_eq!(fa.allows[0].rule, "panic-freedom");
+        assert_eq!(fa.allows[0].target_line, 4);
+        assert!(fa.marker_errors.is_empty());
+    }
+
+    #[test]
+    fn allow_on_code_line_targets_itself() {
+        let src = "fn f() {\n    x.unwrap(); // lint:allow(panic-freedom): reason here\n}\n";
+        let fa = FileAnalysis::new("rust/src/comm/x.rs", src);
+        assert_eq!(fa.allows[0].target_line, 2);
+    }
+
+    #[test]
+    fn missing_reason_and_unknown_rule_are_marker_errors() {
+        let src = "// lint:allow(panic-freedom)\n// lint:allow(bogus-rule): why\nfn f() {}\n";
+        let fa = FileAnalysis::new("rust/src/comm/x.rs", src);
+        assert!(fa.allows.is_empty());
+        assert_eq!(fa.marker_errors.len(), 2);
+        assert!(fa.marker_errors[0].msg.contains("needs a reason"));
+        assert!(fa.marker_errors[1].msg.contains("unknown rule"));
+    }
+
+    #[test]
+    fn stale_allow_is_reported() {
+        let src = "fn f() {\n    // lint:allow(panic-freedom): nothing here anymore\n    let x = 1;\n}\n";
+        let fa = FileAnalysis::new("rust/src/comm/x.rs", src);
+        let out = apply_allows(Vec::new(), &[&fa]);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, rules::LINT_ALLOW);
+        assert!(out[0].msg.contains("stale"));
+    }
+
+    #[test]
+    fn allow_suppresses_matching_rule_and_line_only() {
+        let src = "fn f() {\n    // lint:allow(panic-freedom): justified\n    a.unwrap();\n    b.unwrap();\n}\n";
+        let fa = FileAnalysis::new("rust/src/comm/x.rs", src);
+        let diags = rules::panic_freedom(&fa);
+        assert_eq!(diags.len(), 2);
+        let out = apply_allows(diags, &[&fa]);
+        assert_eq!(out.len(), 1, "line 4 must still be reported: {out:?}");
+        assert_eq!(out[0].line, 4);
+    }
+}

@@ -1,0 +1,1264 @@
+//! The five `dane-lint` rules.
+//!
+//! Each rule is a plain function from [`FileAnalysis`] (plus, for the
+//! cross-reference rules, the anchor files they check against) to a
+//! list of [`Diagnostic`]s, so `tests/lint_self.rs` can drive each one
+//! over fixture snippets through exactly the code path CI runs. All
+//! scanning is over masked code (comments/strings blanked) and 1-based
+//! lines; test-scoped lines are exempt where the rule says so.
+
+use super::{Diagnostic, FileAnalysis};
+
+pub const PANIC_FREEDOM: &str = "panic-freedom";
+pub const DENSIFY: &str = "densify";
+pub const WIRE_TOTALITY: &str = "wire-totality";
+pub const CSV_SCHEMA: &str = "csv-schema";
+pub const DETERMINISM: &str = "determinism";
+/// Pseudo-rule for misused `lint:allow` markers (malformed or stale).
+pub const LINT_ALLOW: &str = "lint-allow";
+
+/// Directories whose non-test code must be panic-free: everything a
+/// worker failure or a hostile byte stream can reach.
+const PANIC_SCOPES: &[&str] = &[
+    "rust/src/coordinator/",
+    "rust/src/comm/",
+    "rust/src/worker/",
+];
+
+/// Files allowed to read wall clocks: per-round `elapsed_seconds`
+/// trace timing in the algorithm drivers, the bench harness, and the
+/// rendezvous channel's deadline bookkeeping. Wall time here feeds
+/// *reporting*, never an iterate.
+const TIME_ALLOW: &[&str] = &[
+    "rust/src/comm/roundchan.rs",
+    "rust/src/coordinator/admm.rs",
+    "rust/src/coordinator/dane.rs",
+    "rust/src/coordinator/gd.rs",
+    "rust/src/coordinator/lbfgs.rs",
+    "rust/src/coordinator/osa.rs",
+    "rust/src/util/bench.rs",
+];
+
+/// Methods whose results inherit `HashMap`/`HashSet` iteration order.
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "into_keys",
+    "values",
+    "values_mut",
+    "into_values",
+    "drain",
+];
+
+/// A test fn whose name mentions one of these counts as hostile-bytes
+/// coverage for the wire-totality rule.
+const HOSTILE_MARKERS: &[&str] = &["trunc", "hostile", "malformed", "corrupt", "reject"];
+
+// ---------------------------------------------------------------- tokens
+
+/// One identifier-shaped token in masked code (byte offsets).
+#[derive(Debug, Clone, Copy)]
+struct Tok {
+    start: usize,
+    end: usize,
+}
+
+/// All identifier tokens (keywords included; numbers skipped so `0x81`
+/// never yields a stray `x81`).
+fn idents(code: &str) -> Vec<Tok> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'_' || c.is_ascii_alphabetic() {
+            let s = i;
+            while i < b.len() && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            out.push(Tok { start: s, end: i });
+        } else if c.is_ascii_digit() {
+            while i < b.len() && is_ident_byte(b[i]) {
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Byte-offset → 1-based line translation.
+struct Lines {
+    starts: Vec<usize>,
+}
+
+impl Lines {
+    fn new(code: &str) -> Lines {
+        let mut starts = vec![0usize];
+        for (i, b) in code.bytes().enumerate() {
+            if b == b'\n' {
+                starts.push(i + 1);
+            }
+        }
+        Lines { starts }
+    }
+
+    fn line_of(&self, pos: usize) -> usize {
+        match self.starts.binary_search(&pos) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+}
+
+/// Previous non-whitespace byte before `pos`.
+fn prev_sig(b: &[u8], mut pos: usize) -> Option<u8> {
+    while pos > 0 {
+        pos -= 1;
+        if !b[pos].is_ascii_whitespace() {
+            return Some(b[pos]);
+        }
+    }
+    None
+}
+
+/// Next non-whitespace byte at or after `pos`.
+fn next_sig(b: &[u8], mut pos: usize) -> Option<u8> {
+    while pos < b.len() {
+        if !b[pos].is_ascii_whitespace() {
+            return Some(b[pos]);
+        }
+        pos += 1;
+    }
+    None
+}
+
+// ---------------------------------------------------------- panic-freedom
+
+/// No `.unwrap()`, `.expect(…)`, `panic!`, `unreachable!`, `todo!` or
+/// `unimplemented!` in non-test code under coordinator/, comm/, worker/.
+pub fn panic_freedom(f: &FileAnalysis) -> Vec<Diagnostic> {
+    if !PANIC_SCOPES.iter().any(|p| f.rel_path.starts_with(p)) {
+        return Vec::new();
+    }
+    let b = f.code.as_bytes();
+    let lines = Lines::new(&f.code);
+    let mut out = Vec::new();
+    for t in idents(&f.code) {
+        let text = &f.code[t.start..t.end];
+        let hit = match text {
+            "unwrap" | "expect" => {
+                prev_sig(b, t.start) == Some(b'.') && next_sig(b, t.end) == Some(b'(')
+            }
+            "panic" | "unreachable" | "todo" | "unimplemented" => {
+                next_sig(b, t.end) == Some(b'!')
+            }
+            _ => false,
+        };
+        if !hit {
+            continue;
+        }
+        let line = lines.line_of(t.start);
+        if f.is_test_line(line) {
+            continue;
+        }
+        out.push(Diagnostic {
+            file: f.rel_path.clone(),
+            line,
+            rule: PANIC_FREEDOM,
+            msg: format!(
+                "`{text}` on the panic-free surface (coordinator/comm/worker): \
+                 return an `Err` or route through a documented helper, or add \
+                 `lint:allow(panic-freedom): <reason>`"
+            ),
+        });
+    }
+    out
+}
+
+// ---------------------------------------------------------------- densify
+
+/// `.to_dense(` only inside linalg/ internals and test scopes: nothing
+/// on the data path may materialize a dense copy of a sparse shard.
+pub fn densify(f: &FileAnalysis) -> Vec<Diagnostic> {
+    if f.rel_path.starts_with("rust/src/linalg/") {
+        return Vec::new();
+    }
+    let b = f.code.as_bytes();
+    let lines = Lines::new(&f.code);
+    let mut out = Vec::new();
+    for t in idents(&f.code) {
+        if &f.code[t.start..t.end] != "to_dense" {
+            continue;
+        }
+        if prev_sig(b, t.start) != Some(b'.') || next_sig(b, t.end) != Some(b'(') {
+            continue;
+        }
+        let line = lines.line_of(t.start);
+        if f.is_test_line(line) {
+            continue;
+        }
+        out.push(Diagnostic {
+            file: f.rel_path.clone(),
+            line,
+            rule: DENSIFY,
+            msg: "`.to_dense()` outside linalg/ materializes a dense copy of a \
+                  (possibly huge) sparse shard; operate in sparse form or move \
+                  the helper into linalg/"
+                .to_string(),
+        });
+    }
+    out
+}
+
+// ------------------------------------------------------------ determinism
+
+/// No wall clocks outside the timing allowlist, and no iteration over
+/// `HashMap`/`HashSet` bindings (their order is nondeterministic and
+/// must never feed a numeric fold or trace output).
+pub fn determinism(f: &FileAnalysis) -> Vec<Diagnostic> {
+    let code = &f.code;
+    let lines = Lines::new(code);
+    let toks = idents(code);
+    let mut out = Vec::new();
+
+    if !TIME_ALLOW.contains(&f.rel_path.as_str()) {
+        for (k, t) in toks.iter().enumerate() {
+            let text = &code[t.start..t.end];
+            // a type mention (`-> Instant`) is not a clock read; the
+            // `::now` call is
+            let clocked = matches!(text, "Instant" | "SystemTime")
+                && followed_by_now(code, &toks, k);
+            if !clocked {
+                continue;
+            }
+            let line = lines.line_of(t.start);
+            if f.is_test_line(line) {
+                continue;
+            }
+            out.push(Diagnostic {
+                file: f.rel_path.clone(),
+                line,
+                rule: DETERMINISM,
+                msg: format!(
+                    "wall-clock read (`{text}`) outside the metrics timing \
+                     allowlist; clocks must never influence an iterate or a trace \
+                     column other than elapsed time"
+                ),
+            });
+        }
+    }
+
+    let suspects = hash_binding_names(code, &toks);
+    if !suspects.is_empty() {
+        for (k, t) in toks.iter().enumerate() {
+            let text = &code[t.start..t.end];
+            let line = lines.line_of(t.start);
+            if f.is_test_line(line) {
+                continue;
+            }
+            let hit_name = if text == "in" {
+                loop_source_hit(code, &toks, k, &suspects)
+            } else if suspects.iter().any(|s| s == text) {
+                match method_after(code, &toks, k) {
+                    Some(m) if ITER_METHODS.contains(&m.as_str()) => Some(text.to_string()),
+                    _ => None,
+                }
+            } else {
+                None
+            };
+            if let Some(name) = hit_name {
+                out.push(Diagnostic {
+                    file: f.rel_path.clone(),
+                    line,
+                    rule: DETERMINISM,
+                    msg: format!(
+                        "iteration over `{name}` (a HashMap/HashSet binding) has \
+                         nondeterministic order; collect into a sorted Vec or use \
+                         a BTreeMap/BTreeSet"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Is token `k` (`Instant`) followed by `::now`?
+fn followed_by_now(code: &str, toks: &[Tok], k: usize) -> bool {
+    let b = code.as_bytes();
+    let mut p = toks[k].end;
+    while p < b.len() && b[p].is_ascii_whitespace() {
+        p += 1;
+    }
+    if p + 1 >= b.len() || b[p] != b':' || b[p + 1] != b':' {
+        return false;
+    }
+    toks.get(k + 1)
+        .map(|n| &code[n.start..n.end] == "now")
+        .unwrap_or(false)
+}
+
+/// Method name called directly on token `k` (`name.method`), if any.
+fn method_after(code: &str, toks: &[Tok], k: usize) -> Option<String> {
+    let b = code.as_bytes();
+    let mut p = toks[k].end;
+    while p < b.len() && b[p].is_ascii_whitespace() {
+        p += 1;
+    }
+    if p >= b.len() || b[p] != b'.' {
+        return None;
+    }
+    toks.get(k + 1).map(|n| code[n.start..n.end].to_string())
+}
+
+/// For `for … in <expr>`: does the loop source name a suspect binding?
+/// Looks at the first idents after `in`, skipping `mut`/`self`.
+fn loop_source_hit(code: &str, toks: &[Tok], k: usize, suspects: &[String]) -> Option<String> {
+    let mut j = k + 1;
+    for _ in 0..4 {
+        let t = toks.get(j)?;
+        let text = &code[t.start..t.end];
+        if text == "mut" || text == "self" {
+            j += 1;
+            continue;
+        }
+        if suspects.iter().any(|s| s == text) {
+            return Some(text.to_string());
+        }
+        return None;
+    }
+    None
+}
+
+/// Names bound to a `HashMap`/`HashSet` type in this file: fields and
+/// lets (`name: HashMap<…>`, `let name = HashMap::new()`), walking back
+/// through path segments, `&`/`mut` sigils and generic wrappers
+/// (`Mutex<HashMap<…>>`).
+fn hash_binding_names(code: &str, toks: &[Tok]) -> Vec<String> {
+    let b = code.as_bytes();
+    let mut names: Vec<String> = Vec::new();
+    for t in toks {
+        let text = &code[t.start..t.end];
+        if text != "HashMap" && text != "HashSet" {
+            continue;
+        }
+        let mut pos = t.start;
+        loop {
+            skip_ws_back(b, &mut pos);
+            if pos >= 2 && b[pos - 1] == b':' && b[pos - 2] == b':' {
+                pos -= 2;
+                skip_ws_back(b, &mut pos);
+                if !eat_ident_back(b, &mut pos) {
+                    break;
+                }
+            } else if pos >= 1 && b[pos - 1] == b'<' {
+                pos -= 1;
+                skip_ws_back(b, &mut pos);
+                if !eat_ident_back(b, &mut pos) {
+                    break;
+                }
+            } else if pos >= 1 && b[pos - 1] == b'&' {
+                pos -= 1;
+            } else if pos >= 1 && is_ident_byte(b[pos - 1]) {
+                let s = ident_start_back(b, pos);
+                if &code[s..pos] == "mut" {
+                    pos = s;
+                } else {
+                    break;
+                }
+            } else {
+                break;
+            }
+        }
+        skip_ws_back(b, &mut pos);
+        let name = if pos >= 1 && b[pos - 1] == b':' && (pos < 2 || b[pos - 2] != b':') {
+            pos -= 1;
+            skip_ws_back(b, &mut pos);
+            ident_back(code, b, pos)
+        } else if pos >= 1
+            && b[pos - 1] == b'='
+            && (pos < 2
+                || !matches!(
+                    b[pos - 2],
+                    b'=' | b'!' | b'<' | b'>' | b'+' | b'-' | b'*' | b'/' | b'%' | b'&' | b'|' | b'^'
+                ))
+        {
+            pos -= 1;
+            skip_ws_back(b, &mut pos);
+            ident_back(code, b, pos)
+        } else {
+            None
+        };
+        if let Some(n) = name {
+            if n != "mut" && !names.contains(&n) {
+                names.push(n);
+            }
+        }
+    }
+    names
+}
+
+fn skip_ws_back(b: &[u8], pos: &mut usize) {
+    while *pos > 0 && b[*pos - 1].is_ascii_whitespace() {
+        *pos -= 1;
+    }
+}
+
+fn ident_start_back(b: &[u8], pos: usize) -> usize {
+    let mut s = pos;
+    while s > 0 && is_ident_byte(b[s - 1]) {
+        s -= 1;
+    }
+    s
+}
+
+fn eat_ident_back(b: &[u8], pos: &mut usize) -> bool {
+    let s = ident_start_back(b, *pos);
+    let moved = s < *pos;
+    *pos = s;
+    moved
+}
+
+fn ident_back(code: &str, b: &[u8], pos: usize) -> Option<String> {
+    let s = ident_start_back(b, pos);
+    if s < pos && !b[s].is_ascii_digit() {
+        Some(code[s..pos].to_string())
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------- wire-totality
+
+/// Every `Command`/`Reply` variant must have a tag constant
+/// (`CMD_`/`REP_` + SCREAMING_SNAKE of the variant), an encode arm
+/// (`push(TAG)`), a decode arm (`TAG … =>`), and coverage in
+/// `rust/tests/wire_codec.rs` — including a use inside a test whose
+/// name marks it as hostile-bytes (truncation/corruption/rejection).
+/// Orphan tag constants and duplicate tag values are also errors.
+pub fn wire_totality(wire: &FileAnalysis, codec: &FileAnalysis) -> Vec<Diagnostic> {
+    let code = &wire.code;
+    let mut out = Vec::new();
+    let diag = |line: usize, msg: String| Diagnostic {
+        file: wire.rel_path.clone(),
+        line,
+        rule: WIRE_TOTALITY,
+        msg,
+    };
+
+    let cmd = enum_variants(code, "Command");
+    let rep = enum_variants(code, "Reply");
+    if cmd.is_empty() {
+        out.push(diag(1, "`enum Command` not found (or has no variants)".into()));
+    }
+    if rep.is_empty() {
+        out.push(diag(1, "`enum Reply` not found (or has no variants)".into()));
+    }
+
+    let consts = tag_consts(code);
+    for i in 0..consts.len() {
+        for j in i + 1..consts.len() {
+            if let (Some(a), Some(b)) = (consts[i].value, consts[j].value) {
+                if a == b {
+                    out.push(diag(
+                        consts[j].line,
+                        format!(
+                            "tag constants `{}` and `{}` share value {:#04x}",
+                            consts[i].name, consts[j].name, a
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    let toks = idents(code);
+    let spans = fn_spans(&codec.code);
+    let hostile: Vec<&FnSpan> = spans
+        .iter()
+        .filter(|s| HOSTILE_MARKERS.iter().any(|m| s.name.contains(m)))
+        .collect();
+
+    for (prefix, variants, enum_name) in
+        [("CMD_", &cmd, "Command"), ("REP_", &rep, "Reply")]
+    {
+        for v in variants {
+            let want = format!("{prefix}{}", screaming(&v.name));
+            match consts.iter().find(|c| c.name == want) {
+                None => out.push(diag(
+                    v.line,
+                    format!(
+                        "variant `{enum_name}::{}` has no tag constant `{want}`",
+                        v.name
+                    ),
+                )),
+                Some(c) => {
+                    if !has_push_use(code, &toks, &c.name) {
+                        out.push(diag(
+                            c.line,
+                            format!("no encode arm pushes `{}` onto the wire", c.name),
+                        ));
+                    }
+                    if !has_decode_arm(code, &toks, &c.name) {
+                        out.push(diag(
+                            c.line,
+                            format!("no decode arm matches `{}`", c.name),
+                        ));
+                    }
+                }
+            }
+            let positions = qualified_positions(&codec.code, enum_name, &v.name);
+            if positions.is_empty() {
+                out.push(diag(
+                    v.line,
+                    format!(
+                        "`{enum_name}::{}` never appears in {} — add encode/decode \
+                         and hostile-bytes coverage",
+                        v.name, codec.rel_path
+                    ),
+                ));
+            } else if !positions
+                .iter()
+                .any(|&p| hostile.iter().any(|s| p > s.open && p < s.close))
+            {
+                out.push(diag(
+                    v.line,
+                    format!(
+                        "`{enum_name}::{}` has no hostile-bytes coverage in {}: no \
+                         use inside a test whose name mentions {}",
+                        v.name,
+                        codec.rel_path,
+                        HOSTILE_MARKERS.join("/")
+                    ),
+                ));
+            }
+        }
+        for c in consts.iter().filter(|c| c.name.starts_with(prefix)) {
+            let orphan = !variants
+                .iter()
+                .any(|v| format!("{prefix}{}", screaming(&v.name)) == c.name);
+            if orphan {
+                out.push(diag(
+                    c.line,
+                    format!(
+                        "tag constant `{}` has no matching `{enum_name}` variant",
+                        c.name
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// `GradLoss` → `GRAD_LOSS`.
+fn screaming(name: &str) -> String {
+    let mut s = String::new();
+    for (i, ch) in name.chars().enumerate() {
+        if ch.is_ascii_uppercase() && i > 0 {
+            s.push('_');
+        }
+        s.push(ch.to_ascii_uppercase());
+    }
+    s
+}
+
+struct Variant {
+    name: String,
+    line: usize,
+}
+
+/// Variant names of `enum <enum_name> { … }`: uppercase-initial idents
+/// at brace depth 1 / paren depth 0 whose previous significant char is
+/// `{` or `,` (so tuple/struct field types never count).
+fn enum_variants(code: &str, enum_name: &str) -> Vec<Variant> {
+    let b = code.as_bytes();
+    let toks = idents(code);
+    let lines = Lines::new(code);
+    let mut body_start = None;
+    for (k, t) in toks.iter().enumerate() {
+        if &code[t.start..t.end] != "enum" {
+            continue;
+        }
+        if let Some(n) = toks.get(k + 1) {
+            if &code[n.start..n.end] == enum_name {
+                let mut p = n.end;
+                while p < b.len() && b[p] != b'{' {
+                    p += 1;
+                }
+                if p < b.len() {
+                    body_start = Some(p + 1);
+                }
+                break;
+            }
+        }
+    }
+    let Some(start) = body_start else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let mut brace = 1i32;
+    let mut paren = 0i32;
+    let mut prev = b'{';
+    let mut i = start;
+    while i < b.len() && brace > 0 {
+        let c = b[i];
+        match c {
+            b'{' => brace += 1,
+            b'}' => brace -= 1,
+            b'(' => paren += 1,
+            b')' => paren -= 1,
+            _ => {}
+        }
+        if c == b'_' || c.is_ascii_alphabetic() {
+            let s = i;
+            while i < b.len() && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            if brace == 1
+                && paren == 0
+                && (prev == b'{' || prev == b',')
+                && b[s].is_ascii_uppercase()
+            {
+                out.push(Variant {
+                    name: code[s..i].to_string(),
+                    line: lines.line_of(s),
+                });
+            }
+            prev = b[i - 1];
+        } else {
+            if !c.is_ascii_whitespace() {
+                prev = c;
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+struct TagConst {
+    name: String,
+    value: Option<u64>,
+    line: usize,
+}
+
+/// `const CMD_*`/`const REP_*` declarations with their parsed values.
+fn tag_consts(code: &str) -> Vec<TagConst> {
+    let toks = idents(code);
+    let lines = Lines::new(code);
+    let mut out = Vec::new();
+    for (k, t) in toks.iter().enumerate() {
+        if &code[t.start..t.end] != "const" {
+            continue;
+        }
+        let Some(n) = toks.get(k + 1) else { continue };
+        let name = &code[n.start..n.end];
+        if !name.starts_with("CMD_") && !name.starts_with("REP_") {
+            continue;
+        }
+        let value = code[n.end..]
+            .find('=')
+            .map(|o| n.end + o)
+            .and_then(|eq| {
+                let semi = code[eq..].find(';').map(|o| eq + o)?;
+                parse_int(code[eq + 1..semi].trim())
+            });
+        out.push(TagConst {
+            name: name.to_string(),
+            value,
+            line: lines.line_of(t.start),
+        });
+    }
+    out
+}
+
+fn parse_int(s: &str) -> Option<u64> {
+    if let Some(h) = s.strip_prefix("0x") {
+        u64::from_str_radix(h, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// Is there a `….push(NAME)` call (an encode arm) anywhere?
+fn has_push_use(code: &str, toks: &[Tok], name: &str) -> bool {
+    let b = code.as_bytes();
+    for (k, t) in toks.iter().enumerate() {
+        if &code[t.start..t.end] != name {
+            continue;
+        }
+        if prev_sig(b, t.start) != Some(b'(') {
+            continue;
+        }
+        if k > 0 && code[toks[k - 1].start..toks[k - 1].end].ends_with("push") {
+            return true;
+        }
+    }
+    false
+}
+
+/// Is there a match arm on NAME — `NAME =>`, `NAME if guard =>`, or
+/// `NAME | OTHER =>`? (Scans forward from each non-definition use for
+/// `=>` before the expression ends.)
+fn has_decode_arm(code: &str, toks: &[Tok], name: &str) -> bool {
+    let b = code.as_bytes();
+    for (k, t) in toks.iter().enumerate() {
+        if &code[t.start..t.end] != name {
+            continue;
+        }
+        if k > 0 && &code[toks[k - 1].start..toks[k - 1].end] == "const" {
+            continue;
+        }
+        let lim = (t.end + 160).min(b.len());
+        let mut p = t.end;
+        while p + 1 < lim {
+            match b[p] {
+                b';' | b'{' => break,
+                b'=' if b[p + 1] == b'>' => return true,
+                _ => {}
+            }
+            p += 1;
+        }
+    }
+    false
+}
+
+struct FnSpan {
+    name: String,
+    open: usize,
+    close: usize,
+}
+
+/// Byte spans of every `fn name(…) { … }` body in masked code.
+fn fn_spans(code: &str) -> Vec<FnSpan> {
+    let b = code.as_bytes();
+    let toks = idents(code);
+    let mut out = Vec::new();
+    for (k, t) in toks.iter().enumerate() {
+        if &code[t.start..t.end] != "fn" {
+            continue;
+        }
+        let Some(n) = toks.get(k + 1) else { continue };
+        let mut p = n.end;
+        let mut paren = 0i32;
+        let mut open = None;
+        while p < b.len() {
+            match b[p] {
+                b'(' => paren += 1,
+                b')' => paren -= 1,
+                b'{' if paren == 0 => {
+                    open = Some(p);
+                    break;
+                }
+                b';' if paren == 0 => break,
+                _ => {}
+            }
+            p += 1;
+        }
+        let Some(open) = open else { continue };
+        let mut depth = 0i32;
+        let mut q = open;
+        let mut close = b.len();
+        while q < b.len() {
+            match b[q] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        close = q;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            q += 1;
+        }
+        out.push(FnSpan {
+            name: code[n.start..n.end].to_string(),
+            open,
+            close,
+        });
+    }
+    out
+}
+
+/// Byte positions of every `EnumName::Variant` mention.
+fn qualified_positions(code: &str, enum_name: &str, variant: &str) -> Vec<usize> {
+    let b = code.as_bytes();
+    let toks = idents(code);
+    let mut out = Vec::new();
+    for (k, t) in toks.iter().enumerate() {
+        if &code[t.start..t.end] != enum_name {
+            continue;
+        }
+        let mut p = t.end;
+        while p < b.len() && b[p].is_ascii_whitespace() {
+            p += 1;
+        }
+        if p + 1 >= b.len() || b[p] != b':' || b[p + 1] != b':' {
+            continue;
+        }
+        if let Some(n) = toks.get(k + 1) {
+            if &code[n.start..n.end] == variant {
+                out.push(t.start);
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------- csv-schema
+
+/// The trace CSV schema must agree everywhere it is spelled out:
+/// `TraceRow` field order ≡ `CSV_HEADER` columns ≡ the row format
+/// string's placeholder count, and every `name (col N)` / `name (N)`
+/// annotation, awk `$N` and `cut -f` spec in emit.rs/ci.yml must point
+/// at a real column.
+pub fn csv_schema(
+    trace: &FileAnalysis,
+    emit: &FileAnalysis,
+    ci_raw: &str,
+    ci_rel: &str,
+) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+
+    let fields = struct_fields(&trace.code, "TraceRow");
+    if fields.is_empty() {
+        out.push(Diagnostic {
+            file: trace.rel_path.clone(),
+            line: 1,
+            rule: CSV_SCHEMA,
+            msg: "`struct TraceRow` not found (or has no fields)".into(),
+        });
+    }
+    let Some((cols, hline)) = csv_header(&emit.raw) else {
+        out.push(Diagnostic {
+            file: emit.rel_path.clone(),
+            line: 1,
+            rule: CSV_SCHEMA,
+            msg: "`const CSV_HEADER` string not found".into(),
+        });
+        return out;
+    };
+
+    let field_names: Vec<&str> = fields.iter().map(|(n, _)| n.as_str()).collect();
+    let col_names: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    if !fields.is_empty() && field_names != col_names {
+        out.push(Diagnostic {
+            file: emit.rel_path.clone(),
+            line: hline,
+            rule: CSV_SCHEMA,
+            msg: format!(
+                "CSV_HEADER columns [{}] disagree with TraceRow fields [{}] \
+                 (names and order must match exactly)",
+                col_names.join(","),
+                field_names.join(",")
+            ),
+        });
+    }
+
+    let ncols = cols.len();
+    match row_format_placeholders(&emit.raw) {
+        None => out.push(Diagnostic {
+            file: emit.rel_path.clone(),
+            line: 1,
+            rule: CSV_SCHEMA,
+            msg: "trace row format string (a literal starting `{},`) not found".into(),
+        }),
+        Some((count, line)) => {
+            if count != ncols {
+                out.push(Diagnostic {
+                    file: emit.rel_path.clone(),
+                    line,
+                    rule: CSV_SCHEMA,
+                    msg: format!(
+                        "trace row format writes {count} fields but CSV_HEADER has \
+                         {ncols} columns"
+                    ),
+                });
+            }
+        }
+    }
+
+    out.extend(annotation_drift(&emit.raw, &emit.rel_path, &cols));
+    out.extend(annotation_drift(ci_raw, ci_rel, &cols));
+    out.extend(dollar_bounds(ci_raw, ci_rel, ncols));
+    out.extend(cut_bounds(ci_raw, ci_rel, ncols));
+    out
+}
+
+/// Field names of `struct <name> { pub a: …, pub b: …, … }` in order.
+fn struct_fields(code: &str, name: &str) -> Vec<(String, usize)> {
+    let b = code.as_bytes();
+    let toks = idents(code);
+    let lines = Lines::new(code);
+    let mut body_start = None;
+    for (k, t) in toks.iter().enumerate() {
+        if &code[t.start..t.end] != "struct" {
+            continue;
+        }
+        if let Some(n) = toks.get(k + 1) {
+            if &code[n.start..n.end] == name {
+                let mut p = n.end;
+                while p < b.len() && b[p] != b'{' && b[p] != b';' {
+                    p += 1;
+                }
+                if p < b.len() && b[p] == b'{' {
+                    body_start = Some(p + 1);
+                }
+                break;
+            }
+        }
+    }
+    let Some(start) = body_start else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let mut brace = 1i32;
+    let mut paren = 0i32;
+    let mut prev = b'{';
+    let mut i = start;
+    while i < b.len() && brace > 0 {
+        let c = b[i];
+        match c {
+            b'{' => brace += 1,
+            b'}' => brace -= 1,
+            b'(' => paren += 1,
+            b')' => paren -= 1,
+            _ => {}
+        }
+        if c == b'_' || c.is_ascii_alphabetic() {
+            let s = i;
+            while i < b.len() && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            let text = &code[s..i];
+            if brace == 1 && paren == 0 && (prev == b'{' || prev == b',') {
+                if text == "pub" {
+                    // keep `prev` so the field name after `pub` still
+                    // sees `{`/`,` as its opener
+                    continue;
+                }
+                if next_sig(b, i) == Some(b':') {
+                    out.push((text.to_string(), lines.line_of(s)));
+                }
+            }
+            prev = b[i - 1];
+        } else {
+            if !c.is_ascii_whitespace() {
+                prev = c;
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+/// The `const CSV_HEADER` string: column names and the line it sits on.
+fn csv_header(raw: &str) -> Option<(Vec<String>, usize)> {
+    let at = raw.find("const CSV_HEADER")?;
+    let q1 = at + raw[at..].find('"')?;
+    let q2 = q1 + 1 + raw[q1 + 1..].find('"')?;
+    let line = raw[..q1].matches('\n').count() + 1;
+    Some((
+        raw[q1 + 1..q2]
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .collect(),
+        line,
+    ))
+}
+
+/// Placeholder count and line of the trace row format string (the
+/// literal starting `"{},`).
+fn row_format_placeholders(raw: &str) -> Option<(usize, usize)> {
+    let at = raw.find("\"{},")?;
+    let b = raw.as_bytes();
+    let mut j = at + 1;
+    let mut count = 0usize;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 1,
+            b'"' => break,
+            b'{' => {
+                if j + 1 < b.len() && b[j + 1] == b'{' {
+                    j += 1;
+                } else {
+                    count += 1;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    Some((count, raw[..at].matches('\n').count() + 1))
+}
+
+/// `name (col N)` / `name (N)` annotations that name a header column
+/// but point at the wrong 1-based index.
+fn annotation_drift(raw: &str, rel: &str, cols: &[String]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (li, line) in raw.lines().enumerate() {
+        let lb = line.as_bytes();
+        for (ci, col) in cols.iter().enumerate() {
+            let want = ci + 1;
+            let mut from = 0usize;
+            while let Some(off) = line.get(from..).and_then(|s| s.find(col.as_str())) {
+                let s = from + off;
+                let e = s + col.len();
+                from = s + 1;
+                let before_ok = s == 0 || !is_ident_byte(lb[s - 1]);
+                let after_ok = e >= lb.len() || !is_ident_byte(lb[e]);
+                if !before_ok || !after_ok {
+                    continue;
+                }
+                let mut p = e;
+                while p < lb.len() && lb[p] == b' ' {
+                    p += 1;
+                }
+                if p >= lb.len() || lb[p] != b'(' {
+                    continue;
+                }
+                let rest = &line[p + 1..];
+                let rest = rest.strip_prefix("col ").unwrap_or(rest);
+                let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+                if digits.is_empty() || !rest[digits.len()..].starts_with(')') {
+                    continue;
+                }
+                if let Ok(n) = digits.parse::<usize>() {
+                    if n != want {
+                        out.push(Diagnostic {
+                            file: rel.to_string(),
+                            line: li + 1,
+                            rule: CSV_SCHEMA,
+                            msg: format!(
+                                "annotation says `{col}` is column {n} but CSV_HEADER \
+                                 puts it at column {want}"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// awk-style `$N` references beyond the column count.
+fn dollar_bounds(raw: &str, rel: &str, ncols: usize) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (li, line) in raw.lines().enumerate() {
+        let lb = line.as_bytes();
+        let mut i = 0usize;
+        while i < lb.len() {
+            if lb[i] != b'$' {
+                i += 1;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < lb.len() && lb[j].is_ascii_digit() {
+                j += 1;
+            }
+            if j > i + 1 {
+                if let Ok(n) = line[i + 1..j].parse::<usize>() {
+                    if n > ncols {
+                        out.push(Diagnostic {
+                            file: rel.to_string(),
+                            line: li + 1,
+                            rule: CSV_SCHEMA,
+                            msg: format!(
+                                "`${n}` is out of range: the trace CSV has only \
+                                 {ncols} columns"
+                            ),
+                        });
+                    }
+                }
+            }
+            i = j.max(i + 1);
+        }
+    }
+    out
+}
+
+/// `cut … -f<spec>` field specs referencing columns beyond the count.
+fn cut_bounds(raw: &str, rel: &str, ncols: usize) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (li, line) in raw.lines().enumerate() {
+        if !line.contains("cut") {
+            continue;
+        }
+        let mut from = 0usize;
+        while let Some(off) = line.get(from..).and_then(|s| s.find("-f")) {
+            let start = from + off + 2;
+            from = start;
+            let spec: String = line[start..]
+                .chars()
+                .take_while(|c| c.is_ascii_digit() || *c == ',' || *c == '-')
+                .collect();
+            for part in spec.split(|c| c == ',' || c == '-') {
+                if let Ok(n) = part.parse::<usize>() {
+                    if n > ncols {
+                        out.push(Diagnostic {
+                            file: rel.to_string(),
+                            line: li + 1,
+                            rule: CSV_SCHEMA,
+                            msg: format!(
+                                "`cut -f` references column {n} but the trace CSV \
+                                 has only {ncols} columns"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fa(path: &str, src: &str) -> FileAnalysis {
+        FileAnalysis::new(path, src)
+    }
+
+    #[test]
+    fn panic_freedom_flags_only_scoped_non_test_code() {
+        let src = "fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\nfn g() {\n    panic!(\"boom\");\n}\n#[cfg(test)]\nmod tests {\n    fn t() { None::<u8>.unwrap(); }\n}\n";
+        let d = panic_freedom(&fa("rust/src/comm/x.rs", src));
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert_eq!(d[0].line, 2);
+        assert_eq!(d[1].line, 5);
+        assert!(panic_freedom(&fa("rust/src/linalg/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn panic_freedom_ignores_lookalikes() {
+        let src = "fn f(x: Option<u8>) -> u8 {\n    x.unwrap_or(0)\n}\nfn g(m: &M) -> u8 {\n    m.lock().unwrap_or_else(|e| e.into_inner())\n}\n// a comment saying .unwrap() is bad\nfn h() -> &'static str {\n    \"do not panic!(now)\"\n}\n";
+        assert!(panic_freedom(&fa("rust/src/comm/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn densify_allows_linalg_and_tests_only() {
+        let src = "fn f(m: &CsrMatrix) -> DenseMatrix {\n    m.to_dense()\n}\n#[cfg(test)]\nmod tests {\n    fn t(m: &CsrMatrix) { m.to_dense(); }\n}\n";
+        let d = densify(&fa("rust/src/worker/x.rs", src));
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].line, 2);
+        assert!(densify(&fa("rust/src/linalg/sparse.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn determinism_flags_clocks_outside_allowlist() {
+        let src = "fn f() -> Instant {\n    Instant::now()\n}\nfn g() -> SystemTime {\n    SystemTime::now()\n}\n";
+        let d = determinism(&fa("rust/src/worker/x.rs", src));
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(determinism(&fa("rust/src/coordinator/dane.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn determinism_flags_hash_iteration_not_keyed_access() {
+        let src = "use std::collections::HashMap;\nstruct S {\n    flags: HashMap<String, String>,\n}\nfn f(s: &S) -> Vec<String> {\n    s.flags.keys().cloned().collect()\n}\nfn g(s: &S) -> Option<&String> {\n    s.flags.get(\"x\")\n}\nfn h(v: &[u8]) {\n    for x in v.iter() {\n        let _ = x;\n    }\n}\n";
+        let d = determinism(&fa("rust/src/worker/x.rs", src));
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].line, 6);
+        assert!(d[0].msg.contains("flags"));
+    }
+
+    #[test]
+    fn determinism_flags_for_loops_over_hash_bindings() {
+        let src = "fn f() -> u64 {\n    let mut acc = 0;\n    let m: std::collections::HashMap<u32, u64> = Default::default();\n    for v in &m {\n        acc += v.1;\n    }\n    acc\n}\n";
+        let d = determinism(&fa("rust/src/coordinator/x.rs", src));
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].line, 4);
+    }
+
+    const WIRE_OK: &str = "pub const CMD_INIT: u8 = 0x01;\npub const CMD_GRAD_LOSS: u8 = 0x02;\npub const REP_VEC: u8 = 0x81;\npub enum Command {\n    Init(Vec<u8>),\n    GradLoss { w: Vec<f64>, out: Vec<f64> },\n}\npub enum Reply {\n    Vec(Vec<f64>),\n}\nfn put(buf: &mut Vec<u8>, c: &Command) {\n    match c {\n        Command::Init(_) => buf.push(CMD_INIT),\n        Command::GradLoss { .. } => buf.push(CMD_GRAD_LOSS),\n    }\n}\nfn put_reply(buf: &mut Vec<u8>, r: &Reply) {\n    match r {\n        Reply::Vec(_) => buf.push(REP_VEC),\n    }\n}\nfn take(tag: u8) -> Result<(), ()> {\n    match tag {\n        CMD_INIT => Ok(()),\n        CMD_GRAD_LOSS if true => Ok(()),\n        REP_VEC => Ok(()),\n        _ => Err(()),\n    }\n}\n";
+
+    const CODEC_OK: &str = "#[test]\nfn roundtrip() {\n    let c = Command::Init(vec![]);\n    let g = Command::GradLoss { w: vec![], out: vec![] };\n    let r = Reply::Vec(vec![]);\n}\n#[test]\nfn every_truncation_is_an_error() {\n    let frames = [Command::Init(vec![]), Command::GradLoss { w: vec![], out: vec![] }];\n    let replies = [Reply::Vec(vec![])];\n}\n";
+
+    #[test]
+    fn wire_totality_passes_a_complete_protocol() {
+        let wire = fa("rust/src/comm/wire.rs", WIRE_OK);
+        let codec = fa("rust/tests/wire_codec.rs", CODEC_OK);
+        let d = wire_totality(&wire, &codec);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn wire_totality_catches_missing_tag_arms_and_coverage() {
+        // add a variant with no const, an orphan const, a duplicate value
+        let src = WIRE_OK.replace(
+            "    GradLoss { w: Vec<f64>, out: Vec<f64> },\n",
+            "    GradLoss { w: Vec<f64>, out: Vec<f64> },\n    RowSq,\n",
+        ) + "pub const CMD_PEERS: u8 = 0x01;\n";
+        let wire = fa("rust/src/comm/wire.rs", &src);
+        let codec = fa("rust/tests/wire_codec.rs", CODEC_OK);
+        let d = wire_totality(&wire, &codec);
+        let msgs: Vec<&str> = d.iter().map(|x| x.msg.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("`Command::RowSq` has no tag constant")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("CMD_PEERS") && m.contains("no matching")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("share value")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("`Command::RowSq` never appears")), "{msgs:?}");
+    }
+
+    #[test]
+    fn wire_totality_requires_hostile_coverage() {
+        // covered in a roundtrip test only -> hostile-coverage diagnostic
+        let codec_src = "#[test]\nfn roundtrip() {\n    let c = Command::Init(vec![]);\n    let g = Command::GradLoss { w: vec![], out: vec![] };\n    let r = Reply::Vec(vec![]);\n}\n";
+        let wire = fa("rust/src/comm/wire.rs", WIRE_OK);
+        let codec = fa("rust/tests/wire_codec.rs", codec_src);
+        let d = wire_totality(&wire, &codec);
+        assert_eq!(d.len(), 3, "{d:?}");
+        assert!(d.iter().all(|x| x.msg.contains("no hostile-bytes coverage")));
+    }
+
+    const TRACE_OK: &str = "pub struct TraceRow {\n    pub round: usize,\n    pub objective: f64,\n    pub comm_bytes: u64,\n}\n";
+    const EMIT_OK: &str = "pub const CSV_HEADER: &str = \"round,objective,comm_bytes\";\n// objective (col 2) is the regularized loss\nfn row() {\n    let _ = format!(\"{},{:.17e},{}\", 1, 2.0, 3);\n}\n";
+
+    #[test]
+    fn csv_schema_passes_when_everything_agrees() {
+        let trace = fa("rust/src/metrics/trace.rs", TRACE_OK);
+        let emit = fa("rust/src/metrics/emit.rs", EMIT_OK);
+        let ci = "run: awk -F, '{print $3}' trace.csv | cut -d, -f1-3 # comm_bytes (3)\n";
+        let d = csv_schema(&trace, &emit, ci, ".github/workflows/ci.yml");
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn csv_schema_catches_drift_everywhere() {
+        let trace = fa(
+            "rust/src/metrics/trace.rs",
+            "pub struct TraceRow {\n    pub round: usize,\n    pub comm_bytes: u64,\n    pub objective: f64,\n}\n",
+        );
+        let emit = fa(
+            "rust/src/metrics/emit.rs",
+            "pub const CSV_HEADER: &str = \"round,objective,comm_bytes\";\n// objective (col 3) stale note\nfn row() {\n    let _ = format!(\"{},{:.17e}\", 1, 2.0);\n}\n",
+        );
+        let ci = "run: awk -F, '{print $9}' trace.csv | cut -d, -f1-8\n";
+        let d = csv_schema(&trace, &emit, ci, ".github/workflows/ci.yml");
+        let msgs: Vec<&str> = d.iter().map(|x| x.msg.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("disagree with TraceRow")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("writes 2 fields")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("column 3") && m.contains("column 2")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("`$9` is out of range")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("cut -f` references column 8")), "{msgs:?}");
+    }
+
+    #[test]
+    fn screaming_snake_mapping() {
+        assert_eq!(screaming("Init"), "INIT");
+        assert_eq!(screaming("GradLoss"), "GRAD_LOSS");
+        assert_eq!(screaming("RowSq"), "ROW_SQ");
+        assert_eq!(screaming("For"), "FOR");
+        assert_eq!(screaming("VecScalar"), "VEC_SCALAR");
+    }
+}

@@ -1,0 +1,198 @@
+//! `#[cfg(test)]` / `#[test]` scope tracking over masked source.
+//!
+//! The panic-freedom and densify rules exempt test code: a `#[cfg(test)]
+//! mod tests { … }` block at the bottom of a production file (the
+//! repo-wide convention) may unwrap freely. This tracker computes, per
+//! line, whether the line sits inside an item that a test-shaped
+//! attribute guards.
+//!
+//! The model is purely lexical but exact for the shapes this repo uses:
+//! after a `#[cfg(test)]`-like or `#[test]` attribute, the next `{ … }`
+//! block (the guarded item's body) is a test region, tracked to its
+//! matching close brace; a `;` before any `{` ends the item without a
+//! body (`#[cfg(test)] use …;`). Regions nest — an inner attribute
+//! never un-tests an outer region.
+
+/// Per-line test flags for masked code: `flags[line - 1]` is true when
+/// 1-based `line` is inside (or on the braces of) a test-scoped item.
+pub fn test_lines(code: &str) -> Vec<bool> {
+    let n_lines = code.matches('\n').count() + 1;
+    let mut flags = vec![false; n_lines];
+    let b = code.as_bytes();
+    let mut line = 1usize;
+    let mut depth = 0usize;
+    // brace depths at which an active test region closes
+    let mut regions: Vec<usize> = Vec::new();
+    // a test attribute was seen and its item body not yet opened
+    let mut pending = false;
+    let mut i = 0usize;
+
+    while i < b.len() {
+        match b[i] {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b'#' => {
+                // #[…] or #![…]: scan the bracket group, decide if it
+                // is a test-shaped attribute
+                let mut j = i + 1;
+                if j < b.len() && b[j] == b'!' {
+                    j += 1;
+                }
+                if j < b.len() && b[j] == b'[' {
+                    let start = j + 1;
+                    let mut brackets = 1usize;
+                    let mut k = start;
+                    while k < b.len() && brackets > 0 {
+                        match b[k] {
+                            b'[' => brackets += 1,
+                            b']' => brackets -= 1,
+                            b'\n' => line += 1,
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    let end = k.saturating_sub(1).max(start);
+                    let attr = code.get(start..end).unwrap_or("");
+                    if attr_is_test(attr) {
+                        pending = true;
+                        if !regions.is_empty() {
+                            mark(&mut flags, line);
+                        }
+                    }
+                    i = k;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            b';' if pending && regions.is_empty() => {
+                // bodiless guarded item (`#[cfg(test)] use …;`)
+                pending = false;
+                i += 1;
+            }
+            b'{' => {
+                depth += 1;
+                if pending {
+                    regions.push(depth);
+                    pending = false;
+                }
+                if !regions.is_empty() {
+                    mark(&mut flags, line);
+                }
+                i += 1;
+            }
+            b'}' => {
+                if !regions.is_empty() {
+                    mark(&mut flags, line);
+                }
+                if regions.last() == Some(&depth) {
+                    regions.pop();
+                }
+                depth = depth.saturating_sub(1);
+                i += 1;
+            }
+            _ => {
+                if !regions.is_empty() {
+                    mark(&mut flags, line);
+                }
+                i += 1;
+            }
+        }
+    }
+    flags
+}
+
+fn mark(flags: &mut [bool], line: usize) {
+    if let Some(f) = flags.get_mut(line - 1) {
+        *f = true;
+    }
+}
+
+/// Does attribute text (the part inside `#[…]`) guard test-only code?
+/// Matches `test`, `cfg(test)`, `cfg(all(test, …))`, `tokio::test`, …:
+/// the word `test` must appear with identifier boundaries, and the
+/// attribute must be either a bare `…test` path or a `cfg(…)`.
+fn attr_is_test(attr: &str) -> bool {
+    let t = attr.trim();
+    let has_test_word = {
+        let bytes = t.as_bytes();
+        let mut found = false;
+        let mut i = 0;
+        while let Some(off) = t[i..].find("test") {
+            let s = i + off;
+            let before_ok = s == 0 || !is_ident_byte(bytes[s - 1]);
+            let after = s + 4;
+            let after_ok = after >= bytes.len() || !is_ident_byte(bytes[after]);
+            if before_ok && after_ok {
+                found = true;
+                break;
+            }
+            i = s + 1;
+        }
+        found
+    };
+    has_test_word && (t.starts_with("cfg") || t.ends_with("test"))
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(src: &str) -> Vec<bool> {
+        test_lines(&super::super::lexer::mask(src).code)
+    }
+
+    #[test]
+    fn cfg_test_mod_is_scoped_to_its_braces() {
+        let src = "fn prod() {\n    work();\n}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn prod2() {}\n";
+        let f = flags(src);
+        assert!(!f[0] && !f[1] && !f[2], "production code untouched");
+        assert!(f[4] && f[5] && f[6], "mod tests body is test scope");
+        assert!(!f[7], "code after the close brace is production again");
+    }
+
+    #[test]
+    fn test_fn_attribute_scopes_one_function() {
+        let src = "#[test]\nfn t() {\n    x.unwrap();\n}\nfn prod() {}\n";
+        let f = flags(src);
+        assert!(f[1] && f[2] && f[3]);
+        assert!(!f[4]);
+    }
+
+    #[test]
+    fn cfg_all_test_counts_and_bodiless_items_do_not_leak() {
+        let src = "#[cfg(all(test, unix))]\nuse foo::bar;\nfn prod() {\n    x();\n}\n";
+        let f = flags(src);
+        assert!(!f[2] && !f[3], "`;` must cancel the pending attribute");
+    }
+
+    #[test]
+    fn non_test_attrs_do_not_open_regions() {
+        let src = "#[cfg(unix)]\nfn prod() {\n    x.unwrap();\n}\n#[derive(Debug)]\nstruct S {\n    a: u8,\n}\n";
+        let f = flags(src);
+        assert!(f.iter().all(|&x| !x), "no test scope anywhere: {f:?}");
+    }
+
+    #[test]
+    fn testutil_like_words_do_not_match() {
+        // `attest`, `testing`… must not read as the word `test`
+        assert!(!attr_is_test("cfg(feature = \"attest\")"));
+        assert!(attr_is_test("cfg(test)"));
+        assert!(attr_is_test("test"));
+        assert!(attr_is_test("tokio::test"));
+        assert!(!attr_is_test("derive(Debug)"));
+    }
+
+    #[test]
+    fn nested_braces_inside_test_mod_stay_test() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() {\n        if x { y.unwrap(); }\n    }\n}\n";
+        let f = flags(src);
+        assert!(f[2] && f[3] && f[4]);
+    }
+}

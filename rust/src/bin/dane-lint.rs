@@ -1,0 +1,88 @@
+//! `dane-lint` — the repo's in-tree static-analysis gate.
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo run --bin dane-lint            # lint the enclosing repo
+//! cargo run --bin dane-lint -- --root /path/to/repo
+//! ```
+//!
+//! Walks `rust/src`, runs the five invariant rules (panic-freedom,
+//! densify, wire-totality, csv-schema, determinism — see
+//! `dane::analysis`), and prints one `file:line: rule: message` per
+//! finding. Exit status: 0 clean, 1 violations found, 2 usage or I/O
+//! error. CI runs this in the `lint` job; locally it needs no flags.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("dane-lint: --root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                eprintln!("usage: dane-lint [--root <repo-root>]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("dane-lint: unknown argument {other:?} (try --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let root = match root.map(Ok).unwrap_or_else(find_root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("dane-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    match dane::analysis::lint_repo(&root) {
+        Ok(diags) if diags.is_empty() => {
+            println!("dane-lint: clean ({})", root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(diags) => {
+            for d in &diags {
+                println!("{d}");
+            }
+            println!("dane-lint: {} violation(s)", diags.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("dane-lint: I/O error under {}: {e}", root.display());
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// Walk upward from the current directory to the first directory that
+/// contains `rust/src` (the repo root).
+fn find_root() -> Result<PathBuf, String> {
+    let start = std::env::current_dir().map_err(|e| e.to_string())?;
+    let mut dir = start.as_path();
+    loop {
+        if dir.join("rust").join("src").is_dir() {
+            return Ok(dir.to_path_buf());
+        }
+        match dir.parent() {
+            Some(p) => dir = p,
+            None => {
+                return Err(format!(
+                    "no `rust/src` found in {} or any parent; pass --root",
+                    start.display()
+                ))
+            }
+        }
+    }
+}

@@ -327,11 +327,15 @@ impl<'a> Reader<'a> {
     }
 
     fn u32(&mut self) -> std::result::Result<u32, String> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        let b: [u8; 4] = b.try_into().map_err(|_| "truncated checkpoint".to_string())?;
+        Ok(u32::from_le_bytes(b))
     }
 
     fn u64(&mut self) -> std::result::Result<u64, String> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let b = self.take(8)?;
+        let b: [u8; 8] = b.try_into().map_err(|_| "truncated checkpoint".to_string())?;
+        Ok(u64::from_le_bytes(b))
     }
 
     fn f64(&mut self) -> std::result::Result<f64, String> {

@@ -221,13 +221,8 @@ pub fn run_experiment_full(
         }
     }
 
-    if opts.checkpoint.is_some() || opts.resume.is_some() {
+    if let Some(dest) = opts.checkpoint.clone().or_else(|| opts.resume.clone()) {
         let hash = checkpoint::config_hash(&cfg.to_json_string());
-        let dest = opts
-            .checkpoint
-            .clone()
-            .or_else(|| opts.resume.clone())
-            .expect("checkpoint or resume path present");
         let mut spec = CkptSpec::new(dest, opts.ckpt_every.max(1), hash);
         if let Some(rp) = &opts.resume {
             let c = Checkpoint::load(rp)?;

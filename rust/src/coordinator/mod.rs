@@ -588,6 +588,21 @@ impl Cluster for SerialCluster {
     }
 }
 
+/// Spawn an OS thread or die trying. This is the one place the
+/// concurrent engines are allowed to abort: thread creation fails only
+/// when the OS is out of resources at cluster bring-up (before any
+/// round has run), there is no round state to unwind, and returning a
+/// half-wired cluster would be worse than stopping. Every other panic
+/// on the coordinator/comm/worker surface is a `dane-lint` error.
+pub(crate) fn must_spawn<F, T>(builder: std::thread::Builder, f: F) -> std::thread::JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    // lint:allow(panic-freedom): OS thread exhaustion at bring-up has no recovery path; documented above
+    builder.spawn(f).unwrap_or_else(|e| panic!("spawn thread: {e}"))
+}
+
 pub(crate) fn row_sq_norm(shard: &Shard, i: usize) -> f64 {
     match &shard.x {
         crate::linalg::DataMatrix::Dense(m) => {

@@ -15,8 +15,8 @@
 //!   its own worker child processes on loopback (`--listen 127.0.0.1:0`,
 //!   parsing the announced port), so `engine: "tcp"` works with zero
 //!   setup. The worker binary is the current executable, overridable via
-//!   the `DANE_WORKER_BIN` env var (the test harness points it at the
-//!   compiled `dane` bin).
+//!   [`set_worker_binary`] (what the test harness uses) or the
+//!   `DANE_WORKER_BIN` env var (the CLI-facing knob).
 //!
 //! ## Collective execution ([`ExecTopology`])
 //!
@@ -318,8 +318,9 @@ impl TcpCluster {
     }
 
     /// Spawn `m` worker child processes on loopback and connect to them.
-    /// The worker binary is `$DANE_WORKER_BIN` if set, else the current
-    /// executable (which is the `dane` bin when launched from the CLI).
+    /// The worker binary is the [`set_worker_binary`] override if set,
+    /// else `$DANE_WORKER_BIN`, else the current executable (which is
+    /// the `dane` bin when launched from the CLI).
     #[allow(clippy::too_many_arguments)]
     pub fn self_hosted(
         ds: &Dataset,
@@ -566,7 +567,9 @@ impl TcpCluster {
         let mut links = Vec::with_capacity(rank_sets.len());
         let mut ctrl = Vec::with_capacity(rank_sets.len());
         for ranks in rank_sets {
-            let stream = streams[ranks[0]].take().expect("root stream unclaimed");
+            let stream = streams[ranks[0]].take().ok_or_else(|| {
+                Error::Runtime(format!("tcp: root stream {} claimed twice", ranks[0]))
+            })?;
             ctrl.push(stream.try_clone().map_err(|e| {
                 Error::Runtime(format!("tcp: clone control handle: {e}"))
             })?);
@@ -1168,9 +1171,8 @@ fn read_setup_ack(
 fn spawn_link_io(mut stream: TcpStream, root: usize) -> LinkIo {
     let (job_tx, job_rx) = round_channel::<LinkJob>();
     let (batch_tx, batch_rx) = round_channel::<LinkBatch>();
-    let join = std::thread::Builder::new()
-        .name(format!("dane-link-{root}"))
-        .spawn(move || {
+    let builder = std::thread::Builder::new().name(format!("dane-link-{root}"));
+    let join = super::must_spawn(builder, move || {
             let mut frame = Vec::new();
             let mut dead: Option<String> = None;
             while let Ok(LinkJob { frame: out, expect }) = job_rx.recv() {
@@ -1216,12 +1218,28 @@ fn spawn_link_io(mut stream: TcpStream, root: usize) -> LinkIo {
                     break; // leader gone
                 }
             }
-        })
-        .expect("spawn link io thread");
+    });
     LinkIo::Thread { tx: job_tx, rx: batch_rx, join: Some(join) }
 }
 
+/// Process-wide worker-binary override set by [`set_worker_binary`].
+/// Tests use this instead of `std::env::set_var("DANE_WORKER_BIN", …)`
+/// so Miri/TSan never observe a `setenv`/`getenv` race between threads.
+static WORKER_BIN_OVERRIDE: std::sync::OnceLock<PathBuf> = std::sync::OnceLock::new();
+
+/// Point every subsequently spawned `TcpCluster` at `bin` as the worker
+/// executable. First caller wins; later calls (e.g. one per test) are
+/// no-ops, which is exactly what concurrent tests in one process want.
+/// Takes precedence over the `DANE_WORKER_BIN` environment variable,
+/// which remains the CLI-facing knob.
+pub fn set_worker_binary(bin: impl Into<PathBuf>) {
+    let _ = WORKER_BIN_OVERRIDE.set(bin.into());
+}
+
 fn worker_binary() -> Result<PathBuf> {
+    if let Some(p) = WORKER_BIN_OVERRIDE.get() {
+        return Ok(p.clone());
+    }
     if let Ok(p) = std::env::var("DANE_WORKER_BIN") {
         return Ok(PathBuf::from(p));
     }

@@ -320,7 +320,9 @@ impl ThreadedCluster {
     fn tree_round(&mut self, cmd: &Cmd) -> Result<Vec<Reply>> {
         let m = self.weights.len();
         let timeout = self.reply_timeout;
-        let tree = self.tree.as_mut().expect("tree wiring");
+        let tree = self.tree.as_mut().ok_or_else(|| {
+            crate::Error::Runtime("tree round on a cluster without tree wiring".into())
+        })?;
         let mut gather = RankGather::new(m);
         let mut sent = Vec::with_capacity(tree.links.len());
         for l in &tree.links {
@@ -376,7 +378,9 @@ impl ThreadedCluster {
     /// single-worker sends.
     fn tree_single(&mut self, rank: usize, cmd: Cmd) -> Result<Reply> {
         let timeout = self.reply_timeout;
-        let tree = self.tree.as_mut().expect("tree wiring");
+        let tree = self.tree.as_mut().ok_or_else(|| {
+            crate::Error::Runtime("tree round on a cluster without tree wiring".into())
+        })?;
         let link = tree
             .links
             .iter_mut()
@@ -597,9 +601,8 @@ fn spawn_worker(
 ) -> WorkerHandle {
     let (cmd_tx, cmd_rx) = round_channel::<Cmd>();
     let (rep_tx, rep_rx) = round_channel::<Reply>();
-    let join = std::thread::Builder::new()
-        .name(format!("dane-worker-{id}"))
-        .spawn(move || {
+    let builder = std::thread::Builder::new().name(format!("dane-worker-{id}"));
+    let join = super::must_spawn(builder, move || {
             let mut worker = crate::worker::Worker::new(id, shard, obj);
             worker.set_gram_threads(gram_threads);
             // Leader dropping its endpoints disconnects the channel and
@@ -621,9 +624,18 @@ fn spawn_worker(
                     break;
                 }
             }
-        })
-        .expect("spawn worker thread");
+    });
     WorkerHandle { tx: cmd_tx, rx: rep_rx, join: Some(join) }
+}
+
+/// Take a channel end out of the wiring table exactly once. The tree
+/// plan visits every rank once as a child (or root link) and once as
+/// itself, so a second claim is a construction-order bug in this file,
+/// not a runtime condition — abort loudly rather than wiring a cluster
+/// that would deadlock on round one.
+fn claim<T>(slot: &mut Option<T>, what: &str, rank: usize) -> T {
+    // lint:allow(panic-freedom): double-claim is a local wiring bug caught at bring-up, never reachable from worker input
+    slot.take().unwrap_or_else(|| panic!("{what} for rank {rank} already claimed"))
 }
 
 /// Build the binomial relay wiring: one command/reply channel pair per
@@ -657,23 +669,24 @@ fn build_tree_wiring(
             child_links[r].push(TreeChildLink {
                 rank: c,
                 ranks: plan.subtree_ranks(c),
-                tx: cmd_tx[c].take().expect("child cmd end unclaimed"),
-                rx: rep_rx[c].take().expect("child rep end unclaimed"),
+                tx: claim(&mut cmd_tx[c], "child cmd end", c),
+                rx: claim(&mut rep_rx[c], "child rep end", c),
             });
         }
     }
     let mut joins = Vec::with_capacity(m);
     let mut child_links = child_links.into_iter();
     for (id, shard) in shards.into_iter().enumerate() {
-        let links = child_links.next().expect("one link set per worker");
+        // one link set per worker by construction (built in the loop above)
+        let links = child_links.next().unwrap_or_default();
         joins.push(Some(spawn_tree_worker(
             id,
             shard,
             obj.clone(),
             gram_threads,
             kills[id].clone(),
-            cmd_rx[id].take().expect("own cmd end unclaimed"),
-            rep_tx[id].take().expect("own rep end unclaimed"),
+            claim(&mut cmd_rx[id], "own cmd end", id),
+            claim(&mut rep_tx[id], "own rep end", id),
             links,
         )));
     }
@@ -684,8 +697,8 @@ fn build_tree_wiring(
             let root = ranks[0];
             TreeRootLink {
                 ranks: ranks.clone(),
-                tx: cmd_tx[root].take().expect("root cmd end unclaimed"),
-                rx: rep_rx[root].take().expect("root rep end unclaimed"),
+                tx: claim(&mut cmd_tx[root], "root cmd end", root),
+                rx: claim(&mut rep_rx[root], "root rep end", root),
                 dead: None,
             }
         })
@@ -709,9 +722,8 @@ fn spawn_tree_worker(
     parent_tx: RoundSender<Reply>,
     children: Vec<TreeChildLink>,
 ) -> JoinHandle<()> {
-    std::thread::Builder::new()
-        .name(format!("dane-tree-worker-{id}"))
-        .spawn(move || {
+    let builder = std::thread::Builder::new().name(format!("dane-tree-worker-{id}"));
+    super::must_spawn(builder, move || {
             let mut worker = crate::worker::Worker::new(id, shard, obj);
             worker.set_gram_threads(gram_threads);
             let child_died = |rank: usize| {
@@ -774,8 +786,7 @@ fn spawn_tree_worker(
                     }
                 }
             }
-        })
-        .expect("spawn tree worker thread")
+    })
 }
 
 impl ThreadedCluster {

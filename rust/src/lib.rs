@@ -46,7 +46,20 @@
 //!
 //! See `examples/` for runnable end-to-end drivers and `rust/benches/` for
 //! the harnesses that regenerate every table and figure in the paper.
+//!
+//! ## Safety policy
+//!
+//! The crate is `#![forbid(unsafe_code)]`: every transport, codec and
+//! solver is safe Rust, so the "no panic reachable from a worker
+//! failure or a hostile byte stream" invariant can be audited at the
+//! source level (and is — see [`analysis`], the in-tree `dane-lint`
+//! pass that CI runs). The only `unsafe` in the repository is a
+//! counting `GlobalAlloc` inside `tests/alloc_steady_state.rs`, which
+//! is a test binary, not part of this crate.
 
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod comm;
 pub mod config;
 pub mod coordinator;

@@ -29,7 +29,11 @@ use crate::{Error, Result};
 /// interface for the operations the optimization stack needs.
 ///
 /// Rows are samples, columns are features (n x d).
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is representation-exact (dense == dense, sparse ==
+/// sparse, never across): shard-identity checks compare without
+/// densifying, and a dense/sparse mix-up is a bug worth failing on.
+#[derive(Debug, Clone, PartialEq)]
 pub enum DataMatrix {
     Dense(DenseMatrix),
     Sparse(CsrMatrix),

@@ -69,16 +69,17 @@ resumable state every K rounds and `--resume` continues a crashed run
 bit-exactly. `worker --listen` serves leaders in a loop (redial after
 a fault re-initializes it); `--once` exits after the first session.";
 
-/// Tiny flag parser: --key value pairs after the subcommand.
+/// Tiny flag parser: --key value pairs after the subcommand. Ordered
+/// maps so error messages (which iterate the keys) are deterministic.
 struct Args {
-    flags: std::collections::HashMap<String, String>,
-    bools: std::collections::HashSet<String>,
+    flags: std::collections::BTreeMap<String, String>,
+    bools: std::collections::BTreeSet<String>,
 }
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Args, String> {
-        let mut flags = std::collections::HashMap::new();
-        let mut bools = std::collections::HashSet::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut bools = std::collections::BTreeSet::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];

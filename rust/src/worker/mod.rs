@@ -339,7 +339,9 @@ impl Worker {
             self.quad =
                 Some(QuadCache::build_with_threads(&self.shard, self.gram_threads)?);
         }
-        Ok(self.quad.as_mut().unwrap())
+        self.quad.as_mut().ok_or_else(|| {
+            crate::Error::Runtime("quad cache vanished after build".into())
+        })
     }
 }
 

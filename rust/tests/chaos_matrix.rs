@@ -32,10 +32,8 @@ const SHARD_SEED: u64 = 3;
 const ALGOS: [&str; 6] = ["dane", "gd", "agd", "admm", "osa", "lbfgs"];
 
 fn ensure_worker_bin() {
-    // One set_var per process, ordered before every read (see
-    // tcp_cluster.rs::ensure_worker_bin for the setenv/getenv UB note).
-    static ONCE: std::sync::Once = std::sync::Once::new();
-    ONCE.call_once(|| std::env::set_var("DANE_WORKER_BIN", env!("CARGO_BIN_EXE_dane")));
+    // Env-free override (see tcp_cluster.rs::ensure_worker_bin).
+    dane::coordinator::tcp::set_worker_binary(env!("CARGO_BIN_EXE_dane"));
 }
 
 fn dataset() -> Dataset {

@@ -370,10 +370,8 @@ fn tcp_killing_cluster_at(
     victim: usize,
     topology: ExecTopology,
 ) -> KillChildAt<TcpCluster> {
-    // One set_var per process, ordered before every read (see
-    // tcp_cluster.rs::ensure_worker_bin for the setenv/getenv UB note).
-    static ONCE: std::sync::Once = std::sync::Once::new();
-    ONCE.call_once(|| std::env::set_var("DANE_WORKER_BIN", env!("CARGO_BIN_EXE_dane")));
+    // Env-free override (see tcp_cluster.rs::ensure_worker_bin).
+    dane::coordinator::tcp::set_worker_binary(env!("CARGO_BIN_EXE_dane"));
     let ds = synthetic_fig2(256, 6, 0.005, 4);
     let inner = TcpCluster::self_hosted(
         &ds,

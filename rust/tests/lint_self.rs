@@ -1,0 +1,256 @@
+//! `dane-lint` linting itself: fixture snippets trip every rule, their
+//! `lint:allow`-annotated twins pass, marker misuse is reported, and —
+//! the test that gives the other suites their teeth — the real tree
+//! lints clean through the exact `lint_repo` path CI runs.
+//!
+//! The fixture repos are built on disk (util::tempdir) so the binary's
+//! walk/exit-code contract is exercised end to end, not just the rule
+//! functions.
+
+use std::path::Path;
+use std::process::Command;
+
+use dane::analysis::{apply_allows, rules, Diagnostic, FileAnalysis};
+use dane::util::tempdir::TempDir;
+
+fn fa(rel: &str, src: &str) -> FileAnalysis {
+    FileAnalysis::new(rel, src)
+}
+
+/// Diagnostics for one file after allow-filtering: what `lint_repo`
+/// would report for it.
+fn lint_one(rel: &str, src: &str, rule: fn(&FileAnalysis) -> Vec<Diagnostic>) -> Vec<Diagnostic> {
+    let f = fa(rel, src);
+    apply_allows(rule(&f), &[&f])
+}
+
+// ------------------------------------------------- per-file rules
+
+#[test]
+fn panic_freedom_trips_and_its_allowed_twin_passes() {
+    let bad = "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    let d = lint_one("rust/src/comm/fixture.rs", bad, rules::panic_freedom);
+    assert_eq!(d.len(), 1, "{d:?}");
+    assert_eq!(d[0].rule, "panic-freedom");
+    assert_eq!(d[0].line, 2);
+
+    let twin = "pub fn f(x: Option<u32>) -> u32 {\n    \
+                // lint:allow(panic-freedom): fixture twin, justified\n    \
+                x.unwrap()\n}\n";
+    let d = lint_one("rust/src/comm/fixture.rs", twin, rules::panic_freedom);
+    assert!(d.is_empty(), "allowed twin must pass (no stale either): {d:?}");
+}
+
+#[test]
+fn panic_freedom_exempts_test_scope_and_foreign_paths() {
+    let in_tests = "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u32>) { x.unwrap(); }\n}\n";
+    assert!(lint_one("rust/src/comm/fixture.rs", in_tests, rules::panic_freedom).is_empty());
+    // linalg/ is outside the panic-freedom scope entirely
+    let bad = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+    assert!(lint_one("rust/src/linalg/fixture.rs", bad, rules::panic_freedom).is_empty());
+}
+
+#[test]
+fn densify_trips_and_its_allowed_twin_passes() {
+    let bad = "fn f(m: &DataMatrix) {\n    let _ = m.to_dense();\n}\n";
+    let d = lint_one("rust/src/solver/fixture.rs", bad, rules::densify);
+    assert_eq!(d.len(), 1, "{d:?}");
+    assert_eq!(d[0].rule, "densify");
+
+    let twin = "fn f(m: &DataMatrix) {\n    \
+                let _ = m.to_dense(); // lint:allow(densify): d is tiny here by contract\n}\n";
+    assert!(lint_one("rust/src/solver/fixture.rs", twin, rules::densify).is_empty());
+    // inside linalg/ the call is the implementation, not a violation
+    assert!(lint_one("rust/src/linalg/fixture.rs", bad, rules::densify).is_empty());
+}
+
+#[test]
+fn determinism_trips_on_clocks_and_hash_iteration() {
+    let clock = "fn f() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+    let d = lint_one("rust/src/solver/fixture.rs", clock, rules::determinism);
+    assert_eq!(d.len(), 1, "{d:?}");
+    assert_eq!(d[0].rule, "determinism");
+    // the timing allowlist really does exempt the metrics clocks
+    assert!(lint_one("rust/src/util/bench.rs", clock, rules::determinism).is_empty());
+
+    let iter = "use std::collections::HashMap;\n\
+                fn f(m: &HashMap<String, u64>) -> u64 {\n    m.values().sum()\n}\n";
+    let d = lint_one("rust/src/solver/fixture.rs", iter, rules::determinism);
+    assert_eq!(d.len(), 1, "{d:?}");
+    assert!(d[0].msg.contains("values"), "{d:?}");
+
+    // ordered maps iterate deterministically: not a violation
+    let btree = "use std::collections::BTreeMap;\n\
+                 fn f(m: &BTreeMap<String, u64>) -> u64 {\n    m.values().sum()\n}\n";
+    assert!(lint_one("rust/src/solver/fixture.rs", btree, rules::determinism).is_empty());
+}
+
+#[test]
+fn marker_misuse_is_itself_a_violation() {
+    // unknown rule
+    let d = lint_one(
+        "rust/src/comm/fixture.rs",
+        "// lint:allow(bogus-rule): why\nfn f() {}\n",
+        rules::panic_freedom,
+    );
+    assert_eq!(d.len(), 1, "{d:?}");
+    assert_eq!(d[0].rule, "lint-allow");
+    assert!(d[0].msg.contains("unknown rule"), "{d:?}");
+
+    // missing reason
+    let d = lint_one(
+        "rust/src/comm/fixture.rs",
+        "// lint:allow(panic-freedom)\nfn f() {}\n",
+        rules::panic_freedom,
+    );
+    assert_eq!(d.len(), 1, "{d:?}");
+    assert!(d[0].msg.contains("needs a reason"), "{d:?}");
+
+    // allow that suppresses nothing has gone stale
+    let d = lint_one(
+        "rust/src/comm/fixture.rs",
+        "fn f() {\n    // lint:allow(panic-freedom): fixed long ago\n    let _x = 1;\n}\n",
+        rules::panic_freedom,
+    );
+    assert_eq!(d.len(), 1, "{d:?}");
+    assert!(d[0].msg.contains("stale"), "{d:?}");
+}
+
+// ------------------------------------------------- fixture repos on disk
+
+/// A minimal repo that lints clean: a complete two-variant wire
+/// protocol with hostile-bytes coverage, an agreeing TraceRow/header
+/// pair, and a ci.yml whose column indices are in range.
+fn write_clean_repo(root: &Path) {
+    let w = |rel: &str, content: &str| {
+        let p = root.join(rel);
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(p, content).unwrap();
+    };
+    w(
+        "rust/src/comm/wire.rs",
+        "pub const CMD_INIT: u8 = 0x01;\n\
+         pub const REP_VEC: u8 = 0x81;\n\
+         pub enum Command {\n    Init(Vec<u8>),\n}\n\
+         pub enum Reply {\n    Vec(Vec<f64>),\n}\n\
+         fn put(buf: &mut Vec<u8>, c: &Command) {\n\
+         \x20   match c {\n        Command::Init(_) => buf.push(CMD_INIT),\n    }\n}\n\
+         fn put_reply(buf: &mut Vec<u8>, r: &Reply) {\n\
+         \x20   match r {\n        Reply::Vec(_) => buf.push(REP_VEC),\n    }\n}\n\
+         fn take(tag: u8) -> Result<(), ()> {\n\
+         \x20   match tag {\n        CMD_INIT => Ok(()),\n        REP_VEC => Ok(()),\n\
+         \x20       _ => Err(()),\n    }\n}\n",
+    );
+    w(
+        "rust/tests/wire_codec.rs",
+        "#[test]\nfn truncated_frames_rejected() {\n\
+         \x20   let _c = Command::Init(vec![]);\n    let _r = Reply::Vec(vec![]);\n}\n",
+    );
+    w(
+        "rust/src/metrics/trace.rs",
+        "pub struct TraceRow {\n    pub round: usize,\n    pub objective: f64,\n}\n",
+    );
+    w(
+        "rust/src/metrics/emit.rs",
+        "pub const CSV_HEADER: &str = \"round,objective\";\n\
+         fn row() {\n    let _ = format!(\"{},{:.17e}\", 1, 2.0);\n}\n",
+    );
+    w(
+        ".github/workflows/ci.yml",
+        "run: awk -F, '{print $2}' trace.csv | cut -d, -f1-2 # objective (2)\n",
+    );
+}
+
+#[test]
+fn fixture_repo_lints_clean_through_lint_repo() {
+    let dir = TempDir::new("lint-clean").unwrap();
+    write_clean_repo(dir.path());
+    let d = dane::analysis::lint_repo(dir.path()).unwrap();
+    assert!(d.is_empty(), "{d:?}");
+}
+
+#[test]
+fn cross_file_rules_trip_on_broken_fixture_repo() {
+    let dir = TempDir::new("lint-broken").unwrap();
+    write_clean_repo(dir.path());
+    // break the wire: a variant with no tag/encode/decode/coverage
+    let wire = dir.path().join("rust/src/comm/wire.rs");
+    let src = std::fs::read_to_string(&wire).unwrap();
+    std::fs::write(&wire, src.replace("    Init(Vec<u8>),\n", "    Init(Vec<u8>),\n    RowSq,\n"))
+        .unwrap();
+    // break the csv: ci.yml reads a column past the header
+    std::fs::write(
+        dir.path().join(".github/workflows/ci.yml"),
+        "run: awk -F, '{print $9}' trace.csv\n",
+    )
+    .unwrap();
+    let d = dane::analysis::lint_repo(dir.path()).unwrap();
+    let msgs: Vec<&str> = d.iter().map(|x| x.msg.as_str()).collect();
+    assert!(
+        msgs.iter().any(|m| m.contains("`Command::RowSq` has no tag constant")),
+        "{msgs:?}"
+    );
+    assert!(msgs.iter().any(|m| m.contains("`$9` is out of range")), "{msgs:?}");
+    assert!(d.iter().all(|x| x.rule == "wire-totality" || x.rule == "csv-schema"), "{d:?}");
+}
+
+// ------------------------------------------------- the binary contract
+
+#[test]
+fn binary_fails_with_file_line_diagnostics_then_passes_once_allowed() {
+    let dir = TempDir::new("lint-bin").unwrap();
+    write_clean_repo(dir.path());
+    let bad = dir.path().join("rust/src/comm/bad.rs");
+    std::fs::write(&bad, "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n").unwrap();
+
+    let out = Command::new(env!("CARGO_BIN_EXE_dane-lint"))
+        .args(["--root"])
+        .arg(dir.path())
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(1), "stdout: {stdout}");
+    assert!(
+        stdout.contains("rust/src/comm/bad.rs:2: panic-freedom:"),
+        "diagnostics must be file:line-addressed: {stdout}"
+    );
+    assert!(stdout.contains("1 violation(s)"), "{stdout}");
+
+    std::fs::write(
+        &bad,
+        "pub fn f(x: Option<u32>) -> u32 {\n    \
+         // lint:allow(panic-freedom): fixture, input is produced in-process\n    \
+         x.unwrap()\n}\n",
+    )
+    .unwrap();
+    let out = Command::new(env!("CARGO_BIN_EXE_dane-lint"))
+        .args(["--root"])
+        .arg(dir.path())
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stdout));
+}
+
+// ------------------------------------------------- the real tree
+
+/// The gate itself: the repository this test compiles from has zero
+/// violations. Every diagnostic below is a regression against an
+/// invariant the tree has held since the rule landed.
+#[test]
+fn the_real_repo_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap();
+    let d = dane::analysis::lint_repo(root).unwrap();
+    assert!(
+        d.is_empty(),
+        "dane-lint found violations in the real tree:\n{}",
+        d.iter().map(|x| format!("  {x}\n")).collect::<String>()
+    );
+
+    let out = Command::new(env!("CARGO_BIN_EXE_dane-lint"))
+        .args(["--root"])
+        .arg(root)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stdout));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("clean"));
+}

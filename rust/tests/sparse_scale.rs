@@ -32,8 +32,7 @@ const LAMBDA: f64 = 0.1;
 const ROUNDS: usize = 2;
 
 fn ensure_worker_bin() {
-    static ONCE: std::sync::Once = std::sync::Once::new();
-    ONCE.call_once(|| std::env::set_var("DANE_WORKER_BIN", env!("CARGO_BIN_EXE_dane")));
+    dane::coordinator::tcp::set_worker_binary(env!("CARGO_BIN_EXE_dane"));
 }
 
 fn big_sparse() -> dane::data::Dataset {

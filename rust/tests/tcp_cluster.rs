@@ -14,7 +14,7 @@
 //!
 //! Self-hosted clusters need the `dane` binary for their worker
 //! children; tests run inside the test harness binary, so they point
-//! `DANE_WORKER_BIN` at the compiled CLI.
+//! the `set_worker_binary` override at the compiled CLI.
 
 use dane::comm::wire::{self, Reply};
 use dane::comm::ExecTopology;
@@ -34,12 +34,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 fn ensure_worker_bin() {
-    // Exactly one set_var, before any test thread can read the var
-    // through worker_binary(): every test calls this first and Once
-    // blocks until the closure is done, so no getenv races a setenv
-    // (concurrent setenv/getenv is UB on glibc).
-    static ONCE: std::sync::Once = std::sync::Once::new();
-    ONCE.call_once(|| std::env::set_var("DANE_WORKER_BIN", env!("CARGO_BIN_EXE_dane")));
+    // OnceLock-backed override: no env mutation, so Miri/TSan never see
+    // a setenv/getenv race (concurrent setenv/getenv is UB on glibc).
+    dane::coordinator::tcp::set_worker_binary(env!("CARGO_BIN_EXE_dane"));
 }
 
 fn fig2_cfg(engine: EngineKind) -> ExperimentConfig {

@@ -26,10 +26,8 @@ use dane::coordinator::driver::{run_experiment, RunResult};
 use dane::metrics::Trace;
 
 fn ensure_worker_bin() {
-    // One set_var before any read through worker_binary() (see
-    // tcp_cluster.rs::ensure_worker_bin for the setenv/getenv UB note).
-    static ONCE: std::sync::Once = std::sync::Once::new();
-    ONCE.call_once(|| std::env::set_var("DANE_WORKER_BIN", env!("CARGO_BIN_EXE_dane")));
+    // Env-free override (see tcp_cluster.rs::ensure_worker_bin).
+    dane::coordinator::tcp::set_worker_binary(env!("CARGO_BIN_EXE_dane"));
 }
 
 fn cfg(
