@@ -1,0 +1,210 @@
+//! Compression micro-benchmarks + the bytes-vs-loss table
+//! (EXPERIMENTS.md §Compression).
+//!
+//! Two layers:
+//!
+//! 1. **codec throughput** — encode/decode of each [`CodedVec`] codec
+//!    (f32 downcast, top-k sparsification, stochastic quantization) at
+//!    d = 4096, plus the leader-side `grad_cmd` path with its
+//!    error-feedback accumulator and the full `CompressedVec` frame
+//!    encode;
+//! 2. **bytes vs loss, end-to-end** — a DANE run on a real socket
+//!    cluster (in-process `worker::serve` sessions over loopback TCP,
+//!    same frames as worker processes) under each codec, recording the
+//!    final objective, the measured `wire_bytes`, and the
+//!    `payload_bytes_raw` counterfactual. This is the tentpole claim in
+//!    numbers: top-k (k = d/10) with error feedback matches the
+//!    uncompressed objective to < 1e-3 relative while moving >= 5x
+//!    fewer round bytes.
+//!
+//! The run is serialized to `BENCH_compress.json` at the repo root:
+//! the `dane-bench-v1` timing schema plus a `bytes_vs_loss` section.
+//! `BENCH_MEASURE_MS` / `BENCH_WARMUP_MS` shrink the run for CI's
+//! bench-smoke job; `BENCH_LABEL` overrides the git label.
+
+use dane::comm::compress::{Codec, CodedVec, LeaderCompressor};
+use dane::comm::wire::{self, Command};
+use dane::comm::{ExecTopology, NetModel};
+use dane::config::LossKind;
+use dane::coordinator::tcp::TcpCluster;
+use dane::coordinator::Cluster;
+use dane::data::{synthetic_fig2, Dataset};
+use dane::util::bench::{black_box, git_label, Bencher};
+use dane::util::{Json, Rng64};
+use dane::worker::serve;
+use std::net::TcpListener;
+use std::sync::Arc;
+
+/// Repo root (one above the cargo manifest), where the trajectory lands.
+const BENCH_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_compress.json");
+
+/// See `wire_micro::spawn_inprocess_workers`: loopback serve sessions
+/// indistinguishable from worker processes at the frame level.
+fn spawn_inprocess_workers(m: usize) -> Vec<String> {
+    let mut addrs = Vec::with_capacity(m);
+    for _ in 0..m {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        addrs.push(listener.local_addr().expect("local addr").to_string());
+        std::thread::spawn(move || {
+            let _ = serve::serve_listener(listener);
+        });
+    }
+    addrs
+}
+
+/// One end-to-end DANE run under `codec`; returns
+/// (final objective, round wire_bytes, payload_bytes_raw).
+fn bytes_vs_loss_run(
+    ds: &Dataset,
+    m: usize,
+    rounds: usize,
+    codec: Option<Codec>,
+) -> (f64, u64, u64) {
+    let addrs = spawn_inprocess_workers(m);
+    let mut c = TcpCluster::connect(
+        ds,
+        LossKind::Ridge,
+        0.01,
+        &addrs,
+        7,
+        NetModel::free(),
+        None,
+        None,
+        ExecTopology::Star,
+    )
+    .expect("tcp cluster over in-process workers");
+    if let Some(codec) = codec {
+        c.set_compression(codec, true, 11);
+    }
+    let d = ds.d();
+    let mut w = vec![0.0; d];
+    for _ in 0..rounds {
+        let (g, _) = c.grad_and_loss(&w).expect("grad round");
+        w = c.dane_round(&w, &g, 1.0, 0.0).expect("solve round");
+    }
+    // Snapshot the round traffic BEFORE the (uncompressed)
+    // instrumentation eval, so the ratio is codec round bytes only.
+    let stats = c.comm_stats();
+    let (_, objective) = c.eval_grad_loss(&w).expect("final eval");
+    (objective, stats.wire_bytes, stats.payload_bytes_raw)
+}
+
+fn main() {
+    let b = Bencher::from_env(700, 120, 40);
+    println!("== compress_micro (codecs d=4096; bytes-vs-loss m=4) ==");
+
+    // ---- codec throughput -------------------------------------------
+    let d = 4096usize;
+    let k = d / 10;
+    let mut rng = Rng64::seed_from_u64(3);
+    let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let mut dec = Vec::new();
+
+    let cases = [
+        ("f32", Codec::F32),
+        ("topk k=d/10", Codec::TopK { k }),
+        ("quant b=4", Codec::Quant { bits: 4 }),
+    ];
+    for (name, codec) in cases {
+        let mut enc_rng = Rng64::seed_from_u64(5);
+        b.bench(&format!("encode {name} d=4096"), || {
+            black_box(CodedVec::encode(codec, &x, &mut enc_rng));
+        });
+        let coded = CodedVec::encode(codec, &x, &mut Rng64::seed_from_u64(5));
+        b.bench(&format!("decode {name} d=4096"), || {
+            coded.decode_into(&mut dec);
+            black_box(&dec);
+        });
+    }
+
+    // leader path: compress + error-feedback accumulate in one call
+    let mut comp = LeaderCompressor::new(Codec::TopK { k }, true, 11);
+    b.bench("leader grad_cmd topk+ef d=4096", || {
+        black_box(comp.grad_cmd(&x));
+    });
+
+    // the full typed frame, as the engines put it on the socket
+    let payload = Arc::new(comp.grad_cmd(&x));
+    let mut buf = Vec::new();
+    b.bench("encode CompressedVec frame topk d=4096", || {
+        wire::encode_command(&Command::CompressedVec(payload.clone()), &mut buf)
+            .expect("encode frame");
+        black_box(&buf);
+    });
+
+    // ---- bytes vs loss, end-to-end ----------------------------------
+    let (m, dd, rounds) = (4usize, 512usize, 20usize);
+    let ds = synthetic_fig2(4096, dd, 0.005, 42);
+    let runs = [
+        ("none", None),
+        ("f32", Some(Codec::F32)),
+        ("topk k=d/10", Some(Codec::TopK { k: dd / 10 })),
+        ("quant b=4", Some(Codec::Quant { bits: 4 })),
+    ];
+    let mut table = Vec::new();
+    for (name, codec) in runs {
+        let (objective, wire, raw) = bytes_vs_loss_run(&ds, m, rounds, codec);
+        println!(
+            "codec {name:<12} objective {objective:.9e}  wire {wire:>9}  raw {raw:>9}  \
+             ratio {:.2}x",
+            raw as f64 / wire.max(1) as f64
+        );
+        table.push((name, objective, wire, raw));
+    }
+    let (base_obj, base_wire) = (table[0].1, table[0].2);
+    assert_eq!(
+        table[0].2, table[0].3,
+        "codec none must report payload_bytes_raw == wire_bytes"
+    );
+    let topk = &table[2];
+    let rel = (topk.1 - base_obj).abs() / base_obj.abs().max(f64::MIN_POSITIVE);
+    let ratio = base_wire as f64 / topk.2.max(1) as f64;
+    println!("top-k vs none: relative objective gap {rel:.3e}, byte ratio {ratio:.2}x");
+    assert!(
+        rel < 1e-3,
+        "top-k+EF final objective {:.9e} drifted {rel:.3e} from uncompressed {base_obj:.9e}",
+        topk.1
+    );
+    assert!(
+        ratio >= 5.0,
+        "top-k round bytes {} vs uncompressed {base_wire}: only {ratio:.2}x",
+        topk.2
+    );
+
+    // ---- JSON trajectory (timings + the bytes-vs-loss table) --------
+    let results: Vec<Json> = b
+        .records()
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(r.name.clone())),
+                ("median_ns", Json::num(r.median_ns)),
+                ("p25_ns", Json::num(r.p25_ns)),
+                ("p75_ns", Json::num(r.p75_ns)),
+                ("iters_per_sample", Json::num(r.iters_per_sample as f64)),
+                ("samples", Json::num(r.samples as f64)),
+            ])
+        })
+        .collect();
+    let bvl: Vec<Json> = table
+        .iter()
+        .map(|(name, objective, wire, raw)| {
+            Json::obj(vec![
+                ("codec", Json::str(*name)),
+                ("final_objective", Json::num(*objective)),
+                ("wire_bytes", Json::num(*wire as f64)),
+                ("payload_bytes_raw", Json::num(*raw as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::str("dane-bench-v1")),
+        ("bench", Json::str("compress_micro")),
+        ("label", Json::str(git_label())),
+        ("results", Json::Arr(results)),
+        ("bytes_vs_loss", Json::Arr(bvl)),
+    ]);
+    std::fs::write(BENCH_JSON, doc.to_string_pretty() + "\n")
+        .expect("write BENCH_compress.json");
+    println!("wrote {BENCH_JSON}");
+}

@@ -18,6 +18,15 @@ pub struct CommStats {
     /// included). Exactly zero on the in-memory engines — the
     /// modeled-vs-measured pair is the point of the column.
     pub wire_bytes: u64,
+    /// What `wire_bytes` *would have been* had every compressed round
+    /// frame carried its uncompressed f64 payload: `wire_bytes` plus
+    /// the per-frame savings of the active codec (see
+    /// [`crate::comm::compress`]). Equal to `wire_bytes` exactly when
+    /// `codec: none` — that identity is the CI trust anchor for the
+    /// column — and zero on the in-memory engines, like `wire_bytes`
+    /// itself. The compression ratio of a window is
+    /// `payload_bytes_raw / wire_bytes`.
+    pub payload_bytes_raw: u64,
     /// One-time bring-up bytes measured on a real transport (Init or
     /// InitRef frames, Peers frames, and their acks). O(n·d) when
     /// shards go by value, O(m) when they go by reference
@@ -43,6 +52,7 @@ impl CommStats {
         self.bytes += other.bytes;
         self.modeled_seconds += other.modeled_seconds;
         self.wire_bytes += other.wire_bytes;
+        self.payload_bytes_raw += other.payload_bytes_raw;
         self.startup_bytes += other.startup_bytes;
         // Snapshot fields, not counters: a merged window reports the
         // last snapshot's quorum and the total recoveries across

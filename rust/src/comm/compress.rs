@@ -1,0 +1,714 @@
+//! Wire-level payload compression with error feedback.
+//!
+//! Three codecs shrink the O(d) round vectors that dominate DANE/GD/AGD
+//! traffic:
+//!
+//! - `F32` — per-element downcast to `f32` (2x, deterministic, lossy in the
+//!   low mantissa bits only).
+//! - `TopK { k }` — keep the `k` entries of largest magnitude; ties break
+//!   toward the lower index so the selected support is identical on every
+//!   platform. Indices travel sorted ascending.
+//! - `Quant { bits }` — QSGD-style stochastic quantization against the
+//!   vector's L-inf norm: each entry becomes a sign bit plus a `bits`-bit
+//!   level, rounded stochastically from a seeded [`Rng64`] stream so both
+//!   engines produce byte-identical payloads.
+//!
+//! Lossy codecs alone stall convergence; pairing them with error-feedback
+//! accumulators (Islamov–Qian–Richtarik 2021) restores it. Each direction
+//! of each compressed stream keeps a residual `e`: we transmit
+//! `c = C(x + e)` and update `e <- (x + e) - D(c)`, so quantization error
+//! is re-injected on later rounds instead of being lost.
+//!
+//! The leader holds one [`LeaderCompressor`] per cluster (streams for the
+//! broadcast iterate and gradient); each worker holds a
+//! [`WorkerCompressor`] (streams for its gradient and solve replies).
+//! Worker quantization seeds are derived from the per-round seed carried in
+//! the command spec mixed with the worker rank, so replies are reproducible
+//! without any shared state.
+//!
+//! Everything here is on the coordinator/worker hot path and must never
+//! panic on any input (dane-lint panic-freedom applies to this module).
+
+use crate::util::rng::Rng64;
+
+/// Stream identifiers folded into quantization seeds so the five
+/// compressed directions draw from disjoint random streams.
+const STREAM_GRAD_W: u64 = 1;
+const STREAM_SOLVE_WPREV: u64 = 2;
+const STREAM_SOLVE_G: u64 = 3;
+const STREAM_GRAD_REPLY: u64 = 4;
+const STREAM_SOLVE_REPLY: u64 = 5;
+
+/// Frame overhead shared by every wire frame: 4-byte length prefix,
+/// 1 version byte, 1 tag byte. Mirrors the layout in `comm::wire`.
+const FRAME_OVERHEAD: u64 = 6;
+
+/// splitmix64 finalizer; good avalanche for cheap seed derivation.
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Seed for a leader-side stream at a given round.
+fn stream_seed(base: u64, stream: u64, round: u64) -> u64 {
+    let s = stream.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let r = round.wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+    mix(base ^ s ^ r)
+}
+
+/// Seed a worker derives for its reply from the spec seed and its rank.
+pub fn reply_seed_for_rank(reply_seed: u64, rank: u64) -> u64 {
+    mix(reply_seed ^ rank.wrapping_mul(0xD6E8_FEB8_6659_FD93))
+}
+
+/// Which codec to apply to round payloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    /// Downcast every element to `f32`.
+    F32,
+    /// Keep the `k` largest-magnitude entries (lower index wins ties).
+    TopK { k: usize },
+    /// Seeded stochastic quantization with `bits` level bits per element
+    /// (plus one sign bit). `bits` must be in `1..=8`.
+    Quant { bits: u8 },
+}
+
+impl Codec {
+    /// Short human-readable name for logs and bench output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::F32 => "f32",
+            Codec::TopK { .. } => "topk",
+            Codec::Quant { .. } => "quant",
+        }
+    }
+}
+
+/// Which round operation a compressed command stands in for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressedOp {
+    /// `Command::GradLoss` — one broadcast vector (the iterate), reply is a
+    /// gradient plus local loss.
+    GradLoss,
+    /// `Command::DaneSolve` — two broadcast vectors (`w_prev`, `g`) plus
+    /// `eta`/`mu`, reply is the local minimizer.
+    DaneSolve,
+}
+
+impl CompressedOp {
+    /// Number of broadcast vectors this operation carries.
+    pub fn nvecs(&self) -> usize {
+        match self {
+            CompressedOp::GradLoss => 1,
+            CompressedOp::DaneSolve => 2,
+        }
+    }
+}
+
+/// How the worker must compress its reply: codec, whether to run its
+/// error-feedback accumulator, and the round's base quantization seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplySpec {
+    pub codec: Codec,
+    pub error_feedback: bool,
+    pub seed: u64,
+}
+
+/// A compressed vector as it travels on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CodedVec {
+    F32 { data: Vec<f32> },
+    TopK { dim: usize, idx: Vec<u32>, val: Vec<f64> },
+    Quant { dim: usize, norm: f64, bits: u8, packed: Vec<u8> },
+}
+
+/// Payload of `Command::CompressedVec`: a round command whose vectors are
+/// codec-encoded, plus the spec the worker must use for its reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressedCmd {
+    pub op: CompressedOp,
+    pub eta: f64,
+    pub mu: f64,
+    pub spec: ReplySpec,
+    pub vecs: Vec<CodedVec>,
+}
+
+/// Payload of `Reply::CompressedVec`: a codec-encoded result vector plus
+/// the scalar local loss when the operation produces one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressedReply {
+    pub loss: Option<f64>,
+    pub vec: CodedVec,
+}
+
+impl CodedVec {
+    /// Logical (decompressed) dimension.
+    pub fn dim(&self) -> usize {
+        match self {
+            CodedVec::F32 { data } => data.len(),
+            CodedVec::TopK { dim, .. } => *dim,
+            CodedVec::Quant { dim, .. } => *dim,
+        }
+    }
+
+    /// Exact number of bytes this vector occupies inside a frame body
+    /// (codec byte included). Must agree with the `comm::wire` encoding;
+    /// pinned by a test there.
+    pub fn wire_len(&self) -> u64 {
+        match self {
+            CodedVec::F32 { data } => 1 + 8 + 4 * data.len() as u64,
+            CodedVec::TopK { idx, .. } => 1 + 8 + 8 + 12 * idx.len() as u64,
+            CodedVec::Quant { packed, .. } => 1 + 8 + 8 + 1 + packed.len() as u64,
+        }
+    }
+
+    /// Compress `x` with `codec`. `rng` is consumed only by `Quant`
+    /// (exactly one draw per element, so the stream stays aligned).
+    pub fn encode(codec: Codec, x: &[f64], rng: &mut Rng64) -> CodedVec {
+        match codec {
+            Codec::F32 => CodedVec::F32 { data: x.iter().map(|&v| v as f32).collect() },
+            Codec::TopK { k } => encode_topk(x, k),
+            Codec::Quant { bits } => encode_quant(x, bits.clamp(1, 8), rng),
+        }
+    }
+
+    /// Reconstruct into `out`, resizing it to `self.dim()`. Infallible:
+    /// callers validate `dim()` against the expected dimension first.
+    pub fn decode_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        match self {
+            CodedVec::F32 { data } => out.extend(data.iter().map(|&v| v as f64)),
+            CodedVec::TopK { dim, idx, val } => {
+                out.resize(*dim, 0.0);
+                for (&i, &v) in idx.iter().zip(val.iter()) {
+                    if let Some(slot) = out.get_mut(i as usize) {
+                        *slot = v;
+                    }
+                }
+            }
+            CodedVec::Quant { dim, norm, bits, packed } => {
+                let bits = (*bits).clamp(1, 8);
+                let scale = ((1u32 << bits) - 1) as f64;
+                let mut r = BitReader { bytes: packed, pos: 0, acc: 0, nbits: 0 };
+                out.reserve(*dim);
+                for _ in 0..*dim {
+                    let sign = r.take(1) == 1;
+                    let level = r.take(u32::from(bits)) as f64;
+                    let mut v = norm * level / scale;
+                    if sign {
+                        v = -v;
+                    }
+                    out.push(v);
+                }
+            }
+        }
+    }
+}
+
+/// Deterministic top-k selection: largest magnitude wins; `total_cmp`
+/// keeps the comparator a strict total order (so NaN inputs still select
+/// deterministically), and equal magnitudes break toward the lower index.
+fn encode_topk(x: &[f64], k: usize) -> CodedVec {
+    let d = x.len();
+    let k = k.min(d);
+    let mut order: Vec<u32> = (0..d as u32).collect();
+    let by_mag = |&a: &u32, &b: &u32| {
+        x[b as usize]
+            .abs()
+            .total_cmp(&x[a as usize].abs())
+            .then_with(|| a.cmp(&b))
+    };
+    if k > 0 && k < d {
+        order.select_nth_unstable_by(k - 1, by_mag);
+    }
+    let mut idx: Vec<u32> = order.into_iter().take(k).collect();
+    idx.sort_unstable();
+    let val: Vec<f64> = idx.iter().map(|&i| x[i as usize]).collect();
+    CodedVec::TopK { dim: d, idx, val }
+}
+
+/// Stochastic quantization against the L-inf norm: one sign bit plus a
+/// `bits`-bit level per element. Exactly one rng draw per element.
+fn encode_quant(x: &[f64], bits: u8, rng: &mut Rng64) -> CodedVec {
+    let d = x.len();
+    let levels = (1u32 << bits) - 1;
+    let scale = levels as f64;
+    let norm = x.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+    let mut w = BitWriter::new();
+    for &v in x {
+        let sign = v.is_sign_negative();
+        let level = if norm > 0.0 && v.abs().is_finite() {
+            let r = (v.abs() / norm) * scale;
+            let lo = r.floor();
+            let p = r - lo;
+            let up = if rng.f64() < p { 1 } else { 0 };
+            // Casting a non-finite or huge `lo` saturates, never panics.
+            (lo as u32).saturating_add(up).min(levels)
+        } else {
+            // Zero vector, or a non-finite element against a non-finite
+            // norm: emit level 0 but keep the rng stream aligned.
+            let _ = rng.f64();
+            0
+        };
+        w.push(u32::from(sign), 1);
+        w.push(level, u32::from(bits));
+    }
+    CodedVec::Quant { dim: d, norm, bits, packed: w.finish() }
+}
+
+/// Number of packed bytes a `Quant` payload of `dim` elements at `bits`
+/// level bits occupies. Computed in u128 so hostile dims cannot overflow.
+pub fn quant_packed_len(dim: u64, bits: u8) -> u128 {
+    (u128::from(dim) * (u128::from(bits) + 1)).div_ceil(8)
+}
+
+/// LSB-first bit packer for quantized payloads.
+struct BitWriter {
+    bytes: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    fn new() -> Self {
+        BitWriter { bytes: Vec::new(), acc: 0, nbits: 0 }
+    }
+
+    fn push(&mut self, value: u32, width: u32) {
+        let mask = if width >= 32 { u32::MAX } else { (1u32 << width) - 1 };
+        self.acc |= u64::from(value & mask) << self.nbits;
+        self.nbits += width;
+        while self.nbits >= 8 {
+            self.bytes.push((self.acc & 0xff) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.bytes.push((self.acc & 0xff) as u8);
+        }
+        self.bytes
+    }
+}
+
+/// LSB-first bit reader; reads past the end yield zeros (callers validate
+/// the packed length on the wire, this just guarantees no panic).
+struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitReader<'_> {
+    fn take(&mut self, width: u32) -> u32 {
+        while self.nbits < width {
+            let b = self.bytes.get(self.pos).copied().unwrap_or(0);
+            self.pos += 1;
+            self.acc |= u64::from(b) << self.nbits;
+            self.nbits += 8;
+        }
+        let mask = if width >= 32 { u32::MAX } else { (1u32 << width) - 1 };
+        let v = (self.acc as u32) & mask;
+        self.acc >>= width;
+        self.nbits -= width;
+        v
+    }
+}
+
+/// One direction of an error-feedback accumulator: residual plus scratch
+/// buffers so steady-state rounds do not allocate.
+#[derive(Debug, Default)]
+struct Stream {
+    residual: Vec<f64>,
+    shifted: Vec<f64>,
+    decoded: Vec<f64>,
+}
+
+impl Stream {
+    /// Compress `x`; when `ef` is set, compress `x + residual` and fold
+    /// the reconstruction error back into the residual.
+    fn encode(&mut self, codec: Codec, ef: bool, x: &[f64], rng: &mut Rng64) -> CodedVec {
+        if !ef {
+            return CodedVec::encode(codec, x, rng);
+        }
+        if self.residual.len() != x.len() {
+            self.residual.clear();
+            self.residual.resize(x.len(), 0.0);
+        }
+        self.shifted.clear();
+        self.shifted
+            .extend(x.iter().zip(self.residual.iter()).map(|(&a, &b)| a + b));
+        let coded = CodedVec::encode(codec, &self.shifted, rng);
+        coded.decode_into(&mut self.decoded);
+        for ((e, &t), &dec) in self
+            .residual
+            .iter_mut()
+            .zip(self.shifted.iter())
+            .zip(self.decoded.iter())
+        {
+            *e = t - dec;
+        }
+        coded
+    }
+}
+
+/// Leader-side compressor: owns the broadcast-direction error-feedback
+/// streams and the per-round seed schedule. One per cluster.
+#[derive(Debug)]
+pub struct LeaderCompressor {
+    codec: Codec,
+    error_feedback: bool,
+    seed: u64,
+    round: u64,
+    grad_w: Stream,
+    solve_wprev: Stream,
+    solve_g: Stream,
+}
+
+impl LeaderCompressor {
+    pub fn new(codec: Codec, error_feedback: bool, seed: u64) -> Self {
+        LeaderCompressor {
+            codec,
+            error_feedback,
+            seed,
+            round: 0,
+            grad_w: Stream::default(),
+            solve_wprev: Stream::default(),
+            solve_g: Stream::default(),
+        }
+    }
+
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    fn reply_spec(&self, stream: u64) -> ReplySpec {
+        ReplySpec {
+            codec: self.codec,
+            error_feedback: self.error_feedback,
+            seed: stream_seed(self.seed, stream, self.round),
+        }
+    }
+
+    /// Build the compressed equivalent of `Command::GradLoss { w }`.
+    /// Advances the round counter (both engines call this once per round,
+    /// in the same order, so their rng schedules agree).
+    pub fn grad_cmd(&mut self, w: &[f64]) -> CompressedCmd {
+        self.round += 1;
+        let spec = self.reply_spec(STREAM_GRAD_REPLY);
+        let mut rng = Rng64::seed_from_u64(stream_seed(self.seed, STREAM_GRAD_W, self.round));
+        let coded = self
+            .grad_w
+            .encode(self.codec, self.error_feedback, w, &mut rng);
+        CompressedCmd {
+            op: CompressedOp::GradLoss,
+            eta: 0.0,
+            mu: 0.0,
+            spec,
+            vecs: vec![coded],
+        }
+    }
+
+    /// Build the compressed equivalent of `Command::DaneSolve`.
+    pub fn solve_cmd(&mut self, w_prev: &[f64], g: &[f64], eta: f64, mu: f64) -> CompressedCmd {
+        self.round += 1;
+        let spec = self.reply_spec(STREAM_SOLVE_REPLY);
+        let mut rng_w =
+            Rng64::seed_from_u64(stream_seed(self.seed, STREAM_SOLVE_WPREV, self.round));
+        let coded_w = self
+            .solve_wprev
+            .encode(self.codec, self.error_feedback, w_prev, &mut rng_w);
+        let mut rng_g = Rng64::seed_from_u64(stream_seed(self.seed, STREAM_SOLVE_G, self.round));
+        let coded_g = self
+            .solve_g
+            .encode(self.codec, self.error_feedback, g, &mut rng_g);
+        CompressedCmd {
+            op: CompressedOp::DaneSolve,
+            eta,
+            mu,
+            spec,
+            vecs: vec![coded_w, coded_g],
+        }
+    }
+}
+
+/// Worker-side compressor: reply-direction error-feedback streams plus
+/// decode/compute scratch, kept on the `Worker` so steady-state rounds do
+/// not allocate.
+#[derive(Debug, Default)]
+pub struct WorkerCompressor {
+    grad: Stream,
+    solve: Stream,
+    /// Scratch for the decoded broadcast iterate.
+    pub w_buf: Vec<f64>,
+    /// Scratch for the decoded broadcast gradient (DaneSolve only).
+    pub g_buf: Vec<f64>,
+    /// Scratch for the computed result before reply compression.
+    pub out: Vec<f64>,
+}
+
+impl WorkerCompressor {
+    /// Compress a reply vector per the command's spec. `rank` decorrelates
+    /// the quantization streams across workers.
+    pub fn encode_reply(
+        &mut self,
+        op: CompressedOp,
+        spec: &ReplySpec,
+        rank: u64,
+        x: &[f64],
+    ) -> CodedVec {
+        let mut rng = Rng64::seed_from_u64(reply_seed_for_rank(spec.seed, rank));
+        let stream = match op {
+            CompressedOp::GradLoss => &mut self.grad,
+            CompressedOp::DaneSolve => &mut self.solve,
+        };
+        stream.encode(spec.codec, spec.error_feedback, x, &mut rng)
+    }
+}
+
+impl CompressedReply {
+    /// Exact encoded frame length (length prefix through last payload
+    /// byte) of this reply on the wire. Pinned against the real encoder by
+    /// a test in `comm::wire`.
+    pub fn frame_len(&self) -> u64 {
+        let loss_len = if self.loss.is_some() { 8 } else { 0 };
+        FRAME_OVERHEAD + 1 + loss_len + self.vec.wire_len()
+    }
+}
+
+/// Frame length of the uncompressed command `op` would otherwise ship
+/// (`GradLoss` encodes one vector; `DaneSolve` two vectors plus
+/// `eta`/`mu`). Used for the `payload_bytes_raw` accounting column.
+pub fn raw_cmd_frame_len(op: CompressedOp, d: usize) -> u64 {
+    let vec_len = 8 + 8 * d as u64;
+    match op {
+        CompressedOp::GradLoss => FRAME_OVERHEAD + vec_len,
+        CompressedOp::DaneSolve => FRAME_OVERHEAD + 2 * vec_len + 16,
+    }
+}
+
+/// Frame length of the uncompressed reply to `op` (`GradLoss` answers
+/// with `Reply::VecScalar`; `DaneSolve` with `Reply::Vec`).
+pub fn raw_reply_frame_len(op: CompressedOp, d: usize) -> u64 {
+    let vec_len = 8 + 8 * d as u64;
+    match op {
+        CompressedOp::GradLoss => FRAME_OVERHEAD + vec_len + 8,
+        CompressedOp::DaneSolve => FRAME_OVERHEAD + vec_len,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng64 {
+        Rng64::seed_from_u64(0xD1CE)
+    }
+
+    fn decode(c: &CodedVec) -> Vec<f64> {
+        let mut out = Vec::new();
+        c.decode_into(&mut out);
+        out
+    }
+
+    #[test]
+    fn f32_roundtrip_preserves_f32_representable_values() {
+        let x = vec![1.5, -2.25, 0.0, -0.0, 3.0e7];
+        let c = CodedVec::encode(Codec::F32, &x, &mut rng());
+        let y = decode(&c);
+        for (a, b) in x.iter().zip(y.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn f32_passes_nonfinite_bit_patterns_through() {
+        let x = vec![f64::NAN, f64::INFINITY, f64::NEG_INFINITY];
+        let y = decode(&CodedVec::encode(Codec::F32, &x, &mut rng()));
+        assert!(y[0].is_nan());
+        assert_eq!(y[1], f64::INFINITY);
+        assert_eq!(y[2], f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes() {
+        let x = vec![0.1, -5.0, 0.0, 3.0, -0.2];
+        let c = CodedVec::encode(Codec::TopK { k: 2 }, &x, &mut rng());
+        match &c {
+            CodedVec::TopK { dim, idx, val } => {
+                assert_eq!(*dim, 5);
+                assert_eq!(idx, &[1, 3]);
+                assert_eq!(val, &[-5.0, 3.0]);
+            }
+            other => panic!("wrong codec: {other:?}"),
+        }
+        assert_eq!(decode(&c), vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_tie_breaks_toward_lower_index() {
+        let x = vec![2.0, -2.0, 2.0, -2.0];
+        let c = CodedVec::encode(Codec::TopK { k: 2 }, &x, &mut rng());
+        match c {
+            CodedVec::TopK { idx, .. } => assert_eq!(idx, vec![0, 1]),
+            other => panic!("wrong codec: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn topk_k_larger_than_dim_is_lossless() {
+        let x = vec![1.0, -2.0, 3.0];
+        let c = CodedVec::encode(Codec::TopK { k: 10 }, &x, &mut rng());
+        assert_eq!(decode(&c), x);
+    }
+
+    #[test]
+    fn topk_empty_and_k_zero() {
+        let empty = CodedVec::encode(Codec::TopK { k: 3 }, &[], &mut rng());
+        assert_eq!(decode(&empty), Vec::<f64>::new());
+        let x = vec![1.0, 2.0];
+        let none = CodedVec::encode(Codec::TopK { k: 0 }, &x, &mut rng());
+        assert_eq!(decode(&none), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn quant_roundtrip_bounded_error_and_determinism() {
+        let x: Vec<f64> = (0..97).map(|i| ((i * 37) % 19) as f64 - 9.0).collect();
+        for bits in [1u8, 2, 4, 8] {
+            let c1 = CodedVec::encode(Codec::Quant { bits }, &x, &mut Rng64::seed_from_u64(7));
+            let c2 = CodedVec::encode(Codec::Quant { bits }, &x, &mut Rng64::seed_from_u64(7));
+            assert_eq!(c1, c2, "same seed must give identical payloads");
+            let y = decode(&c1);
+            let norm = 9.0;
+            let step = norm / ((1u32 << bits) - 1) as f64;
+            for (a, b) in x.iter().zip(y.iter()) {
+                assert!((a - b).abs() <= step + 1e-12, "bits={bits} a={a} b={b}");
+                if *b != 0.0 {
+                    assert_eq!(a.is_sign_negative(), b.is_sign_negative());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_zero_vector_and_empty() {
+        let c = CodedVec::encode(Codec::Quant { bits: 4 }, &[0.0, 0.0, 0.0], &mut rng());
+        assert_eq!(decode(&c), vec![0.0, 0.0, 0.0]);
+        let c = CodedVec::encode(Codec::Quant { bits: 4 }, &[], &mut rng());
+        assert_eq!(decode(&c), Vec::<f64>::new());
+        match c {
+            CodedVec::Quant { packed, .. } => assert!(packed.is_empty()),
+            other => panic!("wrong codec: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn quant_nonfinite_inputs_do_not_panic() {
+        let x = vec![f64::NAN, f64::INFINITY, -1.0, f64::NEG_INFINITY];
+        let c = CodedVec::encode(Codec::Quant { bits: 3 }, &x, &mut rng());
+        // The resulting norm is non-finite, so the payload would be rejected
+        // at the wire boundary — what matters here is that encode/decode of
+        // pathological inputs never panics and the dimension survives.
+        assert_eq!(decode(&c).len(), 4);
+    }
+
+    #[test]
+    fn quant_packed_len_matches_encoder() {
+        for (d, bits) in [(0usize, 1u8), (1, 1), (7, 3), (8, 8), (97, 5)] {
+            let x = vec![1.0; d];
+            let c = CodedVec::encode(Codec::Quant { bits }, &x, &mut rng());
+            match c {
+                CodedVec::Quant { packed, .. } => {
+                    assert_eq!(packed.len() as u128, quant_packed_len(d as u64, bits));
+                }
+                other => panic!("wrong codec: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn error_feedback_residual_recovers_topk_loss() {
+        // With EF, the sum of transmitted estimates over many rounds tracks
+        // the sum of inputs: feed the same x repeatedly and check that the
+        // averaged reconstruction approaches x even though each round ships
+        // only 1 of 8 coordinates.
+        let x = vec![4.0, -3.0, 2.0, -1.5, 1.0, -0.5, 0.25, -0.125];
+        let codec = Codec::TopK { k: 1 };
+        let mut stream = Stream::default();
+        let mut sum = vec![0.0; x.len()];
+        let rounds = 400;
+        for r in 0..rounds {
+            let mut rng = Rng64::seed_from_u64(r);
+            let c = stream.encode(codec, true, &x, &mut rng);
+            let mut dec = Vec::new();
+            c.decode_into(&mut dec);
+            for (s, d) in sum.iter_mut().zip(dec.iter()) {
+                *s += d;
+            }
+        }
+        for (a, s) in x.iter().zip(sum.iter()) {
+            let avg = s / rounds as f64;
+            assert!((a - avg).abs() < 0.15, "a={a} avg={avg}");
+        }
+    }
+
+    #[test]
+    fn error_feedback_resets_on_dim_change() {
+        let mut stream = Stream::default();
+        let mut rng = rng();
+        let _ = stream.encode(Codec::TopK { k: 1 }, &[1.0, 2.0, 3.0], &mut rng);
+        assert_eq!(stream.residual.len(), 3);
+        let _ = stream.encode(Codec::TopK { k: 1 }, &[1.0, 2.0], &mut rng);
+        assert_eq!(stream.residual.len(), 2);
+    }
+
+    #[test]
+    fn leader_compressor_round_schedule_is_deterministic() {
+        let w = vec![0.5, -1.5, 2.5, -3.5];
+        let g = vec![1.0, 0.0, -1.0, 2.0];
+        let mut a = LeaderCompressor::new(Codec::Quant { bits: 4 }, true, 99);
+        let mut b = LeaderCompressor::new(Codec::Quant { bits: 4 }, true, 99);
+        for _ in 0..3 {
+            assert_eq!(a.grad_cmd(&w), b.grad_cmd(&w));
+            assert_eq!(a.solve_cmd(&w, &g, 1.0, 0.1), b.solve_cmd(&w, &g, 1.0, 0.1));
+        }
+        // Different base seed diverges for stochastic codecs.
+        let mut c = LeaderCompressor::new(Codec::Quant { bits: 4 }, true, 100);
+        assert_ne!(a.grad_cmd(&w), c.grad_cmd(&w));
+    }
+
+    #[test]
+    fn worker_compressor_ranks_decorrelate() {
+        let spec = ReplySpec { codec: Codec::Quant { bits: 2 }, error_feedback: false, seed: 7 };
+        let x: Vec<f64> = (0..64).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut w0 = WorkerCompressor::default();
+        let mut w1 = WorkerCompressor::default();
+        let c0 = w0.encode_reply(CompressedOp::GradLoss, &spec, 0, &x);
+        let c1 = w1.encode_reply(CompressedOp::GradLoss, &spec, 1, &x);
+        assert_ne!(c0, c1, "distinct ranks must draw distinct streams");
+        let mut w0b = WorkerCompressor::default();
+        assert_eq!(c0, w0b.encode_reply(CompressedOp::GradLoss, &spec, 0, &x));
+    }
+
+    #[test]
+    fn raw_frame_len_formulas() {
+        assert_eq!(raw_cmd_frame_len(CompressedOp::GradLoss, 4), 6 + 8 + 32);
+        assert_eq!(raw_cmd_frame_len(CompressedOp::DaneSolve, 4), 6 + 2 * 40 + 16);
+        assert_eq!(raw_reply_frame_len(CompressedOp::GradLoss, 4), 6 + 40 + 8);
+        assert_eq!(raw_reply_frame_len(CompressedOp::DaneSolve, 4), 6 + 8 + 32);
+    }
+
+    #[test]
+    fn wire_len_matches_struct_contents() {
+        let f = CodedVec::F32 { data: vec![1.0, 2.0, 3.0] };
+        assert_eq!(f.wire_len(), 1 + 8 + 12);
+        let t = CodedVec::TopK { dim: 10, idx: vec![1, 2], val: vec![5.0, -5.0] };
+        assert_eq!(t.wire_len(), 1 + 16 + 24);
+        let q = CodedVec::Quant { dim: 8, norm: 1.0, bits: 3, packed: vec![0; 4] };
+        assert_eq!(q.wire_len(), 1 + 8 + 8 + 1 + 4);
+    }
+}

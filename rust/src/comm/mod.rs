@@ -21,7 +21,16 @@
 //! both transports so traces stay bit-identical across the whole
 //! engine × topology matrix.
 
+//!
+//! [`compress`] shrinks the O(d) round payloads themselves: three codecs
+//! (f32 downcast, deterministic top-k, seeded stochastic quantization)
+//! plus error-feedback accumulators, carried by the
+//! `Command::CompressedVec` / `Reply::CompressedVec` frame variants so
+//! both concurrent engines and every topology move fewer real bytes while
+//! converging to the same quality.
+
 pub mod collective;
+pub mod compress;
 pub mod netmodel;
 pub mod roundchan;
 pub mod topology;

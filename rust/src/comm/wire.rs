@@ -21,6 +21,7 @@
 //! body    := version(u8 = 1) | tag(u8) | payload
 //! vec     := count(u64 LE) | count x f64 LE
 //! str     := len(u32 LE) | len UTF-8 bytes
+//! coded   := codec(u8) | codec-specific payload   (see [`super::compress`])
 //! ```
 //!
 //! `f64` values are moved as their IEEE-754 little-endian bit patterns
@@ -40,6 +41,7 @@
 //! worker the reply buffer it must fill); they are **not wire content** —
 //! the codec skips them on encode and decodes them as empty.
 
+use super::compress::{self, Codec, CodedVec, CompressedOp, ReplySpec};
 use crate::data::Shard;
 use crate::linalg::{CsrMatrix, DataMatrix, DenseMatrix};
 use crate::{Error, Result};
@@ -70,15 +72,24 @@ const CMD_PEERS: u8 = 0x08;
 const CMD_PROX_ALL: u8 = 0x09;
 const CMD_FOR: u8 = 0x0a;
 const CMD_INIT_REF: u8 = 0x0b;
+const CMD_COMPRESSED_VEC: u8 = 0x0c;
 
 const REP_VEC: u8 = 0x81;
 const REP_SCALAR: u8 = 0x82;
 const REP_VEC_SCALAR: u8 = 0x83;
 const REP_VEC_PAIR: u8 = 0x84;
 const REP_ERR: u8 = 0x85;
+const REP_COMPRESSED_VEC: u8 = 0x86;
 
 const MAT_DENSE: u8 = 0;
 const MAT_SPARSE: u8 = 1;
+
+// Compressed-payload sub-tags (see [`super::compress`]).
+const CODEC_F32: u8 = 1;
+const CODEC_TOPK: u8 = 2;
+const CODEC_QUANT: u8 = 3;
+const OP_GRAD_LOSS: u8 = 1;
+const OP_DANE_SOLVE: u8 = 2;
 
 /// One-time worker setup: everything a remote process needs to become a
 /// cluster member. In-memory engines construct workers directly and
@@ -214,6 +225,13 @@ pub enum Command {
     /// itself be a compute command — nesting `For` (or the setup
     /// frames) is rejected by the codec.
     For { rank: usize, inner: Box<Command> },
+    /// A round command whose O(d) vectors are codec-compressed
+    /// ([`super::compress`]): stands in for `GradLoss` or `DaneSolve`,
+    /// carries the codec id + params + payload plus the spec the worker
+    /// must apply to its reply -> `Reply::CompressedVec`. Behind `Arc`
+    /// so the threaded engine broadcasts one compressed payload to all
+    /// m workers and tree relays forward it without re-expanding.
+    CompressedVec(Arc<compress::CompressedCmd>),
 }
 
 impl Command {
@@ -245,6 +263,7 @@ impl Command {
             Command::For { rank, inner } => {
                 Command::For { rank: *rank, inner: Box::new(inner.relay_copy()) }
             }
+            Command::CompressedVec(p) => Command::CompressedVec(p.clone()),
         }
     }
 }
@@ -257,6 +276,10 @@ pub enum Reply {
     VecScalar(Vec<f64>, f64),
     VecPair(Vec<f64>, Option<Vec<f64>>),
     Err(String),
+    /// Codec-compressed result vector plus the scalar local loss when
+    /// the operation produces one (the compressed counterpart of
+    /// `VecScalar` / `Vec`).
+    CompressedVec(Box<compress::CompressedReply>),
 }
 
 // ---------------------------------------------------------------------
@@ -384,8 +407,79 @@ fn put_command_body(cmd: &Command, buf: &mut Vec<u8>, envelope: bool) -> Result<
             put_u64(buf, *rank as u64);
             put_command_body(inner, buf, false)?;
         }
+        Command::CompressedVec(p) => {
+            buf.push(CMD_COMPRESSED_VEC);
+            put_compressed_cmd(p, buf)?;
+        }
     }
     Ok(())
+}
+
+/// Append a compressed command payload (tag already written).
+fn put_compressed_cmd(p: &compress::CompressedCmd, buf: &mut Vec<u8>) -> Result<()> {
+    if p.vecs.len() != p.op.nvecs() {
+        return Err(Error::Config(format!(
+            "wire: compressed op carries {} vectors (expected {})",
+            p.vecs.len(),
+            p.op.nvecs()
+        )));
+    }
+    buf.push(match p.op {
+        CompressedOp::GradLoss => OP_GRAD_LOSS,
+        CompressedOp::DaneSolve => OP_DANE_SOLVE,
+    });
+    put_f64(buf, p.eta);
+    put_f64(buf, p.mu);
+    let (codec_id, param) = codec_wire(p.spec.codec);
+    buf.push(codec_id);
+    put_u32(buf, param);
+    buf.push(u8::from(p.spec.error_feedback));
+    put_u64(buf, p.spec.seed);
+    buf.push(p.vecs.len() as u8);
+    for v in &p.vecs {
+        put_coded_vec(v, buf);
+    }
+    Ok(())
+}
+
+/// Wire id + parameter for a codec choice.
+fn codec_wire(c: Codec) -> (u8, u32) {
+    match c {
+        Codec::F32 => (CODEC_F32, 0),
+        Codec::TopK { k } => (CODEC_TOPK, k.min(u32::MAX as usize) as u32),
+        Codec::Quant { bits } => (CODEC_QUANT, u32::from(bits)),
+    }
+}
+
+/// Append one compressed vector, self-describing (its codec byte first).
+/// The byte count written here is exactly `CodedVec::wire_len()`; a test
+/// below pins the two together.
+fn put_coded_vec(v: &CodedVec, buf: &mut Vec<u8>) {
+    match v {
+        CodedVec::F32 { data } => {
+            buf.push(CODEC_F32);
+            put_u64(buf, data.len() as u64);
+            for &x in data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        CodedVec::TopK { dim, idx, val } => {
+            buf.push(CODEC_TOPK);
+            put_u64(buf, *dim as u64);
+            put_u64(buf, idx.len() as u64);
+            for &i in idx {
+                put_u32(buf, i);
+            }
+            put_f64s(buf, val);
+        }
+        CodedVec::Quant { dim, norm, bits, packed } => {
+            buf.push(CODEC_QUANT);
+            put_u64(buf, *dim as u64);
+            put_f64(buf, *norm);
+            buf.push(*bits);
+            buf.extend_from_slice(packed);
+        }
+    }
 }
 
 /// Encode a full reply frame (length prefix included) into `buf`; same
@@ -420,6 +514,17 @@ pub fn encode_reply(rep: &Reply, buf: &mut Vec<u8>) -> Result<()> {
         Reply::Err(msg) => {
             buf.push(REP_ERR);
             put_str(buf, msg);
+        }
+        Reply::CompressedVec(p) => {
+            buf.push(REP_COMPRESSED_VEC);
+            match p.loss {
+                None => buf.push(0),
+                Some(l) => {
+                    buf.push(1);
+                    put_f64(buf, l);
+                }
+            }
+            put_coded_vec(&p.vec, buf);
         }
     }
     end_frame(buf)
@@ -457,11 +562,18 @@ fn put_u64(buf: &mut Vec<u8>, x: u64) {
     buf.extend_from_slice(&x.to_le_bytes());
 }
 
-fn put_vec(buf: &mut Vec<u8>, v: &[f64]) {
-    put_u64(buf, v.len() as u64);
+/// Append raw f64 LE bit patterns, no count prefix — the one write loop
+/// shared by every vector-bearing frame (counted vectors, top-k values,
+/// shard payloads).
+fn put_f64s(buf: &mut Vec<u8>, v: &[f64]) {
     for &x in v {
         put_f64(buf, x);
     }
+}
+
+fn put_vec(buf: &mut Vec<u8>, v: &[f64]) {
+    put_u64(buf, v.len() as u64);
+    put_f64s(buf, v);
 }
 
 fn put_str(buf: &mut Vec<u8>, s: &str) {
@@ -475,9 +587,7 @@ fn put_shard(buf: &mut Vec<u8>, shard: &Shard) {
             buf.push(MAT_DENSE);
             put_u64(buf, m.rows() as u64);
             put_u64(buf, m.cols() as u64);
-            for &x in m.data() {
-                put_f64(buf, x);
-            }
+            put_f64s(buf, m.data());
         }
         DataMatrix::Sparse(s) => {
             buf.push(MAT_SPARSE);
@@ -490,9 +600,7 @@ fn put_shard(buf: &mut Vec<u8>, shard: &Shard) {
                 for &j in idx {
                     put_u32(buf, j);
                 }
-                for &x in vals {
-                    put_f64(buf, x);
-                }
+                put_f64s(buf, vals);
             }
         }
     }
@@ -570,12 +678,21 @@ impl<'a> Cur<'a> {
         Ok(n as usize)
     }
 
+    /// Append `n` f64 values onto `out` — the one read loop shared by
+    /// every vector-bearing frame. Callers validate `n` via [`Cur::count`]
+    /// first, so the reserve is bounded by received bytes.
+    fn take_f64s(&mut self, n: usize, out: &mut Vec<f64>) -> Result<()> {
+        out.reserve(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(())
+    }
+
     fn vec_f64(&mut self) -> Result<Vec<f64>> {
         let n = self.count(8, "vector")?;
-        let mut v = Vec::with_capacity(n);
-        for _ in 0..n {
-            v.push(self.f64()?);
-        }
+        let mut v = Vec::new();
+        self.take_f64s(n, &mut v)?;
         Ok(v)
     }
 
@@ -778,9 +895,140 @@ fn take_command(cur: &mut Cur, tag: u8, envelope: bool) -> Result<Command> {
         CMD_FOR => {
             return Err(Error::Config("wire: nested For envelope".into()))
         }
+        CMD_COMPRESSED_VEC => {
+            let op = match cur.u8()? {
+                OP_GRAD_LOSS => CompressedOp::GradLoss,
+                OP_DANE_SOLVE => CompressedOp::DaneSolve,
+                b => {
+                    return Err(Error::Config(format!(
+                        "wire: unknown compressed op {b}"
+                    )))
+                }
+            };
+            let eta = cur.f64()?;
+            let mu = cur.f64()?;
+            let codec_id = cur.u8()?;
+            let param = cur.u32()?;
+            let codec = match codec_id {
+                CODEC_F32 if param == 0 => Codec::F32,
+                CODEC_TOPK if param >= 1 => Codec::TopK { k: param as usize },
+                CODEC_QUANT if (1..=8).contains(&param) => {
+                    Codec::Quant { bits: param as u8 }
+                }
+                _ => {
+                    return Err(Error::Config(format!(
+                        "wire: bad codec spec (id {codec_id}, param {param})"
+                    )))
+                }
+            };
+            let error_feedback = match cur.u8()? {
+                0 => false,
+                1 => true,
+                b => {
+                    return Err(Error::Config(format!(
+                        "wire: bad error_feedback marker {b}"
+                    )))
+                }
+            };
+            let seed = cur.u64()?;
+            let nvecs = cur.u8()? as usize;
+            if nvecs != op.nvecs() {
+                return Err(Error::Config(format!(
+                    "wire: compressed op carries {nvecs} vectors (expected {})",
+                    op.nvecs()
+                )));
+            }
+            let mut vecs = Vec::with_capacity(nvecs);
+            for _ in 0..nvecs {
+                vecs.push(take_coded_vec(cur)?);
+            }
+            Command::CompressedVec(Arc::new(compress::CompressedCmd {
+                op,
+                eta,
+                mu,
+                spec: ReplySpec { codec, error_feedback, seed },
+                vecs,
+            }))
+        }
         t => return Err(Error::Config(format!("wire: unknown command tag {t:#x}"))),
     };
     Ok(cmd)
+}
+
+/// Decode one self-described compressed vector. Total: hostile counts,
+/// out-of-range or unsorted top-k indices, non-finite top-k values /
+/// quant norms, and bad bit widths all come back as `Err` before any
+/// attacker-sized allocation (reconstruction to `dim` only happens after
+/// the receiver checks `dim()` against its own problem dimension).
+fn take_coded_vec(cur: &mut Cur) -> Result<CodedVec> {
+    match cur.u8()? {
+        CODEC_F32 => {
+            let n = cur.count(4, "f32 vector")?;
+            let mut data = Vec::with_capacity(n);
+            for _ in 0..n {
+                let s = cur.take(4)?;
+                data.push(f32::from_le_bytes([s[0], s[1], s[2], s[3]]));
+            }
+            Ok(CodedVec::F32 { data })
+        }
+        CODEC_TOPK => {
+            let dim = cur.u64()?;
+            if dim > (MAX_FRAME_LEN / 8) as u64 {
+                return Err(Error::Config(format!(
+                    "wire: top-k dim {dim} exceeds cap"
+                )));
+            }
+            let dim = dim as usize;
+            let k = cur.count(12, "top-k entries")?;
+            if k > dim {
+                return Err(Error::Config(format!(
+                    "wire: top-k keeps {k} of {dim} entries"
+                )));
+            }
+            let mut idx: Vec<u32> = Vec::with_capacity(k);
+            for _ in 0..k {
+                let i = cur.u32()?;
+                if i as usize >= dim || idx.last().is_some_and(|&p| p >= i) {
+                    return Err(Error::Config(format!(
+                        "wire: top-k index {i} out of range or order (dim {dim})"
+                    )));
+                }
+                idx.push(i);
+            }
+            let mut val = Vec::new();
+            cur.take_f64s(k, &mut val)?;
+            if let Some(bad) = val.iter().find(|v| !v.is_finite()) {
+                return Err(Error::Config(format!(
+                    "wire: top-k value {bad} is not finite"
+                )));
+            }
+            Ok(CodedVec::TopK { dim, idx, val })
+        }
+        CODEC_QUANT => {
+            let dim = cur.u64()?;
+            let norm = cur.f64()?;
+            if !norm.is_finite() || norm < 0.0 {
+                return Err(Error::Config(format!(
+                    "wire: quant norm {norm} is not a finite nonnegative"
+                )));
+            }
+            let bits = cur.u8()?;
+            if !(1..=8).contains(&bits) {
+                return Err(Error::Config(format!(
+                    "wire: quant bits {bits} outside 1..=8"
+                )));
+            }
+            let need = compress::quant_packed_len(dim, bits);
+            if need > cur.remaining() as u128 {
+                return Err(Error::Config(format!(
+                    "wire: quant dim {dim} exceeds frame"
+                )));
+            }
+            let packed = cur.take(need as usize)?.to_vec();
+            Ok(CodedVec::Quant { dim: dim as usize, norm, bits, packed })
+        }
+        c => Err(Error::Config(format!("wire: unknown codec id {c}"))),
+    }
 }
 
 /// Decode a reply frame body (the bytes after the length prefix).
@@ -809,6 +1057,19 @@ pub fn decode_reply(body: &[u8]) -> Result<Reply> {
             Reply::VecPair(full, sub)
         }
         REP_ERR => Reply::Err(cur.string()?),
+        REP_COMPRESSED_VEC => {
+            let loss = match cur.u8()? {
+                0 => None,
+                1 => Some(cur.f64()?),
+                b => {
+                    return Err(Error::Config(format!(
+                        "wire: bad loss marker {b}"
+                    )))
+                }
+            };
+            let vec = take_coded_vec(&mut cur)?;
+            Reply::CompressedVec(Box::new(compress::CompressedReply { loss, vec }))
+        }
         t => return Err(Error::Config(format!("wire: unknown reply tag {t:#x}"))),
     };
     cur.done()?;
@@ -829,10 +1090,8 @@ fn take_shard(cur: &mut Cur) -> Result<Shard> {
                     "wire: dense {rows}x{cols} exceeds frame"
                 )));
             }
-            let mut data = Vec::with_capacity(cells as usize);
-            for _ in 0..cells as usize {
-                data.push(cur.f64()?);
-            }
+            let mut data = Vec::new();
+            cur.take_f64s(cells as usize, &mut data)?;
             DataMatrix::Dense(DenseMatrix::from_vec(rows, cols, data))
         }
         MAT_SPARSE => {
@@ -869,9 +1128,7 @@ fn take_shard(cur: &mut Cur) -> Result<Shard> {
                     }
                     indices.push(j);
                 }
-                for _ in 0..k {
-                    data.push(cur.f64()?);
-                }
+                cur.take_f64s(k, &mut data)?;
                 indptr.push(indices.len());
             }
             if indices.len() != nnz {
@@ -1190,6 +1447,102 @@ mod tests {
             }
             _ => panic!("wrong variant"),
         }
+    }
+
+    fn compressed_cmd(codec: Codec) -> Command {
+        let spec = ReplySpec { codec, error_feedback: true, seed: 42 };
+        let w = vec![0.5, -3.0, 0.0, 2.0, -0.25];
+        let g = vec![1.0, 0.0, -1.0, 0.5, 4.0];
+        let mut rng = crate::util::rng::Rng64::seed_from_u64(9);
+        Command::CompressedVec(Arc::new(compress::CompressedCmd {
+            op: CompressedOp::DaneSolve,
+            eta: 1.0,
+            mu: 0.125,
+            spec,
+            vecs: vec![
+                CodedVec::encode(codec, &w, &mut rng),
+                CodedVec::encode(codec, &g, &mut rng),
+            ],
+        }))
+    }
+
+    #[test]
+    fn compressed_cmd_roundtrips_every_codec() {
+        for codec in [Codec::F32, Codec::TopK { k: 2 }, Codec::Quant { bits: 4 }] {
+            let cmd = compressed_cmd(codec);
+            let mut buf = Vec::new();
+            encode_command(&cmd, &mut buf).unwrap();
+            match (decode_command(&buf[4..]).unwrap(), &cmd) {
+                (Command::CompressedVec(got), Command::CompressedVec(sent)) => {
+                    assert_eq!(&*got, &**sent, "codec {codec:?}");
+                }
+                _ => panic!("wrong variant"),
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_reply_roundtrips_and_frame_len_is_exact() {
+        let mut rng = crate::util::rng::Rng64::seed_from_u64(4);
+        let x = vec![1.0, -2.0, 0.0, 8.5, -0.5, 3.25, 0.0];
+        for codec in [Codec::F32, Codec::TopK { k: 3 }, Codec::Quant { bits: 3 }] {
+            for loss in [None, Some(0.75)] {
+                let rep = compress::CompressedReply {
+                    loss,
+                    vec: CodedVec::encode(codec, &x, &mut rng),
+                };
+                let expect = rep.frame_len();
+                let rep = Reply::CompressedVec(Box::new(rep));
+                let mut buf = Vec::new();
+                encode_reply(&rep, &mut buf).unwrap();
+                assert_eq!(
+                    buf.len() as u64,
+                    expect,
+                    "frame_len must match the real encoder ({codec:?})"
+                );
+                match (decode_reply(&buf[4..]).unwrap(), rep) {
+                    (Reply::CompressedVec(got), Reply::CompressedVec(sent)) => {
+                        assert_eq!(got, sent);
+                    }
+                    _ => panic!("wrong variant"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn raw_frame_len_helpers_match_real_encoders() {
+        let d = 5;
+        let w = Arc::new(vec![1.5; d]);
+        let mut buf = Vec::new();
+        let cmd = Command::GradLoss { w: w.clone(), out: Vec::new() };
+        encode_command(&cmd, &mut buf).unwrap();
+        assert_eq!(
+            buf.len() as u64,
+            compress::raw_cmd_frame_len(CompressedOp::GradLoss, d)
+        );
+        let cmd = Command::DaneSolve {
+            w_prev: w.clone(),
+            g: w.clone(),
+            eta: 1.0,
+            mu: 0.0,
+            out: Vec::new(),
+        };
+        encode_command(&cmd, &mut buf).unwrap();
+        assert_eq!(
+            buf.len() as u64,
+            compress::raw_cmd_frame_len(CompressedOp::DaneSolve, d)
+        );
+        encode_reply(&Reply::VecScalar(vec![0.0; d], 1.0), &mut buf).unwrap();
+        assert_eq!(
+            buf.len() as u64,
+            compress::raw_reply_frame_len(CompressedOp::GradLoss, d)
+        );
+        encode_reply(&Reply::Vec(vec![0.0; d]), &mut buf).unwrap();
+        assert_eq!(
+            buf.len() as u64,
+            compress::raw_reply_frame_len(CompressedOp::DaneSolve, d)
+        );
     }
 
     #[test]

@@ -380,6 +380,168 @@ impl FaultPolicy {
     }
 }
 
+/// Which wire codec compresses the O(d) round payloads (the
+/// GradLoss/DaneSolve commands and their replies) on the concurrent
+/// engines. See [`crate::comm::compress`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CompressionCodec {
+    /// No compression — frames are bit-identical to the uncompressed
+    /// protocol (the trust anchor for trace parity).
+    #[default]
+    None,
+    /// Lossy f64 -> f32 downcast (2x).
+    F32,
+    /// Deterministic top-k magnitude sparsification: keep the k
+    /// largest-|x| entries, ties broken toward the lower index.
+    TopK { k: usize },
+    /// Seeded stochastic quantization to `bits` bits per entry plus a
+    /// sign bit, scaled by the vector's max-|x| norm.
+    Quant { bits: u8 },
+}
+
+impl CompressionCodec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressionCodec::None => "none",
+            CompressionCodec::F32 => "f32",
+            CompressionCodec::TopK { .. } => "topk",
+            CompressionCodec::Quant { .. } => "quant",
+        }
+    }
+
+    /// Parse the CLI spelling: `none`, `f32`, `topk:K` or `quant:B`.
+    pub fn from_cli(s: &str) -> Result<Self> {
+        match s {
+            "none" => return Ok(CompressionCodec::None),
+            "f32" => return Ok(CompressionCodec::F32),
+            _ => {}
+        }
+        if let Some(k) = s.strip_prefix("topk:") {
+            let k = k.parse::<usize>().map_err(|_| {
+                Error::Config(format!("bad top-k count in --codec {s:?}"))
+            })?;
+            return Ok(CompressionCodec::TopK { k });
+        }
+        if let Some(b) = s.strip_prefix("quant:") {
+            let bits = b.parse::<u8>().map_err(|_| {
+                Error::Config(format!("bad bit width in --codec {s:?}"))
+            })?;
+            return Ok(CompressionCodec::Quant { bits });
+        }
+        Err(Error::Config(format!(
+            "unknown codec {s:?} (expected \"none\", \"f32\", \"topk:K\" or \"quant:B\")"
+        )))
+    }
+}
+
+/// Round-payload compression settings. `error_feedback` keeps the
+/// lossy codecs honest: each side accumulates what its codec dropped
+/// and re-injects it next round, so compressed DANE/GD/AGD converge to
+/// the same quality as the uncompressed run. Defaults to on; it is a
+/// no-op under `codec: none` and `f32` is near-lossless either way.
+/// JSON: `"compression": {"codec": "topk", "k": 100, "error_feedback":
+/// true}` (the key is omitted entirely for the default, so uncompressed
+/// configs serialize byte-identically to before this knob existed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompressionConfig {
+    pub codec: CompressionCodec,
+    pub error_feedback: bool,
+}
+
+impl Default for CompressionConfig {
+    fn default() -> Self {
+        CompressionConfig { codec: CompressionCodec::None, error_feedback: true }
+    }
+}
+
+impl CompressionConfig {
+    /// The wire codec to apply, `None` for the uncompressed protocol.
+    pub fn codec(&self) -> Option<crate::comm::compress::Codec> {
+        use crate::comm::compress::Codec;
+        match self.codec {
+            CompressionCodec::None => None,
+            CompressionCodec::F32 => Some(Codec::F32),
+            CompressionCodec::TopK { k } => Some(Codec::TopK { k }),
+            CompressionCodec::Quant { bits } => Some(Codec::Quant { bits }),
+        }
+    }
+
+    fn to_json(self) -> Json {
+        let mut fields = vec![("codec", Json::str(self.codec.name()))];
+        match self.codec {
+            CompressionCodec::None | CompressionCodec::F32 => {}
+            CompressionCodec::TopK { k } => {
+                fields.push(("k", Json::num(k as f64)));
+            }
+            CompressionCodec::Quant { bits } => {
+                fields.push(("bits", Json::num(bits as f64)));
+            }
+        }
+        fields.push(("error_feedback", Json::Bool(self.error_feedback)));
+        Json::obj(fields)
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let name = v
+            .req("codec")?
+            .as_str()
+            .ok_or_else(|| Error::Config("compression.codec must be a string".into()))?;
+        let k = match v.get("k") {
+            None | Some(Json::Null) => None,
+            Some(x) => Some(x.as_usize().ok_or_else(|| {
+                Error::Config("compression.k must be a nonneg int".into())
+            })?),
+        };
+        let bits = match v.get("bits") {
+            None | Some(Json::Null) => None,
+            Some(x) => Some(x.as_u64().ok_or_else(|| {
+                Error::Config("compression.bits must be a nonneg int".into())
+            })?),
+        };
+        let codec = match (name, k, bits) {
+            ("none", None, None) => CompressionCodec::None,
+            ("f32", None, None) => CompressionCodec::F32,
+            ("topk", Some(k), None) => CompressionCodec::TopK { k },
+            ("quant", None, Some(b)) => {
+                if !(1..=8).contains(&b) {
+                    return Err(Error::Config(
+                        "compression.bits must be in 1..=8".into(),
+                    ));
+                }
+                CompressionCodec::Quant { bits: b as u8 }
+            }
+            ("topk", None, _) => {
+                return Err(Error::Config(
+                    "compression.codec \"topk\" requires \"k\"".into(),
+                ));
+            }
+            ("quant", _, None) => {
+                return Err(Error::Config(
+                    "compression.codec \"quant\" requires \"bits\"".into(),
+                ));
+            }
+            ("none" | "f32" | "topk" | "quant", _, _) => {
+                return Err(Error::Config(format!(
+                    "compression key not valid for codec {name:?}"
+                )));
+            }
+            (other, _, _) => {
+                return Err(Error::Config(format!(
+                    "unknown compression codec {other:?} (expected \"none\", \
+                     \"f32\", \"topk\" or \"quant\")"
+                )));
+            }
+        };
+        let error_feedback = match v.get("error_feedback") {
+            None | Some(Json::Null) => true,
+            Some(b) => b.as_bool().ok_or_else(|| {
+                Error::Config("compression.error_feedback must be a bool".into())
+            })?,
+        };
+        Ok(CompressionConfig { codec, error_feedback })
+    }
+}
+
 /// Serializable network-model config.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NetConfig {
@@ -474,12 +636,16 @@ pub struct ExperimentConfig {
     /// `"fault": {"policy": "respawn", "max_retries": 3, "backoff_ms": 100}`
     /// or `{"policy": "degrade", "min_quorum": 2}`.
     pub fault: FaultPolicy,
+    /// Round-payload wire compression (concurrent engines only;
+    /// default: none). JSON: `"compression": {"codec": "topk", "k":
+    /// 100, "error_feedback": true}`.
+    pub compression: CompressionConfig,
     pub net: NetConfig,
 }
 
 impl ExperimentConfig {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::str(self.name.clone())),
             ("dataset", self.dataset.to_json()),
             ("loss", Json::str(self.loss.name())),
@@ -514,15 +680,22 @@ impl ExperimentConfig {
             ),
             ("eval_test", Json::Bool(self.eval_test)),
             ("fault", self.fault.to_json()),
-            (
-                "net",
-                Json::obj(vec![
-                    ("alpha", Json::num(self.net.alpha)),
-                    ("beta", Json::num(self.net.beta)),
-                    ("topology", Json::str(self.net.topology_name())),
-                ]),
-            ),
-        ])
+        ];
+        // The "compression" key is omitted for the default so existing
+        // uncompressed configs serialize byte-identically to before the
+        // knob existed.
+        if self.compression != CompressionConfig::default() {
+            fields.push(("compression", self.compression.to_json()));
+        }
+        fields.push((
+            "net",
+            Json::obj(vec![
+                ("alpha", Json::num(self.net.alpha)),
+                ("beta", Json::num(self.net.beta)),
+                ("topology", Json::str(self.net.topology_name())),
+            ]),
+        ));
+        Json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> Result<Self> {
@@ -599,6 +772,10 @@ impl ExperimentConfig {
             None | Some(Json::Null) => FaultPolicy::FailFast,
             Some(f) => FaultPolicy::from_json(f)?,
         };
+        let compression = match v.get("compression") {
+            None | Some(Json::Null) => CompressionConfig::default(),
+            Some(c) => CompressionConfig::from_json(c)?,
+        };
         let net = match v.get("net") {
             Some(n) => {
                 let topology = match n.get("topology").and_then(|x| x.as_str()) {
@@ -632,6 +809,7 @@ impl ExperimentConfig {
             data_by_ref,
             eval_test,
             fault,
+            compression,
             net,
         })
     }
@@ -755,6 +933,33 @@ impl ExperimentConfig {
                 }
             }
         }
+        match self.compression.codec {
+            CompressionCodec::None => {}
+            CompressionCodec::F32 => {}
+            CompressionCodec::TopK { k } => {
+                if k == 0 {
+                    return Err(Error::Config(
+                        "compression.k must be >= 1".into(),
+                    ));
+                }
+            }
+            CompressionCodec::Quant { bits } => {
+                if !(1..=8).contains(&bits) {
+                    return Err(Error::Config(
+                        "compression.bits must be in 1..=8".into(),
+                    ));
+                }
+            }
+        }
+        if self.compression.codec != CompressionCodec::None
+            && self.engine == EngineKind::Serial
+        {
+            return Err(Error::Config(
+                "compression requires a concurrent engine (\"threaded\" or \
+                 \"tcp\") — the serial engine has no wire to shrink"
+                    .into(),
+            ));
+        }
         if let AlgoConfig::Osa { bias_correction_r: Some(r) } = self.algo {
             if !(0.0 < r && r < 1.0) {
                 return Err(Error::Config(
@@ -789,6 +994,7 @@ mod tests {
             data_by_ref: false,
             eval_test: false,
             fault: FaultPolicy::FailFast,
+            compression: CompressionConfig::default(),
             net: NetConfig::free(),
         }
     }
@@ -1052,6 +1258,106 @@ mod tests {
         let mut c = sample();
         c.fault = FaultPolicy::Degrade { min_quorum: 5 };
         assert!(c.validate().is_err(), "quorum > machines must be rejected");
+    }
+
+    #[test]
+    fn compression_roundtrips_and_validates() {
+        for codec in [
+            CompressionCodec::F32,
+            CompressionCodec::TopK { k: 10 },
+            CompressionCodec::Quant { bits: 4 },
+        ] {
+            for ef in [true, false] {
+                let mut c = sample();
+                c.engine = EngineKind::Threaded;
+                c.compression = CompressionConfig { codec, error_feedback: ef };
+                let c2 =
+                    ExperimentConfig::from_json_str(&c.to_json_string()).unwrap();
+                assert_eq!(c2.compression, c.compression);
+                c2.validate().unwrap();
+            }
+        }
+
+        // the default serializes with no "compression" key at all, so
+        // uncompressed configs are byte-identical to the pre-knob format
+        let s = sample().to_json_string();
+        assert!(!s.contains("compression"), "default must omit the key:\n{s}");
+        let c = ExperimentConfig::from_json_str(&s).unwrap();
+        assert_eq!(c.compression, CompressionConfig::default());
+
+        // validation gates
+        let mut c = sample();
+        c.compression =
+            CompressionConfig { codec: CompressionCodec::F32, error_feedback: true };
+        assert!(c.validate().is_err(), "serial engine has no wire to compress");
+        let mut c = sample();
+        c.engine = EngineKind::Threaded;
+        c.compression = CompressionConfig {
+            codec: CompressionCodec::TopK { k: 0 },
+            error_feedback: true,
+        };
+        assert!(c.validate().is_err(), "k = 0 must be rejected");
+        let mut c = sample();
+        c.engine = EngineKind::Tcp;
+        c.compression = CompressionConfig {
+            codec: CompressionCodec::Quant { bits: 9 },
+            error_feedback: true,
+        };
+        assert!(c.validate().is_err(), "bits > 8 must be rejected");
+
+        // handwritten JSON: missing/stray params and bad kinds error
+        let base = r#"{
+            "name": "t", "loss": "ridge", "lambda": 0.01,
+            "machines": 2, "rounds": 5, "engine": "threaded",
+            "dataset": {"kind": "fig2", "n": 100, "d": 5, "paper_reg": 0.005},
+            "algo": {"kind": "dane", "eta": 1.0, "mu_over_lambda": 0.0},
+            "compression": COMP
+        }"#;
+        let parse = |comp: &str| {
+            ExperimentConfig::from_json_str(&base.replacen("COMP", comp, 1))
+        };
+        let c = parse(r#"{"codec": "topk", "k": 7}"#).unwrap();
+        assert_eq!(
+            c.compression,
+            CompressionConfig {
+                codec: CompressionCodec::TopK { k: 7 },
+                error_feedback: true, // defaults on
+            }
+        );
+        assert!(parse(r#"{"codec": "topk"}"#).is_err(), "topk needs k");
+        assert!(parse(r#"{"codec": "quant"}"#).is_err(), "quant needs bits");
+        assert!(parse(r#"{"codec": "quant", "bits": 0}"#).is_err());
+        assert!(parse(r#"{"codec": "f32", "k": 3}"#).is_err(), "stray k");
+        assert!(parse(r#"{"codec": "none", "bits": 2}"#).is_err(), "stray bits");
+        assert!(parse(r#"{"codec": "middleout"}"#).is_err(), "unknown codec");
+        assert!(parse(r#"{"codec": "f32", "error_feedback": 1}"#).is_err());
+
+        // CLI spellings
+        assert_eq!(
+            CompressionCodec::from_cli("topk:100").unwrap(),
+            CompressionCodec::TopK { k: 100 }
+        );
+        assert_eq!(
+            CompressionCodec::from_cli("quant:4").unwrap(),
+            CompressionCodec::Quant { bits: 4 }
+        );
+        assert_eq!(CompressionCodec::from_cli("f32").unwrap(), CompressionCodec::F32);
+        assert_eq!(
+            CompressionCodec::from_cli("none").unwrap(),
+            CompressionCodec::None
+        );
+        assert!(CompressionCodec::from_cli("topk").is_err());
+        assert!(CompressionCodec::from_cli("topk:x").is_err());
+        assert!(CompressionCodec::from_cli("gzip").is_err());
+
+        // codec() maps onto the wire-layer codec enum
+        use crate::comm::compress::Codec;
+        let cc = CompressionConfig {
+            codec: CompressionCodec::TopK { k: 5 },
+            error_feedback: false,
+        };
+        assert_eq!(cc.codec(), Some(Codec::TopK { k: 5 }));
+        assert_eq!(CompressionConfig::default().codec(), None);
     }
 
     #[test]

@@ -20,7 +20,8 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 const MAGIC: &[u8; 8] = b"DANECKPT";
-const VERSION: u32 = 1;
+// v2 added `payload_bytes_raw` to the CommStats and TraceRow records.
+const VERSION: u32 = 2;
 
 /// FNV-1a 64-bit hash of the canonical config JSON — stored in every
 /// checkpoint and checked on `--resume` so a checkpoint can't silently
@@ -290,6 +291,7 @@ fn put_comm(out: &mut Vec<u8>, c: &CommStats) {
     put_u64(out, c.bytes);
     put_f64(out, c.modeled_seconds);
     put_u64(out, c.wire_bytes);
+    put_u64(out, c.payload_bytes_raw);
     put_u64(out, c.startup_bytes);
     put_u64(out, c.alive_workers);
     put_u64(out, c.recoveries);
@@ -306,6 +308,7 @@ fn put_row(out: &mut Vec<u8>, r: &TraceRow) {
     put_f64(out, r.comm_modeled_seconds);
     put_f64(out, r.elapsed_seconds);
     put_u64(out, r.wire_bytes);
+    put_u64(out, r.payload_bytes_raw);
     put_u64(out, r.startup_bytes);
     put_u64(out, r.alive_workers);
     put_u64(out, r.recoveries);
@@ -362,6 +365,7 @@ impl<'a> Reader<'a> {
             bytes: self.u64()?,
             modeled_seconds: self.f64()?,
             wire_bytes: self.u64()?,
+            payload_bytes_raw: self.u64()?,
             startup_bytes: self.u64()?,
             alive_workers: self.u64()?,
             recoveries: self.u64()?,
@@ -380,6 +384,7 @@ impl<'a> Reader<'a> {
             comm_modeled_seconds: self.f64()?,
             elapsed_seconds: self.f64()?,
             wire_bytes: self.u64()?,
+            payload_bytes_raw: self.u64()?,
             startup_bytes: self.u64()?,
             alive_workers: self.u64()?,
             recoveries: self.u64()?,
@@ -402,6 +407,7 @@ mod tests {
             bytes: 1024,
             modeled_seconds: 0.25,
             wire_bytes: 2048,
+            payload_bytes_raw: 4096,
             startup_bytes: 512,
             alive_workers: 3,
             recoveries: 2,

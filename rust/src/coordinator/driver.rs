@@ -73,6 +73,10 @@ fn build_cluster(
     artifact_dir: Option<&Path>,
 ) -> Result<Box<dyn Cluster>> {
     let shard_seed = cfg.seed.wrapping_add(1);
+    // Compression EF streams get their own seed lane, like sharding —
+    // the same config compresses identically on either concurrent
+    // engine (tests/compress_parity.rs pins it).
+    let compress_seed = cfg.seed.wrapping_add(4);
     let net = cfg.effective_net();
     let topology = cfg.exec_topology();
     Ok(match cfg.engine {
@@ -90,15 +94,21 @@ fn build_cluster(
             Box::new(c)
         }
         // validate() rejects non-serial + pjrt, so no backend switch here.
-        EngineKind::Threaded => Box::new(ThreadedCluster::with_topology(
-            ds,
-            obj,
-            cfg.machines,
-            shard_seed,
-            net,
-            cfg.threads,
-            topology,
-        )),
+        EngineKind::Threaded => {
+            let mut c = ThreadedCluster::with_topology(
+                ds,
+                obj,
+                cfg.machines,
+                shard_seed,
+                net,
+                cfg.threads,
+                topology,
+            );
+            if let Some(codec) = cfg.compression.codec() {
+                c.set_compression(codec, cfg.compression.error_feedback, compress_seed);
+            }
+            Box::new(c)
+        }
         // Worker processes rebuild the objective from (loss, lambda) in
         // their Init frame; the leader-side copy in `obj` is dropped.
         // Same shard seed, same weights, same reduction order — a tcp
@@ -121,8 +131,8 @@ fn build_cluster(
             } else {
                 None
             };
-            match (&cfg.workers, by_ref_path) {
-                (Some(addrs), None) => Box::new(TcpCluster::connect(
+            let mut c = match (&cfg.workers, by_ref_path) {
+                (Some(addrs), None) => TcpCluster::connect(
                     ds,
                     cfg.loss,
                     cfg.lambda,
@@ -132,8 +142,8 @@ fn build_cluster(
                     cfg.threads,
                     None,
                     topology,
-                )?),
-                (Some(addrs), Some(path)) => Box::new(TcpCluster::connect_by_ref(
+                )?,
+                (Some(addrs), Some(path)) => TcpCluster::connect_by_ref(
                     ds,
                     cfg.loss,
                     cfg.lambda,
@@ -144,8 +154,8 @@ fn build_cluster(
                     None,
                     topology,
                     &path,
-                )?),
-                (None, None) => Box::new(TcpCluster::self_hosted(
+                )?,
+                (None, None) => TcpCluster::self_hosted(
                     ds,
                     cfg.loss,
                     cfg.lambda,
@@ -155,8 +165,8 @@ fn build_cluster(
                     cfg.threads,
                     None,
                     topology,
-                )?),
-                (None, Some(path)) => Box::new(TcpCluster::self_hosted_by_ref(
+                )?,
+                (None, Some(path)) => TcpCluster::self_hosted_by_ref(
                     ds,
                     cfg.loss,
                     cfg.lambda,
@@ -167,8 +177,12 @@ fn build_cluster(
                     None,
                     topology,
                     &path,
-                )?),
+                )?,
+            };
+            if let Some(codec) = cfg.compression.codec() {
+                c.set_compression(codec, cfg.compression.error_feedback, compress_seed);
             }
+            Box::new(c)
         }
     })
 }
@@ -331,6 +345,7 @@ mod tests {
             eval_test: false,
             net: NetConfig { alpha: 0.0, beta: 0.0, topology: Topology::Star },
             fault: FaultPolicy::FailFast,
+            compression: crate::config::CompressionConfig::default(),
         }
     }
 

@@ -74,6 +74,7 @@
 //! rebuild, so the bit-exact rank-order fold is untouched.
 
 use super::Cluster;
+use crate::comm::compress::{self, Codec, CompressedOp, LeaderCompressor};
 use crate::comm::topology::{ExecTopology, RankGather, TreePlan, RELAY_CHILD_LOST};
 use crate::comm::wire::{
     self, Command as Cmd, InitPayload, InitRefPayload, PeerChild, PeersPayload, Reply,
@@ -215,6 +216,18 @@ pub struct TcpCluster {
     /// Reusable receive buffer (inline reads + setup acks).
     frame: Vec<u8>,
     io_timeout: Duration,
+    /// Leader-side codec + error-feedback state for compressed round
+    /// payloads ([`TcpCluster::set_compression`]); `None` runs the
+    /// uncompressed protocol, frame-for-frame identical to before.
+    compressor: Option<LeaderCompressor>,
+    /// Decode scratch for compressed replies.
+    dec: Vec<f64>,
+    /// Signed surplus of raw-equivalent payload over measured socket
+    /// bytes, accumulated per compressed frame (a top-k frame with k
+    /// close to d can *exceed* its raw equivalent, hence signed).
+    /// `comm_stats` reports `payload_bytes_raw = wire_bytes + this`, so
+    /// it is exactly `wire_bytes` when no codec is active.
+    payload_raw_extra: i64,
 }
 
 impl TcpCluster {
@@ -608,7 +621,21 @@ impl TcpCluster {
             enc,
             frame,
             io_timeout,
+            compressor: None,
+            dec: Vec::new(),
+            payload_raw_extra: 0,
         })
+    }
+
+    /// Compress the O(d) round payloads (GradLoss / DaneSolve commands
+    /// and their replies) with `codec`, optionally with error feedback.
+    /// Eval instrumentation gathers and the Theorem-5 first round stay
+    /// uncompressed — only the counted optimization rounds shrink.
+    /// Relay workers forward compressed frames verbatim (`dispatch`
+    /// ships opaque byte frames), so the tree topology never re-expands
+    /// a payload in flight.
+    pub fn set_compression(&mut self, codec: Codec, error_feedback: bool, seed: u64) {
+        self.compressor = Some(LeaderCompressor::new(codec, error_feedback, seed));
     }
 
     /// Re-arm the socket timeouts (tests tighten them to exercise the
@@ -1071,7 +1098,15 @@ impl TcpCluster {
 
     // ---- gathers (shared by counted and instrumentation paths) -------
 
-    fn gather_grad_loss_into(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
+    fn gather_grad_loss_into(
+        &mut self,
+        w: &[f64],
+        g: &mut [f64],
+        use_codec: bool,
+    ) -> Result<f64> {
+        if use_codec && self.compressor.is_some() {
+            return self.gather_grad_loss_compressed(w, g);
+        }
         wire::encode_command(
             &Cmd::GradLoss { w: Arc::new(w.to_vec()), out: Vec::new() },
             &mut self.enc,
@@ -1090,6 +1125,100 @@ impl TcpCluster {
             }
         }
         Ok(loss)
+    }
+
+    // ---- compressed rounds ------------------------------------------
+
+    /// Compressed gradient+loss round: one `CompressedVec` frame
+    /// broadcast to every link, compressed replies decoded through the
+    /// leader's scratch and folded in rank order exactly like the
+    /// uncompressed gather. Tracks the signed raw-vs-actual byte delta
+    /// for `payload_bytes_raw`.
+    fn gather_grad_loss_compressed(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
+        let Some(comp) = self.compressor.as_mut() else {
+            return Err(Error::Runtime(
+                "compressed gather without a compressor".into(),
+            ));
+        };
+        let cmd = Cmd::CompressedVec(Arc::new(comp.grad_cmd(w)));
+        wire::encode_command(&cmd, &mut self.enc)?;
+        let raw_cmd = compress::raw_cmd_frame_len(CompressedOp::GradLoss, self.d) as i64;
+        self.payload_raw_extra +=
+            (raw_cmd - self.enc.len() as i64) * self.links.len() as i64;
+        let raw_rep =
+            compress::raw_reply_frame_len(CompressedOp::GradLoss, self.d) as i64;
+        let replies = self.broadcast_round()?;
+        g.fill(0.0);
+        let mut loss = 0.0;
+        let mut dec = std::mem::take(&mut self.dec);
+        let mut res = Ok(());
+        for (i, r) in replies.into_iter().enumerate() {
+            match r {
+                None => {}
+                Some(Reply::CompressedVec(cr))
+                    if cr.vec.dim() == g.len() && cr.loss.is_some() =>
+                {
+                    self.payload_raw_extra += raw_rep - cr.frame_len() as i64;
+                    cr.vec.decode_into(&mut dec);
+                    ops::axpy(self.eff_weights[i], &dec, g);
+                    loss += self.eff_weights[i] * cr.loss.unwrap_or(0.0);
+                }
+                _ => {
+                    res = Err(self.unexpected(i));
+                    break;
+                }
+            }
+        }
+        self.dec = dec;
+        res.map(|_| loss)
+    }
+
+    /// Compressed DANE local-solve round; the iterate average keeps the
+    /// paper's unweighted 1/|alive| fold.
+    fn dane_round_compressed(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+        out: &mut [f64],
+    ) -> Result<()> {
+        let Some(comp) = self.compressor.as_mut() else {
+            return Err(Error::Runtime(
+                "compressed round without a compressor".into(),
+            ));
+        };
+        let cmd = Cmd::CompressedVec(Arc::new(comp.solve_cmd(w_prev, g, eta, mu)));
+        wire::encode_command(&cmd, &mut self.enc)?;
+        let raw_cmd =
+            compress::raw_cmd_frame_len(CompressedOp::DaneSolve, self.d) as i64;
+        self.payload_raw_extra +=
+            (raw_cmd - self.enc.len() as i64) * self.links.len() as i64;
+        let raw_rep =
+            compress::raw_reply_frame_len(CompressedOp::DaneSolve, self.d) as i64;
+        let replies = self.broadcast_round()?;
+        out.fill(0.0);
+        let inv = 1.0 / self.n_alive as f64;
+        let mut dec = std::mem::take(&mut self.dec);
+        let mut res = Ok(());
+        for (i, r) in replies.into_iter().enumerate() {
+            match r {
+                None => {}
+                Some(Reply::CompressedVec(cr))
+                    if cr.vec.dim() == out.len() && cr.loss.is_none() =>
+                {
+                    self.payload_raw_extra += raw_rep - cr.frame_len() as i64;
+                    cr.vec.decode_into(&mut dec);
+                    ops::axpy(inv, &dec, out);
+                }
+                _ => {
+                    res = Err(self.unexpected(i));
+                    break;
+                }
+            }
+        }
+        self.dec = dec;
+        res
     }
 
     fn gather_loss(&mut self, w: &[f64]) -> Result<f64> {
@@ -1337,7 +1466,7 @@ impl Cluster for TcpCluster {
     }
 
     fn grad_and_loss_into(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
-        let loss = self.gather_grad_loss_into(w, g)?;
+        let loss = self.gather_grad_loss_into(w, g, true)?;
         let m = self.m();
         self.comm.count_round(m, self.d + 1);
         Ok(loss)
@@ -1370,6 +1499,12 @@ impl Cluster for TcpCluster {
         mu: f64,
         out: &mut [f64],
     ) -> Result<()> {
+        if self.compressor.is_some() {
+            self.dane_round_compressed(w_prev, g, eta, mu, out)?;
+            let m = self.m();
+            self.comm.count_round(m, self.d);
+            return Ok(());
+        }
         wire::encode_command(
             &Cmd::DaneSolve {
                 w_prev: Arc::new(w_prev.to_vec()),
@@ -1532,13 +1667,15 @@ impl Cluster for TcpCluster {
 
     fn eval_grad_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
         let mut g = vec![0.0; self.d];
-        let loss = self.gather_grad_loss_into(w, &mut g)?;
+        // instrumentation path: always uncompressed, full-precision
+        let loss = self.gather_grad_loss_into(w, &mut g, false)?;
         Ok((g, loss))
     }
 
     fn comm_stats(&self) -> CommStats {
         let mut s = self.comm.stats().clone();
         s.wire_bytes = self.wire_bytes;
+        s.payload_bytes_raw = self.wire_bytes.saturating_add_signed(self.payload_raw_extra);
         s.startup_bytes = self.startup_bytes;
         s.alive_workers = self.n_alive as u64;
         s
@@ -1547,6 +1684,7 @@ impl Cluster for TcpCluster {
     fn reset_comm(&mut self) {
         self.comm.reset();
         self.wire_bytes = 0;
+        self.payload_raw_extra = 0;
         // startup_bytes survives: it is a one-time data-distribution
         // cost, not per-window round traffic.
     }
@@ -1562,6 +1700,8 @@ impl Cluster for TcpCluster {
     fn restore_comm(&mut self, stats: &CommStats) {
         self.comm.restore(stats);
         self.wire_bytes = stats.wire_bytes;
+        self.payload_raw_extra =
+            stats.payload_bytes_raw as i64 - stats.wire_bytes as i64;
         self.startup_bytes = stats.startup_bytes;
     }
 

@@ -38,6 +38,7 @@
 //! ownership and message-flow structure, documented in DESIGN.md §5.)
 
 use super::Cluster;
+use crate::comm::compress::{Codec, LeaderCompressor};
 use crate::comm::roundchan::{
     round_channel, RecvTimeoutError, RoundReceiver, RoundSender,
 };
@@ -64,6 +65,14 @@ struct WorkerHandle {
     tx: RoundSender<Cmd>,
     rx: RoundReceiver<Reply>,
     join: Option<JoinHandle<()>>,
+}
+
+/// Which fold a compressed round performs: the n_i/N-weighted gradient
+/// average or the paper's unweighted 1/|alive| iterate average.
+#[derive(Clone, Copy)]
+enum FoldWeights {
+    Grad,
+    Solve,
 }
 
 /// One leader-adjacent link of the tree wiring: the root child's
@@ -146,6 +155,15 @@ pub struct ThreadedCluster {
     /// Per-reply wait budget (hang safety): a worker silent past this is
     /// reported wedged instead of deadlocking the leader.
     reply_timeout: Duration,
+    /// Leader-side codec + error-feedback state for compressed round
+    /// payloads ([`ThreadedCluster::set_compression`]). `None` runs the
+    /// uncompressed protocol, bit-identical to before the knob existed.
+    /// Compressed rounds trade the zero-allocation steady state for the
+    /// smaller (well, in-memory: cheaper-to-model) payloads; the
+    /// alloc-pinned path is the uncompressed one.
+    compressor: Option<LeaderCompressor>,
+    /// Decode scratch for compressed replies.
+    dec: Vec<f64>,
 }
 
 impl ThreadedCluster {
@@ -245,7 +263,19 @@ impl ThreadedCluster {
             bcast_g,
             reply_pool,
             reply_timeout: DEFAULT_REPLY_TIMEOUT,
+            compressor: None,
+            dec: Vec::new(),
         }
+    }
+
+    /// Compress the O(d) round payloads (GradLoss / DaneSolve and their
+    /// replies) with `codec`, optionally with error feedback. Eval
+    /// instrumentation gathers and the Theorem-5 first round stay
+    /// uncompressed — only the counted optimization rounds go through
+    /// the codec, on both the star and tree wirings (the tree relays
+    /// the one shared `Arc` payload without re-expanding it).
+    pub fn set_compression(&mut self, codec: Codec, error_feedback: bool, seed: u64) {
+        self.compressor = Some(LeaderCompressor::new(codec, error_feedback, seed));
     }
 
     /// Flip worker `i`'s kill switch: it exits on its next command
@@ -461,7 +491,15 @@ impl ThreadedCluster {
     /// (smoke_cluster_parity). On failure every outstanding reply is
     /// still drained, so the lockstep protocol stays usable and only the
     /// first error surfaces.
-    fn gather_grad_loss_into(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
+    fn gather_grad_loss_into(
+        &mut self,
+        w: &[f64],
+        g: &mut [f64],
+        compress: bool,
+    ) -> Result<f64> {
+        if compress && self.compressor.is_some() {
+            return self.gather_grad_loss_compressed(w, g);
+        }
         if self.tree.is_some() {
             return self.tree_grad_loss_into(w, g);
         }
@@ -521,8 +559,154 @@ impl ThreadedCluster {
 
     fn gather_grad_loss(&mut self, w: &[f64]) -> Result<(Vec<f64>, f64)> {
         let mut g = vec![0.0; self.d];
-        let loss = self.gather_grad_loss_into(w, &mut g)?;
+        // instrumentation path: always uncompressed (full-precision
+        // objective read-outs, never part of the optimization loop)
+        let loss = self.gather_grad_loss_into(w, &mut g, false)?;
         Ok((g, loss))
+    }
+
+    // ---- compressed rounds ------------------------------------------
+
+    /// Compressed gradient+loss round: one `Arc`'d `CompressedVec`
+    /// command shared by every rank (tree links relay the same payload),
+    /// replies decoded through the leader's scratch and folded in rank
+    /// order exactly like the uncompressed gather.
+    fn gather_grad_loss_compressed(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
+        let Some(comp) = self.compressor.as_mut() else {
+            return Err(crate::Error::Runtime(
+                "compressed gather without a compressor".into(),
+            ));
+        };
+        let payload = Arc::new(comp.grad_cmd(w));
+        let mut dec = std::mem::take(&mut self.dec);
+        let res = self.fold_compressed_round(
+            Cmd::CompressedVec(payload),
+            &mut dec,
+            FoldWeights::Grad,
+            g,
+        );
+        self.dec = dec;
+        res
+    }
+
+    /// Compressed DANE local-solve round; the iterate average uses the
+    /// paper's unweighted 1/|alive| fold, like the uncompressed path.
+    fn dane_round_compressed(
+        &mut self,
+        w_prev: &[f64],
+        g: &[f64],
+        eta: f64,
+        mu: f64,
+        out: &mut [f64],
+    ) -> Result<()> {
+        let Some(comp) = self.compressor.as_mut() else {
+            return Err(crate::Error::Runtime(
+                "compressed round without a compressor".into(),
+            ));
+        };
+        let payload = Arc::new(comp.solve_cmd(w_prev, g, eta, mu));
+        let mut dec = std::mem::take(&mut self.dec);
+        let res = self.fold_compressed_round(
+            Cmd::CompressedVec(payload),
+            &mut dec,
+            FoldWeights::Solve,
+            out,
+        );
+        self.dec = dec;
+        res.map(|_| ())
+    }
+
+    /// Broadcast one compressed command and fold the compressed replies
+    /// in rank order. Returns the weighted loss for gradient rounds
+    /// (0.0 for solve rounds, whose replies carry no scalar). Shares the
+    /// star drain discipline with the uncompressed gathers: on failure
+    /// every outstanding reply is still consumed so the lockstep
+    /// protocol never desynchronizes.
+    fn fold_compressed_round(
+        &mut self,
+        cmd: Cmd,
+        dec: &mut Vec<f64>,
+        weights: FoldWeights,
+        acc: &mut [f64],
+    ) -> Result<f64> {
+        let inv_alive = 1.0 / self.n_alive as f64;
+        let fold_w = |this: &Self, i: usize| match weights {
+            FoldWeights::Grad => this.eff_weights[i],
+            FoldWeights::Solve => inv_alive,
+        };
+        let want_loss = matches!(weights, FoldWeights::Grad);
+        if self.tree.is_some() {
+            let replies = self.tree_round(&cmd)?;
+            acc.fill(0.0);
+            let mut loss = 0.0;
+            for (i, r) in replies.into_iter().enumerate() {
+                match r {
+                    Reply::CompressedVec(cr)
+                        if cr.vec.dim() == acc.len()
+                            && cr.loss.is_some() == want_loss =>
+                    {
+                        cr.vec.decode_into(dec);
+                        ops::axpy(fold_w(self, i), dec, acc);
+                        loss += fold_w(self, i) * cr.loss.unwrap_or(0.0);
+                    }
+                    _ => return Err(self.unexpected(i)),
+                }
+            }
+            return Ok(loss);
+        }
+        let mut sent = 0;
+        let mut first_err: Option<crate::Error> = None;
+        for i in 0..self.handles.len() {
+            if self.dead[i] {
+                continue;
+            }
+            match self.send_cmd(i, cmd.relay_copy()) {
+                Ok(()) => sent += 1,
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
+            }
+        }
+        acc.fill(0.0);
+        let mut loss = 0.0;
+        let mut drained = 0;
+        for i in 0..self.handles.len() {
+            if drained == sent {
+                break;
+            }
+            if self.dead[i] {
+                continue;
+            }
+            drained += 1;
+            match self.recv_reply(i) {
+                Ok(Reply::CompressedVec(cr))
+                    if cr.vec.dim() == acc.len()
+                        && cr.loss.is_some() == want_loss =>
+                {
+                    if first_err.is_none() {
+                        cr.vec.decode_into(dec);
+                        ops::axpy(fold_w(self, i), dec, acc);
+                        loss += fold_w(self, i) * cr.loss.unwrap_or(0.0);
+                    }
+                }
+                Ok(other) => {
+                    self.recycle(i, other);
+                    if first_err.is_none() {
+                        first_err = Some(self.unexpected(i));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(loss),
+        }
     }
 
     /// Weighted loss-only gather (uncounted body; drains on failure).
@@ -845,7 +1029,7 @@ impl Cluster for ThreadedCluster {
     }
 
     fn grad_and_loss_into(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
-        let loss = self.gather_grad_loss_into(w, g)?;
+        let loss = self.gather_grad_loss_into(w, g, true)?;
         let m = self.m();
         self.comm.count_round(m, self.d + 1);
         Ok(loss)
@@ -878,6 +1062,12 @@ impl Cluster for ThreadedCluster {
         mu: f64,
         out: &mut [f64],
     ) -> Result<()> {
+        if self.compressor.is_some() {
+            self.dane_round_compressed(w_prev, g, eta, mu, out)?;
+            let m = self.m();
+            self.comm.count_round(m, self.d);
+            return Ok(());
+        }
         if self.tree.is_some() {
             let cmd = Cmd::DaneSolve {
                 w_prev: Arc::new(w_prev.to_vec()),

@@ -32,6 +32,7 @@ dane — Communication-efficient distributed optimization (DANE, ICML 2014)
 USAGE:
     dane run --config <exp.json> [--csv <out.csv>] [--quiet]
              [--engine serial|threaded|tcp] [--topology star|star-seq|tree]
+             [--codec none|f32|topk:K|quant:B] [--no-ef]
              [--data-by-ref] [--checkpoint <ckpt> [--ckpt-every <K>]]
              [--resume <ckpt>]
     dane worker --listen <addr> [--once] # serve shards over TCP
@@ -66,7 +67,13 @@ and wedged workers surface as `error: ...` + non-zero exit; with
 trailer. The config's \"fault\" policy (fail_fast | respawn | degrade)
 decides whether a run survives a dead worker; `--checkpoint` writes
 resumable state every K rounds and `--resume` continues a crashed run
-bit-exactly. `worker --listen` serves leaders in a loop (redial after
+bit-exactly. `--codec` (config key \"compression\": {\"codec\": ...};
+concurrent engines only) compresses the round payloads on the wire —
+\"f32\" downcasts, \"topk:K\" keeps the K largest-magnitude entries,
+\"quant:B\" stochastically quantizes to B bits — with error feedback
+on by default (`--no-ef` disables it); the trace's
+`payload_bytes_raw` column records what `wire_bytes` would have been
+uncompressed. `worker --listen` serves leaders in a loop (redial after
 a fault re-initializes it); `--once` exits after the first session.";
 
 /// Tiny flag parser: --key value pairs after the subcommand. Ordered
@@ -189,8 +196,17 @@ fn run(argv: &[String]) -> Result<(), String> {
     let args = Args::parse(&argv[1..])?;
     let (value_flags, bool_flags): (&[&str], &[&str]) = match cmd.as_str() {
         "run" => (
-            &["config", "csv", "engine", "topology", "checkpoint", "ckpt-every", "resume"],
-            &["quiet", "data-by-ref"],
+            &[
+                "config",
+                "csv",
+                "engine",
+                "topology",
+                "codec",
+                "checkpoint",
+                "ckpt-every",
+                "resume",
+            ],
+            &["quiet", "data-by-ref", "no-ef"],
         ),
         "worker" => (&["listen"], &["once"]),
         "fig2" | "fig3" | "fig4" => (&["scale", "out", "engine", "topology"], &[]),
@@ -219,6 +235,13 @@ fn run(argv: &[String]) -> Result<(), String> {
             }
             if args.has("data-by-ref") {
                 cfg.data_by_ref = true;
+            }
+            if let Some(codec) = args.get("codec") {
+                cfg.compression.codec =
+                    dane::config::CompressionCodec::from_cli(codec).map_err(e2s)?;
+            }
+            if args.has("no-ef") {
+                cfg.compression.error_feedback = false;
             }
             let opts = RunOpts {
                 checkpoint: args.get("checkpoint").map(PathBuf::from),

@@ -8,11 +8,13 @@ use std::io::Write;
 /// CSV header matching [`super::TraceRow`] field order. The
 /// run-specific columns: `elapsed_seconds` (col 9, wallclock — the one
 /// column excluded from bit-exact comparisons), `wire_bytes` (col 10,
-/// measured socket bytes, 0 off the TCP engine), `startup_bytes` (col
-/// 11, one-time bring-up bytes, 0 off the TCP engine), `alive_workers`
-/// (col 12) and `recoveries` (col 13, both fault-policy observability;
+/// measured socket bytes, 0 off the TCP engine), `payload_bytes_raw`
+/// (col 11, what col 10 would be without the active codec — equal to it
+/// under `codec: none`, 0 off the TCP engine), `startup_bytes` (col
+/// 12, one-time bring-up bytes, 0 off the TCP engine), `alive_workers`
+/// (col 13) and `recoveries` (col 14, both fault-policy observability;
 /// `machines` resp. 0 on fault-free runs).
-pub const CSV_HEADER: &str = "round,objective,suboptimality,grad_norm,test_loss,comm_rounds,comm_bytes,comm_modeled_seconds,elapsed_seconds,wire_bytes,startup_bytes,alive_workers,recoveries";
+pub const CSV_HEADER: &str = "round,objective,suboptimality,grad_norm,test_loss,comm_rounds,comm_bytes,comm_modeled_seconds,elapsed_seconds,wire_bytes,payload_bytes_raw,startup_bytes,alive_workers,recoveries";
 
 /// Write a trace as CSV.
 pub fn write_csv<W: Write>(trace: &Trace, w: W) -> Result<()> {
@@ -31,7 +33,7 @@ fn write_csv_impl<W: Write>(trace: &Trace, mut w: W, truncated: Option<&str>) ->
     for r in &trace.rows {
         writeln!(
             w,
-            "{},{:.17e},{},{},{},{},{},{:.6e},{:.6},{},{},{},{}",
+            "{},{:.17e},{},{},{},{},{},{:.6e},{:.6},{},{},{},{},{}",
             r.round,
             r.objective,
             opt(r.suboptimality),
@@ -42,6 +44,7 @@ fn write_csv_impl<W: Write>(trace: &Trace, mut w: W, truncated: Option<&str>) ->
             r.comm_modeled_seconds,
             r.elapsed_seconds,
             r.wire_bytes,
+            r.payload_bytes_raw,
             r.startup_bytes,
             r.alive_workers,
             r.recoveries,
@@ -94,6 +97,10 @@ pub fn summary_json(name: &str, trace: &Trace) -> Json {
         ("comm_bytes", num_or_null(last.map(|r| r.comm_bytes as f64))),
         ("wire_bytes", num_or_null(last.map(|r| r.wire_bytes as f64))),
         (
+            "payload_bytes_raw",
+            num_or_null(last.map(|r| r.payload_bytes_raw as f64)),
+        ),
+        (
             "startup_bytes",
             num_or_null(last.map(|r| r.startup_bytes as f64)),
         ),
@@ -122,6 +129,7 @@ mod tests {
             bytes: 128,
             modeled_seconds: 1e-3,
             wire_bytes: 96,
+            payload_bytes_raw: 192,
             startup_bytes: 4096,
             alive_workers: 4,
             recoveries: 1,
@@ -150,6 +158,7 @@ mod tests {
         assert_eq!(j.get("name").unwrap().as_str(), Some("t"));
         assert_eq!(j.get("comm_bytes").unwrap().as_f64(), Some(128.0));
         assert_eq!(j.get("wire_bytes").unwrap().as_f64(), Some(96.0));
+        assert_eq!(j.get("payload_bytes_raw").unwrap().as_f64(), Some(192.0));
         assert_eq!(j.get("startup_bytes").unwrap().as_f64(), Some(4096.0));
         let s = j.get("final_suboptimality").unwrap().as_f64().unwrap();
         assert!((s - 0.5).abs() < 1e-15);

@@ -27,6 +27,12 @@ pub struct TraceRow {
     /// on in-memory engines). Sits next to the modeled `comm_bytes` so
     /// figures can plot convergence against real bytes moved.
     pub wire_bytes: u64,
+    /// What `wire_bytes` would have been with every compressed round
+    /// frame carrying its raw f64 payload (see
+    /// `CommStats::payload_bytes_raw`). Equal to `wire_bytes` under
+    /// `codec: none` and 0 on in-memory engines; the gap between the
+    /// two columns is the measured savings of the active codec.
+    pub payload_bytes_raw: u64,
     /// One-time bring-up bytes measured on the socket (Init/InitRef +
     /// Peers and their acks; 0 on in-memory engines). Constant across a
     /// run's rows; O(n·d) for by-value Init, O(m) for `--data-by-ref`.
@@ -73,6 +79,7 @@ impl Trace {
             comm_modeled_seconds: comm.modeled_seconds,
             elapsed_seconds,
             wire_bytes: comm.wire_bytes,
+            payload_bytes_raw: comm.payload_bytes_raw,
             startup_bytes: comm.startup_bytes,
             alive_workers: comm.alive_workers,
             recoveries: comm.recoveries,

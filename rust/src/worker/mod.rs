@@ -49,6 +49,10 @@ pub struct Worker {
     /// Override for the one-time Gram-build thread count (config
     /// `threads`); None = the size ladder in `local_solver`.
     gram_threads: Option<usize>,
+    /// Reply-direction compression state (error-feedback residuals +
+    /// decode/compute scratch) for `Command::CompressedVec` rounds;
+    /// inert unless the run compresses.
+    pub(crate) comp: crate::comm::compress::WorkerCompressor,
 }
 
 impl Worker {
@@ -67,6 +71,7 @@ impl Worker {
             cbuf: vec![0.0; d],
             newton_opts: NewtonCgOptions::default(),
             gram_threads: None,
+            comp: crate::comm::compress::WorkerCompressor::default(),
         }
     }
 

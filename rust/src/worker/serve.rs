@@ -48,6 +48,7 @@
 //! only transport failures on the *upstream* connection tear the loop
 //! down. Nothing here panics on malformed input.
 
+use crate::comm::compress::{self, CompressedOp, WorkerCompressor};
 use crate::comm::topology::RELAY_CHILD_LOST;
 use crate::comm::wire::{self, Command, InitPayload, InitRefPayload, PeersPayload, Reply};
 use crate::config::LossKind;
@@ -169,6 +170,86 @@ pub fn execute_command(worker: &mut Worker, cmd: Command) -> Reply {
                 total += crate::coordinator::row_sq_norm(sh, i);
             }
             Reply::Scalar(total / sh.n_effective() as f64)
+        }
+        Command::CompressedVec(p) => execute_compressed(worker, &p),
+    }
+}
+
+/// Answer one compressed round command: reconstruct the broadcast
+/// vectors into worker-owned scratch, run the same compute the
+/// uncompressed command would, then compress the reply per the command's
+/// spec — through this worker's error-feedback stream when the spec asks
+/// for it. Shared by both concurrent engines (like everything in
+/// [`execute_command`]), so compressed rounds cannot drift between them.
+fn execute_compressed(worker: &mut Worker, p: &compress::CompressedCmd) -> Reply {
+    let d = worker.dim();
+    // Take the compressor out of the worker so its scratch buffers can be
+    // borrowed alongside `&mut Worker` compute calls, then put it back
+    // (the residuals must persist across rounds).
+    let mut comp = std::mem::take(&mut worker.comp);
+    let reply = run_compressed(worker, &mut comp, p, d);
+    worker.comp = comp;
+    reply
+}
+
+fn run_compressed(
+    worker: &mut Worker,
+    comp: &mut WorkerCompressor,
+    p: &compress::CompressedCmd,
+    d: usize,
+) -> Reply {
+    let rank = worker.id as u64;
+    match p.op {
+        CompressedOp::GradLoss => {
+            let Some(w) = p.vecs.first() else {
+                return Reply::Err("compressed grad_loss: missing iterate".into());
+            };
+            if let Some(err) = dim_check("compressed grad_loss", w.dim(), d) {
+                return err;
+            }
+            w.decode_into(&mut comp.w_buf);
+            comp.out.clear();
+            comp.out.resize(d, 0.0);
+            let loss = match worker.grad(&comp.w_buf, &mut comp.out) {
+                Ok(loss) => loss,
+                Err(e) => return Reply::Err(e.to_string()),
+            };
+            let out = std::mem::take(&mut comp.out);
+            let vec = comp.encode_reply(CompressedOp::GradLoss, &p.spec, rank, &out);
+            comp.out = out;
+            Reply::CompressedVec(Box::new(compress::CompressedReply {
+                loss: Some(loss),
+                vec,
+            }))
+        }
+        CompressedOp::DaneSolve => {
+            let (Some(w_prev), Some(g)) = (p.vecs.first(), p.vecs.get(1)) else {
+                return Reply::Err("compressed dane_solve: missing vectors".into());
+            };
+            if let Some(err) = dim_check("compressed dane_solve w_prev", w_prev.dim(), d)
+            {
+                return err;
+            }
+            if let Some(err) = dim_check("compressed dane_solve g", g.dim(), d) {
+                return err;
+            }
+            w_prev.decode_into(&mut comp.w_buf);
+            g.decode_into(&mut comp.g_buf);
+            let mut out = std::mem::take(&mut comp.out);
+            let solved = worker.dane_local_solve_into(
+                &comp.w_buf,
+                &comp.g_buf,
+                p.eta,
+                p.mu,
+                &mut out,
+            );
+            if let Err(e) = solved {
+                comp.out = out;
+                return Reply::Err(e.to_string());
+            }
+            let vec = comp.encode_reply(CompressedOp::DaneSolve, &p.spec, rank, &out);
+            comp.out = out;
+            Reply::CompressedVec(Box::new(compress::CompressedReply { loss: None, vec }))
         }
     }
 }
@@ -680,6 +761,67 @@ mod tests {
             shard_seed: seed,
         })
         .is_err());
+    }
+
+    #[test]
+    fn compressed_grad_loss_matches_uncompressed_compute() {
+        use crate::comm::compress::{Codec, CodedVec, CompressedCmd, ReplySpec};
+        let mut wk = tiny_worker();
+        let point = vec![0.25, -0.5];
+        // Uncompressed reference
+        let plain = Command::GradLoss { w: Arc::new(point.clone()), out: Vec::new() };
+        let (g_ref, loss_ref) = match execute_command(&mut wk, plain) {
+            Reply::VecScalar(g, l) => (g, l),
+            _ => panic!("wrong reply"),
+        };
+        // f32 codec, no error feedback: the iterate is f32-representable,
+        // so the compute is identical and only the reply is downcast.
+        let spec = ReplySpec { codec: Codec::F32, error_feedback: false, seed: 1 };
+        let mut rng = crate::util::Rng64::seed_from_u64(0);
+        let cmd = Command::CompressedVec(Arc::new(CompressedCmd {
+            op: CompressedOp::GradLoss,
+            eta: 0.0,
+            mu: 0.0,
+            spec,
+            vecs: vec![CodedVec::encode(Codec::F32, &point, &mut rng)],
+        }));
+        match execute_command(&mut wk, cmd) {
+            Reply::CompressedVec(r) => {
+                assert_eq!(r.loss, Some(loss_ref));
+                let mut g = Vec::new();
+                r.vec.decode_into(&mut g);
+                assert_eq!(g.len(), 2);
+                for (a, b) in g_ref.iter().zip(g.iter()) {
+                    assert_eq!(*a as f32, *b as f32);
+                }
+            }
+            _ => panic!("compressed command must get a compressed reply"),
+        }
+    }
+
+    #[test]
+    fn compressed_wrong_dimension_is_an_error_reply() {
+        use crate::comm::compress::{Codec, CodedVec, CompressedCmd, ReplySpec};
+        let mut wk = tiny_worker(); // shard dimension 2
+        let spec = ReplySpec { codec: Codec::F32, error_feedback: true, seed: 0 };
+        let mut rng = crate::util::Rng64::seed_from_u64(0);
+        let cmd = Command::CompressedVec(Arc::new(CompressedCmd {
+            op: CompressedOp::DaneSolve,
+            eta: 1.0,
+            mu: 0.0,
+            spec,
+            vecs: vec![
+                CodedVec::encode(Codec::F32, &[0.0; 3], &mut rng),
+                CodedVec::encode(Codec::F32, &[0.0; 2], &mut rng),
+            ],
+        }));
+        match execute_command(&mut wk, cmd) {
+            Reply::Err(msg) => assert!(msg.contains("shard dimension"), "{msg}"),
+            _ => panic!("wrong-size compressed payload must be rejected"),
+        }
+        // the worker still answers well-formed commands afterwards
+        let ok = Command::Loss { w: Arc::new(vec![0.0, 0.0]) };
+        assert!(matches!(execute_command(&mut wk, ok), Reply::Scalar(_)));
     }
 
     #[test]

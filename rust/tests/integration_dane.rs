@@ -160,6 +160,7 @@ fn driver_runs_config_end_to_end_and_emits_csv() {
         eval_test: false,
         net: NetConfig::datacenter(),
         fault: FaultPolicy::FailFast,
+        compression: dane::config::CompressionConfig::default(),
     };
     let res = run_experiment(&cfg).unwrap();
     assert!(res.converged);

@@ -322,6 +322,7 @@ fn prop_config_json_roundtrip() {
                 eval_test: rng.bool(0.5),
                 net: NetConfig::datacenter(),
                 fault: FaultPolicy::FailFast,
+                compression: dane::config::CompressionConfig::default(),
             }
         },
         |cfg| {

@@ -128,6 +128,7 @@ fn driver_engine_parity_on_fig2_config() {
         eval_test: false,
         net: NetConfig::datacenter(),
         fault: FaultPolicy::FailFast,
+        compression: dane::config::CompressionConfig::default(),
     };
     let serial = run_experiment(&cfg).unwrap();
     cfg.engine = EngineKind::Threaded;

@@ -59,6 +59,7 @@ fn fig2_cfg(engine: EngineKind) -> ExperimentConfig {
         eval_test: false,
         net: NetConfig::datacenter(),
         fault: FaultPolicy::FailFast,
+        compression: dane::config::CompressionConfig::default(),
     }
 }
 

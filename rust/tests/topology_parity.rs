@@ -54,6 +54,7 @@ fn cfg(
         eval_test: false,
         net: NetConfig::datacenter(),
         fault: FaultPolicy::FailFast,
+        compression: dane::config::CompressionConfig::default(),
     }
 }
 

@@ -5,6 +5,9 @@
 //! element counts, trailing garbage — returns `Err`, never a panic and
 //! never an attacker-sized allocation.
 
+use dane::comm::compress::{
+    Codec, CodedVec, CompressedCmd, CompressedOp, CompressedReply, ReplySpec,
+};
 use dane::comm::wire::{
     decode_command, decode_reply, encode_command, encode_reply, read_frame, Command,
     InitPayload, InitRefPayload, PeerChild, PeersPayload, Reply, MAX_FRAME_LEN,
@@ -38,6 +41,34 @@ fn assert_bits_eq(a: &[f64], b: &[f64]) {
     assert_eq!(a.len(), b.len());
     for (x, y) in a.iter().zip(b) {
         assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y} differ in bits");
+    }
+}
+
+/// Bit-level equality for a compressed vector: the codec *math* is lossy
+/// but the *frame* must carry the encoder's output exactly (f32 NaNs
+/// included, which `PartialEq` would miscompare).
+fn assert_coded_bits_eq(a: &CodedVec, b: &CodedVec) {
+    match (a, b) {
+        (CodedVec::F32 { data: x }, CodedVec::F32 { data: y }) => {
+            assert_eq!(x.len(), y.len());
+            for (p, q) in x.iter().zip(y) {
+                assert_eq!(p.to_bits(), q.to_bits(), "{p} vs {q} differ in bits");
+            }
+        }
+        (
+            CodedVec::TopK { dim: d1, idx: i1, val: v1 },
+            CodedVec::TopK { dim: d2, idx: i2, val: v2 },
+        ) => {
+            assert_eq!(d1, d2);
+            assert_eq!(i1, i2);
+            assert_bits_eq(v1, v2);
+        }
+        (CodedVec::Quant { .. }, CodedVec::Quant { .. }) => {
+            // norms on the wire are finite by construction, so derived
+            // equality (dim, norm, bits, packed bytes) is exact here
+            assert_eq!(a, b);
+        }
+        _ => panic!("codec variant changed across the wire"),
     }
 }
 
@@ -367,6 +398,266 @@ fn hostile_peers_and_for_frames_rejected() {
 }
 
 // ---------------------------------------------------------------------
+// compressed frames (comm::compress codecs inside typed variants)
+// ---------------------------------------------------------------------
+
+#[test]
+fn compressed_cmd_roundtrips_every_codec_and_len() {
+    let mut rng = Rng64::seed_from_u64(7);
+    // empty, length-1, odd, and power-of-two-straddling dims; finite
+    // payloads because the decoder rejects non-finite top-k values and
+    // quant norms by design (see the hostile test below)
+    for len in [0usize, 1, 3, 17, 64, 255] {
+        let x: Vec<f64> = (0..len).map(|_| rng.range_f64(-5.0, 5.0)).collect();
+        for codec in [
+            Codec::F32,
+            Codec::TopK { k: (len / 3).max(1) },
+            Codec::Quant { bits: 4 },
+        ] {
+            let v0 = CodedVec::encode(codec, &x, &mut rng);
+            let v1 = CodedVec::encode(codec, &x, &mut rng);
+            let spec = ReplySpec { codec, error_feedback: true, seed: u64::MAX };
+            // GradLoss carries one vector, with adversarial hyperparams
+            let cmd = CompressedCmd {
+                op: CompressedOp::GradLoss,
+                eta: f64::NAN,
+                mu: f64::NEG_INFINITY,
+                spec,
+                vecs: vec![v0.clone()],
+            };
+            match rt_cmd(&Command::CompressedVec(Arc::new(cmd))) {
+                Command::CompressedVec(q) => {
+                    assert_eq!(q.op, CompressedOp::GradLoss);
+                    assert_eq!(q.eta.to_bits(), f64::NAN.to_bits());
+                    assert_eq!(q.mu.to_bits(), f64::NEG_INFINITY.to_bits());
+                    assert_eq!(q.spec, spec);
+                    assert_eq!(q.vecs.len(), 1);
+                    assert_coded_bits_eq(&q.vecs[0], &v0);
+                }
+                _ => panic!("variant changed"),
+            }
+            // DaneSolve carries two vectors
+            let spec = ReplySpec { codec, error_feedback: false, seed: 0 };
+            let cmd = CompressedCmd {
+                op: CompressedOp::DaneSolve,
+                eta: 1.0,
+                mu: f64::MIN_POSITIVE,
+                spec,
+                vecs: vec![v0.clone(), v1.clone()],
+            };
+            match rt_cmd(&Command::CompressedVec(Arc::new(cmd))) {
+                Command::CompressedVec(q) => {
+                    assert_eq!(q.op, CompressedOp::DaneSolve);
+                    assert_eq!(q.spec, spec);
+                    assert_eq!(q.vecs.len(), 2);
+                    assert_coded_bits_eq(&q.vecs[0], &v0);
+                    assert_coded_bits_eq(&q.vecs[1], &v1);
+                }
+                _ => panic!("variant changed"),
+            }
+        }
+    }
+}
+
+#[test]
+fn compressed_reply_roundtrips_with_and_without_loss() {
+    let mut rng = Rng64::seed_from_u64(8);
+    // the f32 downcast path must carry IEEE specials bit for bit (at f32
+    // width) — NaN payloads, ±inf, -0.0 all survive the frame
+    let weird = weird_vec(&mut rng, 33);
+    let f32v = CodedVec::encode(Codec::F32, &weird, &mut rng);
+    let finite: Vec<f64> = (0..33).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+    let topk = CodedVec::encode(Codec::TopK { k: 5 }, &finite, &mut rng);
+    let quant = CodedVec::encode(Codec::Quant { bits: 1 }, &finite, &mut rng);
+    for (vec, loss) in [
+        (f32v, Some(f64::NAN)), // loss is uncompressed instrumentation
+        (topk, Some(0.25)),
+        (quant, None), // DaneSolve replies carry no loss
+    ] {
+        let rep = CompressedReply { loss, vec: vec.clone() };
+        match rt_rep(&Reply::CompressedVec(Box::new(rep))) {
+            Reply::CompressedVec(q) => {
+                match (loss, q.loss) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => assert_eq!(a.to_bits(), b.to_bits()),
+                    _ => panic!("loss marker flipped"),
+                }
+                assert_coded_bits_eq(&q.vec, &vec);
+            }
+            _ => panic!("variant changed"),
+        }
+    }
+}
+
+/// Hostile-bytes coverage for `Command::CompressedVec` and
+/// `Reply::CompressedVec`: forged counts, out-of-order indices,
+/// non-finite values, bad codec specs, and blind corruption must all be
+/// `Err`, never a panic or an attacker-sized allocation.
+#[test]
+fn hostile_compressed_vec_frames_rejected_not_panicked() {
+    // header of a CMD_COMPRESSED_VEC body up to (and including) the
+    // vector count, parameterized on the codec spec
+    let header = |codec_id: u8, param: u32, nvecs: u8| {
+        let mut f = vec![WIRE_VERSION, 0x0c, 0x01]; // CMD_COMPRESSED_VEC, GradLoss
+        f.extend_from_slice(&1.0f64.to_le_bytes()); // eta
+        f.extend_from_slice(&0.0f64.to_le_bytes()); // mu
+        f.push(codec_id);
+        f.extend_from_slice(&param.to_le_bytes());
+        f.push(1); // error_feedback
+        f.extend_from_slice(&9u64.to_le_bytes()); // seed
+        f.push(nvecs);
+        f
+    };
+    // a well-formed frame decodes (sanity for the forgeries below)
+    let mut good = header(2, 2, 1); // top-k, k=2
+    good.push(2); // CODEC_TOPK vector
+    good.extend_from_slice(&4u64.to_le_bytes()); // dim
+    good.extend_from_slice(&2u64.to_le_bytes()); // k
+    good.extend_from_slice(&1u32.to_le_bytes());
+    good.extend_from_slice(&3u32.to_le_bytes());
+    good.extend_from_slice(&0.5f64.to_le_bytes());
+    good.extend_from_slice(&(-2.0f64).to_le_bytes());
+    assert!(matches!(decode_command(&good), Ok(Command::CompressedVec(_))));
+
+    // bad codec specs in the header
+    assert!(decode_command(&header(2, 0, 1)).is_err(), "top-k k=0 accepted");
+    assert!(decode_command(&header(1, 7, 1)).is_err(), "f32 with param accepted");
+    assert!(decode_command(&header(3, 0, 1)).is_err(), "quant bits=0 accepted");
+    assert!(decode_command(&header(3, 9, 1)).is_err(), "quant bits=9 accepted");
+    assert!(decode_command(&header(9, 1, 1)).is_err(), "unknown codec accepted");
+    // vector count must match the op's arity
+    assert!(decode_command(&header(2, 2, 2)).is_err(), "GradLoss with 2 vecs");
+    assert!(decode_command(&header(2, 2, 0)).is_err(), "GradLoss with 0 vecs");
+    // unknown op / bad error-feedback marker
+    let mut bad = good.clone();
+    bad[2] = 0x07;
+    assert!(decode_command(&bad).is_err(), "unknown op accepted");
+    let mut bad = good.clone();
+    bad[24] = 2; // error_feedback marker after op + eta + mu + codec spec
+    assert!(decode_command(&bad).is_err(), "ef marker 2 accepted");
+
+    // hostile coded-vector payloads (appended to a good header)
+    let forge = |vec_bytes: &[u8]| {
+        let mut f = header(2, 2, 1);
+        f.extend_from_slice(vec_bytes);
+        decode_command(&f)
+    };
+    // top-k dim over the allocation cap
+    let mut v = vec![2u8];
+    v.extend_from_slice(&(1u64 << 60).to_le_bytes());
+    v.extend_from_slice(&1u64.to_le_bytes());
+    assert!(forge(&v).is_err(), "huge top-k dim accepted");
+    // k > dim (padded so the count-vs-remaining guard is not the reason)
+    let mut v = vec![2u8];
+    v.extend_from_slice(&4u64.to_le_bytes());
+    v.extend_from_slice(&5u64.to_le_bytes());
+    v.extend_from_slice(&[0u8; 60]);
+    assert!(forge(&v).is_err(), "k > dim accepted");
+    // unsorted / duplicate / out-of-range indices and non-finite values
+    let topk2 = |i0: u32, i1: u32, x0: f64, x1: f64| {
+        let mut v = vec![2u8];
+        v.extend_from_slice(&4u64.to_le_bytes());
+        v.extend_from_slice(&2u64.to_le_bytes());
+        v.extend_from_slice(&i0.to_le_bytes());
+        v.extend_from_slice(&i1.to_le_bytes());
+        v.extend_from_slice(&x0.to_le_bytes());
+        v.extend_from_slice(&x1.to_le_bytes());
+        v
+    };
+    assert!(forge(&topk2(3, 1, 0.5, 0.5)).is_err(), "unsorted idx accepted");
+    assert!(forge(&topk2(2, 2, 0.5, 0.5)).is_err(), "duplicate idx accepted");
+    assert!(forge(&topk2(1, 7, 0.5, 0.5)).is_err(), "idx >= dim accepted");
+    assert!(forge(&topk2(1, 3, f64::NAN, 0.5)).is_err(), "NaN top-k accepted");
+    assert!(
+        forge(&topk2(1, 3, 0.5, f64::INFINITY)).is_err(),
+        "inf top-k accepted"
+    );
+    // quant: non-finite / negative norm, bad bits byte, dim beyond frame
+    let quant = |norm: f64, bits: u8, dim: u64, payload: &[u8]| {
+        let mut v = vec![3u8];
+        v.extend_from_slice(&dim.to_le_bytes());
+        v.extend_from_slice(&norm.to_le_bytes());
+        v.push(bits);
+        v.extend_from_slice(payload);
+        v
+    };
+    assert!(forge(&quant(f64::NAN, 4, 2, &[0; 2])).is_err(), "NaN norm accepted");
+    assert!(forge(&quant(-1.0, 4, 2, &[0; 2])).is_err(), "negative norm accepted");
+    assert!(forge(&quant(1.0, 0, 2, &[0; 2])).is_err(), "bits=0 accepted");
+    assert!(forge(&quant(1.0, 9, 2, &[0; 2])).is_err(), "bits=9 accepted");
+    assert!(
+        forge(&quant(1.0, 8, u64::MAX, &[0; 8])).is_err(),
+        "quant dim beyond frame accepted"
+    );
+
+    // reply side: bad loss marker, then hostile vector after a good one
+    let mut frame = vec![WIRE_VERSION, 0x86, 2]; // REP_COMPRESSED_VEC
+    assert!(decode_reply(&frame).is_err(), "loss marker 2 accepted");
+    let mut rep_good = vec![WIRE_VERSION, 0x86, 1];
+    rep_good.extend_from_slice(&0.5f64.to_le_bytes());
+    rep_good.push(1); // CODEC_F32
+    rep_good.extend_from_slice(&2u64.to_le_bytes());
+    rep_good.extend_from_slice(&1.0f32.to_le_bytes());
+    rep_good.extend_from_slice(&(-1.0f32).to_le_bytes());
+    assert!(matches!(decode_reply(&rep_good), Ok(Reply::CompressedVec(_))));
+    frame = rep_good.clone();
+    frame.truncate(frame.len() - 4); // f32 count now overruns the body
+    assert!(decode_reply(&frame).is_err(), "short f32 payload accepted");
+
+    // every single-byte corruption of both frames decodes or errors —
+    // never panics (Miri interprets each decode, so stride the sweep)
+    for f in [&good, &rep_good] {
+        for i in (0..f.len()).step_by(if cfg!(miri) { 13 } else { 1 }) {
+            for delta in [1u8, 0x80] {
+                let mut bad = f.clone();
+                bad[i] = bad[i].wrapping_add(delta);
+                let _ = decode_command(&bad);
+                let _ = decode_reply(&bad);
+            }
+        }
+    }
+}
+
+#[test]
+fn topk_tie_break_and_quant_seed_are_deterministic() {
+    // equal magnitudes break toward the lower index, pinned exactly:
+    // both engines must produce byte-identical frames for the traces to
+    // stay bit-exact across the engine matrix
+    let x = [1.0, -1.0, 1.0, -1.0, 0.5, 1.0];
+    match CodedVec::encode(Codec::TopK { k: 3 }, &x, &mut Rng64::seed_from_u64(0)) {
+        CodedVec::TopK { dim, idx, val } => {
+            assert_eq!(dim, 6);
+            assert_eq!(idx, vec![0, 1, 2]);
+            assert_eq!(val, vec![1.0, -1.0, 1.0]);
+        }
+        _ => panic!("codec changed"),
+    }
+    // k >= d keeps everything, indices sorted
+    match CodedVec::encode(Codec::TopK { k: 99 }, &x, &mut Rng64::seed_from_u64(0)) {
+        CodedVec::TopK { dim, idx, .. } => {
+            assert_eq!(dim, 6);
+            assert_eq!(idx, vec![0, 1, 2, 3, 4, 5]);
+        }
+        _ => panic!("codec changed"),
+    }
+    // stochastic quantization is a pure function of (input, seed): same
+    // seed -> byte-identical packed payload, different seed -> different
+    let mut rng = Rng64::seed_from_u64(12);
+    let y: Vec<f64> = (0..257).map(|_| rng.normal()).collect();
+    let a = CodedVec::encode(Codec::Quant { bits: 3 }, &y, &mut Rng64::seed_from_u64(42));
+    let b = CodedVec::encode(Codec::Quant { bits: 3 }, &y, &mut Rng64::seed_from_u64(42));
+    assert_eq!(a, b, "same seed must quantize identically");
+    let c = CodedVec::encode(Codec::Quant { bits: 3 }, &y, &mut Rng64::seed_from_u64(43));
+    assert_ne!(a, c, "different seed should dither differently");
+    // and the frame carries the packed bits losslessly
+    let rep = CompressedReply { loss: None, vec: a.clone() };
+    match rt_rep(&Reply::CompressedVec(Box::new(rep))) {
+        Reply::CompressedVec(q) => assert_coded_bits_eq(&q.vec, &a),
+        _ => panic!("variant changed"),
+    }
+}
+
+// ---------------------------------------------------------------------
 // reply round-trips
 // ---------------------------------------------------------------------
 
@@ -458,6 +749,27 @@ fn every_truncation_of_every_variant_is_an_error() {
             rank: 3,
             inner: Box::new(Command::Loss { w: Arc::new(weird_vec(&mut rng, 4)) }),
         },
+        Command::CompressedVec(Arc::new(CompressedCmd {
+            op: CompressedOp::GradLoss,
+            eta: 1.0,
+            mu: 0.0,
+            spec: ReplySpec { codec: Codec::Quant { bits: 4 }, error_feedback: true, seed: 3 },
+            vecs: vec![CodedVec::encode(
+                Codec::Quant { bits: 4 },
+                &[0.5, -1.0, 0.25],
+                &mut rng,
+            )],
+        })),
+        Command::CompressedVec(Arc::new(CompressedCmd {
+            op: CompressedOp::DaneSolve,
+            eta: 1.0,
+            mu: 0.5,
+            spec: ReplySpec { codec: Codec::TopK { k: 2 }, error_feedback: false, seed: 0 },
+            vecs: vec![
+                CodedVec::encode(Codec::TopK { k: 2 }, &[0.5, -1.0, 0.25], &mut rng),
+                CodedVec::encode(Codec::TopK { k: 2 }, &[2.0, 0.0, -3.0], &mut rng),
+            ],
+        })),
     ] {
         encode_command(&cmd, &mut buf).unwrap();
         frames.push(buf[4..].to_vec());
@@ -468,6 +780,14 @@ fn every_truncation_of_every_variant_is_an_error() {
         Reply::VecScalar(weird_vec(&mut rng, 4), 2.0),
         Reply::VecPair(weird_vec(&mut rng, 4), Some(weird_vec(&mut rng, 2))),
         Reply::Err("x".into()),
+        Reply::CompressedVec(Box::new(CompressedReply {
+            loss: Some(0.25),
+            vec: CodedVec::encode(Codec::TopK { k: 2 }, &[0.5, -1.0, 0.25], &mut rng),
+        })),
+        Reply::CompressedVec(Box::new(CompressedReply {
+            loss: None,
+            vec: CodedVec::encode(Codec::F32, &weird_vec(&mut rng, 3), &mut rng),
+        })),
     ] {
         encode_reply(&rep, &mut buf).unwrap();
         frames.push(buf[4..].to_vec());
