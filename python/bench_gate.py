@@ -1,0 +1,154 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over the ``dane-bench-v1`` trajectory files.
+
+Usage::
+
+    bench_gate.py COMMITTED REGENERATED [THRESHOLD]
+    bench_gate.py --self-test
+
+Compares every benchmark entry's ``median_ns`` in REGENERATED against
+the same-named entry in the COMMITTED baseline and exits nonzero when
+any entry regresses by more than THRESHOLD (default 1.5x).
+
+Two deliberate carve-outs:
+
+* A committed file whose ``label`` starts with ``unmeasured-estimate``
+  holds authored analytic placeholders, not measurements (the authoring
+  container has no toolchain to run on — see rust/benches/README.md).
+  Such a baseline is skipped with a notice instead of compared; the
+  gate arms itself the first time a *measured* baseline is committed,
+  without a workflow change.
+
+* A **zero-valued baseline** is a contract, not a measurement — the
+  ``leader allocs/round ... star ...`` entries from roundpath_micro
+  record the allocation-free round path as 0.0.  Any nonzero
+  regenerated value fails outright: a reintroduced per-round
+  allocation turns CI red even though it is orders of magnitude too
+  small to move a latency median.
+
+Entries present on only one side are ignored here — the workflow's
+separate key-set diff step owns rename/drop drift, and mixing the two
+concerns would double-report every rename as a "regression".
+"""
+
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != "dane-bench-v1":
+        raise SystemExit(f"{path}: not a dane-bench-v1 file")
+    return doc
+
+
+def compare(committed, regenerated, threshold=1.5):
+    """Return (skipped, failures, lines) for two parsed trajectory docs.
+
+    ``failures`` is a list of (name, baseline, new) tuples; ``lines``
+    is the human-readable report.
+    """
+    label = committed.get("label", "")
+    if label.startswith("unmeasured-estimate"):
+        return True, [], [
+            "baseline is an authored estimate (label 'unmeasured-estimate"
+            "...'); skipping median comparison"
+        ]
+    base = {r["name"]: r["median_ns"] for r in committed["results"]}
+    new = {r["name"]: r["median_ns"] for r in regenerated["results"]}
+    failures = []
+    lines = []
+    for name in sorted(base):
+        if name not in new:
+            continue  # key-set diff step owns missing entries
+        b, n = base[name], new[name]
+        if b == 0.0:
+            ok = n == 0.0
+            verdict = "OK" if ok else f"FAIL (zero baseline, got {n})"
+            lines.append(f"  {name}: contract 0.0 -> {n}  {verdict}")
+        else:
+            ratio = n / b
+            ok = ratio <= threshold
+            verdict = "OK" if ok else f"FAIL (> {threshold}x)"
+            lines.append(f"  {name}: {b:.1f} -> {n:.1f}  ({ratio:.2f}x)  {verdict}")
+        if not ok:
+            failures.append((name, b, n))
+    return False, failures, lines
+
+
+def self_test():
+    baseline = {
+        "schema": "dane-bench-v1",
+        "label": "v1.0",
+        "results": [
+            {"name": "round", "median_ns": 100.0},
+            {"name": "allocs star", "median_ns": 0.0},
+            {"name": "renamed-away", "median_ns": 5.0},
+        ],
+    }
+
+    # within threshold + zero contract held -> pass
+    ok_run = {
+        "schema": "dane-bench-v1",
+        "label": "ci",
+        "results": [
+            {"name": "round", "median_ns": 140.0},
+            {"name": "allocs star", "median_ns": 0.0},
+        ],
+    }
+    skipped, failures, _ = compare(baseline, ok_run)
+    assert not skipped and failures == [], failures
+
+    # 2x latency regression -> fail
+    slow_run = {"schema": "dane-bench-v1", "results": [
+        {"name": "round", "median_ns": 200.0},
+        {"name": "allocs star", "median_ns": 0.0},
+    ]}
+    _, failures, _ = compare(baseline, slow_run)
+    assert [f[0] for f in failures] == ["round"], failures
+
+    # any allocation against the zero contract -> fail
+    alloc_run = {"schema": "dane-bench-v1", "results": [
+        {"name": "round", "median_ns": 100.0},
+        {"name": "allocs star", "median_ns": 1.0},
+    ]}
+    _, failures, _ = compare(baseline, alloc_run)
+    assert [f[0] for f in failures] == ["allocs star"], failures
+
+    # authored-estimate baseline -> skipped, never fails
+    estimate = dict(baseline, label="unmeasured-estimate: authored")
+    skipped, failures, _ = compare(estimate, slow_run)
+    assert skipped and failures == []
+
+    # missing entries are the key-set step's problem, not ours
+    _, failures, _ = compare(baseline, ok_run)
+    assert all(f[0] != "renamed-away" for f in failures)
+
+    print("bench_gate self-test OK")
+
+
+def main(argv):
+    if argv[1:] == ["--self-test"]:
+        self_test()
+        return 0
+    if len(argv) not in (3, 4):
+        print(__doc__)
+        return 2
+    threshold = float(argv[3]) if len(argv) == 4 else 1.5
+    committed, regenerated = load(argv[1]), load(argv[2])
+    skipped, failures, lines = compare(committed, regenerated, threshold)
+    print(f"bench gate: {argv[1]} vs {argv[2]} (threshold {threshold}x)")
+    for line in lines:
+        print(line)
+    if skipped:
+        return 0
+    if failures:
+        print(f"bench gate: {len(failures)} regression(s)")
+        return 1
+    print("bench gate: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,212 @@
+//! Round-path micro-benchmarks (EXPERIMENTS.md §Perf): the full DANE
+//! round — `grad_and_loss_into` + `dane_round_into`, i.e. two
+//! broadcast/fold collectives — measured end to end across the engine ×
+//! topology matrix at m in {4, 8, 16}, plus **measured leader-thread
+//! allocations per round** from a counting global allocator.
+//!
+//! Two families of entries:
+//!
+//! * `dane round m=<m> <topology> <engine>` — median latency of one
+//!   full round. Shards are small (64 rows per worker), so the number
+//!   is dominated by what the round path exists to move: frames,
+//!   channel hops and the leader's fan-out/fan-in + rank-order fold.
+//! * `leader allocs/round m=<m> <topology> <engine>` — allocator hits
+//!   on the leader thread per steady-state round (value column, not
+//!   nanoseconds). The star strategies must report **0.0** on both
+//!   engines — that is the same contract
+//!   `rust/tests/alloc_steady_state.rs` pins as a hard assert; this
+//!   file records it as a trajectory so CI's regression gate catches a
+//!   reintroduced per-round allocation as a >1.5x jump (any value > 0
+//!   against a 0 baseline fails the gate). `star-seq` on tcp decodes
+//!   replies inline on the leader thread and the tree wirings allocate
+//!   their relay bundles — those counts are small constants, recorded
+//!   so drift is visible, not pinned to zero (coordinator::tcp module
+//!   docs, "Allocation-free round path").
+//!
+//! TCP workers are in-process threads serving the genuine
+//! `worker::serve` session over loopback sockets (same frames, relays
+//! and bundles as worker processes, minus spawn noise); their
+//! allocations land in their own thread-local counters, so the leader
+//! count isolates exactly the protocol path. The run serializes to
+//! `BENCH_roundpath.json` at the repo root (`dane-bench-v1` schema);
+//! `BENCH_MEASURE_MS` / `BENCH_WARMUP_MS` shrink it for CI bench-smoke.
+
+use dane::comm::{ExecTopology, NetModel};
+use dane::config::LossKind;
+use dane::coordinator::tcp::TcpCluster;
+use dane::coordinator::threaded::ThreadedCluster;
+use dane::coordinator::Cluster;
+use dane::data::{synthetic_fig2, Dataset};
+use dane::loss::{Objective, Ridge};
+use dane::util::bench::{black_box, git_label, Bencher};
+use dane::worker::serve;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::net::TcpListener;
+use std::sync::Arc;
+
+/// Repo root (one above the cargo manifest), where the trajectory lands.
+const BENCH_JSON: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_roundpath.json");
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: delegates to System; the thread-local bump never allocates
+// (const-initialized Cell) and tolerates TLS teardown via try_with.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn leader_allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+/// See wire_micro: loopback listeners served by in-process threads.
+fn spawn_inprocess_workers(m: usize) -> Vec<String> {
+    let mut addrs = Vec::with_capacity(m);
+    for _ in 0..m {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        addrs.push(listener.local_addr().expect("local addr").to_string());
+        std::thread::spawn(move || {
+            let _ = serve::serve_listener(listener);
+        });
+    }
+    addrs
+}
+
+fn tcp_cluster(ds: &Dataset, m: usize, topology: ExecTopology) -> TcpCluster {
+    let addrs = spawn_inprocess_workers(m);
+    TcpCluster::connect(
+        ds,
+        LossKind::Ridge,
+        0.01,
+        &addrs,
+        7,
+        NetModel::free(),
+        None,
+        None,
+        topology,
+    )
+    .expect("tcp cluster over in-process workers")
+}
+
+/// Bench one cluster: round latency + steady-state leader allocations.
+fn bench_round_path<C: Cluster>(
+    b: &Bencher,
+    cluster: &mut C,
+    d: usize,
+    m: usize,
+    topo: ExecTopology,
+    engine: &str,
+) {
+    let mut w = vec![0.0; d];
+    let mut w_next = vec![0.0; d];
+    let mut g = vec![0.0; d];
+
+    // Warmup: one-time state (worker caches, pooled frames/gathers).
+    for _ in 0..3 {
+        cluster.grad_and_loss_into(&w, &mut g).expect("warmup grad");
+        cluster
+            .dane_round_into(&w, &g, 1.0, 0.01, &mut w_next)
+            .expect("warmup solve");
+        std::mem::swap(&mut w, &mut w_next);
+    }
+
+    b.bench(&format!("dane round m={m} {} {engine}", topo.name()), || {
+        cluster.grad_and_loss_into(&w, &mut g).expect("grad round");
+        cluster
+            .dane_round_into(&w, &g, 1.0, 0.01, &mut w_next)
+            .expect("solve round");
+        black_box(&w_next);
+    });
+
+    const COUNT_ROUNDS: u64 = 32;
+    let before = leader_allocs();
+    for _ in 0..COUNT_ROUNDS {
+        cluster.grad_and_loss_into(&w, &mut g).expect("count grad");
+        cluster
+            .dane_round_into(&w, &g, 1.0, 0.01, &mut w_next)
+            .expect("count solve");
+        std::mem::swap(&mut w, &mut w_next);
+    }
+    let per_round = (leader_allocs() - before) as f64 / COUNT_ROUNDS as f64;
+    b.record_value(
+        &format!("leader allocs/round m={m} {} {engine}", topo.name()),
+        per_round,
+    );
+}
+
+fn main() {
+    let b = Bencher::from_env(500, 100, 40);
+    println!("== roundpath_micro (full DANE round; m in {{4,8,16}}) ==");
+
+    let d = 64usize;
+    let strategies =
+        [ExecTopology::StarSeq, ExecTopology::Star, ExecTopology::Tree];
+    for m in [4usize, 8, 16] {
+        // 64 rows per worker: compute stays negligible next to the
+        // round path under measurement.
+        let ds = synthetic_fig2(64 * m, d, 0.005, 42);
+        let obj: Arc<dyn Objective> = Arc::new(Ridge::new(0.01));
+        for topo in strategies {
+            let mut threaded = ThreadedCluster::with_topology(
+                &ds,
+                obj.clone(),
+                m,
+                7,
+                NetModel::free(),
+                None,
+                topo,
+            );
+            bench_round_path(&b, &mut threaded, d, m, topo, "threaded");
+            drop(threaded);
+
+            let mut tcp = tcp_cluster(&ds, m, topo);
+            bench_round_path(&b, &mut tcp, d, m, topo, "tcp");
+        }
+    }
+
+    // Zero-alloc contract echo (the hard assert lives in
+    // tests/alloc_steady_state.rs; here it is a visible summary).
+    for m in [4usize, 8, 16] {
+        for engine in ["threaded", "tcp"] {
+            if let Some(v) =
+                b.median_ns_of(&format!("leader allocs/round m={m} star {engine}"))
+            {
+                println!("m={m:<3} {engine:<8} star leader allocs/round: {v}");
+            }
+        }
+    }
+
+    b.write_json(
+        std::path::Path::new(BENCH_JSON),
+        "roundpath_micro",
+        &git_label(),
+    )
+    .expect("write BENCH_roundpath.json");
+    println!("wrote {BENCH_JSON}");
+}

@@ -114,6 +114,16 @@ fn main() {
         black_box(wire::decode_reply(&reply_body).unwrap());
     });
 
+    // Bulk f64 decode throughput: d = 4096 is payload-dominated, so this
+    // entry tracks the chunked `wire::take_f64s` fast path rather than
+    // the per-frame fixed costs the d = 512 entries mix in.
+    let big = Reply::VecScalar((0..4096).map(|_| rng.normal()).collect(), 0.5);
+    wire::encode_reply(&big, &mut buf).unwrap();
+    let big_body = buf[4..].to_vec();
+    b.bench("decode VecScalar reply d=4096", || {
+        black_box(wire::decode_reply(&big_body).unwrap());
+    });
+
     // ---- one-collective round-trip latency --------------------------
     // Small shards keep the compute share negligible, so the number is
     // dominated by what we are measuring: frames on the wire and the

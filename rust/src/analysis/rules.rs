@@ -56,6 +56,19 @@ const ITER_METHODS: &[&str] = &[
 /// coverage for the wire-totality rule.
 const HOSTILE_MARKERS: &[&str] = &["trunc", "hostile", "malformed", "corrupt", "reject"];
 
+/// Reduction kernels that must keep the canonical 4-lane accumulator
+/// structure (`linalg/ops.rs` module docs): per file, the fns whose
+/// bodies must mention all of [`LANES`]. Losing the lanes silently
+/// reverts a kernel to a scalar sequential fold — different bits than
+/// the pinned `(a0 + a2) + (a1 + a3)` order and a 3-4x throughput loss.
+const LANE_KERNELS: &[(&str, &[&str])] = &[
+    ("rust/src/linalg/ops.rs", &["dot", "dist2"]),
+    ("rust/src/linalg/sparse.rs", &["row_dot", "row_sq_norm"]),
+];
+
+/// The four lane accumulators of the canonical reduction fold.
+const LANES: &[&str] = &["a0", "a1", "a2", "a3"];
+
 // ---------------------------------------------------------------- tokens
 
 /// One identifier-shaped token in masked code (byte offsets).
@@ -220,14 +233,20 @@ pub fn densify(f: &FileAnalysis) -> Vec<Diagnostic> {
 
 // ------------------------------------------------------------ determinism
 
-/// No wall clocks outside the timing allowlist, and no iteration over
+/// No wall clocks outside the timing allowlist, no iteration over
 /// `HashMap`/`HashSet` bindings (their order is nondeterministic and
-/// must never feed a numeric fold or trace output).
+/// must never feed a numeric fold or trace output), and the hot-path
+/// reduction kernels on the [`LANE_KERNELS`] allowlist must keep their
+/// canonical 4-lane accumulator structure.
 pub fn determinism(f: &FileAnalysis) -> Vec<Diagnostic> {
     let code = &f.code;
     let lines = Lines::new(code);
     let toks = idents(code);
     let mut out = Vec::new();
+
+    if let Some((_, kernels)) = LANE_KERNELS.iter().find(|(p, _)| *p == f.rel_path) {
+        out.extend(lane_structure(f, kernels, &lines));
+    }
 
     if !TIME_ALLOW.contains(&f.rel_path.as_str()) {
         for (k, t) in toks.iter().enumerate() {
@@ -336,6 +355,62 @@ fn loop_source_hit(code: &str, toks: &[Tok], k: usize, suspects: &[String]) -> O
         return None;
     }
     None
+}
+
+/// Check the 4-lane accumulator structure of every allowlisted
+/// reduction kernel in this file: each fn body must mention all four
+/// lane identifiers, and every allowlisted name must still exist (a
+/// rename without an allowlist update would otherwise silently disarm
+/// the rule).
+fn lane_structure(f: &FileAnalysis, kernels: &[&str], lines: &Lines) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut seen: Vec<&str> = Vec::new();
+    for span in fn_spans(&f.code) {
+        let Some(&name) = kernels.iter().find(|k| **k == span.name) else {
+            continue;
+        };
+        let line = lines.line_of(span.open);
+        if f.is_test_line(line) {
+            continue;
+        }
+        seen.push(name);
+        let body = &f.code[span.open..span.close];
+        let body_idents = idents(body);
+        let missing: Vec<&str> = LANES
+            .iter()
+            .copied()
+            .filter(|lane| !body_idents.iter().any(|t| &body[t.start..t.end] == *lane))
+            .collect();
+        if !missing.is_empty() {
+            out.push(Diagnostic {
+                file: f.rel_path.clone(),
+                line,
+                rule: DETERMINISM,
+                msg: format!(
+                    "reduction kernel `{name}` lost its 4-lane accumulator \
+                     structure (missing {}): hot-path reductions must keep the \
+                     canonical `a0..a3` lane fold (see linalg/ops.rs module \
+                     docs) so results stay bit-reproducible and vectorizable",
+                    missing.join("/")
+                ),
+            });
+        }
+    }
+    for k in kernels {
+        if !seen.contains(k) {
+            out.push(Diagnostic {
+                file: f.rel_path.clone(),
+                line: 1,
+                rule: DETERMINISM,
+                msg: format!(
+                    "allowlisted reduction kernel `{k}` not found in this file; \
+                     update the determinism rule's LANE_KERNELS allowlist if it \
+                     moved or was renamed"
+                ),
+            });
+        }
+    }
+    out
 }
 
 /// Names bound to a `HashMap`/`HashSet` type in this file: fields and
@@ -1171,6 +1246,41 @@ mod tests {
         assert_eq!(d.len(), 1, "{d:?}");
         assert_eq!(d[0].line, 6);
         assert!(d[0].msg.contains("flags"));
+    }
+
+    const LANED_DIST2: &str = "pub fn dist2(x: &[f64], y: &[f64]) -> f64 {\n    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);\n    a0 += 1.0; a1 += 1.0; a2 += 1.0; a3 += 1.0;\n    (a0 + a2) + (a1 + a3)\n}\n";
+
+    #[test]
+    fn determinism_flags_scalar_reductions_in_allowlisted_kernels() {
+        // a `dot` that lost its lanes next to an intact `dist2`: exactly
+        // one diagnostic, naming the kernel and the missing lanes
+        let src = format!(
+            "pub fn dot(x: &[f64], y: &[f64]) -> f64 {{\n    let mut acc = 0.0;\n    for i in 0..x.len() {{\n        acc += x[i] * y[i];\n    }}\n    acc\n}}\n{LANED_DIST2}"
+        );
+        let d = determinism(&fa("rust/src/linalg/ops.rs", &src));
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].line, 1);
+        assert!(d[0].msg.contains("`dot`") && d[0].msg.contains("a0"), "{d:?}");
+        // the same scalar loop outside the allowlisted files is not
+        // this rule's business
+        assert!(determinism(&fa("rust/src/worker/x.rs", &src)).is_empty());
+        // both kernels laned -> clean
+        let good = format!(
+            "pub fn dot(x: &[f64], y: &[f64]) -> f64 {{\n    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);\n    a0 += 1.0; a1 += 1.0; a2 += 1.0; a3 += 1.0;\n    (a0 + a2) + (a1 + a3)\n}}\n{LANED_DIST2}"
+        );
+        assert!(determinism(&fa("rust/src/linalg/ops.rs", &good)).is_empty());
+    }
+
+    #[test]
+    fn determinism_reports_vanished_allowlisted_kernels() {
+        // `dot` renamed away entirely: the allowlist must not silently
+        // disarm
+        let d = determinism(&fa("rust/src/linalg/ops.rs", LANED_DIST2));
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(
+            d[0].msg.contains("`dot` not found"),
+            "{d:?}"
+        );
     }
 
     #[test]

@@ -226,6 +226,22 @@ impl TreePlan {
 /// rank order — bit-identical to the serial engine's inline left fold
 /// regardless of topology or arrival order.
 ///
+/// Two consumption modes share the slotting and error discipline:
+///
+/// * **buffered** — [`RankGather::into_result`] /
+///   [`RankGather::into_result_masked`] hand back the full rank-ordered
+///   reply vector after the gather (per-worker-output collectives:
+///   prox, local ERMs);
+/// * **incremental** — [`RankGather::drain_fold`] folds reply *i* the
+///   moment ranks `0..=i` have all arrived, so the leader's fold work
+///   overlaps the remaining network waits. The fold still consumes the
+///   slots strictly in rank order (the *prefix* of arrived ranks), so
+///   the summation order — and therefore every bit of the result — is
+///   identical to the buffered fold. A fold whose round fails midway
+///   has touched the accumulator, but the round returns `Err` and every
+///   caller discards/refills the accumulator, so no partial fold is
+///   ever observed.
+///
 /// Error discipline matches the engines' historical drain-then-fail
 /// contract: every link is drained before anything surfaces, and the
 /// error reported is the one belonging to the **lowest rank** (the
@@ -235,6 +251,9 @@ impl TreePlan {
 pub struct RankGather {
     slots: Vec<Option<Reply>>,
     first_err: Option<(usize, Error)>,
+    /// Incremental-fold cursor: every rank below `next` has either been
+    /// folded or skipped as quarantined. Stays 0 in buffered mode.
+    next: usize,
 }
 
 /// Message prefix a relaying node uses when it synthesizes a
@@ -248,7 +267,22 @@ pub const RELAY_CHILD_LOST: &str = "relay child worker";
 
 impl RankGather {
     pub fn new(m: usize) -> Self {
-        RankGather { slots: (0..m).map(|_| None).collect(), first_err: None }
+        RankGather {
+            slots: (0..m).map(|_| None).collect(),
+            first_err: None,
+            next: 0,
+        }
+    }
+
+    /// Re-arm a pooled gather for a fresh round of `m` ranks. Retains
+    /// the slot vector's capacity, so a leader that keeps one
+    /// `RankGather` across rounds allocates nothing here in steady
+    /// state (`tests/alloc_steady_state.rs`).
+    pub fn reset(&mut self, m: usize) {
+        self.slots.clear();
+        self.slots.resize_with(m, || None);
+        self.first_err = None;
+        self.next = 0;
     }
 
     /// Record worker `rank`'s reply (or the transport error that stands
@@ -262,7 +296,10 @@ impl RankGather {
                 Error::Runtime(format!("worker {rank}: {msg}"))
             }
             Ok(r) => {
-                if self.slots[rank].is_none() {
+                // A rank below the fold cursor already had its reply
+                // consumed, so a second arrival is a duplicate even
+                // though its slot is empty again.
+                if rank >= self.next && self.slots[rank].is_none() {
                     self.slots[rank] = Some(r);
                 } else if self.first_err.is_none() {
                     self.first_err = Some((
@@ -278,6 +315,72 @@ impl RankGather {
             Some((r, _)) if *r <= rank => {}
             _ => self.first_err = Some((rank, err)),
         }
+    }
+
+    /// Fold every ready rank-prefix reply: consume slot `next` while
+    /// ranks `0..=next` have all arrived (quarantined ranks in `dead`
+    /// are expected absentees and are skipped), advancing the cursor.
+    /// Call after each [`RankGather::put`] (or batch of puts) to overlap
+    /// the leader's fold with outstanding link waits. Once any error is
+    /// recorded the fold stops for good — the accumulator is abandoned
+    /// and the round surfaces the lowest-rank error from
+    /// [`RankGather::finish_fold`].
+    pub fn drain_fold(
+        &mut self,
+        dead: &[bool],
+        fold: &mut dyn FnMut(usize, Reply) -> Result<()>,
+    ) {
+        debug_assert_eq!(dead.len(), self.slots.len(), "dead mask length mismatch");
+        while self.first_err.is_none() && self.next < self.slots.len() {
+            let rank = self.next;
+            if dead.get(rank).copied().unwrap_or(false) {
+                if self.slots[rank].is_some() {
+                    self.first_err = Some((
+                        rank,
+                        Error::Runtime(format!(
+                            "collective gather: reply from quarantined worker {rank}"
+                        )),
+                    ));
+                    return;
+                }
+                self.next += 1;
+                continue;
+            }
+            let Some(r) = self.slots[rank].take() else { return };
+            if let Err(e) = fold(rank, r) {
+                // A fold rejection (wrong reply variant, dimension
+                // mismatch) is the same class as a worker-reported bad
+                // reply: recorded at this rank. Ranks below it folded
+                // clean, so lowest-rank-wins holds by construction.
+                self.first_err = Some((rank, e));
+                return;
+            }
+            self.next += 1;
+        }
+    }
+
+    /// Finish an incremental gather: drain the final prefix, then
+    /// surface the lowest-rank error if any reply failed, or a
+    /// protocol-violation error if a live rank never replied — the
+    /// exact discipline of [`RankGather::into_result_masked`], without
+    /// consuming the (pooled) gather. The caller must
+    /// [`RankGather::reset`] before the next round either way.
+    pub fn finish_fold(
+        &mut self,
+        dead: &[bool],
+        fold: &mut dyn FnMut(usize, Reply) -> Result<()>,
+    ) -> Result<()> {
+        self.drain_fold(dead, fold);
+        if let Some((_, e)) = self.first_err.take() {
+            return Err(e);
+        }
+        if self.next < self.slots.len() {
+            return Err(Error::Runtime(format!(
+                "collective gather: no reply slotted for worker {}",
+                self.next
+            )));
+        }
+        Ok(())
     }
 
     /// Lowest-rank error recorded so far, if any.
@@ -497,6 +600,193 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("worker 2") && e.contains("boom"), "{e}");
+    }
+
+    /// Fold scalars with a weight per rank, recording the fold order —
+    /// the incremental-fold tests' stand-in for the engines' axpy fold.
+    fn sum_fold(
+        acc: &mut f64,
+        order: &mut Vec<usize>,
+    ) -> impl FnMut(usize, Reply) -> Result<()> + '_ {
+        move |rank, r| match r {
+            Reply::Scalar(x) => {
+                *acc += (rank + 1) as f64 * x;
+                order.push(rank);
+                Ok(())
+            }
+            _ => Err(Error::Runtime(format!("worker {rank}: unexpected reply type"))),
+        }
+    }
+
+    #[test]
+    fn incremental_fold_consumes_ready_prefix_in_rank_order() {
+        let dead = [false; 4];
+        let mut acc = 0.0;
+        let mut order = Vec::new();
+        {
+            let mut fold = sum_fold(&mut acc, &mut order);
+            let mut g = RankGather::new(4);
+            // preorder-style arrival (a tree link delivering [0,2,3,1]):
+            // rank 0 folds immediately, 2 and 3 buffer until 1 lands.
+            g.put(0, Ok(Reply::Scalar(10.0)));
+            g.drain_fold(&dead, &mut fold);
+            g.put(2, Ok(Reply::Scalar(30.0)));
+            g.drain_fold(&dead, &mut fold);
+            g.put(3, Ok(Reply::Scalar(40.0)));
+            g.drain_fold(&dead, &mut fold);
+            g.put(1, Ok(Reply::Scalar(20.0)));
+            g.finish_fold(&dead, &mut fold).unwrap();
+        }
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        assert_eq!(acc, 1.0 * 10.0 + 2.0 * 20.0 + 3.0 * 30.0 + 4.0 * 40.0);
+    }
+
+    #[test]
+    fn incremental_fold_matches_buffered_fold_bitwise() {
+        // Same replies, arrival order scrambled differently per mode:
+        // the fold order (hence every bit) must not depend on arrival.
+        let vals = [0.1, -7.25, 3.5e-3, 1e9, -2.0, 0.625, 55.0];
+        let m = vals.len();
+        let dead = vec![false; m];
+        let buffered = {
+            let mut g = RankGather::new(m);
+            for r in (0..m).rev() {
+                g.put(r, Ok(Reply::Scalar(vals[r])));
+            }
+            let mut acc = 0.0;
+            for (r, rep) in g.into_result().unwrap().into_iter().enumerate() {
+                match rep {
+                    Reply::Scalar(x) => acc += (r + 1) as f64 * x,
+                    _ => panic!("wrong variant"),
+                }
+            }
+            acc
+        };
+        let mut acc = 0.0;
+        let mut order = Vec::new();
+        {
+            let mut fold = sum_fold(&mut acc, &mut order);
+            let mut g = RankGather::new(m);
+            for r in [3, 0, 6, 2, 1, 5, 4] {
+                g.put(r, Ok(Reply::Scalar(vals[r])));
+                g.drain_fold(&dead, &mut fold);
+            }
+            g.finish_fold(&dead, &mut fold).unwrap();
+        }
+        assert_eq!(acc.to_bits(), buffered.to_bits());
+        assert_eq!(order, (0..m).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn incremental_fold_error_discipline_matches_buffered() {
+        // transport error at rank 1: ranks >= 1 never fold, lowest-rank
+        // error surfaces from finish_fold
+        let dead = [false; 3];
+        let mut acc = 0.0;
+        let mut order = Vec::new();
+        {
+            let mut fold = sum_fold(&mut acc, &mut order);
+            let mut g = RankGather::new(3);
+            g.put(2, Ok(Reply::Scalar(2.0)));
+            g.put(1, Err(Error::Runtime("boom".into())));
+            g.put(0, Ok(Reply::Scalar(0.0)));
+            let e = g.finish_fold(&dead, &mut fold).unwrap_err().to_string();
+            assert!(e.contains("boom"), "{e}");
+        }
+        assert_eq!(order, vec![0]);
+
+        // a live rank that never replies is a protocol violation
+        let mut acc = 0.0;
+        let mut order = Vec::new();
+        {
+            let mut fold = sum_fold(&mut acc, &mut order);
+            let mut g = RankGather::new(3);
+            g.put(0, Ok(Reply::Scalar(0.0)));
+            g.put(2, Ok(Reply::Scalar(2.0)));
+            let e = g.finish_fold(&dead, &mut fold).unwrap_err().to_string();
+            assert!(e.contains("no reply slotted for worker 1"), "{e}");
+        }
+
+        // a fold rejection (wrong variant) reads like a bad reply
+        let mut acc = 0.0;
+        let mut order = Vec::new();
+        {
+            let mut fold = sum_fold(&mut acc, &mut order);
+            let mut g = RankGather::new(2);
+            g.put(0, Ok(Reply::Scalar(0.0)));
+            g.put(1, Ok(Reply::Vec(vec![1.0])));
+            let e = g.finish_fold(&dead[..2], &mut fold).unwrap_err().to_string();
+            assert!(e.contains("worker 1") && e.contains("unexpected reply"), "{e}");
+        }
+
+        // a second reply for an already-folded rank is a duplicate
+        let mut acc = 0.0;
+        let mut order = Vec::new();
+        {
+            let mut fold = sum_fold(&mut acc, &mut order);
+            let mut g = RankGather::new(2);
+            g.put(0, Ok(Reply::Scalar(0.0)));
+            g.drain_fold(&dead[..2], &mut fold);
+            g.put(0, Ok(Reply::Scalar(9.0)));
+            g.put(1, Ok(Reply::Scalar(1.0)));
+            let e = g.finish_fold(&dead[..2], &mut fold).unwrap_err().to_string();
+            assert!(e.contains("duplicate reply"), "{e}");
+        }
+    }
+
+    #[test]
+    fn incremental_fold_skips_quarantined_ranks() {
+        let dead = [false, true, false];
+        let mut acc = 0.0;
+        let mut order = Vec::new();
+        {
+            let mut fold = sum_fold(&mut acc, &mut order);
+            let mut g = RankGather::new(3);
+            g.put(2, Ok(Reply::Scalar(2.0)));
+            g.put(0, Ok(Reply::Scalar(0.0)));
+            g.finish_fold(&dead, &mut fold).unwrap();
+        }
+        assert_eq!(order, vec![0, 2]);
+        assert_eq!(acc, 3.0 * 2.0);
+
+        // a reply *from* a quarantined rank is still a violation
+        let mut acc = 0.0;
+        let mut order = Vec::new();
+        {
+            let mut fold = sum_fold(&mut acc, &mut order);
+            let mut g = RankGather::new(3);
+            g.put(0, Ok(Reply::Scalar(0.0)));
+            g.put(1, Ok(Reply::Scalar(1.0)));
+            g.put(2, Ok(Reply::Scalar(2.0)));
+            let e = g.finish_fold(&dead, &mut fold).unwrap_err().to_string();
+            assert!(e.contains("quarantined worker 1"), "{e}");
+        }
+    }
+
+    #[test]
+    fn reset_rearms_a_pooled_gather_without_reallocating() {
+        let dead = [false; 2];
+        let mut g = RankGather::new(2);
+        let mut acc = 0.0;
+        let mut order = Vec::new();
+        {
+            let mut fold = sum_fold(&mut acc, &mut order);
+            g.put(1, Err(Error::Runtime("boom".into())));
+            g.put(0, Ok(Reply::Scalar(0.5)));
+            assert!(g.finish_fold(&dead, &mut fold).is_err());
+        }
+        // after an error the pooled gather re-arms clean
+        g.reset(2);
+        let mut acc = 0.0;
+        let mut order = Vec::new();
+        {
+            let mut fold = sum_fold(&mut acc, &mut order);
+            g.put(0, Ok(Reply::Scalar(1.0)));
+            g.put(1, Ok(Reply::Scalar(2.0)));
+            g.finish_fold(&dead, &mut fold).unwrap();
+        }
+        assert_eq!(acc, 1.0 + 2.0 * 2.0);
+        assert_eq!(order, vec![0, 1]);
     }
 
     #[test]

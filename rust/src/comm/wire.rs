@@ -33,8 +33,11 @@
 //! bytes, unknown tags, counts that exceed the received bytes, trailing
 //! garbage) returns `Err` — never a panic, never an attacker-sized
 //! allocation. [`read_frame`] rejects length prefixes above
-//! [`MAX_FRAME_LEN`] before allocating and grows its buffer in bounded
-//! chunks, so a hostile prefix costs at most the bytes actually sent.
+//! [`MAX_FRAME_LEN`] before allocating and grows its buffer
+//! geometrically as bytes actually arrive, so a hostile prefix costs at
+//! most ~2x the bytes actually sent — while a reused buffer retains its
+//! capacity across frames, making the steady state (same-size frames
+//! round over round) allocation- and zeroing-free.
 //!
 //! The `out` fields on [`Command::GradLoss`] / [`Command::DaneSolve`] are
 //! a transport detail of the threaded engine (the leader loans each
@@ -56,9 +59,11 @@ pub const WIRE_VERSION: u8 = 1;
 /// [`Command::Init`] carrying a shard) stay far below it.
 pub const MAX_FRAME_LEN: usize = 1 << 30;
 
-/// Body bytes are pulled from the socket in chunks of at most this, so
-/// a hostile length prefix cannot force a large up-front allocation.
-const READ_CHUNK: usize = 1 << 20;
+/// First growth step of [`read_frame`]'s body buffer (bytes). The
+/// buffer doubles from here toward the decoded length prefix, resizing
+/// only when the bytes already received fill it, so a hostile prefix
+/// cannot force a large up-front allocation.
+const READ_SEED: usize = 1 << 12;
 
 // ---- tags -----------------------------------------------------------
 const CMD_INIT: u8 = 0x01;
@@ -295,6 +300,48 @@ pub enum Reply {
 pub fn encode_command(cmd: &Command, buf: &mut Vec<u8>) -> Result<()> {
     begin_frame(buf);
     put_command_body(cmd, buf, true)?;
+    end_frame(buf)
+}
+
+// ---- raw slice encoders ---------------------------------------------
+//
+// The TCP leader's allocation-free round path encodes its broadcast
+// frames straight from the slices it already holds (`w`, `g`), without
+// first constructing an `Arc`-carrying [`Command`] value. Each helper
+// below is byte-identical to [`encode_command`] on the equivalent
+// command — a test pins the equality, and
+// `compress::raw_cmd_frame_len` stays honest against both.
+
+/// [`Command::GradLoss`] frame straight from the weight slice.
+pub fn encode_grad_loss_cmd(w: &[f64], buf: &mut Vec<u8>) -> Result<()> {
+    begin_frame(buf);
+    buf.push(CMD_GRAD_LOSS);
+    put_vec(buf, w);
+    end_frame(buf)
+}
+
+/// [`Command::Loss`] frame straight from the weight slice.
+pub fn encode_loss_cmd(w: &[f64], buf: &mut Vec<u8>) -> Result<()> {
+    begin_frame(buf);
+    buf.push(CMD_LOSS);
+    put_vec(buf, w);
+    end_frame(buf)
+}
+
+/// [`Command::DaneSolve`] frame straight from the payload slices.
+pub fn encode_dane_solve_cmd(
+    w_prev: &[f64],
+    g: &[f64],
+    eta: f64,
+    mu: f64,
+    buf: &mut Vec<u8>,
+) -> Result<()> {
+    begin_frame(buf);
+    buf.push(CMD_DANE_SOLVE);
+    put_vec(buf, w_prev);
+    put_vec(buf, g);
+    put_f64(buf, eta);
+    put_f64(buf, mu);
     end_frame(buf)
 }
 
@@ -680,11 +727,20 @@ impl<'a> Cur<'a> {
 
     /// Append `n` f64 values onto `out` — the one read loop shared by
     /// every vector-bearing frame. Callers validate `n` via [`Cur::count`]
-    /// first, so the reserve is bounded by received bytes.
+    /// first, so the reserve is bounded by received bytes. Takes the
+    /// whole `8n`-byte region in one bounds check, then converts through
+    /// `chunks_exact(8)` — the per-element cursor arithmetic of a naive
+    /// `f64()` loop is what made decode ~3x slower than encode
+    /// (BENCH_wire.json); `wire_micro`'s decode entry pins the fix.
     fn take_f64s(&mut self, n: usize, out: &mut Vec<f64>) -> Result<()> {
+        let bytes = self.take(n.checked_mul(8).ok_or_else(|| {
+            Error::Config(format!("wire: vector count {n} overflows byte size"))
+        })?)?;
         out.reserve(n);
-        for _ in 0..n {
-            out.push(self.f64()?);
+        for c in bytes.chunks_exact(8) {
+            out.push(f64::from_le_bytes([
+                c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+            ]));
         }
         Ok(())
     }
@@ -1163,11 +1219,20 @@ fn take_shard(cur: &mut Cur) -> Result<Shard> {
 // framed I/O
 // ---------------------------------------------------------------------
 
-/// Read one frame body into `body` (cleared and reused). Returns
-/// `Ok(None)` on a clean disconnect *at a frame boundary* (the peer hung
-/// up between rounds), `Ok(Some(total_bytes))` — length prefix included
-/// — on success, and `Err` on mid-frame EOF, an oversize length prefix,
-/// or any transport error.
+/// Read one frame body into `body` (resized in place and reused).
+/// Returns `Ok(None)` on a clean disconnect *at a frame boundary* (the
+/// peer hung up between rounds), `Ok(Some(total_bytes))` — length prefix
+/// included — on success, and `Err` on mid-frame EOF, an oversize length
+/// prefix, or any transport error.
+///
+/// The body buffer retains its capacity across frames: a frame no larger
+/// than the previous one is read with zero allocation and zero
+/// re-zeroing (the steady state of a round loop, where every frame of a
+/// collective has the same size). A larger frame grows the buffer
+/// geometrically from [`READ_SEED`], resizing only once the bytes
+/// already received fill it — so a hostile length prefix costs at most
+/// ~2x the bytes the peer actually sent, never an attacker-sized
+/// up-front allocation.
 pub fn read_frame<R: Read>(r: &mut R, body: &mut Vec<u8>) -> Result<Option<usize>> {
     let mut prefix = [0u8; 4];
     let mut got = 0;
@@ -1194,24 +1259,26 @@ pub fn read_frame<R: Read>(r: &mut R, body: &mut Vec<u8>) -> Result<Option<usize
             "wire: frame length {len} below header size"
         )));
     }
-    body.clear();
-    // Grow in bounded chunks: the buffer only ever holds bytes that
-    // actually arrived, so a hostile prefix cannot force a large
-    // allocation.
-    while body.len() < len {
-        let chunk = (len - body.len()).min(READ_CHUNK);
-        let start = body.len();
-        body.resize(start + chunk, 0);
-        let mut filled = start;
-        while filled < start + chunk {
-            let n = r.read(&mut body[filled..start + chunk])?;
-            if n == 0 {
-                return Err(Error::Runtime(
-                    "wire: connection closed mid-frame".into(),
-                ));
-            }
-            filled += n;
+    // `body.len() <= len` from here on, so a read can never swallow
+    // bytes of the next frame on the stream.
+    if body.len() > len {
+        body.truncate(len);
+    }
+    let mut filled = 0;
+    while filled < len {
+        if filled == body.len() {
+            // Grow toward `len` only as received bytes fill the buffer;
+            // `resize` zeroes just the newly exposed region.
+            let next = body.len().saturating_mul(2).clamp(READ_SEED.min(len), len);
+            body.resize(next, 0);
         }
+        let n = r.read(&mut body[filled..])?;
+        if n == 0 {
+            return Err(Error::Runtime(
+                "wire: connection closed mid-frame".into(),
+            ));
+        }
+        filled += n;
     }
     Ok(Some(4 + len))
 }
@@ -1553,5 +1620,73 @@ mod tests {
         // mid-prefix EOF is an error, not a clean disconnect
         let mut partial: &[u8] = &[1u8, 0];
         assert!(read_frame(&mut partial, &mut body).is_err());
+    }
+
+    #[test]
+    fn raw_slice_encoders_match_encode_command_bytes() {
+        // the allocation-free TCP leader path must put byte-identical
+        // frames on the wire — including NaN/-0.0 bit patterns
+        let w = vec![1.5, f64::NAN, -0.0, 3.25, -2.0];
+        let g = vec![0.5, f64::NEG_INFINITY, 7.0];
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+
+        let cmd = Command::GradLoss { w: Arc::new(w.clone()), out: Vec::new() };
+        encode_command(&cmd, &mut a).unwrap();
+        encode_grad_loss_cmd(&w, &mut b).unwrap();
+        assert_eq!(a, b, "GradLoss raw encoder diverged");
+
+        encode_command(&Command::Loss { w: Arc::new(w.clone()) }, &mut a).unwrap();
+        encode_loss_cmd(&w, &mut b).unwrap();
+        assert_eq!(a, b, "Loss raw encoder diverged");
+
+        let cmd = Command::DaneSolve {
+            w_prev: Arc::new(w.clone()),
+            g: Arc::new(g.clone()),
+            eta: 0.75,
+            mu: 1e-9,
+            out: Vec::new(),
+        };
+        encode_command(&cmd, &mut a).unwrap();
+        encode_dane_solve_cmd(&w, &g, 0.75, 1e-9, &mut b).unwrap();
+        assert_eq!(a, b, "DaneSolve raw encoder diverged");
+    }
+
+    #[test]
+    fn read_frame_retains_capacity_across_frames() {
+        // big frame then small frame on one stream: the second read
+        // must reuse the first frame's buffer (no shrink below the
+        // retained capacity) and still hand back exactly its body
+        let (mut f1, mut f2) = (Vec::new(), Vec::new());
+        encode_reply(&Reply::Vec(vec![0.25; 100]), &mut f1).unwrap();
+        encode_reply(&Reply::Scalar(7.0), &mut f2).unwrap();
+        let mut stream = f1.clone();
+        stream.extend_from_slice(&f2);
+        let mut r = stream.as_slice();
+        let mut body = Vec::new();
+        assert_eq!(read_frame(&mut r, &mut body).unwrap(), Some(f1.len()));
+        assert_eq!(body, f1[4..], "first body");
+        let cap = body.capacity();
+        assert!(cap >= f1.len() - 4);
+        assert_eq!(read_frame(&mut r, &mut body).unwrap(), Some(f2.len()));
+        assert_eq!(body, f2[4..], "second body");
+        assert_eq!(body.capacity(), cap, "capacity must be retained");
+        assert!(matches!(decode_reply(&body).unwrap(), Reply::Scalar(x) if x == 7.0));
+        assert_eq!(read_frame(&mut r, &mut body).unwrap(), None);
+    }
+
+    #[test]
+    fn hostile_length_prefix_costs_bounded_buffer() {
+        // prefix claims the full 1 GiB cap but only 5 body bytes ever
+        // arrive: mid-frame EOF error, with a buffer no larger than the
+        // seed growth step — not an attacker-sized allocation
+        let mut frame = (MAX_FRAME_LEN as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&[1, 2, 3, 4, 5]);
+        let mut body = Vec::new();
+        assert!(read_frame(&mut frame.as_slice(), &mut body).is_err());
+        assert!(
+            body.capacity() <= 2 * READ_SEED,
+            "buffer grew to {} bytes for 5 hostile bytes",
+            body.capacity()
+        );
     }
 }

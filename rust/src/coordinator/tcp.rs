@@ -43,6 +43,23 @@
 //! (`tests/topology_parity.rs` pins the whole matrix through
 //! `run_experiment`).
 //!
+//! ## Allocation-free round path
+//!
+//! The fold-type collectives (gradient+loss, DANE solve, loss, row-norm
+//! and their compressed variants) run through
+//! [`TcpCluster::fold_round`]: the command is encoded by raw-slice
+//! encoders into a pooled `Arc` broadcast slot (a refcount bump per
+//! link, no frame vector), replies land in a pooled [`RankGather`]
+//! whose rank prefix is folded incrementally as links deliver, and the
+//! per-rank fold weights are value-swapped into the fold closure. Under
+//! the parallel star and the tree, reply decode happens on the link I/O
+//! threads — so the leader thread performs **zero heap allocations per
+//! steady-state round**, pinned by `tests/alloc_steady_state.rs`.
+//! `star-seq` decodes replies inline on the leader thread and is exempt
+//! by design (it exists as the measurable baseline). Per-worker-output
+//! collectives (prox, local ERMs) keep the buffered `dispatch` path:
+//! they materialize m vectors by contract, so pooling buys nothing.
+//!
 //! Accounting: the modeled figures (`rounds`, `bytes`,
 //! `modeled_seconds`) are counted exactly like the other engines;
 //! `CommStats::wire_bytes` additionally reports the bytes *measured on
@@ -211,8 +228,19 @@ pub struct TcpCluster {
     /// ships one small frame per worker, O(m). Reported separately
     /// from `wire_bytes` and *not* cleared by `reset_comm`.
     startup_bytes: u64,
-    /// Reusable encode buffer — one frame encoded per broadcast.
+    /// Reusable encode buffer — one frame encoded per broadcast
+    /// (buffered collectives and the point-to-point path).
     enc: Vec<u8>,
+    /// Pooled broadcast frame for the fold-type collectives
+    /// ([`TcpCluster::fold_round`]): re-encoded in place each round
+    /// ([`bcast_slot`]) and shipped to every link as an `Arc` refcount
+    /// bump. Link I/O threads drop their clones once the round's write
+    /// completes, so by the next encode the slot is unique again and
+    /// the buffer is reused — no per-round frame allocation.
+    bcast: Arc<Vec<u8>>,
+    /// Pooled rank gather for the fold-type collectives; re-armed
+    /// (capacity retained) at the top of every `fold_round`.
+    gather: RankGather,
     /// Reusable receive buffer (inline reads + setup acks).
     frame: Vec<u8>,
     io_timeout: Duration,
@@ -619,6 +647,8 @@ impl TcpCluster {
             wire_bytes: 0,
             startup_bytes,
             enc,
+            bcast: Arc::new(Vec::new()),
+            gather: RankGather::new(n_alive),
             frame,
             io_timeout,
             compressor: None,
@@ -975,6 +1005,182 @@ impl TcpCluster {
         gather.into_result_masked(dead)
     }
 
+    /// Broadcast the frame sitting in the pooled [`bcast_slot`] and fold
+    /// the replies **incrementally in rank order**: each link's batch is
+    /// slotted as it arrives and [`RankGather::drain_fold`] consumes the
+    /// ready rank prefix immediately, so the leader's fold work overlaps
+    /// the remaining links' network waits. The fold consumes the slots
+    /// in exactly the buffered path's rank order, so every bit of the
+    /// result is identical (`tests/topology_parity.rs` pins incremental
+    /// against buffered across the matrix).
+    ///
+    /// Steady state allocates nothing on the leader thread: the
+    /// broadcast is an `Arc` refcount bump per link, the gather's slots
+    /// are pooled, and link I/O threads decode replies on their own
+    /// threads (`tests/alloc_steady_state.rs` pins this under the
+    /// parallel star; `star-seq` decodes inline on the leader and is
+    /// exempt by design).
+    ///
+    /// Send/receive discipline matches `dispatch`: all writes go out
+    /// before any read, every link drains completely, transport
+    /// failures latch the link dead, and the lowest-rank error wins. A
+    /// link that is not `Dead` when the receive phase starts accepted
+    /// its job — the same property `dispatch` tracks with its `pending`
+    /// mask, minus the per-round allocation.
+    fn fold_round(
+        &mut self,
+        fold: &mut dyn FnMut(usize, Reply) -> Result<()>,
+    ) -> Result<()> {
+        let m = self.weights.len();
+        let io_timeout = self.io_timeout;
+        let budget = |expect: usize| {
+            io_timeout.checked_mul(expect as u32 + 2).unwrap_or(io_timeout)
+        };
+        let TcpCluster { links, frame: buf, wire_bytes, dead, gather, bcast, .. } =
+            self;
+        gather.reset(m);
+        let mut bytes = 0u64;
+        for link in links.iter_mut() {
+            let expect = link.ranks.len();
+            let mut latch: Option<String> = None;
+            match &mut link.io {
+                LinkIo::Thread { tx, .. } => {
+                    if tx.send(LinkJob { frame: bcast.clone(), expect }).is_err() {
+                        let msg = "link I/O thread died".to_string();
+                        fail_ranks(gather, &link.ranks, &msg);
+                        latch = Some(msg);
+                    }
+                }
+                LinkIo::Inline(stream) => match stream.write_all(bcast.as_slice()) {
+                    Ok(()) => bytes += bcast.len() as u64,
+                    Err(e) => {
+                        let msg = describe_io("send", &e);
+                        fail_ranks(gather, &link.ranks, &msg);
+                        latch = Some(msg);
+                    }
+                },
+                LinkIo::Dead(msg) => {
+                    let msg = msg.clone();
+                    fail_ranks(gather, &link.ranks, &msg);
+                }
+            }
+            if let Some(msg) = latch {
+                link.io = LinkIo::Dead(msg);
+            }
+        }
+        for link in links.iter_mut() {
+            let mut latch: Option<String> = None;
+            match &mut link.io {
+                LinkIo::Thread { rx, .. } => {
+                    match rx.recv_timeout(budget(link.ranks.len())) {
+                        Ok(batch) => {
+                            bytes += batch.bytes;
+                            for (rank, r) in link.ranks.iter().zip(batch.replies) {
+                                // keep the transport/compute split the
+                                // I/O thread already made
+                                gather.put(
+                                    *rank,
+                                    r.map_err(|e| match e {
+                                        Error::WorkerLost(msg) => {
+                                            Error::WorkerLost(format!(
+                                                "tcp: worker {rank}: {msg}"
+                                            ))
+                                        }
+                                        e => Error::Runtime(format!(
+                                            "tcp: worker {rank}: {e}"
+                                        )),
+                                    }),
+                                );
+                            }
+                        }
+                        Err(RecvTimeoutError::Timeout) => {
+                            // Same latch rationale as `dispatch`: a late
+                            // batch from this thread must never be
+                            // attributed to a future round.
+                            let msg =
+                                "wedged: no reply within the link budget".to_string();
+                            fail_ranks(gather, &link.ranks, &msg);
+                            latch = Some(msg);
+                        }
+                        Err(RecvTimeoutError::Disconnected) => {
+                            let msg = "link I/O thread died".to_string();
+                            fail_ranks(gather, &link.ranks, &msg);
+                            latch = Some(msg);
+                        }
+                    }
+                }
+                LinkIo::Inline(stream) => {
+                    let mut failed: Option<String> = None;
+                    for k in 0..link.ranks.len() {
+                        let rank = link.ranks[k];
+                        if let Some(msg) = &failed {
+                            gather.put(
+                                rank,
+                                Err(Error::WorkerLost(format!(
+                                    "tcp: worker {rank}: {msg}"
+                                ))),
+                            );
+                            continue;
+                        }
+                        match wire::read_frame(stream, buf) {
+                            Ok(Some(n)) => {
+                                bytes += n as u64;
+                                gather.put(
+                                    rank,
+                                    wire::decode_reply(buf).map_err(|e| {
+                                        Error::Runtime(format!(
+                                            "tcp: worker {rank} sent a malformed reply: {e}"
+                                        ))
+                                    }),
+                                );
+                            }
+                            Ok(None) => {
+                                let msg = "connection closed mid-round".to_string();
+                                gather.put(
+                                    rank,
+                                    Err(Error::WorkerLost(format!(
+                                        "tcp: worker {rank}: {msg}"
+                                    ))),
+                                );
+                                failed = Some(msg);
+                            }
+                            Err(Error::Io(e)) => {
+                                let msg = describe_io("reply read", &e);
+                                gather.put(
+                                    rank,
+                                    Err(Error::WorkerLost(format!(
+                                        "tcp: worker {rank}: {msg}"
+                                    ))),
+                                );
+                                failed = Some(msg);
+                            }
+                            Err(e) => {
+                                let msg = e.to_string();
+                                gather.put(
+                                    rank,
+                                    Err(Error::Runtime(format!(
+                                        "tcp: worker {rank}: {msg}"
+                                    ))),
+                                );
+                                failed = Some(msg);
+                            }
+                        }
+                    }
+                    latch = failed;
+                }
+                LinkIo::Dead(_) => {}
+            }
+            if let Some(msg) = latch {
+                link.io = LinkIo::Dead(msg);
+            }
+            // Fold whatever rank prefix this batch completed while the
+            // remaining links are still in flight.
+            gather.drain_fold(dead, fold);
+        }
+        *wire_bytes += bytes;
+        gather.finish_fold(dead, fold)
+    }
+
     /// Broadcast the frame sitting in `self.enc` to every link and
     /// gather the full cluster's replies; recovers the encode buffer
     /// when every link has released its share.
@@ -1107,23 +1313,26 @@ impl TcpCluster {
         if use_codec && self.compressor.is_some() {
             return self.gather_grad_loss_compressed(w, g);
         }
-        wire::encode_command(
-            &Cmd::GradLoss { w: Arc::new(w.to_vec()), out: Vec::new() },
-            &mut self.enc,
-        )?;
-        let replies = self.broadcast_round()?;
+        // Raw-slice encode into the pooled broadcast slot: byte-for-byte
+        // the frame `Cmd::GradLoss` encodes, without materializing the
+        // command value (`wire` pins the equivalence).
+        wire::encode_grad_loss_cmd(w, bcast_slot(&mut self.bcast))?;
         g.fill(0.0);
         let mut loss = 0.0;
-        for (i, r) in replies.into_iter().enumerate() {
-            match r {
-                None => {}
-                Some(Reply::VecScalar(gi, li)) if gi.len() == g.len() => {
-                    ops::axpy(self.eff_weights[i], &gi, g);
-                    loss += self.eff_weights[i] * li;
-                }
-                _ => return Err(self.unexpected(i)),
+        // The fold borrows the weights by value-swap so it can run
+        // inside `fold_round`'s `&mut self`; both takes are moves of
+        // the Vec header, not allocations.
+        let eff = std::mem::take(&mut self.eff_weights);
+        let res = self.fold_round(&mut |i, r| match r {
+            Reply::VecScalar(gi, li) if gi.len() == g.len() => {
+                ops::axpy(eff[i], &gi, g);
+                loss += eff[i] * li;
+                Ok(())
             }
-        }
+            _ => Err(Error::Runtime(format!("worker {i}: unexpected reply type"))),
+        });
+        self.eff_weights = eff;
+        res?;
         Ok(loss)
     }
 
@@ -1141,35 +1350,31 @@ impl TcpCluster {
             ));
         };
         let cmd = Cmd::CompressedVec(Arc::new(comp.grad_cmd(w)));
-        wire::encode_command(&cmd, &mut self.enc)?;
+        let buf = bcast_slot(&mut self.bcast);
+        wire::encode_command(&cmd, buf)?;
         let raw_cmd = compress::raw_cmd_frame_len(CompressedOp::GradLoss, self.d) as i64;
         self.payload_raw_extra +=
-            (raw_cmd - self.enc.len() as i64) * self.links.len() as i64;
+            (raw_cmd - self.bcast.len() as i64) * self.links.len() as i64;
         let raw_rep =
             compress::raw_reply_frame_len(CompressedOp::GradLoss, self.d) as i64;
-        let replies = self.broadcast_round()?;
         g.fill(0.0);
         let mut loss = 0.0;
+        let mut extra = 0i64;
         let mut dec = std::mem::take(&mut self.dec);
-        let mut res = Ok(());
-        for (i, r) in replies.into_iter().enumerate() {
-            match r {
-                None => {}
-                Some(Reply::CompressedVec(cr))
-                    if cr.vec.dim() == g.len() && cr.loss.is_some() =>
-                {
-                    self.payload_raw_extra += raw_rep - cr.frame_len() as i64;
-                    cr.vec.decode_into(&mut dec);
-                    ops::axpy(self.eff_weights[i], &dec, g);
-                    loss += self.eff_weights[i] * cr.loss.unwrap_or(0.0);
-                }
-                _ => {
-                    res = Err(self.unexpected(i));
-                    break;
-                }
+        let eff = std::mem::take(&mut self.eff_weights);
+        let res = self.fold_round(&mut |i, r| match r {
+            Reply::CompressedVec(cr) if cr.vec.dim() == g.len() && cr.loss.is_some() => {
+                extra += raw_rep - cr.frame_len() as i64;
+                cr.vec.decode_into(&mut dec);
+                ops::axpy(eff[i], &dec, g);
+                loss += eff[i] * cr.loss.unwrap_or(0.0);
+                Ok(())
             }
-        }
+            _ => Err(Error::Runtime(format!("worker {i}: unexpected reply type"))),
+        });
         self.dec = dec;
+        self.eff_weights = eff;
+        self.payload_raw_extra += extra;
         res.map(|_| loss)
     }
 
@@ -1189,51 +1394,62 @@ impl TcpCluster {
             ));
         };
         let cmd = Cmd::CompressedVec(Arc::new(comp.solve_cmd(w_prev, g, eta, mu)));
-        wire::encode_command(&cmd, &mut self.enc)?;
+        let buf = bcast_slot(&mut self.bcast);
+        wire::encode_command(&cmd, buf)?;
         let raw_cmd =
             compress::raw_cmd_frame_len(CompressedOp::DaneSolve, self.d) as i64;
         self.payload_raw_extra +=
-            (raw_cmd - self.enc.len() as i64) * self.links.len() as i64;
+            (raw_cmd - self.bcast.len() as i64) * self.links.len() as i64;
         let raw_rep =
             compress::raw_reply_frame_len(CompressedOp::DaneSolve, self.d) as i64;
-        let replies = self.broadcast_round()?;
         out.fill(0.0);
         let inv = 1.0 / self.n_alive as f64;
+        let mut extra = 0i64;
         let mut dec = std::mem::take(&mut self.dec);
-        let mut res = Ok(());
-        for (i, r) in replies.into_iter().enumerate() {
-            match r {
-                None => {}
-                Some(Reply::CompressedVec(cr))
-                    if cr.vec.dim() == out.len() && cr.loss.is_none() =>
-                {
-                    self.payload_raw_extra += raw_rep - cr.frame_len() as i64;
-                    cr.vec.decode_into(&mut dec);
-                    ops::axpy(inv, &dec, out);
-                }
-                _ => {
-                    res = Err(self.unexpected(i));
-                    break;
-                }
+        let res = self.fold_round(&mut |i, r| match r {
+            Reply::CompressedVec(cr) if cr.vec.dim() == out.len() && cr.loss.is_none() => {
+                extra += raw_rep - cr.frame_len() as i64;
+                cr.vec.decode_into(&mut dec);
+                ops::axpy(inv, &dec, out);
+                Ok(())
             }
-        }
+            _ => Err(Error::Runtime(format!("worker {i}: unexpected reply type"))),
+        });
         self.dec = dec;
+        self.payload_raw_extra += extra;
         res
     }
 
     fn gather_loss(&mut self, w: &[f64]) -> Result<f64> {
-        wire::encode_command(&Cmd::Loss { w: Arc::new(w.to_vec()) }, &mut self.enc)?;
-        let replies = self.broadcast_round()?;
+        wire::encode_loss_cmd(w, bcast_slot(&mut self.bcast))?;
         let mut loss = 0.0;
-        for (i, r) in replies.into_iter().enumerate() {
-            match r {
-                None => {}
-                Some(Reply::Scalar(l)) => loss += self.eff_weights[i] * l,
-                _ => return Err(self.unexpected(i)),
+        let eff = std::mem::take(&mut self.eff_weights);
+        let res = self.fold_round(&mut |i, r| match r {
+            Reply::Scalar(l) => {
+                loss += eff[i] * l;
+                Ok(())
             }
-        }
+            _ => Err(Error::Runtime(format!("worker {i}: unexpected reply type"))),
+        });
+        self.eff_weights = eff;
+        res?;
         Ok(loss)
     }
+}
+
+/// Mutable access to the pooled broadcast-frame slot. In steady state
+/// every link released its clone when its round write completed, the
+/// `Arc` is unique again, and the existing buffer is reused in place; a
+/// still-shared slot (a latched-dead link's orphaned I/O thread can
+/// hold its clone indefinitely) is replaced with a fresh buffer rather
+/// than blocked on — never a panic, never a copy of the stale frame
+/// (the encoder clears the buffer before writing anyway).
+fn bcast_slot(slot: &mut Arc<Vec<u8>>) -> &mut Vec<u8> {
+    if Arc::get_mut(slot).is_none() {
+        *slot = Arc::new(Vec::new());
+    }
+    // unique by construction here, so make_mut never clones
+    Arc::make_mut(slot)
 }
 
 fn fail_ranks(gather: &mut RankGather, ranks: &[usize], msg: &str) {
@@ -1505,30 +1721,18 @@ impl Cluster for TcpCluster {
             self.comm.count_round(m, self.d);
             return Ok(());
         }
-        wire::encode_command(
-            &Cmd::DaneSolve {
-                w_prev: Arc::new(w_prev.to_vec()),
-                g: Arc::new(g.to_vec()),
-                eta,
-                mu,
-                out: Vec::new(),
-            },
-            &mut self.enc,
-        )?;
-        let replies = self.broadcast_round()?;
+        wire::encode_dane_solve_cmd(w_prev, g, eta, mu, bcast_slot(&mut self.bcast))?;
         out.fill(0.0);
         // paper step (*): unweighted average in rank order; under a
         // degraded quorum it's the average over the surviving solvers
         let inv = 1.0 / self.n_alive as f64;
-        for (i, r) in replies.into_iter().enumerate() {
-            match r {
-                None => {}
-                Some(Reply::Vec(wi)) if wi.len() == out.len() => {
-                    ops::axpy(inv, &wi, out);
-                }
-                _ => return Err(self.unexpected(i)),
+        self.fold_round(&mut |i, r| match r {
+            Reply::Vec(wi) if wi.len() == out.len() => {
+                ops::axpy(inv, &wi, out);
+                Ok(())
             }
-        }
+            _ => Err(Error::Runtime(format!("worker {i}: unexpected reply type"))),
+        })?;
         let m = self.m();
         self.comm.count_round(m, self.d);
         Ok(())
@@ -1645,16 +1849,18 @@ impl Cluster for TcpCluster {
         if let Some(v) = self.row_sq {
             return Ok(v);
         }
-        wire::encode_command(&Cmd::RowSq, &mut self.enc)?;
-        let replies = self.broadcast_round()?;
+        wire::encode_command(&Cmd::RowSq, bcast_slot(&mut self.bcast))?;
         let mut total = 0.0;
-        for (i, r) in replies.into_iter().enumerate() {
-            match r {
-                None => {}
-                Some(Reply::Scalar(v)) => total += self.eff_weights[i] * v,
-                _ => return Err(self.unexpected(i)),
+        let eff = std::mem::take(&mut self.eff_weights);
+        let res = self.fold_round(&mut |i, r| match r {
+            Reply::Scalar(v) => {
+                total += eff[i] * v;
+                Ok(())
             }
-        }
+            _ => Err(Error::Runtime(format!("worker {i}: unexpected reply type"))),
+        });
+        self.eff_weights = eff;
+        res?;
         let m = self.m();
         self.comm.count_round(m, 1);
         self.row_sq = Some(total);

@@ -25,7 +25,14 @@
 //!   command, come back filled inside the reply, and return to the
 //!   leader's pool — the same m buffers circulate forever;
 //! * gradient / iterate averages accumulate in place into caller-owned
-//!   buffers via the `*_into` trait methods.
+//!   buffers via the `*_into` trait methods;
+//! * fold-type collectives reduce **incrementally in rank order**: the
+//!   star gather's blocking per-rank receive loop folds each reply the
+//!   moment it lands, and the tree wiring routes through
+//!   [`RankGather::drain_fold`] (`tree_round_fold`), which consumes the
+//!   ready rank prefix while later links are still draining. Both orders
+//!   are the exact rank-0..m-1 fold, so the bits match the buffered
+//!   reduction and every other engine.
 //!
 //! Failures are recoverable: when a worker reports an error (or dies),
 //! the gather still drains every outstanding reply before surfacing the
@@ -164,6 +171,11 @@ pub struct ThreadedCluster {
     compressor: Option<LeaderCompressor>,
     /// Decode scratch for compressed replies.
     dec: Vec<f64>,
+    /// Pooled rank gather for the tree wiring's fold-type collectives;
+    /// re-armed (capacity retained) by every `tree_round_fold`. The star
+    /// wiring needs none: its blocking per-rank receive loop *is* an
+    /// incremental rank-order fold already.
+    gather: RankGather,
 }
 
 impl ThreadedCluster {
@@ -225,13 +237,13 @@ impl ThreadedCluster {
             .collect();
         let kills: Vec<Arc<AtomicBool>> =
             (0..shards.len()).map(|_| Arc::new(AtomicBool::new(false))).collect();
-        // The zero-allocation scratch (reply pool, broadcast slots) only
-        // serves the star wiring; tree rounds allocate their replies, so
-        // tree mode carries no dead buffers.
+        // The reply pool only serves the star wiring (tree replies
+        // bundle up through the relays); the broadcast slots serve both
+        // wirings — tree rounds relay `Arc` clones of the same slots.
         let star = !topology.is_tree();
         let reply_pool =
             if star { vec![vec![0.0; d]; shards.len()] } else { Vec::new() };
-        let slot = || Arc::new(if star { vec![0.0; d] } else { Vec::new() });
+        let slot = || Arc::new(vec![0.0; d]);
         let (bcast_w, bcast_g) = (slot(), slot());
         let (handles, tree) = if topology.is_tree() {
             (Vec::new(), Some(build_tree_wiring(shards, &obj, gram_threads, &kills)))
@@ -265,6 +277,7 @@ impl ThreadedCluster {
             reply_timeout: DEFAULT_REPLY_TIMEOUT,
             compressor: None,
             dec: Vec::new(),
+            gather: RankGather::new(n_alive),
         }
     }
 
@@ -402,6 +415,77 @@ impl ThreadedCluster {
         gather.into_result()
     }
 
+    /// [`tree_round`] with **incremental rank-prefix folding**: replies
+    /// slot into the pooled gather as each link delivers its preorder
+    /// bundle, and [`RankGather::drain_fold`] consumes the ready rank
+    /// prefix after every link — the fold runs in exact rank order while
+    /// later links are still draining, without ever buffering the full
+    /// reply set. Send/latch/error discipline is identical to
+    /// [`tree_round`] (tree mode never carries quarantined ranks — the
+    /// recovery path rebuilds as a star — so the dead mask is all-live
+    /// and `finish_fold` degenerates to the unmasked contract).
+    ///
+    /// [`tree_round`]: Self::tree_round
+    fn tree_round_fold(
+        &mut self,
+        cmd: &Cmd,
+        fold: &mut dyn FnMut(usize, Reply) -> Result<()>,
+    ) -> Result<()> {
+        let m = self.weights.len();
+        let timeout = self.reply_timeout;
+        let ThreadedCluster { tree, gather, dead: dead_ranks, .. } = self;
+        let tree = tree.as_mut().ok_or_else(|| {
+            crate::Error::Runtime("tree round on a cluster without tree wiring".into())
+        })?;
+        gather.reset(m);
+        let mut sent = Vec::with_capacity(tree.links.len());
+        for l in &tree.links {
+            sent.push(l.dead.is_none() && l.tx.send(cmd.relay_copy()).is_ok());
+        }
+        for (li, l) in tree.links.iter_mut().enumerate() {
+            let mut dead: Option<String> = if let Some(msg) = &l.dead {
+                Some(msg.clone())
+            } else if sent[li] {
+                None
+            } else {
+                Some(format!("worker {} died before the round", l.ranks[0]))
+            };
+            let mut latch: Option<String> = None;
+            for &rank in &l.ranks {
+                let res = match &dead {
+                    Some(msg) => Err(crate::Error::WorkerLost(msg.clone())),
+                    None => match l.rx.recv_timeout(timeout) {
+                        Ok(rep) => Ok(rep),
+                        Err(RecvTimeoutError::Disconnected) => {
+                            let msg =
+                                format!("worker {} died mid-round", l.ranks[0]);
+                            dead = Some(msg.clone());
+                            Err(crate::Error::WorkerLost(msg))
+                        }
+                        Err(RecvTimeoutError::Timeout) => {
+                            // same latch as tree_round: a wedged subtree's
+                            // late replies must never be read as a future
+                            // round's values.
+                            let msg = format!(
+                                "worker {} wedged: no reply within {timeout:?}",
+                                l.ranks[0]
+                            );
+                            dead = Some(msg.clone());
+                            latch = Some(msg.clone());
+                            Err(crate::Error::WorkerLost(msg))
+                        }
+                    },
+                };
+                gather.put(rank, res);
+            }
+            if latch.is_some() {
+                l.dead = latch;
+            }
+            gather.drain_fold(dead_ranks, fold);
+        }
+        gather.finish_fold(dead_ranks, fold)
+    }
+
     /// Point-to-point round over the tree wiring: a `For` envelope down
     /// the link holding `rank`, one reply back. Only the path nodes are
     /// touched — the rest of the cluster idles, like the star engines'
@@ -453,35 +537,48 @@ impl ThreadedCluster {
         }
     }
 
-    /// Tree-mode gradient+loss gather: rank-order weighted fold from the
-    /// buffered bundle — bit-identical to the star engines' reduction.
+    /// Tree-mode gradient+loss gather: incremental rank-order weighted
+    /// fold via [`tree_round_fold`] — bit-identical to the star engines'
+    /// reduction (same rank order, same axpy per rank).
+    ///
+    /// [`tree_round_fold`]: Self::tree_round_fold
     fn tree_grad_loss_into(&mut self, w: &[f64], g: &mut [f64]) -> Result<f64> {
-        let cmd = Cmd::GradLoss { w: Arc::new(w.to_vec()), out: Vec::new() };
-        let replies = self.tree_round(&cmd)?;
+        load_bcast(&mut self.bcast_w, w);
+        let cmd = Cmd::GradLoss { w: self.bcast_w.clone(), out: Vec::new() };
         g.fill(0.0);
         let mut loss = 0.0;
-        for (i, r) in replies.into_iter().enumerate() {
-            match r {
-                Reply::VecScalar(gi, li) if gi.len() == g.len() => {
-                    ops::axpy(self.eff_weights[i], &gi, g);
-                    loss += self.eff_weights[i] * li;
-                }
-                _ => return Err(self.unexpected(i)),
+        let eff = std::mem::take(&mut self.eff_weights);
+        let res = self.tree_round_fold(&cmd, &mut |i, r| match r {
+            Reply::VecScalar(gi, li) if gi.len() == g.len() => {
+                ops::axpy(eff[i], &gi, g);
+                loss += eff[i] * li;
+                Ok(())
             }
-        }
+            _ => Err(crate::Error::Runtime(format!(
+                "worker {i}: unexpected reply type"
+            ))),
+        });
+        self.eff_weights = eff;
+        res?;
         Ok(loss)
     }
 
     fn tree_loss(&mut self, w: &[f64]) -> Result<f64> {
-        let cmd = Cmd::Loss { w: Arc::new(w.to_vec()) };
-        let replies = self.tree_round(&cmd)?;
+        load_bcast(&mut self.bcast_w, w);
+        let cmd = Cmd::Loss { w: self.bcast_w.clone() };
         let mut loss = 0.0;
-        for (i, r) in replies.into_iter().enumerate() {
-            match r {
-                Reply::Scalar(l) => loss += self.eff_weights[i] * l,
-                _ => return Err(self.unexpected(i)),
+        let eff = std::mem::take(&mut self.eff_weights);
+        let res = self.tree_round_fold(&cmd, &mut |i, r| match r {
+            Reply::Scalar(l) => {
+                loss += eff[i] * l;
+                Ok(())
             }
-        }
+            _ => Err(crate::Error::Runtime(format!(
+                "worker {i}: unexpected reply type"
+            ))),
+        });
+        self.eff_weights = eff;
+        res?;
         Ok(loss)
     }
 
@@ -636,22 +733,29 @@ impl ThreadedCluster {
         };
         let want_loss = matches!(weights, FoldWeights::Grad);
         if self.tree.is_some() {
-            let replies = self.tree_round(&cmd)?;
             acc.fill(0.0);
             let mut loss = 0.0;
-            for (i, r) in replies.into_iter().enumerate() {
-                match r {
-                    Reply::CompressedVec(cr)
-                        if cr.vec.dim() == acc.len()
-                            && cr.loss.is_some() == want_loss =>
-                    {
-                        cr.vec.decode_into(dec);
-                        ops::axpy(fold_w(self, i), dec, acc);
-                        loss += fold_w(self, i) * cr.loss.unwrap_or(0.0);
-                    }
-                    _ => return Err(self.unexpected(i)),
+            let eff = std::mem::take(&mut self.eff_weights);
+            let res = self.tree_round_fold(&cmd, &mut |i, r| match r {
+                Reply::CompressedVec(cr)
+                    if cr.vec.dim() == acc.len()
+                        && cr.loss.is_some() == want_loss =>
+                {
+                    let wgt = match weights {
+                        FoldWeights::Grad => eff[i],
+                        FoldWeights::Solve => inv_alive,
+                    };
+                    cr.vec.decode_into(dec);
+                    ops::axpy(wgt, dec, acc);
+                    loss += wgt * cr.loss.unwrap_or(0.0);
+                    Ok(())
                 }
-            }
+                _ => Err(crate::Error::Runtime(format!(
+                    "worker {i}: unexpected reply type"
+                ))),
+            });
+            self.eff_weights = eff;
+            res?;
             return Ok(loss);
         }
         let mut sent = 0;
@@ -1069,25 +1173,27 @@ impl Cluster for ThreadedCluster {
             return Ok(());
         }
         if self.tree.is_some() {
+            load_bcast(&mut self.bcast_w, w_prev);
+            load_bcast(&mut self.bcast_g, g);
             let cmd = Cmd::DaneSolve {
-                w_prev: Arc::new(w_prev.to_vec()),
-                g: Arc::new(g.to_vec()),
+                w_prev: self.bcast_w.clone(),
+                g: self.bcast_g.clone(),
                 eta,
                 mu,
                 out: Vec::new(),
             };
-            let replies = self.tree_round(&cmd)?;
             out.fill(0.0);
             let inv_m = 1.0 / self.n_alive as f64;
-            for (i, r) in replies.into_iter().enumerate() {
-                match r {
-                    Reply::Vec(wi) if wi.len() == out.len() => {
-                        // paper step (*): unweighted average in rank order
-                        ops::axpy(inv_m, &wi, out);
-                    }
-                    _ => return Err(self.unexpected(i)),
+            self.tree_round_fold(&cmd, &mut |i, r| match r {
+                Reply::Vec(wi) if wi.len() == out.len() => {
+                    // paper step (*): unweighted average in rank order
+                    ops::axpy(inv_m, &wi, out);
+                    Ok(())
                 }
-            }
+                _ => Err(crate::Error::Runtime(format!(
+                    "worker {i}: unexpected reply type"
+                ))),
+            })?;
             let m = self.m();
             self.comm.count_round(m, self.d);
             return Ok(());
@@ -1381,14 +1487,19 @@ impl Cluster for ThreadedCluster {
             return Ok(v);
         }
         if self.tree.is_some() {
-            let replies = self.tree_round(&Cmd::RowSq)?;
             let mut total = 0.0;
-            for (i, r) in replies.into_iter().enumerate() {
-                match r {
-                    Reply::Scalar(v) => total += self.eff_weights[i] * v,
-                    _ => return Err(self.unexpected(i)),
+            let eff = std::mem::take(&mut self.eff_weights);
+            let res = self.tree_round_fold(&Cmd::RowSq, &mut |i, r| match r {
+                Reply::Scalar(v) => {
+                    total += eff[i] * v;
+                    Ok(())
                 }
-            }
+                _ => Err(crate::Error::Runtime(format!(
+                    "worker {i}: unexpected reply type"
+                ))),
+            });
+            self.eff_weights = eff;
+            res?;
             let m = self.m();
             self.comm.count_round(m, 1);
             self.row_sq = Some(total);

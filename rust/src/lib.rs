@@ -53,9 +53,10 @@
 //! solver is safe Rust, so the "no panic reachable from a worker
 //! failure or a hostile byte stream" invariant can be audited at the
 //! source level (and is — see [`analysis`], the in-tree `dane-lint`
-//! pass that CI runs). The only `unsafe` in the repository is a
-//! counting `GlobalAlloc` inside `tests/alloc_steady_state.rs`, which
-//! is a test binary, not part of this crate.
+//! pass that CI runs). The only `unsafe` in the repository is the
+//! counting `GlobalAlloc` inside `tests/alloc_steady_state.rs` and its
+//! twin in `benches/roundpath_micro.rs` — test/bench binaries that pin
+//! the allocation-free steady-state round path, not part of this crate.
 
 #![forbid(unsafe_code)]
 

@@ -4,6 +4,22 @@
 //! criterion bench `hotpath_micro` pins their throughput. Panics on length
 //! mismatch (debug_assert in release-hot paths) — these are internal
 //! primitives, shape checking happens at the module boundaries.
+//!
+//! ## Canonical lane fold
+//!
+//! Every reduction kernel here and in [`super::sparse`] (`dot`, `dist2`,
+//! `row_dot`, `row_sq_norm`) uses the same fixed 4-lane multi-accumulator
+//! shape: lanes `a0..a3` stride the input by 4, combine as
+//! `(a0 + a2) + (a1 + a3)`, and a strictly sequential remainder loop
+//! finishes the tail. The lane structure is part of the numeric contract,
+//! not just a speed trick — it is identical for every thread count and
+//! engine, so results stay bit-reproducible across the whole
+//! serial ≡ threaded ≡ tcp parity matrix (`tests/kernel_parity.rs` pins
+//! the fold order against naive 4-lane references, and the `dane-lint`
+//! determinism rule flags any kernel on its allowlist that loses the
+//! `a0..a3` lanes). Element-wise kernels (`axpy`, `axpby`, `scale`, ...)
+//! have no reduction and need no lanes; `axpy_panel` stays strictly
+//! sequential by design (the padded-shard bit-exactness invariant).
 
 /// dot(x, y) = sum_i x_i y_i
 ///
@@ -91,11 +107,33 @@ pub fn norm2(x: &[f64]) -> f64 {
 }
 
 /// ||x - y||
+///
+/// Same canonical 4-lane fold as [`dot`] (module docs): four
+/// independent accumulators let LLVM vectorize the squared-difference
+/// reduction, and the fixed `(a0 + a2) + (a1 + a3)` combine keeps the
+/// result bit-reproducible everywhere the convergence loop's
+/// step-distance check runs.
 #[inline]
 pub fn dist2(x: &[f64], y: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
-    let mut acc = 0.0;
-    for i in 0..x.len() {
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for i in 0..chunks {
+        let j = 4 * i;
+        let (d0, d1, d2, d3) = (
+            x[j] - y[j],
+            x[j + 1] - y[j + 1],
+            x[j + 2] - y[j + 2],
+            x[j + 3] - y[j + 3],
+        );
+        a0 += d0 * d0;
+        a1 += d1 * d1;
+        a2 += d2 * d2;
+        a3 += d3 * d3;
+    }
+    let mut acc = (a0 + a2) + (a1 + a3);
+    for i in 4 * chunks..n {
         let d = x[i] - y[i];
         acc += d * d;
     }
@@ -167,6 +205,29 @@ mod tests {
     fn norms() {
         assert_eq!(norm2(&[3.0, 4.0]), 5.0);
         assert_eq!(dist2(&[1.0, 1.0], &[4.0, 5.0]), 5.0);
+    }
+
+    #[test]
+    fn dist2_matches_canonical_lane_fold() {
+        // the canonical fold order is part of the contract (module
+        // docs): lanes stride by 4, combine (a0+a2)+(a1+a3), then a
+        // sequential remainder — pin it bit-for-bit on an odd length
+        let x: Vec<f64> = (0..11).map(|i| 0.1 * i as f64 - 0.3).collect();
+        let y: Vec<f64> = (0..11).map(|i| 0.07 * (i * i) as f64).collect();
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+        for j in (0..8).step_by(4) {
+            let d = |k: usize| x[j + k] - y[j + k];
+            a0 += d(0) * d(0);
+            a1 += d(1) * d(1);
+            a2 += d(2) * d(2);
+            a3 += d(3) * d(3);
+        }
+        let mut acc = (a0 + a2) + (a1 + a3);
+        for i in 8..11 {
+            let d = x[i] - y[i];
+            acc += d * d;
+        }
+        assert_eq!(dist2(&x, &y).to_bits(), acc.sqrt().to_bits());
     }
 
     #[test]

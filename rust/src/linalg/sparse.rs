@@ -144,22 +144,52 @@ impl CsrMatrix {
     /// ||row_i||^2 — O(nnz_i), no densification. The harness and the
     /// workers' `RowSq` reply use this so sparse datasets never build a
     /// dense copy just to compute eta (paper Lemma 1 scaling).
+    ///
+    /// Canonical 4-lane fold (see [`super::ops`] module docs): lanes
+    /// `a0..a3`, combine `(a0 + a2) + (a1 + a3)`, sequential remainder —
+    /// deterministic for every engine and thread count.
     #[inline]
     pub fn row_sq_norm(&self, i: usize) -> f64 {
         let (_, val) = self.row(i);
-        let mut acc = 0.0;
-        for &v in val {
+        let n = val.len();
+        let chunks = n / 4;
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for c in 0..chunks {
+            let k = 4 * c;
+            a0 += val[k] * val[k];
+            a1 += val[k + 1] * val[k + 1];
+            a2 += val[k + 2] * val[k + 2];
+            a3 += val[k + 3] * val[k + 3];
+        }
+        let mut acc = (a0 + a2) + (a1 + a3);
+        for &v in &val[4 * chunks..] {
             acc += v * v;
         }
         acc
     }
 
     /// Dot of row i with a dense vector.
+    ///
+    /// The sparse counterpart of [`super::ops::dot`] and the inner loop
+    /// of every sparse matvec / Hessian-vector product: the same
+    /// canonical 4-lane fold over the row's nonzeros, with the gathers
+    /// `v[idx[k]]` feeding four independent accumulators so the O(nnz)
+    /// CG iterations aren't serialized on one FP dependency chain.
     #[inline]
     pub fn row_dot(&self, i: usize, v: &[f64]) -> f64 {
         let (idx, val) = self.row(i);
-        let mut acc = 0.0;
-        for k in 0..idx.len() {
+        let n = idx.len();
+        let chunks = n / 4;
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for c in 0..chunks {
+            let k = 4 * c;
+            a0 += val[k] * v[idx[k] as usize];
+            a1 += val[k + 1] * v[idx[k + 1] as usize];
+            a2 += val[k + 2] * v[idx[k + 2] as usize];
+            a3 += val[k + 3] * v[idx[k + 3] as usize];
+        }
+        let mut acc = (a0 + a2) + (a1 + a3);
+        for k in 4 * chunks..n {
             acc += val[k] * v[idx[k] as usize];
         }
         acc
@@ -302,6 +332,37 @@ mod tests {
         // empty row: zero
         let e = CsrMatrix::from_triplets(2, 3, &[(0, 1, 2.0)]);
         assert_eq!(e.row_sq_norm(1), 0.0);
+    }
+
+    #[test]
+    fn row_kernels_match_canonical_lane_fold() {
+        // a 10-nnz row exercises both the 4-lane body and the remainder;
+        // the fold order (ops.rs module docs) is pinned bit-for-bit
+        let trips: Vec<(usize, usize, f64)> =
+            (0..10).map(|k| (0usize, k * 2, 0.3 * k as f64 - 0.7)).collect();
+        let m = CsrMatrix::from_triplets(1, 20, &trips);
+        let v: Vec<f64> = (0..20).map(|j| (j as f64) * 0.11 - 0.5).collect();
+        let (idx, val) = m.row(0);
+        let lane_fold = |f: &dyn Fn(usize) -> f64| {
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+            let chunks = idx.len() / 4;
+            for c in 0..chunks {
+                let k = 4 * c;
+                a0 += f(k);
+                a1 += f(k + 1);
+                a2 += f(k + 2);
+                a3 += f(k + 3);
+            }
+            let mut acc = (a0 + a2) + (a1 + a3);
+            for k in 4 * chunks..idx.len() {
+                acc += f(k);
+            }
+            acc
+        };
+        let expect_dot = lane_fold(&|k| val[k] * v[idx[k] as usize]);
+        let expect_sq = lane_fold(&|k| val[k] * val[k]);
+        assert_eq!(m.row_dot(0, &v).to_bits(), expect_dot.to_bits());
+        assert_eq!(m.row_sq_norm(0).to_bits(), expect_sq.to_bits());
     }
 
     #[test]

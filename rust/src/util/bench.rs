@@ -157,6 +157,23 @@ impl Bencher {
         stats
     }
 
+    /// Record a non-timing measurement (an allocation count, a byte
+    /// total) under `name` so it rides in the JSON trajectory next to
+    /// the timings. The value lands in the `median_ns` column —
+    /// `dane-bench-v1` has one value column and the entry name carries
+    /// the unit — with p25/p75 repeating it and iters/samples set to 1.
+    pub fn record_value(&self, name: &str, value: f64) {
+        println!("value {name:<44} {value}");
+        self.records.borrow_mut().push(BenchRecord {
+            name: name.to_string(),
+            median_ns: value,
+            p25_ns: value,
+            p75_ns: value,
+            iters_per_sample: 1,
+            samples: 1,
+        });
+    }
+
     /// Recorded measurements so far, in call order.
     pub fn records(&self) -> Vec<BenchRecord> {
         self.records.borrow().clone()
@@ -284,6 +301,17 @@ mod tests {
         assert_eq!(results[0].req("name").unwrap().as_str(), Some("first"));
         assert!(results[0].req("median_ns").unwrap().as_f64().unwrap() >= 0.0);
         assert!(results[1].req("samples").unwrap().as_usize().unwrap() >= 1);
+    }
+
+    #[test]
+    fn record_value_lands_in_records_and_json() {
+        let b = quick();
+        b.record_value("leader allocs/round m=4 star", 0.0);
+        let recs = b.records();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].median_ns, 0.0);
+        assert_eq!(recs[0].samples, 1);
+        assert_eq!(b.median_ns_of("leader allocs/round m=4 star"), Some(0.0));
     }
 
     #[test]

@@ -350,10 +350,38 @@ struct ChildLink {
     stream: Option<TcpStream>,
 }
 
-/// Write one frame (length prefix + `body`) to `w`.
+/// Write one frame (length prefix + `body`) to `w` as a **single
+/// vectored write** — prefix and body leave in one syscall on the happy
+/// path instead of two (the second of which a non-NODELAY stack would
+/// otherwise delay). `write_vectored` has no all-or-nothing contract, so
+/// the loop re-slices by hand on a short write; a zero-length write is
+/// surfaced as `WriteZero` like `write_all` would.
 fn write_raw<W: Write>(w: &mut W, body: &[u8]) -> std::io::Result<()> {
-    w.write_all(&(body.len() as u32).to_le_bytes())?;
-    w.write_all(body)
+    let len = (body.len() as u32).to_le_bytes();
+    let total = len.len() + body.len();
+    let mut done = 0usize;
+    while done < total {
+        let res = if done < len.len() {
+            w.write_vectored(&[
+                std::io::IoSlice::new(&len[done..]),
+                std::io::IoSlice::new(body),
+            ])
+        } else {
+            w.write(&body[done - len.len()..])
+        };
+        match res {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "failed to write whole frame",
+                ))
+            }
+            Ok(n) => done += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
 /// Encode `reply` into `enc` and write it to `up`; upstream write

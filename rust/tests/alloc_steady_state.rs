@@ -1,25 +1,38 @@
-//! Steady-state DANE rounds on `ThreadedCluster` perform **zero heap
+//! Steady-state DANE rounds on `ThreadedCluster` **and on a loopback
+//! `TcpCluster` under the parallel-star strategy** perform **zero heap
 //! allocations on the leader thread** — the acceptance contract of the
-//! zero-allocation round protocol (broadcast `Arc` slots rewritten in
-//! place, reply buffers recycled through the single-slot rendezvous
-//! channel, in-place gradient/iterate accumulation).
+//! zero-allocation round protocol (broadcast `Arc` slots / pooled
+//! encode frames rewritten in place, reply buffers recycled through the
+//! single-slot rendezvous channel, pooled `RankGather` + incremental
+//! rank-prefix folding, in-place gradient/iterate accumulation).
 //!
 //! Mechanism: a counting global allocator that bumps a thread-local
 //! counter on every alloc. Worker threads allocate into their own
 //! counters (they are allowed transient allocations; the quadratic path
 //! makes none either, but that is not what this binary asserts), so the
 //! leader-thread count isolates exactly the protocol path the tentpole
-//! optimizes. Warmup rounds build the one-time state (Cholesky factors,
-//! broadcast slots, pooled reply buffers); after that, every
-//! `grad_and_loss_into` + `dane_round_into` pair must leave the counter
-//! untouched.
+//! optimizes. On the TCP side the same split is what makes the contract
+//! tractable: the per-link I/O threads own the sockets, decode replies
+//! on *their* threads, and hand the leader already-built values through
+//! the rendezvous channel (dropping is free — `dealloc` is uncounted by
+//! design, matching "allocation"-free, not "touching the allocator"-
+//! free). The `star-seq` strategy decodes inline on the leader thread
+//! and is exempt by design (documented in `coordinator::tcp`). Warmup
+//! rounds build the one-time state (Cholesky factors, broadcast slots,
+//! pooled reply/encode buffers); after that, every `grad_and_loss_into`
+//! + `dane_round_into` pair must leave the counter untouched.
 
+use dane::comm::{ExecTopology, NetModel};
+use dane::config::LossKind;
+use dane::coordinator::tcp::TcpCluster;
 use dane::coordinator::threaded::ThreadedCluster;
 use dane::coordinator::Cluster;
 use dane::data::synthetic_fig2;
 use dane::loss::{Objective, Ridge};
+use dane::worker::serve;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
+use std::net::TcpListener;
 use std::sync::Arc;
 
 thread_local! {
@@ -91,6 +104,66 @@ fn threaded_dane_steady_state_is_allocation_free_on_leader() {
         after - before,
         0,
         "leader thread allocated {} times across 25 steady-state DANE rounds",
+        after - before
+    );
+}
+
+#[test]
+fn tcp_dane_steady_state_is_allocation_free_on_leader() {
+    // In-process loopback workers: genuine `worker::serve` sessions over
+    // real sockets, on threads whose allocations land in their own
+    // counters. The leader thread runs only the protocol path under
+    // test.
+    let m = 4;
+    let mut addrs = Vec::with_capacity(m);
+    for _ in 0..m {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        addrs.push(listener.local_addr().expect("local addr").to_string());
+        std::thread::spawn(move || {
+            let _ = serve::serve_listener(listener);
+        });
+    }
+
+    let d = 32;
+    let ds = synthetic_fig2(1024, d, 0.005, 7);
+    let mut cluster = TcpCluster::connect(
+        &ds,
+        LossKind::Ridge,
+        0.01,
+        &addrs,
+        7,
+        NetModel::free(),
+        None,
+        None,
+        ExecTopology::Star,
+    )
+    .expect("tcp cluster over in-process workers");
+
+    let mut w = vec![0.0; d];
+    let mut w_next = vec![0.0; d];
+    let mut g = vec![0.0; d];
+
+    // Warmup: sizes the pooled encode frame and the rank gather, grows
+    // the link I/O threads' read buffers, builds the worker caches.
+    for _ in 0..3 {
+        cluster.grad_and_loss_into(&w, &mut g).unwrap();
+        cluster.dane_round_into(&w, &g, 1.0, 0.01, &mut w_next).unwrap();
+        std::mem::swap(&mut w, &mut w_next);
+    }
+
+    let before = leader_allocs();
+    for _ in 0..25 {
+        let loss = cluster.grad_and_loss_into(&w, &mut g).unwrap();
+        std::hint::black_box(loss);
+        cluster.dane_round_into(&w, &g, 1.0, 0.01, &mut w_next).unwrap();
+        std::mem::swap(&mut w, &mut w_next);
+    }
+    let after = leader_allocs();
+
+    assert_eq!(
+        after - before,
+        0,
+        "tcp leader thread allocated {} times across 25 steady-state DANE rounds",
         after - before
     );
 }

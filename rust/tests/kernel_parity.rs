@@ -10,7 +10,7 @@
 //! floating-point sums, they do not change the math.
 
 use dane::data::Shard;
-use dane::linalg::{ops, CholeskyFactor, DataMatrix, DenseMatrix};
+use dane::linalg::{ops, CholeskyFactor, CsrMatrix, DataMatrix, DenseMatrix};
 use dane::util::Rng64;
 use dane::worker::local_solver::QuadCache;
 
@@ -62,6 +62,74 @@ fn cholesky_naive(a: &DenseMatrix) -> Option<DenseMatrix> {
         }
     }
     Some(l)
+}
+
+/// Naive reference for the canonical 4-lane reduction fold every
+/// hot-path reduction kernel uses (`linalg::ops` module docs): lanes
+/// `a0..a3` stride the term index by 4, combine as
+/// `(a0 + a2) + (a1 + a3)`, and a strictly sequential loop folds the
+/// remainder. The production kernels must match this **bit-for-bit** —
+/// the fold order is part of the cross-engine parity contract, not an
+/// implementation detail.
+fn lane_fold_naive(n: usize, term: impl Fn(usize) -> f64) -> f64 {
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for c in 0..chunks {
+        a0 += term(4 * c);
+        a1 += term(4 * c + 1);
+        a2 += term(4 * c + 2);
+        a3 += term(4 * c + 3);
+    }
+    let mut acc = (a0 + a2) + (a1 + a3);
+    for k in 4 * chunks..n {
+        acc += term(k);
+    }
+    acc
+}
+
+#[test]
+fn reduction_kernels_match_canonical_lane_fold_bitwise() {
+    // lengths on both sides of the 4-lane stride, including the
+    // empty/remainder-only shapes and a bench-sized vector
+    for &n in &[0usize, 1, 2, 3, 4, 5, 7, 8, 11, 64, 513] {
+        let mut rng = Rng64::seed_from_u64(9000 + n as u64);
+        let x: Vec<f64> = (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+
+        let want_dot = lane_fold_naive(n, |k| x[k] * y[k]);
+        assert_eq!(ops::dot(&x, &y).to_bits(), want_dot.to_bits(), "dot n={n}");
+
+        let want_dist = lane_fold_naive(n, |k| {
+            let d = x[k] - y[k];
+            d * d
+        })
+        .sqrt();
+        assert_eq!(
+            ops::dist2(&x, &y).to_bits(),
+            want_dist.to_bits(),
+            "dist2 n={n}"
+        );
+
+        // one CSR row with n nonzeros scattered over a wider dense
+        // vector: row_dot gathers, row_sq_norm squares in place
+        let cols = 3 * n + 1;
+        let trips: Vec<(usize, usize, f64)> =
+            (0..n).map(|k| (0usize, 3 * k, x[k])).collect();
+        let m = CsrMatrix::from_triplets(1, cols, &trips);
+        let v: Vec<f64> = (0..cols).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+        let want_row = lane_fold_naive(n, |k| x[k] * v[3 * k]);
+        assert_eq!(
+            m.row_dot(0, &v).to_bits(),
+            want_row.to_bits(),
+            "row_dot n={n}"
+        );
+        let want_sq = lane_fold_naive(n, |k| x[k] * x[k]);
+        assert_eq!(
+            m.row_sq_norm(0).to_bits(),
+            want_sq.to_bits(),
+            "row_sq_norm n={n}"
+        );
+    }
 }
 
 fn assert_close(x: f64, y: f64, scale: f64, what: &str) {

@@ -180,6 +180,26 @@ fn tcp_tree_moves_fewer_leader_bytes_than_tcp_star() {
 }
 
 #[test]
+fn incremental_fold_matches_buffered_reduction_for_every_m() {
+    // The incremental rank-prefix folds (threaded star's blocking
+    // per-rank receive loop, the tree wiring's `tree_round_fold`, tcp's
+    // `fold_round`) must be **bitwise** the buffered rank-order
+    // reduction the serial engine computes inline — across shard counts
+    // on both sides of the binomial tree's power-of-two structure,
+    // including the degenerate m = 1 and the lopsided m = 7. The tcp
+    // engine's leg of the same contract runs in the matrix test above;
+    // this one stays in-memory so the full m sweep is cheap.
+    for m in [1usize, 2, 4, 7, 8] {
+        for topo in [ExecTopology::Star, ExecTopology::Tree] {
+            let serial = run_experiment(&cfg(EngineKind::Serial, Some(topo), m)).unwrap();
+            let run = run_experiment(&cfg(EngineKind::Threaded, Some(topo), m)).unwrap();
+            let tag = format!("m={m} {}", topo.name());
+            assert_results_identical(&serial, &run, &tag);
+        }
+    }
+}
+
+#[test]
 fn non_power_of_two_tree_matches_star_through_run_experiment() {
     // m = 7: uneven shards, a lopsided binomial tree (root links
     // {0,2,6,4?}.. whatever the plan says) — parity must not depend on
